@@ -1,0 +1,61 @@
+//! Quickstart: the whole stack in ~60 lines.
+//!
+//!   1. load the AOT artifacts (HLO text compiled via PJRT — no python)
+//!   2. initialize a policy + supervised warm start on the math task
+//!   3. run a handful of SortedRL on-policy updates
+//!   4. evaluate greedily
+//!
+//! Run:  make artifacts && cargo run --release --example quickstart
+
+use sortedrl::coordinator::{sft_warm_start, Controller, LoopConfig, SchedulerKind};
+use sortedrl::data::Dataset;
+use sortedrl::rl::advantage::AdvantageKind;
+use sortedrl::runtime::Runtime;
+use sortedrl::tasks::math::MathTask;
+use sortedrl::tasks::Task;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"), None)?;
+    println!("platform {}; model {} params; engine B={} chunk k={}",
+             rt.platform(), rt.manifest.model.param_count,
+             rt.manifest.shapes.engine_batch, rt.manifest.shapes.decode_chunk);
+
+    // dataset: arithmetic chains, difficulty 2..=8, 10% eval split
+    let task = MathTask;
+    let ds = Dataset::generate(&task, 24, 0.1, 7);
+    println!("dataset: {} train / {} eval problems", ds.train.len(), ds.eval.len());
+
+    // fresh policy + short supervised warm start (stands in for starting
+    // from a pretrained instruct model)
+    let mut state = rt.init(7)?;
+    let problems: Vec<&sortedrl::tasks::Problem> = ds.train.iter().collect();
+    let losses = sft_warm_start(&rt, &mut state, &problems, 30, 3e-3, 10)?;
+    println!("warm start: sft loss {:.3} -> {:.3}", losses[0], losses.last().unwrap());
+
+    // a few SortedRL on-policy updates
+    let cfg = LoopConfig {
+        scheduler: SchedulerKind::SortedOnPolicy,
+        rollout_prompts: 4,
+        group_size: 2,
+        samples_per_prompt: 2,
+        update_batch: 8,
+        max_updates: 6,
+        lr: 5e-4,
+        temperature: 1.0,
+        seed: 7,
+        adv: AdvantageKind::ReinforcePlusPlus,
+        max_new: 96,
+        eval_every: 3,
+        eval_limit: 16,
+        verbose: true,
+    };
+    let mut ctl = Controller::new(&rt, Box::new(MathTask), ds, cfg);
+    let result = ctl.run(&mut state)?;
+
+    println!("\nfinal eval: score {:.3} accuracy {:.3} (reward in [-1, 1] of max)",
+             result.final_eval.score, result.final_eval.accuracy);
+    println!("rollout bubble ratio {:.1}%; {} rollout tokens",
+             result.bubble_ratio * 100.0, result.total_rollout_tokens);
+    Ok(())
+}

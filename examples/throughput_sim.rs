@@ -1,0 +1,39 @@
+//! Rollout-throughput study at paper scale via the discrete-event simulator
+//! (the Fig. 5 experiment, plus a queue-capacity sweep the paper motivates
+//! in §3.1: the engine is most efficient at its captured batch size).
+//!
+//! Run:  cargo run --release --example throughput_sim
+
+use sortedrl::sim::{longtail_workload, simulate, CostModel, SimMode};
+
+fn main() {
+    let cost = CostModel::default();
+
+    println!("=== Fig 5 operating point: 512 samples, 4x128 batches, cap 8k ===\n");
+    let w = longtail_workload(512, 8192, 5);
+    println!("{:>10} | {:>8} | {:>8} | {:>9} | {:>8} | {:>7}",
+             "mode", "tok/s", "bubble", "rollout s", "wasted", "clipped");
+    for (mode, label) in [(SimMode::Baseline, "baseline"),
+                          (SimMode::SortedOnPolicy, "on-policy"),
+                          (SimMode::SortedPartial, "partial")] {
+        let r = simulate(mode, &w, 128, 128, cost);
+        println!("{label:>10} | {:>8.0} | {:>7.2}% | {:>9.1} | {:>8} | {:>7}",
+                 r.throughput, r.bubble_ratio * 100.0, r.rollout_time,
+                 r.wasted_tokens, r.clipped);
+    }
+
+    println!("\n=== queue-capacity sweep (partial mode, same workload) ===\n");
+    println!("{:>6} | {:>8} | {:>8}", "Q", "tok/s", "bubble");
+    for q in [32usize, 64, 96, 128, 192, 256] {
+        let r = simulate(SimMode::SortedPartial, &w, q, 128, cost);
+        println!("{q:>6} | {:>8.0} | {:>7.2}%", r.throughput, r.bubble_ratio * 100.0);
+    }
+
+    println!("\n=== update-batch sweep (on-policy, U controls harvest cadence) ===\n");
+    println!("{:>6} | {:>8} | {:>8} | {:>8}", "U", "tok/s", "bubble", "wasted");
+    for u in [32usize, 64, 128, 256, 512] {
+        let r = simulate(SimMode::SortedOnPolicy, &w, 128, u, cost);
+        println!("{u:>6} | {:>8.0} | {:>7.2}% | {:>8}",
+                 r.throughput, r.bubble_ratio * 100.0, r.wasted_tokens);
+    }
+}

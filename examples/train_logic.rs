@@ -1,0 +1,94 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): RL-train the policy LM
+//! on Knights & Knaves for a few hundred update steps through the full
+//! three-layer stack, logging the reward/score/length curves to CSV.
+//!
+//! Run:  make artifacts && cargo run --release --example train_logic -- \
+//!           [updates] [scheduler]
+//!
+//! Defaults: 200 updates, sorted-on-policy.  The loss curve lands in
+//! results/e2e_logic_<scheduler>.csv.
+
+use sortedrl::coordinator::{sft_warm_start, Controller, LoopConfig, SchedulerKind};
+use sortedrl::data::Dataset;
+use sortedrl::rl::advantage::AdvantageKind;
+use sortedrl::runtime::Runtime;
+use sortedrl::tasks::logic::LogicTask;
+use sortedrl::tasks::Task;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let updates: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let scheduler = SchedulerKind::parse(
+        args.get(1).map(|s| s.as_str()).unwrap_or("on-policy"),
+    )
+    .expect("scheduler: baseline|on-policy|partial|post-hoc-sort|no-grouped");
+
+    let rt = Runtime::load(Path::new("artifacts"), None)?;
+    eprintln!("platform {}; tag {}; {} params",
+              rt.platform(), rt.manifest.tag, rt.manifest.model.param_count);
+
+    let task = LogicTask::default();
+    let ds = Dataset::generate(&task, 200, 0.1, 42); // 1000 puzzles, 3..=7 chars
+    eprintln!("dataset: {} train / {} eval", ds.train.len(), ds.eval.len());
+
+    let mut state = rt.init(42)?;
+    let problems: Vec<&sortedrl::tasks::Problem> = ds.train.iter().collect();
+    eprintln!("warm start: 200 sft steps...");
+    let losses = sft_warm_start(&rt, &mut state, &problems, 200, 2e-3, 25)?;
+    eprintln!("warm start done: {:.3} -> {:.3}", losses[0], losses.last().unwrap());
+
+    let cfg = LoopConfig {
+        scheduler,
+        rollout_prompts: 4,
+        group_size: 4,
+        samples_per_prompt: 4,
+        update_batch: 32,
+        max_updates: updates,
+        lr: 4e-4,
+        temperature: 1.0,
+        seed: 42,
+        adv: AdvantageKind::ReinforcePlusPlus,
+        max_new: 176,
+        eval_every: 10,
+        eval_limit: 64,
+        verbose: true,
+    };
+    let mut ctl = Controller::new(&rt, Box::new(task), ds, cfg);
+    let t0 = std::time::Instant::now();
+    let result = ctl.run(&mut state)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // loss/score curve -> CSV
+    let mut csv = String::from(
+        "update,epochs,mean_reward,accuracy,format_rate,mean_resp_len,\
+         staleness,kl,loss,eval_score,eval_acc,eval_len\n");
+    for r in &result.rows {
+        let (es, ea, el) = r
+            .eval
+            .map(|e| (e.score.to_string(), e.accuracy.to_string(),
+                      e.mean_resp_len.to_string()))
+            .unwrap_or_default();
+        csv.push_str(&format!(
+            "{},{:.3},{:.4},{:.4},{:.4},{:.2},{:.3},{:.5},{:.5},{},{},{}\n",
+            r.update.update_idx, r.epochs, r.update.mean_reward,
+            r.update.accuracy, r.update.format_rate, r.update.mean_resp_len,
+            r.update.mean_staleness, r.update.stats.approx_kl,
+            r.update.stats.loss, es, ea, el));
+    }
+    std::fs::create_dir_all("results")?;
+    let out = format!("results/e2e_logic_{}.csv", scheduler.name());
+    std::fs::write(&out, csv)?;
+
+    println!("\n=== E2E summary ({} updates, {:.1}s wall) ===", updates, wall);
+    println!("scheduler:        {}", scheduler.name());
+    println!("final val score:  {:.3} (max 1.0)", result.final_eval.score);
+    println!("final accuracy:   {:.3}", result.final_eval.accuracy);
+    println!("final resp len:   {:.1} tokens", result.final_eval.mean_resp_len);
+    println!("bubble ratio:     {:.2}%", result.bubble_ratio * 100.0);
+    println!("rollout tokens:   {}", result.total_rollout_tokens);
+    println!("rollout/update s: {:.1} / {:.1}",
+             result.phase_clock.rollout, result.phase_clock.update);
+    println!("curve:            {out}");
+    Ok(())
+}

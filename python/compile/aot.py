@@ -1,0 +1,193 @@
+"""AOT build: lower every L2 entry point to HLO *text* + emit manifest.json.
+
+HLO text (not `.serialize()`) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction
+ids); the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --preset small --out-dir ../artifacts \
+        [--engine-batch 32] [--decode-chunk 16] [--train-batch 32] [--no-pallas]
+
+The manifest describes, for each entry point, the ordered input/output
+tensors (name, shape, dtype) so the rust runtime can marshal literals
+without any knowledge of the jax code.  It also embeds the vocabulary and
+model config; rust asserts its own tokenizer table matches.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import transformer as tfm
+from .configs import ArtifactConfig, VOCAB, artifact_config
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(d) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(d).name]
+
+
+def _tensor_entry(name: str, sds) -> dict:
+    return {"name": name, "shape": list(sds.shape), "dtype": _dtype_name(sds.dtype)}
+
+
+def lower_entry(fn: Callable, in_specs: Sequence[Tuple[str, jax.ShapeDtypeStruct]],
+                out_names: Sequence[str], path: str) -> dict:
+    """Lower `fn` to HLO text at `path`; return its manifest entry."""
+    shapes = [s for _, s in in_specs]
+    lowered = jax.jit(fn).lower(*shapes)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    # Recover output shapes from the lowering itself.
+    out_avals = jax.eval_shape(fn, *shapes)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    flat, _ = jax.tree_util.tree_flatten(out_avals)
+    assert len(flat) == len(out_names), (len(flat), out_names)
+    return {
+        "file": os.path.basename(path),
+        "inputs": [_tensor_entry(n, s) for n, s in in_specs],
+        "outputs": [_tensor_entry(n, s) for n, s in zip(out_names, flat)],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build(acfg: ArtifactConfig, out_dir: str, use_pallas: bool = True) -> dict:
+    cfg = acfg.model
+    os.makedirs(out_dir, exist_ok=True)
+    spec = tfm.param_spec(cfg)
+    n_params = len(spec)
+    param_in = [(name, f32(*shape)) for name, shape in spec]
+    adam_m = [("m." + name, f32(*shape)) for name, shape in spec]
+    adam_v = [("v." + name, f32(*shape)) for name, shape in spec]
+    param_out = [name for name, _ in spec]
+
+    B, k = acfg.engine_batch, acfg.decode_chunk
+    Bt, T = acfg.train_batch, acfg.train_seq
+    Sp = acfg.prefill_seq
+    kv = f32(*tfm.kv_cache_shape(cfg, B))
+    tag = f"{cfg.name}.B{B}k{k}.Bt{Bt}T{T}"
+
+    entries = {}
+
+    entries["init"] = lower_entry(
+        M.make_init(cfg),
+        [("seed", i32())],
+        param_out,
+        os.path.join(out_dir, f"init.{tag}.hlo.txt"))
+
+    entries["prefill"] = lower_entry(
+        M.make_prefill(acfg),
+        param_in + [("tokens", i32(B, Sp)), ("length", i32(B))],
+        ["kv", "last_logits"],
+        os.path.join(out_dir, f"prefill.{tag}.hlo.txt"))
+
+    entries["decode_chunk"] = lower_entry(
+        M.make_decode_chunk(acfg, use_pallas=use_pallas),
+        param_in + [("kv", kv), ("tok", i32(B)), ("pos", i32(B)),
+                    ("active", i32(B)), ("uniforms", f32(B, k)), ("temp", f32())],
+        ["kv", "tok", "pos", "active", "out_tokens", "out_logp"],
+        os.path.join(out_dir, f"decode_chunk.{tag}.hlo.txt"))
+
+    entries["train_step"] = lower_entry(
+        M.make_train_step(acfg, use_pallas=use_pallas),
+        param_in + adam_m + adam_v + [
+            ("step", i32()), ("tokens", i32(Bt, T)), ("mask", f32(Bt, T)),
+            ("adv", f32(Bt, T)), ("old_logp", f32(Bt, T)), ("lr", f32())],
+        param_out + ["m." + n for n in param_out] + ["v." + n for n in param_out]
+        + ["step", "loss", "mean_ratio", "clip_frac", "mean_entropy",
+           "approx_kl", "grad_norm"],
+        os.path.join(out_dir, f"train_step.{tag}.hlo.txt"))
+
+    entries["sft_step"] = lower_entry(
+        M.make_sft_step(acfg),
+        param_in + adam_m + adam_v + [
+            ("step", i32()), ("tokens", i32(Bt, T)), ("weights", f32(Bt, T)),
+            ("lr", f32())],
+        param_out + ["m." + n for n in param_out] + ["v." + n for n in param_out]
+        + ["step", "loss", "grad_norm"],
+        os.path.join(out_dir, f"sft_step.{tag}.hlo.txt"))
+
+    entries["logprob"] = lower_entry(
+        M.make_logprob(acfg),
+        param_in + [("tokens", i32(Bt, T))],
+        ["logp"],
+        os.path.join(out_dir, f"logprob.{tag}.hlo.txt"))
+
+    manifest = {
+        "format_version": 1,
+        "tag": tag,
+        "preset": cfg.name,
+        "model": {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq, "vocab": cfg.vocab,
+            "param_count": cfg.param_count(),
+        },
+        "shapes": {
+            "engine_batch": B, "decode_chunk": k,
+            "train_batch": Bt, "train_seq": T, "prefill_seq": Sp,
+            "n_param_tensors": n_params,
+            "kv_cache": list(tfm.kv_cache_shape(cfg, B)),
+        },
+        "vocab": VOCAB,
+        "use_pallas": use_pallas,
+        "params": [{"name": n, "shape": list(s)} for n, s in spec],
+        "entries": entries,
+    }
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--engine-batch", type=int, default=32)
+    ap.add_argument("--decode-chunk", type=int, default=16)
+    ap.add_argument("--train-batch", type=int, default=32)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use the pure-jnp reference ops instead of the "
+                         "Pallas kernels (ablation / debugging)")
+    args = ap.parse_args()
+
+    acfg = artifact_config(args.preset, args.engine_batch, args.decode_chunk,
+                           args.train_batch)
+    manifest = build(acfg, args.out_dir, use_pallas=not args.no_pallas)
+
+    # Merge into a multi-config manifest keyed by tag.
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    merged = {"format_version": 1, "configs": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            merged = json.load(f)
+    merged["configs"][manifest["tag"]] = manifest
+    with open(manifest_path, "w") as f:
+        json.dump(merged, f, indent=1)
+    print(f"built {manifest['tag']}: {len(manifest['entries'])} entries -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Model / artifact shape presets shared between the JAX build path and the
+rust runtime (via artifacts/manifest.json).
+
+The vocabulary here MUST stay in sync with rust/src/tokenizer/mod.rs; the
+manifest carries `vocab` so the rust side can assert the mapping at startup.
+"""
+
+from dataclasses import dataclass, field
+
+
+# Symbolic vocabulary shared by the logic (Knights & Knaves) and math
+# (arithmetic-chain) tasks.  Index == token id.
+VOCAB = [
+    "<pad>", "<bos>", "<eos>", ";", "<think>", "</think>", "<answer>", "</answer>",
+    "0", "1", "2", "3", "4", "5", "6", "7", "8", "9",
+    "+", "-", "*", "/", "(", ")", "=",
+    "K", "N", "&", "|", "!", "<=>", ":", "says",
+    "P0", "P1", "P2", "P3", "P4", "P5", "P6", "P7", "P8", "P9",
+    "LOGIC", "MATH", ",", "?", "step", "->",
+    "so", "if", "then", "not", "true", "false", "check", "by",
+    "<r0>", "<r1>", "<r2>", "<r3>", "<r4>", "<r5>", "<r6>",
+]
+assert len(VOCAB) == 64, len(VOCAB)
+
+PAD, BOS, EOS = 0, 1, 2
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyperparameters (decoder-only, pre-LN, learned pos-emb)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int              # S: KV-cache length == max trained position
+    vocab: int = len(VOCAB)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, s = self.d_model, self.d_ff, self.vocab, self.max_seq
+        per_layer = 4 * d * d + 2 * d * f + f + 5 * d
+        return v * d + s * d + self.n_layers * per_layer + 2 * d + d * v
+
+
+@dataclass(frozen=True)
+class ArtifactConfig:
+    """Shapes baked into the AOT-compiled HLO entry points."""
+
+    model: ModelConfig
+    engine_batch: int = 32    # B: rollout engine lane count (the "captured graph" size)
+    decode_chunk: int = 16    # k: tokens generated per decode_chunk call
+    train_batch: int = 32     # Bt: trajectories per train/sft step
+    train_seq: int = 0        # T: training unroll (defaults to model.max_seq)
+    prefill_seq: int = 0      # Sp: max prompt(+resume) length fed to prefill
+
+    def __post_init__(self):
+        if self.train_seq == 0:
+            object.__setattr__(self, "train_seq", self.model.max_seq)
+        if self.prefill_seq == 0:
+            object.__setattr__(self, "prefill_seq", self.model.max_seq)
+
+
+PRESETS = {
+    "tiny": ModelConfig("tiny", d_model=64, n_layers=2, n_heads=2, d_ff=256, max_seq=192),
+    # single-core-friendly training config (XLA-CPU dispatch-bound decode:
+    # fewer layers => fewer ops per token)
+    "mini": ModelConfig("mini", d_model=96, n_layers=3, n_heads=3, d_ff=384, max_seq=224),
+    "small": ModelConfig("small", d_model=128, n_layers=4, n_heads=4, d_ff=512, max_seq=256),
+    "base": ModelConfig("base", d_model=256, n_layers=8, n_heads=8, d_ff=1024, max_seq=320),
+    "ref100m": ModelConfig("ref100m", d_model=768, n_layers=14, n_heads=12, d_ff=3072, max_seq=512),
+}
+
+
+def artifact_config(preset: str, engine_batch: int = 32, decode_chunk: int = 16,
+                    train_batch: int = 32) -> ArtifactConfig:
+    return ArtifactConfig(model=PRESETS[preset], engine_batch=engine_batch,
+                          decode_chunk=decode_chunk, train_batch=train_batch)

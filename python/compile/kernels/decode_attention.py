@@ -1,0 +1,102 @@
+"""Flash-decoding-style single-query attention over the KV cache (Pallas).
+
+This is the rollout hot spot the paper identifies (§2.2: autoregressive
+rollout throughput is HBM-bandwidth-bound on KV-cache reads).  GPU serving
+engines stream the cache through shared memory per warp; the TPU rethink
+(DESIGN.md §Hardware-Adaptation) streams `(BLOCK_K, Dh)` cache tiles from
+HBM into VMEM via the grid/BlockSpec schedule and folds them into an
+online-softmax accumulator, so VMEM holds only one tile + the O(Dh)
+accumulator regardless of S.
+
+Grid: (B, H) parallel lanes x an in-kernel sequential walk over KV tiles.
+Always built with ``interpret=True`` — real-TPU Mosaic lowering cannot run
+on the CPU PJRT plugin (see /opt/xla-example/README.md).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_K = 64
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq: int,
+            scale: float):
+    """One (batch, head) lane: online softmax over KV tiles.
+
+    pos_ref: i32[1] — highest cache slot to attend to (inclusive).
+    q_ref:   f32[1, 1, Dh]
+    k_ref/v_ref: f32[1, 1, S, Dh]
+    o_ref:   f32[1, 1, Dh]
+    """
+    q = q_ref[0, 0, :] * scale                       # [Dh]
+    pos = pos_ref[0]
+    dh = q.shape[0]
+    num_tiles = seq // block_k
+
+    def tile_step(i, carry):
+        m, l, acc = carry
+        k_tile = k_ref[0, 0, pl.ds(i * block_k, block_k), :]    # [Bk, Dh]
+        v_tile = v_ref[0, 0, pl.ds(i * block_k, block_k), :]
+        # q·Kᵀ for the tile — a [Bk, Dh] x [Dh] contraction (MXU-eligible
+        # when q is tiled [1, Dh] on real hardware).
+        scores = jnp.dot(k_tile, q, preferred_element_type=jnp.float32)  # [Bk]
+        idx = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        scores = jnp.where(idx <= pos, scores, -1e30)
+        m_new = jnp.maximum(m, jnp.max(scores))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new)                              # [Bk]
+        l_new = alpha * l + jnp.sum(p)
+        acc_new = alpha * acc + jnp.dot(p, v_tile, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(-1e30)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((dh,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_tiles, tile_step, (m0, l0, acc0))
+    o_ref[0, 0, :] = acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, block_k: int = DEFAULT_BLOCK_K) -> jax.Array:
+    """q: f32[B,H,Dh]; k_cache/v_cache: f32[B,H,S,Dh]; pos: i32[B] -> f32[B,H,Dh].
+
+    Lane b attends to cache slots j <= pos[b].
+    """
+    b, h, s, dh = k_cache.shape
+    block_k = min(block_k, s)
+    if s % block_k != 0:
+        pad = block_k - s % block_k
+        # Padded slots are masked out by the `idx <= pos` predicate as long
+        # as pos < s, which the engine guarantees (slot S-1 is a trash slot).
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s += pad
+    scale = 1.0 / math.sqrt(dh)
+    kernel = functools.partial(_kernel, block_k=block_k, seq=s, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, 1, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=True,
+    )(pos, q, k_cache, v_cache)
+
+
+def vmem_bytes_estimate(s: int, dh: int, block_k: int = DEFAULT_BLOCK_K) -> int:
+    """Analytic VMEM footprint per grid cell (DESIGN.md §Perf)."""
+    tile = block_k * dh * 4 * 2          # K and V tiles
+    accum = (dh + 2) * 4                 # acc + m + l
+    qb = dh * 4
+    return tile + accum + qb

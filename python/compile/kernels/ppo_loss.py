@@ -1,0 +1,140 @@
+"""Fused token-level PPO-clip loss (Pallas, fwd + bwd via custom_vjp).
+
+The update-phase hot spot: for each response token, gather the target
+log-prob out of the [T, V] logits slab, form the importance ratio against
+the behavior policy's sampling-time log-prob (π_old, stored by the rollout
+buffer — paper §3.2), and apply the DAPO-style asymmetric clip.  Fusing the
+gather + logsumexp + ratio + clip avoids materializing [B, T, V] softmax and
+log-softmax intermediates that a naive composition keeps in HBM.
+
+jax cannot autodiff through ``pallas_call``, so the backward pass is its own
+kernel wired up with ``jax.custom_vjp``; both are checked against
+``ref.ppo_loss_ref`` / ``ref.ppo_loss_grad_ref`` by pytest + hypothesis.
+
+Grid: (B,) — each program owns one trajectory's [T, V] slab (T·V ≤ 512·64
+floats ≈ 128 KiB, comfortably VMEM-resident).  Always ``interpret=True``.
+"""
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(targets_ref, old_logp_ref, adv_ref, mask_ref, clip_ref,
+                logits_ref, loss_ref, logp_ref, ent_ref):
+    logits = logits_ref[0]                          # [T, V]
+    t, v = logits.shape
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)     # [T]
+    lse = jnp.log(sumexp) + m[:, 0]                 # [T]
+    tgt = targets_ref[0]                            # i32[T]
+    onehot = jax.lax.iota(jnp.int32, v)[None, :] == tgt[:, None]
+    tgt_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    logp = tgt_logit - lse                          # [T]
+
+    old_logp = old_logp_ref[0]
+    adv = adv_ref[0]
+    mask = mask_ref[0]
+    clip_low, clip_high = clip_ref[0], clip_ref[1]
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - clip_low, 1.0 + clip_high)
+    obj = jnp.minimum(ratio * adv, clipped * adv)
+    loss_ref[0] = -mask * obj
+    logp_ref[0] = logp
+
+    probs = jnp.exp(shifted) / sumexp[:, None]
+    ent_ref[0] = lse - jnp.sum(probs * logits, axis=-1)
+
+
+def _bwd_kernel(targets_ref, old_logp_ref, adv_ref, mask_ref, clip_ref,
+                logits_ref, g_ref, dlogits_ref):
+    logits = logits_ref[0]
+    t, v = logits.shape
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    probs = jnp.exp(shifted) / sumexp[:, None]       # [T, V]
+    lse = jnp.log(sumexp) + m[:, 0]
+    tgt = targets_ref[0]
+    onehot = (jax.lax.iota(jnp.int32, v)[None, :] == tgt[:, None]).astype(jnp.float32)
+    logp = jnp.sum(onehot * logits, axis=-1) - lse
+
+    old_logp = old_logp_ref[0]
+    adv = adv_ref[0]
+    mask = mask_ref[0]
+    clip_low, clip_high = clip_ref[0], clip_ref[1]
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - clip_low, 1.0 + clip_high)
+    # min() picks the unclipped branch iff ratio*adv <= clipped*adv; on the
+    # tie (ratio inside the clip window) both branches have identical value
+    # AND derivative, so the selector is exact — see test_kernels.py.
+    unclipped_sel = (ratio * adv <= clipped * adv).astype(jnp.float32)
+    dobj_dlogp = unclipped_sel * ratio * adv          # [T]
+    dloss_dlogp = -mask * dobj_dlogp
+    g = g_ref[0]                                      # [T]
+    coef = (g * dloss_dlogp)[:, None]                 # [T, 1]
+    dlogits_ref[0] = coef * (onehot - probs)
+
+
+def _pallas_fwd(logits, targets, old_logp, adv, mask, clips):
+    b, t, v = logits.shape
+    spec_bt = pl.BlockSpec((1, t), lambda i: (i, 0))
+    spec_btv = pl.BlockSpec((1, t, v), lambda i: (i, 0, 0))
+    spec_clip = pl.BlockSpec((2,), lambda i: (0,))
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(b,),
+        in_specs=[spec_bt, spec_bt, spec_bt, spec_bt, spec_clip, spec_btv],
+        out_specs=[spec_bt, spec_bt, spec_bt],
+        out_shape=[jax.ShapeDtypeStruct((b, t), jnp.float32)] * 3,
+        interpret=True,
+    )(targets, old_logp, adv, mask, clips, logits)
+
+
+def _pallas_bwd(logits, targets, old_logp, adv, mask, clips, g):
+    b, t, v = logits.shape
+    spec_bt = pl.BlockSpec((1, t), lambda i: (i, 0))
+    spec_btv = pl.BlockSpec((1, t, v), lambda i: (i, 0, 0))
+    spec_clip = pl.BlockSpec((2,), lambda i: (0,))
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(b,),
+        in_specs=[spec_bt, spec_bt, spec_bt, spec_bt, spec_clip, spec_btv, spec_bt],
+        out_specs=spec_btv,
+        out_shape=jax.ShapeDtypeStruct((b, t, v), jnp.float32),
+        interpret=True,
+    )(targets, old_logp, adv, mask, clips, logits, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ppo_loss(logits: jax.Array, targets: jax.Array, old_logp: jax.Array,
+             adv: jax.Array, mask: jax.Array, clip_low: float,
+             clip_high: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused PPO-clip token loss; same contract as ``ref.ppo_loss_ref``.
+
+    Returns (loss_tok f32[B,T], logp f32[B,T], entropy f32[B,T]); only
+    loss_tok is differentiable w.r.t. logits (logp/entropy are diagnostics).
+    """
+    clips = jnp.array([clip_low, clip_high], jnp.float32)
+    loss_tok, logp, ent = _pallas_fwd(logits, targets, old_logp, adv, mask, clips)
+    return loss_tok, logp, ent
+
+
+def _vjp_fwd(logits, targets, old_logp, adv, mask, clip_low, clip_high):
+    out = ppo_loss(logits, targets, old_logp, adv, mask, clip_low, clip_high)
+    return out, (logits, targets, old_logp, adv, mask)
+
+
+def _vjp_bwd(clip_low, clip_high, res, cotangents):
+    logits, targets, old_logp, adv, mask = res
+    g_loss, _g_logp, _g_ent = cotangents  # logp/entropy treated as non-diff stats
+    clips = jnp.array([clip_low, clip_high], jnp.float32)
+    dlogits = _pallas_bwd(logits, targets, old_logp, adv, mask, clips, g_loss)
+    return (dlogits, None, None, None, None)
+
+
+ppo_loss.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every Pallas kernel in this package has a reference implementation here with
+the identical signature; pytest (python/tests/test_kernels.py) asserts
+allclose between the two over hypothesis-generated shapes/values.
+"""
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         pos: jax.Array) -> jax.Array:
+    """Single-query attention over a KV cache.
+
+    q: f32[B, H, Dh]; k_cache/v_cache: f32[B, H, S, Dh]; pos: i32[B].
+    Lane b attends to cache slots j <= pos[b]. Returns f32[B, H, Dh].
+    """
+    b, h, s, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) * scale
+    mask = jnp.arange(s)[None, :] <= pos[:, None]            # [B, S]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v_cache)
+
+
+def ppo_loss_ref(logits: jax.Array, targets: jax.Array, old_logp: jax.Array,
+                 adv: jax.Array, mask: jax.Array, clip_low: float,
+                 clip_high: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Token-level PPO-clip objective (clip-higher variant, DAPO-style).
+
+    logits: f32[B, T, V]; targets: i32[B, T]; old_logp/adv/mask: f32[B, T].
+    Returns (loss_tok, logp, entropy), each f32[B, T]:
+      loss_tok = -mask * min(r * adv, clip(r, 1-cl, 1+ch) * adv),
+      r = exp(logp - old_logp).
+    """
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    logp = jnp.take_along_axis(logp_all, targets[..., None], axis=-1)[..., 0]
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - clip_low, 1.0 + clip_high)
+    obj = jnp.minimum(ratio * adv, clipped * adv)
+    loss_tok = -mask * obj
+    probs = jnp.exp(logp_all)
+    entropy = -(probs * logp_all).sum(-1)
+    return loss_tok, logp, entropy
+
+
+def ppo_loss_grad_ref(logits: jax.Array, targets: jax.Array, old_logp: jax.Array,
+                      adv: jax.Array, mask: jax.Array, clip_low: float,
+                      clip_high: float, g: jax.Array) -> jax.Array:
+    """d(sum(g * loss_tok))/d logits via jax autodiff — oracle for the bwd kernel."""
+
+    def scalar_loss(lg):
+        loss_tok, _, _ = ppo_loss_ref(lg, targets, old_logp, adv, mask,
+                                      clip_low, clip_high)
+        return (loss_tok * g).sum()
+
+    return jax.grad(scalar_loss)(logits)

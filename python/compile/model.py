@@ -1,0 +1,232 @@
+"""L2 entry points AOT-compiled to HLO for the rust runtime.
+
+Six programs per artifact config (see aot.py / manifest.json):
+
+  init         seed            -> params
+  prefill      params, prompt tokens, lengths -> kv cache, last logits
+  decode_chunk params, kv, lane state, uniforms, temp -> k sampled tokens
+               + their sampling-time log-probs (π_old for the buffer, §3.2)
+  train_step   params, adam state, trajectories, advantages, old log-probs
+               -> updated params + stats (PPO-clip via the fused L1 kernel)
+  sft_step     params, adam state, tokens, weights -> updated params (warm
+               start — stands in for the paper's pretrained instruct models)
+  logprob      params, tokens -> per-token log-probs (diagnostics / eval)
+
+Sampling happens *inside* decode_chunk from rust-provided uniforms, so the
+rust coordinator owns the RNG stream per request while the HLO computes the
+exact behavior-policy log-prob of every sampled token — the quantity the
+stateful rollout buffer must cache for partial mode (paper Eq. 1).
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ArtifactConfig, ModelConfig, EOS, PAD
+from . import transformer as tfm
+from .kernels.ppo_loss import ppo_loss
+
+
+@dataclass(frozen=True)
+class Hyper:
+    """Optimizer / objective constants baked into the train_step HLO."""
+    clip_low: float = 0.2
+    clip_high: float = 0.28       # DAPO clip-higher
+    max_grad_norm: float = 1.0
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def make_init(cfg: ModelConfig):
+    def init(seed: jax.Array) -> Tuple[jax.Array, ...]:
+        key = jax.random.PRNGKey(seed)
+        return tuple(tfm.init_params(cfg, key))
+    return init
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def make_prefill(acfg: ArtifactConfig):
+    cfg = acfg.model
+    n_params = len(tfm.param_spec(cfg))
+
+    def prefill(*args):
+        params = list(args[:n_params])
+        tokens, length = args[n_params], args[n_params + 1]
+        kv, last_logits = tfm.prefill(cfg, params, tokens, length)
+        return kv, last_logits
+
+    return prefill
+
+
+# --------------------------------------------------------------------------
+# decode_chunk
+# --------------------------------------------------------------------------
+
+def make_decode_chunk(acfg: ArtifactConfig, use_pallas: bool = True):
+    cfg = acfg.model
+    n_params = len(tfm.param_spec(cfg))
+    s = cfg.max_seq
+    max_pos = s - 2  # slot S-1 is the trash slot for inactive lanes
+
+    def decode_chunk(*args):
+        params = list(args[:n_params])
+        kv, tok, pos, active, uniforms, temp = args[n_params:n_params + 6]
+        # kv: f32[NL,2,B,H,S,Dh]; tok/pos/active: i32[B];
+        # uniforms: f32[B,k] in [0,1) (negative -> greedy); temp: f32[]
+        inv_temp = 1.0 / jnp.maximum(temp, 1e-6)
+
+        def step(carry, u):
+            kv, tok, pos, active = carry
+            act_b = active > 0
+            kv, logits = tfm.decode_one(cfg, params, kv, tok, pos, act_b,
+                                        use_pallas=use_pallas)
+            logp_all = jax.nn.log_softmax(logits * inv_temp, axis=-1)  # [B,V]
+            cdf = jnp.cumsum(jnp.exp(logp_all), axis=-1)
+            sampled = jnp.argmax(cdf >= u[:, None], axis=-1).astype(jnp.int32)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(u < 0.0, greedy, sampled)
+            logp_tok = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+
+            emit = jnp.where(act_b, nxt, PAD)
+            logp_emit = jnp.where(act_b, logp_tok, 0.0)
+            pos_next = jnp.where(act_b, pos + 1, pos)
+            active_next = (act_b & (nxt != EOS) & (pos_next < max_pos)).astype(jnp.int32)
+            tok_next = jnp.where(act_b, nxt, tok)
+            return (kv, tok_next, pos_next, active_next), (emit, logp_emit)
+
+        (kv, tok, pos, active), (toks, logps) = jax.lax.scan(
+            step, (kv, tok, pos, active), uniforms.T)
+        return kv, tok, pos, active, toks.T, logps.T
+
+    return decode_chunk
+
+
+# --------------------------------------------------------------------------
+# train_step (PPO-clip through the fused L1 kernel)
+# --------------------------------------------------------------------------
+
+def _global_norm(tree: List[jax.Array]) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in tree))
+
+
+def _adam(params, m, v, grads, step, lr, hp: Hyper):
+    step = step + 1
+    b1, b2 = hp.adam_b1, hp.adam_b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    new_p, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        upd = (mi / c1) / (jnp.sqrt(vi / c2) + hp.adam_eps)
+        new_p.append(p - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, step
+
+
+def make_train_step(acfg: ArtifactConfig, hp: Hyper = Hyper(), use_pallas: bool = True):
+    cfg = acfg.model
+    n_params = len(tfm.param_spec(cfg))
+
+    def train_step(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        step, tokens, mask, adv, old_logp, lr = args[3 * n_params:3 * n_params + 6]
+        # tokens i32[B,T]; mask/adv/old_logp f32[B,T] aligned to *generated*
+        # token index t (mask[t]=1 iff tokens[t] is a response token);
+        # lr f32[].  Position t is predicted from logits at t-1.
+        denom = jnp.maximum(mask[:, 1:].sum(), 1.0)
+
+        def loss_fn(ps):
+            logits = tfm.forward(cfg, ps, tokens)          # [B,T,V]
+            if use_pallas:
+                loss_tok, logp, ent = ppo_loss(
+                    logits[:, :-1], tokens[:, 1:], old_logp[:, 1:],
+                    adv[:, 1:], mask[:, 1:], hp.clip_low, hp.clip_high)
+            else:
+                from .kernels.ref import ppo_loss_ref
+                loss_tok, logp, ent = ppo_loss_ref(
+                    logits[:, :-1], tokens[:, 1:], old_logp[:, 1:],
+                    adv[:, 1:], mask[:, 1:], hp.clip_low, hp.clip_high)
+            loss = loss_tok.sum() / denom
+            return loss, (jax.lax.stop_gradient(logp), jax.lax.stop_gradient(ent))
+
+        (loss, (logp, ent)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, hp.max_grad_norm / jnp.maximum(gnorm, 1e-12))
+        grads = [g * scale for g in grads]
+        new_p, new_m, new_v, new_step = _adam(params, m, v, grads, step, lr, hp)
+
+        msk = mask[:, 1:]
+        ratio = jnp.exp(logp - old_logp[:, 1:])
+        mean_ratio = (ratio * msk).sum() / denom
+        clip_frac = (((ratio > 1 + hp.clip_high) | (ratio < 1 - hp.clip_low)) * msk).sum() / denom
+        mean_entropy = (ent * msk).sum() / denom
+        approx_kl = ((old_logp[:, 1:] - logp) * msk).sum() / denom
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (
+            new_step, loss, mean_ratio, clip_frac, mean_entropy, approx_kl, gnorm)
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# sft_step (supervised warm start)
+# --------------------------------------------------------------------------
+
+def make_sft_step(acfg: ArtifactConfig, hp: Hyper = Hyper()):
+    cfg = acfg.model
+    n_params = len(tfm.param_spec(cfg))
+
+    def sft_step(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        step, tokens, weights, lr = args[3 * n_params:3 * n_params + 4]
+        denom = jnp.maximum(weights[:, 1:].sum(), 1.0)
+
+        def loss_fn(ps):
+            logits = tfm.forward(cfg, ps, tokens)
+            logp_all = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+            logp = jnp.take_along_axis(logp_all, tokens[:, 1:, None], axis=-1)[..., 0]
+            return -(logp * weights[:, 1:]).sum() / denom
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, hp.max_grad_norm / jnp.maximum(gnorm, 1e-12))
+        grads = [g * scale for g in grads]
+        new_p, new_m, new_v, new_step = _adam(params, m, v, grads, step, lr, hp)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (new_step, loss, gnorm)
+
+    return sft_step
+
+
+# --------------------------------------------------------------------------
+# logprob (scoring)
+# --------------------------------------------------------------------------
+
+def make_logprob(acfg: ArtifactConfig):
+    cfg = acfg.model
+    n_params = len(tfm.param_spec(cfg))
+
+    def logprob(*args):
+        params = list(args[:n_params])
+        tokens = args[n_params]
+        logits = tfm.forward(cfg, params, tokens)
+        logp_all = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        logp = jnp.take_along_axis(logp_all, tokens[:, 1:, None], axis=-1)[..., 0]
+        return (jnp.pad(logp, ((0, 0), (1, 0))),)
+
+    return logprob

@@ -1,0 +1,229 @@
+"""Decoder-only transformer (pre-LN, learned positional embeddings, GELU MLP).
+
+Pure functions over an explicit parameter list so the AOT entry points have a
+stable, manifest-described calling convention.  Parameters travel as a flat
+*ordered list* of arrays; `param_spec` is the single source of truth for the
+order, names and shapes (mirrored in artifacts/manifest.json for rust).
+"""
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the wire format between python and rust."""
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (s, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1_scale", (d,)), (p + "ln1_bias", (d,)),
+            (p + "wq", (d, d)), (p + "wk", (d, d)),
+            (p + "wv", (d, d)), (p + "wo", (d, d)),
+            (p + "ln2_scale", (d,)), (p + "ln2_bias", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    spec += [
+        ("lnf_scale", (d,)), ("lnf_bias", (d,)),
+        ("lm_head", (d, v)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by 1/sqrt(2L)."""
+    spec = param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    out = []
+    resid_scale = 1.0 / math.sqrt(2.0 * cfg.n_layers)
+    for (name, shape), k in zip(spec, keys):
+        base = name.split(".")[-1]
+        if base in ("ln1_scale", "ln2_scale", "lnf_scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif base in ("ln1_bias", "ln2_bias", "lnf_bias", "b1", "b2"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            std = 0.02
+            if base in ("wo", "w2"):
+                std *= resid_scale
+            out.append(jax.random.normal(k, shape, jnp.float32) * std)
+    return out
+
+
+def as_dict(cfg: ModelConfig, params: List[jax.Array]) -> Dict[str, jax.Array]:
+    return {name: p for (name, _), p in zip(param_spec(cfg), params)}
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def mlp(p: Dict[str, jax.Array], prefix: str, x: jax.Array) -> jax.Array:
+    h = gelu(x @ p[prefix + "w1"] + p[prefix + "b1"])
+    return h @ p[prefix + "w2"] + p[prefix + "b2"]
+
+
+def split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    # [..., T, D] -> [..., H, T, Dh]
+    *lead, t, d = x.shape
+    x = x.reshape(*lead, t, n_heads, d // n_heads)
+    return jnp.moveaxis(x, -2, -3)
+
+
+def merge_heads(x: jax.Array) -> jax.Array:
+    # [..., H, T, Dh] -> [..., T, D]
+    x = jnp.moveaxis(x, -3, -2)
+    *lead, t, h, dh = x.shape
+    return x.reshape(*lead, t, h * dh)
+
+
+# --------------------------------------------------------------------------
+# Full-sequence causal forward (training / scoring path)
+# --------------------------------------------------------------------------
+
+def causal_attention(cfg: ModelConfig, p: Dict[str, jax.Array], prefix: str,
+                     x: jax.Array) -> jax.Array:
+    """x: [B, T, D] -> [B, T, D] with a causal mask."""
+    b, t, d = x.shape
+    q = split_heads(x @ p[prefix + "wq"], cfg.n_heads)  # [B,H,T,Dh]
+    k = split_heads(x @ p[prefix + "wk"], cfg.n_heads)
+    v = split_heads(x @ p[prefix + "wv"], cfg.n_heads)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.d_head)
+    causal = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return merge_heads(out) @ p[prefix + "wo"]
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array) -> jax.Array:
+    """tokens: i32[B, T] -> logits f32[B, T, V] (full causal forward)."""
+    p = as_dict(cfg, params)
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        x = x + causal_attention(cfg, p, pre, layer_norm(x, p[pre + "ln1_scale"], p[pre + "ln1_bias"]))
+        x = x + mlp(p, pre, layer_norm(x, p[pre + "ln2_scale"], p[pre + "ln2_bias"]))
+    x = layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return x @ p["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# KV-cache paths (rollout)
+# --------------------------------------------------------------------------
+# Cache layout: f32[n_layers, 2, B, H, S, Dh]; index 0=K, 1=V.
+# Invariant: for an active lane with current position `pos`, cache slots
+# [0, pos) hold valid K/V; the token at `pos` is the lane's pending token.
+
+def kv_cache_shape(cfg: ModelConfig, batch: int) -> Tuple[int, ...]:
+    return (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.d_head)
+
+
+def decode_attend(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
+                  v_cache: jax.Array, pos: jax.Array, *, use_pallas: bool) -> jax.Array:
+    """Single-query attention over the cache.
+
+    q: [B, H, Dh]; k_cache/v_cache: [B, H, S, Dh]; pos: i32[B]
+    (attend to slots j <= pos). Returns [B, H, Dh].
+    """
+    if use_pallas:
+        from .kernels.decode_attention import decode_attention
+        return decode_attention(q, k_cache, v_cache, pos)
+    from .kernels.ref import decode_attention_ref
+    return decode_attention_ref(q, k_cache, v_cache, pos)
+
+
+def decode_one(cfg: ModelConfig, params: List[jax.Array], kv: jax.Array,
+               tok: jax.Array, pos: jax.Array, active: jax.Array,
+               *, use_pallas: bool) -> Tuple[jax.Array, jax.Array]:
+    """One decode step for the whole engine batch.
+
+    kv: cache; tok: i32[B] token at `pos`; pos: i32[B]; active: bool[B].
+    Inactive lanes write to the reserved trash slot S-1 so their cache is
+    not corrupted. Returns (new_kv, logits f32[B,V]).
+    """
+    p = as_dict(cfg, params)
+    s = cfg.max_seq
+    safe_pos = jnp.clip(pos, 0, s - 1)
+    write_pos = jnp.where(active, safe_pos, s - 1)
+
+    x = p["tok_emb"][tok] + p["pos_emb"][safe_pos]          # [B, D]
+    new_kv = kv
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = layer_norm(x, p[pre + "ln1_scale"], p[pre + "ln1_bias"])
+        q = split_heads((h @ p[pre + "wq"])[:, None], cfg.n_heads)[:, :, 0]  # [B,H,Dh]
+        k = split_heads((h @ p[pre + "wk"])[:, None], cfg.n_heads)[:, :, 0]
+        v = split_heads((h @ p[pre + "wv"])[:, None], cfg.n_heads)[:, :, 0]
+
+        def write(cache_l, val, wp):
+            # cache_l: [B,H,S,Dh]; val: [B,H,Dh]; wp: i32[B]
+            def one(c, x_, w):
+                return jax.lax.dynamic_update_slice(c, x_[:, None], (0, w, 0))
+            return jax.vmap(one)(cache_l, val, wp)
+
+        k_cache = write(new_kv[i, 0], k, write_pos)
+        v_cache = write(new_kv[i, 1], v, write_pos)
+        new_kv = new_kv.at[i, 0].set(k_cache).at[i, 1].set(v_cache)
+
+        att = decode_attend(cfg, q, k_cache, v_cache, safe_pos, use_pallas=use_pallas)
+        x = x + att.reshape(att.shape[0], cfg.d_model) @ p[pre + "wo"]
+        x = x + mlp(p, pre, layer_norm(x, p[pre + "ln2_scale"], p[pre + "ln2_bias"]))
+    x = layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return new_kv, x @ p["lm_head"]
+
+
+def prefill(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array,
+            length: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Prompt (or prompt+resumed-partial) ingestion.
+
+    tokens: i32[B, Sp] left-aligned, PAD beyond `length`; length: i32[B].
+    Fills cache slots [0, Sp) and returns (kv, logits at position length-1).
+    """
+    p = as_dict(cfg, params)
+    b, sp = tokens.shape
+    s = cfg.max_seq
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :sp]
+    kv = jnp.zeros(kv_cache_shape(cfg, b), jnp.float32)
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = layer_norm(x, p[pre + "ln1_scale"], p[pre + "ln1_bias"])
+        q = split_heads(h @ p[pre + "wq"], cfg.n_heads)   # [B,H,Sp,Dh]
+        k = split_heads(h @ p[pre + "wk"], cfg.n_heads)
+        v = split_heads(h @ p[pre + "wv"], cfg.n_heads)
+        kv = kv.at[i, 0, :, :, :sp].set(k).at[i, 1, :, :, :sp].set(v)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.d_head)
+        causal = jnp.tril(jnp.ones((sp, sp), jnp.bool_))
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        att = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(scores, -1), v)
+        x = x + merge_heads(att) @ p[pre + "wo"]
+        x = x + mlp(p, pre, layer_norm(x, p[pre + "ln2_scale"], p[pre + "ln2_bias"]))
+    x = layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["lm_head"]                              # [B, Sp, V]
+    idx = jnp.clip(length - 1, 0, sp - 1)
+    last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    return kv, last

@@ -1,0 +1,182 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the CORE correctness signal for the kernels that end up inside the
+AOT-compiled HLO: hypothesis sweeps shapes/values and asserts allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention, vmem_bytes_estimate
+from compile.kernels.ppo_loss import ppo_loss
+from compile.kernels.ref import (decode_attention_ref, ppo_loss_grad_ref,
+                                 ppo_loss_ref)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# --------------------------------------------------------------------------
+# decode attention
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    h=st.integers(1, 4),
+    s=st.sampled_from([16, 48, 64, 96, 130]),
+    dh=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_matches_ref(b, h, s, dh, block_k, seed):
+    kq, kk, kv_, kp = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(kq, (b, h, dh))
+    k = jax.random.normal(kk, (b, h, s, dh))
+    v = jax.random.normal(kv_, (b, h, s, dh))
+    pos = jax.random.randint(kp, (b,), 0, s - 1)
+    got = decode_attention(q, k, v, pos, block_k=block_k)
+    want = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_pos_zero_attends_only_slot0():
+    b, h, s, dh = 2, 2, 32, 8
+    k = rand(0, (b, h, s, dh))
+    v = rand(1, (b, h, s, dh))
+    q = rand(2, (b, h, dh))
+    pos = jnp.zeros((b,), jnp.int32)
+    got = decode_attention(q, k, v, pos)
+    # softmax over a single slot == that slot's value
+    np.testing.assert_allclose(got, v[:, :, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_full_window():
+    b, h, s, dh = 1, 3, 64, 16
+    q, k, v = rand(3, (b, h, dh)), rand(4, (b, h, s, dh)), rand(5, (b, h, s, dh))
+    pos = jnp.array([s - 1], jnp.int32)
+    np.testing.assert_allclose(decode_attention(q, k, v, pos),
+                               decode_attention_ref(q, k, v, pos),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_ignores_garbage_beyond_pos():
+    """Slots > pos must not influence the output (cache holds trash there)."""
+    b, h, s, dh = 2, 2, 48, 8
+    q, k, v = rand(6, (b, h, dh)), rand(7, (b, h, s, dh)), rand(8, (b, h, s, dh))
+    pos = jnp.array([10, 20], jnp.int32)
+    base = decode_attention(q, k, v, pos)
+    k2 = k.at[:, :, 30:].set(1e4)
+    v2 = v.at[:, :, 30:].set(-1e4)
+    np.testing.assert_allclose(decode_attention(q, k2, v2, pos), base,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_large_scores_stable():
+    b, h, s, dh = 1, 1, 32, 8
+    q = rand(9, (b, h, dh), scale=30.0)
+    k = rand(10, (b, h, s, dh), scale=30.0)
+    v = rand(11, (b, h, s, dh))
+    pos = jnp.array([s - 1], jnp.int32)
+    got = decode_attention(q, k, v, pos)
+    assert bool(jnp.isfinite(got).all())
+    np.testing.assert_allclose(got, decode_attention_ref(q, k, v, pos),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimate_monotonic_in_block():
+    assert vmem_bytes_estimate(512, 64, 32) < vmem_bytes_estimate(512, 64, 128)
+
+
+# --------------------------------------------------------------------------
+# fused PPO loss
+# --------------------------------------------------------------------------
+
+def _ppo_inputs(seed, b, t, v, adv_scale=1.0, off=0.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    logits = jax.random.normal(ks[0], (b, t, v)) * 2.0
+    targets = jax.random.randint(ks[1], (b, t), 0, v)
+    # old_logp near the actual logp plus an offset -> ratios around exp(-off)
+    lp_all = jax.nn.log_softmax(logits, -1)
+    logp = jnp.take_along_axis(lp_all, targets[..., None], -1)[..., 0]
+    old_logp = logp + jax.random.normal(ks[2], (b, t)) * 0.3 + off
+    adv = jax.random.normal(ks[3], (b, t)) * adv_scale
+    mask = (jax.random.uniform(ks[4], (b, t)) > 0.25).astype(jnp.float32)
+    return logits, targets, old_logp, adv, mask
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    t=st.sampled_from([1, 7, 16, 33]),
+    v=st.sampled_from([8, 64, 100]),
+    cl=st.sampled_from([0.1, 0.2, 0.3]),
+    ch=st.sampled_from([0.2, 0.28, 0.4]),
+    seed=st.integers(0, 2**16),
+)
+def test_ppo_loss_fwd_matches_ref(b, t, v, cl, ch, seed):
+    logits, targets, old_logp, adv, mask = _ppo_inputs(seed, b, t, v)
+    got = ppo_loss(logits, targets, old_logp, adv, mask, cl, ch)
+    want = ppo_loss_ref(logits, targets, old_logp, adv, mask, cl, ch)
+    for g, w, name in zip(got, want, ["loss", "logp", "entropy"]):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    t=st.sampled_from([4, 16]),
+    v=st.sampled_from([16, 64]),
+    off=st.sampled_from([-1.0, 0.0, 1.0]),  # push ratios into/out of the clip window
+    seed=st.integers(0, 2**16),
+)
+def test_ppo_loss_bwd_matches_autodiff(b, t, v, off, seed):
+    logits, targets, old_logp, adv, mask = _ppo_inputs(seed, b, t, v, off=off)
+    g = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, t))
+
+    def f(lg):
+        return (ppo_loss(lg, targets, old_logp, adv, mask, 0.2, 0.28)[0] * g).sum()
+
+    got = jax.grad(f)(logits)
+    want = ppo_loss_grad_ref(logits, targets, old_logp, adv, mask, 0.2, 0.28, g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_ppo_loss_zero_mask_zero_loss_and_grad():
+    logits, targets, old_logp, adv, _ = _ppo_inputs(3, 2, 8, 16)
+    mask = jnp.zeros((2, 8))
+    loss, _, _ = ppo_loss(logits, targets, old_logp, adv, mask, 0.2, 0.28)
+    assert float(jnp.abs(loss).max()) == 0.0
+    d = jax.grad(lambda lg: ppo_loss(lg, targets, old_logp, adv, mask, 0.2, 0.28)[0].sum())(logits)
+    assert float(jnp.abs(d).max()) == 0.0
+
+
+def test_ppo_loss_ratio_one_equals_neg_adv():
+    """old_logp == logp -> ratio 1 -> loss_tok == -adv * mask exactly."""
+    logits, targets, _, adv, mask = _ppo_inputs(4, 2, 12, 32)
+    lp_all = jax.nn.log_softmax(logits, -1)
+    logp = jnp.take_along_axis(lp_all, targets[..., None], -1)[..., 0]
+    loss, _, _ = ppo_loss(logits, targets, logp, adv, mask, 0.2, 0.28)
+    np.testing.assert_allclose(loss, -adv * mask, rtol=1e-5, atol=1e-5)
+
+
+def test_ppo_loss_clip_is_asymmetric():
+    """DAPO clip-higher: ratio above 1+ch is clipped for adv>0 but the
+    *negative-advantage* branch keeps the raw ratio (min picks it)."""
+    b, t, v = 1, 1, 4
+    logits = jnp.zeros((b, t, v)).at[0, 0, 0].set(3.0)
+    targets = jnp.zeros((b, t), jnp.int32)
+    lp_all = jax.nn.log_softmax(logits, -1)
+    logp = lp_all[0, 0, 0]
+    old = jnp.full((b, t), logp - 1.0)           # ratio = e ≈ 2.72 > 1.28
+    mask = jnp.ones((b, t))
+    loss_pos, _, _ = ppo_loss(logits, targets, old, jnp.ones((b, t)), mask, 0.2, 0.28)
+    np.testing.assert_allclose(loss_pos[0, 0], -(1 + 0.28), rtol=1e-5)
+    loss_neg, _, _ = ppo_loss(logits, targets, old, -jnp.ones((b, t)), mask, 0.2, 0.28)
+    np.testing.assert_allclose(loss_neg[0, 0], float(jnp.exp(1.0)), rtol=1e-5)

@@ -1,0 +1,261 @@
+"""L2 invariants: prefill/decode consistency, sampling semantics, training
+step semantics — everything the rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import transformer as tfm
+from compile.configs import EOS, PAD, artifact_config
+
+jax.config.update("jax_platform_name", "cpu")
+
+ACFG = artifact_config("tiny", engine_batch=4, decode_chunk=8, train_batch=4)
+CFG = ACFG.model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tfm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_param_spec_matches_init(params):
+    spec = tfm.param_spec(CFG)
+    assert len(spec) == len(params)
+    for (name, shape), p in zip(spec, params):
+        assert tuple(shape) == p.shape, name
+    assert sum(int(np.prod(s)) for _, s in spec) == CFG.param_count()
+
+
+def test_prefill_last_logits_match_forward(params):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, CFG.max_seq), 3, CFG.vocab)
+    lens = jnp.array([5, 9, 3, 12], jnp.int32)
+    logits = tfm.forward(CFG, params, toks)
+    _, last = tfm.prefill(CFG, params, toks, lens)
+    want = jnp.take_along_axis(logits, (lens - 1)[:, None, None], axis=1)[:, 0]
+    np.testing.assert_allclose(last, want, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_chain_matches_forward(params):
+    """Teacher-force tokens through decode_one; logits must match the full
+    causal forward at every step (the KV cache is exact, not approximate)."""
+    b, n = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, n), 3, CFG.vocab)
+    full = tfm.forward(CFG, params, toks)
+
+    kv = jnp.zeros(tfm.kv_cache_shape(CFG, b), jnp.float32)
+    active = jnp.ones((b,), bool)
+    for t in range(n):
+        pos = jnp.full((b,), t, jnp.int32)
+        kv, logits = tfm.decode_one(CFG, params, kv, toks[:, t], pos, active,
+                                    use_pallas=True)
+        np.testing.assert_allclose(logits, full[:, t], rtol=2e-4, atol=1e-4,
+                                   err_msg=f"step {t}")
+
+
+def test_decode_pallas_and_ref_paths_agree(params):
+    b = 3
+    kv = jax.random.normal(jax.random.PRNGKey(3), tfm.kv_cache_shape(CFG, b)) * 0.3
+    tok = jnp.array([5, 9, 11], jnp.int32)
+    pos = jnp.array([4, 7, 2], jnp.int32)
+    act = jnp.ones((b,), bool)
+    kv1, l1 = tfm.decode_one(CFG, params, kv, tok, pos, act, use_pallas=True)
+    kv2, l2 = tfm.decode_one(CFG, params, kv, tok, pos, act, use_pallas=False)
+    np.testing.assert_allclose(l1, l2, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(kv1, kv2, rtol=2e-5, atol=1e-5)
+
+
+def test_prefill_then_decode_continues_consistently(params):
+    """prefill(prompt) + decode_one(next_tok, pos=len) must equal the full
+    forward over prompt+next_tok — the engine's resume invariant."""
+    b = 4
+    plen = 6
+    toks = jax.random.randint(jax.random.PRNGKey(4), (b, plen + 1), 3, CFG.vocab)
+    prompt = jnp.pad(toks[:, :plen], ((0, 0), (0, CFG.max_seq - plen)))
+    lens = jnp.full((b,), plen, jnp.int32)
+    kv, _ = tfm.prefill(CFG, params, prompt, lens)
+    kv, logits = tfm.decode_one(CFG, params, kv, toks[:, plen], lens,
+                                jnp.ones((b,), bool), use_pallas=True)
+    full = tfm.forward(CFG, params, toks)[:, plen]
+    np.testing.assert_allclose(logits, full, rtol=2e-4, atol=1e-4)
+
+
+class TestDecodeChunk:
+    def _run(self, params, kv, tok, pos, active, u, temp=1.0):
+        dc = M.make_decode_chunk(ACFG, use_pallas=True)
+        return jax.jit(dc)(*params, kv, tok, pos, active, u,
+                           jnp.float32(temp))
+
+    def test_greedy_is_deterministic(self, params):
+        b, k = ACFG.engine_batch, ACFG.decode_chunk
+        kv = jnp.zeros(tfm.kv_cache_shape(CFG, b), jnp.float32)
+        tok = jnp.full((b,), 3, jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        act = jnp.ones((b,), jnp.int32)
+        u = -jnp.ones((b, k))                    # negative -> greedy
+        _, _, _, _, t1, lp1 = self._run(params, kv, tok, pos, act, u)
+        _, _, _, _, t2, lp2 = self._run(params, kv, tok, pos, act, u)
+        assert (t1 == t2).all()
+        np.testing.assert_allclose(lp1, lp2)
+
+    def test_inactive_lane_emits_pad_and_freezes(self, params):
+        b, k = ACFG.engine_batch, ACFG.decode_chunk
+        kv = jnp.zeros(tfm.kv_cache_shape(CFG, b), jnp.float32)
+        tok = jnp.full((b,), 3, jnp.int32)
+        pos = jnp.array([0, 5, 0, 7], jnp.int32)
+        act = jnp.array([1, 0, 1, 0], jnp.int32)
+        u = jax.random.uniform(jax.random.PRNGKey(5), (b, k))
+        _, tok2, pos2, act2, toks, logps = self._run(params, kv, tok, pos, act, u)
+        assert (toks[1] == PAD).all() and (toks[3] == PAD).all()
+        assert (logps[1] == 0).all() and (logps[3] == 0).all()
+        assert pos2[1] == 5 and pos2[3] == 7
+        assert act2[1] == 0 and act2[3] == 0
+
+    def test_inactive_lane_does_not_corrupt_cache(self, params):
+        """An inactive lane writes only to the trash slot S-1."""
+        b, k = ACFG.engine_batch, ACFG.decode_chunk
+        kv = jax.random.normal(jax.random.PRNGKey(6),
+                               tfm.kv_cache_shape(CFG, b)) * 0.1
+        tok = jnp.full((b,), 3, jnp.int32)
+        pos = jnp.array([2, 5, 3, 7], jnp.int32)
+        act = jnp.array([0, 0, 0, 0], jnp.int32)
+        u = jax.random.uniform(jax.random.PRNGKey(7), (b, k))
+        kv2, *_ = self._run(params, kv, tok, pos, act, u)
+        np.testing.assert_allclose(kv2[:, :, :, :, :-1], kv[:, :, :, :, :-1],
+                                   rtol=1e-6, atol=1e-6)
+
+    @staticmethod
+    def _force_logits(params, col_vals):
+        """Make logits constant: lnf_scale=0, lnf_bias=e0, lm_head[0,c]=v."""
+        p = list(params)
+        spec = [n for n, _ in tfm.param_spec(CFG)]
+        p[spec.index("lnf_scale")] = jnp.zeros(CFG.d_model)
+        p[spec.index("lnf_bias")] = jnp.zeros(CFG.d_model).at[0].set(1.0)
+        head = jnp.zeros_like(p[spec.index("lm_head")])
+        for c, v in col_vals:
+            head = head.at[0, c].set(v)
+        p[spec.index("lm_head")] = head
+        return p
+
+    def test_eos_freezes_lane_mid_chunk(self, params):
+        """Force EOS deterministically via a constant logit vector."""
+        p = self._force_logits(params, [(EOS, 10.0)])
+        b, k = ACFG.engine_batch, ACFG.decode_chunk
+        kv = jnp.zeros(tfm.kv_cache_shape(CFG, b), jnp.float32)
+        tok = jnp.full((b,), 3, jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        act = jnp.ones((b,), jnp.int32)
+        u = -jnp.ones((b, k))                    # greedy -> always EOS
+        _, _, pos2, act2, toks, _ = self._run(p, kv, tok, pos, act, u)
+        assert (toks[:, 0] == EOS).all()
+        assert (toks[:, 1:] == PAD).all()
+        assert (act2 == 0).all()
+        assert (pos2 == 1).all()
+
+    def test_position_limit_deactivates(self, params):
+        b, k = ACFG.engine_batch, ACFG.decode_chunk
+        s = CFG.max_seq
+        kv = jnp.zeros(tfm.kv_cache_shape(CFG, b), jnp.float32)
+        tok = jnp.full((b,), 3, jnp.int32)
+        pos = jnp.full((b,), s - 3, jnp.int32)   # one step before the limit
+        act = jnp.ones((b,), jnp.int32)
+        u = jax.random.uniform(jax.random.PRNGKey(8), (b, k))
+        _, _, pos2, act2, toks, _ = self._run(params, kv, tok, pos, act, u)
+        assert (act2 == 0).all()
+        assert (pos2 <= s - 2).all()
+
+    def test_sampling_follows_uniform_inverse_cdf(self, params):
+        """u=0 must pick the first token with nonzero prob; u→1 the last."""
+        # concentrate mass on tokens 10 and 20 (roughly 50/50)
+        p = self._force_logits(params, [(10, 8.0), (20, 8.0)])
+        b, k = ACFG.engine_batch, ACFG.decode_chunk
+        kv = jnp.zeros(tfm.kv_cache_shape(CFG, b), jnp.float32)
+        tok = jnp.full((b,), 3, jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        act = jnp.ones((b,), jnp.int32)
+        u = jnp.full((b, k), 0.01)
+        _, _, _, _, toks, _ = self._run(p, kv, tok, pos, act, u)
+        assert (toks[:, 0] == 10).all()
+        u = jnp.full((b, k), 0.99)
+        _, _, _, _, toks, _ = self._run(p, kv, tok, pos, act, u)
+        assert (toks[:, 0] == 20).all()
+
+
+class TestTrainStep:
+    def _setup(self, params):
+        n = len(params)
+        zeros = [jnp.zeros_like(x) for x in params]
+        b, t = ACFG.train_batch, ACFG.train_seq
+        toks = jax.random.randint(jax.random.PRNGKey(9), (b, t), 3, CFG.vocab)
+        mask = jnp.zeros((b, t)).at[:, 4:40].set(1.0)
+        lp = M.make_logprob(ACFG)(*params, toks)[0]
+        return n, zeros, toks, mask, lp
+
+    def test_ratio_one_loss_equals_neg_mean_adv(self, params):
+        n, zeros, toks, mask, lp = self._setup(params)
+        adv = jnp.ones_like(mask) * 0.7
+        ts = jax.jit(M.make_train_step(ACFG))
+        out = ts(*params, *zeros, *zeros, jnp.int32(0), toks, mask, adv, lp,
+                 jnp.float32(1e-3))
+        step, loss, ratio, clipf, ent, kl, gnorm = out[3 * n:]
+        assert int(step) == 1
+        np.testing.assert_allclose(float(loss), -0.7, rtol=1e-5)
+        np.testing.assert_allclose(float(ratio), 1.0, rtol=1e-5)
+        assert float(clipf) == 0.0
+        np.testing.assert_allclose(float(kl), 0.0, atol=1e-6)
+        assert float(gnorm) > 0
+
+    def test_positive_advantage_increases_logp(self, params):
+        """One PPO step with adv>0 must raise the response tokens' logp."""
+        n, zeros, toks, mask, lp = self._setup(params)
+        adv = jnp.ones_like(mask)
+        ts = jax.jit(M.make_train_step(ACFG))
+        out = ts(*params, *zeros, *zeros, jnp.int32(0), toks, mask, adv, lp,
+                 jnp.float32(1e-2))
+        new_params = list(out[:n])
+        lp2 = M.make_logprob(ACFG)(*new_params, toks)[0]
+        gain = ((lp2 - lp) * mask).sum() / mask.sum()
+        assert float(gain) > 0, float(gain)
+
+    def test_pallas_and_ref_train_step_agree(self, params):
+        n, zeros, toks, mask, lp = self._setup(params)
+        adv = jax.random.normal(jax.random.PRNGKey(10), mask.shape)
+        a = jax.jit(M.make_train_step(ACFG, use_pallas=True))(
+            *params, *zeros, *zeros, jnp.int32(0), toks, mask, adv, lp,
+            jnp.float32(1e-3))
+        b = jax.jit(M.make_train_step(ACFG, use_pallas=False))(
+            *params, *zeros, *zeros, jnp.int32(0), toks, mask, adv, lp,
+            jnp.float32(1e-3))
+        np.testing.assert_allclose(float(a[3 * n + 1]), float(b[3 * n + 1]),
+                                   rtol=1e-5)
+        for x, y in zip(a[:n], b[:n]):
+            # Adam's rsqrt amplifies f32 noise on near-zero grads; tolerate it.
+            np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5)
+
+    def test_sft_decreases_loss(self, params):
+        n, zeros, toks, mask, _ = self._setup(params)
+        sft = jax.jit(M.make_sft_step(ACFG))
+        p, m, v = list(params), list(zeros), list(zeros)
+        step = jnp.int32(0)
+        losses = []
+        for _ in range(8):
+            out = sft(*p, *m, *v, step, toks, mask, jnp.float32(3e-3))
+            p, m, v = list(out[:n]), list(out[n:2 * n]), list(out[2 * n:3 * n])
+            step = out[3 * n]
+            losses.append(float(out[3 * n + 1]))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_logprob_alignment(params):
+    """logprob[t] is the log-prob of tokens[t] given tokens[<t]; slot 0 is 0."""
+    b, t = ACFG.train_batch, ACFG.train_seq
+    toks = jax.random.randint(jax.random.PRNGKey(11), (b, t), 3, CFG.vocab)
+    lp = M.make_logprob(ACFG)(*params, toks)[0]
+    assert lp.shape == (b, t)
+    assert (lp[:, 0] == 0).all()
+    logits = tfm.forward(CFG, params, toks)
+    want = jnp.take_along_axis(jax.nn.log_softmax(logits[:, :-1], -1),
+                               toks[:, 1:, None], -1)[..., 0]
+    np.testing.assert_allclose(lp[:, 1:], want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,45 @@
+//! Tiny shared bench harness (criterion is unavailable offline): timed
+//! closures with warmup, median-of-runs reporting, ns/op + throughput.
+
+use std::time::Instant;
+
+pub struct BenchReport {
+    pub name: String,
+    pub iters: u64,
+    pub total_secs: f64,
+    pub per_iter_secs: f64,
+}
+
+/// Run `f` repeatedly until ~`budget_secs` elapse (after 2 warmup calls);
+/// prints and returns the per-iteration time.
+pub fn bench<F: FnMut()>(name: &str, budget_secs: f64, mut f: F) -> BenchReport {
+    f();
+    f();
+    let mut iters = 0u64;
+    let start = Instant::now();
+    loop {
+        f();
+        iters += 1;
+        if start.elapsed().as_secs_f64() >= budget_secs {
+            break;
+        }
+    }
+    let total = start.elapsed().as_secs_f64();
+    let per = total / iters as f64;
+    let human = if per < 1e-6 {
+        format!("{:.0} ns", per * 1e9)
+    } else if per < 1e-3 {
+        format!("{:.2} us", per * 1e6)
+    } else if per < 1.0 {
+        format!("{:.2} ms", per * 1e3)
+    } else {
+        format!("{:.2} s", per)
+    };
+    println!("{name:<52} {human:>12}/iter   ({iters} iters)");
+    BenchReport { name: name.to_string(), iters, total_secs: total, per_iter_secs: per }
+}
+
+/// Report a rate metric computed by the caller.
+pub fn report_rate(name: &str, unit: &str, rate: f64) {
+    println!("{name:<52} {rate:>12.0} {unit}");
+}

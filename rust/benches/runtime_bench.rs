@@ -1,0 +1,107 @@
+//! End-to-end runtime benches over the real PJRT artifacts: prefill /
+//! decode_chunk / train_step latency and engine decode throughput — one
+//! bench per paper-relevant hot path (Fig. 5's real-engine analogue).
+//!
+//! Requires `make artifacts`; skips politely otherwise.
+//! `cargo bench --bench runtime_bench`.
+
+mod bench_util;
+
+use bench_util::{bench, report_rate};
+use sortedrl::rollout::{Engine, EngineConfig, Request};
+use sortedrl::runtime::{Runtime, TrainBatch};
+use sortedrl::tokenizer::PAD;
+use sortedrl::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP runtime_bench: no artifacts (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::load(dir, None)?;
+    let sh = rt.manifest.shapes.clone();
+    println!("== runtime benches (tag {}, {} params) ==",
+             rt.manifest.tag, rt.manifest.model.param_count);
+    let state = rt.init(1)?;
+    let mut rng = Pcg64::new(2);
+
+    // prefill
+    let tokens: Vec<i32> = (0..sh.engine_batch * sh.prefill_seq)
+        .map(|_| rng.range_i64(3, 60) as i32)
+        .collect();
+    let lens = vec![48i32; sh.engine_batch];
+    bench(&format!("prefill B={} Sp={}", sh.engine_batch, sh.prefill_seq), 3.0, || {
+        std::hint::black_box(rt.prefill(&state, &tokens, &lens).unwrap());
+    });
+
+    // decode chunk at full occupancy
+    let (kv0, _) = rt.prefill(&state, &tokens, &lens)?;
+    let tok = vec![5i32; sh.engine_batch];
+    let pos = lens.clone();
+    let active = vec![1i32; sh.engine_batch];
+    let uniforms: Vec<f32> = (0..sh.engine_batch * sh.decode_chunk)
+        .map(|_| rng.uniform_f32())
+        .collect();
+    let mut kv_cell = Some(kv0);
+    let r = bench(&format!("decode_chunk B={} k={}", sh.engine_batch, sh.decode_chunk),
+                  3.0, || {
+        let kv = kv_cell.take().unwrap();
+        let (kv, out) = rt
+            .decode_chunk(&state, kv, &tok, &pos, &active, &uniforms, 1.0)
+            .unwrap();
+        std::hint::black_box(&out);
+        kv_cell = Some(kv);
+    });
+    report_rate("  decode tokens/sec (full occupancy)", "tok/s",
+                (sh.engine_batch * sh.decode_chunk) as f64 / r.per_iter_secs);
+
+    // train step
+    let t = sh.train_seq;
+    let toks: Vec<i32> = (0..sh.train_batch * t)
+        .map(|_| rng.range_i64(3, 60) as i32)
+        .collect();
+    let mut mask = vec![0f32; sh.train_batch * t];
+    for b in 0..sh.train_batch {
+        for i in 8..t.min(120) {
+            mask[b * t + i] = 1.0;
+        }
+    }
+    let old_logp = rt.logprob(&state, &toks)?;
+    let mut st2 = rt.init(1)?;
+    let r = bench(&format!("train_step Bt={} T={}", sh.train_batch, t), 5.0, || {
+        let batch = TrainBatch {
+            tokens: toks.clone(),
+            mask: mask.clone(),
+            adv: vec![0.1; sh.train_batch * t],
+            old_logp: old_logp.clone(),
+            lr: 1e-4,
+        };
+        std::hint::black_box(rt.train_step(&mut st2, &batch).unwrap());
+    });
+    report_rate("  trained tokens/sec", "tok/s",
+                mask.iter().sum::<f32>() as f64 / r.per_iter_secs);
+
+    // engine end-to-end: generate to completion from 2x-oversubscribed queue
+    let r = bench("engine run_to_completion (2x oversub, cap 48)", 8.0, || {
+        let mut engine = Engine::new(&rt, EngineConfig {
+            temperature: 1.0,
+            greedy: false,
+            seed: 3,
+        });
+        let prompt: Vec<i32> = vec![1, 43, 11, 3, 33, 32, 34, 25, 3, 46];
+        engine.submit((0..sh.engine_batch * 2).map(|i| {
+            Request::fresh(i as u64, 0, i as u64, prompt.clone(), 48)
+        }));
+        let rollouts = engine.run_to_completion(&state).unwrap();
+        std::hint::black_box(&rollouts);
+    });
+    let _ = r;
+    let _ = PAD;
+    let st = rt.stats_snapshot();
+    println!("\ncumulative runtime stats: prefill {:.2}s/{} calls, decode {:.2}s/{} calls, train {:.2}s/{} calls",
+             st.prefill_secs, st.prefill_calls, st.decode_secs, st.decode_calls,
+             st.train_secs, st.train_calls);
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Benchmarks for the discrete-event simulator + the Fig. 5 regeneration
+//! path (the performance-figure harness itself must be fast enough to
+//! sweep).  Run via `cargo bench --bench sim_bench`.
+
+mod bench_util;
+
+use bench_util::{bench, report_rate};
+use sortedrl::sim::{longtail_workload, simulate, CostModel, SimMode};
+
+fn main() {
+    println!("== simulator benches ==");
+    let w512 = longtail_workload(512, 8192, 1);
+    let w4k = longtail_workload(4096, 8192, 2);
+    let cost = CostModel::default();
+
+    let r = bench("sim baseline 512x8k", 2.0, || {
+        std::hint::black_box(simulate(SimMode::Baseline, &w512, 128, 128, cost));
+    });
+    // iterations processed per second of host time
+    let sim_report = simulate(SimMode::Baseline, &w512, 128, 128, cost);
+    let events = sim_report.timeline.events().len() as f64;
+    report_rate("  timeline events/sec (host)", "ev/s", events / r.per_iter_secs);
+
+    bench("sim sorted-partial 512x8k", 2.0, || {
+        std::hint::black_box(simulate(SimMode::SortedPartial, &w512, 128, 128, cost));
+    });
+    bench("sim sorted-on-policy 512x8k", 2.0, || {
+        std::hint::black_box(simulate(SimMode::SortedOnPolicy, &w512, 128, 128, cost));
+    });
+    bench("sim sorted-partial 4096x8k (8 groups)", 4.0, || {
+        for chunk in w4k.chunks(512) {
+            std::hint::black_box(simulate(SimMode::SortedPartial, chunk, 128, 128, cost));
+        }
+    });
+    bench("workload generation 4096", 1.0, || {
+        std::hint::black_box(longtail_workload(4096, 8192, 3));
+    });
+}

@@ -1,0 +1,79 @@
+//! Benchmarks for the pure-rust substrates on the controller's hot path:
+//! task generation/verification, tokenizer, advantage computation, buffer
+//! operations.  `cargo bench --bench substrate_bench`.
+
+mod bench_util;
+
+use bench_util::bench;
+use sortedrl::coordinator::{Mode, RolloutBuffer};
+use sortedrl::rl::advantage::{advantages, AdvantageKind, BaselineState, RewardEntry};
+use sortedrl::rollout::Rollout;
+use sortedrl::tasks::logic::LogicTask;
+use sortedrl::tasks::math::MathTask;
+use sortedrl::tasks::Task;
+use sortedrl::tokenizer::Tokenizer;
+use sortedrl::util::rng::Pcg64;
+
+fn main() {
+    println!("== substrate benches ==");
+    let mut rng = Pcg64::new(1);
+    let logic = LogicTask::default();
+    let math = MathTask;
+
+    bench("K&K generate+solve n=5", 1.0, || {
+        std::hint::black_box(logic.generate(&mut rng, 5, 0));
+    });
+    bench("K&K generate+solve n=7 (128 models)", 1.0, || {
+        std::hint::black_box(logic.generate(&mut rng, 7, 0));
+    });
+    bench("math chain generate d=8", 1.0, || {
+        std::hint::black_box(math.generate(&mut rng, 8, 0));
+    });
+
+    let prob = logic.generate(&mut rng, 5, 1);
+    bench("logic verify (sft target)", 1.0, || {
+        std::hint::black_box(logic.verify(&prob, &prob.sft_target));
+    });
+
+    let tok = Tokenizer::new();
+    let text = tok.decode(&prob.prompt);
+    bench("tokenizer encode (~50 tokens)", 1.0, || {
+        std::hint::black_box(tok.encode(&text).unwrap());
+    });
+
+    let entries: Vec<RewardEntry> = (0..1024)
+        .map(|i| RewardEntry { reward: (i % 7) as f64 - 3.0, group: (i / 8) as u64 })
+        .collect();
+    let mut bl = BaselineState::default();
+    bench("advantages reinforce++ (1024 traj)", 1.0, || {
+        std::hint::black_box(advantages(AdvantageKind::ReinforcePlusPlus, &entries, &mut bl));
+    });
+    bench("advantages group-norm (1024 traj, 128 groups)", 1.0, || {
+        std::hint::black_box(advantages(AdvantageKind::GroupNorm, &entries, &mut bl));
+    });
+
+    bench("buffer lifecycle churn (512 entries)", 1.0, || {
+        let mut buf = RolloutBuffer::new();
+        let rids: Vec<u64> = (0..512)
+            .map(|i| buf.load_prompt(i, i as u64, vec![1, 2, 3], 64))
+            .collect();
+        let reqs = buf.dispatch(&rids);
+        for (i, req) in reqs.iter().enumerate() {
+            let r = Rollout {
+                request: req.clone(),
+                response: vec![5; 16],
+                logp: vec![-0.5; 16],
+                finish_version: 1,
+                complete: i % 3 != 0,
+                finished_at: i as f64,
+            };
+            if r.complete {
+                buf.record_finished(&r);
+            } else {
+                buf.record_terminated(&r, Mode::Partial);
+            }
+        }
+        let ready = buf.ready_rids();
+        std::hint::black_box(buf.consume(&ready));
+    });
+}

@@ -1,0 +1,414 @@
+//! Stateful rollout buffer (paper §3.3).
+//!
+//! Each entry tracks one prompt's in-progress sample through its lifecycle:
+//! prompt context, current partial trajectory, the behavior-policy
+//! log-probs of every generated token, a completion flag, and a lifecycle
+//! indicator deciding when the entry is cleared.  The controller's
+//! cache-aware loading rule ("no new prompts until all cached prompts are
+//! consumed", §3.1) is enforced here via [`RolloutBuffer::all_consumed`].
+
+use crate::rollout::{Request, Rollout};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Loaded from the dataloader, never scheduled yet.
+    Fresh,
+    /// Currently inside the rollout engine (lane or queue).
+    InFlight,
+    /// Terminated mid-generation; waiting to be rescheduled.
+    Scavenged,
+    /// Finished; trajectory ready for the trainer.
+    Ready,
+    /// Fed to the trainer; kept only for accounting until cleared.
+    Consumed,
+}
+
+#[derive(Debug, Clone)]
+pub struct BufferEntry {
+    pub rid: u64,
+    pub problem_idx: usize,
+    pub prompt_id: u64,
+    pub prompt: Vec<i32>,
+    /// Tokens generated so far (response prefix for scavenged entries,
+    /// full response for ready ones).
+    pub partial: Vec<i32>,
+    /// Sampling-time log-probs, aligned with `partial` (π_old, Eq. 1).
+    pub partial_logp: Vec<f32>,
+    pub complete: bool,
+    pub lifecycle: Lifecycle,
+    pub born_version: Option<u64>,
+    pub finish_version: u64,
+    pub resumes: u32,
+    pub max_new: usize,
+    /// Engine-clock time when the entry became Ready (length proxy).
+    pub finished_at: f64,
+    /// True if harvested clipped (incomplete but trained as-is).
+    pub clipped: bool,
+}
+
+/// Buffer policy: what happens to interrupted generations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Fully on-policy: discard partial tokens, re-queue the prompt.
+    OnPolicy,
+    /// Partial: keep tokens + log-probs, resume under the new policy.
+    Partial,
+}
+
+#[derive(Debug, Default)]
+pub struct RolloutBuffer {
+    entries: BTreeMap<u64, BufferEntry>,
+    next_rid: u64,
+}
+
+impl RolloutBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn count(&self, lc: Lifecycle) -> usize {
+        self.entries.values().filter(|e| e.lifecycle == lc).count()
+    }
+
+    pub fn get(&self, rid: u64) -> Option<&BufferEntry> {
+        self.entries.get(&rid)
+    }
+
+    /// Load a prompt (one sample thereof); returns its rid.
+    pub fn load_prompt(&mut self, problem_idx: usize, prompt_id: u64,
+                       prompt: Vec<i32>, max_new: usize) -> u64 {
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        self.entries.insert(rid, BufferEntry {
+            rid,
+            problem_idx,
+            prompt_id,
+            prompt,
+            partial: Vec::new(),
+            partial_logp: Vec::new(),
+            complete: false,
+            lifecycle: Lifecycle::Fresh,
+            born_version: None,
+            finish_version: 0,
+            resumes: 0,
+            max_new,
+            finished_at: 0.0,
+            clipped: false,
+        });
+        rid
+    }
+
+    /// Entries schedulable right now (Fresh or Scavenged), FIFO by rid.
+    pub fn schedulable(&self) -> Vec<u64> {
+        self.entries
+            .values()
+            .filter(|e| matches!(e.lifecycle, Lifecycle::Fresh | Lifecycle::Scavenged))
+            .map(|e| e.rid)
+            .collect()
+    }
+
+    /// Build engine requests for the given rids and mark them in flight.
+    pub fn dispatch(&mut self, rids: &[u64]) -> Vec<Request> {
+        rids.iter()
+            .map(|rid| {
+                let e = self.entries.get_mut(rid).expect("dispatch unknown rid");
+                assert!(
+                    matches!(e.lifecycle, Lifecycle::Fresh | Lifecycle::Scavenged),
+                    "dispatching {:?} entry {rid}",
+                    e.lifecycle
+                );
+                e.lifecycle = Lifecycle::InFlight;
+                Request {
+                    rid: e.rid,
+                    problem_idx: e.problem_idx,
+                    prompt_id: e.prompt_id,
+                    prompt: e.prompt.clone(),
+                    resumed: e.partial.clone(),
+                    resumed_logp: e.partial_logp.clone(),
+                    born_version: e.born_version,
+                    resumes: e.resumes,
+                    max_new: e.max_new,
+                }
+            })
+            .collect()
+    }
+
+    /// Record a scheduler-CLIPPED rollout -> Ready (trained as-is, truncated).
+    /// On-policy harvests fill their quota this way (§3.1: "both completed
+    /// and partially generated outputs are harvested"); both modes clip at
+    /// the group's final wave instead of riding the drain tail.
+    pub fn record_clipped(&mut self, r: &Rollout) {
+        let e = self.entries.get_mut(&r.request.rid).expect("unknown rid");
+        debug_assert_eq!(e.lifecycle, Lifecycle::InFlight);
+        e.partial = r.response.clone();
+        e.partial_logp = r.logp.clone();
+        e.complete = false; // clipped: the model never finished it
+        e.clipped = true;
+        e.lifecycle = Lifecycle::Ready;
+        e.born_version = r.request.born_version;
+        e.finish_version = r.finish_version;
+        e.finished_at = r.finished_at;
+    }
+
+    /// Consume entries WITHOUT training (group-end drops of never-scheduled
+    /// prompts — Fig. 2's gray bars).  Returns how many were dropped.
+    pub fn consume_untrained(&mut self, rids: &[u64]) -> usize {
+        for rid in rids {
+            let e = self.entries.get_mut(rid).expect("unknown rid");
+            e.lifecycle = Lifecycle::Consumed;
+        }
+        rids.len()
+    }
+
+    /// Record a finished rollout -> Ready.
+    pub fn record_finished(&mut self, r: &Rollout) {
+        let e = self.entries.get_mut(&r.request.rid).expect("unknown rid");
+        debug_assert_eq!(e.lifecycle, Lifecycle::InFlight);
+        e.partial = r.response.clone();
+        e.partial_logp = r.logp.clone();
+        e.complete = true;
+        e.lifecycle = Lifecycle::Ready;
+        e.born_version = r.request.born_version;
+        e.finish_version = r.finish_version;
+        e.finished_at = r.finished_at;
+    }
+
+    /// Record a scheduler-terminated rollout according to `mode`:
+    /// OnPolicy discards the partial tokens (prompt restarts from scratch),
+    /// Partial scavenges tokens + log-probs for resumption (§3.2).
+    pub fn record_terminated(&mut self, r: &Rollout, mode: Mode) {
+        let e = self.entries.get_mut(&r.request.rid).expect("unknown rid");
+        debug_assert_eq!(e.lifecycle, Lifecycle::InFlight);
+        match mode {
+            Mode::OnPolicy => {
+                e.partial.clear();
+                e.partial_logp.clear();
+                e.born_version = None; // restart: next attempt is fresh
+            }
+            Mode::Partial => {
+                e.partial = r.response.clone();
+                e.partial_logp = r.logp.clone();
+                e.born_version = r.request.born_version;
+            }
+        }
+        e.resumes += 1;
+        e.lifecycle = Lifecycle::Scavenged;
+    }
+
+    /// Re-queue a request that was waiting in the engine queue (untouched).
+    pub fn record_requeued(&mut self, rid: u64) {
+        let e = self.entries.get_mut(&rid).expect("unknown rid");
+        debug_assert_eq!(e.lifecycle, Lifecycle::InFlight);
+        e.lifecycle = if e.partial.is_empty() {
+            Lifecycle::Fresh
+        } else {
+            Lifecycle::Scavenged
+        };
+    }
+
+    /// Ready entries in completion order (the length-sorted order the
+    /// micro-curriculum consumes).
+    pub fn ready_rids(&self) -> Vec<u64> {
+        let mut v: Vec<&BufferEntry> = self
+            .entries
+            .values()
+            .filter(|e| e.lifecycle == Lifecycle::Ready)
+            .collect();
+        v.sort_by(|a, b| a.finished_at.partial_cmp(&b.finished_at).unwrap()
+            .then(a.rid.cmp(&b.rid)));
+        v.into_iter().map(|e| e.rid).collect()
+    }
+
+    /// Consume exactly `rids` (marks Consumed and returns their entries).
+    pub fn consume(&mut self, rids: &[u64]) -> Vec<BufferEntry> {
+        rids.iter()
+            .map(|rid| {
+                let e = self.entries.get_mut(rid).expect("consume unknown rid");
+                assert_eq!(e.lifecycle, Lifecycle::Ready, "consume non-ready {rid}");
+                e.lifecycle = Lifecycle::Consumed;
+                e.clone()
+            })
+            .collect()
+    }
+
+    /// The grouped-rollout barrier: true when every loaded prompt has been
+    /// consumed by the trainer (controller may then load the next group).
+    pub fn all_consumed(&self) -> bool {
+        self.entries
+            .values()
+            .all(|e| e.lifecycle == Lifecycle::Consumed)
+    }
+
+    /// Drop consumed entries (lifecycle end).
+    pub fn clear_consumed(&mut self) {
+        self.entries.retain(|_, e| e.lifecycle != Lifecycle::Consumed);
+    }
+
+    /// Remove entries outright (no-grouped ablation abandons interrupted
+    /// generations — the prompt-starvation failure mode Fig. 6a shows).
+    pub fn discard(&mut self, rids: &[u64]) {
+        for rid in rids {
+            self.entries.remove(rid);
+        }
+    }
+
+    /// Sanity invariant: every entry is in exactly one lifecycle state and
+    /// scavenged entries carry log-probs matching their partials.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for e in self.entries.values() {
+            if e.partial.len() != e.partial_logp.len() {
+                return Err(format!(
+                    "rid {}: partial len {} != logp len {}",
+                    e.rid,
+                    e.partial.len(),
+                    e.partial_logp.len()
+                ));
+            }
+            if e.lifecycle == Lifecycle::Ready && !e.complete && !e.clipped {
+                return Err(format!("rid {}: ready but neither complete nor clipped", e.rid));
+            }
+            if e.partial.len() > e.max_new {
+                return Err(format!(
+                    "rid {}: partial {} exceeds max_new {}",
+                    e.rid,
+                    e.partial.len(),
+                    e.max_new
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rollout::Request;
+
+    fn rollout(rid: u64, toks: Vec<i32>, complete: bool, at: f64) -> Rollout {
+        let n = toks.len();
+        Rollout {
+            request: Request {
+                rid,
+                problem_idx: 0,
+                prompt_id: rid,
+                prompt: vec![1, 2],
+                resumed: vec![],
+                resumed_logp: vec![],
+                born_version: Some(3),
+                resumes: 0,
+                max_new: 64,
+            },
+            response: toks,
+            logp: vec![-0.5; n],
+            finish_version: 3,
+            complete,
+            finished_at: at,
+        }
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 7, vec![1, 2], 64);
+        assert_eq!(buf.count(Lifecycle::Fresh), 1);
+        let reqs = buf.dispatch(&[rid]);
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(buf.count(Lifecycle::InFlight), 1);
+        buf.record_finished(&rollout(rid, vec![5, 6, 2], true, 1.0));
+        assert_eq!(buf.ready_rids(), vec![rid]);
+        let consumed = buf.consume(&[rid]);
+        assert_eq!(consumed[0].partial, vec![5, 6, 2]);
+        assert!(buf.all_consumed());
+        buf.clear_consumed();
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn on_policy_termination_discards_partial() {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 7, vec![1, 2], 64);
+        buf.dispatch(&[rid]);
+        buf.record_terminated(&rollout(rid, vec![5, 6], false, 1.0), Mode::OnPolicy);
+        let e = buf.get(rid).unwrap();
+        assert!(e.partial.is_empty());
+        assert_eq!(e.lifecycle, Lifecycle::Scavenged);
+        assert_eq!(e.resumes, 1);
+        assert_eq!(e.born_version, None);
+        // re-dispatch starts from scratch
+        let reqs = buf.dispatch(&[rid]);
+        assert!(reqs[0].resumed.is_empty());
+    }
+
+    #[test]
+    fn partial_termination_keeps_tokens_and_logps() {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 7, vec![1, 2], 64);
+        buf.dispatch(&[rid]);
+        buf.record_terminated(&rollout(rid, vec![5, 6], false, 1.0), Mode::Partial);
+        let e = buf.get(rid).unwrap();
+        assert_eq!(e.partial, vec![5, 6]);
+        assert_eq!(e.partial_logp.len(), 2);
+        assert_eq!(e.born_version, Some(3));
+        let reqs = buf.dispatch(&[rid]);
+        assert_eq!(reqs[0].resumed, vec![5, 6]);
+        assert_eq!(reqs[0].resumed_logp, vec![-0.5, -0.5]);
+        assert_eq!(reqs[0].resumes, 1);
+    }
+
+    #[test]
+    fn ready_order_is_completion_order() {
+        let mut buf = RolloutBuffer::new();
+        let a = buf.load_prompt(0, 1, vec![1], 64);
+        let b = buf.load_prompt(1, 2, vec![1], 64);
+        let c = buf.load_prompt(2, 3, vec![1], 64);
+        buf.dispatch(&[a, b, c]);
+        buf.record_finished(&rollout(b, vec![2], true, 0.5));
+        buf.record_finished(&rollout(c, vec![2], true, 1.5));
+        buf.record_finished(&rollout(a, vec![2], true, 1.0));
+        assert_eq!(buf.ready_rids(), vec![b, a, c]);
+    }
+
+    #[test]
+    fn all_consumed_gates_group_barrier() {
+        let mut buf = RolloutBuffer::new();
+        let a = buf.load_prompt(0, 1, vec![1], 64);
+        let b = buf.load_prompt(1, 2, vec![1], 64);
+        buf.dispatch(&[a]);
+        buf.record_finished(&rollout(a, vec![2], true, 1.0));
+        buf.consume(&[a]);
+        assert!(!buf.all_consumed(), "b is still fresh");
+        buf.dispatch(&[b]);
+        buf.record_finished(&rollout(b, vec![2], true, 2.0));
+        buf.consume(&[b]);
+        assert!(buf.all_consumed());
+    }
+
+    #[test]
+    #[should_panic(expected = "consume non-ready")]
+    fn consume_requires_ready() {
+        let mut buf = RolloutBuffer::new();
+        let a = buf.load_prompt(0, 1, vec![1], 64);
+        buf.consume(&[a]);
+    }
+
+    #[test]
+    fn invariants_catch_mismatched_logps() {
+        let mut buf = RolloutBuffer::new();
+        let a = buf.load_prompt(0, 1, vec![1], 4);
+        buf.dispatch(&[a]);
+        let mut r = rollout(a, vec![2, 3], false, 1.0);
+        r.logp = vec![-0.1];
+        buf.record_terminated(&r, Mode::Partial);
+        assert!(buf.check_invariants().is_err());
+    }
+}

@@ -1,0 +1,545 @@
+//! The SortedRL length-aware controller (paper §3) + baseline schedulers.
+//!
+//! One controller drives the whole RL loop: it pulls prompts from the
+//! dataloader under the grouped cache-aware loading rule, oversubscribes
+//! the rollout engine, early-terminates on the batching threshold (ready
+//! trajectories >= update batch), harvests completed rollouts in completion
+//! (== length) order, scavenges interrupted ones per the off-policiness
+//! mode, and feeds selectively-composed batches to the trainer.
+//!
+//! Scheduler variants cover every strategy the paper evaluates:
+//!   * `SortedOnPolicy` / `SortedPartial` — SortedRL's two modes (§3.2)
+//!   * `Baseline`   — large rollout batch, sync barrier, k sequential
+//!     off-policy updates (the canonical VeRL-style pipeline)
+//!   * `PostHocSort` — ablation: baseline + sort by length before updating
+//!   * `NoGroupedRollout` — ablation: oversubscription without the group
+//!     barrier (biases training to short responses; Fig. 6a)
+
+use crate::coordinator::buffer::{Lifecycle, Mode, RolloutBuffer};
+use crate::coordinator::trainer::{Trainer, UpdateLog};
+use crate::data::{DataLoader, Dataset};
+use crate::metrics::PhaseClock;
+use crate::rl::advantage::AdvantageKind;
+use crate::rollout::{Engine, EngineConfig};
+use crate::runtime::{ParamState, Runtime};
+use crate::tasks::{Reward, Task};
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    SortedOnPolicy,
+    SortedPartial,
+    Baseline,
+    PostHocSort,
+    NoGroupedRollout,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sorted-on-policy" | "on-policy" => Self::SortedOnPolicy,
+            "sorted-partial" | "partial" => Self::SortedPartial,
+            "baseline" => Self::Baseline,
+            "post-hoc-sort" => Self::PostHocSort,
+            "no-grouped" => Self::NoGroupedRollout,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::SortedOnPolicy => "sorted-on-policy",
+            Self::SortedPartial => "sorted-partial",
+            Self::Baseline => "baseline",
+            Self::PostHocSort => "post-hoc-sort",
+            Self::NoGroupedRollout => "no-grouped",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LoopConfig {
+    pub scheduler: SchedulerKind,
+    /// b: prompts per rollout batch.
+    pub rollout_prompts: usize,
+    /// n: prompt batches per group (sorted modes; pool = n*b prompts).
+    pub group_size: usize,
+    /// G: responses sampled per prompt.
+    pub samples_per_prompt: usize,
+    /// Trajectories per logical update (advantage-normalization scope).
+    pub update_batch: usize,
+    pub max_updates: usize,
+    pub lr: f32,
+    pub temperature: f32,
+    pub seed: u64,
+    pub adv: AdvantageKind,
+    /// Cap on generated tokens per response.
+    pub max_new: usize,
+    /// Evaluate every k updates (0 = never).
+    pub eval_every: usize,
+    /// Evaluate on at most this many held-out problems.
+    pub eval_limit: usize,
+    pub verbose: bool,
+}
+
+impl Default for LoopConfig {
+    fn default() -> Self {
+        Self {
+            scheduler: SchedulerKind::SortedOnPolicy,
+            rollout_prompts: 8,
+            group_size: 4,
+            samples_per_prompt: 2,
+            update_batch: 16,
+            max_updates: 50,
+            lr: 1e-3,
+            temperature: 1.0,
+            seed: 0,
+            adv: AdvantageKind::ReinforcePlusPlus,
+            max_new: 160,
+            eval_every: 10,
+            eval_limit: 64,
+            verbose: false,
+        }
+    }
+}
+
+/// One row of the training telemetry (drives Figs. 3/4/6/9).
+#[derive(Debug, Clone)]
+pub struct LogRow {
+    pub update: UpdateLog,
+    pub epochs: f64,
+    pub rollout_tokens: u64,
+    pub rollout_secs: f64,
+    pub eval: Option<EvalResult>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalResult {
+    /// Mean total reward normalized by Reward::MAX (the "validation score").
+    pub score: f64,
+    pub accuracy: f64,
+    pub format_rate: f64,
+    pub mean_resp_len: f64,
+}
+
+/// Aggregated outcome of a training run.
+pub struct RunResult {
+    pub rows: Vec<LogRow>,
+    pub final_eval: EvalResult,
+    pub phase_clock: PhaseClock,
+    /// (bubble_ratio, mean_occupancy) aggregated over rollout phases.
+    pub bubble_ratio: f64,
+    pub total_rollout_tokens: u64,
+    /// Trajectories discarded without training (no-grouped ablation).
+    pub discarded: u64,
+}
+
+pub struct Controller<'rt> {
+    rt: &'rt Runtime,
+    task: Box<dyn Task>,
+    dataset: Dataset,
+    loader: DataLoader,
+    cfg: LoopConfig,
+    buffer: RolloutBuffer,
+    // occupancy aggregation across engine phases
+    idle_area: f64,
+    busy_span: f64,
+    rollout_tokens: u64,
+    discarded: u64,
+}
+
+impl<'rt> Controller<'rt> {
+    pub fn new(rt: &'rt Runtime, task: Box<dyn Task>, dataset: Dataset,
+               cfg: LoopConfig) -> Self {
+        let loader = DataLoader::new(dataset.train.len(), cfg.seed ^ 0x11);
+        Controller {
+            rt,
+            task,
+            dataset,
+            loader,
+            cfg,
+            buffer: RolloutBuffer::new(),
+            idle_area: 0.0,
+            busy_span: 0.0,
+            rollout_tokens: 0,
+            discarded: 0,
+        }
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    fn engine_cfg(&self, greedy: bool) -> EngineConfig {
+        EngineConfig {
+            temperature: self.cfg.temperature,
+            greedy,
+            seed: self.cfg.seed,
+        }
+    }
+
+    fn effective_max_new(&self) -> usize {
+        // keep prompt + response inside the training unroll T
+        let t = self.rt.manifest.shapes.train_seq;
+        let max_prompt = self
+            .dataset
+            .train
+            .iter()
+            .map(|p| p.prompt.len())
+            .max()
+            .unwrap_or(0);
+        self.cfg.max_new.min(t.saturating_sub(max_prompt + 1))
+    }
+
+    fn load_prompts(&mut self, n_prompts: usize) {
+        let max_new = self.effective_max_new();
+        for idx in self.loader.next_batch(n_prompts) {
+            let p = &self.dataset.train[idx];
+            for _ in 0..self.cfg.samples_per_prompt {
+                self.buffer.load_prompt(idx, p.id, p.prompt.clone(), max_new);
+            }
+        }
+    }
+
+    fn absorb_engine_occupancy(&mut self, engine: &Engine) {
+        let cap = engine.lane_count();
+        let end = engine.clock();
+        let bubble = engine.timeline.bubble_ratio(cap, end);
+        let (start, _) = engine.timeline.span();
+        let span = end - start;
+        self.idle_area += bubble * span * cap as f64;
+        self.busy_span += span * cap as f64;
+        self.rollout_tokens += engine.timeline.tokens_out();
+    }
+
+    /// Aggregate bubble ratio over every rollout phase so far.
+    pub fn bubble_ratio(&self) -> f64 {
+        if self.busy_span == 0.0 {
+            0.0
+        } else {
+            self.idle_area / self.busy_span
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // evaluation (greedy)
+    // ------------------------------------------------------------------
+
+    pub fn evaluate(&self, state: &ParamState) -> Result<EvalResult> {
+        let max_new = self.effective_max_new();
+        let problems: Vec<(usize, &crate::tasks::Problem)> = self
+            .dataset
+            .eval
+            .iter()
+            .take(self.cfg.eval_limit)
+            .enumerate()
+            .collect();
+        if problems.is_empty() {
+            return Ok(EvalResult::default());
+        }
+        let mut engine = Engine::new(self.rt, self.engine_cfg(true));
+        engine.submit(problems.iter().map(|(i, p)| {
+            crate::rollout::Request::fresh(*i as u64, *i, p.id, p.prompt.clone(), max_new)
+        }));
+        let rollouts = engine.run_to_completion(state)?;
+        let mut score = 0.0;
+        let mut acc = 0.0;
+        let mut fmt = 0.0;
+        let mut len = 0.0;
+        for r in &rollouts {
+            let p = problems[r.request.problem_idx].1;
+            let reward = self.task.verify(p, &r.response);
+            score += reward.total() / Reward::MAX;
+            acc += reward.correct as u8 as f64;
+            fmt += reward.format_ok as u8 as f64;
+            len += r.response.len() as f64;
+        }
+        let n = rollouts.len() as f64;
+        Ok(EvalResult {
+            score: score / n,
+            accuracy: acc / n,
+            format_rate: fmt / n,
+            mean_resp_len: len / n,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // main loop
+    // ------------------------------------------------------------------
+
+    pub fn run(&mut self, state: &mut ParamState) -> Result<RunResult> {
+        let mut trainer = Trainer::new(self.rt, self.cfg.adv, self.cfg.lr);
+        let mut rows: Vec<LogRow> = Vec::new();
+        let mut phase_clock = PhaseClock::default();
+        let train_secs_at_start = self.rt.stats_snapshot().train_secs;
+
+        while trainer.updates() < self.cfg.max_updates {
+            match self.cfg.scheduler {
+                SchedulerKind::SortedOnPolicy => {
+                    self.run_group(state, &mut trainer, Mode::OnPolicy, &mut rows,
+                                   &mut phase_clock)?;
+                }
+                SchedulerKind::SortedPartial => {
+                    self.run_group(state, &mut trainer, Mode::Partial, &mut rows,
+                                   &mut phase_clock)?;
+                }
+                SchedulerKind::Baseline => {
+                    self.run_baseline(state, &mut trainer, false, &mut rows,
+                                      &mut phase_clock)?;
+                }
+                SchedulerKind::PostHocSort => {
+                    self.run_baseline(state, &mut trainer, true, &mut rows,
+                                      &mut phase_clock)?;
+                }
+                SchedulerKind::NoGroupedRollout => {
+                    self.run_no_grouped(state, &mut trainer, &mut rows,
+                                        &mut phase_clock)?;
+                }
+            }
+        }
+
+        phase_clock.update = self.rt.stats_snapshot().train_secs - train_secs_at_start;
+        let final_eval = self.evaluate(state)?;
+        Ok(RunResult {
+            rows,
+            final_eval,
+            phase_clock,
+            bubble_ratio: self.bubble_ratio(),
+            total_rollout_tokens: self.rollout_tokens,
+            discarded: self.discarded,
+        })
+    }
+
+    fn log_update(&mut self, rows: &mut Vec<LogRow>, state: &ParamState,
+                  log: UpdateLog, engine_secs: f64) -> Result<()> {
+        let eval = if self.cfg.eval_every > 0 && log.update_idx % self.cfg.eval_every == 0 {
+            Some(self.evaluate(state)?)
+        } else {
+            None
+        };
+        if self.cfg.verbose {
+            let ev = eval
+                .map(|e| format!(" | eval score {:.3} acc {:.3} len {:.1}",
+                                 e.score, e.accuracy, e.mean_resp_len))
+                .unwrap_or_default();
+            eprintln!(
+                "upd {:>4} v{:<4} reward {:+.3} acc {:.2} fmt {:.2} len {:>5.1} stale {:.2} kl {:+.4}{}",
+                log.update_idx, log.policy_version, log.mean_reward, log.accuracy,
+                log.format_rate, log.mean_resp_len, log.mean_staleness,
+                log.stats.approx_kl, ev
+            );
+        }
+        rows.push(LogRow {
+            update: log,
+            epochs: self.loader.epochs_elapsed(),
+            rollout_tokens: self.rollout_tokens,
+            rollout_secs: engine_secs,
+            eval,
+        });
+        Ok(())
+    }
+
+    /// SortedRL (both modes): one group = n*b prompts, consumed fully
+    /// before new prompts load (cache-aware loading, §3.1).
+    fn run_group(&mut self, state: &mut ParamState, trainer: &mut Trainer,
+                 mode: Mode, rows: &mut Vec<LogRow>,
+                 phase_clock: &mut PhaseClock) -> Result<()> {
+        let pool = self.cfg.group_size * self.cfg.rollout_prompts;
+        self.load_prompts(pool);
+        let mut engine = Engine::new(self.rt, self.engine_cfg(false));
+
+        while !self.buffer.all_consumed() && trainer.updates() < self.cfg.max_updates {
+            // dispatch everything schedulable (oversubscription)
+            let rids = self.buffer.schedulable();
+            if !rids.is_empty() {
+                engine.submit(self.buffer.dispatch(&rids));
+            }
+            let unconsumed = self.buffer.len() - self.buffer.count(Lifecycle::Consumed);
+            let quota = self.cfg.update_batch.min(unconsumed);
+            // On-policy fires once most of the quota completed and clips the
+            // top-progress runners to fill the batch (waiting for the last
+            // completions is where discarded-progress waste piles up);
+            // partial waits for full completions (resume is free).
+            let threshold = match mode {
+                Mode::OnPolicy => (quota * 3 / 4).max(1),
+                Mode::Partial => quota,
+            };
+            let final_wave = unconsumed <= self.cfg.update_batch;
+            let occ_floor = (engine.lane_count() * 3 / 4).max(1);
+            // generate until the batching threshold fires or the pool drains
+            loop {
+                engine.admit(state)?;
+                if engine.running() == 0 && engine.queued() == 0 {
+                    break;
+                }
+                engine.step(state)?;
+                for r in engine.drain_finished() {
+                    self.buffer.record_finished(&r);
+                }
+                let ready = self.buffer.count(Lifecycle::Ready);
+                if ready >= threshold && !final_wave {
+                    break; // early termination (batching threshold)
+                }
+                if final_wave && engine.queued() == 0 && engine.running() < occ_floor {
+                    break; // batching floor: clip the stragglers
+                }
+            }
+            // harvest: terminate in-flight, clip or scavenge per mode
+            let (mut partials, queued) = engine.terminate_all(state.version);
+            partials.sort_by(|a, b| b.response.len().cmp(&a.response.len()));
+            let mut ready_count = self.buffer.count(Lifecycle::Ready);
+            for r in &partials {
+                let clip = !r.response.is_empty()
+                    && (final_wave
+                        || (mode == Mode::OnPolicy && ready_count < quota));
+                if clip {
+                    self.buffer.record_clipped(r);
+                    ready_count += 1;
+                } else {
+                    self.buffer.record_terminated(r, mode);
+                }
+            }
+            if final_wave {
+                // never-scheduled leftovers at group end are dropped
+                let stragglers: Vec<u64> = queued.iter().map(|q| q.rid).collect();
+                for q in queued {
+                    self.buffer.record_requeued(q.rid);
+                }
+                let leftover: Vec<u64> = self
+                    .buffer
+                    .schedulable()
+                    .into_iter()
+                    .filter(|rid| stragglers.contains(rid))
+                    .collect();
+                self.discarded += self.buffer.consume_untrained(&leftover) as u64;
+            } else {
+                for q in queued {
+                    self.buffer.record_requeued(q.rid);
+                }
+            }
+            debug_assert!(self.buffer.check_invariants().is_ok());
+
+            // consume up to update_batch ready trajectories, completion order
+            let ready = self.buffer.ready_rids();
+            if ready.is_empty() {
+                break; // nothing finished (shouldn't happen with sane caps)
+            }
+            let take: Vec<u64> = ready
+                .into_iter()
+                .take(self.cfg.update_batch)
+                .collect();
+            let entries = self.buffer.consume(&take);
+            let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
+            let log = trainer.update(state, &entries, &rewards)?;
+            self.log_update(rows, state, log, engine.clock())?;
+        }
+        self.absorb_engine_occupancy(&engine);
+        phase_clock.rollout += engine.clock();
+        self.buffer.clear_consumed();
+        Ok(())
+    }
+
+    /// Canonical baseline: R-prompt rollout batch, sync barrier, then
+    /// ceil(R*G / U) sequential updates on the same (aging) data.
+    /// `sort_post_hoc` = the Fig.6a ablation.
+    fn run_baseline(&mut self, state: &mut ParamState, trainer: &mut Trainer,
+                    sort_post_hoc: bool, rows: &mut Vec<LogRow>,
+                    phase_clock: &mut PhaseClock) -> Result<()> {
+        // baseline consumes group_size*b prompts per iteration so data
+        // volume matches the sorted runs
+        let pool = self.cfg.group_size * self.cfg.rollout_prompts;
+        self.load_prompts(pool);
+        let mut engine = Engine::new(self.rt, self.engine_cfg(false));
+        let rids = self.buffer.schedulable();
+        engine.submit(self.buffer.dispatch(&rids));
+        let rollouts = engine.run_to_completion(state)?;
+        for r in &rollouts {
+            self.buffer.record_finished(r);
+        }
+        self.absorb_engine_occupancy(&engine);
+        phase_clock.rollout += engine.clock();
+
+        let mut order: Vec<u64> = if sort_post_hoc {
+            // sort by response length ascending AFTER full generation
+            let mut v: Vec<(usize, u64)> = rollouts
+                .iter()
+                .map(|r| (r.response.len(), r.request.rid))
+                .collect();
+            v.sort();
+            v.into_iter().map(|(_, rid)| rid).collect()
+        } else {
+            rollouts.iter().map(|r| r.request.rid).collect()
+        };
+
+        while !order.is_empty() && trainer.updates() < self.cfg.max_updates {
+            let take: Vec<u64> = order
+                .drain(..self.cfg.update_batch.min(order.len()))
+                .collect();
+            let entries = self.buffer.consume(&take);
+            let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
+            let log = trainer.update(state, &entries, &rewards)?;
+            self.log_update(rows, state, log, engine.clock())?;
+        }
+        self.buffer.clear_consumed();
+        Ok(())
+    }
+
+    /// Ablation (Fig. 6a): oversubscription + early termination WITHOUT the
+    /// grouped loading barrier: the pool is continuously topped up with
+    /// fresh prompts and interrupted generations are abandoned, so training
+    /// data biases hard toward short responses.
+    fn run_no_grouped(&mut self, state: &mut ParamState, trainer: &mut Trainer,
+                      rows: &mut Vec<LogRow>, phase_clock: &mut PhaseClock)
+                      -> Result<()> {
+        let pool = self.cfg.group_size * self.cfg.rollout_prompts;
+        let mut engine = Engine::new(self.rt, self.engine_cfg(false));
+        let mut iterations = 0usize;
+        while trainer.updates() < self.cfg.max_updates && iterations < 10_000 {
+            iterations += 1;
+            // top up: no barrier — fresh prompts stream in immediately
+            let deficit = pool.saturating_sub(self.buffer.count(Lifecycle::Fresh));
+            if deficit > 0 {
+                self.load_prompts(deficit / self.cfg.samples_per_prompt.max(1) + 1);
+            }
+            let rids = self.buffer.schedulable();
+            engine.submit(self.buffer.dispatch(&rids));
+            loop {
+                engine.admit(state)?;
+                if engine.running() == 0 && engine.queued() == 0 {
+                    break;
+                }
+                engine.step(state)?;
+                for r in engine.drain_finished() {
+                    self.buffer.record_finished(&r);
+                }
+                if self.buffer.count(Lifecycle::Ready) >= self.cfg.update_batch {
+                    break;
+                }
+            }
+            let (partials, queued) = engine.terminate_all(state.version);
+            // abandon interrupted generations entirely (prompt starvation)
+            for r in &partials {
+                self.buffer.record_terminated(r, Mode::OnPolicy);
+            }
+            let abandoned: Vec<u64> = partials.iter().map(|r| r.request.rid).collect();
+            self.buffer.discard(&abandoned);
+            self.discarded += abandoned.len() as u64;
+            for q in queued {
+                self.buffer.record_requeued(q.rid);
+            }
+            let ready = self.buffer.ready_rids();
+            if ready.is_empty() {
+                continue;
+            }
+            let take: Vec<u64> = ready.into_iter().take(self.cfg.update_batch).collect();
+            let entries = self.buffer.consume(&take);
+            let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
+            let log = trainer.update(state, &entries, &rewards)?;
+            self.log_update(rows, state, log, engine.clock())?;
+            self.buffer.clear_consumed();
+        }
+        self.absorb_engine_occupancy(&engine);
+        phase_clock.rollout += engine.clock();
+        Ok(())
+    }
+}

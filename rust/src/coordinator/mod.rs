@@ -1,0 +1,10 @@
+//! The paper's system contribution: length-aware controller, stateful
+//! rollout buffer, scheduler variants and the trainer glue.
+
+pub mod buffer;
+pub mod controller;
+pub mod trainer;
+
+pub use buffer::{BufferEntry, Lifecycle, Mode, RolloutBuffer};
+pub use controller::{Controller, EvalResult, LogRow, LoopConfig, RunResult, SchedulerKind};
+pub use trainer::{sft_warm_start, Trainer, UpdateLog};

@@ -1,0 +1,181 @@
+//! Trainer: turns buffer entries into fixed-shape train_step calls.
+//!
+//! Selective batching lives here: the controller decides *which* ready
+//! trajectories form an update batch and in what order; this module
+//! computes batch-coupled advantages (Reinforce++ z-score — the paper's
+//! normalization effect), marshals [Bt, T] arrays and drives the AOT
+//! train_step.  Update batches larger than the compiled Bt are split into
+//! sequential micro-steps sharing the same advantage normalization.
+
+use crate::coordinator::buffer::BufferEntry;
+use crate::rl::advantage::{advantages, AdvantageKind, BaselineState, RewardEntry};
+use crate::runtime::{ParamState, Runtime, TrainBatch, TrainStats};
+use crate::tasks::{Reward, Task};
+use crate::tokenizer::PAD;
+use anyhow::{bail, Result};
+
+/// Per-update telemetry (one row of the Fig.3/Fig.4 training curves).
+#[derive(Debug, Clone, Default)]
+pub struct UpdateLog {
+    pub update_idx: usize,
+    pub policy_version: u64,
+    pub n_traj: usize,
+    pub mean_reward: f64,
+    pub accuracy: f64,
+    pub format_rate: f64,
+    pub mean_resp_len: f64,
+    pub max_resp_len: usize,
+    /// Mean policy-version staleness of the batch (off-policiness proxy).
+    pub mean_staleness: f64,
+    pub stats: TrainStats,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub adv_kind: AdvantageKind,
+    pub lr: f32,
+    baseline: BaselineState,
+    update_count: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, adv_kind: AdvantageKind, lr: f32) -> Self {
+        Self { rt, adv_kind, lr, baseline: BaselineState::default(), update_count: 0 }
+    }
+
+    pub fn updates(&self) -> usize {
+        self.update_count
+    }
+
+    /// Grade entries with the task verifier.
+    pub fn grade(&self, task: &dyn Task, problems: &[crate::tasks::Problem],
+                 entries: &[BufferEntry]) -> Vec<Reward> {
+        entries
+            .iter()
+            .map(|e| task.verify(&problems[e.problem_idx], &e.partial))
+            .collect()
+    }
+
+    /// One logical update over `entries` (>= 1 micro-steps of size Bt).
+    /// Advantages are normalized over the WHOLE update batch, so batch
+    /// composition — what the controller selected — shapes the gradient.
+    pub fn update(&mut self, state: &mut ParamState, entries: &[BufferEntry],
+                  rewards: &[Reward]) -> Result<UpdateLog> {
+        if entries.is_empty() {
+            bail!("empty update batch");
+        }
+        assert_eq!(entries.len(), rewards.len());
+        let sh = self.rt.manifest.shapes.clone();
+        let (bt, t) = (sh.train_batch, sh.train_seq);
+
+        let reward_entries: Vec<RewardEntry> = entries
+            .iter()
+            .zip(rewards)
+            .map(|(e, r)| RewardEntry { reward: r.total(), group: e.prompt_id })
+            .collect();
+        let advs = advantages(self.adv_kind, &reward_entries, &mut self.baseline);
+
+        let mut stats_acc = TrainStats::default();
+        let mut micro_steps = 0usize;
+        for chunk_start in (0..entries.len()).step_by(bt) {
+            let chunk = &entries[chunk_start..(chunk_start + bt).min(entries.len())];
+            let adv_chunk = &advs[chunk_start..chunk_start + chunk.len()];
+            let mut tokens = vec![PAD; bt * t];
+            let mut mask = vec![0f32; bt * t];
+            let mut adv = vec![0f32; bt * t];
+            let mut old_logp = vec![0f32; bt * t];
+            for (b, (e, &a)) in chunk.iter().zip(adv_chunk).enumerate() {
+                let plen = e.prompt.len().min(t);
+                for (i, &tokv) in e.prompt.iter().take(plen).enumerate() {
+                    tokens[b * t + i] = tokv;
+                }
+                let rlen = e.partial.len().min(t - plen);
+                for i in 0..rlen {
+                    let col = plen + i;
+                    tokens[b * t + col] = e.partial[i];
+                    mask[b * t + col] = 1.0;
+                    adv[b * t + col] = a as f32;
+                    old_logp[b * t + col] = e.partial_logp[i];
+                }
+            }
+            let s = self.rt.train_step(state, &TrainBatch {
+                tokens,
+                mask,
+                adv,
+                old_logp,
+                lr: self.lr,
+            })?;
+            stats_acc.loss += s.loss;
+            stats_acc.mean_ratio += s.mean_ratio;
+            stats_acc.clip_frac += s.clip_frac;
+            stats_acc.mean_entropy += s.mean_entropy;
+            stats_acc.approx_kl += s.approx_kl;
+            stats_acc.grad_norm += s.grad_norm;
+            micro_steps += 1;
+        }
+        let k = micro_steps as f32;
+        stats_acc.loss /= k;
+        stats_acc.mean_ratio /= k;
+        stats_acc.clip_frac /= k;
+        stats_acc.mean_entropy /= k;
+        stats_acc.approx_kl /= k;
+        stats_acc.grad_norm /= k;
+
+        self.update_count += 1;
+        let n = entries.len() as f64;
+        let mean_staleness = entries
+            .iter()
+            .map(|e| {
+                let born = e.born_version.unwrap_or(e.finish_version);
+                (state.version.saturating_sub(1)).saturating_sub(born) as f64
+            })
+            .sum::<f64>()
+            / n;
+        Ok(UpdateLog {
+            update_idx: self.update_count,
+            policy_version: state.version,
+            n_traj: entries.len(),
+            mean_reward: rewards.iter().map(|r| r.total()).sum::<f64>() / n,
+            accuracy: rewards.iter().filter(|r| r.correct).count() as f64 / n,
+            format_rate: rewards.iter().filter(|r| r.format_ok).count() as f64 / n,
+            mean_resp_len: entries.iter().map(|e| e.partial.len() as f64).sum::<f64>() / n,
+            max_resp_len: entries.iter().map(|e| e.partial.len()).max().unwrap_or(0),
+            mean_staleness,
+            stats: stats_acc,
+        })
+    }
+}
+
+/// Supervised warm start over problem (prompt ++ sft_target) pairs.
+/// Stands in for the paper's pretrained instruct starting checkpoints.
+pub fn sft_warm_start(rt: &Runtime, state: &mut ParamState,
+                      problems: &[&crate::tasks::Problem], steps: usize, lr: f32,
+                      log_every: usize) -> Result<Vec<f32>> {
+    let sh = rt.manifest.shapes.clone();
+    let (bt, t) = (sh.train_batch, sh.train_seq);
+    let mut losses = Vec::new();
+    let mut idx = 0usize;
+    for step in 0..steps {
+        let mut tokens = vec![PAD; bt * t];
+        let mut weights = vec![0f32; bt * t];
+        for b in 0..bt {
+            let p = problems[idx % problems.len()];
+            idx += 1;
+            let plen = p.prompt.len().min(t);
+            for (i, &tok) in p.prompt.iter().take(plen).enumerate() {
+                tokens[b * t + i] = tok;
+            }
+            let rlen = p.sft_target.len().min(t - plen);
+            for i in 0..rlen {
+                tokens[b * t + plen + i] = p.sft_target[i];
+                weights[b * t + plen + i] = 1.0;
+            }
+        }
+        let (loss, _gnorm) = rt.sft_step(state, &tokens, &weights, lr)?;
+        if log_every > 0 && step % log_every == 0 {
+            eprintln!("  sft step {step}: loss {loss:.4}");
+        }
+        losses.push(loss);
+    }
+    Ok(losses)
+}

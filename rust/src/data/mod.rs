@@ -1,0 +1,154 @@
+//! Dataset construction + epoch dataloader.
+//!
+//! Mirrors the paper's setup (§4.1): a fixed training set generated ahead of
+//! time (LogicRL: 1000 puzzles per difficulty 3..=7, shuffled; math: uniform
+//! mixture over depth), a held-out eval split, and an epoch-shuffling loader
+//! the SortedRL controller pulls prompts from.
+
+use crate::tasks::{Problem, Task};
+use crate::util::rng::Pcg64;
+
+/// A materialized dataset (problems are immutable after generation).
+pub struct Dataset {
+    pub train: Vec<Problem>,
+    pub eval: Vec<Problem>,
+}
+
+impl Dataset {
+    /// `per_difficulty` problems per difficulty level, `eval_frac` held out
+    /// (the paper spares 10%).
+    pub fn generate(task: &dyn Task, per_difficulty: usize, eval_frac: f64,
+                    seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0xDA7A);
+        let (lo, hi) = task.difficulty_range();
+        let mut all = Vec::new();
+        let mut id = 0u64;
+        for d in lo..=hi {
+            for _ in 0..per_difficulty {
+                all.push(task.generate(&mut rng, d, id));
+                id += 1;
+            }
+        }
+        rng.shuffle(&mut all);
+        let n_eval = ((all.len() as f64) * eval_frac).round() as usize;
+        let eval = all.split_off(all.len() - n_eval);
+        Dataset { train: all, eval }
+    }
+
+    /// Stratified eval subsets by difficulty (for the Table-1 harness).
+    pub fn eval_by_difficulty(&self) -> Vec<(u32, Vec<&Problem>)> {
+        let mut lo = u32::MAX;
+        let mut hi = 0;
+        for p in &self.eval {
+            lo = lo.min(p.difficulty);
+            hi = hi.max(p.difficulty);
+        }
+        (lo..=hi)
+            .map(|d| (d, self.eval.iter().filter(|p| p.difficulty == d).collect()))
+            .collect()
+    }
+}
+
+/// Epoch-shuffling prompt loader; the controller's upstream source.
+pub struct DataLoader {
+    indices: Vec<usize>,
+    cursor: usize,
+    epoch: usize,
+    rng: Pcg64,
+}
+
+impl DataLoader {
+    pub fn new(len: usize, seed: u64) -> Self {
+        let mut loader = Self {
+            indices: (0..len).collect(),
+            cursor: 0,
+            epoch: 0,
+            rng: Pcg64::with_stream(seed, 0x10AD),
+        };
+        loader.rng.shuffle(&mut loader.indices);
+        loader
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Fraction of epochs consumed, e.g. 2.25 epochs.
+    pub fn epochs_elapsed(&self) -> f64 {
+        self.epoch as f64 + self.cursor as f64 / self.indices.len().max(1) as f64
+    }
+
+    /// Next `n` dataset indices, reshuffling at epoch boundaries.
+    pub fn next_batch(&mut self, n: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if self.cursor == self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+                self.epoch += 1;
+            }
+            out.push(self.indices[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::logic::LogicTask;
+    use crate::tasks::math::MathTask;
+
+    #[test]
+    fn dataset_sizes_and_split() {
+        let ds = Dataset::generate(&MathTask, 20, 0.1, 1);
+        let total = 20 * 7; // difficulties 2..=8
+        assert_eq!(ds.train.len() + ds.eval.len(), total);
+        assert_eq!(ds.eval.len(), (total as f64 * 0.1).round() as usize);
+    }
+
+    #[test]
+    fn dataset_is_difficulty_mixture() {
+        let ds = Dataset::generate(&LogicTask::default(), 10, 0.0, 2);
+        for d in 3..=7 {
+            assert_eq!(ds.train.iter().filter(|p| p.difficulty == d).count(), 10);
+        }
+    }
+
+    #[test]
+    fn dataset_generation_deterministic() {
+        let a = Dataset::generate(&MathTask, 5, 0.1, 42);
+        let b = Dataset::generate(&MathTask, 5, 0.1, 42);
+        for (x, y) in a.train.iter().zip(&b.train) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn loader_visits_every_index_once_per_epoch() {
+        let mut dl = DataLoader::new(10, 3);
+        let mut seen = dl.next_batch(10);
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert_eq!(dl.epoch(), 0);
+        dl.next_batch(1);
+        assert_eq!(dl.epoch(), 1);
+    }
+
+    #[test]
+    fn loader_epochs_elapsed() {
+        let mut dl = DataLoader::new(8, 4);
+        dl.next_batch(12);
+        assert!((dl.epochs_elapsed() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_by_difficulty_partitions() {
+        let ds = Dataset::generate(&MathTask, 10, 0.3, 5);
+        let strata = ds.eval_by_difficulty();
+        let total: usize = strata.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, ds.eval.len());
+    }
+}

@@ -1,0 +1,56 @@
+//! Sampled evaluation (mean@k) used by the Table-1 harness: the paper
+//! collects 32 responses per competition problem and reports mean accuracy.
+
+use crate::rollout::{Engine, EngineConfig, Request};
+use crate::runtime::{ParamState, Runtime};
+use crate::tasks::{Problem, Task};
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SampledEval {
+    pub accuracy: f64,
+    pub score: f64,
+    pub format_rate: f64,
+    pub mean_resp_len: f64,
+    pub n: usize,
+}
+
+/// mean@k over `problems` at the given temperature (k=1, temp=0 == greedy).
+pub fn evaluate_sampled(rt: &Runtime, state: &ParamState, task: &dyn Task,
+                        problems: &[&Problem], k: usize, temperature: f32,
+                        max_new: usize, seed: u64) -> Result<SampledEval> {
+    let greedy = temperature <= 0.0;
+    let mut engine = Engine::new(rt, EngineConfig {
+        temperature: if greedy { 1.0 } else { temperature },
+        greedy,
+        seed,
+    });
+    let mut rid = 0u64;
+    for (pi, p) in problems.iter().enumerate() {
+        for _ in 0..k {
+            engine.submit([Request::fresh(rid, pi, p.id, p.prompt.clone(), max_new)]);
+            rid += 1;
+        }
+    }
+    let rollouts = engine.run_to_completion(state)?;
+    let mut acc = 0.0;
+    let mut score = 0.0;
+    let mut fmt = 0.0;
+    let mut len = 0.0;
+    for r in &rollouts {
+        let p = problems[r.request.problem_idx];
+        let reward = task.verify(p, &r.response);
+        acc += reward.correct as u8 as f64;
+        score += reward.total() / crate::tasks::Reward::MAX;
+        fmt += reward.format_ok as u8 as f64;
+        len += r.response.len() as f64;
+    }
+    let n = rollouts.len().max(1) as f64;
+    Ok(SampledEval {
+        accuracy: acc / n,
+        score: score / n,
+        format_rate: fmt / n,
+        mean_resp_len: len / n,
+        n: rollouts.len(),
+    })
+}

@@ -1,0 +1,131 @@
+//! Fig. 1 — motivation: (a) rollout dominates RL latency as max generation
+//! length grows; (b) sync-barrier drain bubbles within one rollout batch;
+//! (c) long-tailed length distribution.
+//!
+//! (a) and (b) are simulator-backed at paper scale; (c) combines the
+//! simulator's workload model with (optionally) real rollouts from the
+//! trained small model.
+
+use super::{print_table, ExpContext};
+use crate::sim::{longtail_workload, simulate, CostModel, SimMode};
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::stats::Histogram;
+use anyhow::Result;
+
+/// Fig. 1a: latency breakdown (rollout / inference / update shares) as the
+/// maximum generation length scales 1k -> 16k.  The paper reports rollout
+/// reaching ~70% at 16k.
+pub fn fig1a(ctx: &ExpContext) -> Result<()> {
+    println!("== Fig 1a: latency breakdown vs max generation length ==");
+    println!("   (baseline scheduler, batch 128, long-tailed lengths)\n");
+    let mut rows = Vec::new();
+    let mut js = Vec::new();
+    for max_len in [1024usize, 2048, 4096, 8192, 16384] {
+        let w = longtail_workload(512, max_len, ctx.seed + 1);
+        let r = simulate(SimMode::Baseline, &w, 128, 128, CostModel::default());
+        let total = r.total_time;
+        let share = |x: f64| format!("{:.1}%", 100.0 * x / total);
+        rows.push(vec![
+            format!("{max_len}"),
+            share(r.rollout_time),
+            share(r.infer_time),
+            share(r.update_time),
+            format!("{:.1}s", total),
+        ]);
+        js.push(obj(vec![
+            ("max_len", num(max_len as f64)),
+            ("rollout_share", num(r.rollout_time / total)),
+            ("infer_share", num(r.infer_time / total)),
+            ("update_share", num(r.update_time / total)),
+            ("total_secs", num(total)),
+        ]));
+    }
+    print_table(&["max_len", "rollout", "inference", "update", "total"], &rows);
+    println!("\npaper shape: rollout share grows with max length, ~70% at 16k");
+    ctx.write_json("fig1a", &arr(js))?;
+    Ok(())
+}
+
+/// Fig. 1b: running-request occupancy over one rollout batch (batch 128) —
+/// the drain tail that creates the bubbles.
+pub fn fig1b(ctx: &ExpContext) -> Result<()> {
+    println!("== Fig 1b: GPU occupancy during one rollout batch (b=128) ==\n");
+    let w = longtail_workload(128, 4096, ctx.seed + 2);
+    let r = simulate(SimMode::Baseline, &w, 128, 128, CostModel::default());
+    // occupancy curve, bucketed to 40 time bins
+    let end = r.rollout_time;
+    let ev = r.timeline.events();
+    let bins = 40usize;
+    let mut occ = vec![0.0f64; bins];
+    let mut wsum = vec![0.0f64; bins];
+    for win in ev.windows(2) {
+        let (t0, r0) = win[0];
+        let (t1, _) = win[1];
+        // spread the piecewise-constant segment over every bin it covers
+        let b0 = ((t0 / end * bins as f64) as usize).min(bins - 1);
+        let b1 = ((t1 / end * bins as f64) as usize).min(bins - 1);
+        for b in b0..=b1 {
+            let lo = (end * b as f64 / bins as f64).max(t0);
+            let hi = (end * (b + 1) as f64 / bins as f64).min(t1);
+            if hi > lo {
+                occ[b] += r0 as f64 * (hi - lo);
+                wsum[b] += hi - lo;
+            }
+        }
+    }
+    println!("time->   occupancy (128 = full)");
+    for i in 0..bins {
+        let o = if wsum[i] > 0.0 { occ[i] / wsum[i] } else { 0.0 };
+        let bar = "#".repeat((o / 128.0 * 60.0) as usize);
+        println!("{:>5.1}s |{bar}", end * i as f64 / bins as f64);
+    }
+    println!("\nbubble ratio of this batch: {:.1}% (paper: large sync bubbles)",
+             r.bubble_ratio * 100.0);
+    ctx.write_csv("fig1b_timeline", &r.timeline.to_csv())?;
+    ctx.write_json("fig1b", &obj(vec![
+        ("bubble_ratio", num(r.bubble_ratio)),
+        ("rollout_secs", num(r.rollout_time)),
+    ]))?;
+    Ok(())
+}
+
+/// Fig. 1c: length distribution of sampled trajectories (batch 512, 4k cap).
+/// `real_lengths` (if provided by the caller, from actual engine rollouts)
+/// is plotted alongside the workload model.
+pub fn fig1c(ctx: &ExpContext, real_lengths: Option<&[usize]>) -> Result<()> {
+    println!("== Fig 1c: length distribution of sampled trajectories ==\n");
+    let cap = 4096;
+    let w = longtail_workload(512, cap, ctx.seed + 3);
+    let mut h = Histogram::new(0.0, cap as f64, 16);
+    for r in &w {
+        h.push(r.output_len as f64);
+    }
+    println!("workload model (512 samples, cap {cap}):");
+    print!("{}", h.ascii(50));
+    let cdf = h.cdf();
+    let under_3k = cdf[(3000 * 16 / cap).min(15)];
+    println!("\nfraction within 3k: {:.1}% (paper: ~80%); at cap: {:.1}% (paper: ~5%)",
+             under_3k * 100.0,
+             100.0 * h.counts[15] as f64 / h.total() as f64);
+    let mut out = vec![("model_hist", arr(h.counts.iter().map(|&c| num(c as f64))))];
+    if let Some(lens) = real_lengths {
+        let mut hr = Histogram::new(0.0, lens.iter().copied().max().unwrap_or(1) as f64 + 1.0, 16);
+        for &l in lens {
+            hr.push(l as f64);
+        }
+        println!("\nreal rollouts from the trained model ({} samples):", lens.len());
+        print!("{}", hr.ascii(50));
+        out.push(("real_hist", arr(hr.counts.iter().map(|&c| num(c as f64)))));
+        out.push(("real_n", num(lens.len() as f64)));
+    }
+    ctx.write_json("fig1c", &obj(out.into_iter().collect()))?;
+    Ok(())
+}
+
+pub fn to_json_row(name: &str, vals: &[(&str, f64)]) -> Json {
+    let mut v = vec![("name", Json::Str(name.to_string()))];
+    for (k, x) in vals {
+        v.push((k, num(*x)));
+    }
+    obj(v)
+}

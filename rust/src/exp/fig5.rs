@@ -1,0 +1,57 @@
+//! Fig. 5 — rollout throughput + bubble ratio under the three strategies,
+//! at the paper's workload scale: 512 samples in 4 batches, 8k-token cap,
+//! generation lengths pinned across strategies.
+//!
+//! Paper numbers: throughput 3987 / 4289 / 5559 tok/s (baseline /
+//! on-policy / partial); bubble 74% -> 5.81% / 3.37%.
+
+use super::{print_table, ExpContext};
+use crate::sim::{longtail_workload, simulate, CostModel, SimMode};
+use crate::util::json::{arr, num, obj, s};
+use anyhow::Result;
+
+pub fn fig5(ctx: &ExpContext) -> Result<()> {
+    println!("== Fig 5: rollout throughput & bubble ratio (sim, paper scale) ==");
+    println!("   512 samples, 4 batches of 128, cap 8192, lengths pinned\n");
+    let w = longtail_workload(512, 8192, ctx.seed + 5);
+    let cost = CostModel::default();
+    let mut rows = Vec::new();
+    let mut js = Vec::new();
+    let mut tputs = Vec::new();
+    for (mode, label, paper_tput, paper_bubble) in [
+        (SimMode::Baseline, "baseline", 3987.0, 0.74),
+        (SimMode::SortedOnPolicy, "on-policy", 4289.0, 0.0581),
+        (SimMode::SortedPartial, "partial", 5559.0, 0.0337),
+    ] {
+        let r = simulate(mode, &w, 128, 128, cost);
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}", r.throughput),
+            format!("{:.0}", paper_tput),
+            format!("{:.2}%", r.bubble_ratio * 100.0),
+            format!("{:.2}%", paper_bubble * 100.0),
+            format!("{}", r.wasted_tokens),
+            format!("{}", r.clipped),
+        ]);
+        js.push(obj(vec![
+            ("mode", s(label)),
+            ("throughput", num(r.throughput)),
+            ("paper_throughput", num(paper_tput)),
+            ("bubble", num(r.bubble_ratio)),
+            ("paper_bubble", num(paper_bubble)),
+            ("wasted_tokens", num(r.wasted_tokens as f64)),
+            ("clipped", num(r.clipped as f64)),
+            ("rollout_secs", num(r.rollout_time)),
+        ]));
+        tputs.push(r.throughput);
+    }
+    print_table(
+        &["mode", "tok/s", "paper", "bubble", "paper", "wasted", "clipped"],
+        &rows,
+    );
+    println!("\nspeedup over baseline: on-policy {:+.1}% (paper +7.6%), partial {:+.1}% (paper +39.4%)",
+             100.0 * (tputs[1] / tputs[0] - 1.0),
+             100.0 * (tputs[2] / tputs[0] - 1.0));
+    ctx.write_json("fig5", &arr(js))?;
+    Ok(())
+}

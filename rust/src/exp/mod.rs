@@ -1,0 +1,99 @@
+//! Experiment harness: one entry per table/figure of the paper (§4).
+//!
+//! `sortedrl exp <id>` regenerates the rows/series the paper reports.
+//! Simulator-backed experiments (fig1a/fig1b/fig5) run at paper scale;
+//! real-training experiments (fig3/fig4/fig6/fig9/tab1) run the full
+//! three-layer stack on the synthetic task substrates at a configurable
+//! scale (see DESIGN.md §Substitutions).  Results print as tables and are
+//! also written as JSON under `results/`.
+
+pub mod eval;
+pub mod fig1;
+pub mod fig5;
+pub mod suites;
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Shared experiment context.
+pub struct ExpContext {
+    pub artifacts_dir: PathBuf,
+    pub tag: Option<String>,
+    pub out_dir: PathBuf,
+    /// Scale multiplier for real-training experiments: "ci" (minutes),
+    /// "small" (default, ~1h for the full set), "paper" (structural match
+    /// of the paper's batch geometry; long).
+    pub scale: Scale,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Ci,
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "ci" => Scale::Ci,
+            "small" => Scale::Small,
+            "paper" => Scale::Paper,
+            _ => return None,
+        })
+    }
+}
+
+impl ExpContext {
+    pub fn write_json(&self, name: &str, value: &Json) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, value.to_string_pretty())?;
+        eprintln!("  wrote {}", path.display());
+        Ok(path)
+    }
+
+    pub fn write_csv(&self, name: &str, content: &str) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(format!("{name}.csv"));
+        std::fs::write(&path, content)?;
+        eprintln!("  wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            artifacts_dir: Path::new("artifacts").to_path_buf(),
+            tag: None,
+            out_dir: Path::new("results").to_path_buf(),
+            scale: Scale::Small,
+            seed: 0,
+        }
+    }
+}
+
+/// Render a simple aligned table to stdout.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        println!("{}", line(row));
+    }
+}

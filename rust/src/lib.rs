@@ -1,0 +1,19 @@
+//! SortedRL — online length-aware scheduling for RL training of LLMs.
+//!
+//! Reproduction of "SortedRL: Accelerating RL Training for LLMs through
+//! Online Length-Aware Scheduling" as a three-layer rust + JAX + Pallas
+//! stack: rust owns the coordinator (this crate), JAX/Pallas author the
+//! policy LM AOT-compiled to HLO, and PJRT executes it (runtime module).
+//! See DESIGN.md for the system inventory.
+
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod rl;
+pub mod rollout;
+pub mod sim;
+pub mod runtime;
+pub mod tasks;
+pub mod tokenizer;
+pub mod util;

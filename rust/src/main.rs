@@ -1,0 +1,298 @@
+//! `sortedrl` — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   train   run one RL training loop (any scheduler) on a task
+//!   exp     regenerate a paper table/figure (fig1a..fig9b, tab1, all)
+//!   sim     quick simulator sweep (throughput/bubble for a workload)
+//!   info    print artifact manifest / platform info
+//!
+//! No clap offline — a small hand-rolled parser; every flag has the form
+//! `--key value` (or `--flag` for booleans).
+
+use anyhow::{bail, Context, Result};
+use sortedrl::coordinator::{Controller, LoopConfig, SchedulerKind};
+use sortedrl::data::Dataset;
+use sortedrl::exp::{self, ExpContext, Scale};
+use sortedrl::rl::advantage::AdvantageKind;
+use sortedrl::runtime::Runtime;
+use sortedrl::sim::{longtail_workload, simulate, CostModel, SimMode};
+use sortedrl::tasks::logic::LogicTask;
+use sortedrl::tasks::math::MathTask;
+use sortedrl::tasks::Task;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+sortedrl — online length-aware scheduling for RL training of LLMs
+
+USAGE:
+  sortedrl train [--task logic|math] [--scheduler baseline|on-policy|partial|
+                 post-hoc-sort|no-grouped] [--updates N] [--rollout-prompts b]
+                 [--group-size n] [--samples-per-prompt G] [--update-batch U]
+                 [--lr F] [--max-new N] [--seed N] [--scale ci|small|paper]
+                 [--artifacts DIR] [--tag TAG] [--no-warm-start]
+  sortedrl exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6a|fig6b|fig9a|fig9b|tab1|
+                all-sim|all> [--scale ci|small|paper] [--out DIR] [--seed N]
+  sortedrl sim [--n 512] [--cap 8192] [--queue 128] [--update-batch 128]
+  sortedrl info [--artifacts DIR] [--tag TAG]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "sim" => cmd_sim(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    Runtime::load(&dir, args.get("tag"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    eprintln!("platform: {}; artifacts tag: {}", rt.platform(), rt.manifest.tag);
+    let scale = Scale::parse(args.get("scale").unwrap_or("small"))
+        .context("--scale ci|small|paper")?;
+    let ts = exp::suites::train_scale(scale);
+    let task_name = args.get("task").unwrap_or("logic");
+    let task: Box<dyn Task> = match task_name {
+        "logic" => Box::new(LogicTask::default()),
+        "math" => Box::new(MathTask),
+        other => bail!("unknown task {other:?}"),
+    };
+    let scheduler = SchedulerKind::parse(args.get("scheduler").unwrap_or("on-policy"))
+        .context("--scheduler baseline|on-policy|partial|post-hoc-sort|no-grouped")?;
+    let seed = args.get_u64("seed", 0)?;
+    let cfg = LoopConfig {
+        scheduler,
+        rollout_prompts: args.get_usize("rollout-prompts", ts.rollout_prompts)?,
+        group_size: args.get_usize("group-size", ts.group_size)?,
+        samples_per_prompt: args.get_usize("samples-per-prompt", ts.samples_per_prompt)?,
+        update_batch: args.get_usize("update-batch", ts.update_batch)?,
+        max_updates: args.get_usize("updates", ts.max_updates)?,
+        lr: args.get_f32("lr", ts.lr_rl)?,
+        temperature: args.get_f32("temperature", 1.0)?,
+        seed,
+        adv: AdvantageKind::ReinforcePlusPlus,
+        max_new: args.get_usize("max-new", ts.max_new)?,
+        eval_every: args.get_usize("eval-every", ts.eval_every)?,
+        eval_limit: args.get_usize("eval-limit", ts.eval_limit)?,
+        verbose: true,
+    };
+    let ds = Dataset::generate(task.as_ref(), ts.per_difficulty, 0.1, seed + 1);
+    eprintln!("dataset: {} train / {} eval; scheduler: {}",
+              ds.train.len(), ds.eval.len(), scheduler.name());
+
+    let mut state = rt.init(seed as i32)?;
+    if args.get("no-warm-start").is_none() {
+        let problems: Vec<&sortedrl::tasks::Problem> = ds.train.iter().collect();
+        sortedrl::coordinator::sft_warm_start(
+            &rt, &mut state, &problems, ts.sft_steps, ts.lr_sft, 20)?;
+    }
+    let mut ctl = Controller::new(&rt, task, ds, cfg);
+    let result = ctl.run(&mut state)?;
+    println!("\nfinal eval: score {:.3} accuracy {:.3} resp_len {:.1}",
+             result.final_eval.score, result.final_eval.accuracy,
+             result.final_eval.mean_resp_len);
+    println!("rollout bubble ratio: {:.2}%", result.bubble_ratio * 100.0);
+    println!("rollout tokens: {}; rollout secs {:.1}; update secs {:.1}",
+             result.total_rollout_tokens, result.phase_clock.rollout,
+             result.phase_clock.update);
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .context("exp needs a figure/table id (see --help)")?;
+    let ctx = ExpContext {
+        artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        tag: args.get("tag").map(String::from),
+        out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
+        scale: Scale::parse(args.get("scale").unwrap_or("small"))
+            .context("--scale ci|small|paper")?,
+        seed: args.get_u64("seed", 0)?,
+    };
+    let needs_rt = !matches!(which, "fig1a" | "fig1b" | "fig5" | "all-sim");
+    let rt = if needs_rt {
+        Some(Runtime::load(&ctx.artifacts_dir, ctx.tag.as_deref())?)
+    } else {
+        None
+    };
+    match which {
+        "fig1a" => exp::fig1::fig1a(&ctx)?,
+        "fig1b" => exp::fig1::fig1b(&ctx)?,
+        "fig1c" => {
+            let lens = rt.as_ref().map(|rt| real_rollout_lengths(&ctx, rt)).transpose()?;
+            exp::fig1::fig1c(&ctx, lens.as_deref())?;
+        }
+        "fig5" => exp::fig5::fig5(&ctx)?,
+        "fig3" | "fig9a" => exp::suites::logic_suite(&ctx, rt.as_ref().unwrap())?,
+        "fig4" | "tab1" => exp::suites::math_suite(&ctx, rt.as_ref().unwrap())?,
+        "fig6a" => exp::suites::fig6a(&ctx, rt.as_ref().unwrap())?,
+        "fig6b" => exp::suites::fig6b(&ctx, rt.as_ref().unwrap())?,
+        "fig9b" => exp::suites::fig9b(&ctx, rt.as_ref().unwrap())?,
+        "all-sim" => {
+            exp::fig1::fig1a(&ctx)?;
+            println!();
+            exp::fig1::fig1b(&ctx)?;
+            println!();
+            exp::fig5::fig5(&ctx)?;
+        }
+        "all" => {
+            exp::fig1::fig1a(&ctx)?;
+            exp::fig1::fig1b(&ctx)?;
+            let rt = rt.as_ref().unwrap();
+            let lens = real_rollout_lengths(&ctx, rt)?;
+            exp::fig1::fig1c(&ctx, Some(&lens))?;
+            exp::fig5::fig5(&ctx)?;
+            exp::suites::logic_suite(&ctx, rt)?;
+            exp::suites::fig6a(&ctx, rt)?;
+            exp::suites::fig6b(&ctx, rt)?;
+            exp::suites::math_suite(&ctx, rt)?;
+            exp::suites::fig9b(&ctx, rt)?;
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+/// Sample real rollout lengths from a warm-started model (Fig. 1c's "real"
+/// series).
+fn real_rollout_lengths(ctx: &ExpContext, rt: &Runtime) -> Result<Vec<usize>> {
+    use sortedrl::rollout::{Engine, EngineConfig, Request};
+    let ts = exp::suites::train_scale(Scale::Ci);
+    let (state, ds) = exp::suites::warm_start(rt, "logic", &ts, ctx.seed + 13)?;
+    let mut engine = Engine::new(rt, EngineConfig {
+        temperature: 1.0,
+        greedy: false,
+        seed: ctx.seed + 14,
+    });
+    let n = 128.min(ds.train.len());
+    engine.submit(ds.train.iter().take(n).enumerate().map(|(i, p)| {
+        Request::fresh(i as u64, i, p.id, p.prompt.clone(), ts.max_new)
+    }));
+    let rollouts = engine.run_to_completion(&state)?;
+    Ok(rollouts.iter().map(|r| r.response.len()).collect())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 512)?;
+    let cap = args.get_usize("cap", 8192)?;
+    let q = args.get_usize("queue", 128)?;
+    let u = args.get_usize("update-batch", 128)?;
+    let seed = args.get_u64("seed", 0)?;
+    let w = longtail_workload(n, cap, seed);
+    println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}\n");
+    for (mode, label) in [(SimMode::Baseline, "baseline"),
+                          (SimMode::SortedOnPolicy, "on-policy"),
+                          (SimMode::SortedPartial, "partial")] {
+        let r = simulate(mode, &w, q, u, CostModel::default());
+        println!("{label:>10}: {:7.0} tok/s  bubble {:5.2}%  rollout {:7.1}s  \
+                  wasted {:8}  clipped {:3}",
+                 r.throughput, r.bubble_ratio * 100.0, r.rollout_time,
+                 r.wasted_tokens, r.clipped);
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let tags = sortedrl::runtime::manifest::Manifest::list_tags(&dir)?;
+    println!("artifact configs in {}:", dir.display());
+    for t in &tags {
+        println!("  {t}");
+    }
+    if let Ok(rt) = Runtime::load(&dir, args.get("tag")) {
+        let m = &rt.manifest;
+        println!("\nloaded tag: {}", m.tag);
+        println!("platform:   {}", rt.platform());
+        println!("model:      d={} L={} H={} ff={} S={} V={} ({} params)",
+                 m.model.d_model, m.model.n_layers, m.model.n_heads,
+                 m.model.d_ff, m.model.max_seq, m.model.vocab,
+                 m.model.param_count);
+        println!("shapes:     engine B={} chunk k={} train Bt={} T={}",
+                 m.shapes.engine_batch, m.shapes.decode_chunk,
+                 m.shapes.train_batch, m.shapes.train_seq);
+        println!("kernels:    pallas={}", m.use_pallas);
+    }
+    Ok(())
+}

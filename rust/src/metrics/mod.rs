@@ -1,0 +1,192 @@
+//! Occupancy timeline + bubble ratio (paper Eq. 4) + throughput accounting.
+//!
+//! Both the real PJRT-backed engine and the discrete-event simulator record
+//! the same [`Timeline`], so Fig. 5's bubble numbers come out of one code
+//! path regardless of backend.
+
+/// Piecewise-constant record of how many requests were actively decoding.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    /// (time, running_requests_after_this_instant)
+    events: Vec<(f64, usize)>,
+    tokens_out: u64,
+    finished: u64,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the running-request count changing at time `t` (seconds).
+    pub fn set_running(&mut self, t: f64, running: usize) {
+        if let Some(&(lt, lr)) = self.events.last() {
+            debug_assert!(t >= lt, "time went backwards: {t} < {lt}");
+            if lr == running {
+                return;
+            }
+        }
+        self.events.push((t, running));
+    }
+
+    pub fn add_tokens(&mut self, n: u64) {
+        self.tokens_out += n;
+    }
+
+    pub fn add_finished(&mut self, n: u64) {
+        self.finished += n;
+    }
+
+    pub fn tokens_out(&self) -> u64 {
+        self.tokens_out
+    }
+
+    pub fn finished(&self) -> u64 {
+        self.finished
+    }
+
+    pub fn span(&self) -> (f64, f64) {
+        match (self.events.first(), self.events.last()) {
+            (Some(&(a, _)), Some(&(b, _))) => (a, b),
+            _ => (0.0, 0.0),
+        }
+    }
+
+    /// Paper Eq. 4: bubble = Σ_k (Q − r_k)·Δt_k / (T·Q), where Q is the
+    /// engine's running-queue capacity, r_k the running requests during
+    /// interval k, T the total elapsed time.  `end` closes the last
+    /// interval (generation finished / harvest time).
+    pub fn bubble_ratio(&self, queue_capacity: usize, end: f64) -> f64 {
+        if self.events.is_empty() || queue_capacity == 0 {
+            return 0.0;
+        }
+        let start = self.events[0].0;
+        let total = end - start;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let mut idle_area = 0.0;
+        for w in self.events.windows(2) {
+            let (t0, r0) = w[0];
+            let (t1, _) = w[1];
+            idle_area += (queue_capacity.saturating_sub(r0)) as f64 * (t1 - t0);
+        }
+        let (t_last, r_last) = *self.events.last().unwrap();
+        if end > t_last {
+            idle_area += (queue_capacity.saturating_sub(r_last)) as f64 * (end - t_last);
+        }
+        idle_area / (total * queue_capacity as f64)
+    }
+
+    /// Output tokens per second over [start, end].
+    pub fn throughput(&self, end: f64) -> f64 {
+        let (start, _) = self.span();
+        let dt = end - start;
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / dt
+        }
+    }
+
+    /// Mean occupancy (running / capacity) over the recorded span.
+    pub fn mean_occupancy(&self, queue_capacity: usize, end: f64) -> f64 {
+        1.0 - self.bubble_ratio(queue_capacity, end)
+    }
+
+    pub fn events(&self) -> &[(f64, usize)] {
+        &self.events
+    }
+
+    /// Serialize as CSV ("t,running") for plotting.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t,running\n");
+        for (t, r) in &self.events {
+            s.push_str(&format!("{t},{r}\n"));
+        }
+        s
+    }
+}
+
+/// Wall-time phase accounting for the Fig. 1a latency breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseClock {
+    pub rollout: f64,
+    pub inference: f64, // reward/reference scoring
+    pub update: f64,
+}
+
+impl PhaseClock {
+    pub fn total(&self) -> f64 {
+        self.rollout + self.inference + self.update
+    }
+
+    pub fn rollout_share(&self) -> f64 {
+        if self.total() == 0.0 {
+            0.0
+        } else {
+            self.rollout / self.total()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_occupancy_no_bubble() {
+        let mut tl = Timeline::new();
+        tl.set_running(0.0, 8);
+        assert_eq!(tl.bubble_ratio(8, 10.0), 0.0);
+    }
+
+    #[test]
+    fn empty_queue_is_all_bubble() {
+        let mut tl = Timeline::new();
+        tl.set_running(0.0, 0);
+        assert!((tl.bubble_ratio(8, 10.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn half_occupancy_half_bubble() {
+        let mut tl = Timeline::new();
+        tl.set_running(0.0, 8);
+        tl.set_running(5.0, 0);
+        assert!((tl.bubble_ratio(8, 10.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn long_tail_drain_matches_closed_form() {
+        // capacity 4; drain one request per second from t=0: r = 4,3,2,1
+        let mut tl = Timeline::new();
+        for i in 0..4 {
+            tl.set_running(i as f64, 4 - i);
+        }
+        // idle area = 0+1+2+3 = 6 over T*Q = 4*4
+        assert!((tl.bubble_ratio(4, 4.0) - 6.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coalesces_equal_samples() {
+        let mut tl = Timeline::new();
+        tl.set_running(0.0, 4);
+        tl.set_running(1.0, 4);
+        tl.set_running(2.0, 2);
+        assert_eq!(tl.events().len(), 2);
+    }
+
+    #[test]
+    fn throughput_counts_tokens() {
+        let mut tl = Timeline::new();
+        tl.set_running(0.0, 1);
+        tl.add_tokens(500);
+        assert!((tl.throughput(2.0) - 250.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_clock_share() {
+        let pc = PhaseClock { rollout: 7.0, inference: 1.0, update: 2.0 };
+        assert!((pc.rollout_share() - 0.7).abs() < 1e-12);
+    }
+}

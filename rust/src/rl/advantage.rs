@@ -1,0 +1,151 @@
+//! Advantage estimators.
+//!
+//! The paper trains Reinforce++ on LogicRL and PPO on math, both with
+//! outcome rewards.  The SortedRL-relevant property is that Reinforce++
+//! normalizes by *batch* statistics (Eq. 3) — so which trajectories the
+//! controller groups into an update batch changes the normalization, the
+//! "selective batching" effect §3.1 calls out (and §6 highlights).
+
+/// How per-trajectory advantages are computed from scalar rewards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdvantageKind {
+    /// Reinforce++ (Eq. 3): z-score over the update batch.
+    ReinforcePlusPlus,
+    /// GRPO-style: z-score within each prompt's response group.
+    GroupNorm,
+    /// Raw reward minus a running baseline (no batch coupling).
+    Baseline,
+}
+
+/// Per-trajectory inputs to advantage computation.
+#[derive(Debug, Clone, Copy)]
+pub struct RewardEntry {
+    /// Total scalar reward of the trajectory.
+    pub reward: f64,
+    /// Group key (prompt id) for GroupNorm.
+    pub group: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct BaselineState {
+    mean: f64,
+    count: u64,
+}
+
+impl BaselineState {
+    pub fn update(&mut self, r: f64) {
+        self.count += 1;
+        self.mean += (r - self.mean) / self.count as f64;
+    }
+
+    pub fn value(&self) -> f64 {
+        self.mean
+    }
+}
+
+const EPS: f64 = 1e-6;
+
+/// Compute one advantage per trajectory.
+pub fn advantages(kind: AdvantageKind, entries: &[RewardEntry],
+                  baseline: &mut BaselineState) -> Vec<f64> {
+    match kind {
+        AdvantageKind::ReinforcePlusPlus => {
+            let rs: Vec<f64> = entries.iter().map(|e| e.reward).collect();
+            let (mu, sigma) = crate::util::stats::mean_std(&rs);
+            rs.iter().map(|r| (r - mu) / (sigma + EPS)).collect()
+        }
+        AdvantageKind::GroupNorm => {
+            // group means/stds keyed by prompt
+            use std::collections::HashMap;
+            let mut groups: HashMap<u64, Vec<f64>> = HashMap::new();
+            for e in entries {
+                groups.entry(e.group).or_default().push(e.reward);
+            }
+            let stats: HashMap<u64, (f64, f64)> = groups
+                .into_iter()
+                .map(|(k, v)| (k, crate::util::stats::mean_std(&v)))
+                .collect();
+            entries
+                .iter()
+                .map(|e| {
+                    let (mu, sigma) = stats[&e.group];
+                    (e.reward - mu) / (sigma + EPS)
+                })
+                .collect()
+        }
+        AdvantageKind::Baseline => entries
+            .iter()
+            .map(|e| {
+                let a = e.reward - baseline.value();
+                baseline.update(e.reward);
+                a
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries(rs: &[f64]) -> Vec<RewardEntry> {
+        rs.iter().map(|&reward| RewardEntry { reward, group: 0 }).collect()
+    }
+
+    #[test]
+    fn reinforce_pp_is_zscore() {
+        let mut b = BaselineState::default();
+        let a = advantages(AdvantageKind::ReinforcePlusPlus,
+                           &entries(&[1.0, 3.0]), &mut b);
+        assert!((a[0] + 1.0).abs() < 1e-3);
+        assert!((a[1] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn reinforce_pp_batch_composition_matters() {
+        // The same reward gets a different advantage depending on who else
+        // is in the batch — the selective-batching effect.
+        let mut b = BaselineState::default();
+        let a1 = advantages(AdvantageKind::ReinforcePlusPlus,
+                            &entries(&[2.0, 0.0, 0.0]), &mut b);
+        let a2 = advantages(AdvantageKind::ReinforcePlusPlus,
+                            &entries(&[2.0, 2.0, 0.0]), &mut b);
+        assert!((a1[0] - a2[0]).abs() > 0.1);
+    }
+
+    #[test]
+    fn group_norm_normalizes_within_prompt() {
+        let es = vec![
+            RewardEntry { reward: 1.0, group: 1 },
+            RewardEntry { reward: 3.0, group: 1 },
+            RewardEntry { reward: 100.0, group: 2 },
+            RewardEntry { reward: 102.0, group: 2 },
+        ];
+        let mut b = BaselineState::default();
+        let a = advantages(AdvantageKind::GroupNorm, &es, &mut b);
+        // both groups normalize to ±1 despite wildly different scales
+        assert!((a[0] + 1.0).abs() < 1e-3 && (a[1] - 1.0).abs() < 1e-3);
+        assert!((a[2] + 1.0).abs() < 1e-3 && (a[3] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn degenerate_batch_all_equal_rewards() {
+        let mut b = BaselineState::default();
+        let a = advantages(AdvantageKind::ReinforcePlusPlus,
+                           &entries(&[1.0, 1.0, 1.0]), &mut b);
+        for x in a {
+            assert!(x.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn baseline_tracks_running_mean() {
+        let mut b = BaselineState::default();
+        let a = advantages(AdvantageKind::Baseline, &entries(&[1.0, 1.0, 4.0]),
+                           &mut b);
+        assert_eq!(a[0], 1.0);            // baseline starts at 0
+        assert_eq!(a[1], 0.0);            // baseline now 1.0
+        assert!((a[2] - 3.0).abs() < 1e-9);
+        assert!((b.value() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,46 @@
+//! RL algorithm pieces that live in rust (advantages, trajectory records).
+//!
+//! The PPO-clip objective itself runs inside the AOT-compiled train_step
+//! HLO (see python/compile/kernels/ppo_loss.py); rust computes advantages
+//! and assembles update batches — the placement the paper's selective
+//! batching requires.
+
+pub mod advantage;
+
+/// A completed (or partial-mode resumed-and-completed) trajectory, ready
+/// for the trainer.  `old_logp[i]` is the *sampling-time* log-prob of
+/// `response[i]` — the exact behavior-policy value (paper §3.2).
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    pub problem_idx: usize,
+    pub prompt_id: u64,
+    pub prompt: Vec<i32>,
+    pub response: Vec<i32>,
+    pub old_logp: Vec<f32>,
+    pub reward: f64,
+    pub correct: bool,
+    pub format_ok: bool,
+    /// Policy version that generated the FIRST response token.
+    pub born_version: u64,
+    /// Policy version that generated the LAST response token (differs from
+    /// born_version only for partial-mode resumed trajectories).
+    pub finish_version: u64,
+    /// Number of times this trajectory was interrupted and resumed.
+    pub resumes: u32,
+}
+
+impl Trajectory {
+    pub fn response_len(&self) -> usize {
+        self.response.len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prompt.len() + self.response.len()
+    }
+
+    /// Off-policy distance in policy versions at the time of an update
+    /// performed by `current_version`.
+    pub fn staleness(&self, current_version: u64) -> u64 {
+        current_version.saturating_sub(self.born_version)
+    }
+}

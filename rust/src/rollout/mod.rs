@@ -1,0 +1,459 @@
+//! Continuous-batching rollout engine over the AOT-compiled policy LM.
+//!
+//! The engine owns B fixed lanes (the PJRT decode_chunk batch — the
+//! "captured graph" size the paper's oversubscription strategy keeps
+//! saturated, §3.1), a waiting queue, and the persistent KV cache.  The
+//! SortedRL controller drives it chunk by chunk and decides when to admit,
+//! harvest and terminate; the engine is policy-free.
+//!
+//! Determinism: every request carries its own PCG stream, so a trajectory's
+//! sampled tokens depend only on (seed, request id, policy weights) — not on
+//! scheduling order.  This is what lets the Fig.5 harness pin generation
+//! lengths across scheduling strategies like the paper does.
+
+use crate::metrics::Timeline;
+use crate::runtime::{ParamState, Runtime};
+use crate::tokenizer::{EOS, PAD};
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// A rollout request: a prompt plus (for partial-mode resumes) the tokens
+/// and behavior-policy log-probs generated before an interruption.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub rid: u64,
+    pub problem_idx: usize,
+    /// Shared by the G samples of one prompt (GRPO grouping / bookkeeping).
+    pub prompt_id: u64,
+    pub prompt: Vec<i32>,
+    pub resumed: Vec<i32>,
+    pub resumed_logp: Vec<f32>,
+    /// Policy version when the FIRST response token was sampled.
+    pub born_version: Option<u64>,
+    pub resumes: u32,
+    /// Per-request cap on generated tokens (keeps prompt+response <= T).
+    pub max_new: usize,
+}
+
+impl Request {
+    pub fn fresh(rid: u64, problem_idx: usize, prompt_id: u64, prompt: Vec<i32>,
+                 max_new: usize) -> Self {
+        Request {
+            rid,
+            problem_idx,
+            prompt_id,
+            prompt,
+            resumed: Vec::new(),
+            resumed_logp: Vec::new(),
+            born_version: None,
+            resumes: 0,
+            max_new,
+        }
+    }
+
+    /// Prompt + already-generated tokens (what prefill must ingest).
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.resumed.len()
+    }
+}
+
+/// A finished (EOS or cap) or terminated (scheduler-interrupted) rollout.
+#[derive(Debug, Clone)]
+pub struct Rollout {
+    pub request: Request,
+    /// Full response so far (resumed ++ newly generated).
+    pub response: Vec<i32>,
+    /// Behavior-policy log-prob of each response token at sampling time.
+    pub logp: Vec<f32>,
+    pub finish_version: u64,
+    /// True if the model ended the sequence itself (EOS) or hit its cap;
+    /// false if the scheduler terminated it mid-generation.
+    pub complete: bool,
+    /// Wall-clock seconds (engine time) when this rollout finished.
+    pub finished_at: f64,
+}
+
+struct Lane {
+    request: Request,
+    emitted: Vec<i32>,
+    logps: Vec<f32>,
+    rng: Pcg64,
+    tok: i32,
+    pos: i32,
+    active: bool,
+}
+
+/// Engine knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub temperature: f32,
+    /// Greedy decoding (eval): ignore temperature, take argmax.
+    pub greedy: bool,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { temperature: 1.0, greedy: false, seed: 0 }
+    }
+}
+
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    cfg: EngineConfig,
+    lanes: Vec<Option<Lane>>,
+    queue: VecDeque<Request>,
+    finished: Vec<Rollout>,
+    /// Virtual clock: advanced by the wall time of engine calls only, so
+    /// controller/trainer time does not pollute rollout occupancy numbers.
+    clock: f64,
+    pub timeline: Timeline,
+    kv: Option<xla::Literal>,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Self {
+        let b = rt.manifest.shapes.engine_batch;
+        Engine {
+            rt,
+            cfg,
+            lanes: (0..b).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            finished: Vec::new(),
+            clock: 0.0,
+            timeline: Timeline::new(),
+            kv: None,
+        }
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.lanes
+            .iter()
+            .filter(|l| l.as_ref().is_some_and(|l| l.active))
+            .count()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.running() + self.queued()
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Enqueue requests (oversubscription: queue may exceed lane count).
+    pub fn submit(&mut self, reqs: impl IntoIterator<Item = Request>) {
+        self.queue.extend(reqs);
+    }
+
+    /// Drain finished rollouts collected so far (completion order — i.e.
+    /// sorted by generation length within a wave, the property SortedRL's
+    /// micro-curriculum exploits).
+    pub fn drain_finished(&mut self) -> Vec<Rollout> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn finished_count(&self) -> usize {
+        self.finished.len()
+    }
+
+    fn record_occupancy(&mut self) {
+        let r = self.running();
+        self.timeline.set_running(self.clock, r);
+    }
+
+    /// Admit queued requests into free lanes; one batched prefill if any.
+    pub fn admit(&mut self, state: &ParamState) -> Result<usize> {
+        let sh = self.rt.manifest.shapes.clone();
+        let free: Vec<usize> = (0..self.lanes.len())
+            .filter(|&i| self.lanes[i].is_none())
+            .collect();
+        if free.is_empty() || self.queue.is_empty() {
+            return Ok(0);
+        }
+        let n = free.len().min(self.queue.len());
+        let lanes = &free[..n];
+
+        let mut tokens = vec![PAD; sh.engine_batch * sh.prefill_seq];
+        let mut lens = vec![1i32; sh.engine_batch];
+        let mut newly: Vec<(usize, Request)> = Vec::with_capacity(n);
+        for &lane in lanes {
+            let req = self.queue.pop_front().unwrap();
+            let ctx_len = req.context_len().min(sh.prefill_seq);
+            for i in 0..ctx_len {
+                let t = if i < req.prompt.len() {
+                    req.prompt[i]
+                } else {
+                    req.resumed[i - req.prompt.len()]
+                };
+                tokens[lane * sh.prefill_seq + i] = t;
+            }
+            lens[lane] = ctx_len as i32;
+            newly.push((lane, req));
+        }
+        // lanes not being admitted keep length 1 (BOS-ish dummy); their
+        // cache lanes are restored from the old cache right after.
+        let t0 = std::time::Instant::now();
+        let (fresh, logits) = self.rt.prefill(state, &tokens, &lens)?;
+        self.kv = match self.kv.take() {
+            // keep old lanes, take fresh ones for the admitted requests
+            Some(old) => {
+                let lanes_new: Vec<usize> = newly.iter().map(|(l, _)| *l).collect();
+                Some(self.rt.merge_kv_lanes(&old, &fresh, &lanes_new)?)
+            }
+            None => Some(fresh),
+        };
+
+        let v = self.rt.manifest.model.vocab;
+        for (lane, req) in newly {
+            let mut rng = Pcg64::with_stream(self.cfg.seed ^ req.rid, 0xB0 + req.resumes as u64);
+            let row = &logits[lane * v..(lane + 1) * v];
+            let (tok, logp) = sample_row(row, self.cfg.temperature, self.cfg.greedy, &mut rng);
+            let mut l = Lane {
+                tok,
+                pos: lens[lane],
+                active: true,
+                emitted: vec![tok],
+                logps: vec![logp],
+                rng,
+                request: req,
+            };
+            if l.request.born_version.is_none() {
+                l.request.born_version = Some(state.version);
+            }
+            // immediate EOS / zero-budget edge cases
+            if tok == EOS || l.request.max_new <= l.request.resumed.len() + 1 {
+                self.finish_lane_inner(&mut l, state.version, tok == EOS);
+                self.lanes[lane] = None;
+                continue;
+            }
+            self.lanes[lane] = Some(l);
+        }
+        self.clock += t0.elapsed().as_secs_f64();
+        self.record_occupancy();
+        Ok(n)
+    }
+
+    fn finish_lane_inner(&mut self, lane: &mut Lane, version: u64, _eos: bool) {
+        let req = lane.request.clone();
+        let mut response = req.resumed.clone();
+        response.extend(&lane.emitted);
+        let mut logp = req.resumed_logp.clone();
+        logp.extend(&lane.logps);
+        self.timeline.add_finished(1);
+        self.finished.push(Rollout {
+            request: req,
+            response,
+            logp,
+            finish_version: version,
+            complete: true,
+            finished_at: self.clock,
+        });
+    }
+
+    /// One decode_chunk across all lanes. Returns #tokens generated.
+    pub fn step(&mut self, state: &ParamState) -> Result<usize> {
+        let sh = self.rt.manifest.shapes.clone();
+        let (b, k) = (sh.engine_batch, sh.decode_chunk);
+        if self.kv.is_none() || self.running() == 0 {
+            return Ok(0);
+        }
+        let mut tok = vec![PAD; b];
+        let mut pos = vec![0i32; b];
+        let mut active = vec![0i32; b];
+        let mut uniforms = vec![-1.0f32; b * k];
+        for (i, slot) in self.lanes.iter_mut().enumerate() {
+            if let Some(l) = slot.as_mut() {
+                tok[i] = l.tok;
+                pos[i] = l.pos;
+                active[i] = l.active as i32;
+                for j in 0..k {
+                    uniforms[i * k + j] = if self.cfg.greedy {
+                        -1.0
+                    } else {
+                        l.rng.uniform_f32()
+                    };
+                }
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let kv = self.kv.take().expect("kv checked above");
+        let (kv, out) = self
+            .rt
+            .decode_chunk(state, kv, &tok, &pos, &active, &uniforms, self.cfg.temperature)?;
+        self.kv = Some(kv);
+        self.clock += t0.elapsed().as_secs_f64();
+
+        let mut tokens_out = 0usize;
+        let mut to_finish: Vec<usize> = Vec::new();
+        for i in 0..b {
+            let Some(l) = self.lanes[i].as_mut() else { continue };
+            if !l.active {
+                continue;
+            }
+            let row_tok = &out.out_tokens[i * k..(i + 1) * k];
+            let row_lp = &out.out_logp[i * k..(i + 1) * k];
+            let budget = l.request.max_new - l.request.resumed.len();
+            for (t, lp) in row_tok.iter().zip(row_lp) {
+                if *t == PAD {
+                    // lane went inactive mid-chunk (EOS emitted earlier or cap)
+                    break;
+                }
+                l.emitted.push(*t);
+                l.logps.push(*lp);
+                tokens_out += 1;
+                if *t == EOS || l.emitted.len() >= budget {
+                    break;
+                }
+            }
+            l.tok = out.tok[i];
+            l.pos = out.pos[i];
+            let model_active = out.active[i] != 0;
+            let capped = l.emitted.len() >= budget;
+            l.active = model_active && !capped;
+            if !l.active {
+                to_finish.push(i);
+            }
+        }
+        self.timeline.add_tokens(tokens_out as u64);
+        for i in to_finish {
+            let mut lane = self.lanes[i].take().unwrap();
+            self.finish_lane_inner(&mut lane, state.version, true);
+        }
+        self.record_occupancy();
+        Ok(tokens_out)
+    }
+
+    /// Terminate every in-flight request (queue included), returning partial
+    /// rollouts for in-flight lanes and untouched requests for the queue.
+    /// This is the controller's early-termination harvest (paper §3.1):
+    /// in on-policy mode the caller discards partials (prompt re-queued),
+    /// in partial mode it scavenges tokens + log-probs into the buffer.
+    pub fn terminate_all(&mut self, version: u64) -> (Vec<Rollout>, Vec<Request>) {
+        let mut partials = Vec::new();
+        for slot in self.lanes.iter_mut() {
+            if let Some(l) = slot.take() {
+                let req = l.request.clone();
+                let mut response = req.resumed.clone();
+                response.extend(&l.emitted);
+                let mut logp = req.resumed_logp.clone();
+                logp.extend(&l.logps);
+                partials.push(Rollout {
+                    request: req,
+                    response,
+                    logp,
+                    finish_version: version,
+                    complete: false,
+                    finished_at: self.clock,
+                });
+            }
+        }
+        let queued: Vec<Request> = self.queue.drain(..).collect();
+        self.kv = None;
+        self.record_occupancy();
+        (partials, queued)
+    }
+
+    /// Run until every submitted request has finished (baseline semantics —
+    /// the sync barrier that produces Fig.1b's drain bubbles).
+    pub fn run_to_completion(&mut self, state: &ParamState) -> Result<Vec<Rollout>> {
+        loop {
+            self.admit(state)?;
+            if self.running() == 0 {
+                if self.queue.is_empty() {
+                    break;
+                }
+                continue;
+            }
+            self.step(state)?;
+        }
+        Ok(self.drain_finished())
+    }
+}
+
+/// Temperature / greedy sampling over one logits row; returns (token, logp).
+/// Mirrors the in-HLO sampler (log-softmax + inverse CDF) so rust-sampled
+/// first tokens carry the same behavior-policy log-prob semantics.
+pub fn sample_row(row: &[f32], temperature: f32, greedy: bool, rng: &mut Pcg64) -> (i32, f32) {
+    let inv_t = 1.0 / temperature.max(1e-6);
+    let m = row.iter().cloned().fold(f32::MIN, f32::max);
+    let mut exps: Vec<f32> = row.iter().map(|x| ((x - m) * inv_t).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    for e in exps.iter_mut() {
+        *e /= sum;
+    }
+    let idx = if greedy {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    } else {
+        let u = rng.uniform_f32();
+        let mut acc = 0.0;
+        let mut chosen = exps.len() - 1;
+        for (i, p) in exps.iter().enumerate() {
+            acc += p;
+            if acc >= u {
+                chosen = i;
+                break;
+            }
+        }
+        chosen
+    };
+    (idx as i32, exps[idx].max(1e-30).ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_row_greedy_picks_max() {
+        let mut rng = Pcg64::new(1);
+        let row = [0.1, 2.0, -1.0, 0.5];
+        let (t, lp) = sample_row(&row, 1.0, true, &mut rng);
+        assert_eq!(t, 1);
+        assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn sample_row_respects_distribution() {
+        let mut rng = Pcg64::new(2);
+        let row = [10.0, 0.0, 0.0, 0.0]; // ~token 0 almost surely
+        let hits = (0..200)
+            .filter(|_| sample_row(&row, 1.0, false, &mut rng).0 == 0)
+            .count();
+        assert!(hits > 190, "{hits}");
+    }
+
+    #[test]
+    fn sample_row_temperature_flattens() {
+        let mut rng = Pcg64::new(3);
+        let row = [3.0, 0.0];
+        let cold = (0..500)
+            .filter(|_| sample_row(&row, 0.25, false, &mut rng).0 == 0)
+            .count();
+        let hot = (0..500)
+            .filter(|_| sample_row(&row, 4.0, false, &mut rng).0 == 0)
+            .count();
+        assert!(cold > hot, "cold={cold} hot={hot}");
+    }
+
+    #[test]
+    fn request_context_len() {
+        let mut r = Request::fresh(1, 0, 0, vec![1, 2, 3], 10);
+        assert_eq!(r.context_len(), 3);
+        r.resumed = vec![4, 5];
+        assert_eq!(r.context_len(), 5);
+    }
+}

@@ -1,0 +1,252 @@
+//! artifacts/manifest.json parsing — the calling-convention contract
+//! emitted by python/compile/aot.py.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).context("tensor name")?.into(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("tensor shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(j.get("dtype").and_then(Json::as_str).context("dtype")?)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+impl EntrySpec {
+    fn parse(dir: &Path, j: &Json) -> Result<Self> {
+        Ok(EntrySpec {
+            file: dir.join(j.get("file").and_then(Json::as_str).context("entry file")?),
+            inputs: j
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<_>>()?,
+            sha256: j.get("sha256").and_then(Json::as_str).unwrap_or("").into(),
+        })
+    }
+}
+
+/// Shape constants baked into one artifact config.
+#[derive(Debug, Clone)]
+pub struct Shapes {
+    pub engine_batch: usize,
+    pub decode_chunk: usize,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub prefill_seq: usize,
+    pub n_param_tensors: usize,
+    pub kv_cache: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub param_count: usize,
+}
+
+/// One compiled artifact config ("tag") from the manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub tag: String,
+    pub preset: String,
+    pub model: ModelInfo,
+    pub shapes: Shapes,
+    pub vocab: Vec<String>,
+    pub use_pallas: bool,
+    pub params: Vec<TensorSpec>,
+    pub init: EntrySpec,
+    pub prefill: EntrySpec,
+    pub decode_chunk: EntrySpec,
+    pub train_step: EntrySpec,
+    pub sft_step: EntrySpec,
+    pub logprob: EntrySpec,
+}
+
+impl Manifest {
+    /// Load the config `tag` from `dir/manifest.json`; with `tag == None`
+    /// the manifest must contain exactly one config.
+    pub fn load(dir: &Path, tag: Option<&str>) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let configs = j.get("configs").and_then(Json::as_obj).context("configs")?;
+        let cfg = match tag {
+            Some(t) => configs
+                .get(t)
+                .ok_or_else(|| anyhow!("tag {t:?} not in manifest (have: {:?})",
+                                       configs.keys().collect::<Vec<_>>()))?,
+            None => {
+                if configs.len() == 1 {
+                    configs.values().next().unwrap()
+                } else if let Some(preferred) = ["mini", "small"]
+                    .iter()
+                    .find_map(|want| {
+                        configs.iter().find(|(_, c)| {
+                            c.get("preset").and_then(Json::as_str) == Some(want)
+                        })
+                    })
+                    .map(|(_, c)| c)
+                {
+                    // multiple configs: prefer the single-core-friendly
+                    // "mini" preset, then "small" (tiny is the test config)
+                    preferred
+                } else {
+                    bail!(
+                        "manifest has {} configs, pass --tag (have: {:?})",
+                        configs.len(),
+                        configs.keys().collect::<Vec<_>>()
+                    );
+                }
+            }
+        };
+        Self::parse(dir, cfg)
+    }
+
+    fn parse(dir: &Path, j: &Json) -> Result<Self> {
+        let sh = j.get("shapes").context("shapes")?;
+        let get = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k).and_then(Json::as_usize).with_context(|| format!("shapes.{k}"))
+        };
+        let shapes = Shapes {
+            engine_batch: get(sh, "engine_batch")?,
+            decode_chunk: get(sh, "decode_chunk")?,
+            train_batch: get(sh, "train_batch")?,
+            train_seq: get(sh, "train_seq")?,
+            prefill_seq: get(sh, "prefill_seq")?,
+            n_param_tensors: get(sh, "n_param_tensors")?,
+            kv_cache: sh
+                .get("kv_cache")
+                .and_then(Json::as_arr)
+                .context("kv_cache")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+        };
+        let m = j.get("model").context("model")?;
+        let model = ModelInfo {
+            d_model: get(m, "d_model")?,
+            n_layers: get(m, "n_layers")?,
+            n_heads: get(m, "n_heads")?,
+            d_ff: get(m, "d_ff")?,
+            max_seq: get(m, "max_seq")?,
+            vocab: get(m, "vocab")?,
+            param_count: get(m, "param_count")?,
+        };
+        let entries = j.get("entries").context("entries")?;
+        let entry = |name: &str| -> Result<EntrySpec> {
+            EntrySpec::parse(dir, entries.get(name).with_context(|| format!("entry {name}"))?)
+        };
+        Ok(Manifest {
+            tag: j.get("tag").and_then(Json::as_str).context("tag")?.into(),
+            preset: j.get("preset").and_then(Json::as_str).context("preset")?.into(),
+            model,
+            shapes,
+            vocab: j
+                .get("vocab")
+                .and_then(Json::as_arr)
+                .context("vocab")?
+                .iter()
+                .map(|v| v.as_str().map(String::from).context("vocab entry"))
+                .collect::<Result<_>>()?,
+            use_pallas: j.get("use_pallas").and_then(Json::as_bool).unwrap_or(true),
+            params: j
+                .get("params")
+                .and_then(Json::as_arr)
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok(TensorSpec {
+                        name: p.get("name").and_then(Json::as_str).context("name")?.into(),
+                        shape: p
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .context("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<_>>()?,
+                        dtype: DType::F32,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            init: entry("init")?,
+            prefill: entry("prefill")?,
+            decode_chunk: entry("decode_chunk")?,
+            train_step: entry("train_step")?,
+            sft_step: entry("sft_step")?,
+            logprob: entry("logprob")?,
+        })
+    }
+
+    /// List available tags without fully parsing.
+    pub fn list_tags(dir: &Path) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+        Ok(j.get("configs")
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default())
+    }
+}

@@ -1,0 +1,359 @@
+//! PJRT runtime: load AOT artifacts, hold device executables, and expose
+//! typed entry points (`init` / `prefill` / `decode_chunk` / `train_step` /
+//! `sft_step` / `logprob`) to the coordinator.
+//!
+//! Python never runs here — the HLO text in `artifacts/` is the entire
+//! model.  Pattern follows /opt/xla-example/load_hlo (HLO text in,
+//! `PjRtClient::cpu()` compile, literal marshaling per manifest).
+
+pub mod manifest;
+
+use crate::tokenizer::Tokenizer;
+use anyhow::{bail, Context, Result};
+use manifest::{EntrySpec, Manifest};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Cumulative wall-time accounting per entry point (perf + Fig.1a).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub prefill_calls: u64,
+    pub prefill_secs: f64,
+    pub decode_calls: u64,
+    pub decode_secs: f64,
+    pub train_calls: u64,
+    pub train_secs: f64,
+    pub sft_calls: u64,
+    pub sft_secs: f64,
+    pub logprob_calls: u64,
+    pub logprob_secs: f64,
+}
+
+/// Model parameters + Adam state, owned as host literals between steps.
+pub struct ParamState {
+    pub params: Vec<Literal>,
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+    pub step: i32,
+    /// Monotone policy version: bumped on every successful train/sft step.
+    pub version: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub mean_ratio: f32,
+    pub clip_frac: f32,
+    pub mean_entropy: f32,
+    pub approx_kl: f32,
+    pub grad_norm: f32,
+}
+
+/// Inputs to one train_step call (shapes per manifest: [Bt, T] row-major).
+pub struct TrainBatch {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub old_logp: Vec<f32>,
+    pub lr: f32,
+}
+
+/// Outputs of one decode_chunk call.
+pub struct DecodeOut {
+    pub tok: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub active: Vec<i32>,
+    /// [B, k] row-major.
+    pub out_tokens: Vec<i32>,
+    pub out_logp: Vec<f32>,
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    init_exe: PjRtLoadedExecutable,
+    prefill_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    train_exe: PjRtLoadedExecutable,
+    sft_exe: PjRtLoadedExecutable,
+    logprob_exe: PjRtLoadedExecutable,
+    pub stats: Mutex<RuntimeStats>,
+}
+
+fn compile(client: &PjRtClient, e: &EntrySpec) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(&e.file)
+        .with_context(|| format!("parsing {}", e.file.display()))?;
+    client
+        .compile(&XlaComputation::from_proto(&proto))
+        .with_context(|| format!("compiling {}", e.file.display()))
+}
+
+impl Runtime {
+    /// Load + compile every entry point of config `tag` under `dir`.
+    pub fn load(dir: &Path, tag: Option<&str>) -> Result<Self> {
+        let manifest = Manifest::load(dir, tag)?;
+        // Fail fast if the tokenizer drifted from the build-time vocab.
+        Tokenizer::new()
+            .assert_matches_manifest(&manifest.vocab)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            init_exe: compile(&client, &manifest.init)?,
+            prefill_exe: compile(&client, &manifest.prefill)?,
+            decode_exe: compile(&client, &manifest.decode_chunk)?,
+            train_exe: compile(&client, &manifest.train_step)?,
+            sft_exe: compile(&client, &manifest.sft_step)?,
+            logprob_exe: compile(&client, &manifest.logprob)?,
+            manifest,
+            client,
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn n_params(&self) -> usize {
+        self.manifest.shapes.n_param_tensors
+    }
+
+    /// Execute and unpack the single tuple output into literals.
+    fn run(exe: &PjRtLoadedExecutable, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let res = exe.execute::<&Literal>(inputs)?;
+        let lit = res[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    // ----------------------------------------------------------------
+    // init
+    // ----------------------------------------------------------------
+
+    /// Fresh parameters + zeroed Adam state from an i32 seed.
+    pub fn init(&self, seed: i32) -> Result<ParamState> {
+        let seed_lit = Literal::scalar(seed);
+        let params = Self::run(&self.init_exe, &[&seed_lit])?;
+        if params.len() != self.n_params() {
+            bail!("init returned {} tensors, manifest says {}", params.len(), self.n_params());
+        }
+        let zeros = |spec: &[manifest::TensorSpec]| -> Vec<Literal> {
+            spec.iter()
+                .map(|t| {
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    Literal::vec1(&vec![0f32; t.elements()])
+                        .reshape(&dims)
+                        .expect("zero literal")
+                })
+                .collect()
+        };
+        Ok(ParamState {
+            m: zeros(&self.manifest.params),
+            v: zeros(&self.manifest.params),
+            params,
+            step: 0,
+            version: 0,
+        })
+    }
+
+    // ----------------------------------------------------------------
+    // prefill
+    // ----------------------------------------------------------------
+
+    /// Prompt (or prompt+resume) ingestion for ALL engine lanes at once.
+    /// `tokens` is [B, Sp] row-major, `length[b]` the valid prefix length.
+    /// Returns the new KV cache (caller-owned — the engine holds it) and
+    /// the last-position logits per lane ([B, V] row-major).
+    pub fn prefill(&self, state: &ParamState, tokens: &[i32], length: &[i32])
+                   -> Result<(Literal, Vec<f32>)> {
+        let sh = &self.manifest.shapes;
+        let b = sh.engine_batch;
+        assert_eq!(tokens.len(), b * sh.prefill_seq);
+        assert_eq!(length.len(), b);
+        let t0 = Instant::now();
+        let tok_lit = Literal::vec1(tokens)
+            .reshape(&[b as i64, sh.prefill_seq as i64])?;
+        let len_lit = Literal::vec1(length);
+        let mut inputs: Vec<&Literal> = state.params.iter().collect();
+        inputs.push(&tok_lit);
+        inputs.push(&len_lit);
+        let mut outs = Self::run(&self.prefill_exe, &inputs)?;
+        let logits = outs.pop().context("prefill logits")?;
+        let kv = outs.pop().context("prefill kv")?;
+        let out = logits.to_vec::<f32>()?;
+        let mut st = self.stats.lock().unwrap();
+        st.prefill_calls += 1;
+        st.prefill_secs += t0.elapsed().as_secs_f64();
+        Ok((kv, out))
+    }
+
+    /// Overwrite lanes `lanes` of `old_kv` with the same lanes of `fresh` —
+    /// used when admitting new requests into free lanes while other lanes
+    /// are mid-generation (continuous batching).
+    ///
+    /// Layout: kv f32[NL, 2, B, H, S, Dh]; a lane is strided — one
+    /// contiguous block of H*S*Dh floats per (layer, k/v) slice.
+    pub fn merge_kv_lanes(&self, old_kv: &Literal, fresh: &Literal, lanes: &[usize])
+                          -> Result<Literal> {
+        let dims = &self.manifest.shapes.kv_cache;
+        let (nl, two, b) = (dims[0], dims[1], dims[2]);
+        let lane_block = dims[3] * dims[4] * dims[5];
+        let mut data = old_kv.to_vec::<f32>()?;
+        let fresh_data = fresh.to_vec::<f32>()?;
+        for outer in 0..nl * two {
+            let base = outer * b * lane_block;
+            for &lane in lanes {
+                let off = base + lane * lane_block;
+                data[off..off + lane_block]
+                    .copy_from_slice(&fresh_data[off..off + lane_block]);
+            }
+        }
+        let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(Literal::vec1(&data).reshape(&dims_i)?)
+    }
+
+    // ----------------------------------------------------------------
+    // decode
+    // ----------------------------------------------------------------
+
+    /// One chunk of k decode steps for the whole engine batch. Consumes the
+    /// caller's KV cache and returns the updated one.  `uniforms` is [B, k]
+    /// in [0,1) (negative = greedy); sampling happens inside the HLO (L2),
+    /// so the returned `out_logp` are the exact behavior-policy log-probs.
+    pub fn decode_chunk(&self, state: &ParamState, kv: Literal, tok: &[i32],
+                        pos: &[i32], active: &[i32], uniforms: &[f32],
+                        temp: f32) -> Result<(Literal, DecodeOut)> {
+        let sh = &self.manifest.shapes;
+        let (b, k) = (sh.engine_batch, sh.decode_chunk);
+        assert_eq!(tok.len(), b);
+        assert_eq!(uniforms.len(), b * k);
+        let t0 = Instant::now();
+        let tok_lit = Literal::vec1(tok);
+        let pos_lit = Literal::vec1(pos);
+        let act_lit = Literal::vec1(active);
+        let uni_lit = Literal::vec1(uniforms).reshape(&[b as i64, k as i64])?;
+        let temp_lit = Literal::scalar(temp);
+        let mut inputs: Vec<&Literal> = state.params.iter().collect();
+        inputs.extend([&kv, &tok_lit, &pos_lit, &act_lit, &uni_lit, &temp_lit]);
+        let mut outs = Self::run(&self.decode_exe, &inputs)?;
+        // outputs: kv, tok, pos, active, out_tokens, out_logp
+        let out_logp = outs.pop().context("out_logp")?.to_vec::<f32>()?;
+        let out_tokens = outs.pop().context("out_tokens")?.to_vec::<i32>()?;
+        let active = outs.pop().context("active")?.to_vec::<i32>()?;
+        let pos = outs.pop().context("pos")?.to_vec::<i32>()?;
+        let tok = outs.pop().context("tok")?.to_vec::<i32>()?;
+        let new_kv = outs.pop().context("kv")?;
+        let mut st = self.stats.lock().unwrap();
+        st.decode_calls += 1;
+        st.decode_secs += t0.elapsed().as_secs_f64();
+        Ok((new_kv, DecodeOut { tok, pos, active, out_tokens, out_logp }))
+    }
+
+    // ----------------------------------------------------------------
+    // training
+    // ----------------------------------------------------------------
+
+    /// One PPO update; swaps params/adam state in place and bumps version.
+    pub fn train_step(&self, state: &mut ParamState, batch: &TrainBatch)
+                      -> Result<TrainStats> {
+        let sh = &self.manifest.shapes;
+        let (bt, t) = (sh.train_batch, sh.train_seq);
+        assert_eq!(batch.tokens.len(), bt * t);
+        let t0 = Instant::now();
+        let n = self.n_params();
+        let step_lit = Literal::scalar(state.step);
+        let tok_lit = Literal::vec1(&batch.tokens).reshape(&[bt as i64, t as i64])?;
+        let mask_lit = Literal::vec1(&batch.mask).reshape(&[bt as i64, t as i64])?;
+        let adv_lit = Literal::vec1(&batch.adv).reshape(&[bt as i64, t as i64])?;
+        let lp_lit = Literal::vec1(&batch.old_logp).reshape(&[bt as i64, t as i64])?;
+        let lr_lit = Literal::scalar(batch.lr);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n + 6);
+        inputs.extend(state.params.iter());
+        inputs.extend(state.m.iter());
+        inputs.extend(state.v.iter());
+        inputs.extend([&step_lit, &tok_lit, &mask_lit, &adv_lit, &lp_lit, &lr_lit]);
+        let mut outs = Self::run(&self.train_exe, &inputs)?;
+        // outputs: params*n, m*n, v*n, step, loss, ratio, clipf, ent, kl, gnorm
+        let gnorm = outs.pop().unwrap().get_first_element::<f32>()?;
+        let kl = outs.pop().unwrap().get_first_element::<f32>()?;
+        let ent = outs.pop().unwrap().get_first_element::<f32>()?;
+        let clipf = outs.pop().unwrap().get_first_element::<f32>()?;
+        let ratio = outs.pop().unwrap().get_first_element::<f32>()?;
+        let loss = outs.pop().unwrap().get_first_element::<f32>()?;
+        let step = outs.pop().unwrap().get_first_element::<i32>()?;
+        let v = outs.split_off(2 * n);
+        let m = outs.split_off(n);
+        state.params = outs;
+        state.m = m;
+        state.v = v;
+        state.step = step;
+        state.version += 1;
+        let mut st = self.stats.lock().unwrap();
+        st.train_calls += 1;
+        st.train_secs += t0.elapsed().as_secs_f64();
+        Ok(TrainStats {
+            loss,
+            mean_ratio: ratio,
+            clip_frac: clipf,
+            mean_entropy: ent,
+            approx_kl: kl,
+            grad_norm: gnorm,
+        })
+    }
+
+    /// One supervised step (warm start); `weights` is the loss mask.
+    pub fn sft_step(&self, state: &mut ParamState, tokens: &[i32], weights: &[f32],
+                    lr: f32) -> Result<(f32, f32)> {
+        let sh = &self.manifest.shapes;
+        let (bt, t) = (sh.train_batch, sh.train_seq);
+        assert_eq!(tokens.len(), bt * t);
+        let t0 = Instant::now();
+        let n = self.n_params();
+        let step_lit = Literal::scalar(state.step);
+        let tok_lit = Literal::vec1(tokens).reshape(&[bt as i64, t as i64])?;
+        let w_lit = Literal::vec1(weights).reshape(&[bt as i64, t as i64])?;
+        let lr_lit = Literal::scalar(lr);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n + 4);
+        inputs.extend(state.params.iter());
+        inputs.extend(state.m.iter());
+        inputs.extend(state.v.iter());
+        inputs.extend([&step_lit, &tok_lit, &w_lit, &lr_lit]);
+        let mut outs = Self::run(&self.sft_exe, &inputs)?;
+        let gnorm = outs.pop().unwrap().get_first_element::<f32>()?;
+        let loss = outs.pop().unwrap().get_first_element::<f32>()?;
+        let step = outs.pop().unwrap().get_first_element::<i32>()?;
+        let v = outs.split_off(2 * n);
+        let m = outs.split_off(n);
+        state.params = outs;
+        state.m = m;
+        state.v = v;
+        state.step = step;
+        state.version += 1;
+        let mut st = self.stats.lock().unwrap();
+        st.sft_calls += 1;
+        st.sft_secs += t0.elapsed().as_secs_f64();
+        Ok((loss, gnorm))
+    }
+
+    /// Per-token log-probs of `tokens` ([Bt, T] row-major) under `state`.
+    pub fn logprob(&self, state: &ParamState, tokens: &[i32]) -> Result<Vec<f32>> {
+        let sh = &self.manifest.shapes;
+        let (bt, t) = (sh.train_batch, sh.train_seq);
+        assert_eq!(tokens.len(), bt * t);
+        let t0 = Instant::now();
+        let tok_lit = Literal::vec1(tokens).reshape(&[bt as i64, t as i64])?;
+        let mut inputs: Vec<&Literal> = state.params.iter().collect();
+        inputs.push(&tok_lit);
+        let outs = Self::run(&self.logprob_exe, &inputs)?;
+        let lp = outs[0].to_vec::<f32>()?;
+        let mut st = self.stats.lock().unwrap();
+        st.logprob_calls += 1;
+        st.logprob_secs += t0.elapsed().as_secs_f64();
+        Ok(lp)
+    }
+
+    pub fn stats_snapshot(&self) -> RuntimeStats {
+        *self.stats.lock().unwrap()
+    }
+}

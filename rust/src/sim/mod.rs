@@ -1,0 +1,604 @@
+//! Discrete-event rollout simulator.
+//!
+//! The paper's performance numbers (Fig. 1a/1b, Fig. 5) come from H100/MI300X
+//! clusters serving 8B–32B models; this simulator reproduces their *shape*
+//! with an explicit cost model of a bandwidth-bound serving engine:
+//!
+//!   iteration_time(r) = t_weights + r * t_token
+//!
+//! — every decode iteration streams the full weights once (the fixed cost
+//! that makes low occupancy expensive, §2.2) plus per-request KV traffic.
+//! Prefill is chunked and costs t_prefill_token per ingested token.  The
+//! scheduling logic mirrors the real controller (oversubscription, early
+//! termination at the batching threshold, on-policy restart vs partial
+//! resume), so the same policies can be compared at paper scale (512
+//! prompts, 8k-token caps) in milliseconds of host time.
+
+use crate::metrics::Timeline;
+use crate::util::rng::Pcg64;
+use std::collections::VecDeque;
+
+/// Serving-engine cost model (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Fixed per-iteration cost: weight streaming + kernel launch
+    /// (the "captured graph" cost paid regardless of occupancy).
+    pub t_weights: f64,
+    /// Marginal per-running-request per-iteration cost (KV traffic).
+    pub t_token: f64,
+    /// Per-token prefill ingestion cost (chunked prefill).
+    pub t_prefill_token: f64,
+    /// Policy-update cost per trajectory token trained on (fwd+bwd).
+    pub t_update_token: f64,
+    /// Reward/reference inference cost per trajectory token.
+    pub t_infer_token: f64,
+}
+
+impl Default for CostModel {
+    /// Calibrated to Fig. 5's operating point (8B-class model, Q=128):
+    /// full-batch decode = Q/(t_w + Q·t_t) ≈ 5.6k tok/s (the partial-mode
+    /// ceiling) and ~26% mean occupancy yields ≈ 4.0k tok/s (the baseline),
+    /// which solves to t_w ≈ 3.2 ms, t_t ≈ 0.155 ms.
+    fn default() -> Self {
+        CostModel {
+            t_weights: 3.2e-3,
+            t_token: 1.55e-4,
+            t_prefill_token: 2e-6,
+            t_update_token: 1.0e-4,
+            t_infer_token: 2.5e-5,
+        }
+    }
+}
+
+/// One simulated request: predetermined prompt/output lengths (the paper's
+/// Fig. 5 methodology — sampling parameters pinned so lengths match across
+/// strategies).
+#[derive(Debug, Clone, Copy)]
+pub struct SimRequest {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub output_len: usize,
+}
+
+/// Long-tailed length workload matching Fig. 1c's shape: a lognormal body
+/// (~80% of samples within 3/8 of the cap) plus ~6% of requests truncated
+/// AT the generation cap — the paper observes "5% can extend up to the
+/// token limit", and those cap-clipped requests are what the schedulers
+/// fight over.
+pub fn longtail_workload(n: usize, cap: usize, seed: u64) -> Vec<SimRequest> {
+    let mut rng = Pcg64::with_stream(seed, 0x51);
+    (0..n)
+        .map(|id| {
+            let len = if rng.bool_with(0.08) {
+                cap // hit the generation limit
+            } else {
+                // body scaled to the cap: median ~0.11*cap (most responses
+                // finish early — Fig. 1c's "80% within 3k of 16k"), with a
+                // long right tail
+                let body = rng.lognormal(0.0, 0.85) * 0.11 * cap as f64;
+                (body as usize).clamp(16, cap)
+            };
+            SimRequest {
+                id,
+                prompt_len: 64 + rng.below(192) as usize,
+                output_len: len,
+            }
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    /// Run each rollout batch to completion (sync barrier).
+    Baseline,
+    /// SortedRL fully on-policy: early-terminate; interrupted requests
+    /// restart from scratch (progress discarded).
+    SortedOnPolicy,
+    /// SortedRL partial: interrupted requests keep progress; resume costs
+    /// a prefill over prompt + generated prefix.
+    SortedPartial,
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub mode: SimMode,
+    pub timeline: Timeline,
+    pub total_time: f64,
+    pub rollout_time: f64,
+    pub update_time: f64,
+    pub infer_time: f64,
+    /// Tokens belonging to harvested trajectories.
+    pub useful_tokens: u64,
+    /// Tokens generated then discarded by on-policy restarts.
+    pub wasted_tokens: u64,
+    pub bubble_ratio: f64,
+    /// Useful output tokens / rollout wall time.
+    pub throughput: f64,
+    pub harvests: usize,
+    /// Trajectories harvested clipped (incomplete) at group end.
+    pub clipped: usize,
+    /// Prompts dropped without training (never scheduled at group end).
+    pub dropped: usize,
+}
+
+struct Running {
+    req: SimRequest,
+    generated: usize,
+}
+
+/// Simulated engine with queue capacity `q`.
+struct SimEngine {
+    q: usize,
+    cost: CostModel,
+    clock: f64,
+    running: Vec<Running>,
+    queue: VecDeque<(SimRequest, usize)>, // (request, progress)
+    timeline: Timeline,
+    tokens_out: u64,
+}
+
+impl SimEngine {
+    fn new(q: usize, cost: CostModel) -> Self {
+        SimEngine {
+            q,
+            cost,
+            clock: 0.0,
+            running: Vec::new(),
+            queue: VecDeque::new(),
+            timeline: Timeline::new(),
+            tokens_out: 0,
+        }
+    }
+
+    fn record(&mut self) {
+        self.timeline.set_running(self.clock, self.running.len());
+    }
+
+    fn admit(&mut self) {
+        while self.running.len() < self.q {
+            let Some((req, progress)) = self.queue.pop_front() else { break };
+            // prefill cost: prompt + any preserved progress
+            self.clock += (req.prompt_len + progress) as f64 * self.cost.t_prefill_token;
+            self.running.push(Running { req, generated: progress });
+        }
+        self.record();
+    }
+
+    /// One decode iteration; returns finished requests.
+    fn step(&mut self) -> Vec<SimRequest> {
+        let r = self.running.len();
+        if r == 0 {
+            return Vec::new();
+        }
+        self.clock += self.cost.t_weights + r as f64 * self.cost.t_token;
+        self.tokens_out += r as u64;
+        let mut finished = Vec::new();
+        self.running.retain_mut(|run| {
+            run.generated += 1;
+            if run.generated >= run.req.output_len {
+                finished.push(run.req);
+                false
+            } else {
+                true
+            }
+        });
+        if !finished.is_empty() {
+            self.timeline.add_finished(finished.len() as u64);
+        }
+        self.record();
+        finished
+    }
+
+    /// Preempt all running lanes back to the queue tail, KEEPING progress
+    /// (partial-mode rotation: costs only re-prefill on re-admission).
+    fn rotate(&mut self) {
+        let preempted: Vec<(SimRequest, usize)> = self
+            .running
+            .drain(..)
+            .map(|r| (r.req, r.generated))
+            .collect();
+        self.queue.extend(preempted);
+        self.record();
+    }
+
+    /// Re-order the waiting queue longest-progress-first (commit phase:
+    /// progress == sensed length in partial mode).
+    fn prioritize_queue_by_progress(&mut self) {
+        let mut v: Vec<(SimRequest, usize)> = self.queue.drain(..).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
+        self.queue.extend(v);
+    }
+
+    /// Terminate everything in flight; returns (request, progress) pairs.
+    fn terminate_all(&mut self) -> Vec<(SimRequest, usize)> {
+        let mut out: Vec<(SimRequest, usize)> = self
+            .running
+            .drain(..)
+            .map(|r| (r.req, r.generated))
+            .collect();
+        out.extend(self.queue.drain(..).map(|(req, p)| (req, p)));
+        self.record();
+        out
+    }
+}
+
+/// Simulate one full consumption of `workload` (n_batches × batch prompts)
+/// under `mode`, with `update_batch` trajectories per policy update.
+pub fn simulate(mode: SimMode, workload: &[SimRequest], q: usize,
+                update_batch: usize, cost: CostModel) -> SimReport {
+    match mode {
+        SimMode::Baseline => simulate_baseline(workload, q, update_batch, cost),
+        _ => simulate_sorted(mode, workload, q, update_batch, cost),
+    }
+}
+
+fn post_phase_costs(finished: &[SimRequest], cost: &CostModel) -> (f64, f64) {
+    let toks: f64 = finished
+        .iter()
+        .map(|r| (r.prompt_len + r.output_len) as f64)
+        .sum();
+    (toks * cost.t_infer_token, toks * cost.t_update_token)
+}
+
+/// Baseline: split the workload into batches of `q`, each run to completion
+/// behind a sync barrier, then updates in chunks of `update_batch`.
+fn simulate_baseline(workload: &[SimRequest], q: usize, update_batch: usize,
+                     cost: CostModel) -> SimReport {
+    let mut eng = SimEngine::new(q, cost);
+    let mut infer_time = 0.0;
+    let mut update_time = 0.0;
+    let mut harvests = 0;
+    for batch in workload.chunks(q) {
+        eng.queue.extend(batch.iter().map(|r| (*r, 0usize)));
+        let mut finished: Vec<SimRequest> = Vec::new();
+        while !eng.queue.is_empty() || !eng.running.is_empty() {
+            eng.admit();
+            finished.extend(eng.step());
+        }
+        // sync barrier: inference + k sequential updates while engine idles
+        let (ti, tu) = post_phase_costs(&finished, &cost);
+        infer_time += ti;
+        update_time += tu;
+        harvests += finished.len().div_ceil(update_batch);
+    }
+    let rollout_time = eng.clock;
+    let useful: u64 = workload.iter().map(|r| r.output_len as u64).sum();
+    let bubble = eng.timeline.bubble_ratio(q, eng.clock);
+    SimReport {
+        mode: SimMode::Baseline,
+        total_time: rollout_time + infer_time + update_time,
+        rollout_time,
+        update_time,
+        infer_time,
+        useful_tokens: useful,
+        wasted_tokens: eng.tokens_out - useful,
+        bubble_ratio: bubble,
+        throughput: useful as f64 / rollout_time,
+        timeline: eng.timeline,
+        harvests,
+        clipped: 0,
+        dropped: 0,
+    }
+}
+
+/// Park threshold for on-policy: requests sensed longer than ~P60 of the
+/// sensed lengths are deferred (they would just feed the restart shredder).
+fn sensed_park_threshold(pending: &[(SimRequest, usize, usize)]) -> usize {
+    let mut sensed: Vec<usize> = pending.iter().map(|e| e.2).filter(|&x| x > 0).collect();
+    if sensed.len() < 8 {
+        return usize::MAX;
+    }
+    sensed.sort_unstable();
+    sensed[sensed.len() * 3 / 5].max(1)
+}
+
+/// SortedRL modes: the whole workload is one group pool; oversubscribe,
+/// early-terminate when `update_batch` trajectories complete, scavenge or
+/// restart the rest, update, re-feed.
+fn simulate_sorted(mode: SimMode, workload: &[SimRequest], q: usize,
+                   update_batch: usize, cost: CostModel) -> SimReport {
+    let mut eng = SimEngine::new(q, cost);
+    // (request, preserved_progress, sensed_length) — `sensed` is the
+    // controller's online length estimate (max tokens ever generated for
+    // this request, §3.1 "sensing the fine-grained dynamics"); it survives
+    // on-policy restarts even though the tokens themselves are discarded.
+    let mut pending: Vec<(SimRequest, usize, usize)> =
+        workload.iter().map(|r| (*r, 0usize, 0usize)).collect();
+    let mut infer_time = 0.0;
+    let mut update_time = 0.0;
+    let mut wasted: u64 = 0;
+    let mut done = 0usize;
+    let mut harvests = 0usize;
+    let mut clipped = 0usize;
+    let mut dropped = 0usize;
+    let total = workload.len();
+
+    while done < total {
+        // Length-aware priority (§3.1 "sensing the fine-grained dynamics").
+        // The two modes want opposite orders:
+        //  * partial: progress survives interruption, so LONG-sensed
+        //    requests keep their lanes (LRF-style) and the group's final
+        //    wave drains compactly; a quarter of the queue head is
+        //    reserved for never-run prompts (discovery).
+        //  * on-policy: interrupted progress is DISCARDED, so giving lanes
+        //    to requests that cannot finish before the next harvest only
+        //    manufactures waste — schedule shortest-sensed first to
+        //    maximize completions per wave (long ones run last and mostly
+        //    get clipped at group end, the paper's gray bars).
+        let order: Vec<(SimRequest, usize, usize)> = match mode {
+            SimMode::SortedPartial => {
+                pending.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.id.cmp(&b.0.id)));
+                let (runners, fresh): (Vec<_>, Vec<_>) =
+                    pending.drain(..).partition(|e| e.2 > 0);
+                let keep = (q * 3 / 4).min(runners.len());
+                let mut v = Vec::with_capacity(runners.len() + fresh.len());
+                v.extend_from_slice(&runners[..keep]);
+                v.extend(fresh);
+                v.extend_from_slice(&runners[keep..]);
+                v
+            }
+            _ => {
+                // Hard-park sensed-long requests mid-group: admitting a
+                // request that cannot finish before the next harvest only
+                // generates tokens that the on-policy restart will discard.
+                // Parked requests rejoin for the group's final wave (where
+                // they run once and clip).
+                pending.sort_by(|a, b| a.2.cmp(&b.2).then(a.0.id.cmp(&b.0.id)));
+                let final_wave_next = total - done <= 2 * update_batch;
+                if final_wave_next {
+                    pending.drain(..).collect()
+                } else {
+                    // `<=` keeps the threshold value itself runnable; when
+                    // every request has identical sensed progress the run
+                    // set must not be empty (everything would park forever).
+                    let park_at = sensed_park_threshold(&pending);
+                    let (run, park): (Vec<_>, Vec<_>) =
+                        pending.drain(..).partition(|e| e.2 <= park_at);
+                    if run.is_empty() {
+                        park
+                    } else {
+                        pending = park;
+                        run
+                    }
+                }
+            }
+        };
+        // oversubscribe: everything pending goes to the engine queue
+        eng.queue.extend(order.into_iter().map(|(r, p, _)| (r, p)));
+        let mut ready: Vec<SimRequest> = Vec::new();
+        // Partial-mode discovery rotation: preemption preserves progress, so
+        // the controller time-slices the whole pool early in the group to
+        // sense every prompt's length, then commits lanes to the
+        // longest-sensed requests (LRF-style) so the group's long poles run
+        // without interruption.  On-policy mode cannot rotate (preemption
+        // discards tokens), which is why its bubble stays above partial's —
+        // matching the paper's 5.81% vs 3.37% ordering.
+        let rotate_every = 160usize;
+        let discovery_budget = if mode == SimMode::SortedPartial {
+            (total / q).max(1) * rotate_every
+        } else {
+            0
+        };
+        let mut iters = 0usize;
+        // Final sub-batch of the group: instead of riding the drain tail to
+        // occupancy 1 (what kills the baseline, Fig. 1b), the controller
+        // harvests "both completed and partially generated outputs" (§3.1):
+        // once occupancy falls below the batching floor it clips whatever
+        // is still running into the update batch (Fig. 9a's clipped long
+        // answers) and drops never-scheduled prompts (Fig. 2's gray bars).
+        let final_wave = total - done <= update_batch;
+        let occ_floor = (q * 3 / 4).max(1);
+        while !eng.queue.is_empty() || !eng.running.is_empty() {
+            if discovery_budget > 0 {
+                if iters < discovery_budget && iters % rotate_every == 0 && iters > 0 {
+                    eng.rotate();
+                } else if iters == discovery_budget {
+                    eng.rotate();
+                    eng.prioritize_queue_by_progress();
+                }
+            }
+            eng.admit();
+            ready.extend(eng.step());
+            iters += 1;
+            let remaining = total - done - ready.len();
+            let quota = update_batch.min(total - done);
+            // Early-termination threshold (§3.1 "batching-related
+            // thresholds"): on-policy fires once most of the quota has
+            // completed and fills the remainder by clipping the
+            // top-progress runners — waiting for the last few completions
+            // is where discarded-progress waste piles up.  Partial mode
+            // waits for full completions (resume is free).
+            let threshold = match mode {
+                SimMode::SortedOnPolicy => quota * 3 / 4,
+                _ => quota,
+            };
+            if ready.len() >= threshold && remaining > 0 {
+                break; // early termination: harvest threshold reached
+            }
+            if final_wave && eng.queue.is_empty() && eng.running.len() < occ_floor {
+                break; // batching floor: clip the stragglers
+            }
+            if remaining == 0 && eng.running.is_empty() && eng.queue.is_empty() {
+                break;
+            }
+        }
+        // Terminate in-flight; harvest/scavenge per mode.
+        let mut terminated = eng.terminate_all();
+        // highest progress first — clipping candidates
+        terminated.sort_by(|a, b| b.1.cmp(&a.1));
+        let quota = update_batch.min(total - done);
+        for (req, progress) in terminated {
+            let need_clip = ready.len() < quota;
+            match mode {
+                // On-policy harvests "both completed and partially generated
+                // outputs" (§3.1): the highest-progress runners are CLIPPED
+                // into the update batch (their tokens are from the latest
+                // policy, so this stays on-policy — Fig. 9a's clipped long
+                // answers); the rest lose their progress and the prompt
+                // retries (Fig. 2's gray "partially discarded" bars).
+                SimMode::SortedOnPolicy => {
+                    if need_clip && progress > 0 {
+                        let mut clipped_req = req;
+                        clipped_req.output_len = progress;
+                        ready.push(clipped_req);
+                        clipped += 1;
+                    } else if final_wave {
+                        // group end: never-scheduled prompts are dropped
+                        wasted += progress as u64;
+                        dropped += 1;
+                        done += 1;
+                    } else {
+                        wasted += progress as u64;
+                        pending.push((req, 0, progress));
+                    }
+                }
+                // Partial mode never discards: resume mid-group, clip only
+                // at the group's final wave.
+                SimMode::SortedPartial => {
+                    if final_wave {
+                        if progress > 0 {
+                            let mut clipped_req = req;
+                            clipped_req.output_len = progress;
+                            ready.push(clipped_req);
+                            clipped += 1;
+                        } else {
+                            dropped += 1;
+                            done += 1;
+                        }
+                    } else {
+                        pending.push((req, progress, progress));
+                    }
+                }
+                SimMode::Baseline => unreachable!(),
+            }
+        }
+        if ready.is_empty() {
+            break;
+        }
+        done += ready.len();
+        harvests += 1;
+        let (ti, tu) = post_phase_costs(&ready, &cost);
+        infer_time += ti;
+        update_time += tu;
+    }
+
+    let rollout_time = eng.clock;
+    // useful = tokens of trajectories actually harvested (clipping shortens)
+    let useful: u64 = eng.tokens_out - wasted;
+    let bubble = eng.timeline.bubble_ratio(q, eng.clock);
+    SimReport {
+        mode,
+        total_time: rollout_time + infer_time + update_time,
+        rollout_time,
+        update_time,
+        infer_time,
+        useful_tokens: useful,
+        wasted_tokens: wasted,
+        bubble_ratio: bubble,
+        throughput: useful as f64 / rollout_time,
+        timeline: eng.timeline,
+        harvests,
+        clipped,
+        dropped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_workload(n: usize, len: usize) -> Vec<SimRequest> {
+        (0..n)
+            .map(|id| SimRequest { id, prompt_len: 64, output_len: len })
+            .collect()
+    }
+
+    #[test]
+    fn equal_lengths_baseline_has_no_bubble() {
+        let w = uniform_workload(128, 500);
+        let r = simulate(SimMode::Baseline, &w, 128, 128, CostModel::default());
+        assert!(r.bubble_ratio < 0.01, "{}", r.bubble_ratio);
+        assert_eq!(r.useful_tokens, 128 * 500);
+        assert_eq!(r.wasted_tokens, 0);
+    }
+
+    #[test]
+    fn longtail_baseline_has_large_bubble() {
+        let w = longtail_workload(512, 8192, 1);
+        let r = simulate(SimMode::Baseline, &w, 128, 128, CostModel::default());
+        assert!(r.bubble_ratio > 0.4, "expected drain bubbles, got {}", r.bubble_ratio);
+    }
+
+    #[test]
+    fn sorted_modes_cut_bubble_by_more_than_half() {
+        let w = longtail_workload(512, 8192, 1);
+        let base = simulate(SimMode::Baseline, &w, 128, 128, CostModel::default());
+        let onp = simulate(SimMode::SortedOnPolicy, &w, 128, 128, CostModel::default());
+        let part = simulate(SimMode::SortedPartial, &w, 128, 128, CostModel::default());
+        assert!(onp.bubble_ratio < base.bubble_ratio / 2.0,
+                "on-policy {} vs base {}", onp.bubble_ratio, base.bubble_ratio);
+        assert!(part.bubble_ratio < base.bubble_ratio / 2.0,
+                "partial {} vs base {}", part.bubble_ratio, base.bubble_ratio);
+    }
+
+    #[test]
+    fn throughput_order_partial_ge_onpolicy_ge_baseline() {
+        let w = longtail_workload(512, 8192, 2);
+        let base = simulate(SimMode::Baseline, &w, 128, 128, CostModel::default());
+        let onp = simulate(SimMode::SortedOnPolicy, &w, 128, 128, CostModel::default());
+        let part = simulate(SimMode::SortedPartial, &w, 128, 128, CostModel::default());
+        assert!(part.throughput > onp.throughput,
+                "partial {} <= on-policy {}", part.throughput, onp.throughput);
+        assert!(onp.throughput > base.throughput,
+                "on-policy {} <= baseline {}", onp.throughput, base.throughput);
+    }
+
+    #[test]
+    fn on_policy_wastes_tokens_partial_does_not() {
+        let w = longtail_workload(256, 4096, 3);
+        let onp = simulate(SimMode::SortedOnPolicy, &w, 64, 64, CostModel::default());
+        let part = simulate(SimMode::SortedPartial, &w, 64, 64, CostModel::default());
+        assert!(onp.wasted_tokens > 0);
+        assert_eq!(part.wasted_tokens, 0);
+        // and on-policy clips more than partial (Fig. 2's gray bars)
+        assert!(onp.clipped >= part.clipped);
+    }
+
+    #[test]
+    fn all_requests_accounted_exactly_once() {
+        for mode in [SimMode::Baseline, SimMode::SortedOnPolicy, SimMode::SortedPartial] {
+            let w = longtail_workload(200, 2048, 4);
+            let r = simulate(mode, &w, 64, 50, CostModel::default());
+            // natural completions + clipped harvests + dropped == workload
+            assert_eq!(r.timeline.finished() as usize + r.clipped + r.dropped,
+                       200, "{mode:?}");
+            // token conservation: everything generated is useful or wasted
+            assert!(r.useful_tokens > 0);
+            if mode == SimMode::Baseline {
+                assert_eq!(r.useful_tokens,
+                           w.iter().map(|x| x.output_len as u64).sum::<u64>());
+                assert_eq!(r.clipped, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn longtail_workload_is_longtailed() {
+        let w = longtail_workload(2000, 8192, 5);
+        let mut lens: Vec<usize> = w.iter().map(|r| r.output_len).collect();
+        lens.sort_unstable();
+        let median = lens[lens.len() / 2];
+        let p95 = lens[lens.len() * 95 / 100];
+        assert!(p95 > 3 * median, "median {median} p95 {p95}");
+    }
+
+    #[test]
+    fn update_time_scales_with_tokens() {
+        let w = uniform_workload(64, 100);
+        let r = simulate(SimMode::Baseline, &w, 64, 64, CostModel::default());
+        let w2 = uniform_workload(64, 200);
+        let r2 = simulate(SimMode::Baseline, &w2, 64, 64, CostModel::default());
+        assert!(r2.update_time > r.update_time * 1.5);
+    }
+}

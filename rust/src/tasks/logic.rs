@@ -1,0 +1,397 @@
+//! Knights & Knaves puzzle generator + truth-table solver + verifier.
+//!
+//! Mirrors the LogicRL dataset (Xie et al. 2025): n in 3..=7 characters,
+//! each makes exactly one statement; knights always tell the truth, knaves
+//! always lie; exactly one consistent assignment exists.
+//!
+//! The synthetic chain-of-thought enumerates candidate assignments in a
+//! problem-seeded order until the solution is found — so harder puzzles
+//! (and unlucky enumeration orders) produce longer targets, reproducing the
+//! length-difficulty correlation the paper's scheduler exploits.
+
+use super::{parse_format, AnswerKey, Problem, Reward, Task};
+use crate::tokenizer::{
+    Tokenizer, AND, ARROW, BOS, CHECK, COLON, EOS, FALSE_WORD, IFF, KNAVE, KNIGHT,
+    LOGIC, LPAREN, OR, PERSON0, QMARK, RPAREN, SAYS, SEP, SO, THINK_CLOSE,
+    THINK_OPEN, TRUE_WORD, ANS_CLOSE, ANS_OPEN, DIGIT0,
+};
+use crate::util::rng::Pcg64;
+
+/// One statement made by a speaker about other islanders.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Statement {
+    /// "Pj is a knight/knave"
+    Claim { about: usize, knight: bool },
+    /// "Pj and Pk are the same kind"
+    Iff { a: usize, b: usize },
+    /// "Pj is X AND Pk is Y"
+    Both { a: usize, a_knight: bool, b: usize, b_knight: bool },
+    /// "Pj is X OR Pk is Y"
+    Either { a: usize, a_knight: bool, b: usize, b_knight: bool },
+}
+
+impl Statement {
+    /// Truth value of the statement under an assignment (bit i = Pi knight).
+    pub fn eval(&self, assign: u32) -> bool {
+        let knight = |i: usize| assign & (1 << i) != 0;
+        match *self {
+            Statement::Claim { about, knight: k } => knight(about) == k,
+            Statement::Iff { a, b } => knight(a) == knight(b),
+            Statement::Both { a, a_knight, b, b_knight } => {
+                knight(a) == a_knight && knight(b) == b_knight
+            }
+            Statement::Either { a, a_knight, b, b_knight } => {
+                knight(a) == a_knight || knight(b) == b_knight
+            }
+        }
+    }
+}
+
+/// A complete puzzle: person i utters `statements[i]`.
+#[derive(Debug, Clone)]
+pub struct Puzzle {
+    pub n: usize,
+    pub statements: Vec<Statement>,
+}
+
+impl Puzzle {
+    /// An assignment is a model iff every statement's truth value equals its
+    /// speaker's knight-ness.
+    pub fn is_model(&self, assign: u32) -> bool {
+        self.statements.iter().enumerate().all(|(i, s)| {
+            let speaker_knight = assign & (1 << i) != 0;
+            s.eval(assign) == speaker_knight
+        })
+    }
+
+    /// All satisfying assignments (brute force over 2^n).
+    pub fn models(&self) -> Vec<u32> {
+        (0..1u32 << self.n).filter(|&a| self.is_model(a)).collect()
+    }
+}
+
+/// Anyone but the speaker (self-reference makes degenerate puzzles).
+fn other(rng: &mut Pcg64, n: usize, speaker: usize) -> usize {
+    loop {
+        let j = rng.range_usize(0, n);
+        if j != speaker {
+            return j;
+        }
+    }
+}
+
+fn random_statement(rng: &mut Pcg64, n: usize, speaker: usize) -> Statement {
+    match rng.below(4) {
+        0 => Statement::Claim { about: other(rng, n, speaker), knight: rng.bool_with(0.5) },
+        1 => {
+            let a = other(rng, n, speaker);
+            loop {
+                let b = rng.range_usize(0, n);
+                if b != a && b != speaker {
+                    return Statement::Iff { a, b };
+                }
+            }
+        }
+        2 => Statement::Both {
+            a: other(rng, n, speaker),
+            a_knight: rng.bool_with(0.5),
+            b: other(rng, n, speaker),
+            b_knight: rng.bool_with(0.5),
+        },
+        _ => Statement::Either {
+            a: other(rng, n, speaker),
+            a_knight: rng.bool_with(0.5),
+            b: other(rng, n, speaker),
+            b_knight: rng.bool_with(0.5),
+        },
+    }
+}
+
+/// Generate a puzzle with exactly one model.
+pub fn generate_puzzle(rng: &mut Pcg64, n: usize) -> (Puzzle, u32) {
+    loop {
+        let statements = (0..n).map(|i| random_statement(rng, n, i)).collect();
+        let p = Puzzle { n, statements };
+        let models = p.models();
+        if models.len() == 1 {
+            return (p, models[0]);
+        }
+    }
+}
+
+fn statement_tokens(speaker: usize, s: &Statement) -> Vec<i32> {
+    let person = |i: usize| PERSON0 + i as i32;
+    let role = |k: bool| if k { KNIGHT } else { KNAVE };
+    let mut t = vec![person(speaker), SAYS];
+    match *s {
+        Statement::Claim { about, knight } => t.extend([person(about), role(knight)]),
+        Statement::Iff { a, b } => {
+            t.extend([LPAREN, person(a), IFF, person(b), RPAREN])
+        }
+        Statement::Both { a, a_knight, b, b_knight } => t.extend([
+            person(a), role(a_knight), AND, person(b), role(b_knight),
+        ]),
+        Statement::Either { a, a_knight, b, b_knight } => t.extend([
+            person(a), role(a_knight), OR, person(b), role(b_knight),
+        ]),
+    }
+    t
+}
+
+/// `<bos> LOGIC <n> ; stmt ; stmt ; ... ?`
+pub fn prompt_tokens(p: &Puzzle) -> Vec<i32> {
+    let mut t = vec![BOS, LOGIC, DIGIT0 + p.n as i32, SEP];
+    for (i, s) in p.statements.iter().enumerate() {
+        t.extend(statement_tokens(i, s));
+        t.push(SEP);
+    }
+    t.push(QMARK);
+    t
+}
+
+/// `<answer>` body: `P0 : K ; P1 : N ; ...` (no trailing SEP).
+pub fn answer_tokens(n: usize, solution: u32) -> Vec<i32> {
+    let mut t = Vec::new();
+    for i in 0..n {
+        if i > 0 {
+            t.push(SEP);
+        }
+        let role = if solution & (1 << i) != 0 { KNIGHT } else { KNAVE };
+        t.extend([PERSON0 + i as i32, COLON, role]);
+    }
+    t
+}
+
+/// Synthetic CoT: `check r0 r1 .. -> false ;` per tried assignment, ending
+/// with the solution (`-> true`), then `so`.  `max_checks` caps length.
+pub fn cot_tokens(p: &Puzzle, solution: u32, rng: &mut Pcg64, max_checks: usize) -> Vec<i32> {
+    let n = p.n;
+    let mut order: Vec<u32> = (0..1u32 << n).collect();
+    rng.shuffle(&mut order);
+    let sol_idx = order.iter().position(|&a| a == solution).unwrap();
+    let mut tried: Vec<u32> = if sol_idx + 1 <= max_checks {
+        order[..=sol_idx].to_vec()
+    } else {
+        // keep the tail so the trace still ends at the solution
+        let mut v = order[sol_idx + 1 - max_checks..=sol_idx].to_vec();
+        v.dedup();
+        v
+    };
+    // the solution is always the last check
+    debug_assert_eq!(tried.pop(), Some(solution));
+    let mut t = Vec::new();
+    for a in tried {
+        t.push(CHECK);
+        for i in 0..n {
+            t.push(if a & (1 << i) != 0 { KNIGHT } else { KNAVE });
+        }
+        t.extend([ARROW, FALSE_WORD, SEP]);
+    }
+    t.push(CHECK);
+    for i in 0..n {
+        t.push(if solution & (1 << i) != 0 { KNIGHT } else { KNAVE });
+    }
+    t.extend([ARROW, TRUE_WORD, SEP, SO]);
+    t
+}
+
+pub struct LogicTask {
+    /// Cap on enumeration lines in the synthetic CoT (token budget control).
+    pub max_checks: usize,
+}
+
+impl Default for LogicTask {
+    fn default() -> Self {
+        Self { max_checks: 12 }
+    }
+}
+
+impl Task for LogicTask {
+    fn name(&self) -> &'static str {
+        "logic"
+    }
+
+    fn difficulty_range(&self) -> (u32, u32) {
+        (3, 7)
+    }
+
+    fn generate(&self, rng: &mut Pcg64, difficulty: u32, id: u64) -> Problem {
+        let n = difficulty as usize;
+        assert!((3..=7).contains(&n), "difficulty = #characters in 3..=7");
+        let (puzzle, solution) = generate_puzzle(rng, n);
+        let prompt = prompt_tokens(&puzzle);
+        let mut sft = vec![THINK_OPEN];
+        sft.extend(cot_tokens(&puzzle, solution, rng, self.max_checks));
+        sft.push(THINK_CLOSE);
+        sft.push(ANS_OPEN);
+        sft.extend(answer_tokens(n, solution));
+        sft.push(ANS_CLOSE);
+        sft.push(EOS);
+        let answer = (0..n).map(|i| solution & (1 << i) != 0).collect();
+        Problem {
+            id,
+            difficulty,
+            prompt,
+            sft_target: sft,
+            answer: AnswerKey::Logic(answer),
+        }
+    }
+
+    fn verify(&self, problem: &Problem, response: &[i32]) -> Reward {
+        let Some(body) = parse_format(response) else {
+            return Reward::bad_format();
+        };
+        let AnswerKey::Logic(ref want) = problem.answer else {
+            return Reward::bad_format();
+        };
+        match parse_logic_answer(body, want.len()) {
+            Some(got) => Reward::graded(&got == want),
+            None => Reward::bad_format(),
+        }
+    }
+}
+
+/// Parse `P0 : K ; P1 : N ; ...` strictly (persons in order, one role each).
+pub fn parse_logic_answer(body: &[i32], n: usize) -> Option<Vec<bool>> {
+    let mut out = Vec::with_capacity(n);
+    let mut it = body.iter().copied().peekable();
+    for i in 0..n {
+        if i > 0 && it.next()? != SEP {
+            return None;
+        }
+        if it.next()? != PERSON0 + i as i32 {
+            return None;
+        }
+        if it.next()? != COLON {
+            return None;
+        }
+        match it.next()? {
+            t if t == KNIGHT => out.push(true),
+            t if t == KNAVE => out.push(false),
+            _ => return None,
+        }
+    }
+    if it.next().is_some() {
+        return None;
+    }
+    Some(out)
+}
+
+/// Pretty-print a puzzle for docs / debugging.
+pub fn render(p: &Puzzle, tok: &Tokenizer) -> String {
+    tok.decode(&prompt_tokens(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg64 {
+        Pcg64::new(123)
+    }
+
+    #[test]
+    fn generated_puzzles_have_unique_solution() {
+        let mut r = rng();
+        for n in 3..=7 {
+            let (p, sol) = generate_puzzle(&mut r, n);
+            let models = p.models();
+            assert_eq!(models, vec![sol], "n={n}");
+        }
+    }
+
+    #[test]
+    fn statement_eval_matches_semantics() {
+        // P0 says "P1 is a knight" — true iff bit1 set.
+        let s = Statement::Claim { about: 1, knight: true };
+        assert!(s.eval(0b10));
+        assert!(!s.eval(0b00));
+        let iff = Statement::Iff { a: 0, b: 1 };
+        assert!(iff.eval(0b11) && iff.eval(0b00));
+        assert!(!iff.eval(0b01));
+        let both = Statement::Both { a: 0, a_knight: true, b: 1, b_knight: false };
+        assert!(both.eval(0b01));
+        assert!(!both.eval(0b11));
+        let either = Statement::Either { a: 0, a_knight: false, b: 1, b_knight: true };
+        assert!(either.eval(0b10) && either.eval(0b00));
+        assert!(!either.eval(0b01));
+    }
+
+    #[test]
+    fn sft_target_passes_own_verifier() {
+        let task = LogicTask::default();
+        let mut r = rng();
+        for d in 3..=7 {
+            let prob = task.generate(&mut r, d, 0);
+            let reward = task.verify(&prob, &prob.sft_target);
+            assert!(reward.correct && reward.format_ok, "d={d}");
+            assert_eq!(reward.total(), Reward::MAX);
+        }
+    }
+
+    #[test]
+    fn wrong_answer_graded_incorrect() {
+        let task = LogicTask::default();
+        let mut r = rng();
+        let prob = task.generate(&mut r, 3, 0);
+        let AnswerKey::Logic(want) = &prob.answer else { unreachable!() };
+        // flip one role in the answer block
+        let mut resp = prob.sft_target.clone();
+        let pos = resp.iter().rposition(|&t| t == KNIGHT || t == KNAVE).unwrap();
+        resp[pos] = if resp[pos] == KNIGHT { KNAVE } else { KNIGHT };
+        let reward = task.verify(&prob, &resp);
+        assert!(reward.format_ok && !reward.correct);
+        assert!(want.len() == 3);
+    }
+
+    #[test]
+    fn truncated_response_is_bad_format() {
+        let task = LogicTask::default();
+        let mut r = rng();
+        let prob = task.generate(&mut r, 4, 0);
+        let cut = prob.sft_target.len() / 2;
+        let reward = task.verify(&prob, &prob.sft_target[..cut]);
+        assert!(!reward.format_ok);
+        assert_eq!(reward.total(), -1.0);
+    }
+
+    #[test]
+    fn cot_length_grows_with_difficulty() {
+        let task = LogicTask { max_checks: 64 };
+        let mut r = rng();
+        let avg_len = |d: u32, r: &mut Pcg64| -> f64 {
+            (0..30)
+                .map(|i| task.generate(r, d, i).sft_target.len())
+                .sum::<usize>() as f64
+                / 30.0
+        };
+        let l3 = avg_len(3, &mut r);
+        let l7 = avg_len(7, &mut r);
+        assert!(l7 > l3 * 1.5, "expected length growth: {l3} vs {l7}");
+    }
+
+    #[test]
+    fn parse_logic_answer_strictness() {
+        let good = answer_tokens(3, 0b101);
+        assert_eq!(parse_logic_answer(&good, 3), Some(vec![true, false, true]));
+        // wrong person order
+        let mut bad = good.clone();
+        bad.swap(0, 4);
+        assert_eq!(parse_logic_answer(&bad, 3), None);
+        // trailing garbage
+        let mut trail = good.clone();
+        trail.push(SEP);
+        assert_eq!(parse_logic_answer(&trail, 3), None);
+        // too few
+        assert_eq!(parse_logic_answer(&good, 4), None);
+    }
+
+    #[test]
+    fn prompt_round_trips_through_tokenizer() {
+        let tok = Tokenizer::new();
+        let mut r = rng();
+        let (p, _) = generate_puzzle(&mut r, 5);
+        let text = render(&p, &tok);
+        assert_eq!(tok.encode(&text).unwrap(), prompt_tokens(&p));
+    }
+}

@@ -1,0 +1,260 @@
+//! Arithmetic-chain task: the DAPO-Math-17k stand-in (§4.1).
+//!
+//! A problem is a depth-`d` left-nested integer expression; the answer is
+//! always an integer (the paper's dataset is transformed the same way "for
+//! easy and precise verification").  Difficulty = depth, which linearly
+//! controls the natural chain-of-thought length (one `step` line per op).
+
+use super::{parse_format, AnswerKey, Problem, Reward, Task};
+use crate::tokenizer::{
+    Tokenizer, ANS_CLOSE, ANS_OPEN, BOS, EOS, EQUALS, LPAREN, MATH, MINUS, PLUS,
+    QMARK, RPAREN, SEP, SLASH, STAR, STEP, THINK_CLOSE, THINK_OPEN,
+};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl Op {
+    pub fn token(self) -> i32 {
+        match self {
+            Op::Add => PLUS,
+            Op::Sub => MINUS,
+            Op::Mul => STAR,
+            Op::Div => SLASH,
+        }
+    }
+
+    pub fn apply(self, a: i64, b: i64) -> i64 {
+        match self {
+            Op::Add => a + b,
+            Op::Sub => a - b,
+            Op::Mul => a * b,
+            Op::Div => a / b,
+        }
+    }
+}
+
+/// Left-nested chain: (((v0 op1 c1) op2 c2) ... op_d c_d).
+#[derive(Debug, Clone)]
+pub struct Chain {
+    pub start: i64,
+    pub steps: Vec<(Op, i64)>,
+}
+
+impl Chain {
+    pub fn value(&self) -> i64 {
+        self.steps.iter().fold(self.start, |acc, (op, c)| op.apply(acc, *c))
+    }
+
+    /// Intermediate values after each step.
+    pub fn intermediates(&self) -> Vec<i64> {
+        let mut acc = self.start;
+        self.steps
+            .iter()
+            .map(|(op, c)| {
+                acc = op.apply(acc, *c);
+                acc
+            })
+            .collect()
+    }
+}
+
+/// Generate a chain whose intermediates stay in [-999, 999].
+pub fn generate_chain(rng: &mut Pcg64, depth: usize) -> Chain {
+    loop {
+        let start = rng.range_i64(-9, 10);
+        let mut acc = start;
+        let mut steps = Vec::with_capacity(depth);
+        for _ in 0..depth {
+            // pick an op that keeps the value bounded (and division exact)
+            for _attempt in 0..20 {
+                let op = match rng.below(8) {
+                    0 | 1 | 2 => Op::Add,
+                    3 | 4 | 5 => Op::Sub,
+                    6 => Op::Mul,
+                    _ => Op::Div,
+                };
+                let c = rng.range_i64(1, 10);
+                if op == Op::Div && acc % c != 0 {
+                    continue;
+                }
+                let next = op.apply(acc, c);
+                if next.abs() <= 999 {
+                    acc = next;
+                    steps.push((op, c));
+                    break;
+                }
+            }
+        }
+        // a failed step leaves the chain short — retry the whole chain
+        if steps.len() == depth {
+            return Chain { start, steps };
+        }
+    }
+}
+
+/// `<bos> MATH ( ( v0 op c1 ) op c2 ) ... = ?`
+pub fn prompt_tokens(chain: &Chain, tok: &Tokenizer) -> Vec<i32> {
+    let d = chain.steps.len();
+    let mut t = vec![BOS, MATH];
+    for _ in 0..d {
+        t.push(LPAREN);
+    }
+    t.extend(tok.encode_int(chain.start));
+    for (op, c) in &chain.steps {
+        t.push(op.token());
+        t.extend(tok.encode_int(*c));
+        t.push(RPAREN);
+    }
+    t.extend([EQUALS, QMARK]);
+    t
+}
+
+/// CoT: `step a op c = r ;` per step.
+pub fn cot_tokens(chain: &Chain, tok: &Tokenizer) -> Vec<i32> {
+    let mut t = Vec::new();
+    let mut acc = chain.start;
+    for (op, c) in &chain.steps {
+        let r = op.apply(acc, *c);
+        t.push(STEP);
+        t.extend(tok.encode_int(acc));
+        t.push(op.token());
+        t.extend(tok.encode_int(*c));
+        t.push(EQUALS);
+        t.extend(tok.encode_int(r));
+        t.push(SEP);
+        acc = r;
+    }
+    t
+}
+
+pub struct MathTask;
+
+impl Task for MathTask {
+    fn name(&self) -> &'static str {
+        "math"
+    }
+
+    fn difficulty_range(&self) -> (u32, u32) {
+        (2, 8)
+    }
+
+    fn generate(&self, rng: &mut Pcg64, difficulty: u32, id: u64) -> Problem {
+        let tok = Tokenizer::new();
+        let chain = generate_chain(rng, difficulty as usize);
+        let prompt = prompt_tokens(&chain, &tok);
+        let mut sft = vec![THINK_OPEN];
+        sft.extend(cot_tokens(&chain, &tok));
+        sft.push(THINK_CLOSE);
+        sft.push(ANS_OPEN);
+        sft.extend(tok.encode_int(chain.value()));
+        sft.push(ANS_CLOSE);
+        sft.push(EOS);
+        Problem {
+            id,
+            difficulty,
+            prompt,
+            sft_target: sft,
+            answer: AnswerKey::Math(chain.value()),
+        }
+    }
+
+    fn verify(&self, problem: &Problem, response: &[i32]) -> Reward {
+        let Some(body) = parse_format(response) else {
+            return Reward::bad_format();
+        };
+        let AnswerKey::Math(want) = problem.answer else {
+            return Reward::bad_format();
+        };
+        let tok = Tokenizer::new();
+        match tok.decode_int(body) {
+            Some(got) => Reward::graded(got == want),
+            None => Reward::bad_format(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_value_matches_intermediates() {
+        let c = Chain { start: 3, steps: vec![(Op::Add, 5), (Op::Mul, 2), (Op::Sub, 4)] };
+        assert_eq!(c.intermediates(), vec![8, 16, 12]);
+        assert_eq!(c.value(), 12);
+    }
+
+    #[test]
+    fn generated_chains_bounded_and_exact_division() {
+        let mut r = Pcg64::new(7);
+        for d in 2..=8 {
+            let c = generate_chain(&mut r, d);
+            assert_eq!(c.steps.len(), d);
+            let mut acc = c.start;
+            for &(op, k) in &c.steps {
+                if op == Op::Div {
+                    assert_eq!(acc % k, 0, "non-exact division generated");
+                }
+                acc = op.apply(acc, k);
+                assert!(acc.abs() <= 999);
+            }
+        }
+    }
+
+    #[test]
+    fn sft_target_passes_own_verifier() {
+        let task = MathTask;
+        let mut r = Pcg64::new(11);
+        for d in 2..=8 {
+            let prob = task.generate(&mut r, d, 0);
+            let reward = task.verify(&prob, &prob.sft_target);
+            assert!(reward.correct, "d={d}");
+        }
+    }
+
+    #[test]
+    fn wrong_integer_graded_incorrect() {
+        let task = MathTask;
+        let mut r = Pcg64::new(13);
+        let prob = task.generate(&mut r, 3, 0);
+        let tok = Tokenizer::new();
+        let AnswerKey::Math(v) = prob.answer else { unreachable!() };
+        let mut resp = vec![THINK_OPEN, THINK_CLOSE, ANS_OPEN];
+        resp.extend(tok.encode_int(v + 1));
+        resp.extend([ANS_CLOSE, EOS]);
+        let reward = task.verify(&prob, &resp);
+        assert!(reward.format_ok && !reward.correct);
+    }
+
+    #[test]
+    fn cot_length_linear_in_depth() {
+        let task = MathTask;
+        let mut r = Pcg64::new(17);
+        let len = |d: u32, r: &mut Pcg64| -> f64 {
+            (0..40)
+                .map(|i| task.generate(r, d, i).sft_target.len())
+                .sum::<usize>() as f64
+                / 40.0
+        };
+        let l2 = len(2, &mut r);
+        let l8 = len(8, &mut r);
+        assert!(l8 > l2 * 2.0, "{l2} vs {l8}");
+    }
+
+    #[test]
+    fn prompt_decodes_to_valid_expression() {
+        let tok = Tokenizer::new();
+        let mut r = Pcg64::new(19);
+        let c = generate_chain(&mut r, 4);
+        let text = tok.decode(&prompt_tokens(&c, &tok));
+        assert!(text.starts_with("<bos> MATH ( ( ( ("));
+        assert!(text.ends_with("= ?"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Rule-verifiable task substrates.
+//!
+//! Two task families mirror the paper's two datasets (§4.1):
+//!   * [`logic`] — Knights & Knaves puzzles (LogicRL stand-in), difficulty
+//!     3..=7 characters, generated with a truth-table solver so every
+//!     puzzle has a unique solution.
+//!   * [`math`]  — integer arithmetic chains (DAPO-Math stand-in),
+//!     difficulty = expression depth, integer answers.
+//!
+//! Both emit prompts in the shared symbolic vocabulary and verify responses
+//! with rule-based rewards (format + correctness), the same outcome-reward
+//! setup the paper trains with.
+
+pub mod logic;
+pub mod math;
+
+use crate::util::rng::Pcg64;
+
+/// A generated problem instance.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub id: u64,
+    pub difficulty: u32,
+    /// `<bos> ... ?` — what the rollout engine is fed.
+    pub prompt: Vec<i32>,
+    /// `<think> ... </think> <answer> ... </answer> <eos>` — supervised
+    /// warm-start target (stands in for starting from an instruct model).
+    pub sft_target: Vec<i32>,
+    pub answer: AnswerKey,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnswerKey {
+    /// Role of each person (true = knight).
+    Logic(Vec<bool>),
+    Math(i64),
+}
+
+/// Reward decomposition (Logic-RL-style shaping).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reward {
+    pub format: f64,
+    pub answer: f64,
+    pub format_ok: bool,
+    pub correct: bool,
+}
+
+impl Reward {
+    pub fn total(&self) -> f64 {
+        self.format + self.answer
+    }
+
+    pub fn bad_format() -> Self {
+        Reward { format: -1.0, answer: 0.0, format_ok: false, correct: false }
+    }
+
+    pub fn graded(correct: bool) -> Self {
+        Reward {
+            format: 1.0,
+            answer: if correct { 2.0 } else { -1.5 },
+            format_ok: true,
+            correct,
+        }
+    }
+
+    /// Maximum achievable total (for normalizing validation scores).
+    pub const MAX: f64 = 3.0;
+}
+
+pub trait Task: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Inclusive difficulty range this task generates.
+    fn difficulty_range(&self) -> (u32, u32);
+
+    /// Generate one problem at the given difficulty.
+    fn generate(&self, rng: &mut Pcg64, difficulty: u32, id: u64) -> Problem;
+
+    /// Grade a generated response (response tokens only, prompt excluded).
+    fn verify(&self, problem: &Problem, response: &[i32]) -> Reward;
+
+    /// Generate at a difficulty sampled uniformly from the task's range.
+    fn generate_any(&self, rng: &mut Pcg64, id: u64) -> Problem {
+        let (lo, hi) = self.difficulty_range();
+        let d = rng.range_i64(lo as i64, hi as i64 + 1) as u32;
+        self.generate(rng, d, id)
+    }
+}
+
+/// Shared format check: `<think> ... </think> <answer> BODY </answer> <eos>?`
+/// Returns the answer body on success.  The trailing EOS is optional because
+/// harvest-at-cap can clip it — correctness should not depend on the clip.
+pub fn parse_format(response: &[i32]) -> Option<&[i32]> {
+    use crate::tokenizer::{ANS_CLOSE, ANS_OPEN, EOS, PAD, THINK_CLOSE, THINK_OPEN};
+    // strip trailing PAD / EOS
+    let mut end = response.len();
+    while end > 0 && (response[end - 1] == PAD || response[end - 1] == EOS) {
+        end -= 1;
+    }
+    let r = &response[..end];
+    if r.first() != Some(&THINK_OPEN) {
+        return None;
+    }
+    let tc = r.iter().position(|&t| t == THINK_CLOSE)?;
+    let ao = tc + r[tc..].iter().position(|&t| t == ANS_OPEN)?;
+    let ac = ao + r[ao..].iter().position(|&t| t == ANS_CLOSE)?;
+    // nothing after </answer>
+    if ac + 1 != r.len() {
+        return None;
+    }
+    // no stray structural tokens inside the answer body
+    let body = &r[ao + 1..ac];
+    if body.iter().any(|&t| {
+        t == THINK_OPEN || t == THINK_CLOSE || t == ANS_OPEN || t == ANS_CLOSE
+    }) {
+        return None;
+    }
+    Some(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::*;
+
+    #[test]
+    fn parse_format_happy_path() {
+        let r = [THINK_OPEN, CHECK, THINK_CLOSE, ANS_OPEN, DIGIT0 + 4, ANS_CLOSE, EOS];
+        assert_eq!(parse_format(&r), Some(&r[4..5]));
+    }
+
+    #[test]
+    fn parse_format_allows_missing_eos() {
+        let r = [THINK_OPEN, THINK_CLOSE, ANS_OPEN, DIGIT0, ANS_CLOSE];
+        assert!(parse_format(&r).is_some());
+    }
+
+    #[test]
+    fn parse_format_rejects_missing_think() {
+        let r = [ANS_OPEN, DIGIT0, ANS_CLOSE, EOS];
+        assert!(parse_format(&r).is_none());
+    }
+
+    #[test]
+    fn parse_format_rejects_trailing_tokens() {
+        let r = [THINK_OPEN, THINK_CLOSE, ANS_OPEN, DIGIT0, ANS_CLOSE, CHECK, EOS];
+        assert!(parse_format(&r).is_none());
+    }
+
+    #[test]
+    fn parse_format_rejects_nested_markers() {
+        let r = [THINK_OPEN, THINK_CLOSE, ANS_OPEN, ANS_OPEN, ANS_CLOSE, EOS];
+        assert!(parse_format(&r).is_none());
+    }
+
+    #[test]
+    fn reward_totals() {
+        assert_eq!(Reward::bad_format().total(), -1.0);
+        assert_eq!(Reward::graded(true).total(), 3.0);
+        assert_eq!(Reward::graded(false).total(), -0.5);
+        assert_eq!(Reward::graded(true).total(), Reward::MAX);
+    }
+}

@@ -1,0 +1,231 @@
+//! Symbolic tokenizer shared by the logic and math tasks.
+//!
+//! The vocabulary MUST match `python/compile/configs.py::VOCAB` (index ==
+//! token id); the AOT manifest embeds the python copy and
+//! [`Tokenizer::assert_matches_manifest`] fails fast on drift.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3; // ";"
+pub const THINK_OPEN: i32 = 4;
+pub const THINK_CLOSE: i32 = 5;
+pub const ANS_OPEN: i32 = 6;
+pub const ANS_CLOSE: i32 = 7;
+
+/// Token ids for the digits 0..=9 are `DIGIT0 + d`.
+pub const DIGIT0: i32 = 8;
+pub const PLUS: i32 = 18;
+pub const MINUS: i32 = 19;
+pub const STAR: i32 = 20;
+pub const SLASH: i32 = 21;
+pub const LPAREN: i32 = 22;
+pub const RPAREN: i32 = 23;
+pub const EQUALS: i32 = 24;
+pub const KNIGHT: i32 = 25; // "K"
+pub const KNAVE: i32 = 26; // "N"
+pub const AND: i32 = 27;
+pub const OR: i32 = 28;
+pub const NOT: i32 = 29;
+pub const IFF: i32 = 30; // "<=>"
+pub const COLON: i32 = 31;
+pub const SAYS: i32 = 32;
+/// Person tokens are `PERSON0 + i` for i in 0..10.
+pub const PERSON0: i32 = 33;
+pub const LOGIC: i32 = 43;
+pub const MATH: i32 = 44;
+pub const COMMA: i32 = 45;
+pub const QMARK: i32 = 46;
+pub const STEP: i32 = 47;
+pub const ARROW: i32 = 48; // "->"
+pub const SO: i32 = 49;
+pub const IF: i32 = 50;
+pub const THEN: i32 = 51;
+pub const NOT_WORD: i32 = 52;
+pub const TRUE_WORD: i32 = 53;
+pub const FALSE_WORD: i32 = 54;
+pub const CHECK: i32 = 55;
+pub const BY: i32 = 56;
+
+pub const VOCAB: [&str; 64] = [
+    "<pad>", "<bos>", "<eos>", ";", "<think>", "</think>", "<answer>", "</answer>",
+    "0", "1", "2", "3", "4", "5", "6", "7", "8", "9",
+    "+", "-", "*", "/", "(", ")", "=",
+    "K", "N", "&", "|", "!", "<=>", ":", "says",
+    "P0", "P1", "P2", "P3", "P4", "P5", "P6", "P7", "P8", "P9",
+    "LOGIC", "MATH", ",", "?", "step", "->",
+    "so", "if", "then", "not", "true", "false", "check", "by",
+    "<r0>", "<r1>", "<r2>", "<r3>", "<r4>", "<r5>", "<r6>",
+];
+
+pub const VOCAB_SIZE: usize = VOCAB.len();
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    lookup: HashMap<&'static str, i32>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let lookup = VOCAB
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (*s, i as i32))
+            .collect();
+        Self { lookup }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    /// Encode a whitespace-separated symbolic string.
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>, String> {
+        text.split_whitespace()
+            .map(|w| {
+                self.lookup
+                    .get(w)
+                    .copied()
+                    .ok_or_else(|| format!("unknown token {w:?}"))
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&id| self.token_str(id))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn token_str(&self, id: i32) -> &'static str {
+        VOCAB.get(id as usize).copied().unwrap_or("<?>")
+    }
+
+    /// Encode a (possibly negative, multi-digit) integer as digit tokens.
+    pub fn encode_int(&self, value: i64) -> Vec<i32> {
+        let mut out = Vec::new();
+        if value < 0 {
+            out.push(MINUS);
+        }
+        let digits = value.unsigned_abs().to_string();
+        for c in digits.bytes() {
+            out.push(DIGIT0 + (c - b'0') as i32);
+        }
+        out
+    }
+
+    /// Parse digit tokens (optionally led by MINUS) back into an integer.
+    /// Returns None on any non-digit token or empty input.
+    pub fn decode_int(&self, ids: &[i32]) -> Option<i64> {
+        let (neg, rest) = match ids.split_first() {
+            Some((&MINUS, rest)) => (true, rest),
+            _ => (false, ids),
+        };
+        if rest.is_empty() || rest.len() > 10 {
+            return None;
+        }
+        let mut v: i64 = 0;
+        for &id in rest {
+            if !(DIGIT0..DIGIT0 + 10).contains(&id) {
+                return None;
+            }
+            v = v * 10 + (id - DIGIT0) as i64;
+        }
+        Some(if neg { -v } else { v })
+    }
+
+    pub fn person(&self, idx: usize) -> i32 {
+        assert!(idx < 10);
+        PERSON0 + idx as i32
+    }
+
+    /// Fail fast if the manifest's embedded vocabulary drifted from ours.
+    pub fn assert_matches_manifest(&self, manifest_vocab: &[String]) -> Result<(), String> {
+        if manifest_vocab.len() != VOCAB.len() {
+            return Err(format!(
+                "vocab size mismatch: manifest {} vs rust {}",
+                manifest_vocab.len(),
+                VOCAB.len()
+            ));
+        }
+        for (i, (m, r)) in manifest_vocab.iter().zip(VOCAB.iter()).enumerate() {
+            if m != r {
+                return Err(format!("vocab[{i}] mismatch: manifest {m:?} vs rust {r:?}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Find the token span strictly between `open` and `close` markers.
+/// Returns None if either marker is missing or out of order.
+pub fn span_between(ids: &[i32], open: i32, close: i32) -> Option<&[i32]> {
+    let start = ids.iter().position(|&t| t == open)? + 1;
+    let end = start + ids[start..].iter().position(|&t| t == close)?;
+    Some(&ids[start..end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let tok = Tokenizer::new();
+        let text = "<bos> LOGIC 3 ; P0 says P1 K ; ?";
+        let ids = tok.encode(text).unwrap();
+        assert_eq!(tok.decode(&ids), text);
+    }
+
+    #[test]
+    fn unknown_token_errors() {
+        let tok = Tokenizer::new();
+        assert!(tok.encode("hello world").is_err());
+    }
+
+    #[test]
+    fn int_round_trip() {
+        let tok = Tokenizer::new();
+        for v in [-99, -7, 0, 5, 42, 12345] {
+            let ids = tok.encode_int(v);
+            assert_eq!(tok.decode_int(&ids), Some(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn decode_int_rejects_garbage() {
+        let tok = Tokenizer::new();
+        assert_eq!(tok.decode_int(&[]), None);
+        assert_eq!(tok.decode_int(&[MINUS]), None);
+        assert_eq!(tok.decode_int(&[KNIGHT]), None);
+        assert_eq!(tok.decode_int(&[DIGIT0, SAYS]), None);
+    }
+
+    #[test]
+    fn span_between_basic() {
+        let ids = [BOS, ANS_OPEN, DIGIT0 + 4, DIGIT0 + 2, ANS_CLOSE, EOS];
+        assert_eq!(span_between(&ids, ANS_OPEN, ANS_CLOSE), Some(&ids[2..4]));
+        assert_eq!(span_between(&ids, THINK_OPEN, THINK_CLOSE), None);
+    }
+
+    #[test]
+    fn vocab_ids_match_constants() {
+        assert_eq!(VOCAB[PAD as usize], "<pad>");
+        assert_eq!(VOCAB[IFF as usize], "<=>");
+        assert_eq!(VOCAB[SAYS as usize], "says");
+        assert_eq!(VOCAB[PERSON0 as usize], "P0");
+        assert_eq!(VOCAB[LOGIC as usize], "LOGIC");
+        assert_eq!(VOCAB[MATH as usize], "MATH");
+        assert_eq!(VOCAB[BY as usize], "by");
+        assert_eq!(VOCAB_SIZE, 64);
+    }
+}

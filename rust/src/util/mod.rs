@@ -1,0 +1,23 @@
+//! In-repo substrates that would normally come from crates.io (the build is
+//! fully offline): PRNG streams, JSON, statistics, a property-test harness.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wall-clock helper for the real (non-simulated) pipeline.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+/// Format a f64 seconds value compactly for harness output.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}

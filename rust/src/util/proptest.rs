@@ -1,0 +1,111 @@
+//! A small property-testing harness (the `proptest` crate is unavailable
+//! offline).  Seeded, iterated, with failure-case reporting; generators are
+//! plain closures over [`Pcg64`].
+//!
+//! ```no_run
+//! use sortedrl::util::proptest::{property, Gen};
+//! property("reverse twice is identity", 200, |g| {
+//!     let v = g.vec(0..50, |g| g.rng.range_i64(-100, 100));
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::rng::Pcg64;
+use std::ops::Range;
+
+/// Generator context handed to each property iteration.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub iteration: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        self.rng.range_usize(r.start, r.end)
+    }
+
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        self.rng.range_i64(r.start, r.end)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool_with(0.5)
+    }
+
+    pub fn vec<T>(&mut self, len: Range<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len() as u64) as usize;
+        &xs[i]
+    }
+}
+
+/// Run `body` for `iters` seeded iterations; panics (with the failing seed)
+/// on the first assertion failure so `cargo test` reports it.
+pub fn property(name: &str, iters: usize, mut body: impl FnMut(&mut Gen)) {
+    let base_seed = 0x5EED_0000u64 ^ fxhash(name);
+    for i in 0..iters {
+        let mut g = Gen { rng: Pcg64::with_stream(base_seed, i as u64 + 1), iteration: i };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at iteration {i} (seed base {base_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        property("addition commutes", 100, |g| {
+            let a = g.i64_in(-1000..1000);
+            let b = g.i64_in(-1000..1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure_with_iteration() {
+        property("always fails", 10, |g| {
+            assert!(g.i64_in(0..10) > 100);
+        });
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        let mut seen = Vec::new();
+        property("det", 5, |g| seen.push(g.rng.next_u64()));
+        let mut seen2 = Vec::new();
+        property("det", 5, |g| seen2.push(g.rng.next_u64()));
+        assert_eq!(seen, seen2);
+    }
+}

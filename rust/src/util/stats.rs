@@ -1,0 +1,165 @@
+//! Small statistics helpers used by metrics, the simulator and the
+//! experiment harnesses (quantiles, histograms, online mean/variance).
+
+/// Online mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Running {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Population mean/std over a slice (used for advantage normalization —
+/// Reinforce++ Eq. 3 normalizes by the *batch* statistics).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Quantile with linear interpolation; `q` in [0, 1]. Sorts a copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Fixed-width histogram over [lo, hi); values outside clamp to edge bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        Self { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fraction of samples at or below the right edge of each bin (CDF).
+    pub fn cdf(&self) -> Vec<f64> {
+        let total = self.total().max(1) as f64;
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .map(|c| {
+                acc += c;
+                acc as f64 / total
+            })
+            .collect()
+    }
+
+    /// Render as a compact ASCII bar chart (for harness stdout).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let bins = self.counts.len();
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let l = self.lo + (self.hi - self.lo) * i as f64 / bins as f64;
+            let r = self.lo + (self.hi - self.lo) * (i + 1) as f64 / bins as f64;
+            let bar = "#".repeat((c as usize * width).div_ceil(max as usize).min(width));
+            out.push_str(&format!("{l:>8.0}-{r:<8.0} |{bar:<width$}| {c}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut r = Running::default();
+        for x in xs {
+            r.push(x);
+        }
+        assert!((r.mean() - 4.0).abs() < 1e-12);
+        let direct_var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((r.variance() - direct_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_cdf() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        for x in [0.5, 1.5, 2.5, 9.5, 11.0, -1.0] {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.counts[0], 3); // 0.5, 1.5, clamped -1.0
+        assert_eq!(h.counts[1], 1); // 2.5
+        assert_eq!(h.counts[4], 2); // 9.5 and clamped 11.0
+        let cdf = h.cdf();
+        assert!((cdf[4] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std_empty() {
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+}

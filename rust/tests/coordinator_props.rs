@@ -1,0 +1,229 @@
+//! Property tests over the coordinator state machine and simulator —
+//! randomized sequences of buffer operations and workloads must preserve
+//! the paper-level invariants regardless of scheduling interleaving.
+//! (In-repo property harness; the proptest crate is unavailable offline.)
+
+use sortedrl::coordinator::{Lifecycle, Mode, RolloutBuffer};
+use sortedrl::rollout::{Request, Rollout};
+use sortedrl::sim::{longtail_workload, simulate, CostModel, SimMode};
+use sortedrl::util::proptest::{property, Gen};
+
+fn mk_rollout(req: &Request, n_tok: usize, complete: bool, at: f64) -> Rollout {
+    let mut response = req.resumed.clone();
+    let mut logp = req.resumed_logp.clone();
+    for i in 0..n_tok {
+        response.push(10 + (i % 20) as i32);
+        logp.push(-0.3 - i as f32 * 0.01);
+    }
+    Rollout {
+        request: req.clone(),
+        response,
+        logp,
+        finish_version: req.born_version.unwrap_or(0) + 1,
+        complete,
+        finished_at: at,
+    }
+}
+
+/// Random dispatch/finish/terminate/consume churn never violates buffer
+/// invariants, and every trajectory's log-probs stay aligned.
+#[test]
+fn buffer_invariants_under_random_churn() {
+    property("buffer churn", 200, |g: &mut Gen| {
+        let mut buf = RolloutBuffer::new();
+        let n = g.usize_in(1..24);
+        let max_new = 32;
+        let rids: Vec<u64> = (0..n)
+            .map(|i| buf.load_prompt(i, i as u64, vec![1, 2, 3], max_new))
+            .collect();
+        let mode = if g.bool() { Mode::OnPolicy } else { Mode::Partial };
+        let mut clock = 0.0;
+        for _round in 0..g.usize_in(1..6) {
+            let schedulable = buf.schedulable();
+            if schedulable.is_empty() {
+                break;
+            }
+            let take = g.usize_in(1..schedulable.len() + 1);
+            let reqs = buf.dispatch(&schedulable[..take]);
+            for req in &reqs {
+                clock += 0.25;
+                let remaining = max_new - req.resumed.len();
+                if remaining == 0 {
+                    // nothing left to generate: must finish
+                    buf.record_finished(&mk_rollout(req, 0, true, clock));
+                    continue;
+                }
+                match g.usize_in(0..3) {
+                    0 => {
+                        let k = g.usize_in(1..remaining + 1);
+                        buf.record_finished(&mk_rollout(req, k, true, clock));
+                    }
+                    1 => {
+                        let k = g.usize_in(0..remaining);
+                        buf.record_terminated(&mk_rollout(req, k, false, clock), mode);
+                    }
+                    _ => buf.record_requeued(req.rid),
+                }
+            }
+            buf.check_invariants().unwrap();
+            // consume some ready
+            let ready = buf.ready_rids();
+            if !ready.is_empty() {
+                let k = g.usize_in(1..ready.len() + 1);
+                let entries = buf.consume(&ready[..k]);
+                for e in &entries {
+                    assert_eq!(e.partial.len(), e.partial_logp.len());
+                    assert!(e.complete || e.clipped);
+                }
+            }
+            buf.check_invariants().unwrap();
+        }
+        // ready ordering is completion order (finished_at ascending)
+        let ready = buf.ready_rids();
+        let times: Vec<f64> = ready
+            .iter()
+            .map(|r| buf.get(*r).unwrap().finished_at)
+            .collect();
+        for w in times.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        let _ = rids;
+    });
+}
+
+/// On-policy termination always clears partials and resets born_version;
+/// partial termination preserves exactly the generated prefix + log-probs.
+#[test]
+fn termination_mode_semantics() {
+    property("termination semantics", 200, |g: &mut Gen| {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 1, vec![1, 2], 64);
+        let reqs = buf.dispatch(&[rid]);
+        let k = g.usize_in(1..40);
+        let r = mk_rollout(&reqs[0], k, false, 1.0);
+        if g.bool() {
+            buf.record_terminated(&r, Mode::OnPolicy);
+            let e = buf.get(rid).unwrap();
+            assert!(e.partial.is_empty());
+            assert_eq!(e.born_version, None);
+        } else {
+            buf.record_terminated(&r, Mode::Partial);
+            let e = buf.get(rid).unwrap();
+            assert_eq!(e.partial.len(), k);
+            assert_eq!(e.partial_logp.len(), k);
+            assert_eq!(e.partial, r.response);
+        }
+        let e = buf.get(rid).unwrap();
+        assert_eq!(e.lifecycle, Lifecycle::Scavenged);
+        assert_eq!(e.resumes, 1);
+    });
+}
+
+/// Resume composition: repeated partial terminations concatenate prefixes
+/// without loss (π_old continuity — Eq. 1's requirement).
+#[test]
+fn partial_resume_concatenates_logps() {
+    property("resume concatenation", 100, |g: &mut Gen| {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 1, vec![1, 2], 256);
+        let mut expected_tokens: Vec<i32> = Vec::new();
+        let mut expected_logp: Vec<f32> = Vec::new();
+        let rounds = g.usize_in(1..5);
+        for round in 0..rounds {
+            let reqs = buf.dispatch(&[rid]);
+            assert_eq!(reqs[0].resumed, expected_tokens);
+            assert_eq!(reqs[0].resumed_logp, expected_logp);
+            let k = g.usize_in(1..20);
+            let r = mk_rollout(&reqs[0], k, round == rounds - 1, round as f64);
+            expected_tokens = r.response.clone();
+            expected_logp = r.logp.clone();
+            if round == rounds - 1 {
+                buf.record_finished(&r);
+            } else {
+                buf.record_terminated(&r, Mode::Partial);
+            }
+        }
+        let e = buf.get(rid).unwrap();
+        assert_eq!(e.partial, expected_tokens);
+        assert_eq!(e.partial_logp, expected_logp);
+        assert_eq!(e.lifecycle, Lifecycle::Ready);
+    });
+}
+
+/// Simulator conservation: under any (n, cap, q, u) every request is
+/// accounted exactly once and bubble ratio stays in [0, 1].
+#[test]
+fn sim_conservation_under_random_configs() {
+    property("sim conservation", 40, |g: &mut Gen| {
+        let n = g.usize_in(16..256);
+        let cap = *g.pick(&[512usize, 1024, 4096]);
+        let q = *g.pick(&[8usize, 32, 128]);
+        let u = g.usize_in(4..n + 1);
+        let seed = g.rng.next_u64();
+        let w = longtail_workload(n, cap, seed);
+        for mode in [SimMode::Baseline, SimMode::SortedOnPolicy, SimMode::SortedPartial] {
+            let r = simulate(mode, &w, q, u, CostModel::default());
+            assert_eq!(
+                r.timeline.finished() as usize + r.clipped + r.dropped,
+                n,
+                "{mode:?} n={n} q={q} u={u} seed={seed}"
+            );
+            assert!(r.bubble_ratio >= 0.0 && r.bubble_ratio <= 1.0);
+            assert!(r.rollout_time > 0.0);
+            assert!(r.useful_tokens > 0);
+            if mode == SimMode::SortedPartial {
+                assert_eq!(r.wasted_tokens, 0, "partial never wastes");
+            }
+        }
+    });
+}
+
+/// The sorted schedulers never lose to baseline on bubble ratio across
+/// random long-tailed workloads (the paper's headline claim).
+#[test]
+fn sorted_always_improves_bubble() {
+    property("bubble dominance", 15, |g: &mut Gen| {
+        let n = g.usize_in(128..512);
+        let w = longtail_workload(n, 8192, g.rng.next_u64());
+        let u = *g.pick(&[64usize, 128]);
+        let base = simulate(SimMode::Baseline, &w, 128, u, CostModel::default());
+        for mode in [SimMode::SortedOnPolicy, SimMode::SortedPartial] {
+            let r = simulate(mode, &w, 128, u, CostModel::default());
+            assert!(
+                r.bubble_ratio < base.bubble_ratio,
+                "{mode:?}: {} !< {}",
+                r.bubble_ratio,
+                base.bubble_ratio
+            );
+        }
+    });
+}
+
+/// Advantage normalization: permutation-invariance within a batch and
+/// zero-mean for Reinforce++ (what makes selective batching matter is the
+/// membership, never the order).
+#[test]
+fn advantage_permutation_invariant() {
+    use sortedrl::rl::advantage::{advantages, AdvantageKind, BaselineState, RewardEntry};
+    property("advantage permutation", 100, |g: &mut Gen| {
+        let n = g.usize_in(2..64);
+        let entries: Vec<RewardEntry> = (0..n)
+            .map(|i| RewardEntry {
+                reward: g.f64_in(-2.0, 3.0),
+                group: (i % 4) as u64,
+            })
+            .collect();
+        let mut b = BaselineState::default();
+        let a1 = advantages(AdvantageKind::ReinforcePlusPlus, &entries, &mut b);
+        let mean: f64 = a1.iter().sum::<f64>() / n as f64;
+        assert!(mean.abs() < 1e-6, "z-scores must be zero-mean: {mean}");
+        // permute
+        let mut idx: Vec<usize> = (0..n).collect();
+        g.rng.shuffle(&mut idx);
+        let permuted: Vec<RewardEntry> = idx.iter().map(|&i| entries[i]).collect();
+        let a2 = advantages(AdvantageKind::ReinforcePlusPlus, &permuted, &mut b);
+        for (j, &i) in idx.iter().enumerate() {
+            assert!((a2[j] - a1[i]).abs() < 1e-9);
+        }
+    });
+}

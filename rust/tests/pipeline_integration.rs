@@ -1,0 +1,135 @@
+//! End-to-end pipeline integration on the tiny artifact config: SFT warm
+//! start, then a few RL updates under every scheduler variant.  Verifies
+//! the machinery (engine + buffer + controller + trainer) composes, not
+//! training quality (that's examples/train_logic.rs at real scale).
+
+use sortedrl::coordinator::{sft_warm_start, Controller, LoopConfig, SchedulerKind};
+use sortedrl::data::Dataset;
+use sortedrl::rl::advantage::AdvantageKind;
+use sortedrl::runtime::Runtime;
+use sortedrl::tasks::logic::LogicTask;
+use sortedrl::tasks::math::MathTask;
+use sortedrl::tasks::Task;
+use std::path::Path;
+
+const TAG: &str = "tiny.B4k8.Bt4T192";
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Runtime::load(&dir, Some(TAG)).ok().or_else(|| {
+        eprintln!("SKIP: tag {TAG} unavailable");
+        None
+    })
+}
+
+fn short_cfg(scheduler: SchedulerKind) -> LoopConfig {
+    LoopConfig {
+        scheduler,
+        rollout_prompts: 4,
+        group_size: 2,
+        samples_per_prompt: 2,
+        update_batch: 4,
+        max_updates: 3,
+        lr: 5e-4,
+        temperature: 1.0,
+        seed: 7,
+        adv: AdvantageKind::ReinforcePlusPlus,
+        max_new: 48,
+        eval_every: 0,
+        eval_limit: 8,
+        verbose: false,
+    }
+}
+
+fn run_scheduler(scheduler: SchedulerKind) {
+    let Some(rt) = runtime() else { return };
+    let task = MathTask;
+    let ds = Dataset::generate(&task, 6, 0.2, 1);
+    let mut state = rt.init(11).unwrap();
+    let mut ctl = Controller::new(&rt, Box::new(MathTask), ds, short_cfg(scheduler));
+    let result = ctl.run(&mut state).unwrap();
+    assert_eq!(result.rows.len(), 3, "{scheduler:?} must do 3 updates");
+    for row in &result.rows {
+        assert!(row.update.n_traj > 0);
+        assert!(row.update.stats.loss.is_finite());
+        assert!(row.update.mean_resp_len > 0.0);
+        assert!(row.update.format_rate >= 0.0 && row.update.format_rate <= 1.0);
+    }
+    assert!(result.total_rollout_tokens > 0);
+    assert!(result.bubble_ratio >= 0.0 && result.bubble_ratio <= 1.0,
+            "bubble {:?}", result.bubble_ratio);
+    // the policy actually moved
+    assert!(state.version >= 3);
+}
+
+#[test]
+fn sorted_on_policy_runs() {
+    run_scheduler(SchedulerKind::SortedOnPolicy);
+}
+
+#[test]
+fn sorted_partial_runs() {
+    run_scheduler(SchedulerKind::SortedPartial);
+}
+
+#[test]
+fn baseline_runs() {
+    run_scheduler(SchedulerKind::Baseline);
+}
+
+#[test]
+fn post_hoc_sort_runs() {
+    run_scheduler(SchedulerKind::PostHocSort);
+}
+
+#[test]
+fn no_grouped_runs() {
+    run_scheduler(SchedulerKind::NoGroupedRollout);
+}
+
+#[test]
+fn sft_warm_start_reduces_loss_on_real_task() {
+    let Some(rt) = runtime() else { return };
+    let task = LogicTask::default();
+    let ds = Dataset::generate(&task, 8, 0.1, 3);
+    let mut state = rt.init(5).unwrap();
+    let problems: Vec<&sortedrl::tasks::Problem> = ds.train.iter().collect();
+    let losses = sft_warm_start(&rt, &mut state, &problems, 12, 3e-3, 0).unwrap();
+    assert!(losses.last().unwrap() < &(losses[0] * 0.9),
+            "sft {} -> {}", losses[0], losses.last().unwrap());
+}
+
+#[test]
+fn partial_mode_produces_resumed_trajectories() {
+    // With a small update batch and long generations, partial mode must
+    // actually exercise the scavenge-resume path (resumes > 0 somewhere).
+    let Some(rt) = runtime() else { return };
+    let task = LogicTask { max_checks: 16 };
+    let ds = Dataset::generate(&task, 6, 0.2, 9);
+    let mut state = rt.init(13).unwrap();
+    let mut cfg = short_cfg(SchedulerKind::SortedPartial);
+    cfg.update_batch = 2; // harvest aggressively -> many interruptions
+    cfg.max_updates = 6;
+    cfg.max_new = 96;
+    let mut ctl = Controller::new(&rt, Box::new(task), ds, cfg);
+    let result = ctl.run(&mut state).unwrap();
+    assert!(!result.rows.is_empty());
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let task = MathTask;
+    let ds = Dataset::generate(&task, 6, 0.3, 17);
+    let state = rt.init(23).unwrap();
+    let ctl = Controller::new(&rt, Box::new(MathTask), ds, short_cfg(SchedulerKind::Baseline));
+    let a = ctl.evaluate(&state).unwrap();
+    let b = ctl.evaluate(&state).unwrap();
+    assert_eq!(a.score, b.score);
+    assert_eq!(a.mean_resp_len, b.mean_resp_len);
+    let _ = task;
+}

@@ -1,0 +1,274 @@
+//! Integration: the rust runtime against real AOT artifacts (tiny config).
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).  Exercises the
+//! full bridge: manifest parse -> HLO compile -> init/prefill/decode/train.
+
+use sortedrl::runtime::{Runtime, TrainBatch};
+use sortedrl::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use sortedrl::util::rng::Pcg64;
+use std::path::Path;
+
+const TAG: &str = "tiny.B4k8.Bt4T192";
+
+// xla::Literal is !Send, so each test builds its own Runtime (tiny HLOs
+// compile in well under a second).
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    match Runtime::load(&dir, Some(TAG)) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts present but tag {TAG} unavailable: {e:#}");
+            None
+        }
+    }
+}
+
+macro_rules! need_rt {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn init_produces_manifest_shapes() {
+    let rt = &need_rt!();
+    let state = rt.init(42).unwrap();
+    assert_eq!(state.params.len(), rt.manifest.shapes.n_param_tensors);
+    for (lit, spec) in state.params.iter().zip(&rt.manifest.params) {
+        assert_eq!(lit.element_count(), spec.elements(), "{}", spec.name);
+    }
+    // deterministic in the seed
+    let again = rt.init(42).unwrap();
+    let a = state.params[0].to_vec::<f32>().unwrap();
+    let b = again.params[0].to_vec::<f32>().unwrap();
+    assert_eq!(a, b);
+    let other = rt.init(43).unwrap();
+    let c = other.params[0].to_vec::<f32>().unwrap();
+    assert_ne!(a, c);
+}
+
+#[test]
+fn prefill_then_decode_generates_tokens() {
+    let rt = &need_rt!();
+    let sh = rt.manifest.shapes.clone();
+    let state = rt.init(1).unwrap();
+    let tok = Tokenizer::new();
+    let prompt = tok.encode("<bos> LOGIC 3 ; P0 says P1 K ; ?").unwrap();
+
+    let mut tokens = vec![PAD; sh.engine_batch * sh.prefill_seq];
+    let mut lens = vec![1i32; sh.engine_batch];
+    for b in 0..sh.engine_batch {
+        tokens[b * sh.prefill_seq] = BOS;
+        if b < 2 {
+            for (i, &t) in prompt.iter().enumerate() {
+                tokens[b * sh.prefill_seq + i] = t;
+            }
+            lens[b] = prompt.len() as i32;
+        }
+    }
+    let (kv, logits) = rt.prefill(&state, &tokens, &lens).unwrap();
+    assert_eq!(logits.len(), sh.engine_batch * rt.manifest.model.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+
+    // sample first token in rust (log-softmax + inverse CDF)
+    let mut rng = Pcg64::new(9);
+    let v = rt.manifest.model.vocab;
+    let first: Vec<i32> = (0..sh.engine_batch)
+        .map(|b| {
+            let row = &logits[b * v..(b + 1) * v];
+            let m = row.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = row.iter().map(|x| (x - m).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            let u = rng.uniform_f32() * sum;
+            let mut acc = 0.0;
+            for (i, e) in exps.iter().enumerate() {
+                acc += e;
+                if acc >= u {
+                    return i as i32;
+                }
+            }
+            (v - 1) as i32
+        })
+        .collect();
+
+    let pos: Vec<i32> = lens.clone();
+    let active = vec![1i32; sh.engine_batch];
+    let uniforms: Vec<f32> = (0..sh.engine_batch * sh.decode_chunk)
+        .map(|_| rng.uniform_f32())
+        .collect();
+    let (_kv, out) = rt.decode_chunk(&state, kv, &first, &pos, &active, &uniforms, 1.0).unwrap();
+    assert_eq!(out.out_tokens.len(), sh.engine_batch * sh.decode_chunk);
+    // positions advance monotonically for lanes that stayed active
+    for b in 0..sh.engine_batch {
+        assert!(out.pos[b] >= pos[b]);
+        assert!(out.pos[b] <= pos[b] + sh.decode_chunk as i32);
+    }
+    // all emitted tokens in-vocab; logps non-positive for active emissions
+    for (i, &t) in out.out_tokens.iter().enumerate() {
+        assert!((0..v as i32).contains(&t));
+        if t != PAD as i32 {
+            assert!(out.out_logp[i] <= 1e-5, "logp[{i}]={}", out.out_logp[i]);
+        }
+    }
+}
+
+#[test]
+fn greedy_decode_is_reproducible() {
+    let rt = &need_rt!();
+    let sh = rt.manifest.shapes.clone();
+    let state = rt.init(2).unwrap();
+    let tokens = vec![BOS; sh.engine_batch * sh.prefill_seq];
+    let lens = vec![1i32; sh.engine_batch];
+    let uniforms = vec![-1.0f32; sh.engine_batch * sh.decode_chunk];
+    let tok0 = vec![BOS; sh.engine_batch];
+    let pos = lens.clone();
+    let active = vec![1i32; sh.engine_batch];
+
+    let (kv_a, _) = rt.prefill(&state, &tokens, &lens).unwrap();
+    let (_, a) = rt.decode_chunk(&state, kv_a, &tok0, &pos, &active, &uniforms, 1.0).unwrap();
+    let (kv_b, _) = rt.prefill(&state, &tokens, &lens).unwrap();
+    let (_, b) = rt.decode_chunk(&state, kv_b, &tok0, &pos, &active, &uniforms, 1.0).unwrap();
+    assert_eq!(a.out_tokens, b.out_tokens);
+    assert_eq!(a.out_logp, b.out_logp);
+}
+
+#[test]
+fn eos_terminates_lane() {
+    let rt = &need_rt!();
+    let sh = rt.manifest.shapes.clone();
+    let state = rt.init(3).unwrap();
+    let tokens = vec![BOS; sh.engine_batch * sh.prefill_seq];
+    let lens = vec![1i32; sh.engine_batch];
+    let (mut kv, _) = rt.prefill(&state, &tokens, &lens).unwrap();
+    // run several chunks; once a lane emits EOS its active flag must drop
+    let mut tok = vec![BOS; sh.engine_batch];
+    let mut pos = lens.clone();
+    let mut active = vec![1i32; sh.engine_batch];
+    let mut rng = Pcg64::new(5);
+    for _ in 0..6 {
+        let uniforms: Vec<f32> = (0..sh.engine_batch * sh.decode_chunk)
+            .map(|_| rng.uniform_f32())
+            .collect();
+        let (kv2, out) = rt.decode_chunk(&state, kv, &tok, &pos, &active, &uniforms, 1.0).unwrap();
+        kv = kv2;
+        for b in 0..sh.engine_batch {
+            let row = &out.out_tokens[b * sh.decode_chunk..(b + 1) * sh.decode_chunk];
+            if let Some(i) = row.iter().position(|&t| t == EOS) {
+                assert!(row[i + 1..].iter().all(|&t| t == PAD),
+                        "tokens after EOS must be PAD: {row:?}");
+                assert_eq!(out.active[b], 0);
+            }
+        }
+        tok = out.tok;
+        pos = out.pos;
+        active = out.active;
+        if active.iter().all(|&a| a == 0) {
+            break;
+        }
+    }
+}
+
+#[test]
+fn sft_step_decreases_loss() {
+    let rt = &need_rt!();
+    let sh = rt.manifest.shapes.clone();
+    let mut state = rt.init(4).unwrap();
+    let tok = Tokenizer::new();
+    // one fixed easy pattern repeated across the batch
+    let sample = tok.encode("<bos> MATH ( 3 + 4 ) = ? <think> step 3 + 4 = 7 ; </think> <answer> 7 </answer> <eos>").unwrap();
+    let mut tokens = vec![PAD; sh.train_batch * sh.train_seq];
+    let mut weights = vec![0f32; sh.train_batch * sh.train_seq];
+    for b in 0..sh.train_batch {
+        for (i, &t) in sample.iter().enumerate() {
+            tokens[b * sh.train_seq + i] = t;
+            weights[b * sh.train_seq + i] = 1.0;
+        }
+    }
+    let (first, _) = rt.sft_step(&mut state, &tokens, &weights, 3e-3).unwrap();
+    let mut last = first;
+    for _ in 0..7 {
+        let (loss, gnorm) = rt.sft_step(&mut state, &tokens, &weights, 3e-3).unwrap();
+        assert!(gnorm.is_finite());
+        last = loss;
+    }
+    assert!(last < first * 0.8, "sft loss {first} -> {last}");
+    assert_eq!(state.step, 8);
+    assert_eq!(state.version, 8);
+}
+
+#[test]
+fn train_step_moves_policy_toward_positive_advantage() {
+    let rt = &need_rt!();
+    let sh = rt.manifest.shapes.clone();
+    let mut state = rt.init(5).unwrap();
+    let mut rng = Pcg64::new(7);
+    let mut tokens = vec![PAD; sh.train_batch * sh.train_seq];
+    for t in tokens.iter_mut() {
+        *t = rng.range_i64(3, rt.manifest.model.vocab as i64) as i32;
+    }
+    let mut mask = vec![0f32; sh.train_batch * sh.train_seq];
+    for b in 0..sh.train_batch {
+        for i in 4..60 {
+            mask[b * sh.train_seq + i] = 1.0;
+        }
+    }
+    let old_logp = rt.logprob(&state, &tokens).unwrap();
+    let adv = vec![1.0f32; sh.train_batch * sh.train_seq];
+    let stats = rt
+        .train_step(&mut state, &TrainBatch {
+            tokens: tokens.clone(),
+            mask: mask.clone(),
+            adv,
+            old_logp: old_logp.clone(),
+            lr: 5e-3,
+        })
+        .unwrap();
+    // ratio starts at 1 -> loss == -mean(adv) == -1, no clipping, zero KL
+    assert!((stats.loss + 1.0).abs() < 1e-4, "loss={}", stats.loss);
+    assert!((stats.mean_ratio - 1.0).abs() < 1e-4);
+    assert!(stats.clip_frac.abs() < 1e-6);
+    assert!(stats.approx_kl.abs() < 1e-5);
+
+    let new_logp = rt.logprob(&state, &tokens).unwrap();
+    let gain: f32 = new_logp
+        .iter()
+        .zip(&old_logp)
+        .zip(&mask)
+        .map(|((n, o), m)| (n - o) * m)
+        .sum();
+    assert!(gain > 0.0, "policy must move toward positive-advantage tokens");
+}
+
+#[test]
+fn merge_kv_lanes_overwrites_only_selected() {
+    let rt = &need_rt!();
+    let sh = rt.manifest.shapes.clone();
+    let state = rt.init(6).unwrap();
+    // cache A: prompts all BOS; cache B: prompts all "MATH"
+    let lens = vec![1i32; sh.engine_batch];
+    let (kv_a, _) = rt.prefill(&state, &vec![BOS; sh.engine_batch * sh.prefill_seq], &lens).unwrap();
+    let math_tok = Tokenizer::new().encode("MATH").unwrap()[0];
+    let (kv_b, _) = rt.prefill(&state, &vec![math_tok; sh.engine_batch * sh.prefill_seq], &lens).unwrap();
+
+    let merged = rt.merge_kv_lanes(&kv_a, &kv_b, &[1, 3]).unwrap();
+    let dims = &sh.kv_cache;
+    let lane_block = dims[3] * dims[4] * dims[5];
+    let a = kv_a.to_vec::<f32>().unwrap();
+    let b = kv_b.to_vec::<f32>().unwrap();
+    let m = merged.to_vec::<f32>().unwrap();
+    for outer in 0..dims[0] * dims[1] {
+        for lane in 0..dims[2] {
+            let off = (outer * dims[2] + lane) * lane_block;
+            let want = if lane == 1 || lane == 3 { &b } else { &a };
+            assert_eq!(&m[off..off + lane_block], &want[off..off + lane_block],
+                       "outer={outer} lane={lane}");
+        }
+    }
+}
