@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 3,
         eval_limit: 16,
         verbose: true,
+        ..LoopConfig::default()
     };
     let mut ctl = Controller::new(&rt, Box::new(MathTask), ds, cfg);
     let result = ctl.run(&mut state)?;

@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 10,
         eval_limit: 64,
         verbose: true,
+        ..LoopConfig::default()
     };
     let mut ctl = Controller::new(&rt, Box::new(task), ds, cfg);
     let t0 = std::time::Instant::now();

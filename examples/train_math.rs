@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             eval_every: 0,
             eval_limit: 48,
             verbose: false,
+            ..LoopConfig::default()
         };
         let ds = Dataset::generate(&task, 80, 0.1, 9);
         let mut state = clone_state(&warm);

@@ -200,7 +200,12 @@ impl RolloutBuffer {
                 e.born_version = r.request.born_version;
             }
         }
-        e.resumes += 1;
+        // Sync from the request's own counter, not `+= 1` blindly: the
+        // engine pool may have preempted-and-resumed this request
+        // internally (bumping Request::resumes without a buffer round
+        // trip), and the next segment must get a PCG stream no earlier
+        // segment has used (stream id = 0xB0 + resumes).
+        e.resumes = e.resumes.max(r.request.resumes) + 1;
         e.lifecycle = Lifecycle::Scavenged;
     }
 

@@ -20,8 +20,9 @@ use crate::coordinator::trainer::{Trainer, UpdateLog};
 use crate::data::{DataLoader, Dataset};
 use crate::metrics::PhaseClock;
 use crate::rl::advantage::AdvantageKind;
-use crate::rollout::{Engine, EngineConfig};
+use crate::rollout::EngineConfig;
 use crate::runtime::{ParamState, Runtime};
+use crate::sched::{DispatchPolicy, EnginePool, PoolConfig, PredictorKind};
 use crate::tasks::{Reward, Task};
 use anyhow::Result;
 
@@ -80,6 +81,12 @@ pub struct LoopConfig {
     /// Evaluate on at most this many held-out problems.
     pub eval_limit: usize,
     pub verbose: bool,
+    /// Engines in the rollout pool (each with its own lanes + KV cache).
+    pub num_engines: usize,
+    /// Length predictor driving admission order / straggler detection.
+    pub predictor: PredictorKind,
+    /// How the pool places queued requests onto engines.
+    pub dispatch: DispatchPolicy,
 }
 
 impl Default for LoopConfig {
@@ -99,6 +106,9 @@ impl Default for LoopConfig {
             eval_every: 10,
             eval_limit: 64,
             verbose: false,
+            num_engines: 1,
+            predictor: PredictorKind::History,
+            dispatch: DispatchPolicy::LeastLoaded,
         }
     }
 }
@@ -178,6 +188,19 @@ impl<'rt> Controller<'rt> {
         }
     }
 
+    /// Build the rollout engine pool. `preempt` enables APRIL-style
+    /// straggler requeue (partial mode only — on-policy semantics would
+    /// discard the preempted tokens anyway).
+    fn make_pool(&self, greedy: bool, preempt: bool) -> EnginePool<'rt> {
+        EnginePool::new(self.rt, self.engine_cfg(greedy), PoolConfig {
+            num_engines: self.cfg.num_engines.max(1),
+            dispatch: self.cfg.dispatch,
+            predictor: self.cfg.predictor,
+            preempt,
+            ..PoolConfig::default()
+        })
+    }
+
     fn effective_max_new(&self) -> usize {
         // keep prompt + response inside the training unroll T
         let t = self.rt.manifest.shapes.train_seq;
@@ -201,15 +224,22 @@ impl<'rt> Controller<'rt> {
         }
     }
 
-    fn absorb_engine_occupancy(&mut self, engine: &Engine) {
-        let cap = engine.lane_count();
-        let end = engine.clock();
-        let bubble = engine.timeline.bubble_ratio(cap, end);
-        let (start, _) = engine.timeline.span();
-        let span = end - start;
-        self.idle_area += bubble * span * cap as f64;
-        self.busy_span += span * cap as f64;
-        self.rollout_tokens += engine.timeline.tokens_out();
+    fn absorb_engine_occupancy(&mut self, pool: &EnginePool) {
+        let (idle, busy, tokens) = pool.occupancy();
+        self.idle_area += idle;
+        self.busy_span += busy;
+        self.rollout_tokens += tokens;
+        if self.cfg.verbose && pool.score.count() > 0 {
+            eprintln!(
+                "[pool] predictor {}: {} scored, MAE {:.1} tok, tau {:.3}; \
+                 {} preempted",
+                self.cfg.predictor.name(),
+                pool.score.count(),
+                pool.score.mae(),
+                pool.score.kendall_tau(),
+                pool.preempted()
+            );
+        }
     }
 
     /// Aggregate bubble ratio over every rollout phase so far.
@@ -237,7 +267,7 @@ impl<'rt> Controller<'rt> {
         if problems.is_empty() {
             return Ok(EvalResult::default());
         }
-        let mut engine = Engine::new(self.rt, self.engine_cfg(true));
+        let mut engine = self.make_pool(true, false);
         engine.submit(problems.iter().map(|(i, p)| {
             crate::rollout::Request::fresh(*i as u64, *i, p.id, p.prompt.clone(), max_new)
         }));
@@ -346,7 +376,7 @@ impl<'rt> Controller<'rt> {
                  phase_clock: &mut PhaseClock) -> Result<()> {
         let pool = self.cfg.group_size * self.cfg.rollout_prompts;
         self.load_prompts(pool);
-        let mut engine = Engine::new(self.rt, self.engine_cfg(false));
+        let mut engine = self.make_pool(false, mode == Mode::Partial);
 
         while !self.buffer.all_consumed() && trainer.updates() < self.cfg.max_updates {
             // dispatch everything schedulable (oversubscription)
@@ -383,6 +413,12 @@ impl<'rt> Controller<'rt> {
                 if final_wave && engine.queued() == 0 && engine.running() < occ_floor {
                     break; // batching floor: clip the stragglers
                 }
+            }
+            // a request can finish inside admit() itself (immediate EOS, or
+            // a resumed straggler admitted at its cap) right before the
+            // loop breaks — drain once more so it isn't lost in the engine
+            for r in engine.drain_finished() {
+                self.buffer.record_finished(&r);
             }
             // harvest: terminate in-flight, clip or scavenge per mode
             let (mut partials, queued) = engine.terminate_all(state.version);
@@ -431,10 +467,10 @@ impl<'rt> Controller<'rt> {
             let entries = self.buffer.consume(&take);
             let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
             let log = trainer.update(state, &entries, &rewards)?;
-            self.log_update(rows, state, log, engine.clock())?;
+            self.log_update(rows, state, log, engine.host_secs())?;
         }
         self.absorb_engine_occupancy(&engine);
-        phase_clock.rollout += engine.clock();
+        phase_clock.rollout += engine.host_secs();
         self.buffer.clear_consumed();
         Ok(())
     }
@@ -449,7 +485,7 @@ impl<'rt> Controller<'rt> {
         // volume matches the sorted runs
         let pool = self.cfg.group_size * self.cfg.rollout_prompts;
         self.load_prompts(pool);
-        let mut engine = Engine::new(self.rt, self.engine_cfg(false));
+        let mut engine = self.make_pool(false, false);
         let rids = self.buffer.schedulable();
         engine.submit(self.buffer.dispatch(&rids));
         let rollouts = engine.run_to_completion(state)?;
@@ -457,7 +493,7 @@ impl<'rt> Controller<'rt> {
             self.buffer.record_finished(r);
         }
         self.absorb_engine_occupancy(&engine);
-        phase_clock.rollout += engine.clock();
+        phase_clock.rollout += engine.host_secs();
 
         let mut order: Vec<u64> = if sort_post_hoc {
             // sort by response length ascending AFTER full generation
@@ -478,7 +514,7 @@ impl<'rt> Controller<'rt> {
             let entries = self.buffer.consume(&take);
             let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
             let log = trainer.update(state, &entries, &rewards)?;
-            self.log_update(rows, state, log, engine.clock())?;
+            self.log_update(rows, state, log, engine.host_secs())?;
         }
         self.buffer.clear_consumed();
         Ok(())
@@ -492,7 +528,7 @@ impl<'rt> Controller<'rt> {
                       rows: &mut Vec<LogRow>, phase_clock: &mut PhaseClock)
                       -> Result<()> {
         let pool = self.cfg.group_size * self.cfg.rollout_prompts;
-        let mut engine = Engine::new(self.rt, self.engine_cfg(false));
+        let mut engine = self.make_pool(false, false);
         let mut iterations = 0usize;
         while trainer.updates() < self.cfg.max_updates && iterations < 10_000 {
             iterations += 1;
@@ -516,6 +552,10 @@ impl<'rt> Controller<'rt> {
                     break;
                 }
             }
+            // catch completions that happened inside the final admit()
+            for r in engine.drain_finished() {
+                self.buffer.record_finished(&r);
+            }
             let (partials, queued) = engine.terminate_all(state.version);
             // abandon interrupted generations entirely (prompt starvation)
             for r in &partials {
@@ -535,11 +575,11 @@ impl<'rt> Controller<'rt> {
             let entries = self.buffer.consume(&take);
             let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
             let log = trainer.update(state, &entries, &rewards)?;
-            self.log_update(rows, state, log, engine.clock())?;
+            self.log_update(rows, state, log, engine.host_secs())?;
             self.buffer.clear_consumed();
         }
         self.absorb_engine_occupancy(&engine);
-        phase_clock.rollout += engine.clock();
+        phase_clock.rollout += engine.host_secs();
         Ok(())
     }
 }

@@ -1,7 +1,7 @@
 //! Experiment harness: one entry per table/figure of the paper (§4).
 //!
 //! `sortedrl exp <id>` regenerates the rows/series the paper reports.
-//! Simulator-backed experiments (fig1a/fig1b/fig5) run at paper scale;
+//! Simulator-backed experiments (fig1a/fig1b/fig5/pool) run at paper scale;
 //! real-training experiments (fig3/fig4/fig6/fig9/tab1) run the full
 //! three-layer stack on the synthetic task substrates at a configurable
 //! scale (see DESIGN.md §Substitutions).  Results print as tables and are

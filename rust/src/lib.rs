@@ -12,6 +12,7 @@ pub mod exp;
 pub mod metrics;
 pub mod rl;
 pub mod rollout;
+pub mod sched;
 pub mod sim;
 pub mod runtime;
 pub mod tasks;

@@ -15,7 +15,8 @@ use sortedrl::data::Dataset;
 use sortedrl::exp::{self, ExpContext, Scale};
 use sortedrl::rl::advantage::AdvantageKind;
 use sortedrl::runtime::Runtime;
-use sortedrl::sim::{longtail_workload, simulate, CostModel, SimMode};
+use sortedrl::sched::{DispatchPolicy, PredictorKind};
+use sortedrl::sim::{longtail_workload, simulate, simulate_pool, CostModel, SimMode};
 use sortedrl::tasks::logic::LogicTask;
 use sortedrl::tasks::math::MathTask;
 use sortedrl::tasks::Task;
@@ -84,12 +85,31 @@ USAGE:
                  post-hoc-sort|no-grouped] [--updates N] [--rollout-prompts b]
                  [--group-size n] [--samples-per-prompt G] [--update-batch U]
                  [--lr F] [--max-new N] [--seed N] [--scale ci|small|paper]
+                 [--engines N] [--predictor oracle|history|bucket]
+                 [--dispatch rr|least-loaded|sjf]
                  [--artifacts DIR] [--tag TAG] [--no-warm-start]
   sortedrl exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6a|fig6b|fig9a|fig9b|tab1|
-                all-sim|all> [--scale ci|small|paper] [--out DIR] [--seed N]
+                pool|all-sim|all> [--scale ci|small|paper] [--out DIR] [--seed N]
   sortedrl sim [--n 512] [--cap 8192] [--queue 128] [--update-batch 128]
+               [--engines N] [--predictor oracle|history|bucket]
+               [--dispatch rr|least-loaded|sjf]
   sortedrl info [--artifacts DIR] [--tag TAG]
+
+Pool defaults (train & sim): --engines 1, --predictor history,
+--dispatch least-loaded.
 ";
+
+fn parse_predictor(args: &Args) -> Result<PredictorKind> {
+    PredictorKind::parse(args.get("predictor").unwrap_or("history"))
+        .context("--predictor oracle|history|bucket")
+}
+
+fn parse_dispatch(args: &Args) -> Result<DispatchPolicy> {
+    // fallback matches LoopConfig::default() so flag-less CLI runs agree
+    // with the examples, exp suites, and tests
+    DispatchPolicy::parse(args.get("dispatch").unwrap_or("least-loaded"))
+        .context("--dispatch rr|least-loaded|sjf")
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -154,10 +174,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", ts.eval_every)?,
         eval_limit: args.get_usize("eval-limit", ts.eval_limit)?,
         verbose: true,
+        num_engines: {
+            let n = args.get_usize("engines", 1)?;
+            if n == 0 {
+                bail!("--engines must be >= 1");
+            }
+            n
+        },
+        predictor: parse_predictor(args)?,
+        dispatch: parse_dispatch(args)?,
     };
     let ds = Dataset::generate(task.as_ref(), ts.per_difficulty, 0.1, seed + 1);
     eprintln!("dataset: {} train / {} eval; scheduler: {}",
               ds.train.len(), ds.eval.len(), scheduler.name());
+    eprintln!("pool: {} engine(s), predictor {}, dispatch {}",
+              cfg.num_engines, cfg.predictor.name(), cfg.dispatch.name());
 
     let mut state = rt.init(seed as i32)?;
     if args.get("no-warm-start").is_none() {
@@ -191,7 +222,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
             .context("--scale ci|small|paper")?,
         seed: args.get_u64("seed", 0)?,
     };
-    let needs_rt = !matches!(which, "fig1a" | "fig1b" | "fig5" | "all-sim");
+    let needs_rt = !matches!(which, "fig1a" | "fig1b" | "fig5" | "pool" | "all-sim");
     let rt = if needs_rt {
         Some(Runtime::load(&ctx.artifacts_dir, ctx.tag.as_deref())?)
     } else {
@@ -205,6 +236,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
             exp::fig1::fig1c(&ctx, lens.as_deref())?;
         }
         "fig5" => exp::fig5::fig5(&ctx)?,
+        "pool" => exp::suites::pool_suite(&ctx)?,
         "fig3" | "fig9a" => exp::suites::logic_suite(&ctx, rt.as_ref().unwrap())?,
         "fig4" | "tab1" => exp::suites::math_suite(&ctx, rt.as_ref().unwrap())?,
         "fig6a" => exp::suites::fig6a(&ctx, rt.as_ref().unwrap())?,
@@ -216,6 +248,8 @@ fn cmd_exp(args: &Args) -> Result<()> {
             exp::fig1::fig1b(&ctx)?;
             println!();
             exp::fig5::fig5(&ctx)?;
+            println!();
+            exp::suites::pool_suite(&ctx)?;
         }
         "all" => {
             exp::fig1::fig1a(&ctx)?;
@@ -224,6 +258,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
             let lens = real_rollout_lengths(&ctx, rt)?;
             exp::fig1::fig1c(&ctx, Some(&lens))?;
             exp::fig5::fig5(&ctx)?;
+            exp::suites::pool_suite(&ctx)?;
             exp::suites::logic_suite(&ctx, rt)?;
             exp::suites::fig6a(&ctx, rt)?;
             exp::suites::fig6b(&ctx, rt)?;
@@ -260,6 +295,22 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let q = args.get_usize("queue", 128)?;
     let u = args.get_usize("update-batch", 128)?;
     let seed = args.get_u64("seed", 0)?;
+    let engines = args.get_usize("engines", 1)?;
+    if engines == 0 {
+        bail!("--engines must be >= 1");
+    }
+    if engines > q {
+        bail!("--engines {engines} exceeds --queue {q} (each engine needs at least one lane)");
+    }
+    if q % engines != 0 {
+        bail!("--queue {q} must be divisible by --engines {engines} \
+               (otherwise the 1-vs-N comparison runs unequal capacities)");
+    }
+    if u == 0 {
+        bail!("--update-batch must be >= 1");
+    }
+    let predictor = parse_predictor(args)?;
+    let dispatch = parse_dispatch(args)?;
     let w = longtail_workload(n, cap, seed);
     println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}\n");
     for (mode, label) in [(SimMode::Baseline, "baseline"),
@@ -270,6 +321,33 @@ fn cmd_sim(args: &Args) -> Result<()> {
                   wasted {:8}  clipped {:3}",
                  r.throughput, r.bubble_ratio * 100.0, r.rollout_time,
                  r.wasted_tokens, r.clipped);
+    }
+    if engines > 1 {
+        println!("\npool: {engines} engines x {} lanes, predictor {}, dispatch {} \
+                  (1-engine vs {engines}-engine, same total capacity)",
+                 q / engines, predictor.name(), dispatch.name());
+        let mut telemetry = (0.0, 0.0);
+        for (mode, label) in [(SimMode::Baseline, "baseline"),
+                              (SimMode::SortedOnPolicy, "on-policy"),
+                              (SimMode::SortedPartial, "partial")] {
+            let one = simulate_pool(mode, &w, 1, q, u, CostModel::default(),
+                                    dispatch, predictor);
+            let many = simulate_pool(mode, &w, engines, q, u, CostModel::default(),
+                                     dispatch, predictor);
+            if mode == SimMode::SortedPartial {
+                telemetry = (many.predictor_mae, many.predictor_tau);
+            }
+            println!("{label:>10}: bubble {:5.2}% -> {:5.2}%   tok/s {:7.0} -> {:7.0}   \
+                      rollout {:6.1}s -> {:6.1}s",
+                     one.bubble_ratio * 100.0, many.bubble_ratio * 100.0,
+                     one.throughput, many.throughput,
+                     one.rollout_time, many.rollout_time);
+        }
+        println!("predictor {} (partial, {engines} engines): MAE {:.1} tokens, \
+                  Kendall tau {:.3}",
+                 predictor.name(), telemetry.0, telemetry.1);
+    } else {
+        println!("\n(pass --engines N to compare 1-engine vs N-engine pools)");
     }
     Ok(())
 }

@@ -108,6 +108,85 @@ impl Timeline {
     }
 }
 
+/// Online accuracy telemetry for a `sched::LengthPredictor`: mean absolute
+/// error in tokens (over every observation) plus Kendall rank correlation
+/// (tau-a) over a bounded sliding window of (predicted, actual) pairs.
+///
+/// Rank quality is the headline number — shortest-predicted-first dispatch
+/// only needs the *order* of lengths to be right, so a rank-only predictor
+/// (e.g. `Bucket`) can score tau close to 1 while its MAE is meaningless.
+#[derive(Debug, Clone)]
+pub struct PredictorScore {
+    window: Vec<(f64, f64)>,
+    cap: usize,
+    cursor: usize,
+    n: u64,
+    abs_err: f64,
+}
+
+impl Default for PredictorScore {
+    fn default() -> Self {
+        Self::new(512)
+    }
+}
+
+impl PredictorScore {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 2);
+        PredictorScore { window: Vec::new(), cap, cursor: 0, n: 0, abs_err: 0.0 }
+    }
+
+    /// Record one (prediction, ground truth) pair. Call with the prediction
+    /// made *before* the truth was observed.
+    pub fn push(&mut self, predicted: f64, actual: f64) {
+        self.n += 1;
+        self.abs_err += (predicted - actual).abs();
+        if self.window.len() < self.cap {
+            self.window.push((predicted, actual));
+        } else {
+            self.window[self.cursor] = (predicted, actual);
+            self.cursor = (self.cursor + 1) % self.cap;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean absolute error over every pair ever pushed.
+    pub fn mae(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.abs_err / self.n as f64
+        }
+    }
+
+    /// Kendall tau-a over the window: (concordant - discordant) / all pairs.
+    /// 1.0 = perfect ranking, 0.0 = uninformative, -1.0 = anti-ranking.
+    pub fn kendall_tau(&self) -> f64 {
+        let w = &self.window;
+        if w.len() < 2 {
+            return 0.0;
+        }
+        let mut concordant = 0i64;
+        let mut discordant = 0i64;
+        let mut total = 0i64;
+        for i in 0..w.len() {
+            for j in i + 1..w.len() {
+                total += 1;
+                let s = (w[i].0 - w[j].0) * (w[i].1 - w[j].1);
+                if s > 0.0 {
+                    concordant += 1;
+                } else if s < 0.0 {
+                    discordant += 1;
+                }
+            }
+        }
+        (concordant - discordant) as f64 / total as f64
+    }
+}
+
 /// Wall-time phase accounting for the Fig. 1a latency breakdown.
 #[derive(Debug, Clone, Default)]
 pub struct PhaseClock {
@@ -188,5 +267,36 @@ mod tests {
     fn phase_clock_share() {
         let pc = PhaseClock { rollout: 7.0, inference: 1.0, update: 2.0 };
         assert!((pc.rollout_share() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predictor_score_perfect_rank() {
+        let mut s = PredictorScore::new(16);
+        for x in [10.0, 40.0, 20.0, 90.0, 5.0] {
+            s.push(x, x * 2.0); // monotone map: perfect rank, nonzero MAE
+        }
+        assert!((s.kendall_tau() - 1.0).abs() < 1e-12);
+        assert!(s.mae() > 0.0);
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn predictor_score_anti_rank() {
+        let mut s = PredictorScore::new(16);
+        for (p, a) in [(1.0, 9.0), (2.0, 8.0), (3.0, 7.0), (4.0, 6.0)] {
+            s.push(p, a);
+        }
+        assert!((s.kendall_tau() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predictor_score_window_is_bounded() {
+        let mut s = PredictorScore::new(4);
+        for i in 0..100 {
+            s.push(i as f64, i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.kendall_tau() - 1.0).abs() < 1e-12);
+        assert!(s.mae() < 1e-12);
     }
 }

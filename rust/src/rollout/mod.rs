@@ -74,6 +74,40 @@ pub struct Rollout {
     pub finished_at: f64,
 }
 
+impl Rollout {
+    /// Assemble a partial (scheduler-interrupted) rollout: the request's
+    /// already-resumed prefix plus whatever was emitted since
+    /// (re-)admission, with log-probs aligned.
+    pub fn partial(request: Request, emitted: &[i32], logps: &[f32], version: u64,
+                   at: f64) -> Rollout {
+        let mut response = request.resumed.clone();
+        response.extend_from_slice(emitted);
+        let mut logp = request.resumed_logp.clone();
+        logp.extend_from_slice(logps);
+        Rollout {
+            request,
+            response,
+            logp,
+            finish_version: version,
+            complete: false,
+            finished_at: at,
+        }
+    }
+}
+
+/// Progress of one active lane (see [`Engine::lane_progress`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneProgress {
+    pub lane: usize,
+    /// Tokens generated since (re-)admission.
+    pub emitted: usize,
+    /// Total response length so far (resumed + emitted).
+    pub total: usize,
+    pub rid: u64,
+    pub prompt_id: u64,
+    pub prompt_len: usize,
+}
+
 struct Lane {
     request: Request,
     emitted: Vec<i32>,
@@ -342,25 +376,45 @@ impl<'rt> Engine<'rt> {
         let mut partials = Vec::new();
         for slot in self.lanes.iter_mut() {
             if let Some(l) = slot.take() {
-                let req = l.request.clone();
-                let mut response = req.resumed.clone();
-                response.extend(&l.emitted);
-                let mut logp = req.resumed_logp.clone();
-                logp.extend(&l.logps);
-                partials.push(Rollout {
-                    request: req,
-                    response,
-                    logp,
-                    finish_version: version,
-                    complete: false,
-                    finished_at: self.clock,
-                });
+                partials.push(Rollout::partial(
+                    l.request, &l.emitted, &l.logps, version, self.clock,
+                ));
             }
         }
         let queued: Vec<Request> = self.queue.drain(..).collect();
         self.kv = None;
         self.record_occupancy();
         (partials, queued)
+    }
+
+    /// Progress snapshot of every active lane (for the pool scheduler's
+    /// straggler detection).
+    pub fn lane_progress(&self) -> Vec<LaneProgress> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, slot)| {
+                slot.as_ref().filter(|l| l.active).map(|l| LaneProgress {
+                    lane: i,
+                    emitted: l.emitted.len(),
+                    total: l.request.resumed.len() + l.emitted.len(),
+                    rid: l.request.rid,
+                    prompt_id: l.request.prompt_id,
+                    prompt_len: l.request.prompt.len(),
+                })
+            })
+            .collect()
+    }
+
+    /// Preempt ONE lane mid-generation, returning its partial rollout
+    /// (progress + log-probs kept — APRIL-style active partial rollout).
+    /// The freed lane admits queued work on the next `admit`; the caller
+    /// requeues the partial (resume pays one prefill over prompt+prefix).
+    pub fn preempt_lane(&mut self, lane: usize, version: u64) -> Option<Rollout> {
+        let l = self.lanes.get_mut(lane)?.take()?;
+        let rollout = Rollout::partial(l.request, &l.emitted, &l.logps, version, self.clock);
+        self.record_occupancy();
+        Some(rollout)
     }
 
     /// Run until every submitted request has finished (baseline semantics —

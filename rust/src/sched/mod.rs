@@ -1,0 +1,28 @@
+//! `sched` — length-prediction + multi-engine scheduling (the pool layer).
+//!
+//! The seed reproduced SortedRL's core loop on a *single* engine that only
+//! sorts *after* lengths are observed.  This subsystem adds the two pieces
+//! the paper's "large rollout batches across engines" regime needs:
+//!
+//!   * [`LengthPredictor`] — online length prediction (Oracle / History /
+//!     Bucket), scored live via [`crate::metrics::PredictorScore`]
+//!     (MAE + Kendall tau).  Prediction replaces the controller's
+//!     generate-to-sense discovery rotation: admission order is decided
+//!     *before* tokens are spent.
+//!   * [`EnginePool`] — N `rollout::Engine`s behind one submit/step/drain
+//!     facade with a pluggable [`DispatchPolicy`] (round-robin /
+//!     least-loaded / shortest-predicted-first) and APRIL-style preemptive
+//!     partial requeue of long-tail stragglers.
+//!
+//! The simulator mirror lives in [`crate::sim`] (`simulate_pool`,
+//! `pool_makespan`) so 1-vs-N engine comparisons run at paper scale in
+//! milliseconds; `exp pool` and `benches/sched_bench.rs` drive it.
+
+pub mod pool;
+pub mod predictor;
+
+pub use pool::{resume_request, DispatchPolicy, EnginePool, PoolConfig};
+pub use predictor::{
+    make_predictor, sjf_priority, BucketPredictor, HistoryPredictor, LengthPredictor,
+    OraclePredictor, PredictorKind,
+};

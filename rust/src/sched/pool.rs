@@ -1,0 +1,501 @@
+//! `EnginePool` — N rollout engines behind one submit/step/drain facade.
+//!
+//! The paper's clusters shard "large rollout batches across engines"; the
+//! seed only ever drove a single engine.  The pool owns the engines, a
+//! central admission queue, a pluggable [`DispatchPolicy`] and a
+//! [`LengthPredictor`](super::LengthPredictor), and adds two scheduling
+//! moves the single engine cannot express:
+//!
+//!   * **Predictive placement** — `ShortestPredictedFirst` sorts the
+//!     admission queue by predicted generation length and hands contiguous
+//!     (similar-length) runs to each engine, so lanes within an engine
+//!     finish together and the drain tail collapses (the SortedRL insight,
+//!     applied *before* generation instead of after).
+//!   * **Preemptive partial requeue** — a lane whose emitted length blows
+//!     far past its prediction is preempted and its partial rollout goes
+//!     back into the pool queue (progress + log-probs kept, APRIL-style);
+//!     resume pays one prefill over prompt+prefix, which `Engine::admit`
+//!     models naturally.
+//!
+//! Dispatch is late-binding: requests stay in the central queue until an
+//! engine actually has a free lane (except `RoundRobin`, which statically
+//! stripes — the FCFS baseline the benches compare against).
+
+use crate::metrics::PredictorScore;
+use crate::rollout::{Engine, EngineConfig, Request, Rollout};
+use crate::runtime::{ParamState, Runtime};
+use crate::sched::predictor::{make_predictor, sjf_priority, LengthPredictor, PredictorKind};
+use anyhow::Result;
+use std::collections::{BTreeMap, VecDeque};
+
+/// How the pool assigns queued requests to engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Static striping in arrival order, ignoring load (FCFS baseline).
+    RoundRobin,
+    /// Next request to the engine with the fewest in-flight requests.
+    LeastLoaded,
+    /// Sort the admission queue by predicted length ascending and pack
+    /// similar-length runs onto the same engine.
+    ShortestPredictedFirst,
+}
+
+impl DispatchPolicy {
+    pub const ALL: [DispatchPolicy; 3] = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::LeastLoaded,
+        DispatchPolicy::ShortestPredictedFirst,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "rr" | "round-robin" | "fcfs" => Self::RoundRobin,
+            "least-loaded" | "ll" => Self::LeastLoaded,
+            "sjf" | "shortest-predicted-first" => Self::ShortestPredictedFirst,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round-robin",
+            Self::LeastLoaded => "least-loaded",
+            Self::ShortestPredictedFirst => "sjf",
+        }
+    }
+}
+
+/// Pool knobs (engine-count, dispatch, prediction, preemption).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    pub num_engines: usize,
+    pub dispatch: DispatchPolicy,
+    pub predictor: PredictorKind,
+    /// Preempt stragglers back into the pool queue (partial-mode only —
+    /// on-policy semantics would discard the preempted tokens anyway).
+    pub preempt: bool,
+    /// A lane is a straggler once its total response length exceeds this
+    /// multiple of its predicted length while other work waits.
+    pub straggler_factor: f64,
+    /// Check for stragglers every this many pool steps.
+    pub preempt_every: usize,
+    /// Never preempt a lane that has emitted fewer tokens than this since
+    /// (re-)admission — caps re-prefill churn.
+    pub min_preempt_emitted: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            num_engines: 1,
+            dispatch: DispatchPolicy::LeastLoaded,
+            predictor: PredictorKind::History,
+            preempt: false,
+            straggler_factor: 2.0,
+            preempt_every: 8,
+            min_preempt_emitted: 16,
+        }
+    }
+}
+
+/// Convert a preempted partial rollout back into a resumable request.
+pub fn resume_request(r: &Rollout) -> Request {
+    let mut req = r.request.clone();
+    req.resumed = r.response.clone();
+    req.resumed_logp = r.logp.clone();
+    req.resumes += 1;
+    req
+}
+
+pub struct EnginePool<'rt> {
+    engines: Vec<Engine<'rt>>,
+    queue: VecDeque<Request>,
+    cfg: PoolConfig,
+    predictor: Box<dyn LengthPredictor>,
+    /// Online predictor telemetry (MAE + Kendall tau).
+    pub score: PredictorScore,
+    /// Prediction captured when each in-flight request was handed to an
+    /// engine — scoring must use what actually drove the dispatch
+    /// decision, not a prediction recomputed after siblings finished.
+    dispatched_pred: BTreeMap<u64, f64>,
+    /// SJF sort keys are stale (new submissions, requeues, or predictor
+    /// observations since the last sort) — avoids re-sorting the whole
+    /// backlog on every decode iteration.
+    queue_dirty: bool,
+    rr_cursor: usize,
+    steps: usize,
+    preempted: u64,
+}
+
+impl<'rt> EnginePool<'rt> {
+    pub fn new(rt: &'rt Runtime, ecfg: EngineConfig, cfg: PoolConfig) -> Self {
+        assert!(cfg.num_engines >= 1, "pool needs at least one engine");
+        assert!(cfg.preempt_every >= 1, "preempt_every must be >= 1");
+        assert!(cfg.straggler_factor > 1.0, "straggler_factor must exceed 1.0");
+        let engines = (0..cfg.num_engines)
+            .map(|_| Engine::new(rt, ecfg.clone()))
+            .collect();
+        let predictor = make_predictor(cfg.predictor);
+        EnginePool {
+            engines,
+            queue: VecDeque::new(),
+            cfg,
+            predictor,
+            score: PredictorScore::default(),
+            dispatched_pred: BTreeMap::new(),
+            queue_dirty: true,
+            rr_cursor: 0,
+            steps: 0,
+            preempted: 0,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // aggregate views (facade mirrors the single-engine API)
+    // ------------------------------------------------------------------
+
+    pub fn num_engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn engines(&self) -> &[Engine<'rt>] {
+        &self.engines
+    }
+
+    /// Total lanes across engines.
+    pub fn lane_count(&self) -> usize {
+        self.engines.iter().map(|e| e.lane_count()).sum()
+    }
+
+    pub fn running(&self) -> usize {
+        self.engines.iter().map(|e| e.running()).sum()
+    }
+
+    /// Central queue + every engine's local queue.
+    pub fn queued(&self) -> usize {
+        self.queue.len() + self.engines.iter().map(|e| e.queued()).sum::<usize>()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.running() + self.queued()
+    }
+
+    pub fn finished_count(&self) -> usize {
+        self.engines.iter().map(|e| e.finished_count()).sum()
+    }
+
+    /// MODELED parallel wall clock: max over engine clocks, i.e. what an
+    /// N-device deployment would take.  On one host the engines actually
+    /// execute serially — use [`Self::host_secs`] for real elapsed engine
+    /// time.  Occupancy/bubble math uses this clock (bubble is a property
+    /// of the modeled parallel pool).
+    pub fn clock(&self) -> f64 {
+        self.engines.iter().map(|e| e.clock()).fold(0.0, f64::max)
+    }
+
+    /// Real host seconds spent inside engine calls (sum over engines —
+    /// they share one Runtime and run serially).
+    pub fn host_secs(&self) -> f64 {
+        self.engines.iter().map(|e| e.clock()).sum()
+    }
+
+    /// Requests preempted-and-requeued so far.
+    pub fn preempted(&self) -> u64 {
+        self.preempted
+    }
+
+    /// (idle_area, busy_span, tokens_out) aggregated over engines against
+    /// the pool-wide end time — feeds the controller's bubble accounting.
+    /// An engine that never admitted work counts as 100% idle capacity
+    /// over the pool span (paper Eq. 4 — an idle engine is bubble, not a
+    /// non-event).
+    pub fn occupancy(&self) -> (f64, f64, u64) {
+        let end = self.clock();
+        let start = self
+            .engines
+            .iter()
+            .filter(|e| !e.timeline.events().is_empty())
+            .map(|e| e.timeline.span().0)
+            .fold(f64::INFINITY, f64::min);
+        if !start.is_finite() {
+            return (0.0, 0.0, 0); // pool never ran at all
+        }
+        let mut idle = 0.0;
+        let mut busy = 0.0;
+        let mut tokens = 0u64;
+        // every engine is accountable for the POOL span: capacity idling
+        // before an engine's first admission is bubble too, exactly like
+        // an engine that never ran at all
+        let span = (end - start).max(0.0);
+        for e in &self.engines {
+            let cap = e.lane_count();
+            busy += span * cap as f64;
+            if e.timeline.events().is_empty() {
+                idle += span * cap as f64;
+                continue;
+            }
+            let (e_start, _) = e.timeline.span();
+            let bubble = e.timeline.bubble_ratio(cap, end);
+            let measured = (end - e_start).max(0.0);
+            idle += bubble * measured * cap as f64
+                + (e_start - start).max(0.0) * cap as f64;
+            tokens += e.timeline.tokens_out();
+        }
+        (idle, busy, tokens)
+    }
+
+    // ------------------------------------------------------------------
+    // scheduling
+    // ------------------------------------------------------------------
+
+    /// Enqueue requests into the central pool queue.
+    pub fn submit(&mut self, reqs: impl IntoIterator<Item = Request>) {
+        self.queue.extend(reqs);
+        self.queue_dirty = true;
+    }
+
+    /// SJF priority of a request (see [`sjf_priority`] for the policy —
+    /// one definition shared with the simulator mirror).
+    fn predicted_remaining(&self, req: &Request) -> f64 {
+        sjf_priority(
+            self.predictor.as_ref(),
+            req.prompt_id,
+            req.prompt.len(),
+            req.resumed.len(),
+        )
+    }
+
+    fn engine_free(&self, i: usize) -> usize {
+        let e = &self.engines[i];
+        e.lane_count().saturating_sub(e.running() + e.queued())
+    }
+
+    /// Hand one request to engine `i`, capturing the prediction that drove
+    /// the decision (scored against the true length on completion).
+    fn hand_to_engine(&mut self, i: usize, req: Request) {
+        let predicted = self.predictor.predict(req.prompt_id, req.prompt.len());
+        self.dispatched_pred.insert(req.rid, predicted);
+        self.engines[i].submit([req]);
+    }
+
+    /// Move central-queue requests onto engines per the dispatch policy.
+    fn dispatch(&mut self) {
+        if self.queue.is_empty() {
+            return;
+        }
+        // no engine can accept work: skip (for SJF this avoids re-sorting
+        // the whole backlog on every decode iteration; for round-robin the
+        // eventual striping order is queue order either way)
+        if (0..self.engines.len()).all(|i| self.engine_free(i) == 0) {
+            return;
+        }
+        match self.cfg.dispatch {
+            DispatchPolicy::RoundRobin => {
+                // static hand-out: everything leaves the central queue now
+                while let Some(req) = self.queue.pop_front() {
+                    let i = self.rr_cursor % self.engines.len();
+                    self.rr_cursor += 1;
+                    self.hand_to_engine(i, req);
+                }
+            }
+            DispatchPolicy::LeastLoaded => {
+                // late-binding: hand out only what can run now, one request
+                // at a time to the emptiest engine
+                loop {
+                    let Some(i) = (0..self.engines.len())
+                        .filter(|&i| self.engine_free(i) > 0)
+                        .min_by_key(|&i| self.engines[i].in_flight())
+                    else {
+                        break;
+                    };
+                    let Some(req) = self.queue.pop_front() else { break };
+                    self.hand_to_engine(i, req);
+                }
+            }
+            DispatchPolicy::ShortestPredictedFirst => {
+                // sort the admission queue by predicted remaining length —
+                // only when keys went stale (new work or new observations),
+                // not on every decode iteration — then give each engine
+                // (emptiest first) a contiguous run from the sorted front:
+                // similar lengths land on the same engine and drain together
+                if self.queue_dirty {
+                    let drained: Vec<Request> = self.queue.drain(..).collect();
+                    let mut keyed: Vec<(f64, Request)> = drained
+                        .into_iter()
+                        .map(|r| (self.predicted_remaining(&r), r))
+                        .collect();
+                    keyed.sort_by(|a, b| {
+                        a.0.partial_cmp(&b.0).unwrap().then(a.1.rid.cmp(&b.1.rid))
+                    });
+                    self.queue = keyed.into_iter().map(|(_, r)| r).collect();
+                    self.queue_dirty = false;
+                }
+                let mut order: Vec<usize> = (0..self.engines.len()).collect();
+                order.sort_by_key(|&i| self.engines[i].in_flight());
+                for i in order {
+                    let free = self.engine_free(i);
+                    for _ in 0..free {
+                        let Some(req) = self.queue.pop_front() else { break };
+                        self.hand_to_engine(i, req);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dispatch + admit queued work into free lanes (batched prefill per
+    /// engine). Returns the number of newly admitted requests.
+    pub fn admit(&mut self, state: &ParamState) -> Result<usize> {
+        self.dispatch();
+        let mut admitted = 0;
+        for e in self.engines.iter_mut() {
+            if e.queued() > 0 && e.running() < e.lane_count() {
+                admitted += e.admit(state)?;
+            }
+        }
+        Ok(admitted)
+    }
+
+    /// One decode chunk on every engine with running lanes; periodically
+    /// preempts stragglers when enabled. Returns tokens generated.
+    pub fn step(&mut self, state: &ParamState) -> Result<usize> {
+        self.steps += 1;
+        if self.cfg.preempt && self.steps % self.cfg.preempt_every == 0 {
+            self.preempt_stragglers(state.version);
+        }
+        let mut tokens = 0;
+        for e in self.engines.iter_mut() {
+            if e.running() > 0 {
+                tokens += e.step(state)?;
+            }
+        }
+        Ok(tokens)
+    }
+
+    /// Preempt at most one straggler lane per engine: a lane whose total
+    /// response length exceeds `straggler_factor` x its predicted length
+    /// while other work is waiting. The partial goes back into the pool
+    /// queue with progress kept; `observe_progress` raises the request's
+    /// prediction toward its observed floor, so repeat preemption of the
+    /// same request self-extinguishes.
+    fn preempt_stragglers(&mut self, version: u64) {
+        // The over-prediction ratio compares token counts; rank-only
+        // predictors (bucket) emit bucket indices, so the ratio would be
+        // meaningless and every lane would look like a straggler.
+        if self.predictor.is_rank_only() {
+            return;
+        }
+        // Static striping cannot route waiting work to a freed lane (and
+        // would stripe the victim onto an arbitrary engine), so preemption
+        // under round-robin only lowers occupancy.
+        if self.cfg.dispatch == DispatchPolicy::RoundRobin {
+            return;
+        }
+        // Snapshot the CENTRAL-queue depth before preempting anything:
+        // that is the work a freed lane can actually pull (engine-local
+        // queues are already placed); the pre-pass snapshot keeps victims
+        // requeued during this pass from licensing further preemption on
+        // later engines, and bounds preemptions — freeing more lanes than
+        // there are waiting requests just buys re-prefill churn.
+        let mut budget = self.queue.len();
+        for i in 0..self.engines.len() {
+            if budget == 0 {
+                return; // nothing (left) waiting: stragglers keep their lanes
+            }
+            let progress = self.engines[i].lane_progress();
+            let mut victim: Option<usize> = None;
+            let mut worst = 0.0f64;
+            for p in &progress {
+                if p.emitted < self.cfg.min_preempt_emitted {
+                    continue;
+                }
+                let predicted = self.predictor.predict(p.prompt_id, p.prompt_len).max(1.0);
+                let over = p.total as f64 / predicted;
+                if over >= self.cfg.straggler_factor && over > worst {
+                    worst = over;
+                    victim = Some(p.lane);
+                }
+            }
+            if let Some(lane) = victim {
+                if let Some(r) = self.engines[i].preempt_lane(lane, version) {
+                    self.predictor.observe_progress(
+                        r.request.prompt_id,
+                        r.request.prompt.len(),
+                        r.response.len(),
+                    );
+                    self.preempted += 1;
+                    budget -= 1;
+                    // stale: a fresh prediction is captured on redispatch
+                    self.dispatched_pred.remove(&r.request.rid);
+                    self.queue.push_back(resume_request(&r));
+                    self.queue_dirty = true;
+                }
+            }
+        }
+    }
+
+    /// Drain finished rollouts from every engine, feeding the predictor
+    /// (prediction scored BEFORE the observation lands).
+    pub fn drain_finished(&mut self) -> Vec<Rollout> {
+        let mut out = Vec::new();
+        for e in self.engines.iter_mut() {
+            out.extend(e.drain_finished());
+        }
+        for r in &out {
+            if r.complete {
+                let predicted = self
+                    .dispatched_pred
+                    .remove(&r.request.rid)
+                    .unwrap_or_else(|| {
+                        self.predictor.predict(r.request.prompt_id, r.request.prompt.len())
+                    });
+                self.score.push(predicted, r.response.len() as f64);
+                self.predictor.observe(
+                    r.request.prompt_id,
+                    r.request.prompt.len(),
+                    r.response.len(),
+                );
+                // new observation: queued SJF sort keys are stale
+                self.queue_dirty = true;
+            }
+        }
+        out
+    }
+
+    /// Terminate everything pool-wide. Returns partial rollouts (running
+    /// lanes AND queued requests that carry preempted progress — their
+    /// tokens must reach the buffer) plus untouched fresh requests.
+    pub fn terminate_all(&mut self, version: u64) -> (Vec<Rollout>, Vec<Request>) {
+        let mut partials = Vec::new();
+        let mut queued: Vec<Request> = Vec::new();
+        for e in self.engines.iter_mut() {
+            let (p, q) = e.terminate_all(version);
+            partials.extend(p);
+            queued.extend(q);
+        }
+        queued.extend(self.queue.drain(..));
+        self.dispatched_pred.clear(); // everything in flight is leaving
+        let clock = self.clock();
+        let (resumed, fresh): (Vec<Request>, Vec<Request>) =
+            queued.into_iter().partition(|q| !q.resumed.is_empty());
+        for q in resumed {
+            partials.push(Rollout::partial(q, &[], &[], version, clock));
+        }
+        (partials, fresh)
+    }
+
+    /// Run until every submitted request finishes (baseline semantics).
+    pub fn run_to_completion(&mut self, state: &ParamState) -> Result<Vec<Rollout>> {
+        loop {
+            self.admit(state)?;
+            if self.running() == 0 {
+                if self.queued() == 0 {
+                    break;
+                }
+                continue;
+            }
+            self.step(state)?;
+        }
+        Ok(self.drain_finished())
+    }
+}

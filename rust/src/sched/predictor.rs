@@ -1,0 +1,384 @@
+//! Online generation-length prediction (the pool scheduler's crystal ball).
+//!
+//! SortedRL's seed controller only *senses* lengths after generating tokens;
+//! related work (Seer's online context learning, learning-to-rank length
+//! predictors) shows the throughput headroom is in predicting lengths *ahead
+//! of* generation so admission order and engine placement can be decided up
+//! front.  Three predictors cover the quality spectrum:
+//!
+//!   * [`OraclePredictor`] — reads the true cost (simulator ground truth);
+//!     the upper bound every other predictor is scored against.
+//!   * [`HistoryPredictor`] — per-prompt EWMA over observed generation
+//!     lengths across policy updates, warm-started from the prompt length
+//!     and the global length mean (cheap, no model access).
+//!   * [`BucketPredictor`] — rank-only quantile bucketing: predicts which
+//!     length *bucket* a request falls into, not a token count.  Scored by
+//!     Kendall tau (its MAE is intentionally meaningless) — the point is
+//!     that SJF dispatch only needs order, not magnitude.
+//!
+//! Predictors are scored online via [`crate::metrics::PredictorScore`]
+//! (push the prediction *before* observing the truth).
+
+use std::collections::BTreeMap;
+
+/// A length predictor keyed by prompt identity (`prompt_id` groups the G
+/// samples of one prompt and survives preemption/resume cycles).
+///
+/// `predict` returns a priority score that orders requests by expected
+/// generation length — token counts for Oracle/History, bucket indices for
+/// Bucket.  Only the *order* is contractual.
+pub trait LengthPredictor {
+    fn name(&self) -> &'static str;
+
+    /// True when `predict` returns rank scores (bucket indices) rather than
+    /// token counts.  Callers must not mix rank scores with token
+    /// quantities (progress subtraction, straggler ratios) — they may only
+    /// compare them to each other.
+    fn is_rank_only(&self) -> bool {
+        false
+    }
+
+    /// Predicted total generation length (or rank score) for `key`.
+    fn predict(&self, key: u64, prompt_len: usize) -> f64;
+
+    /// Observe a finished generation's true length.
+    fn observe(&mut self, key: u64, prompt_len: usize, observed: usize);
+
+    /// Observe partial progress (a preempted request): `progress` is a
+    /// LOWER bound on the final length.  Default: fold it in only when it
+    /// already exceeds the current prediction — this is what stops a
+    /// straggler from being preempted in a loop (each preemption raises
+    /// its prediction toward its observed floor).
+    fn observe_progress(&mut self, key: u64, prompt_len: usize, progress: usize) {
+        if progress as f64 > self.predict(key, prompt_len) {
+            self.observe(key, prompt_len, progress);
+        }
+    }
+}
+
+/// Which predictor an engine pool runs with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorKind {
+    Oracle,
+    History,
+    Bucket,
+}
+
+impl PredictorKind {
+    pub const ALL: [PredictorKind; 3] =
+        [PredictorKind::Oracle, PredictorKind::History, PredictorKind::Bucket];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "oracle" => Self::Oracle,
+            "history" | "ewma" => Self::History,
+            "bucket" | "rank" => Self::Bucket,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Oracle => "oracle",
+            Self::History => "history",
+            Self::Bucket => "bucket",
+        }
+    }
+}
+
+pub fn make_predictor(kind: PredictorKind) -> Box<dyn LengthPredictor> {
+    match kind {
+        PredictorKind::Oracle => Box::new(OraclePredictor::new()),
+        PredictorKind::History => Box::new(HistoryPredictor::new(0.5)),
+        PredictorKind::Bucket => Box::new(BucketPredictor::new(8, 256)),
+    }
+}
+
+/// Shortest-predicted-first priority for a request with `progress` tokens
+/// already generated — THE policy shared by the real `EnginePool` and the
+/// simulator mirror (one definition so they cannot drift):
+///
+///   * rank-only predictors return their rank unchanged (progress is a
+///     token count and cannot be subtracted from a bucket index);
+///   * otherwise the priority is predicted remaining = total - progress;
+///   * an over-budget straggler (progress >= predicted total, e.g. after
+///     a preemption floor-raised its prediction) takes its own progress
+///     as the remaining estimate — heavy-tail conditional expectation —
+///     so it queues behind fresh short work instead of collapsing to
+///     minimum priority and reclaiming the lane it was preempted from.
+pub fn sjf_priority(pred: &dyn LengthPredictor, key: u64, prompt_len: usize,
+                    progress: usize) -> f64 {
+    let total = pred.predict(key, prompt_len);
+    if pred.is_rank_only() {
+        return total;
+    }
+    let progress = progress as f64;
+    let remaining = total - progress;
+    if remaining >= 1.0 {
+        remaining
+    } else {
+        progress.max(1.0)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Oracle
+// --------------------------------------------------------------------------
+
+/// Knows the true generation length per key (fed from simulator ground
+/// truth, or from a previous run's observations). Unknown keys fall back to
+/// the prompt length so it degrades to a weak heuristic, never a panic.
+#[derive(Debug, Default)]
+pub struct OraclePredictor {
+    truth: BTreeMap<u64, f64>,
+}
+
+impl OraclePredictor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set_true(&mut self, key: u64, len: usize) {
+        self.truth.insert(key, len as f64);
+    }
+}
+
+impl LengthPredictor for OraclePredictor {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn predict(&self, key: u64, prompt_len: usize) -> f64 {
+        self.truth.get(&key).copied().unwrap_or(prompt_len as f64)
+    }
+
+    fn observe(&mut self, key: u64, _prompt_len: usize, observed: usize) {
+        // observing IS how the oracle reads true cost
+        self.truth.insert(key, observed as f64);
+    }
+}
+
+// --------------------------------------------------------------------------
+// History (per-prompt EWMA)
+// --------------------------------------------------------------------------
+
+/// Per-prompt EWMA over observed lengths across updates.  Cold keys predict
+/// the global EWMA; a completely cold predictor falls back to the prompt
+/// length (long prompts tend to long answers in reasoning workloads — a
+/// weak but harmless prior).
+#[derive(Debug)]
+pub struct HistoryPredictor {
+    alpha: f64,
+    per_key: BTreeMap<u64, f64>,
+    global: f64,
+    observations: u64,
+}
+
+impl HistoryPredictor {
+    /// `alpha` governs the PER-KEY EWMA only.  The global fallback (what
+    /// cold keys predict) smooths at a deliberately slower fixed 0.1 —
+    /// a population statistic should move slower than a per-prompt one.
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        HistoryPredictor { alpha, per_key: BTreeMap::new(), global: 0.0, observations: 0 }
+    }
+}
+
+impl LengthPredictor for HistoryPredictor {
+    fn name(&self) -> &'static str {
+        "history"
+    }
+
+    fn predict(&self, key: u64, prompt_len: usize) -> f64 {
+        if let Some(&v) = self.per_key.get(&key) {
+            v
+        } else if self.observations > 0 {
+            self.global
+        } else {
+            prompt_len as f64
+        }
+    }
+
+    fn observe(&mut self, key: u64, _prompt_len: usize, observed: usize) {
+        let x = observed as f64;
+        self.global = if self.observations == 0 {
+            x
+        } else {
+            0.1 * x + 0.9 * self.global
+        };
+        self.observations += 1;
+        let e = self.per_key.entry(key).or_insert(x);
+        *e = self.alpha * x + (1.0 - self.alpha) * *e;
+    }
+
+    /// Progress is a hard floor on the final length, so the per-key value
+    /// jumps straight to it (no EWMA lag): an EWMA'd floor would stay a
+    /// constant fraction below the observed length and the same straggler
+    /// would be re-preempted geometrically often instead of the preemption
+    /// self-extinguishing (work between preemptions doubles once the
+    /// prediction tracks the floor).
+    fn observe_progress(&mut self, key: u64, _prompt_len: usize, progress: usize) {
+        if progress == 0 {
+            return;
+        }
+        let x = progress as f64;
+        let e = self.per_key.entry(key).or_insert(x);
+        if x > *e {
+            *e = x;
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Bucket (rank-only quantile bucketing)
+// --------------------------------------------------------------------------
+
+/// Learning-to-rank style bucketing: keeps a bounded window of recent
+/// observed lengths as an empirical distribution and predicts the quantile
+/// bucket (0..buckets) of each key's last observed length.  Unseen keys
+/// get the middle bucket.  Predictions are bucket indices — comparable to
+/// each other but NOT token counts.
+#[derive(Debug)]
+pub struct BucketPredictor {
+    buckets: usize,
+    window: Vec<f64>,
+    cap: usize,
+    cursor: usize,
+    last: BTreeMap<u64, f64>,
+}
+
+impl BucketPredictor {
+    pub fn new(buckets: usize, window_cap: usize) -> Self {
+        assert!(buckets >= 2 && window_cap >= buckets);
+        BucketPredictor {
+            buckets,
+            window: Vec::new(),
+            cap: window_cap,
+            cursor: 0,
+            last: BTreeMap::new(),
+        }
+    }
+
+    fn bucket_of(&self, x: f64) -> f64 {
+        if self.window.is_empty() {
+            return (self.buckets / 2) as f64;
+        }
+        let below = self.window.iter().filter(|&&w| w < x).count();
+        let q = below as f64 / self.window.len() as f64;
+        (q * self.buckets as f64).min(self.buckets as f64 - 1.0).floor()
+    }
+}
+
+impl LengthPredictor for BucketPredictor {
+    fn name(&self) -> &'static str {
+        "bucket"
+    }
+
+    fn is_rank_only(&self) -> bool {
+        true
+    }
+
+    fn predict(&self, key: u64, _prompt_len: usize) -> f64 {
+        match self.last.get(&key) {
+            Some(&x) => self.bucket_of(x),
+            None => (self.buckets / 2) as f64,
+        }
+    }
+
+    fn observe(&mut self, key: u64, _prompt_len: usize, observed: usize) {
+        let x = observed as f64;
+        if self.window.len() < self.cap {
+            self.window.push(x);
+        } else {
+            self.window[self.cursor] = x;
+            self.cursor = (self.cursor + 1) % self.cap;
+        }
+        self.last.insert(key, x);
+    }
+
+    fn observe_progress(&mut self, key: u64, _prompt_len: usize, progress: usize) {
+        // rank-only: a progress floor still moves the key's rank upward
+        let x = progress as f64;
+        let cur = self.last.get(&key).copied().unwrap_or(0.0);
+        if x > cur {
+            self.last.insert(key, x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_reads_true_cost() {
+        let mut p = OraclePredictor::new();
+        p.set_true(1, 500);
+        p.set_true(2, 50);
+        assert_eq!(p.predict(1, 64), 500.0);
+        assert_eq!(p.predict(2, 64), 50.0);
+        assert_eq!(p.predict(3, 64), 64.0); // fallback: prompt length
+        assert_eq!(p.name(), "oracle");
+    }
+
+    #[test]
+    fn history_ewma_converges_and_warm_starts() {
+        let mut p = HistoryPredictor::new(0.5);
+        // cold: prompt-length prior
+        assert_eq!(p.predict(9, 128), 128.0);
+        for _ in 0..12 {
+            p.observe(1, 64, 100);
+        }
+        assert!((p.predict(1, 64) - 100.0).abs() < 1.0);
+        // unseen key now predicts the global mean, not the prompt prior
+        let g = p.predict(42, 64);
+        assert!((g - 100.0).abs() < 1.0, "{g}");
+    }
+
+    #[test]
+    fn history_tracks_per_key_differences() {
+        let mut p = HistoryPredictor::new(0.5);
+        for _ in 0..8 {
+            p.observe(1, 64, 40);
+            p.observe(2, 64, 400);
+        }
+        assert!(p.predict(1, 64) < p.predict(2, 64));
+    }
+
+    #[test]
+    fn bucket_orders_short_before_long() {
+        let mut p = BucketPredictor::new(8, 64);
+        // build an empirical length distribution
+        for i in 0..32 {
+            p.observe(100 + i, 64, (i as usize + 1) * 20);
+        }
+        p.observe(1, 64, 30); // short key
+        p.observe(2, 64, 600); // long key
+        assert!(p.predict(1, 64) < p.predict(2, 64));
+        // bucket indices stay inside [0, buckets)
+        assert!(p.predict(2, 64) <= 7.0);
+        assert!(p.predict(1, 64) >= 0.0);
+    }
+
+    #[test]
+    fn observe_progress_raises_straggler_prediction() {
+        let mut p = HistoryPredictor::new(0.5);
+        p.observe(1, 64, 50);
+        let before = p.predict(1, 64);
+        p.observe_progress(1, 64, 400); // blew past its prediction
+        assert!(p.predict(1, 64) > before);
+        p.observe_progress(1, 64, 10); // below prediction: ignored
+        assert!(p.predict(1, 64) > before);
+    }
+
+    #[test]
+    fn make_predictor_covers_all_kinds() {
+        for kind in PredictorKind::ALL {
+            let p = make_predictor(kind);
+            assert_eq!(p.name(), kind.name());
+            assert_eq!(PredictorKind::parse(kind.name()), Some(kind));
+            assert_eq!(p.is_rank_only(), kind == PredictorKind::Bucket);
+        }
+        assert_eq!(PredictorKind::parse("nope"), None);
+    }
+}

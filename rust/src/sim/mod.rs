@@ -14,7 +14,8 @@
 //! resume), so the same policies can be compared at paper scale (512
 //! prompts, 8k-token caps) in milliseconds of host time.
 
-use crate::metrics::Timeline;
+use crate::metrics::{PredictorScore, Timeline};
+use crate::sched::{make_predictor, sjf_priority, DispatchPolicy, LengthPredictor, PredictorKind};
 use crate::util::rng::Pcg64;
 use std::collections::VecDeque;
 
@@ -120,6 +121,12 @@ pub struct SimReport {
     pub clipped: usize,
     /// Prompts dropped without training (never scheduled at group end).
     pub dropped: usize,
+    /// Engines the run was sharded across (1 for [`simulate`]).
+    pub engines: usize,
+    /// Length-predictor mean absolute error (pool runs; 0 otherwise).
+    pub predictor_mae: f64,
+    /// Length-predictor Kendall tau (pool runs; 0 otherwise).
+    pub predictor_tau: f64,
 }
 
 struct Running {
@@ -279,6 +286,9 @@ fn simulate_baseline(workload: &[SimRequest], q: usize, update_batch: usize,
         harvests,
         clipped: 0,
         dropped: 0,
+        engines: 1,
+        predictor_mae: 0.0,
+        predictor_tau: 0.0,
     }
 }
 
@@ -501,6 +511,412 @@ fn simulate_sorted(mode: SimMode, workload: &[SimRequest], q: usize,
         harvests,
         clipped,
         dropped,
+        engines: 1,
+        predictor_mae: 0.0,
+        predictor_tau: 0.0,
+    }
+}
+
+// ==========================================================================
+// Multi-engine pool simulation (the `sched` layer's simulator mirror)
+// ==========================================================================
+
+/// Engine pool over [`SimEngine`]s: a central queue (or static stripes for
+/// round-robin) plus event-driven stepping — always advance the
+/// earliest-clock engine with work, so engine clocks stay within one
+/// decode iteration of each other (parallel devices).
+struct SimPool {
+    engines: Vec<SimEngine>,
+    central: VecDeque<(SimRequest, usize)>,
+    policy: DispatchPolicy,
+    rr: usize,
+}
+
+impl SimPool {
+    fn new(n: usize, q_each: usize, cost: CostModel, policy: DispatchPolicy) -> Self {
+        SimPool {
+            engines: (0..n).map(|_| SimEngine::new(q_each, cost)).collect(),
+            central: VecDeque::new(),
+            policy,
+            rr: 0,
+        }
+    }
+
+    /// Stage a wave of (request, progress) work per the dispatch policy.
+    /// Round-robin statically stripes (the FCFS baseline); least-loaded
+    /// keeps a FIFO central queue that engines pull from as lanes free;
+    /// SJF keeps the central queue sorted by predicted remaining length so
+    /// each engine pulls a contiguous, similar-length run.
+    fn stage(&mut self, work: Vec<(SimRequest, usize)>, pred: &dyn LengthPredictor) {
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                for w in work {
+                    let i = self.rr % self.engines.len();
+                    self.rr += 1;
+                    self.engines[i].queue.push_back(w);
+                }
+            }
+            DispatchPolicy::LeastLoaded => self.central.extend(work),
+            DispatchPolicy::ShortestPredictedFirst => {
+                // sjf_priority is THE policy shared with the real
+                // EnginePool; keys computed once, not in the comparator
+                let mut keyed: Vec<(f64, (SimRequest, usize))> = work
+                    .into_iter()
+                    .map(|w| (sjf_priority(pred, w.0.id as u64, w.0.prompt_len, w.1), w))
+                    .collect();
+                keyed.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap().then((a.1).0.id.cmp(&(b.1).0.id))
+                });
+                self.central.extend(keyed.into_iter().map(|(_, w)| w));
+            }
+        }
+    }
+
+    /// Pull central-queue work into engine `i`'s free lanes (late binding).
+    fn refill(&mut self, i: usize) {
+        if self.policy == DispatchPolicy::RoundRobin {
+            return;
+        }
+        loop {
+            let e = &self.engines[i];
+            if e.running.len() + e.queue.len() >= e.q {
+                break;
+            }
+            let Some(w) = self.central.pop_front() else { break };
+            self.engines[i].queue.push_back(w);
+        }
+    }
+
+    fn has_work(&self, i: usize) -> bool {
+        let e = &self.engines[i];
+        !e.running.is_empty()
+            || !e.queue.is_empty()
+            || (self.policy != DispatchPolicy::RoundRobin && !self.central.is_empty())
+    }
+
+    fn total_running(&self) -> usize {
+        self.engines.iter().map(|e| e.running.len()).sum()
+    }
+
+    fn queued(&self) -> usize {
+        self.central.len() + self.engines.iter().map(|e| e.queue.len()).sum::<usize>()
+    }
+
+    /// Advance the earliest-clock engine with work by one admit + decode
+    /// iteration; returns its finishes, or None when the pool is drained.
+    fn tick(&mut self) -> Option<Vec<SimRequest>> {
+        let i = (0..self.engines.len())
+            .filter(|&i| self.has_work(i))
+            .min_by(|&a, &b| {
+                self.engines[a]
+                    .clock
+                    .partial_cmp(&self.engines[b].clock)
+                    .unwrap()
+            })?;
+        self.refill(i);
+        self.engines[i].admit();
+        Some(self.engines[i].step())
+    }
+
+    /// Terminate everything pool-wide -> (request, progress) pairs.
+    fn terminate_all(&mut self) -> Vec<(SimRequest, usize)> {
+        let mut out = Vec::new();
+        for e in self.engines.iter_mut() {
+            out.extend(e.terminate_all());
+        }
+        out.extend(self.central.drain(..));
+        out
+    }
+
+    /// Sync barrier: jump every engine clock to the pool max (harvest / wave
+    /// end).  The gap between an engine's own finish time and the barrier is
+    /// genuine rollout-phase idle; the timeline's trailing interval (last
+    /// recorded running count, usually 0) accounts for it.
+    fn align_clocks(&mut self) {
+        let end = self.clock();
+        for e in self.engines.iter_mut() {
+            e.clock = end;
+        }
+    }
+
+    fn clock(&self) -> f64 {
+        self.engines.iter().map(|e| e.clock).fold(0.0, f64::max)
+    }
+
+    fn tokens_out(&self) -> u64 {
+        self.engines.iter().map(|e| e.tokens_out).sum()
+    }
+}
+
+/// Merge per-engine occupancy timelines into one pool timeline whose
+/// running count is the sum across engines (tokens and finish counts sum
+/// too), so [`Timeline::bubble_ratio`] with the pool's total capacity gives
+/// the aggregate bubble.
+fn merge_timelines(engines: &[SimEngine]) -> Timeline {
+    let mut merged = Timeline::new();
+    let mut events: Vec<(f64, usize, usize)> = Vec::new();
+    for (idx, e) in engines.iter().enumerate() {
+        for &(t, r) in e.timeline.events() {
+            events.push((t, idx, r));
+        }
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut cur = vec![0usize; engines.len()];
+    let mut total = 0usize;
+    for (t, idx, r) in events {
+        total = total + r - cur[idx];
+        cur[idx] = r;
+        merged.set_running(t, total);
+    }
+    let mut tokens = 0u64;
+    let mut finished = 0u64;
+    for e in engines {
+        // SimEngine counts tokens in its own field — its timeline is
+        // never fed add_tokens (unlike the real rollout::Engine)
+        tokens += e.tokens_out;
+        finished += e.timeline.finished();
+    }
+    merged.add_tokens(tokens);
+    merged.add_finished(finished);
+    merged
+}
+
+fn make_sim_predictor(kind: PredictorKind, workload: &[SimRequest]) -> Box<dyn LengthPredictor> {
+    let mut pred = make_predictor(kind);
+    if kind == PredictorKind::Oracle {
+        // the oracle reads true cost: simulator ground truth
+        for r in workload {
+            pred.observe(r.id as u64, r.prompt_len, r.output_len);
+        }
+    }
+    pred
+}
+
+/// Run `workload` to completion on an engine pool — one oversubscribed
+/// wave, no harvests or updates — and return the makespan in seconds.
+/// This is the dispatch-policy comparison number `sched_bench` prints.
+///
+/// Learning predictors (history/bucket) are warmed up on NOISY
+/// observations of the workload first: the RL regime re-rolls the same
+/// prompts every policy update, so by the time scheduling matters the
+/// predictor has seen sibling samples / earlier epochs of each prompt —
+/// which *estimate*, not reveal, this round's exact length.  (Cold
+/// predictions are uncorrelated with true lengths, so a cold run would
+/// measure only late-binding dispatch; an exact warmup would make history
+/// indistinguishable from the oracle, since sim requests are keyed
+/// individually.)  The ~±35% lognormal noise leaves rank quality high but
+/// keeps the oracle a genuine ceiling.
+pub fn pool_makespan(workload: &[SimRequest], engines: usize, q_total: usize,
+                     cost: CostModel, dispatch: DispatchPolicy,
+                     predictor: PredictorKind) -> f64 {
+    assert!(engines >= 1 && q_total >= engines, "q_total must cover engines");
+    let mut pred = make_sim_predictor(predictor, workload);
+    if predictor != PredictorKind::Oracle {
+        let mut rng = Pcg64::with_stream(0x5EED_17, 0x9E);
+        for r in workload {
+            let noisy = (r.output_len as f64 * rng.lognormal(0.0, 0.35))
+                .clamp(1.0, 4.0 * r.output_len as f64);
+            pred.observe(r.id as u64, r.prompt_len, noisy as usize);
+        }
+    }
+    let mut pool = SimPool::new(engines, q_total / engines, cost, dispatch);
+    pool.stage(workload.iter().map(|r| (*r, 0usize)).collect(), pred.as_ref());
+    while pool.tick().is_some() {}
+    pool.clock()
+}
+
+/// Multi-engine pool simulation: the same group-pool semantics as
+/// [`simulate`] (oversubscription, early termination at the batching
+/// threshold, per-mode scavenge/restart), but sharded across `engines`
+/// engines of `q_total/engines` lanes each, with admission ordered by a
+/// [`LengthPredictor`] instead of the single-engine sense-by-generating
+/// rotation.  `engines == 1` gives the single-engine member of the same
+/// scheduler family, so 1-vs-N comparisons isolate the sharding effect.
+///
+/// `q_total` is rounded down to a multiple of `engines`.
+pub fn simulate_pool(mode: SimMode, workload: &[SimRequest], engines: usize,
+                     q_total: usize, update_batch: usize, cost: CostModel,
+                     dispatch: DispatchPolicy, predictor: PredictorKind) -> SimReport {
+    assert!(engines >= 1 && q_total >= engines, "q_total must cover engines");
+    assert!(update_batch >= 1, "update_batch must be >= 1");
+    let q_each = q_total / engines;
+    let q_cap = q_each * engines;
+    let mut pool = SimPool::new(engines, q_each, cost, dispatch);
+    let mut pred = make_sim_predictor(predictor, workload);
+    let mut score = PredictorScore::default();
+    let mut infer_time = 0.0;
+    let mut update_time = 0.0;
+    let mut harvests = 0usize;
+
+    // Predictions are scored as captured at STAGE time — what actually
+    // drove the dispatch decision — not recomputed after siblings finished.
+    let mut staged_pred: std::collections::BTreeMap<usize, f64> =
+        std::collections::BTreeMap::new();
+
+    if mode == SimMode::Baseline {
+        // waves of q_cap behind a sync barrier, run to completion
+        for batch in workload.chunks(q_cap) {
+            for r in batch {
+                staged_pred.insert(r.id, pred.predict(r.id as u64, r.prompt_len));
+            }
+            pool.stage(batch.iter().map(|r| (*r, 0usize)).collect(), pred.as_ref());
+            let mut finished: Vec<SimRequest> = Vec::new();
+            while let Some(f) = pool.tick() {
+                for r in &f {
+                    let p = staged_pred
+                        .remove(&r.id)
+                        .unwrap_or_else(|| pred.predict(r.id as u64, r.prompt_len));
+                    score.push(p, r.output_len as f64);
+                    pred.observe(r.id as u64, r.prompt_len, r.output_len);
+                }
+                finished.extend(f);
+            }
+            pool.align_clocks();
+            let (ti, tu) = post_phase_costs(&finished, &cost);
+            infer_time += ti;
+            update_time += tu;
+            harvests += finished.len().div_ceil(update_batch.max(1));
+        }
+        let rollout_time = pool.clock();
+        let useful: u64 = workload.iter().map(|r| r.output_len as u64).sum();
+        let timeline = merge_timelines(&pool.engines);
+        let bubble = timeline.bubble_ratio(q_cap, rollout_time);
+        return SimReport {
+            mode,
+            total_time: rollout_time + infer_time + update_time,
+            rollout_time,
+            update_time,
+            infer_time,
+            useful_tokens: useful,
+            wasted_tokens: pool.tokens_out() - useful,
+            bubble_ratio: bubble,
+            throughput: useful as f64 / rollout_time,
+            timeline,
+            harvests,
+            clipped: 0,
+            dropped: 0,
+            engines,
+            predictor_mae: score.mae(),
+            predictor_tau: score.kendall_tau(),
+        };
+    }
+
+    // SortedRL modes: one group pool, early-terminate at the batching
+    // threshold, clip/restart/resume per mode (mirrors simulate_sorted's
+    // harvest accounting so reports are directly comparable).
+    let total = workload.len();
+    let mut pending: Vec<(SimRequest, usize)> =
+        workload.iter().map(|r| (*r, 0usize)).collect();
+    let mut done = 0usize;
+    let mut wasted = 0u64;
+    let mut clipped = 0usize;
+    let mut dropped = 0usize;
+
+    while done < total {
+        let work = std::mem::take(&mut pending);
+        for (req, _) in &work {
+            staged_pred.insert(req.id, pred.predict(req.id as u64, req.prompt_len));
+        }
+        pool.stage(work, pred.as_ref());
+        let quota = update_batch.min(total - done);
+        let threshold = match mode {
+            SimMode::SortedOnPolicy => (quota * 3 / 4).max(1),
+            _ => quota,
+        };
+        let final_wave = total - done <= update_batch;
+        let occ_floor = (q_cap * 3 / 4).max(1);
+        let mut ready: Vec<SimRequest> = Vec::new();
+        loop {
+            let Some(f) = pool.tick() else { break };
+            for r in &f {
+                let p = staged_pred
+                    .remove(&r.id)
+                    .unwrap_or_else(|| pred.predict(r.id as u64, r.prompt_len));
+                score.push(p, r.output_len as f64);
+                pred.observe(r.id as u64, r.prompt_len, r.output_len);
+            }
+            ready.extend(f);
+            let remaining = total - done - ready.len();
+            if ready.len() >= threshold && remaining > 0 {
+                break; // early termination: harvest threshold reached
+            }
+            if final_wave && pool.queued() == 0 && pool.total_running() < occ_floor {
+                break; // batching floor: clip the stragglers
+            }
+        }
+        let mut terminated = pool.terminate_all();
+        pool.align_clocks();
+        // highest progress first — clipping candidates
+        terminated.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
+        for (req, progress) in terminated {
+            // preemption progress is a length floor the predictor can use
+            pred.observe_progress(req.id as u64, req.prompt_len, progress);
+            let need_clip = ready.len() < quota;
+            match mode {
+                SimMode::SortedOnPolicy => {
+                    if need_clip && progress > 0 {
+                        let mut c = req;
+                        c.output_len = progress;
+                        ready.push(c);
+                        clipped += 1;
+                    } else if final_wave {
+                        wasted += progress as u64;
+                        dropped += 1;
+                        done += 1;
+                    } else {
+                        wasted += progress as u64;
+                        pending.push((req, 0));
+                    }
+                }
+                SimMode::SortedPartial => {
+                    if final_wave {
+                        if progress > 0 {
+                            let mut c = req;
+                            c.output_len = progress;
+                            ready.push(c);
+                            clipped += 1;
+                        } else {
+                            dropped += 1;
+                            done += 1;
+                        }
+                    } else {
+                        pending.push((req, progress));
+                    }
+                }
+                SimMode::Baseline => unreachable!(),
+            }
+        }
+        if ready.is_empty() {
+            break;
+        }
+        done += ready.len();
+        harvests += 1;
+        let (ti, tu) = post_phase_costs(&ready, &cost);
+        infer_time += ti;
+        update_time += tu;
+    }
+
+    let rollout_time = pool.clock();
+    let useful = pool.tokens_out() - wasted;
+    let timeline = merge_timelines(&pool.engines);
+    let bubble = timeline.bubble_ratio(q_cap, rollout_time);
+    SimReport {
+        mode,
+        total_time: rollout_time + infer_time + update_time,
+        rollout_time,
+        update_time,
+        infer_time,
+        useful_tokens: useful,
+        wasted_tokens: wasted,
+        bubble_ratio: bubble,
+        throughput: useful as f64 / rollout_time,
+        timeline,
+        harvests,
+        clipped,
+        dropped,
+        engines,
+        predictor_mae: score.mae(),
+        predictor_tau: score.kendall_tau(),
     }
 }
 
@@ -600,5 +1016,115 @@ mod tests {
         let w2 = uniform_workload(64, 200);
         let r2 = simulate(SimMode::Baseline, &w2, 64, 64, CostModel::default());
         assert!(r2.update_time > r.update_time * 1.5);
+    }
+
+    // ------------------------------------------------------------------
+    // multi-engine pool
+    // ------------------------------------------------------------------
+
+    use crate::sched::{DispatchPolicy, PredictorKind};
+
+    #[test]
+    fn pool_baseline_conserves_requests_and_tokens() {
+        let w = longtail_workload(200, 2048, 7);
+        for engines in [1usize, 2, 4] {
+            for policy in DispatchPolicy::ALL {
+                let r = simulate_pool(SimMode::Baseline, &w, engines, 64, 50,
+                                      CostModel::default(), policy,
+                                      PredictorKind::Oracle);
+                assert_eq!(r.timeline.finished() as usize, 200,
+                           "{engines} engines, {}", policy.name());
+                assert_eq!(r.useful_tokens,
+                           w.iter().map(|x| x.output_len as u64).sum::<u64>());
+                assert_eq!(r.wasted_tokens, 0);
+                assert_eq!(r.engines, engines);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_oracle_predictor_is_exact() {
+        let w = longtail_workload(128, 1024, 8);
+        let r = simulate_pool(SimMode::Baseline, &w, 2, 32, 32,
+                              CostModel::default(),
+                              DispatchPolicy::ShortestPredictedFirst,
+                              PredictorKind::Oracle);
+        assert!(r.predictor_mae < 1e-9, "oracle MAE {}", r.predictor_mae);
+        // ties (cap-clipped lengths, duplicate body lengths) keep tau-a
+        // slightly below 1 even for a perfect oracle
+        assert!(r.predictor_tau > 0.9, "oracle tau {}", r.predictor_tau);
+    }
+
+    #[test]
+    fn pool_sorted_modes_account_every_request() {
+        let w = longtail_workload(160, 2048, 9);
+        for mode in [SimMode::SortedOnPolicy, SimMode::SortedPartial] {
+            for engines in [1usize, 4] {
+                let r = simulate_pool(mode, &w, engines, 64, 40,
+                                      CostModel::default(),
+                                      DispatchPolicy::ShortestPredictedFirst,
+                                      PredictorKind::History);
+                assert_eq!(r.timeline.finished() as usize + r.clipped + r.dropped,
+                           160, "{mode:?} x{engines}");
+                assert!(r.useful_tokens > 0);
+                assert!(r.bubble_ratio >= 0.0 && r.bubble_ratio <= 1.0);
+                if mode == SimMode::SortedPartial {
+                    assert_eq!(r.wasted_tokens, 0, "partial never discards");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_single_engine_partial_beats_baseline_bubble() {
+        let w = longtail_workload(512, 8192, 1);
+        let base = simulate(SimMode::Baseline, &w, 128, 128, CostModel::default());
+        let part = simulate_pool(SimMode::SortedPartial, &w, 1, 128, 128,
+                                 CostModel::default(),
+                                 DispatchPolicy::ShortestPredictedFirst,
+                                 PredictorKind::Oracle);
+        assert!(part.bubble_ratio < base.bubble_ratio / 2.0,
+                "pool partial {} vs baseline {}", part.bubble_ratio, base.bubble_ratio);
+    }
+
+    #[test]
+    fn pool_multi_engine_throughput_scales() {
+        let w = longtail_workload(256, 4096, 11);
+        let one = simulate_pool(SimMode::SortedPartial, &w, 1, 128, 64,
+                                CostModel::default(),
+                                DispatchPolicy::ShortestPredictedFirst,
+                                PredictorKind::Oracle);
+        let four = simulate_pool(SimMode::SortedPartial, &w, 4, 128, 64,
+                                 CostModel::default(),
+                                 DispatchPolicy::ShortestPredictedFirst,
+                                 PredictorKind::Oracle);
+        // 4 engines of 32 lanes stream weights in parallel: wall time drops
+        assert!(four.rollout_time < one.rollout_time,
+                "4-engine {}s vs 1-engine {}s", four.rollout_time, one.rollout_time);
+        assert!(four.throughput > one.throughput);
+    }
+
+    #[test]
+    fn pool_makespan_runs_everything() {
+        let w = longtail_workload(96, 1024, 13);
+        for policy in DispatchPolicy::ALL {
+            let m = pool_makespan(&w, 3, 24, CostModel::default(), policy,
+                                  PredictorKind::History);
+            assert!(m > 0.0 && m.is_finite(), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn pool_sjf_beats_static_round_robin_makespan() {
+        let w = longtail_workload(512, 8192, 1);
+        let cost = CostModel::default();
+        let rr = pool_makespan(&w, 4, 128, cost, DispatchPolicy::RoundRobin,
+                               PredictorKind::History);
+        let sjf = pool_makespan(&w, 4, 128, cost,
+                                DispatchPolicy::ShortestPredictedFirst,
+                                PredictorKind::Oracle);
+        // late-binding + predicted ordering rebalances the long tail that
+        // static striping strands on one engine
+        assert!(sjf < rr, "sjf {sjf} !< round-robin {rr}");
     }
 }

@@ -42,6 +42,7 @@ fn short_cfg(scheduler: SchedulerKind) -> LoopConfig {
         eval_every: 0,
         eval_limit: 8,
         verbose: false,
+        ..LoopConfig::default()
     }
 }
 
@@ -118,6 +119,25 @@ fn partial_mode_produces_resumed_trajectories() {
     let mut ctl = Controller::new(&rt, Box::new(task), ds, cfg);
     let result = ctl.run(&mut state).unwrap();
     assert!(!result.rows.is_empty());
+}
+
+#[test]
+fn multi_engine_pool_runs_end_to_end() {
+    // The sched layer: 2 engines, history predictor, predicted-SJF
+    // dispatch, with partial-mode straggler preemption enabled.
+    let Some(rt) = runtime() else { return };
+    let task = MathTask;
+    let ds = Dataset::generate(&task, 6, 0.2, 21);
+    let mut state = rt.init(29).unwrap();
+    let mut cfg = short_cfg(SchedulerKind::SortedPartial);
+    cfg.num_engines = 2;
+    cfg.predictor = sortedrl::sched::PredictorKind::History;
+    cfg.dispatch = sortedrl::sched::DispatchPolicy::ShortestPredictedFirst;
+    let mut ctl = Controller::new(&rt, Box::new(MathTask), ds, cfg);
+    let result = ctl.run(&mut state).unwrap();
+    assert_eq!(result.rows.len(), 3);
+    assert!(result.total_rollout_tokens > 0);
+    assert!(result.bubble_ratio >= 0.0 && result.bubble_ratio <= 1.0);
 }
 
 #[test]

@@ -1,0 +1,173 @@
+//! Property + regression tests for the `sched` subsystem's pool semantics,
+//! exercised through the discrete-event simulator mirror (`simulate_pool`),
+//! which shares the dispatch/preempt/requeue/drain state machine shape with
+//! the real `EnginePool` (that one needs PJRT artifacts and is covered by
+//! `pipeline_integration.rs`).
+//!
+//! The conservation property is the issue's contract: across dispatch,
+//! preemption, requeue and drain, NO request is lost or duplicated, for
+//! every `DispatchPolicy` x `PredictorKind` x `SimMode` x engine count.
+
+use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
+use sortedrl::sim::{
+    longtail_workload, pool_makespan, simulate, simulate_pool, CostModel, SimMode,
+};
+use sortedrl::util::proptest::{property, Gen};
+
+const MODES: [SimMode; 3] =
+    [SimMode::Baseline, SimMode::SortedOnPolicy, SimMode::SortedPartial];
+
+/// No request lost or duplicated: natural finishes + clipped harvests +
+/// dropped prompts account for the whole workload exactly once, and token
+/// accounting (useful + wasted == generated) stays consistent, under
+/// randomized pool geometry and every dispatch policy.
+#[test]
+fn pool_conserves_requests_for_every_policy() {
+    property("pool request conservation", 60, |g: &mut Gen| {
+        let n = g.usize_in(16..120);
+        let cap = g.usize_in(64..2048);
+        let engines = g.usize_in(1..5);
+        let q_total = engines * g.usize_in(2..17); // divisible by engines
+        let update_batch = g.usize_in(4..40);
+        let mode = *g.pick(&MODES);
+        let policy = *g.pick(&DispatchPolicy::ALL);
+        let predictor = *g.pick(&PredictorKind::ALL);
+        let seed = g.usize_in(0..1_000_000) as u64;
+        let w = longtail_workload(n, cap, seed);
+        let r = simulate_pool(mode, &w, engines, q_total, update_batch,
+                              CostModel::default(), policy, predictor);
+        let ctx = format!(
+            "n={n} cap={cap} engines={engines} q={q_total} u={update_batch} \
+             {mode:?} {} {}",
+            policy.name(),
+            predictor.name()
+        );
+        assert_eq!(
+            r.timeline.finished() as usize + r.clipped + r.dropped,
+            n,
+            "request conservation violated: {ctx}"
+        );
+        assert!(r.useful_tokens + r.wasted_tokens == r.timeline.tokens_out(),
+                "token conservation violated: {ctx}");
+        assert!(r.useful_tokens > 0, "{ctx}");
+        assert!((0.0..=1.0).contains(&r.bubble_ratio), "{ctx}");
+        assert!(r.throughput.is_finite() && r.rollout_time > 0.0, "{ctx}");
+        if mode == SimMode::SortedPartial {
+            assert_eq!(r.wasted_tokens, 0, "partial mode discards nothing: {ctx}");
+        }
+        if mode == SimMode::Baseline {
+            assert_eq!(r.clipped, 0, "{ctx}");
+            assert_eq!(r.dropped, 0, "{ctx}");
+            assert_eq!(r.useful_tokens,
+                       w.iter().map(|x| x.output_len as u64).sum::<u64>(),
+                       "{ctx}");
+        }
+    });
+}
+
+/// Same conservation contract for run-to-completion makespan runs: the
+/// makespan is finite/positive and never shorter than the serial decode
+/// time of the longest request.
+#[test]
+fn pool_makespan_bounded_below_by_longest_request() {
+    property("pool makespan lower bound", 40, |g: &mut Gen| {
+        let n = g.usize_in(16..100);
+        let cap = g.usize_in(64..1024);
+        let engines = g.usize_in(1..5);
+        let q_total = engines * g.usize_in(2..13);
+        let policy = *g.pick(&DispatchPolicy::ALL);
+        let predictor = *g.pick(&PredictorKind::ALL);
+        let w = longtail_workload(n, cap, g.usize_in(0..1_000_000) as u64);
+        let cost = CostModel::default();
+        let m = pool_makespan(&w, engines, q_total, cost, policy, predictor);
+        // the longest request needs one decode iteration per output token,
+        // each costing at least t_weights + 1 * t_token on its engine
+        let longest = w.iter().map(|r| r.output_len).max().unwrap() as f64;
+        assert!(m.is_finite() && m > 0.0);
+        assert!(m >= longest * (cost.t_weights + cost.t_token),
+                "makespan {m} below serial decode floor ({longest} tokens)");
+    });
+}
+
+/// Predictors never panic and keep ordering-compatible outputs under
+/// random observe/predict interleavings (the pool calls them from every
+/// dispatch and preemption site).
+#[test]
+fn predictors_total_under_random_churn() {
+    property("predictor churn", 100, |g: &mut Gen| {
+        let kind = *g.pick(&PredictorKind::ALL);
+        let mut p = make_predictor(kind);
+        for _ in 0..g.usize_in(1..200) {
+            let key = g.usize_in(0..32) as u64;
+            let plen = g.usize_in(1..512);
+            match g.usize_in(0..3) {
+                0 => p.observe(key, plen, g.usize_in(1..4096)),
+                1 => p.observe_progress(key, plen, g.usize_in(0..4096)),
+                _ => {
+                    let v = p.predict(key, plen);
+                    assert!(v.is_finite(), "{} produced {v}", p.name());
+                }
+            }
+        }
+    });
+}
+
+/// Deterministic-seed regression pinning the bubble-ratio ordering on the
+/// paper's Fig. 5 operating point:
+///
+///     multi-engine SortedPartial <= single-engine SortedPartial <= Baseline
+///
+/// Multi-engine SJF packs similar predicted lengths per engine, so each
+/// engine's lanes drain together AND per-engine prefill stalls shrink;
+/// sharding must not cost occupancy.
+#[test]
+fn bubble_ordering_multi_le_single_le_baseline() {
+    let w = longtail_workload(512, 8192, 1);
+    let cost = CostModel::default();
+    let base = simulate(SimMode::Baseline, &w, 128, 128, cost);
+    let single = simulate_pool(SimMode::SortedPartial, &w, 1, 128, 128, cost,
+                               DispatchPolicy::ShortestPredictedFirst,
+                               PredictorKind::Oracle);
+    let multi = simulate_pool(SimMode::SortedPartial, &w, 4, 128, 128, cost,
+                              DispatchPolicy::ShortestPredictedFirst,
+                              PredictorKind::Oracle);
+    assert!(single.bubble_ratio <= base.bubble_ratio,
+            "single partial {} > baseline {}",
+            single.bubble_ratio, base.bubble_ratio);
+    // small relative tolerance: at sub-percent bubbles the harvest-barrier
+    // alignment skew is the same order as the packing win; a real sharding
+    // regression shows up as a multiple, not a few tens of percent
+    assert!(multi.bubble_ratio <= single.bubble_ratio * 1.25,
+            "multi partial {} > single partial {}",
+            multi.bubble_ratio, single.bubble_ratio);
+    // and the gap to baseline is structural, not noise (paper: 74% -> ~3%)
+    assert!(single.bubble_ratio < base.bubble_ratio / 2.0,
+            "single partial {} not < half of baseline {}",
+            single.bubble_ratio, base.bubble_ratio);
+    assert!(multi.bubble_ratio < base.bubble_ratio / 2.0);
+    // sharding buys wall-clock: parallel weight streaming
+    assert!(multi.rollout_time < single.rollout_time);
+}
+
+/// Predicted-SJF dispatch beats static round-robin on makespan for the
+/// long-tail workload (deterministic seed — the sched_bench headline).
+#[test]
+fn sjf_dispatch_beats_round_robin_makespan() {
+    let w = longtail_workload(512, 8192, 1);
+    let cost = CostModel::default();
+    let rr = pool_makespan(&w, 4, 128, cost, DispatchPolicy::RoundRobin,
+                           PredictorKind::History);
+    let ll = pool_makespan(&w, 4, 128, cost, DispatchPolicy::LeastLoaded,
+                           PredictorKind::History);
+    let sjf_oracle = pool_makespan(&w, 4, 128, cost,
+                                   DispatchPolicy::ShortestPredictedFirst,
+                                   PredictorKind::Oracle);
+    let sjf_history = pool_makespan(&w, 4, 128, cost,
+                                    DispatchPolicy::ShortestPredictedFirst,
+                                    PredictorKind::History);
+    assert!(sjf_oracle < rr, "sjf(oracle) {sjf_oracle} !< round-robin {rr}");
+    // the acceptance claim is about PREDICTED sjf, not just the oracle
+    // ceiling: late-binding pull alone must already beat static striping
+    assert!(sjf_history < rr, "sjf(history) {sjf_history} !< round-robin {rr}");
+    assert!(ll.is_finite() && ll > 0.0);
+}

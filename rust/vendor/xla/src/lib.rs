@@ -1,0 +1,223 @@
+//! Vendored offline stub of the `xla` (xla-rs) binding surface that
+//! `sortedrl::runtime` compiles against.
+//!
+//! The real crate wraps the XLA C++ client + PJRT; that native dependency
+//! cannot be built offline, so this stub provides the same API shape with
+//! two behaviors:
+//!
+//!   * **Host literal plumbing works for real** — `Literal::scalar/vec1/
+//!     reshape/to_vec/get_first_element` store and convert data faithfully,
+//!     so every code path up to device execution is exercised by tests.
+//!   * **Device entry points fail fast** — `HloModuleProto::from_text_file`,
+//!     `PjRtClient::compile` and `PjRtLoadedExecutable::execute` return an
+//!     "XLA unavailable" error, which `Runtime::load` surfaces and the
+//!     integration tests treat as a skip (they already skip when
+//!     `artifacts/` is absent, which is the same situation).
+//!
+//! Swapping in the real bindings = pointing the workspace `xla` dependency
+//! at xla-rs and providing `XLA_EXTENSION_DIR`; the sortedrl call sites are
+//! written against the subset that both implementations share.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT native bindings unavailable (offline stub; \
+         see DESIGN.md §Substitutions)"
+    ))
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host tensor: a typed buffer plus dims (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Element types the stub can marshal (the manifest only uses f32/i32).
+pub trait NativeType: Copy + Sized {
+    fn wrap(v: &[Self]) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: &[f32]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(x) => Some(x.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: &[i32]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(x) => Some(x.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(&[v]), dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v), dims: vec![v.len() as i64] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape: cannot view {have} elements as {dims:?}"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("to_vec: dtype mismatch".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("get_first_element: empty literal".into()))
+    }
+
+    /// Tuple literals only exist as device execution results, which the
+    /// stub cannot produce; kept for API compatibility.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the native bindings).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn literal_scalar_i32() {
+        let l = Literal::scalar(7i32);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn device_paths_fail_fast() {
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.compile(&XlaComputation).is_err());
+    }
+}
