@@ -1,30 +1,39 @@
-//! The SortedRL length-aware controller (paper §3) + baseline schedulers.
+//! The SortedRL length-aware controller (paper §3), driven by the unified
+//! `SchedulePolicy` decision API.
 //!
-//! One controller drives the whole RL loop: it pulls prompts from the
-//! dataloader under the grouped cache-aware loading rule, oversubscribes
-//! the rollout engine, early-terminates on the batching threshold (ready
-//! trajectories >= update batch), harvests completed rollouts in completion
-//! (== length) order, scavenges interrupted ones per the off-policiness
-//! mode, and feeds selectively-composed batches to the trainer.
+//! The controller owns the RL loop's *state* — dataloader, rollout buffer,
+//! engine pool, trainer — and exposes it to the generic policy driver
+//! (`sched::policy::drive`) through [`LiveBackend`], the live
+//! `ScheduleBackend`.  All scheduling *decisions* (when to load prompts,
+//! admit, early-terminate, clip, train) live in `sched::policy` and are
+//! shared verbatim with the simulator backend, so a policy behaves
+//! identically at paper scale in the simulator and in a real training run.
 //!
-//! Scheduler variants cover every strategy the paper evaluates:
+//! Scheduler variants cover every strategy the paper evaluates plus one:
 //!   * `SortedOnPolicy` / `SortedPartial` — SortedRL's two modes (§3.2)
 //!   * `Baseline`   — large rollout batch, sync barrier, k sequential
 //!     off-policy updates (the canonical VeRL-style pipeline)
 //!   * `PostHocSort` — ablation: baseline + sort by length before updating
 //!   * `NoGroupedRollout` — ablation: oversubscription without the group
 //!     barrier (biases training to short responses; Fig. 6a)
+//!   * `AsyncUpdate` — trainer updates overlap continued decoding (no
+//!     harvest barrier; bounded staleness via periodic partial re-sync)
 
 use crate::coordinator::buffer::{Lifecycle, Mode, RolloutBuffer};
 use crate::coordinator::trainer::{Trainer, UpdateLog};
 use crate::data::{DataLoader, Dataset};
-use crate::metrics::PhaseClock;
+use crate::metrics::{bubble_fraction, PhaseClock};
 use crate::rl::advantage::AdvantageKind;
-use crate::rollout::EngineConfig;
+use crate::rollout::{EngineConfig, Rollout};
 use crate::runtime::{ParamState, Runtime};
+use crate::sched::policy::{
+    drive, make_policy, HarvestAction, HarvestItem, PolicyParams, SchedView,
+    ScheduleBackend,
+};
 use crate::sched::{DispatchPolicy, EnginePool, PoolConfig, PredictorKind};
 use crate::tasks::{Reward, Task};
 use anyhow::Result;
+use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerKind {
@@ -33,9 +42,19 @@ pub enum SchedulerKind {
     Baseline,
     PostHocSort,
     NoGroupedRollout,
+    AsyncUpdate,
 }
 
 impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 6] = [
+        SchedulerKind::SortedOnPolicy,
+        SchedulerKind::SortedPartial,
+        SchedulerKind::Baseline,
+        SchedulerKind::PostHocSort,
+        SchedulerKind::NoGroupedRollout,
+        SchedulerKind::AsyncUpdate,
+    ];
+
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "sorted-on-policy" | "on-policy" => Self::SortedOnPolicy,
@@ -43,6 +62,7 @@ impl SchedulerKind {
             "baseline" => Self::Baseline,
             "post-hoc-sort" => Self::PostHocSort,
             "no-grouped" => Self::NoGroupedRollout,
+            "async" | "async-update" => Self::AsyncUpdate,
             _ => return None,
         })
     }
@@ -54,7 +74,20 @@ impl SchedulerKind {
             Self::Baseline => "baseline",
             Self::PostHocSort => "post-hoc-sort",
             Self::NoGroupedRollout => "no-grouped",
+            Self::AsyncUpdate => "async",
         }
+    }
+
+    /// Canonical names, '|'-joined — what a failed parse should suggest.
+    pub fn valid_names() -> String {
+        let names: Vec<&'static str> = Self::ALL.iter().map(|k| k.name()).collect();
+        names.join("|")
+    }
+
+    /// True for kinds whose interrupted generations keep their progress
+    /// (enables APRIL-style straggler preemption in the engine pool).
+    pub fn resumes_partials(&self) -> bool {
+        matches!(self, Self::SortedPartial | Self::AsyncUpdate)
     }
 }
 
@@ -151,9 +184,10 @@ pub struct Controller<'rt> {
     loader: DataLoader,
     cfg: LoopConfig,
     buffer: RolloutBuffer,
-    // occupancy aggregation across engine phases
+    // rollout-phase occupancy aggregation (paper Eq. 4 numerator/denominator:
+    // idle capacity-time and TOTAL capacity-time, both in lane-seconds)
     idle_area: f64,
-    busy_span: f64,
+    capacity_area: f64,
     rollout_tokens: u64,
     discarded: u64,
 }
@@ -170,7 +204,7 @@ impl<'rt> Controller<'rt> {
             cfg,
             buffer: RolloutBuffer::new(),
             idle_area: 0.0,
-            busy_span: 0.0,
+            capacity_area: 0.0,
             rollout_tokens: 0,
             discarded: 0,
         }
@@ -189,8 +223,8 @@ impl<'rt> Controller<'rt> {
     }
 
     /// Build the rollout engine pool. `preempt` enables APRIL-style
-    /// straggler requeue (partial mode only — on-policy semantics would
-    /// discard the preempted tokens anyway).
+    /// straggler requeue (partial-resuming modes only — on-policy semantics
+    /// would discard the preempted tokens anyway).
     fn make_pool(&self, greedy: bool, preempt: bool) -> EnginePool<'rt> {
         EnginePool::new(self.rt, self.engine_cfg(greedy), PoolConfig {
             num_engines: self.cfg.num_engines.max(1),
@@ -214,20 +248,24 @@ impl<'rt> Controller<'rt> {
         self.cfg.max_new.min(t.saturating_sub(max_prompt + 1))
     }
 
-    fn load_prompts(&mut self, n_prompts: usize) {
+    /// Load `n_prompts` prompts (G samples each); returns entries created.
+    fn load_prompts(&mut self, n_prompts: usize) -> usize {
         let max_new = self.effective_max_new();
+        let mut count = 0;
         for idx in self.loader.next_batch(n_prompts) {
             let p = &self.dataset.train[idx];
             for _ in 0..self.cfg.samples_per_prompt {
                 self.buffer.load_prompt(idx, p.id, p.prompt.clone(), max_new);
+                count += 1;
             }
         }
+        count
     }
 
     fn absorb_engine_occupancy(&mut self, pool: &EnginePool) {
-        let (idle, busy, tokens) = pool.occupancy();
+        let (idle, capacity, tokens) = pool.occupancy();
         self.idle_area += idle;
-        self.busy_span += busy;
+        self.capacity_area += capacity;
         self.rollout_tokens += tokens;
         if self.cfg.verbose && pool.score.count() > 0 {
             eprintln!(
@@ -242,13 +280,14 @@ impl<'rt> Controller<'rt> {
         }
     }
 
-    /// Aggregate bubble ratio over every rollout phase so far.
+    /// Aggregate bubble ratio over every rollout phase so far: idle
+    /// capacity-time / total capacity-time (paper Eq. 4).  The paper's
+    /// denominator is total pipeline time; ours is the rollout phase only,
+    /// because the engine clock is virtual (it advances only inside engine
+    /// calls), so trainer/eval host time can never masquerade as engine
+    /// idleness.  See `metrics::bubble_fraction` for the pinned definition.
     pub fn bubble_ratio(&self) -> f64 {
-        if self.busy_span == 0.0 {
-            0.0
-        } else {
-            self.idle_area / self.busy_span
-        }
+        bubble_fraction(self.idle_area, self.capacity_area)
     }
 
     // ------------------------------------------------------------------
@@ -294,41 +333,42 @@ impl<'rt> Controller<'rt> {
     }
 
     // ------------------------------------------------------------------
-    // main loop
+    // main loop — policy driver
     // ------------------------------------------------------------------
 
+    /// Run the configured scheduler through the unified policy driver.
+    /// The decision sequence comes from `sched::policy`; this method only
+    /// wires the live backend together and aggregates the outcome.
     pub fn run(&mut self, state: &mut ParamState) -> Result<RunResult> {
-        let mut trainer = Trainer::new(self.rt, self.cfg.adv, self.cfg.lr);
-        let mut rows: Vec<LogRow> = Vec::new();
-        let mut phase_clock = PhaseClock::default();
         let train_secs_at_start = self.rt.stats_snapshot().train_secs;
+        let params = PolicyParams {
+            refill_prompts: (self.cfg.group_size * self.cfg.rollout_prompts).max(1),
+            entries_per_prompt: self.cfg.samples_per_prompt.max(1),
+            update_batch: self.cfg.update_batch.max(1),
+        };
+        let mut policy = make_policy(self.cfg.scheduler, params);
+        let preempt = self.cfg.scheduler.resumes_partials();
+        let pool = self.make_pool(false, preempt);
+        let trainer = Trainer::new(self.rt, self.cfg.adv, self.cfg.lr);
+        let max_updates = self.cfg.max_updates;
+        let mut backend = LiveBackend {
+            ctl: self,
+            state,
+            pool,
+            trainer,
+            rows: Vec::new(),
+            stash: BTreeMap::new(),
+            max_updates,
+        };
+        drive(policy.as_mut(), &mut backend)?;
+        let LiveBackend { pool, rows, .. } = backend;
 
-        while trainer.updates() < self.cfg.max_updates {
-            match self.cfg.scheduler {
-                SchedulerKind::SortedOnPolicy => {
-                    self.run_group(state, &mut trainer, Mode::OnPolicy, &mut rows,
-                                   &mut phase_clock)?;
-                }
-                SchedulerKind::SortedPartial => {
-                    self.run_group(state, &mut trainer, Mode::Partial, &mut rows,
-                                   &mut phase_clock)?;
-                }
-                SchedulerKind::Baseline => {
-                    self.run_baseline(state, &mut trainer, false, &mut rows,
-                                      &mut phase_clock)?;
-                }
-                SchedulerKind::PostHocSort => {
-                    self.run_baseline(state, &mut trainer, true, &mut rows,
-                                      &mut phase_clock)?;
-                }
-                SchedulerKind::NoGroupedRollout => {
-                    self.run_no_grouped(state, &mut trainer, &mut rows,
-                                        &mut phase_clock)?;
-                }
-            }
-        }
-
-        phase_clock.update = self.rt.stats_snapshot().train_secs - train_secs_at_start;
+        self.absorb_engine_occupancy(&pool);
+        let phase_clock = PhaseClock {
+            rollout: pool.host_secs(),
+            inference: 0.0,
+            update: self.rt.stats_snapshot().train_secs - train_secs_at_start,
+        };
         let final_eval = self.evaluate(state)?;
         Ok(RunResult {
             rows,
@@ -368,218 +408,189 @@ impl<'rt> Controller<'rt> {
         });
         Ok(())
     }
+}
 
-    /// SortedRL (both modes): one group = n*b prompts, consumed fully
-    /// before new prompts load (cache-aware loading, §3.1).
-    fn run_group(&mut self, state: &mut ParamState, trainer: &mut Trainer,
-                 mode: Mode, rows: &mut Vec<LogRow>,
-                 phase_clock: &mut PhaseClock) -> Result<()> {
-        let pool = self.cfg.group_size * self.cfg.rollout_prompts;
-        self.load_prompts(pool);
-        let mut engine = self.make_pool(false, mode == Mode::Partial);
+/// The live `ScheduleBackend`: `EnginePool` + `RolloutBuffer` + `Trainer`
+/// + `Runtime`, exposed to the generic policy driver.  The simulator mirror
+/// is `sim::SimBackend`; both execute the same decision vocabulary.
+struct LiveBackend<'a, 'rt> {
+    ctl: &'a mut Controller<'rt>,
+    state: &'a mut ParamState,
+    pool: EnginePool<'rt>,
+    trainer: Trainer<'rt>,
+    rows: Vec<LogRow>,
+    /// Partial rollouts from the current harvest, keyed by rid, so
+    /// `resolve` can route tokens + log-probs into the buffer.
+    stash: BTreeMap<u64, Rollout>,
+    max_updates: usize,
+}
 
-        while !self.buffer.all_consumed() && trainer.updates() < self.cfg.max_updates {
-            // dispatch everything schedulable (oversubscription)
-            let rids = self.buffer.schedulable();
-            if !rids.is_empty() {
-                engine.submit(self.buffer.dispatch(&rids));
-            }
-            let unconsumed = self.buffer.len() - self.buffer.count(Lifecycle::Consumed);
-            let quota = self.cfg.update_batch.min(unconsumed);
-            // On-policy fires once most of the quota completed and clips the
-            // top-progress runners to fill the batch (waiting for the last
-            // completions is where discarded-progress waste piles up);
-            // partial waits for full completions (resume is free).
-            let threshold = match mode {
-                Mode::OnPolicy => (quota * 3 / 4).max(1),
-                Mode::Partial => quota,
-            };
-            let final_wave = unconsumed <= self.cfg.update_batch;
-            let occ_floor = (engine.lane_count() * 3 / 4).max(1);
-            // generate until the batching threshold fires or the pool drains
-            loop {
-                engine.admit(state)?;
-                if engine.running() == 0 && engine.queued() == 0 {
-                    break;
-                }
-                engine.step(state)?;
-                for r in engine.drain_finished() {
-                    self.buffer.record_finished(&r);
-                }
-                let ready = self.buffer.count(Lifecycle::Ready);
-                if ready >= threshold && !final_wave {
-                    break; // early termination (batching threshold)
-                }
-                if final_wave && engine.queued() == 0 && engine.running() < occ_floor {
-                    break; // batching floor: clip the stragglers
-                }
-            }
-            // a request can finish inside admit() itself (immediate EOS, or
-            // a resumed straggler admitted at its cap) right before the
-            // loop breaks — drain once more so it isn't lost in the engine
-            for r in engine.drain_finished() {
-                self.buffer.record_finished(&r);
-            }
-            // harvest: terminate in-flight, clip or scavenge per mode
-            let (mut partials, queued) = engine.terminate_all(state.version);
-            partials.sort_by(|a, b| b.response.len().cmp(&a.response.len()));
-            let mut ready_count = self.buffer.count(Lifecycle::Ready);
-            for r in &partials {
-                let clip = !r.response.is_empty()
-                    && (final_wave
-                        || (mode == Mode::OnPolicy && ready_count < quota));
-                if clip {
-                    self.buffer.record_clipped(r);
-                    ready_count += 1;
-                } else {
-                    self.buffer.record_terminated(r, mode);
-                }
-            }
-            if final_wave {
-                // never-scheduled leftovers at group end are dropped
-                let stragglers: Vec<u64> = queued.iter().map(|q| q.rid).collect();
-                for q in queued {
-                    self.buffer.record_requeued(q.rid);
-                }
-                let leftover: Vec<u64> = self
-                    .buffer
-                    .schedulable()
-                    .into_iter()
-                    .filter(|rid| stragglers.contains(rid))
-                    .collect();
-                self.discarded += self.buffer.consume_untrained(&leftover) as u64;
-            } else {
-                for q in queued {
-                    self.buffer.record_requeued(q.rid);
-                }
-            }
-            debug_assert!(self.buffer.check_invariants().is_ok());
-
-            // consume up to update_batch ready trajectories, completion order
-            let ready = self.buffer.ready_rids();
-            if ready.is_empty() {
-                break; // nothing finished (shouldn't happen with sane caps)
-            }
-            let take: Vec<u64> = ready
-                .into_iter()
-                .take(self.cfg.update_batch)
-                .collect();
-            let entries = self.buffer.consume(&take);
-            let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
-            let log = trainer.update(state, &entries, &rewards)?;
-            self.log_update(rows, state, log, engine.host_secs())?;
+impl ScheduleBackend for LiveBackend<'_, '_> {
+    fn view(&self) -> SchedView {
+        let buffer = &self.ctl.buffer;
+        SchedView {
+            running: self.pool.running(),
+            queued: self.pool.queued(),
+            ready: buffer.count(Lifecycle::Ready),
+            fresh: buffer.count(Lifecycle::Fresh),
+            unconsumed: buffer.len() - buffer.count(Lifecycle::Consumed),
+            lanes: self.pool.lane_count(),
+            updates: self.trainer.updates(),
         }
-        self.absorb_engine_occupancy(&engine);
-        phase_clock.rollout += engine.host_secs();
-        self.buffer.clear_consumed();
+    }
+
+    fn schedulable(&self) -> Vec<u64> {
+        self.ctl.buffer.schedulable()
+    }
+
+    fn ready_rids(&self) -> Vec<u64> {
+        self.ctl.buffer.ready_rids()
+    }
+
+    fn ready_len(&self, rid: u64) -> usize {
+        self.ctl.buffer.get(rid).map(|e| e.partial.len()).unwrap_or(0)
+    }
+
+    fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
+        Ok(self.ctl.load_prompts(prompts))
+    }
+
+    fn admit(&mut self, rids: &[u64]) -> Result<()> {
+        let reqs = self.ctl.buffer.dispatch(rids);
+        self.pool.submit(reqs);
         Ok(())
     }
 
-    /// Canonical baseline: R-prompt rollout batch, sync barrier, then
-    /// ceil(R*G / U) sequential updates on the same (aging) data.
-    /// `sort_post_hoc` = the Fig.6a ablation.
-    fn run_baseline(&mut self, state: &mut ParamState, trainer: &mut Trainer,
-                    sort_post_hoc: bool, rows: &mut Vec<LogRow>,
-                    phase_clock: &mut PhaseClock) -> Result<()> {
-        // baseline consumes group_size*b prompts per iteration so data
-        // volume matches the sorted runs
-        let pool = self.cfg.group_size * self.cfg.rollout_prompts;
-        self.load_prompts(pool);
-        let mut engine = self.make_pool(false, false);
-        let rids = self.buffer.schedulable();
-        engine.submit(self.buffer.dispatch(&rids));
-        let rollouts = engine.run_to_completion(state)?;
+    fn step(&mut self) -> Result<usize> {
+        self.pool.admit(self.state)?;
+        if self.pool.running() > 0 {
+            self.pool.step(self.state)?;
+        }
+        let rollouts = self.pool.drain_finished();
         for r in &rollouts {
-            self.buffer.record_finished(r);
+            self.ctl.buffer.record_finished(r);
         }
-        self.absorb_engine_occupancy(&engine);
-        phase_clock.rollout += engine.host_secs();
+        Ok(rollouts.len())
+    }
 
-        let mut order: Vec<u64> = if sort_post_hoc {
-            // sort by response length ascending AFTER full generation
-            let mut v: Vec<(usize, u64)> = rollouts
-                .iter()
-                .map(|r| (r.response.len(), r.request.rid))
-                .collect();
-            v.sort();
-            v.into_iter().map(|(_, rid)| rid).collect()
-        } else {
-            rollouts.iter().map(|r| r.request.rid).collect()
-        };
-
-        while !order.is_empty() && trainer.updates() < self.cfg.max_updates {
-            let take: Vec<u64> = order
-                .drain(..self.cfg.update_batch.min(order.len()))
-                .collect();
-            let entries = self.buffer.consume(&take);
-            let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
-            let log = trainer.update(state, &entries, &rewards)?;
-            self.log_update(rows, state, log, engine.host_secs())?;
+    fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
+        // a request can finish inside admit() itself (immediate EOS, or a
+        // resumed straggler admitted at its cap) — collect those first so
+        // they are harvested as completions, not partials
+        for r in self.pool.drain_finished() {
+            self.ctl.buffer.record_finished(&r);
         }
-        self.buffer.clear_consumed();
+        let (mut partials, queued) = self.pool.terminate_all(self.state.version);
+        partials.sort_by(|a, b| {
+            b.response
+                .len()
+                .cmp(&a.response.len())
+                .then(a.request.rid.cmp(&b.request.rid))
+        });
+        self.stash.clear();
+        let mut items = Vec::with_capacity(partials.len() + queued.len());
+        for r in partials {
+            items.push(HarvestItem {
+                rid: r.request.rid,
+                progress: r.response.len(),
+                queued: false,
+            });
+            self.stash.insert(r.request.rid, r);
+        }
+        for q in queued {
+            items.push(HarvestItem { rid: q.rid, progress: 0, queued: true });
+        }
+        Ok(items)
+    }
+
+    fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()> {
+        let buffer = &mut self.ctl.buffer;
+        match (self.stash.remove(&item.rid), action) {
+            (Some(r), HarvestAction::Clip) => buffer.record_clipped(&r),
+            (Some(r), HarvestAction::Restart) => buffer.record_terminated(&r, Mode::OnPolicy),
+            (Some(r), HarvestAction::Resume | HarvestAction::Requeue) => {
+                buffer.record_terminated(&r, Mode::Partial)
+            }
+            (Some(r), HarvestAction::Drop) => {
+                buffer.record_terminated(&r, Mode::OnPolicy);
+                self.ctl.discarded += buffer.consume_untrained(&[r.request.rid]) as u64;
+            }
+            (None, HarvestAction::Drop) => {
+                buffer.record_requeued(item.rid);
+                self.ctl.discarded += buffer.consume_untrained(&[item.rid]) as u64;
+            }
+            (None, _) => buffer.record_requeued(item.rid),
+        }
+        debug_assert!(self.ctl.buffer.check_invariants().is_ok());
         Ok(())
     }
 
-    /// Ablation (Fig. 6a): oversubscription + early termination WITHOUT the
-    /// grouped loading barrier: the pool is continuously topped up with
-    /// fresh prompts and interrupted generations are abandoned, so training
-    /// data biases hard toward short responses.
-    fn run_no_grouped(&mut self, state: &mut ParamState, trainer: &mut Trainer,
-                      rows: &mut Vec<LogRow>, phase_clock: &mut PhaseClock)
-                      -> Result<()> {
-        let pool = self.cfg.group_size * self.cfg.rollout_prompts;
-        let mut engine = self.make_pool(false, false);
-        let mut iterations = 0usize;
-        while trainer.updates() < self.cfg.max_updates && iterations < 10_000 {
-            iterations += 1;
-            // top up: no barrier — fresh prompts stream in immediately
-            let deficit = pool.saturating_sub(self.buffer.count(Lifecycle::Fresh));
-            if deficit > 0 {
-                self.load_prompts(deficit / self.cfg.samples_per_prompt.max(1) + 1);
-            }
-            let rids = self.buffer.schedulable();
-            engine.submit(self.buffer.dispatch(&rids));
-            loop {
-                engine.admit(state)?;
-                if engine.running() == 0 && engine.queued() == 0 {
-                    break;
-                }
-                engine.step(state)?;
-                for r in engine.drain_finished() {
-                    self.buffer.record_finished(&r);
-                }
-                if self.buffer.count(Lifecycle::Ready) >= self.cfg.update_batch {
-                    break;
-                }
-            }
-            // catch completions that happened inside the final admit()
-            for r in engine.drain_finished() {
-                self.buffer.record_finished(&r);
-            }
-            let (partials, queued) = engine.terminate_all(state.version);
-            // abandon interrupted generations entirely (prompt starvation)
-            for r in &partials {
-                self.buffer.record_terminated(r, Mode::OnPolicy);
-            }
-            let abandoned: Vec<u64> = partials.iter().map(|r| r.request.rid).collect();
-            self.buffer.discard(&abandoned);
-            self.discarded += abandoned.len() as u64;
-            for q in queued {
-                self.buffer.record_requeued(q.rid);
-            }
-            let ready = self.buffer.ready_rids();
-            if ready.is_empty() {
-                continue;
-            }
-            let take: Vec<u64> = ready.into_iter().take(self.cfg.update_batch).collect();
-            let entries = self.buffer.consume(&take);
-            let rewards = trainer.grade(self.task.as_ref(), &self.dataset.train, &entries);
-            let log = trainer.update(state, &entries, &rewards)?;
-            self.log_update(rows, state, log, engine.host_secs())?;
-            self.buffer.clear_consumed();
-        }
-        self.absorb_engine_occupancy(&engine);
-        phase_clock.rollout += engine.host_secs();
+    fn preempt(&mut self, engine: usize, lane: usize) -> Result<()> {
+        self.pool.preempt(engine, lane, self.state.version);
         Ok(())
+    }
+
+    fn train(&mut self, rids: &[u64]) -> Result<()> {
+        let entries = self.ctl.buffer.consume(rids);
+        let rewards =
+            self.trainer
+                .grade(self.ctl.task.as_ref(), &self.ctl.dataset.train, &entries);
+        let log = self.trainer.update(self.state, &entries, &rewards)?;
+        let secs = self.pool.host_secs();
+        let mut rows = std::mem::take(&mut self.rows);
+        self.ctl.log_update(&mut rows, self.state, log, secs)?;
+        self.rows = rows;
+        debug_assert!(self.ctl.buffer.check_invariants().is_ok());
+        Ok(())
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.ctl.buffer.clear_consumed();
+        Ok(())
+    }
+
+    fn exhausted(&self) -> bool {
+        self.trainer.updates() >= self.max_updates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_kind_parse_name_round_trip() {
+        for kind in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::parse(kind.name()), Some(kind),
+                       "round trip failed for {}", kind.name());
+        }
+        // aliases
+        assert_eq!(SchedulerKind::parse("on-policy"),
+                   Some(SchedulerKind::SortedOnPolicy));
+        assert_eq!(SchedulerKind::parse("partial"),
+                   Some(SchedulerKind::SortedPartial));
+        assert_eq!(SchedulerKind::parse("async-update"),
+                   Some(SchedulerKind::AsyncUpdate));
+        assert_eq!(SchedulerKind::parse("definitely-not-a-scheduler"), None);
+    }
+
+    #[test]
+    fn valid_names_lists_every_variant() {
+        let names = SchedulerKind::valid_names();
+        for kind in SchedulerKind::ALL {
+            assert!(names.contains(kind.name()),
+                    "{} missing from valid_names(): {names}", kind.name());
+        }
+        assert!(names.contains("async"), "new scheduler must be advertised");
+    }
+
+    #[test]
+    fn resumes_partials_only_for_partial_modes() {
+        assert!(SchedulerKind::SortedPartial.resumes_partials());
+        assert!(SchedulerKind::AsyncUpdate.resumes_partials());
+        assert!(!SchedulerKind::SortedOnPolicy.resumes_partials());
+        assert!(!SchedulerKind::Baseline.resumes_partials());
+        assert!(!SchedulerKind::PostHocSort.resumes_partials());
+        assert!(!SchedulerKind::NoGroupedRollout.resumes_partials());
     }
 }

@@ -18,9 +18,14 @@
 //! `pool_makespan`) so 1-vs-N engine comparisons run at paper scale in
 //! milliseconds; `exp pool` and `benches/sched_bench.rs` drive it.
 
+pub mod policy;
 pub mod pool;
 pub mod predictor;
 
+pub use policy::{
+    drive, make_policy, Decision, Event, HarvestAction, HarvestItem, PolicyParams,
+    SchedView, SchedulePolicy, ScheduleBackend, ASYNC_SYNC_EVERY,
+};
 pub use pool::{resume_request, DispatchPolicy, EnginePool, PoolConfig};
 pub use predictor::{
     make_predictor, sjf_priority, BucketPredictor, HistoryPredictor, LengthPredictor,

@@ -1,0 +1,1094 @@
+//! `SchedulePolicy` — one scheduling brain for both the live controller
+//! and the discrete-event simulator.
+//!
+//! The paper's stateful controller (§3) makes a small set of decisions:
+//! when to load prompts, what to admit, when to stop generating, what to
+//! clip/restart/resume at a harvest, and when to train.  Before this module
+//! those decisions were written twice — once in the live coordinator's
+//! hard-coded loops and once in the simulator — and every new schedule had
+//! to be implemented in both and kept from drifting.
+//!
+//! Here a policy is written ONCE against two small traits:
+//!
+//!   * [`SchedulePolicy`] observes typed [`Event`]s and emits typed
+//!     [`Decision`]s, plus a per-item harvest verdict ([`HarvestAction`]).
+//!   * [`ScheduleBackend`] executes decisions against a concrete engine
+//!     stack.  The **Live** impl (`coordinator::controller`) drives
+//!     `EnginePool` + `RolloutBuffer` + `Trainer` + `Runtime`; the **Sim**
+//!     impl (`sim`) drives the `CostModel`/`SimRequest` machinery.
+//!
+//! [`drive`] is the single generic loop: it asks the policy for a decision,
+//! executes it on the backend, and feeds the resulting event back to the
+//! policy — so a `SimReport` timeline and a live training run come from the
+//! identical decision sequence.
+//!
+//! Shipped policies (one per `SchedulerKind`):
+//!
+//!   * [`GroupPolicy`] — SortedRL's grouped schedule, on-policy or partial
+//!     (§3.1/§3.2): oversubscribe, early-terminate at the batching
+//!     threshold, clip/restart/resume at harvests, drop never-scheduled
+//!     leftovers at group end.
+//!   * [`BaselinePolicy`] — sync-barrier rollout waves + k sequential
+//!     updates (canonical VeRL pipeline), optionally post-hoc length-sorted
+//!     (the Fig. 6a ablation).
+//!   * [`NoGroupedPolicy`] — oversubscription without the group barrier;
+//!     interrupted generations are abandoned (Fig. 6a's short-bias mode).
+//!   * [`AsyncUpdatePolicy`] — NEW, and previously impossible to express:
+//!     the trainer update overlaps continued decoding (PipelineRL-style).
+//!     No harvest barrier before updates; staleness is bounded by a full
+//!     re-sync harvest every `sync_every` updates via the existing
+//!     partial-mode scavenge machinery.
+
+use crate::coordinator::buffer::Mode;
+use crate::coordinator::controller::SchedulerKind;
+use anyhow::Result;
+
+/// Backend-agnostic snapshot of scheduler-relevant state.  Counts are in
+/// buffer ENTRIES (the live backend holds G samples per prompt; the sim
+/// backend one entry per request).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedView {
+    /// Requests actively decoding in engine lanes.
+    pub running: usize,
+    /// Requests waiting in engine/pool queues.
+    pub queued: usize,
+    /// Finished (or clipped) trajectories awaiting training.
+    pub ready: usize,
+    /// Entries loaded but never scheduled yet.
+    pub fresh: usize,
+    /// Entries loaded and not yet consumed by the trainer.
+    pub unconsumed: usize,
+    /// Total decode lanes across engines.
+    pub lanes: usize,
+    /// Trainer updates completed so far.
+    pub updates: usize,
+}
+
+/// Knobs every shipped policy shares.  `refill_prompts` is in PROMPTS;
+/// backends multiply by their own samples-per-prompt factor
+/// (`entries_per_prompt` lets a policy convert entry deficits back).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyParams {
+    /// Prompts loaded per group refill.
+    pub refill_prompts: usize,
+    /// Buffer entries created per loaded prompt (live: G; sim: 1).
+    pub entries_per_prompt: usize,
+    /// Trajectories per logical update.
+    pub update_batch: usize,
+}
+
+/// One terminated in-flight (or queued) request at a harvest, as shown to
+/// the policy.  Items arrive highest-progress-first.
+#[derive(Debug, Clone, Copy)]
+pub struct HarvestItem {
+    pub rid: u64,
+    /// Response tokens generated so far (0 = never ran).
+    pub progress: usize,
+    /// True if the request was waiting in a queue, not decoding.
+    pub queued: bool,
+}
+
+/// The policy's verdict on one harvested item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HarvestAction {
+    /// Truncate and train as-is (§3.1 "partially generated outputs").
+    Clip,
+    /// Discard progress, re-queue the prompt from scratch (on-policy).
+    Restart,
+    /// Keep tokens + log-probs, resume later (partial mode).
+    Resume,
+    /// Untouched — back to the schedulable set.
+    Requeue,
+    /// Remove without training (group-end drops / no-grouped abandonment).
+    Drop,
+}
+
+/// Typed events the driver feeds back to the policy.
+#[derive(Debug, Clone, Copy)]
+pub enum Event {
+    /// A refill completed; `count` buffer entries were created (0 = the
+    /// prompt source is exhausted).
+    PromptsLoaded { count: usize },
+    /// One generation tick completed; `finished` requests completed.
+    Tick { finished: usize },
+    /// A harvest completed; `count` items were classified.
+    Harvested { count: usize },
+    /// A trainer update completed.
+    UpdateDone,
+}
+
+/// Typed decisions the policy emits.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    /// Load `prompts` more prompts into the buffer.
+    Refill { prompts: usize },
+    /// Dispatch these schedulable entries into the engine pool.
+    Admit { rids: Vec<u64> },
+    /// One generation tick (admit free lanes + one decode chunk).
+    Step,
+    /// Terminate everything in flight; the driver then asks
+    /// [`SchedulePolicy::classify`] for a verdict on every item.
+    Harvest,
+    /// Preempt one running lane back to the pool queue, progress kept.
+    Preempt { engine: usize, lane: usize },
+    /// Train one update on these ready trajectories, in this order.
+    Update { rids: Vec<u64> },
+    /// Group end: drop consumed entries, re-align engine clocks.
+    Barrier,
+    /// Stop the run.
+    Done,
+}
+
+/// A scheduling policy: pure decision logic, no engine or buffer access.
+pub trait SchedulePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Next decision given the backend's current state.  Policies may read
+    /// `schedulable()` / `ready_rids()` to name rids in their decisions.
+    fn decide(&mut self, backend: &dyn ScheduleBackend) -> Decision;
+
+    /// Verdict for one harvested item.  `view` reflects verdicts already
+    /// applied earlier in this harvest (clips raise `view.ready`).
+    fn classify(&mut self, item: &HarvestItem, view: &SchedView) -> HarvestAction;
+
+    /// Feedback after the driver executes a decision.
+    fn observe(&mut self, _ev: &Event) {}
+}
+
+/// A concrete engine stack the driver executes decisions against.
+pub trait ScheduleBackend {
+    // ---- introspection ----
+    fn view(&self) -> SchedView;
+    /// Entries schedulable right now (fresh or scavenged), FIFO by rid.
+    fn schedulable(&self) -> Vec<u64>;
+    /// Ready entries in completion order.
+    fn ready_rids(&self) -> Vec<u64>;
+    /// Harvested response length of a Ready entry (post-hoc sort key).
+    fn ready_len(&self, rid: u64) -> usize;
+
+    // ---- actuation ----
+    /// Load up to `prompts` prompts; returns buffer entries created.
+    fn load_prompts(&mut self, prompts: usize) -> Result<usize>;
+    /// Move these entries into the engine pool's admission queue.
+    fn admit(&mut self, rids: &[u64]) -> Result<()>;
+    /// One tick: admit queued work into free lanes + one decode chunk;
+    /// finished rollouts are recorded Ready.  Returns requests finished.
+    fn step(&mut self) -> Result<usize>;
+    /// Terminate everything in flight (lanes AND queues), highest progress
+    /// first.  Every in-flight entry appears in the result exactly once.
+    fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>>;
+    /// Apply one harvest verdict.
+    fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()>;
+    /// Preempt one running lane back to the pool queue, progress kept.
+    fn preempt(&mut self, engine: usize, lane: usize) -> Result<()>;
+    /// Train one update on these Ready entries, in order.
+    fn train(&mut self, rids: &[u64]) -> Result<()>;
+    /// Group barrier: drop consumed entries, align engine clocks.
+    fn barrier(&mut self) -> Result<()>;
+    /// True when the run is over (live: max updates reached; sim: every
+    /// workload request consumed or dropped).
+    fn exhausted(&self) -> bool;
+}
+
+/// Hard ceiling on driver decisions — a policy livelock tripwire, far above
+/// any legitimate run (paper-scale sims take ~1e6 decisions).
+const MAX_DECISIONS: u64 = 200_000_000;
+/// Consecutive no-op steps (no work anywhere) before the driver bails.
+const MAX_IDLE_STEPS: usize = 10_000;
+
+/// THE driver: executes one policy against one backend until the backend is
+/// exhausted or the policy says [`Decision::Done`].  Live training runs and
+/// simulator reports both come out of this loop.
+pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend) -> Result<()> {
+    let mut decisions: u64 = 0;
+    let mut idle_steps: usize = 0;
+    while !backend.exhausted() {
+        decisions += 1;
+        if decisions > MAX_DECISIONS {
+            anyhow::bail!("drive: decision budget exceeded (policy livelock?)");
+        }
+        match policy.decide(backend) {
+            Decision::Refill { prompts } => {
+                let count = backend.load_prompts(prompts)?;
+                policy.observe(&Event::PromptsLoaded { count });
+            }
+            Decision::Admit { rids } => {
+                if !rids.is_empty() {
+                    backend.admit(&rids)?;
+                }
+            }
+            Decision::Step => {
+                let before = backend.view();
+                let finished = backend.step()?;
+                if finished == 0 && before.running == 0 && before.queued == 0 {
+                    idle_steps += 1;
+                    if idle_steps > MAX_IDLE_STEPS {
+                        anyhow::bail!("drive: policy keeps stepping an idle backend");
+                    }
+                } else {
+                    idle_steps = 0;
+                }
+                policy.observe(&Event::Tick { finished });
+            }
+            Decision::Harvest => {
+                let items = backend.harvest_candidates()?;
+                for it in &items {
+                    let act = policy.classify(it, &backend.view());
+                    backend.resolve(it, act)?;
+                }
+                policy.observe(&Event::Harvested { count: items.len() });
+            }
+            Decision::Preempt { engine, lane } => {
+                backend.preempt(engine, lane)?;
+            }
+            Decision::Update { rids } => {
+                if !rids.is_empty() {
+                    backend.train(&rids)?;
+                    policy.observe(&Event::UpdateDone);
+                }
+            }
+            Decision::Barrier => backend.barrier()?,
+            Decision::Done => return Ok(()),
+        }
+    }
+    Ok(())
+}
+
+/// Build the policy for a scheduler kind.
+pub fn make_policy(kind: SchedulerKind, p: PolicyParams) -> Box<dyn SchedulePolicy> {
+    match kind {
+        SchedulerKind::SortedOnPolicy => Box::new(GroupPolicy::new(p, Mode::OnPolicy)),
+        SchedulerKind::SortedPartial => Box::new(GroupPolicy::new(p, Mode::Partial)),
+        SchedulerKind::Baseline => Box::new(BaselinePolicy::new(p, false)),
+        SchedulerKind::PostHocSort => Box::new(BaselinePolicy::new(p, true)),
+        SchedulerKind::NoGroupedRollout => Box::new(NoGroupedPolicy::new(p)),
+        SchedulerKind::AsyncUpdate => Box::new(AsyncUpdatePolicy::new(p, ASYNC_SYNC_EVERY)),
+    }
+}
+
+/// AsyncUpdate's bounded-staleness window: a full re-sync harvest (partial
+/// scavenge of every in-flight lane) after this many overlapped updates.
+pub const ASYNC_SYNC_EVERY: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Refill,
+    Dispatch,
+    Generate,
+    HarvestNow,
+    Consume,
+    CycleEnd,
+}
+
+// ==========================================================================
+// GroupPolicy — SortedRL grouped schedule (on-policy / partial)
+// ==========================================================================
+
+/// SortedRL's grouped schedule (§3.1): one group of prompts is consumed
+/// fully before new prompts load (cache-aware loading); generation
+/// early-terminates at the batching threshold; harvests clip/restart/resume
+/// per `Mode`; never-scheduled leftovers are dropped at group end.
+pub struct GroupPolicy {
+    p: PolicyParams,
+    mode: Mode,
+    phase: Phase,
+    quota: usize,
+    threshold: usize,
+    occ_floor: usize,
+    final_wave: bool,
+    refill_empty: bool,
+}
+
+impl GroupPolicy {
+    pub fn new(p: PolicyParams, mode: Mode) -> Self {
+        GroupPolicy {
+            p,
+            mode,
+            phase: Phase::Refill,
+            quota: 1,
+            threshold: 1,
+            occ_floor: 1,
+            final_wave: false,
+            refill_empty: false,
+        }
+    }
+}
+
+impl SchedulePolicy for GroupPolicy {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            Mode::OnPolicy => "sorted-on-policy",
+            Mode::Partial => "sorted-partial",
+        }
+    }
+
+    fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
+        loop {
+            let v = b.view();
+            match self.phase {
+                Phase::Refill => {
+                    if v.unconsumed > 0 {
+                        self.phase = Phase::Dispatch;
+                        continue;
+                    }
+                    if self.refill_empty {
+                        return Decision::Done;
+                    }
+                    self.phase = Phase::Dispatch;
+                    return Decision::Refill { prompts: self.p.refill_prompts };
+                }
+                Phase::Dispatch => {
+                    // wave parameters, recomputed at every wave start
+                    self.quota = self.p.update_batch.min(v.unconsumed).max(1);
+                    self.threshold = match self.mode {
+                        Mode::OnPolicy => (self.quota * 3 / 4).max(1),
+                        Mode::Partial => self.quota,
+                    };
+                    self.final_wave = v.unconsumed <= self.p.update_batch;
+                    self.occ_floor = (v.lanes * 3 / 4).max(1);
+                    self.phase = Phase::Generate;
+                    let rids = b.schedulable();
+                    if rids.is_empty() {
+                        continue;
+                    }
+                    return Decision::Admit { rids };
+                }
+                Phase::Generate => {
+                    if v.ready >= self.threshold && !self.final_wave {
+                        // early termination: batching threshold reached
+                        self.phase = Phase::HarvestNow;
+                        continue;
+                    }
+                    if self.final_wave && v.queued == 0 && v.running < self.occ_floor {
+                        // batching floor: clip the stragglers
+                        self.phase = Phase::HarvestNow;
+                        continue;
+                    }
+                    if v.running == 0 && v.queued == 0 {
+                        if v.ready == 0 && b.schedulable().is_empty() {
+                            // nothing running, ready, or schedulable
+                            return Decision::Done;
+                        }
+                        self.phase = Phase::HarvestNow;
+                        continue;
+                    }
+                    return Decision::Step;
+                }
+                Phase::HarvestNow => {
+                    self.phase = Phase::Consume;
+                    return Decision::Harvest;
+                }
+                Phase::Consume => {
+                    if v.unconsumed == 0 {
+                        self.phase = Phase::Refill;
+                        return Decision::Barrier;
+                    }
+                    let ready = b.ready_rids();
+                    if ready.is_empty() {
+                        if b.schedulable().is_empty() && v.running == 0 && v.queued == 0 {
+                            return Decision::Done;
+                        }
+                        self.phase = Phase::Dispatch;
+                        continue;
+                    }
+                    let rids: Vec<u64> =
+                        ready.into_iter().take(self.p.update_batch).collect();
+                    return Decision::Update { rids };
+                }
+                Phase::CycleEnd => unreachable!("GroupPolicy has no CycleEnd"),
+            }
+        }
+    }
+
+    fn classify(&mut self, item: &HarvestItem, view: &SchedView) -> HarvestAction {
+        if item.progress == 0 {
+            // never produced a token: re-queue mid-group, drop at group end
+            if self.final_wave {
+                HarvestAction::Drop
+            } else {
+                HarvestAction::Requeue
+            }
+        } else if self.final_wave
+            || (self.mode == Mode::OnPolicy && view.ready < self.quota)
+        {
+            // §3.1: harvest "both completed and partially generated
+            // outputs" — highest-progress runners fill the update batch
+            HarvestAction::Clip
+        } else {
+            match self.mode {
+                Mode::OnPolicy => HarvestAction::Restart,
+                Mode::Partial => HarvestAction::Resume,
+            }
+        }
+    }
+
+    fn observe(&mut self, ev: &Event) {
+        if let Event::PromptsLoaded { count } = ev {
+            self.refill_empty = *count == 0;
+        }
+    }
+}
+
+// ==========================================================================
+// BaselinePolicy — sync-barrier waves (+ post-hoc sort ablation)
+// ==========================================================================
+
+/// Canonical baseline: load one rollout batch, run it to full completion
+/// behind a sync barrier, then k sequential updates on the (aging) data.
+/// `post_hoc_sort` trains in length-ascending order (the Fig. 6a ablation).
+pub struct BaselinePolicy {
+    p: PolicyParams,
+    post_hoc_sort: bool,
+    phase: Phase,
+    refill_empty: bool,
+}
+
+impl BaselinePolicy {
+    pub fn new(p: PolicyParams, post_hoc_sort: bool) -> Self {
+        BaselinePolicy { p, post_hoc_sort, phase: Phase::Refill, refill_empty: false }
+    }
+}
+
+impl SchedulePolicy for BaselinePolicy {
+    fn name(&self) -> &'static str {
+        if self.post_hoc_sort {
+            "post-hoc-sort"
+        } else {
+            "baseline"
+        }
+    }
+
+    fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
+        loop {
+            let v = b.view();
+            match self.phase {
+                Phase::Refill => {
+                    if v.unconsumed > 0 {
+                        self.phase = Phase::Dispatch;
+                        continue;
+                    }
+                    if self.refill_empty {
+                        return Decision::Done;
+                    }
+                    self.phase = Phase::Dispatch;
+                    return Decision::Refill { prompts: self.p.refill_prompts };
+                }
+                Phase::Dispatch => {
+                    self.phase = Phase::Generate;
+                    let rids = b.schedulable();
+                    if rids.is_empty() {
+                        continue;
+                    }
+                    return Decision::Admit { rids };
+                }
+                Phase::Generate => {
+                    if v.running == 0 && v.queued == 0 {
+                        // sync barrier: the whole wave completed
+                        self.phase = Phase::Consume;
+                        continue;
+                    }
+                    return Decision::Step;
+                }
+                Phase::Consume => {
+                    let ready = b.ready_rids();
+                    if ready.is_empty() {
+                        if v.unconsumed == 0 {
+                            self.phase = Phase::Refill;
+                            return Decision::Barrier;
+                        }
+                        if b.schedulable().is_empty() && v.running == 0 && v.queued == 0 {
+                            return Decision::Done;
+                        }
+                        self.phase = Phase::Dispatch;
+                        continue;
+                    }
+                    let mut order: Vec<u64> = ready;
+                    if self.post_hoc_sort {
+                        // sort by response length ascending AFTER generation
+                        let mut keyed: Vec<(usize, u64)> =
+                            order.iter().map(|&r| (b.ready_len(r), r)).collect();
+                        keyed.sort();
+                        order = keyed.into_iter().map(|(_, r)| r).collect();
+                    }
+                    let rids: Vec<u64> =
+                        order.into_iter().take(self.p.update_batch).collect();
+                    return Decision::Update { rids };
+                }
+                _ => unreachable!("BaselinePolicy phase {:?}", self.phase),
+            }
+        }
+    }
+
+    fn classify(&mut self, _item: &HarvestItem, _view: &SchedView) -> HarvestAction {
+        // the baseline never harvests mid-generation; inert verdict
+        HarvestAction::Requeue
+    }
+
+    fn observe(&mut self, ev: &Event) {
+        if let Event::PromptsLoaded { count } = ev {
+            self.refill_empty = *count == 0;
+        }
+    }
+}
+
+// ==========================================================================
+// NoGroupedPolicy — oversubscription without the group barrier (Fig. 6a)
+// ==========================================================================
+
+/// Ablation: the pool is continuously topped up with fresh prompts (no
+/// grouped-loading barrier) and interrupted generations are abandoned
+/// outright, so training data biases hard toward short responses.
+pub struct NoGroupedPolicy {
+    p: PolicyParams,
+    phase: Phase,
+    refill_empty: bool,
+}
+
+impl NoGroupedPolicy {
+    pub fn new(p: PolicyParams) -> Self {
+        NoGroupedPolicy { p, phase: Phase::Refill, refill_empty: false }
+    }
+}
+
+impl SchedulePolicy for NoGroupedPolicy {
+    fn name(&self) -> &'static str {
+        "no-grouped"
+    }
+
+    fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
+        loop {
+            let v = b.view();
+            match self.phase {
+                Phase::Refill => {
+                    // top up: fresh prompts stream in with no barrier
+                    let target = self.p.refill_prompts * self.p.entries_per_prompt;
+                    let deficit = target.saturating_sub(v.fresh);
+                    self.phase = Phase::Dispatch;
+                    if deficit > 0 && !self.refill_empty {
+                        return Decision::Refill {
+                            prompts: deficit / self.p.entries_per_prompt.max(1) + 1,
+                        };
+                    }
+                    continue;
+                }
+                Phase::Dispatch => {
+                    self.phase = Phase::Generate;
+                    let rids = b.schedulable();
+                    if rids.is_empty() {
+                        continue;
+                    }
+                    return Decision::Admit { rids };
+                }
+                Phase::Generate => {
+                    if v.ready >= self.p.update_batch {
+                        self.phase = Phase::HarvestNow;
+                        continue;
+                    }
+                    if v.running == 0 && v.queued == 0 {
+                        if v.ready == 0 && b.schedulable().is_empty() {
+                            return Decision::Done;
+                        }
+                        self.phase = Phase::HarvestNow;
+                        continue;
+                    }
+                    return Decision::Step;
+                }
+                Phase::HarvestNow => {
+                    self.phase = Phase::Consume;
+                    return Decision::Harvest;
+                }
+                Phase::Consume => {
+                    let ready = b.ready_rids();
+                    if ready.is_empty() {
+                        self.phase = Phase::Refill;
+                        if v.running == 0
+                            && v.queued == 0
+                            && self.refill_empty
+                            && b.schedulable().is_empty()
+                        {
+                            return Decision::Done;
+                        }
+                        continue;
+                    }
+                    let rids: Vec<u64> =
+                        ready.into_iter().take(self.p.update_batch).collect();
+                    self.phase = Phase::CycleEnd;
+                    return Decision::Update { rids };
+                }
+                Phase::CycleEnd => {
+                    self.phase = Phase::Refill;
+                    return Decision::Barrier;
+                }
+            }
+        }
+    }
+
+    fn classify(&mut self, item: &HarvestItem, _view: &SchedView) -> HarvestAction {
+        if item.progress > 0 {
+            // abandon interrupted generations entirely (prompt starvation)
+            HarvestAction::Drop
+        } else {
+            HarvestAction::Requeue
+        }
+    }
+
+    fn observe(&mut self, ev: &Event) {
+        if let Event::PromptsLoaded { count } = ev {
+            self.refill_empty = *count == 0;
+        }
+    }
+}
+
+// ==========================================================================
+// AsyncUpdatePolicy — overlap trainer updates with continued decoding
+// ==========================================================================
+
+/// PipelineRL-style async schedule: when the batching threshold fires, the
+/// update runs WITHOUT a harvest barrier — in-flight lanes keep decoding
+/// (live: lanes keep their KV and continue under the new weights; sim: the
+/// update's modeled cost overlaps engine clocks).  Tokens sampled before an
+/// update keep their behavior-policy log-probs, so the existing
+/// partial-mode importance machinery handles the staleness.  A full re-sync
+/// harvest (partial scavenge) every `sync_every` updates bounds how far any
+/// lane can lag the trainer.
+pub struct AsyncUpdatePolicy {
+    p: PolicyParams,
+    sync_every: usize,
+    updates_since_sync: usize,
+    phase: Phase,
+    quota: usize,
+    occ_floor: usize,
+    final_wave: bool,
+    refill_empty: bool,
+}
+
+impl AsyncUpdatePolicy {
+    pub fn new(p: PolicyParams, sync_every: usize) -> Self {
+        AsyncUpdatePolicy {
+            p,
+            sync_every: sync_every.max(1),
+            updates_since_sync: 0,
+            phase: Phase::Refill,
+            quota: 1,
+            occ_floor: 1,
+            final_wave: false,
+            refill_empty: false,
+        }
+    }
+}
+
+impl SchedulePolicy for AsyncUpdatePolicy {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
+        loop {
+            let v = b.view();
+            match self.phase {
+                Phase::Refill => {
+                    if v.unconsumed > 0 {
+                        self.phase = Phase::Dispatch;
+                        continue;
+                    }
+                    if self.refill_empty {
+                        return Decision::Done;
+                    }
+                    self.phase = Phase::Dispatch;
+                    return Decision::Refill { prompts: self.p.refill_prompts };
+                }
+                Phase::Dispatch => {
+                    self.quota = self.p.update_batch.min(v.unconsumed).max(1);
+                    self.final_wave = v.unconsumed <= self.p.update_batch;
+                    self.occ_floor = (v.lanes * 3 / 4).max(1);
+                    self.phase = Phase::Generate;
+                    let rids = b.schedulable();
+                    if rids.is_empty() {
+                        continue;
+                    }
+                    return Decision::Admit { rids };
+                }
+                Phase::Generate => {
+                    if v.ready >= self.quota {
+                        // enough finished work: update NOW, lanes keep
+                        // decoding — no harvest barrier (the async win)
+                        self.phase = Phase::Consume;
+                        continue;
+                    }
+                    if !self.final_wave
+                        && self.updates_since_sync >= self.sync_every
+                        && (v.running > 0 || v.queued > 0)
+                    {
+                        // bounded staleness: full re-sync harvest
+                        self.updates_since_sync = 0;
+                        self.phase = Phase::HarvestNow;
+                        continue;
+                    }
+                    if self.final_wave && v.queued == 0 && v.running < self.occ_floor {
+                        self.phase = Phase::HarvestNow;
+                        continue;
+                    }
+                    if v.running == 0 && v.queued == 0 {
+                        if v.ready > 0 {
+                            self.phase = Phase::Consume;
+                            continue;
+                        }
+                        if b.schedulable().is_empty() {
+                            return Decision::Done;
+                        }
+                        self.phase = Phase::Dispatch;
+                        continue;
+                    }
+                    return Decision::Step;
+                }
+                Phase::HarvestNow => {
+                    self.phase = Phase::Consume;
+                    return Decision::Harvest;
+                }
+                Phase::Consume => {
+                    if v.unconsumed == 0 {
+                        self.phase = Phase::Refill;
+                        return Decision::Barrier;
+                    }
+                    let ready = b.ready_rids();
+                    if ready.is_empty() {
+                        self.phase = Phase::Dispatch;
+                        continue;
+                    }
+                    let rids: Vec<u64> =
+                        ready.into_iter().take(self.p.update_batch).collect();
+                    self.phase = Phase::Dispatch;
+                    return Decision::Update { rids };
+                }
+                Phase::CycleEnd => unreachable!("AsyncUpdatePolicy has no CycleEnd"),
+            }
+        }
+    }
+
+    fn classify(&mut self, item: &HarvestItem, _view: &SchedView) -> HarvestAction {
+        // partial-mode semantics: progress always survives a harvest
+        if item.progress == 0 {
+            if self.final_wave {
+                HarvestAction::Drop
+            } else {
+                HarvestAction::Requeue
+            }
+        } else if self.final_wave {
+            HarvestAction::Clip
+        } else {
+            HarvestAction::Resume
+        }
+    }
+
+    fn observe(&mut self, ev: &Event) {
+        match ev {
+            Event::PromptsLoaded { count } => self.refill_empty = *count == 0,
+            Event::UpdateDone => self.updates_since_sync += 1,
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    /// Deterministic in-memory backend: every request emits one token per
+    /// tick; lane admission is FIFO.  Used to pin policy decision sequences
+    /// by hand (see `tests/policy_golden.rs` for the buffer-backed mirror).
+    struct MockBackend {
+        lens: Vec<usize>,
+        progress: Vec<usize>,
+        // 0 = unloaded, 1 = fresh, 2 = in pool, 3 = ready, 4 = consumed
+        state: Vec<u8>,
+        lanes: usize,
+        running: Vec<u64>,
+        queue: VecDeque<u64>,
+        ready: Vec<u64>,
+        consumed: Vec<u64>,
+        clipped: Vec<u64>,
+        dropped: Vec<u64>,
+        updates: usize,
+        harvests: usize,
+        next_load: usize,
+    }
+
+    impl MockBackend {
+        fn new(lens: Vec<usize>, lanes: usize) -> Self {
+            let n = lens.len();
+            MockBackend {
+                lens,
+                progress: vec![0; n],
+                state: vec![0; n],
+                lanes,
+                running: Vec::new(),
+                queue: VecDeque::new(),
+                ready: Vec::new(),
+                consumed: Vec::new(),
+                clipped: Vec::new(),
+                dropped: Vec::new(),
+                updates: 0,
+                harvests: 0,
+                next_load: 0,
+            }
+        }
+
+        fn fill_lanes(&mut self) {
+            while self.running.len() < self.lanes {
+                let Some(rid) = self.queue.pop_front() else { break };
+                self.running.push(rid);
+            }
+        }
+    }
+
+    impl ScheduleBackend for MockBackend {
+        fn view(&self) -> SchedView {
+            SchedView {
+                running: self.running.len(),
+                queued: self.queue.len(),
+                ready: self.ready.len(),
+                fresh: self.state.iter().filter(|&&s| s == 1).count(),
+                unconsumed: self.state.iter().filter(|&&s| (1..=3).contains(&s)).count(),
+                lanes: self.lanes,
+                updates: self.updates,
+            }
+        }
+
+        fn schedulable(&self) -> Vec<u64> {
+            (0..self.lens.len())
+                .filter(|&i| self.state[i] == 1)
+                .map(|i| i as u64)
+                .collect()
+        }
+
+        fn ready_rids(&self) -> Vec<u64> {
+            self.ready.clone()
+        }
+
+        fn ready_len(&self, rid: u64) -> usize {
+            self.progress[rid as usize]
+        }
+
+        fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
+            let mut count = 0;
+            while count < prompts && self.next_load < self.lens.len() {
+                self.state[self.next_load] = 1;
+                self.next_load += 1;
+                count += 1;
+            }
+            Ok(count)
+        }
+
+        fn admit(&mut self, rids: &[u64]) -> Result<()> {
+            for &rid in rids {
+                assert_eq!(self.state[rid as usize], 1, "admit non-fresh {rid}");
+                self.state[rid as usize] = 2;
+                self.queue.push_back(rid);
+            }
+            Ok(())
+        }
+
+        fn step(&mut self) -> Result<usize> {
+            self.fill_lanes();
+            let mut finished = 0;
+            let mut still = Vec::new();
+            for &rid in &self.running {
+                let i = rid as usize;
+                self.progress[i] += 1;
+                if self.progress[i] >= self.lens[i] {
+                    self.state[i] = 3;
+                    self.ready.push(rid);
+                    finished += 1;
+                } else {
+                    still.push(rid);
+                }
+            }
+            self.running = still;
+            Ok(finished)
+        }
+
+        fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
+            self.harvests += 1;
+            let mut items: Vec<HarvestItem> = self
+                .running
+                .drain(..)
+                .map(|rid| HarvestItem {
+                    rid,
+                    progress: self.progress[rid as usize],
+                    queued: false,
+                })
+                .collect();
+            items.extend(self.queue.drain(..).map(|rid| HarvestItem {
+                rid,
+                progress: self.progress[rid as usize],
+                queued: true,
+            }));
+            items.sort_by(|a, b| b.progress.cmp(&a.progress).then(a.rid.cmp(&b.rid)));
+            Ok(items)
+        }
+
+        fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()> {
+            let i = item.rid as usize;
+            match action {
+                HarvestAction::Clip => {
+                    self.state[i] = 3;
+                    self.ready.push(item.rid);
+                    self.clipped.push(item.rid);
+                }
+                HarvestAction::Restart => {
+                    self.progress[i] = 0;
+                    self.state[i] = 1;
+                }
+                HarvestAction::Resume | HarvestAction::Requeue => {
+                    self.state[i] = 1;
+                }
+                HarvestAction::Drop => {
+                    self.state[i] = 4;
+                    self.dropped.push(item.rid);
+                }
+            }
+            Ok(())
+        }
+
+        fn preempt(&mut self, _engine: usize, lane: usize) -> Result<()> {
+            if lane < self.running.len() {
+                let rid = self.running.remove(lane);
+                self.queue.push_back(rid);
+            }
+            Ok(())
+        }
+
+        fn train(&mut self, rids: &[u64]) -> Result<()> {
+            for &rid in rids {
+                assert_eq!(self.state[rid as usize], 3, "train non-ready {rid}");
+                self.state[rid as usize] = 4;
+                self.consumed.push(rid);
+            }
+            self.updates += 1;
+            Ok(())
+        }
+
+        fn barrier(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn exhausted(&self) -> bool {
+            self.state.iter().all(|&s| s == 4) && self.next_load >= self.lens.len()
+        }
+    }
+
+    fn params(refill: usize, batch: usize) -> PolicyParams {
+        PolicyParams { refill_prompts: refill, entries_per_prompt: 1, update_batch: batch }
+    }
+
+    /// Hand-computed on-policy group run: lens [1,2,3,8], 2 lanes, update
+    /// batch 2.  Wave 1 finishes rid0, clips rid1 (progress 1) to fill the
+    /// quota and requeues 2/3; wave 2 (final) runs 2 and 3 to completion.
+    #[test]
+    fn group_on_policy_pinned_sequence() {
+        let mut p = GroupPolicy::new(params(4, 2), Mode::OnPolicy);
+        let mut b = MockBackend::new(vec![1, 2, 3, 8], 2);
+        drive(&mut p, &mut b).unwrap();
+        assert_eq!(b.updates, 2);
+        assert_eq!(b.consumed, vec![0, 1, 2, 3]);
+        assert_eq!(b.clipped, vec![1]);
+        assert!(b.dropped.is_empty());
+        // rid1 was clipped at progress 1, not rerun to its full length
+        assert_eq!(b.progress[1], 1);
+    }
+
+    /// Partial mode on the same workload: no mid-group clipping (the
+    /// threshold waits for full completions), everything completes.
+    #[test]
+    fn group_partial_pinned_sequence() {
+        let mut p = GroupPolicy::new(params(4, 2), Mode::Partial);
+        let mut b = MockBackend::new(vec![1, 2, 3, 8], 2);
+        drive(&mut p, &mut b).unwrap();
+        assert_eq!(b.updates, 2);
+        assert_eq!(b.consumed.len(), 4);
+        // every trajectory trained at its true length (nothing clipped at
+        // progress < len except possibly the final-wave straggler)
+        for &rid in &b.consumed {
+            let i = rid as usize;
+            assert!(b.progress[i] == b.lens[i] || b.clipped.contains(&rid));
+        }
+    }
+
+    /// Baseline: one wave to full completion, then sequential updates in
+    /// completion order; nothing clipped or dropped.
+    #[test]
+    fn baseline_runs_wave_to_completion() {
+        let mut p = BaselinePolicy::new(params(4, 2), false);
+        let mut b = MockBackend::new(vec![3, 1, 4, 2], 2);
+        drive(&mut p, &mut b).unwrap();
+        assert_eq!(b.updates, 2);
+        assert!(b.clipped.is_empty());
+        assert!(b.dropped.is_empty());
+        assert_eq!(b.harvests, 0, "baseline must never harvest");
+        for i in 0..4 {
+            assert_eq!(b.progress[i], b.lens[i]);
+        }
+    }
+
+    /// Post-hoc sort trains in length-ascending order.
+    #[test]
+    fn post_hoc_sorts_by_length() {
+        let mut p = BaselinePolicy::new(params(4, 4), true);
+        let mut b = MockBackend::new(vec![9, 2, 7, 4], 4);
+        drive(&mut p, &mut b).unwrap();
+        assert_eq!(b.updates, 1);
+        assert_eq!(b.consumed, vec![1, 3, 2, 0]); // lengths 2,4,7,9
+    }
+
+    /// AsyncUpdate fires its first update with lanes still running (no
+    /// harvest barrier), and the long request is never restarted.
+    #[test]
+    fn async_updates_without_harvest_barrier() {
+        let mut p = AsyncUpdatePolicy::new(params(6, 2), 1_000);
+        let mut b = MockBackend::new(vec![1, 2, 3, 20, 21, 22], 2);
+        drive(&mut p, &mut b).unwrap();
+        assert_eq!(b.consumed.len(), 6);
+        assert!(b.updates >= 2);
+        // sync_every is huge, so the only harvest is the final-wave clip
+        assert!(b.harvests <= 2, "async harvested {} times", b.harvests);
+        // nothing lost progress to a restart
+        for i in 0..6 {
+            assert!(b.progress[i] > 0);
+        }
+    }
+
+    /// NoGrouped abandons interrupted work: with update_batch 1 and a long
+    /// straggler, harvests fire early and the straggler is dropped.
+    #[test]
+    fn no_grouped_abandons_stragglers() {
+        let mut p = NoGroupedPolicy::new(params(3, 1));
+        let mut b = MockBackend::new(vec![1, 1, 50], 3);
+        drive(&mut p, &mut b).unwrap();
+        assert!(b.consumed.len() + b.dropped.len() == 3);
+        assert!(!b.dropped.is_empty(), "the len-50 straggler should be abandoned");
+        assert!(b.clipped.is_empty(), "no-grouped never clips");
+    }
+
+    /// The driver refuses to livelock on a policy that always steps.
+    #[test]
+    fn driver_bails_on_idle_stepping() {
+        struct StepForever;
+        impl SchedulePolicy for StepForever {
+            fn name(&self) -> &'static str {
+                "step-forever"
+            }
+            fn decide(&mut self, _b: &dyn ScheduleBackend) -> Decision {
+                Decision::Step
+            }
+            fn classify(&mut self, _i: &HarvestItem, _v: &SchedView) -> HarvestAction {
+                HarvestAction::Requeue
+            }
+        }
+        let mut p = StepForever;
+        let mut b = MockBackend::new(vec![1], 1);
+        // nothing loaded -> the backend is idle forever
+        let err = drive(&mut p, &mut b).unwrap_err();
+        assert!(format!("{err:#}").contains("idle"));
+    }
+}

@@ -434,6 +434,31 @@ impl<'rt> EnginePool<'rt> {
         }
     }
 
+    /// Preempt one specific lane of one engine back into the pool queue,
+    /// progress kept (the policy-API `Preempt` decision; the periodic
+    /// straggler sweep in [`Self::step`] uses the same machinery).
+    /// Returns false if the (engine, lane) pair holds no active request.
+    pub fn preempt(&mut self, engine: usize, lane: usize, version: u64) -> bool {
+        if engine >= self.engines.len() {
+            return false;
+        }
+        match self.engines[engine].preempt_lane(lane, version) {
+            Some(r) => {
+                self.predictor.observe_progress(
+                    r.request.prompt_id,
+                    r.request.prompt.len(),
+                    r.response.len(),
+                );
+                self.preempted += 1;
+                self.dispatched_pred.remove(&r.request.rid);
+                self.queue.push_back(resume_request(&r));
+                self.queue_dirty = true;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Drain finished rollouts from every engine, feeding the predictor
     /// (prediction scored BEFORE the observation lands).
     pub fn drain_finished(&mut self) -> Vec<Rollout> {
