@@ -14,10 +14,16 @@
 //! resume), so the same policies can be compared at paper scale (512
 //! prompts, 8k-token caps) in milliseconds of host time.
 
+use crate::coordinator::buffer::Mode;
 use crate::metrics::{PredictorScore, Timeline};
+use crate::sched::policy::{
+    drive, AsyncUpdatePolicy, BaselinePolicy, GroupPolicy, HarvestAction, HarvestItem,
+    PolicyParams, SchedView, ScheduleBackend, SchedulePolicy, ASYNC_SYNC_EVERY,
+};
 use crate::sched::{make_predictor, sjf_priority, DispatchPolicy, LengthPredictor, PredictorKind};
 use crate::util::rng::Pcg64;
-use std::collections::VecDeque;
+use anyhow::Result;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Serving-engine cost model (seconds).
 #[derive(Debug, Clone, Copy)]
@@ -98,6 +104,11 @@ pub enum SimMode {
     /// SortedRL partial: interrupted requests keep progress; resume costs
     /// a prefill over prompt + generated prefix.
     SortedPartial,
+    /// Async updates: the trainer update overlaps continued decoding (no
+    /// harvest barrier; partial-mode scavenge bounds staleness).  The
+    /// modeled update cost hides under the engine clocks instead of
+    /// serializing into `total_time`.
+    Async,
 }
 
 /// Simulation outcome.
@@ -197,24 +208,15 @@ impl SimEngine {
         finished
     }
 
-    /// Preempt all running lanes back to the queue tail, KEEPING progress
-    /// (partial-mode rotation: costs only re-prefill on re-admission).
-    fn rotate(&mut self) {
-        let preempted: Vec<(SimRequest, usize)> = self
-            .running
-            .drain(..)
-            .map(|r| (r.req, r.generated))
-            .collect();
-        self.queue.extend(preempted);
+    /// Preempt ONE running lane back to the queue, KEEPING progress
+    /// (resume costs only a re-prefill over prompt + prefix).
+    fn preempt_lane(&mut self, lane: usize) -> Option<(SimRequest, usize)> {
+        if lane >= self.running.len() {
+            return None;
+        }
+        let r = self.running.remove(lane);
         self.record();
-    }
-
-    /// Re-order the waiting queue longest-progress-first (commit phase:
-    /// progress == sensed length in partial mode).
-    fn prioritize_queue_by_progress(&mut self) {
-        let mut v: Vec<(SimRequest, usize)> = self.queue.drain(..).collect();
-        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
-        self.queue.extend(v);
+        Some((r.req, r.generated))
     }
 
     /// Terminate everything in flight; returns (request, progress) pairs.
@@ -230,291 +232,15 @@ impl SimEngine {
     }
 }
 
-/// Simulate one full consumption of `workload` (n_batches × batch prompts)
-/// under `mode`, with `update_batch` trajectories per policy update.
+/// Simulate one full consumption of `workload` under `mode` on a single
+/// engine with queue capacity `q`, `update_batch` trajectories per policy
+/// update.  Thin wrapper over [`simulate_pool`] with one engine: since the
+/// policy-API port, single-engine and pool runs execute the identical
+/// decision sequence (and the same one the live controller executes).
 pub fn simulate(mode: SimMode, workload: &[SimRequest], q: usize,
                 update_batch: usize, cost: CostModel) -> SimReport {
-    match mode {
-        SimMode::Baseline => simulate_baseline(workload, q, update_batch, cost),
-        _ => simulate_sorted(mode, workload, q, update_batch, cost),
-    }
-}
-
-fn post_phase_costs(finished: &[SimRequest], cost: &CostModel) -> (f64, f64) {
-    let toks: f64 = finished
-        .iter()
-        .map(|r| (r.prompt_len + r.output_len) as f64)
-        .sum();
-    (toks * cost.t_infer_token, toks * cost.t_update_token)
-}
-
-/// Baseline: split the workload into batches of `q`, each run to completion
-/// behind a sync barrier, then updates in chunks of `update_batch`.
-fn simulate_baseline(workload: &[SimRequest], q: usize, update_batch: usize,
-                     cost: CostModel) -> SimReport {
-    let mut eng = SimEngine::new(q, cost);
-    let mut infer_time = 0.0;
-    let mut update_time = 0.0;
-    let mut harvests = 0;
-    for batch in workload.chunks(q) {
-        eng.queue.extend(batch.iter().map(|r| (*r, 0usize)));
-        let mut finished: Vec<SimRequest> = Vec::new();
-        while !eng.queue.is_empty() || !eng.running.is_empty() {
-            eng.admit();
-            finished.extend(eng.step());
-        }
-        // sync barrier: inference + k sequential updates while engine idles
-        let (ti, tu) = post_phase_costs(&finished, &cost);
-        infer_time += ti;
-        update_time += tu;
-        harvests += finished.len().div_ceil(update_batch);
-    }
-    let rollout_time = eng.clock;
-    let useful: u64 = workload.iter().map(|r| r.output_len as u64).sum();
-    let bubble = eng.timeline.bubble_ratio(q, eng.clock);
-    SimReport {
-        mode: SimMode::Baseline,
-        total_time: rollout_time + infer_time + update_time,
-        rollout_time,
-        update_time,
-        infer_time,
-        useful_tokens: useful,
-        wasted_tokens: eng.tokens_out - useful,
-        bubble_ratio: bubble,
-        throughput: useful as f64 / rollout_time,
-        timeline: eng.timeline,
-        harvests,
-        clipped: 0,
-        dropped: 0,
-        engines: 1,
-        predictor_mae: 0.0,
-        predictor_tau: 0.0,
-    }
-}
-
-/// Park threshold for on-policy: requests sensed longer than ~P60 of the
-/// sensed lengths are deferred (they would just feed the restart shredder).
-fn sensed_park_threshold(pending: &[(SimRequest, usize, usize)]) -> usize {
-    let mut sensed: Vec<usize> = pending.iter().map(|e| e.2).filter(|&x| x > 0).collect();
-    if sensed.len() < 8 {
-        return usize::MAX;
-    }
-    sensed.sort_unstable();
-    sensed[sensed.len() * 3 / 5].max(1)
-}
-
-/// SortedRL modes: the whole workload is one group pool; oversubscribe,
-/// early-terminate when `update_batch` trajectories complete, scavenge or
-/// restart the rest, update, re-feed.
-fn simulate_sorted(mode: SimMode, workload: &[SimRequest], q: usize,
-                   update_batch: usize, cost: CostModel) -> SimReport {
-    let mut eng = SimEngine::new(q, cost);
-    // (request, preserved_progress, sensed_length) — `sensed` is the
-    // controller's online length estimate (max tokens ever generated for
-    // this request, §3.1 "sensing the fine-grained dynamics"); it survives
-    // on-policy restarts even though the tokens themselves are discarded.
-    let mut pending: Vec<(SimRequest, usize, usize)> =
-        workload.iter().map(|r| (*r, 0usize, 0usize)).collect();
-    let mut infer_time = 0.0;
-    let mut update_time = 0.0;
-    let mut wasted: u64 = 0;
-    let mut done = 0usize;
-    let mut harvests = 0usize;
-    let mut clipped = 0usize;
-    let mut dropped = 0usize;
-    let total = workload.len();
-
-    while done < total {
-        // Length-aware priority (§3.1 "sensing the fine-grained dynamics").
-        // The two modes want opposite orders:
-        //  * partial: progress survives interruption, so LONG-sensed
-        //    requests keep their lanes (LRF-style) and the group's final
-        //    wave drains compactly; a quarter of the queue head is
-        //    reserved for never-run prompts (discovery).
-        //  * on-policy: interrupted progress is DISCARDED, so giving lanes
-        //    to requests that cannot finish before the next harvest only
-        //    manufactures waste — schedule shortest-sensed first to
-        //    maximize completions per wave (long ones run last and mostly
-        //    get clipped at group end, the paper's gray bars).
-        let order: Vec<(SimRequest, usize, usize)> = match mode {
-            SimMode::SortedPartial => {
-                pending.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.id.cmp(&b.0.id)));
-                let (runners, fresh): (Vec<_>, Vec<_>) =
-                    pending.drain(..).partition(|e| e.2 > 0);
-                let keep = (q * 3 / 4).min(runners.len());
-                let mut v = Vec::with_capacity(runners.len() + fresh.len());
-                v.extend_from_slice(&runners[..keep]);
-                v.extend(fresh);
-                v.extend_from_slice(&runners[keep..]);
-                v
-            }
-            _ => {
-                // Hard-park sensed-long requests mid-group: admitting a
-                // request that cannot finish before the next harvest only
-                // generates tokens that the on-policy restart will discard.
-                // Parked requests rejoin for the group's final wave (where
-                // they run once and clip).
-                pending.sort_by(|a, b| a.2.cmp(&b.2).then(a.0.id.cmp(&b.0.id)));
-                let final_wave_next = total - done <= 2 * update_batch;
-                if final_wave_next {
-                    pending.drain(..).collect()
-                } else {
-                    // `<=` keeps the threshold value itself runnable; when
-                    // every request has identical sensed progress the run
-                    // set must not be empty (everything would park forever).
-                    let park_at = sensed_park_threshold(&pending);
-                    let (run, park): (Vec<_>, Vec<_>) =
-                        pending.drain(..).partition(|e| e.2 <= park_at);
-                    if run.is_empty() {
-                        park
-                    } else {
-                        pending = park;
-                        run
-                    }
-                }
-            }
-        };
-        // oversubscribe: everything pending goes to the engine queue
-        eng.queue.extend(order.into_iter().map(|(r, p, _)| (r, p)));
-        let mut ready: Vec<SimRequest> = Vec::new();
-        // Partial-mode discovery rotation: preemption preserves progress, so
-        // the controller time-slices the whole pool early in the group to
-        // sense every prompt's length, then commits lanes to the
-        // longest-sensed requests (LRF-style) so the group's long poles run
-        // without interruption.  On-policy mode cannot rotate (preemption
-        // discards tokens), which is why its bubble stays above partial's —
-        // matching the paper's 5.81% vs 3.37% ordering.
-        let rotate_every = 160usize;
-        let discovery_budget = if mode == SimMode::SortedPartial {
-            (total / q).max(1) * rotate_every
-        } else {
-            0
-        };
-        let mut iters = 0usize;
-        // Final sub-batch of the group: instead of riding the drain tail to
-        // occupancy 1 (what kills the baseline, Fig. 1b), the controller
-        // harvests "both completed and partially generated outputs" (§3.1):
-        // once occupancy falls below the batching floor it clips whatever
-        // is still running into the update batch (Fig. 9a's clipped long
-        // answers) and drops never-scheduled prompts (Fig. 2's gray bars).
-        let final_wave = total - done <= update_batch;
-        let occ_floor = (q * 3 / 4).max(1);
-        while !eng.queue.is_empty() || !eng.running.is_empty() {
-            if discovery_budget > 0 {
-                if iters < discovery_budget && iters % rotate_every == 0 && iters > 0 {
-                    eng.rotate();
-                } else if iters == discovery_budget {
-                    eng.rotate();
-                    eng.prioritize_queue_by_progress();
-                }
-            }
-            eng.admit();
-            ready.extend(eng.step());
-            iters += 1;
-            let remaining = total - done - ready.len();
-            let quota = update_batch.min(total - done);
-            // Early-termination threshold (§3.1 "batching-related
-            // thresholds"): on-policy fires once most of the quota has
-            // completed and fills the remainder by clipping the
-            // top-progress runners — waiting for the last few completions
-            // is where discarded-progress waste piles up.  Partial mode
-            // waits for full completions (resume is free).
-            let threshold = match mode {
-                SimMode::SortedOnPolicy => quota * 3 / 4,
-                _ => quota,
-            };
-            if ready.len() >= threshold && remaining > 0 {
-                break; // early termination: harvest threshold reached
-            }
-            if final_wave && eng.queue.is_empty() && eng.running.len() < occ_floor {
-                break; // batching floor: clip the stragglers
-            }
-            if remaining == 0 && eng.running.is_empty() && eng.queue.is_empty() {
-                break;
-            }
-        }
-        // Terminate in-flight; harvest/scavenge per mode.
-        let mut terminated = eng.terminate_all();
-        // highest progress first — clipping candidates
-        terminated.sort_by(|a, b| b.1.cmp(&a.1));
-        let quota = update_batch.min(total - done);
-        for (req, progress) in terminated {
-            let need_clip = ready.len() < quota;
-            match mode {
-                // On-policy harvests "both completed and partially generated
-                // outputs" (§3.1): the highest-progress runners are CLIPPED
-                // into the update batch (their tokens are from the latest
-                // policy, so this stays on-policy — Fig. 9a's clipped long
-                // answers); the rest lose their progress and the prompt
-                // retries (Fig. 2's gray "partially discarded" bars).
-                SimMode::SortedOnPolicy => {
-                    if need_clip && progress > 0 {
-                        let mut clipped_req = req;
-                        clipped_req.output_len = progress;
-                        ready.push(clipped_req);
-                        clipped += 1;
-                    } else if final_wave {
-                        // group end: never-scheduled prompts are dropped
-                        wasted += progress as u64;
-                        dropped += 1;
-                        done += 1;
-                    } else {
-                        wasted += progress as u64;
-                        pending.push((req, 0, progress));
-                    }
-                }
-                // Partial mode never discards: resume mid-group, clip only
-                // at the group's final wave.
-                SimMode::SortedPartial => {
-                    if final_wave {
-                        if progress > 0 {
-                            let mut clipped_req = req;
-                            clipped_req.output_len = progress;
-                            ready.push(clipped_req);
-                            clipped += 1;
-                        } else {
-                            dropped += 1;
-                            done += 1;
-                        }
-                    } else {
-                        pending.push((req, progress, progress));
-                    }
-                }
-                SimMode::Baseline => unreachable!(),
-            }
-        }
-        if ready.is_empty() {
-            break;
-        }
-        done += ready.len();
-        harvests += 1;
-        let (ti, tu) = post_phase_costs(&ready, &cost);
-        infer_time += ti;
-        update_time += tu;
-    }
-
-    let rollout_time = eng.clock;
-    // useful = tokens of trajectories actually harvested (clipping shortens)
-    let useful: u64 = eng.tokens_out - wasted;
-    let bubble = eng.timeline.bubble_ratio(q, eng.clock);
-    SimReport {
-        mode,
-        total_time: rollout_time + infer_time + update_time,
-        rollout_time,
-        update_time,
-        infer_time,
-        useful_tokens: useful,
-        wasted_tokens: wasted,
-        bubble_ratio: bubble,
-        throughput: useful as f64 / rollout_time,
-        timeline: eng.timeline,
-        harvests,
-        clipped,
-        dropped,
-        engines: 1,
-        predictor_mae: 0.0,
-        predictor_tau: 0.0,
-    }
+    simulate_pool(mode, workload, 1, q, update_batch, cost,
+                  DispatchPolicy::ShortestPredictedFirst, PredictorKind::History)
 }
 
 // ==========================================================================
@@ -616,6 +342,22 @@ impl SimPool {
         self.refill(i);
         self.engines[i].admit();
         Some(self.engines[i].step())
+    }
+
+    /// Preempt one lane of one engine, progress kept; the partial re-enters
+    /// the dispatch flow (central queue, or the same engine's local queue
+    /// under static round-robin striping).
+    fn preempt(&mut self, engine: usize, lane: usize) {
+        if engine >= self.engines.len() {
+            return;
+        }
+        if let Some(w) = self.engines[engine].preempt_lane(lane) {
+            if self.policy == DispatchPolicy::RoundRobin {
+                self.engines[engine].queue.push_back(w);
+            } else {
+                self.central.push_back(w);
+            }
+        }
     }
 
     /// Terminate everything pool-wide -> (request, progress) pairs.
@@ -725,13 +467,325 @@ pub fn pool_makespan(workload: &[SimRequest], engines: usize, q_total: usize,
     pool.clock()
 }
 
-/// Multi-engine pool simulation: the same group-pool semantics as
-/// [`simulate`] (oversubscription, early termination at the batching
-/// threshold, per-mode scavenge/restart), but sharded across `engines`
-/// engines of `q_total/engines` lanes each, with admission ordered by a
-/// [`LengthPredictor`] instead of the single-engine sense-by-generating
-/// rotation.  `engines == 1` gives the single-engine member of the same
-/// scheduler family, so 1-vs-N comparisons isolate the sharding effect.
+// ==========================================================================
+// SimBackend — the simulator ScheduleBackend
+// ==========================================================================
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SimLife {
+    Fresh,
+    InFlight,
+    Ready,
+    Consumed,
+}
+
+struct SimEntry {
+    req: SimRequest,
+    /// Preserved progress a resume re-prefills over.
+    progress: usize,
+    life: SimLife,
+    /// Harvested response length (output_len, or clip progress).
+    ready_len: usize,
+    complete: bool,
+    /// Completion-order stamp (what `ready_rids` sorts by).
+    seq: u64,
+}
+
+/// The simulator `ScheduleBackend`: executes the SAME policy decision
+/// sequence the live controller executes, against [`SimPool`]'s cost model.
+/// The live mirror is `coordinator::controller`'s `LiveBackend`.
+struct SimBackend {
+    pool: SimPool,
+    cost: CostModel,
+    pred: Box<dyn LengthPredictor>,
+    score: PredictorScore,
+    /// Prediction captured at stage time — what actually drove dispatch —
+    /// not recomputed after siblings finished.
+    staged_pred: BTreeMap<usize, f64>,
+    /// Workload not yet loaded (grouped loading pops from here).
+    backlog: VecDeque<SimRequest>,
+    entries: BTreeMap<u64, SimEntry>,
+    q_cap: usize,
+    total: usize,
+    done: usize,
+    seq: u64,
+    updates: usize,
+    harvests: usize,
+    clipped: usize,
+    dropped: usize,
+    wasted: u64,
+    infer_time: f64,
+    update_time: f64,
+    /// Async mode: updates overlap decoding instead of serializing.
+    overlap_updates: bool,
+    /// Engine-clock time at which the (async) trainer frees up.
+    update_free_at: f64,
+}
+
+impl SimBackend {
+    fn new(workload: &[SimRequest], engines: usize, q_each: usize, cost: CostModel,
+           dispatch: DispatchPolicy, predictor: PredictorKind,
+           overlap_updates: bool) -> Self {
+        SimBackend {
+            pool: SimPool::new(engines, q_each, cost, dispatch),
+            cost,
+            pred: make_sim_predictor(predictor, workload),
+            score: PredictorScore::default(),
+            staged_pred: BTreeMap::new(),
+            backlog: workload.iter().copied().collect(),
+            entries: BTreeMap::new(),
+            q_cap: q_each * engines,
+            total: workload.len(),
+            done: 0,
+            seq: 0,
+            updates: 0,
+            harvests: 0,
+            clipped: 0,
+            dropped: 0,
+            wasted: 0,
+            infer_time: 0.0,
+            update_time: 0.0,
+            overlap_updates,
+            update_free_at: 0.0,
+        }
+    }
+
+    fn into_report(self, mode: SimMode) -> SimReport {
+        let rollout_time = self.pool.clock();
+        let timeline = merge_timelines(&self.pool.engines);
+        let bubble = timeline.bubble_ratio(self.q_cap, rollout_time);
+        // useful = tokens of trajectories actually harvested (clipping
+        // shortens; restarts and drops waste)
+        let useful = self.pool.tokens_out().saturating_sub(self.wasted);
+        let total_time = if self.overlap_updates {
+            // async: update cost hides under decoding; only the overhang
+            // past the rollout end serializes
+            rollout_time.max(self.update_free_at) + self.infer_time
+        } else {
+            rollout_time + self.infer_time + self.update_time
+        };
+        SimReport {
+            mode,
+            total_time,
+            rollout_time,
+            update_time: self.update_time,
+            infer_time: self.infer_time,
+            useful_tokens: useful,
+            wasted_tokens: self.wasted,
+            bubble_ratio: bubble,
+            throughput: useful as f64 / rollout_time,
+            timeline,
+            harvests: self.harvests,
+            clipped: self.clipped,
+            dropped: self.dropped,
+            engines: self.pool.engines.len(),
+            predictor_mae: self.score.mae(),
+            predictor_tau: self.score.kendall_tau(),
+        }
+    }
+}
+
+impl ScheduleBackend for SimBackend {
+    fn view(&self) -> SchedView {
+        let mut ready = 0;
+        let mut fresh = 0;
+        let mut unconsumed = 0;
+        for e in self.entries.values() {
+            match e.life {
+                SimLife::Fresh => {
+                    fresh += 1;
+                    unconsumed += 1;
+                }
+                SimLife::InFlight => unconsumed += 1,
+                SimLife::Ready => {
+                    ready += 1;
+                    unconsumed += 1;
+                }
+                SimLife::Consumed => {}
+            }
+        }
+        SchedView {
+            running: self.pool.total_running(),
+            queued: self.pool.queued(),
+            ready,
+            fresh,
+            unconsumed,
+            lanes: self.q_cap,
+            updates: self.updates,
+        }
+    }
+
+    fn schedulable(&self) -> Vec<u64> {
+        self.entries
+            .values()
+            .filter(|e| e.life == SimLife::Fresh)
+            .map(|e| e.req.id as u64)
+            .collect()
+    }
+
+    fn ready_rids(&self) -> Vec<u64> {
+        let mut v: Vec<(u64, u64)> = self
+            .entries
+            .values()
+            .filter(|e| e.life == SimLife::Ready)
+            .map(|e| (e.seq, e.req.id as u64))
+            .collect();
+        v.sort_unstable();
+        v.into_iter().map(|(_, rid)| rid).collect()
+    }
+
+    fn ready_len(&self, rid: u64) -> usize {
+        self.entries.get(&rid).map(|e| e.ready_len).unwrap_or(0)
+    }
+
+    fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
+        let mut count = 0;
+        for _ in 0..prompts {
+            let Some(req) = self.backlog.pop_front() else { break };
+            self.entries.insert(req.id as u64, SimEntry {
+                req,
+                progress: 0,
+                life: SimLife::Fresh,
+                ready_len: 0,
+                complete: false,
+                seq: 0,
+            });
+            count += 1;
+        }
+        Ok(count)
+    }
+
+    fn admit(&mut self, rids: &[u64]) -> Result<()> {
+        let mut work = Vec::with_capacity(rids.len());
+        for rid in rids {
+            let e = self.entries.get_mut(rid).expect("admit unknown sim rid");
+            assert_eq!(e.life, SimLife::Fresh, "admit non-fresh sim rid {rid}");
+            e.life = SimLife::InFlight;
+            let predicted = self.pred.predict(e.req.id as u64, e.req.prompt_len);
+            self.staged_pred.insert(e.req.id, predicted);
+            work.push((e.req, e.progress));
+        }
+        self.pool.stage(work, self.pred.as_ref());
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<usize> {
+        let Some(finished) = self.pool.tick() else { return Ok(0) };
+        let n = finished.len();
+        for r in &finished {
+            let predicted = self
+                .staged_pred
+                .remove(&r.id)
+                .unwrap_or_else(|| self.pred.predict(r.id as u64, r.prompt_len));
+            self.score.push(predicted, r.output_len as f64);
+            self.pred.observe(r.id as u64, r.prompt_len, r.output_len);
+            let e = self
+                .entries
+                .get_mut(&(r.id as u64))
+                .expect("finished unknown sim rid");
+            debug_assert_eq!(e.life, SimLife::InFlight);
+            e.life = SimLife::Ready;
+            e.ready_len = r.output_len;
+            e.complete = true;
+            e.seq = self.seq;
+            self.seq += 1;
+        }
+        Ok(n)
+    }
+
+    fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
+        let mut terminated = self.pool.terminate_all();
+        // harvest is a sync point: engine clocks jump to the pool max
+        self.pool.align_clocks();
+        // highest progress first — clipping candidates
+        terminated.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
+        let mut items = Vec::with_capacity(terminated.len());
+        for (req, progress) in terminated {
+            // preemption progress is a length floor the predictor can use
+            self.pred.observe_progress(req.id as u64, req.prompt_len, progress);
+            self.staged_pred.remove(&req.id);
+            items.push(HarvestItem { rid: req.id as u64, progress, queued: false });
+        }
+        Ok(items)
+    }
+
+    fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()> {
+        let e = self.entries.get_mut(&item.rid).expect("resolve unknown sim rid");
+        debug_assert_eq!(e.life, SimLife::InFlight);
+        match action {
+            HarvestAction::Clip => {
+                e.life = SimLife::Ready;
+                e.ready_len = item.progress;
+                e.complete = false;
+                e.seq = self.seq;
+                self.seq += 1;
+                self.clipped += 1;
+            }
+            HarvestAction::Restart => {
+                e.progress = 0;
+                e.life = SimLife::Fresh;
+                self.wasted += item.progress as u64;
+            }
+            HarvestAction::Resume | HarvestAction::Requeue => {
+                e.progress = item.progress;
+                e.life = SimLife::Fresh;
+            }
+            HarvestAction::Drop => {
+                e.life = SimLife::Consumed;
+                self.wasted += item.progress as u64;
+                self.dropped += 1;
+                self.done += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn preempt(&mut self, engine: usize, lane: usize) -> Result<()> {
+        self.pool.preempt(engine, lane);
+        Ok(())
+    }
+
+    fn train(&mut self, rids: &[u64]) -> Result<()> {
+        let mut toks = 0.0f64;
+        for rid in rids {
+            let e = self.entries.get_mut(rid).expect("train unknown sim rid");
+            assert_eq!(e.life, SimLife::Ready, "train non-ready sim rid {rid}");
+            e.life = SimLife::Consumed;
+            toks += (e.req.prompt_len + e.ready_len) as f64;
+            self.done += 1;
+        }
+        self.infer_time += toks * self.cost.t_infer_token;
+        let update_cost = toks * self.cost.t_update_token;
+        self.update_time += update_cost;
+        if self.overlap_updates {
+            let start = self.update_free_at.max(self.pool.clock());
+            self.update_free_at = start + update_cost;
+        }
+        self.harvests += 1;
+        self.updates += 1;
+        Ok(())
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        // group-end sync barrier
+        self.pool.align_clocks();
+        self.entries.retain(|_, e| e.life != SimLife::Consumed);
+        Ok(())
+    }
+
+    fn exhausted(&self) -> bool {
+        self.done >= self.total
+    }
+}
+
+/// Multi-engine pool simulation, policy-driven: the SAME `SchedulePolicy`
+/// decision sequence the live controller executes, run against the cost
+/// model.  Baseline loads sync-barrier waves of `q_total` requests; the
+/// sorted/async modes treat the whole workload as one group pool
+/// (oversubscription, early termination at the batching threshold, per-mode
+/// clip/restart/resume at harvests).  `engines == 1` gives the
+/// single-engine member of the same scheduler family, so 1-vs-N
+/// comparisons isolate the sharding effect.
 ///
 /// `q_total` is rounded down to a multiple of `engines`.
 pub fn simulate_pool(mode: SimMode, workload: &[SimRequest], engines: usize,
@@ -741,183 +795,26 @@ pub fn simulate_pool(mode: SimMode, workload: &[SimRequest], engines: usize,
     assert!(update_batch >= 1, "update_batch must be >= 1");
     let q_each = q_total / engines;
     let q_cap = q_each * engines;
-    let mut pool = SimPool::new(engines, q_each, cost, dispatch);
-    let mut pred = make_sim_predictor(predictor, workload);
-    let mut score = PredictorScore::default();
-    let mut infer_time = 0.0;
-    let mut update_time = 0.0;
-    let mut harvests = 0usize;
-
-    // Predictions are scored as captured at STAGE time — what actually
-    // drove the dispatch decision — not recomputed after siblings finished.
-    let mut staged_pred: std::collections::BTreeMap<usize, f64> =
-        std::collections::BTreeMap::new();
-
-    if mode == SimMode::Baseline {
-        // waves of q_cap behind a sync barrier, run to completion
-        for batch in workload.chunks(q_cap) {
-            for r in batch {
-                staged_pred.insert(r.id, pred.predict(r.id as u64, r.prompt_len));
-            }
-            pool.stage(batch.iter().map(|r| (*r, 0usize)).collect(), pred.as_ref());
-            let mut finished: Vec<SimRequest> = Vec::new();
-            while let Some(f) = pool.tick() {
-                for r in &f {
-                    let p = staged_pred
-                        .remove(&r.id)
-                        .unwrap_or_else(|| pred.predict(r.id as u64, r.prompt_len));
-                    score.push(p, r.output_len as f64);
-                    pred.observe(r.id as u64, r.prompt_len, r.output_len);
-                }
-                finished.extend(f);
-            }
-            pool.align_clocks();
-            let (ti, tu) = post_phase_costs(&finished, &cost);
-            infer_time += ti;
-            update_time += tu;
-            harvests += finished.len().div_ceil(update_batch.max(1));
-        }
-        let rollout_time = pool.clock();
-        let useful: u64 = workload.iter().map(|r| r.output_len as u64).sum();
-        let timeline = merge_timelines(&pool.engines);
-        let bubble = timeline.bubble_ratio(q_cap, rollout_time);
-        return SimReport {
-            mode,
-            total_time: rollout_time + infer_time + update_time,
-            rollout_time,
-            update_time,
-            infer_time,
-            useful_tokens: useful,
-            wasted_tokens: pool.tokens_out() - useful,
-            bubble_ratio: bubble,
-            throughput: useful as f64 / rollout_time,
-            timeline,
-            harvests,
-            clipped: 0,
-            dropped: 0,
-            engines,
-            predictor_mae: score.mae(),
-            predictor_tau: score.kendall_tau(),
-        };
-    }
-
-    // SortedRL modes: one group pool, early-terminate at the batching
-    // threshold, clip/restart/resume per mode (mirrors simulate_sorted's
-    // harvest accounting so reports are directly comparable).
-    let total = workload.len();
-    let mut pending: Vec<(SimRequest, usize)> =
-        workload.iter().map(|r| (*r, 0usize)).collect();
-    let mut done = 0usize;
-    let mut wasted = 0u64;
-    let mut clipped = 0usize;
-    let mut dropped = 0usize;
-
-    while done < total {
-        let work = std::mem::take(&mut pending);
-        for (req, _) in &work {
-            staged_pred.insert(req.id, pred.predict(req.id as u64, req.prompt_len));
-        }
-        pool.stage(work, pred.as_ref());
-        let quota = update_batch.min(total - done);
-        let threshold = match mode {
-            SimMode::SortedOnPolicy => (quota * 3 / 4).max(1),
-            _ => quota,
-        };
-        let final_wave = total - done <= update_batch;
-        let occ_floor = (q_cap * 3 / 4).max(1);
-        let mut ready: Vec<SimRequest> = Vec::new();
-        loop {
-            let Some(f) = pool.tick() else { break };
-            for r in &f {
-                let p = staged_pred
-                    .remove(&r.id)
-                    .unwrap_or_else(|| pred.predict(r.id as u64, r.prompt_len));
-                score.push(p, r.output_len as f64);
-                pred.observe(r.id as u64, r.prompt_len, r.output_len);
-            }
-            ready.extend(f);
-            let remaining = total - done - ready.len();
-            if ready.len() >= threshold && remaining > 0 {
-                break; // early termination: harvest threshold reached
-            }
-            if final_wave && pool.queued() == 0 && pool.total_running() < occ_floor {
-                break; // batching floor: clip the stragglers
-            }
-        }
-        let mut terminated = pool.terminate_all();
-        pool.align_clocks();
-        // highest progress first — clipping candidates
-        terminated.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
-        for (req, progress) in terminated {
-            // preemption progress is a length floor the predictor can use
-            pred.observe_progress(req.id as u64, req.prompt_len, progress);
-            let need_clip = ready.len() < quota;
-            match mode {
-                SimMode::SortedOnPolicy => {
-                    if need_clip && progress > 0 {
-                        let mut c = req;
-                        c.output_len = progress;
-                        ready.push(c);
-                        clipped += 1;
-                    } else if final_wave {
-                        wasted += progress as u64;
-                        dropped += 1;
-                        done += 1;
-                    } else {
-                        wasted += progress as u64;
-                        pending.push((req, 0));
-                    }
-                }
-                SimMode::SortedPartial => {
-                    if final_wave {
-                        if progress > 0 {
-                            let mut c = req;
-                            c.output_len = progress;
-                            ready.push(c);
-                            clipped += 1;
-                        } else {
-                            dropped += 1;
-                            done += 1;
-                        }
-                    } else {
-                        pending.push((req, progress));
-                    }
-                }
-                SimMode::Baseline => unreachable!(),
-            }
-        }
-        if ready.is_empty() {
-            break;
-        }
-        done += ready.len();
-        harvests += 1;
-        let (ti, tu) = post_phase_costs(&ready, &cost);
-        infer_time += ti;
-        update_time += tu;
-    }
-
-    let rollout_time = pool.clock();
-    let useful = pool.tokens_out() - wasted;
-    let timeline = merge_timelines(&pool.engines);
-    let bubble = timeline.bubble_ratio(q_cap, rollout_time);
-    SimReport {
-        mode,
-        total_time: rollout_time + infer_time + update_time,
-        rollout_time,
-        update_time,
-        infer_time,
-        useful_tokens: useful,
-        wasted_tokens: wasted,
-        bubble_ratio: bubble,
-        throughput: useful as f64 / rollout_time,
-        timeline,
-        harvests,
-        clipped,
-        dropped,
-        engines,
-        predictor_mae: score.mae(),
-        predictor_tau: score.kendall_tau(),
-    }
+    let params = PolicyParams {
+        refill_prompts: match mode {
+            SimMode::Baseline => q_cap,
+            _ => workload.len().max(1),
+        },
+        entries_per_prompt: 1,
+        update_batch,
+    };
+    let mut policy: Box<dyn SchedulePolicy> = match mode {
+        SimMode::Baseline => Box::new(BaselinePolicy::new(params, false)),
+        SimMode::SortedOnPolicy => Box::new(GroupPolicy::new(params, Mode::OnPolicy)),
+        SimMode::SortedPartial => Box::new(GroupPolicy::new(params, Mode::Partial)),
+        SimMode::Async => Box::new(AsyncUpdatePolicy::new(params, ASYNC_SYNC_EVERY)),
+    };
+    let mut backend =
+        SimBackend::new(workload, engines, q_each, cost, dispatch, predictor,
+                        mode == SimMode::Async);
+    drive(policy.as_mut(), &mut backend)
+        .expect("sim backend is infallible; a driver error means a policy livelock");
+    backend.into_report(mode)
 }
 
 #[cfg(test)]
@@ -997,6 +894,33 @@ mod tests {
                 assert_eq!(r.clipped, 0);
             }
         }
+    }
+
+    #[test]
+    fn async_mode_conserves_and_beats_baseline_bubble() {
+        let w = longtail_workload(512, 8192, 1);
+        let base = simulate(SimMode::Baseline, &w, 128, 128, CostModel::default());
+        let asy = simulate(SimMode::Async, &w, 128, 128, CostModel::default());
+        assert_eq!(asy.timeline.finished() as usize + asy.clipped + asy.dropped, 512);
+        assert_eq!(asy.wasted_tokens, 0, "async resumes partials, never discards");
+        assert!(asy.bubble_ratio < base.bubble_ratio / 2.0,
+                "async {} vs baseline {}", asy.bubble_ratio, base.bubble_ratio);
+        // the async win: update cost hides under continued decoding instead
+        // of serializing behind a harvest barrier
+        let serialized = asy.rollout_time + asy.infer_time + asy.update_time;
+        assert!(asy.total_time < serialized,
+                "async total {} !< serialized {}", asy.total_time, serialized);
+        assert!(asy.harvests >= 2, "expected multiple overlapped updates");
+    }
+
+    #[test]
+    fn async_total_time_beats_sync_partial() {
+        let w = longtail_workload(512, 8192, 2);
+        let part = simulate(SimMode::SortedPartial, &w, 128, 128, CostModel::default());
+        let asy = simulate(SimMode::Async, &w, 128, 128, CostModel::default());
+        // same resume semantics, but updates overlap decoding
+        assert!(asy.total_time < part.total_time,
+                "async {} !< partial {}", asy.total_time, part.total_time);
     }
 
     #[test]
