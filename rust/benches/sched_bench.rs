@@ -47,6 +47,22 @@ fn main() {
              one.bubble_ratio * 100.0, four.bubble_ratio * 100.0,
              one.rollout_time, four.rollout_time);
 
+    // ---- async updates vs the sync baseline (the policy-API payoff) ----
+    let base = simulate_pool(SimMode::Baseline, &w, 4, 128, 128, cost,
+                             DispatchPolicy::ShortestPredictedFirst,
+                             PredictorKind::History);
+    let asy = simulate_pool(SimMode::Async, &w, 4, 128, 128, cost,
+                            DispatchPolicy::ShortestPredictedFirst,
+                            PredictorKind::History);
+    println!("async vs baseline (4 engines x 32 lanes):");
+    println!("  bubble    {:6.2}%  vs  {:6.2}%  (async must be lower)",
+             asy.bubble_ratio * 100.0, base.bubble_ratio * 100.0);
+    println!("  total     {:6.1}s  vs  {:6.1}s  (update time hidden under decode)",
+             asy.total_time, base.total_time);
+    println!("  update    {:6.1}s overlapped; overhang {:.1}s\n",
+             asy.update_time,
+             (asy.total_time - asy.infer_time - asy.rollout_time).max(0.0));
+
     // ---- host-time benches ----
     bench("pool_makespan 4x32 sjf/oracle (host)", 2.0, || {
         std::hint::black_box(pool_makespan(

@@ -82,7 +82,7 @@ sortedrl — online length-aware scheduling for RL training of LLMs
 
 USAGE:
   sortedrl train [--task logic|math] [--scheduler baseline|on-policy|partial|
-                 post-hoc-sort|no-grouped] [--updates N] [--rollout-prompts b]
+                 post-hoc-sort|no-grouped|async] [--updates N] [--rollout-prompts b]
                  [--group-size n] [--samples-per-prompt G] [--update-batch U]
                  [--lr F] [--max-new N] [--seed N] [--scale ci|small|paper]
                  [--engines N] [--predictor oracle|history|bucket]
@@ -157,7 +157,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         other => bail!("unknown task {other:?}"),
     };
     let scheduler = SchedulerKind::parse(args.get("scheduler").unwrap_or("on-policy"))
-        .context("--scheduler baseline|on-policy|partial|post-hoc-sort|no-grouped")?;
+        .with_context(|| format!("--scheduler {}", SchedulerKind::valid_names()))?;
     let seed = args.get_u64("seed", 0)?;
     let cfg = LoopConfig {
         scheduler,
@@ -315,12 +315,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
     println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}\n");
     for (mode, label) in [(SimMode::Baseline, "baseline"),
                           (SimMode::SortedOnPolicy, "on-policy"),
-                          (SimMode::SortedPartial, "partial")] {
+                          (SimMode::SortedPartial, "partial"),
+                          (SimMode::Async, "async")] {
         let r = simulate(mode, &w, q, u, CostModel::default());
         println!("{label:>10}: {:7.0} tok/s  bubble {:5.2}%  rollout {:7.1}s  \
-                  wasted {:8}  clipped {:3}",
+                  total {:7.1}s  wasted {:8}  clipped {:3}",
                  r.throughput, r.bubble_ratio * 100.0, r.rollout_time,
-                 r.wasted_tokens, r.clipped);
+                 r.total_time, r.wasted_tokens, r.clipped);
     }
     if engines > 1 {
         println!("\npool: {engines} engines x {} lanes, predictor {}, dispatch {} \
@@ -329,7 +330,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
         let mut telemetry = (0.0, 0.0);
         for (mode, label) in [(SimMode::Baseline, "baseline"),
                               (SimMode::SortedOnPolicy, "on-policy"),
-                              (SimMode::SortedPartial, "partial")] {
+                              (SimMode::SortedPartial, "partial"),
+                              (SimMode::Async, "async")] {
             let one = simulate_pool(mode, &w, 1, q, u, CostModel::default(),
                                     dispatch, predictor);
             let many = simulate_pool(mode, &w, engines, q, u, CostModel::default(),

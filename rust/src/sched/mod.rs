@@ -17,6 +17,11 @@
 //! The simulator mirror lives in [`crate::sim`] (`simulate_pool`,
 //! `pool_makespan`) so 1-vs-N engine comparisons run at paper scale in
 //! milliseconds; `exp pool` and `benches/sched_bench.rs` drive it.
+//!
+//! [`policy`] is the unified scheduling brain: a [`SchedulePolicy`] emits
+//! typed decisions that one generic driver executes against either the
+//! live controller backend or the simulator backend, so every scheduler
+//! (including the async-update one) is written exactly once.
 
 pub mod policy;
 pub mod pool;

@@ -750,6 +750,9 @@ impl ScheduleBackend for SimBackend {
         for rid in rids {
             let e = self.entries.get_mut(rid).expect("train unknown sim rid");
             assert_eq!(e.life, SimLife::Ready, "train non-ready sim rid {rid}");
+            // natural completions train at their true length; only clips
+            // (complete == false) may be shorter
+            debug_assert!(!e.complete || e.ready_len == e.req.output_len);
             e.life = SimLife::Consumed;
             toks += (e.req.prompt_len + e.ready_len) as f64;
             self.done += 1;

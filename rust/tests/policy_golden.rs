@@ -1,0 +1,406 @@
+//! Golden-equivalence tests for the `SchedulePolicy` port.
+//!
+//! The pinned sequences below were derived BY HAND from the legacy
+//! controller loops (`run_group` / `run_baseline` / `run_no_grouped`, now
+//! deleted) on a deterministic mini-engine: one token per tick per lane,
+//! FIFO lane admission, known output lengths.  Each pre-existing
+//! `SchedulerKind` must reproduce the legacy update counts and consumed-rid
+//! sequences through the unified driver, with
+//! `RolloutBuffer::check_invariants` holding after EVERY driver transition
+//! (every backend method asserts it).
+//!
+//! The backend here is the live backend's structural twin: a real
+//! `RolloutBuffer` carries the entry lifecycles, and `resolve` applies the
+//! same verdict->buffer mapping `coordinator::controller::LiveBackend`
+//! uses, so lifecycle/log-prob bookkeeping is exercised for real — only
+//! the PJRT engine is replaced by the deterministic mini-engine.
+
+use anyhow::Result;
+use sortedrl::coordinator::{Lifecycle, Mode, RolloutBuffer, SchedulerKind};
+use sortedrl::rollout::{Request, Rollout};
+use sortedrl::sched::policy::{
+    drive, make_policy, HarvestAction, HarvestItem, PolicyParams, SchedView,
+    ScheduleBackend,
+};
+use sortedrl::sched::{DispatchPolicy, PredictorKind};
+use sortedrl::sim::{longtail_workload, simulate, simulate_pool, CostModel, SimMode};
+use std::collections::{BTreeMap, VecDeque};
+
+fn assemble(req: &Request, toks: &[i32], lps: &[f32], complete: bool, at: f64) -> Rollout {
+    let mut response = req.resumed.clone();
+    response.extend_from_slice(toks);
+    let mut logp = req.resumed_logp.clone();
+    logp.extend_from_slice(lps);
+    Rollout {
+        request: req.clone(),
+        response,
+        logp,
+        finish_version: 1,
+        complete,
+        finished_at: at,
+    }
+}
+
+struct InFlight {
+    req: Request,
+    toks: Vec<i32>,
+    lps: Vec<f32>,
+}
+
+/// Deterministic live-backend twin: real RolloutBuffer, mini-engine with
+/// `lanes` lanes emitting one token per tick, FIFO admission.
+struct BufferBackend {
+    buffer: RolloutBuffer,
+    /// rid -> target response length.
+    lens: BTreeMap<u64, usize>,
+    /// Lengths for prompts not yet loaded (grouped loading pops these).
+    plan: VecDeque<usize>,
+    lanes: usize,
+    running: Vec<u64>,
+    queue: VecDeque<u64>,
+    inflight: BTreeMap<u64, InFlight>,
+    stash: BTreeMap<u64, Rollout>,
+    clock: f64,
+    updates: usize,
+    max_updates: usize,
+    harvest_calls: usize,
+    consumed_order: Vec<u64>,
+    clipped: Vec<u64>,
+    dropped: u64,
+}
+
+impl BufferBackend {
+    fn new(lens: &[usize], lanes: usize, max_updates: usize) -> Self {
+        BufferBackend {
+            buffer: RolloutBuffer::new(),
+            lens: BTreeMap::new(),
+            plan: lens.iter().copied().collect(),
+            lanes,
+            running: Vec::new(),
+            queue: VecDeque::new(),
+            inflight: BTreeMap::new(),
+            stash: BTreeMap::new(),
+            clock: 0.0,
+            updates: 0,
+            max_updates,
+            harvest_calls: 0,
+            consumed_order: Vec::new(),
+            clipped: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    /// The golden contract: buffer invariants hold after EVERY transition.
+    fn check(&self) {
+        self.buffer.check_invariants().unwrap();
+    }
+}
+
+impl ScheduleBackend for BufferBackend {
+    fn view(&self) -> SchedView {
+        SchedView {
+            running: self.running.len(),
+            queued: self.queue.len(),
+            ready: self.buffer.count(Lifecycle::Ready),
+            fresh: self.buffer.count(Lifecycle::Fresh),
+            unconsumed: self.buffer.len() - self.buffer.count(Lifecycle::Consumed),
+            lanes: self.lanes,
+            updates: self.updates,
+        }
+    }
+
+    fn schedulable(&self) -> Vec<u64> {
+        self.buffer.schedulable()
+    }
+
+    fn ready_rids(&self) -> Vec<u64> {
+        self.buffer.ready_rids()
+    }
+
+    fn ready_len(&self, rid: u64) -> usize {
+        self.buffer.get(rid).map(|e| e.partial.len()).unwrap_or(0)
+    }
+
+    fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
+        let mut count = 0;
+        for _ in 0..prompts {
+            let Some(len) = self.plan.pop_front() else { break };
+            let rid = self.buffer.load_prompt(count, 1000 + count as u64, vec![1, 2], 64);
+            self.lens.insert(rid, len);
+            count += 1;
+        }
+        self.check();
+        Ok(count)
+    }
+
+    fn admit(&mut self, rids: &[u64]) -> Result<()> {
+        for req in self.buffer.dispatch(rids) {
+            self.queue.push_back(req.rid);
+            self.inflight
+                .insert(req.rid, InFlight { req, toks: Vec::new(), lps: Vec::new() });
+        }
+        self.check();
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<usize> {
+        self.clock += 1.0;
+        while self.running.len() < self.lanes {
+            let Some(rid) = self.queue.pop_front() else { break };
+            self.running.push(rid);
+        }
+        let mut finished = 0;
+        let mut still = Vec::new();
+        for rid in std::mem::take(&mut self.running) {
+            let fl = self.inflight.get_mut(&rid).unwrap();
+            fl.toks.push(7);
+            fl.lps.push(-0.5);
+            let total = fl.req.resumed.len() + fl.toks.len();
+            if total >= self.lens[&rid] {
+                let fl = self.inflight.remove(&rid).unwrap();
+                let r = assemble(&fl.req, &fl.toks, &fl.lps, true, self.clock);
+                self.buffer.record_finished(&r);
+                finished += 1;
+            } else {
+                still.push(rid);
+            }
+        }
+        self.running = still;
+        self.check();
+        Ok(finished)
+    }
+
+    fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
+        self.harvest_calls += 1;
+        let mut partials: Vec<Rollout> = Vec::new();
+        let mut fresh_queued: Vec<u64> = Vec::new();
+        for rid in std::mem::take(&mut self.running) {
+            let fl = self.inflight.remove(&rid).unwrap();
+            partials.push(assemble(&fl.req, &fl.toks, &fl.lps, false, self.clock));
+        }
+        for rid in std::mem::take(&mut self.queue) {
+            let fl = self.inflight.remove(&rid).unwrap();
+            if fl.req.resumed.is_empty() && fl.toks.is_empty() {
+                fresh_queued.push(rid);
+            } else {
+                partials.push(assemble(&fl.req, &fl.toks, &fl.lps, false, self.clock));
+            }
+        }
+        partials.sort_by(|a, b| {
+            b.response
+                .len()
+                .cmp(&a.response.len())
+                .then(a.request.rid.cmp(&b.request.rid))
+        });
+        self.stash.clear();
+        let mut items = Vec::with_capacity(partials.len() + fresh_queued.len());
+        for r in partials {
+            items.push(HarvestItem {
+                rid: r.request.rid,
+                progress: r.response.len(),
+                queued: false,
+            });
+            self.stash.insert(r.request.rid, r);
+        }
+        for rid in fresh_queued {
+            items.push(HarvestItem { rid, progress: 0, queued: true });
+        }
+        self.check();
+        Ok(items)
+    }
+
+    fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()> {
+        // the same verdict->buffer mapping LiveBackend applies
+        match (self.stash.remove(&item.rid), action) {
+            (Some(r), HarvestAction::Clip) => {
+                self.buffer.record_clipped(&r);
+                self.clipped.push(item.rid);
+            }
+            (Some(r), HarvestAction::Restart) => {
+                self.buffer.record_terminated(&r, Mode::OnPolicy);
+            }
+            (Some(r), HarvestAction::Resume | HarvestAction::Requeue) => {
+                self.buffer.record_terminated(&r, Mode::Partial);
+            }
+            (Some(r), HarvestAction::Drop) => {
+                self.buffer.record_terminated(&r, Mode::OnPolicy);
+                self.dropped += self.buffer.consume_untrained(&[r.request.rid]) as u64;
+            }
+            (None, HarvestAction::Drop) => {
+                self.buffer.record_requeued(item.rid);
+                self.dropped += self.buffer.consume_untrained(&[item.rid]) as u64;
+            }
+            (None, _) => self.buffer.record_requeued(item.rid),
+        }
+        self.check();
+        Ok(())
+    }
+
+    fn preempt(&mut self, _engine: usize, lane: usize) -> Result<()> {
+        if lane < self.running.len() {
+            let rid = self.running.remove(lane);
+            self.queue.push_back(rid);
+        }
+        Ok(())
+    }
+
+    fn train(&mut self, rids: &[u64]) -> Result<()> {
+        let entries = self.buffer.consume(rids);
+        for e in &entries {
+            assert_eq!(e.partial.len(), e.partial_logp.len());
+            assert!(e.complete || e.clipped);
+        }
+        self.consumed_order.extend_from_slice(rids);
+        self.updates += 1;
+        self.check();
+        Ok(())
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.buffer.clear_consumed();
+        self.check();
+        Ok(())
+    }
+
+    fn exhausted(&self) -> bool {
+        self.updates >= self.max_updates
+    }
+}
+
+/// Shared scenario: 6 prompts with lengths [2,4,6,3,9,1], 2 lanes, update
+/// batch 2, one group of all 6.
+const LENS: [usize; 6] = [2, 4, 6, 3, 9, 1];
+
+fn run_kind(kind: SchedulerKind) -> BufferBackend {
+    let params = PolicyParams {
+        refill_prompts: LENS.len(),
+        entries_per_prompt: 1,
+        update_batch: 2,
+    };
+    let mut policy = make_policy(kind, params);
+    let mut b = BufferBackend::new(&LENS, 2, 100);
+    drive(policy.as_mut(), &mut b).unwrap();
+    b
+}
+
+#[test]
+fn golden_sorted_on_policy() {
+    let b = run_kind(SchedulerKind::SortedOnPolicy);
+    // legacy run_group(OnPolicy): wave 1 finishes rid0 and clips rid1 at
+    // progress 1 to fill the quota; wave 2 finishes rid3, clips rid2;
+    // final wave runs 4 and 5 to completion (5 is shorter, finishes first)
+    assert_eq!(b.updates, 3);
+    assert_eq!(b.consumed_order, vec![0, 1, 2, 3, 5, 4]);
+    assert_eq!(b.clipped, vec![1, 2]);
+    assert_eq!(b.dropped, 0);
+}
+
+#[test]
+fn golden_sorted_partial() {
+    let b = run_kind(SchedulerKind::SortedPartial);
+    // legacy partial mode: threshold waits for full completions; rid2 is
+    // scavenged with progress kept and finishes at its true length
+    assert_eq!(b.updates, 3);
+    assert_eq!(b.consumed_order, vec![0, 1, 3, 2, 5, 4]);
+    assert!(b.clipped.is_empty());
+    assert_eq!(b.dropped, 0);
+}
+
+#[test]
+fn golden_baseline() {
+    let b = run_kind(SchedulerKind::Baseline);
+    // legacy run_baseline: one wave to completion (order t2,t4,t7,t8,t9,t16
+    // = rids 0,1,3,2,5,4), then sequential update chunks of 2
+    assert_eq!(b.updates, 3);
+    assert_eq!(b.consumed_order, vec![0, 1, 3, 2, 5, 4]);
+    assert!(b.clipped.is_empty());
+    assert_eq!(b.harvest_calls, 0, "baseline never harvests");
+}
+
+#[test]
+fn golden_post_hoc_sort() {
+    let b = run_kind(SchedulerKind::PostHocSort);
+    // lengths ascending: rid5(1), rid0(2), rid3(3), rid1(4), rid2(6), rid4(9)
+    assert_eq!(b.updates, 3);
+    assert_eq!(b.consumed_order, vec![5, 0, 3, 1, 2, 4]);
+}
+
+#[test]
+fn golden_no_grouped() {
+    let b = run_kind(SchedulerKind::NoGroupedRollout);
+    // legacy run_no_grouped: interrupted rids 2 and 4 are abandoned at the
+    // two harvests; only 0,1 then 3,5 train
+    assert_eq!(b.updates, 2);
+    assert_eq!(b.consumed_order, vec![0, 1, 3, 5]);
+    assert_eq!(b.dropped, 2);
+    assert!(b.clipped.is_empty());
+}
+
+#[test]
+fn golden_async_update() {
+    let b = run_kind(SchedulerKind::AsyncUpdate);
+    // async consumes in the same order as partial (same resume semantics)
+    // but NEVER harvests in this scenario: updates fire while lanes run
+    assert_eq!(b.updates, 3);
+    assert_eq!(b.consumed_order, vec![0, 1, 3, 2, 5, 4]);
+    assert_eq!(b.harvest_calls, 0, "async must update without a harvest barrier");
+    assert!(b.clipped.is_empty());
+    assert_eq!(b.dropped, 0);
+}
+
+#[test]
+fn max_updates_truncates_mid_group() {
+    let params = PolicyParams { refill_prompts: 6, entries_per_prompt: 1, update_batch: 2 };
+    let mut policy = make_policy(SchedulerKind::Baseline, params);
+    let mut b = BufferBackend::new(&LENS, 2, 2);
+    drive(policy.as_mut(), &mut b).unwrap();
+    assert_eq!(b.updates, 2);
+    assert_eq!(b.consumed_order, vec![0, 1, 3, 2]);
+}
+
+// --------------------------------------------------------------------------
+// simulator-side golden checks
+// --------------------------------------------------------------------------
+
+const SIM_MODES: [SimMode; 4] =
+    [SimMode::Baseline, SimMode::SortedOnPolicy, SimMode::SortedPartial, SimMode::Async];
+
+/// Same seed, same config -> bit-identical reports (the driver introduces
+/// no hidden nondeterminism).
+#[test]
+fn sim_reports_deterministic_across_runs() {
+    let w = longtail_workload(160, 2048, 9);
+    for mode in SIM_MODES {
+        let a = simulate_pool(mode, &w, 2, 32, 24, CostModel::default(),
+                              DispatchPolicy::ShortestPredictedFirst,
+                              PredictorKind::History);
+        let b = simulate_pool(mode, &w, 2, 32, 24, CostModel::default(),
+                              DispatchPolicy::ShortestPredictedFirst,
+                              PredictorKind::History);
+        assert_eq!(a.harvests, b.harvests, "{mode:?}");
+        assert_eq!(a.useful_tokens, b.useful_tokens, "{mode:?}");
+        assert_eq!(a.wasted_tokens, b.wasted_tokens, "{mode:?}");
+        assert_eq!(a.clipped, b.clipped, "{mode:?}");
+        assert_eq!(a.dropped, b.dropped, "{mode:?}");
+        assert!((a.rollout_time - b.rollout_time).abs() < 1e-9, "{mode:?}");
+        assert!((a.total_time - b.total_time).abs() < 1e-9, "{mode:?}");
+    }
+}
+
+/// `simulate` is literally the one-engine member of the pool family now —
+/// identical decision sequence, identical report.
+#[test]
+fn single_engine_sim_is_the_pool_member() {
+    let w = longtail_workload(96, 1024, 3);
+    for mode in SIM_MODES {
+        let a = simulate(mode, &w, 16, 12, CostModel::default());
+        let b = simulate_pool(mode, &w, 1, 16, 12, CostModel::default(),
+                              DispatchPolicy::ShortestPredictedFirst,
+                              PredictorKind::History);
+        assert_eq!(a.useful_tokens, b.useful_tokens, "{mode:?}");
+        assert_eq!(a.wasted_tokens, b.wasted_tokens, "{mode:?}");
+        assert_eq!(a.clipped, b.clipped, "{mode:?}");
+        assert_eq!(a.harvests, b.harvests, "{mode:?}");
+        assert!((a.rollout_time - b.rollout_time).abs() < 1e-9, "{mode:?}");
+    }
+}
