@@ -381,7 +381,8 @@ impl<'rt> Controller<'rt> {
     }
 
     fn log_update(&mut self, rows: &mut Vec<LogRow>, state: &ParamState,
-                  log: UpdateLog, engine_secs: f64) -> Result<()> {
+                  log: UpdateLog, engine_secs: f64, rollout_tokens: u64)
+                  -> Result<()> {
         let eval = if self.cfg.eval_every > 0 && log.update_idx % self.cfg.eval_every == 0 {
             Some(self.evaluate(state)?)
         } else {
@@ -402,7 +403,7 @@ impl<'rt> Controller<'rt> {
         rows.push(LogRow {
             update: log,
             epochs: self.loader.epochs_elapsed(),
-            rollout_tokens: self.rollout_tokens,
+            rollout_tokens,
             rollout_secs: engine_secs,
             eval,
         });
@@ -537,8 +538,11 @@ impl ScheduleBackend for LiveBackend<'_, '_> {
                 .grade(self.ctl.task.as_ref(), &self.ctl.dataset.train, &entries);
         let log = self.trainer.update(self.state, &entries, &rewards)?;
         let secs = self.pool.host_secs();
+        // cumulative pool tokens NOW, not the end-of-run absorbed total —
+        // rows must grow monotonically for the sample-efficiency curves
+        let tokens = self.ctl.rollout_tokens + self.pool.tokens_out();
         let mut rows = std::mem::take(&mut self.rows);
-        self.ctl.log_update(&mut rows, self.state, log, secs)?;
+        self.ctl.log_update(&mut rows, self.state, log, secs, tokens)?;
         self.rows = rows;
         debug_assert!(self.ctl.buffer.check_invariants().is_ok());
         Ok(())

@@ -195,6 +195,11 @@ pub trait ScheduleBackend {
 const MAX_DECISIONS: u64 = 200_000_000;
 /// Consecutive no-op steps (no work anywhere) before the driver bails.
 const MAX_IDLE_STEPS: usize = 10_000;
+/// Consecutive decisions that cannot make progress (empty refills, empty
+/// harvests, admissions, barriers) before the driver bails.  Only Step,
+/// an executed Update, and a non-empty Refill count as progress — an
+/// Admit/Harvest/requeue cycle that never decodes or trains is a livelock.
+const MAX_FRUITLESS: usize = 10_000;
 
 /// THE driver: executes one policy against one backend until the backend is
 /// exhausted or the policy says [`Decision::Done`].  Live training runs and
@@ -202,22 +207,34 @@ const MAX_IDLE_STEPS: usize = 10_000;
 pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend) -> Result<()> {
     let mut decisions: u64 = 0;
     let mut idle_steps: usize = 0;
+    let mut fruitless: usize = 0;
     while !backend.exhausted() {
         decisions += 1;
         if decisions > MAX_DECISIONS {
             anyhow::bail!("drive: decision budget exceeded (policy livelock?)");
         }
+        if fruitless > MAX_FRUITLESS {
+            anyhow::bail!("drive: {fruitless} consecutive decisions without \
+                           decoding, training, or loading (policy livelock)");
+        }
         match policy.decide(backend) {
             Decision::Refill { prompts } => {
                 let count = backend.load_prompts(prompts)?;
+                if count > 0 {
+                    fruitless = 0;
+                } else {
+                    fruitless += 1;
+                }
                 policy.observe(&Event::PromptsLoaded { count });
             }
             Decision::Admit { rids } => {
+                fruitless += 1;
                 if !rids.is_empty() {
                     backend.admit(&rids)?;
                 }
             }
             Decision::Step => {
+                fruitless = 0;
                 let before = backend.view();
                 let finished = backend.step()?;
                 if finished == 0 && before.running == 0 && before.queued == 0 {
@@ -231,6 +248,7 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
                 policy.observe(&Event::Tick { finished });
             }
             Decision::Harvest => {
+                fruitless += 1;
                 let items = backend.harvest_candidates()?;
                 for it in &items {
                     let act = policy.classify(it, &backend.view());
@@ -239,15 +257,22 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
                 policy.observe(&Event::Harvested { count: items.len() });
             }
             Decision::Preempt { engine, lane } => {
+                fruitless += 1;
                 backend.preempt(engine, lane)?;
             }
             Decision::Update { rids } => {
-                if !rids.is_empty() {
+                if rids.is_empty() {
+                    fruitless += 1;
+                } else {
+                    fruitless = 0;
                     backend.train(&rids)?;
                     policy.observe(&Event::UpdateDone);
                 }
             }
-            Decision::Barrier => backend.barrier()?,
+            Decision::Barrier => {
+                fruitless += 1;
+                backend.barrier()?;
+            }
             Decision::Done => return Ok(()),
         }
     }
@@ -297,6 +322,10 @@ pub struct GroupPolicy {
     occ_floor: usize,
     final_wave: bool,
     refill_empty: bool,
+    /// One update per harvest cycle (legacy run_group consumed once per
+    /// wave): leftover ready beyond `update_batch` waits for the next
+    /// cycle so it lands inside a full-size batch.
+    updated_this_cycle: bool,
 }
 
 impl GroupPolicy {
@@ -310,6 +339,7 @@ impl GroupPolicy {
             occ_floor: 1,
             final_wave: false,
             refill_empty: false,
+            updated_this_cycle: false,
         }
     }
 }
@@ -376,6 +406,7 @@ impl SchedulePolicy for GroupPolicy {
                 }
                 Phase::HarvestNow => {
                     self.phase = Phase::Consume;
+                    self.updated_this_cycle = false;
                     return Decision::Harvest;
                 }
                 Phase::Consume => {
@@ -384,13 +415,26 @@ impl SchedulePolicy for GroupPolicy {
                         return Decision::Barrier;
                     }
                     let ready = b.ready_rids();
-                    if ready.is_empty() {
-                        if b.schedulable().is_empty() && v.running == 0 && v.queued == 0 {
+                    // After this cycle's update, a SMALL leftover (below the
+                    // wave threshold) waits for the next wave so it lands in
+                    // a full batch; a leftover at/above the threshold is
+                    // consumed back-to-back — regenerating first would just
+                    // re-admit work the next harvest immediately terminates.
+                    let defer = self.updated_this_cycle
+                        && ready.len() < self.threshold
+                        && !b.schedulable().is_empty();
+                    if ready.is_empty() || defer {
+                        if ready.is_empty()
+                            && b.schedulable().is_empty()
+                            && v.running == 0
+                            && v.queued == 0
+                        {
                             return Decision::Done;
                         }
                         self.phase = Phase::Dispatch;
                         continue;
                     }
+                    self.updated_this_cycle = true;
                     let rids: Vec<u64> =
                         ready.into_iter().take(self.p.update_batch).collect();
                     return Decision::Update { rids };
@@ -560,13 +604,17 @@ impl SchedulePolicy for NoGroupedPolicy {
             let v = b.view();
             match self.phase {
                 Phase::Refill => {
-                    // top up: fresh prompts stream in with no barrier
+                    // top up: fresh prompts stream in with no barrier.
+                    // Deliberate unit fix vs the legacy loop: the target is
+                    // refill_prompts PROMPTS = refill_prompts * G entries
+                    // (legacy compared a prompt count against an entry
+                    // count, under-filling the pool by the G factor).
                     let target = self.p.refill_prompts * self.p.entries_per_prompt;
                     let deficit = target.saturating_sub(v.fresh);
                     self.phase = Phase::Dispatch;
                     if deficit > 0 && !self.refill_empty {
                         return Decision::Refill {
-                            prompts: deficit / self.p.entries_per_prompt.max(1) + 1,
+                            prompts: deficit.div_ceil(self.p.entries_per_prompt.max(1)),
                         };
                     }
                     continue;
@@ -729,7 +777,11 @@ impl SchedulePolicy for AsyncUpdatePolicy {
                         continue;
                     }
                     if v.running == 0 && v.queued == 0 {
-                        if v.ready > 0 {
+                        if v.ready > 0 || v.unconsumed == 0 {
+                            // consume leftovers — or, with the whole group
+                            // consumed, let Consume hit the group barrier
+                            // so the next group loads (live runs continue
+                            // to max_updates across many groups)
                             self.phase = Phase::Consume;
                             continue;
                         }

@@ -204,6 +204,13 @@ impl<'rt> EnginePool<'rt> {
         self.preempted
     }
 
+    /// Output tokens generated so far, summed over engines — cheap, so
+    /// per-update telemetry can read it mid-run (the occupancy/bubble
+    /// aggregation via [`Self::occupancy`] still happens once at run end).
+    pub fn tokens_out(&self) -> u64 {
+        self.engines.iter().map(|e| e.timeline.tokens_out()).sum()
+    }
+
     /// (idle_area, busy_span, tokens_out) aggregated over engines against
     /// the pool-wide end time — feeds the controller's bubble accounting.
     /// An engine that never admitted work counts as 100% idle capacity

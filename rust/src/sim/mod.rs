@@ -219,14 +219,16 @@ impl SimEngine {
         Some((r.req, r.generated))
     }
 
-    /// Terminate everything in flight; returns (request, progress) pairs.
-    fn terminate_all(&mut self) -> Vec<(SimRequest, usize)> {
-        let mut out: Vec<(SimRequest, usize)> = self
+    /// Terminate everything in flight; returns (request, progress, queued)
+    /// triples — `queued` marks requests drained from the waiting queue
+    /// rather than preempted out of a lane.
+    fn terminate_all(&mut self) -> Vec<(SimRequest, usize, bool)> {
+        let mut out: Vec<(SimRequest, usize, bool)> = self
             .running
             .drain(..)
-            .map(|r| (r.req, r.generated))
+            .map(|r| (r.req, r.generated, false))
             .collect();
-        out.extend(self.queue.drain(..).map(|(req, p)| (req, p)));
+        out.extend(self.queue.drain(..).map(|(req, p)| (req, p, true)));
         self.record();
         out
     }
@@ -360,13 +362,13 @@ impl SimPool {
         }
     }
 
-    /// Terminate everything pool-wide -> (request, progress) pairs.
-    fn terminate_all(&mut self) -> Vec<(SimRequest, usize)> {
+    /// Terminate everything pool-wide -> (request, progress, queued).
+    fn terminate_all(&mut self) -> Vec<(SimRequest, usize, bool)> {
         let mut out = Vec::new();
         for e in self.engines.iter_mut() {
             out.extend(e.terminate_all());
         }
-        out.extend(self.central.drain(..));
+        out.extend(self.central.drain(..).map(|(req, p)| (req, p, true)));
         out
     }
 
@@ -508,6 +510,11 @@ struct SimBackend {
     q_cap: usize,
     total: usize,
     done: usize,
+    // O(1) lifecycle counters (view() runs 2-3x per driver decision; a
+    // BTreeMap scan there would dominate paper-scale sim host time)
+    fresh_count: usize,
+    ready_count: usize,
+    unconsumed_count: usize,
     seq: u64,
     updates: usize,
     harvests: usize,
@@ -537,6 +544,9 @@ impl SimBackend {
             q_cap: q_each * engines,
             total: workload.len(),
             done: 0,
+            fresh_count: 0,
+            ready_count: 0,
+            unconsumed_count: 0,
             seq: 0,
             updates: 0,
             harvests: 0,
@@ -587,29 +597,12 @@ impl SimBackend {
 
 impl ScheduleBackend for SimBackend {
     fn view(&self) -> SchedView {
-        let mut ready = 0;
-        let mut fresh = 0;
-        let mut unconsumed = 0;
-        for e in self.entries.values() {
-            match e.life {
-                SimLife::Fresh => {
-                    fresh += 1;
-                    unconsumed += 1;
-                }
-                SimLife::InFlight => unconsumed += 1,
-                SimLife::Ready => {
-                    ready += 1;
-                    unconsumed += 1;
-                }
-                SimLife::Consumed => {}
-            }
-        }
         SchedView {
             running: self.pool.total_running(),
             queued: self.pool.queued(),
-            ready,
-            fresh,
-            unconsumed,
+            ready: self.ready_count,
+            fresh: self.fresh_count,
+            unconsumed: self.unconsumed_count,
             lanes: self.q_cap,
             updates: self.updates,
         }
@@ -650,6 +643,8 @@ impl ScheduleBackend for SimBackend {
                 complete: false,
                 seq: 0,
             });
+            self.fresh_count += 1;
+            self.unconsumed_count += 1;
             count += 1;
         }
         Ok(count)
@@ -661,6 +656,7 @@ impl ScheduleBackend for SimBackend {
             let e = self.entries.get_mut(rid).expect("admit unknown sim rid");
             assert_eq!(e.life, SimLife::Fresh, "admit non-fresh sim rid {rid}");
             e.life = SimLife::InFlight;
+            self.fresh_count -= 1;
             let predicted = self.pred.predict(e.req.id as u64, e.req.prompt_len);
             self.staged_pred.insert(e.req.id, predicted);
             work.push((e.req, e.progress));
@@ -685,6 +681,7 @@ impl ScheduleBackend for SimBackend {
                 .expect("finished unknown sim rid");
             debug_assert_eq!(e.life, SimLife::InFlight);
             e.life = SimLife::Ready;
+            self.ready_count += 1;
             e.ready_len = r.output_len;
             e.complete = true;
             e.seq = self.seq;
@@ -700,11 +697,17 @@ impl ScheduleBackend for SimBackend {
         // highest progress first — clipping candidates
         terminated.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
         let mut items = Vec::with_capacity(terminated.len());
-        for (req, progress) in terminated {
+        for (req, progress, was_queued) in terminated {
             // preemption progress is a length floor the predictor can use
             self.pred.observe_progress(req.id as u64, req.prompt_len, progress);
             self.staged_pred.remove(&req.id);
-            items.push(HarvestItem { rid: req.id as u64, progress, queued: false });
+            // mirror the live backend's item contract: resumed requests
+            // sitting in a queue still carry progress and count as partials
+            items.push(HarvestItem {
+                rid: req.id as u64,
+                progress,
+                queued: was_queued && progress == 0,
+            });
         }
         Ok(items)
     }
@@ -715,6 +718,7 @@ impl ScheduleBackend for SimBackend {
         match action {
             HarvestAction::Clip => {
                 e.life = SimLife::Ready;
+                self.ready_count += 1;
                 e.ready_len = item.progress;
                 e.complete = false;
                 e.seq = self.seq;
@@ -724,14 +728,17 @@ impl ScheduleBackend for SimBackend {
             HarvestAction::Restart => {
                 e.progress = 0;
                 e.life = SimLife::Fresh;
+                self.fresh_count += 1;
                 self.wasted += item.progress as u64;
             }
             HarvestAction::Resume | HarvestAction::Requeue => {
                 e.progress = item.progress;
                 e.life = SimLife::Fresh;
+                self.fresh_count += 1;
             }
             HarvestAction::Drop => {
                 e.life = SimLife::Consumed;
+                self.unconsumed_count -= 1;
                 self.wasted += item.progress as u64;
                 self.dropped += 1;
                 self.done += 1;
@@ -754,6 +761,8 @@ impl ScheduleBackend for SimBackend {
             // (complete == false) may be shorter
             debug_assert!(!e.complete || e.ready_len == e.req.output_len);
             e.life = SimLife::Consumed;
+            self.ready_count -= 1;
+            self.unconsumed_count -= 1;
             toks += (e.req.prompt_len + e.ready_len) as f64;
             self.done += 1;
         }
