@@ -89,6 +89,7 @@ fn main() -> anyhow::Result<()> {
             temperature: 1.0,
             greedy: false,
             seed: 3,
+            ..EngineConfig::default()
         });
         let prompt: Vec<i32> = vec![1, 43, 11, 3, 33, 32, 34, 25, 3, 46];
         engine.submit((0..sh.engine_batch * 2).map(|i| {

@@ -27,8 +27,8 @@ use crate::rl::advantage::AdvantageKind;
 use crate::rollout::{EngineConfig, Rollout};
 use crate::runtime::{ParamState, Runtime};
 use crate::sched::policy::{
-    drive, make_policy, HarvestAction, HarvestItem, PolicyParams, SchedView,
-    ScheduleBackend,
+    drive, make_policy_opts, EngineLoad, HarvestAction, HarvestItem, LaneView,
+    PolicyParams, SchedView, ScheduleBackend,
 };
 use crate::sched::{DispatchPolicy, EnginePool, PoolConfig, PredictorKind};
 use crate::tasks::{Reward, Task};
@@ -120,6 +120,13 @@ pub struct LoopConfig {
     pub predictor: PredictorKind,
     /// How the pool places queued requests onto engines.
     pub dispatch: DispatchPolicy,
+    /// Cross-engine work stealing: wrap the scheduler in the
+    /// `WorkStealing` policy composer (idle engines pull local backlog or
+    /// whole lanes from loaded peers, KV budget permitting).
+    pub steal: bool,
+    /// Per-engine KV budget in reservation tokens (prompt + generation
+    /// cap per admitted lane); `usize::MAX` disables the memory model.
+    pub kv_budget: usize,
 }
 
 impl Default for LoopConfig {
@@ -142,6 +149,8 @@ impl Default for LoopConfig {
             num_engines: 1,
             predictor: PredictorKind::History,
             dispatch: DispatchPolicy::LeastLoaded,
+            steal: false,
+            kv_budget: usize::MAX,
         }
     }
 }
@@ -219,6 +228,7 @@ impl<'rt> Controller<'rt> {
             temperature: self.cfg.temperature,
             greedy,
             seed: self.cfg.seed,
+            kv_budget: self.cfg.kv_budget,
         }
     }
 
@@ -270,12 +280,13 @@ impl<'rt> Controller<'rt> {
         if self.cfg.verbose && pool.score.count() > 0 {
             eprintln!(
                 "[pool] predictor {}: {} scored, MAE {:.1} tok, tau {:.3}; \
-                 {} preempted",
+                 {} preempted, {} stolen",
                 self.cfg.predictor.name(),
                 pool.score.count(),
                 pool.score.mae(),
                 pool.score.kendall_tau(),
-                pool.preempted()
+                pool.preempted(),
+                pool.stolen()
             );
         }
     }
@@ -346,7 +357,7 @@ impl<'rt> Controller<'rt> {
             entries_per_prompt: self.cfg.samples_per_prompt.max(1),
             update_batch: self.cfg.update_batch.max(1),
         };
-        let mut policy = make_policy(self.cfg.scheduler, params);
+        let mut policy = make_policy_opts(self.cfg.scheduler, params, self.cfg.steal);
         let preempt = self.cfg.scheduler.resumes_partials();
         let pool = self.make_pool(false, preempt);
         let trainer = Trainer::new(self.rt, self.cfg.adv, self.cfg.lr);
@@ -456,10 +467,32 @@ impl ScheduleBackend for LiveBackend<'_, '_> {
         Ok(self.ctl.load_prompts(prompts))
     }
 
-    fn admit(&mut self, rids: &[u64]) -> Result<()> {
+    fn admit(&mut self, rids: &[u64], engine: Option<usize>) -> Result<()> {
         let reqs = self.ctl.buffer.dispatch(rids);
-        self.pool.submit(reqs);
+        match engine {
+            Some(i) => self.pool.submit_to(i, reqs),
+            None => self.pool.submit(reqs),
+        }
         Ok(())
+    }
+
+    fn engine_loads(&self) -> Vec<EngineLoad> {
+        self.pool.engine_loads()
+    }
+
+    fn engine_lanes(&self, engine: usize) -> Vec<LaneView> {
+        match self.pool.engines().get(engine) {
+            Some(e) => e
+                .lane_progress()
+                .into_iter()
+                .map(|p| LaneView { lane: p.lane, progress: p.total, reserve: p.reserve })
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Result<bool> {
+        Ok(self.pool.steal_to(from, to, lane, self.state.version))
     }
 
     fn step(&mut self) -> Result<usize> {

@@ -24,6 +24,7 @@ pub fn evaluate_sampled(rt: &Runtime, state: &ParamState, task: &dyn Task,
         temperature: if greedy { 1.0 } else { temperature },
         greedy,
         seed,
+        ..EngineConfig::default()
     });
     let mut rid = 0u64;
     for (pi, p) in problems.iter().enumerate() {

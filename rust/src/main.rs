@@ -280,6 +280,7 @@ fn real_rollout_lengths(ctx: &ExpContext, rt: &Runtime) -> Result<Vec<usize>> {
         temperature: 1.0,
         greedy: false,
         seed: ctx.seed + 14,
+        ..EngineConfig::default()
     });
     let n = 128.min(ds.train.len());
     engine.submit(ds.train.iter().take(n).enumerate().map(|(i, p)| {

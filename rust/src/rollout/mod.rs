@@ -95,6 +95,15 @@ impl Rollout {
     }
 }
 
+/// KV reservation one admitted request holds: prompt plus its full
+/// generation cap, i.e. the largest context the lane's cache can grow to.
+/// Reserving the cap up front (rather than tracking the growing context)
+/// is what makes "budget never exceeded" a hard invariant: decode can
+/// never outgrow what admission already accounted for.
+pub fn kv_reservation(req: &Request) -> usize {
+    req.prompt.len() + req.max_new
+}
+
 /// Progress of one active lane (see [`Engine::lane_progress`]).
 #[derive(Debug, Clone, Copy)]
 pub struct LaneProgress {
@@ -106,6 +115,8 @@ pub struct LaneProgress {
     pub rid: u64,
     pub prompt_id: u64,
     pub prompt_len: usize,
+    /// KV reservation the lane holds (see [`kv_reservation`]).
+    pub reserve: usize,
 }
 
 struct Lane {
@@ -125,11 +136,16 @@ pub struct EngineConfig {
     /// Greedy decoding (eval): ignore temperature, take argmax.
     pub greedy: bool,
     pub seed: u64,
+    /// KV memory budget in reservation tokens ([`kv_reservation`] per
+    /// admitted lane).  Admission stops once the budget is reached, except
+    /// that an otherwise-empty engine always admits one request (progress
+    /// guarantee).  `usize::MAX` disables the model.
+    pub kv_budget: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { temperature: 1.0, greedy: false, seed: 0 }
+        Self { temperature: 1.0, greedy: false, seed: 0, kv_budget: usize::MAX }
     }
 }
 
@@ -180,6 +196,26 @@ impl<'rt> Engine<'rt> {
         self.running() + self.queued()
     }
 
+    /// KV reservation tokens held by occupied lanes (queued requests hold
+    /// no KV until admitted).
+    pub fn kv_used(&self) -> usize {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.as_ref())
+            .map(|l| kv_reservation(&l.request))
+            .sum()
+    }
+
+    pub fn kv_budget(&self) -> usize {
+        self.cfg.kv_budget
+    }
+
+    /// Remove the newest request from the local queue (a work-stealing
+    /// victim — the entry furthest from running here anyway).
+    pub fn steal_queued(&mut self) -> Option<Request> {
+        self.queue.pop_back()
+    }
+
     pub fn clock(&self) -> f64 {
         self.clock
     }
@@ -214,13 +250,22 @@ impl<'rt> Engine<'rt> {
         if free.is_empty() || self.queue.is_empty() {
             return Ok(0);
         }
-        let n = free.len().min(self.queue.len());
-        let lanes = &free[..n];
-
         let mut tokens = vec![PAD; sh.engine_batch * sh.prefill_seq];
         let mut lens = vec![1i32; sh.engine_batch];
-        let mut newly: Vec<(usize, Request)> = Vec::with_capacity(n);
-        for &lane in lanes {
+        let mut newly: Vec<(usize, Request)> = Vec::with_capacity(free.len());
+        let mut kv_used = self.kv_used();
+        for &lane in &free {
+            let Some(front) = self.queue.front() else { break };
+            // KV admission gate: stop once the budget is reached, but an
+            // otherwise-empty engine always admits its head request so a
+            // single oversized reservation cannot deadlock the queue
+            let reserve = kv_reservation(front);
+            if kv_used.saturating_add(reserve) > self.cfg.kv_budget
+                && !(kv_used == 0 && newly.is_empty())
+            {
+                break;
+            }
+            kv_used += reserve;
             let req = self.queue.pop_front().unwrap();
             let ctx_len = req.context_len().min(sh.prefill_seq);
             for i in 0..ctx_len {
@@ -234,6 +279,10 @@ impl<'rt> Engine<'rt> {
             lens[lane] = ctx_len as i32;
             newly.push((lane, req));
         }
+        if newly.is_empty() {
+            return Ok(0); // every candidate blocked on the KV budget
+        }
+        let n = newly.len();
         // lanes not being admitted keep length 1 (BOS-ish dummy); their
         // cache lanes are restored from the old cache right after.
         let t0 = std::time::Instant::now();
@@ -401,6 +450,7 @@ impl<'rt> Engine<'rt> {
                     rid: l.request.rid,
                     prompt_id: l.request.prompt_id,
                     prompt_len: l.request.prompt.len(),
+                    reserve: kv_reservation(&l.request),
                 })
             })
             .collect()

@@ -1,0 +1,452 @@
+//! Deterministic multi-engine backend for policy-driver tests.
+//!
+//! [`TokenBackend`] is the `ScheduleBackend` the randomized fuzz suite
+//! (`tests/policy_fuzz.rs`), the stealing goldens (`tests/policy_golden.rs`)
+//! and the per-verdict pins (`tests/sched_props.rs`) all drive: N engines
+//! of fixed lanes, one token per lane per tick, FIFO admission, the same
+//! KV reservation model as the live engine and the simulator (a lane
+//! reserves prompt + generation cap; admission stops at the budget; an
+//! otherwise-empty engine always admits one request), plus full support
+//! for targeted admission and cross-engine stealing.
+//!
+//! Unlike the mock in `policy.rs`'s unit tests it checks its own
+//! invariants after EVERY backend call — conservation (each request lives
+//! in exactly one place, across any number of steals), KV budget, progress
+//! bounds — so a driver run that completes is itself the proof.
+
+use crate::sched::policy::{
+    EngineLoad, HarvestAction, HarvestItem, LaneView, SchedView, ScheduleBackend,
+};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Fixed modeled prompt length (KV reservation = this + the response cap).
+pub const HARNESS_PROMPT: usize = 4;
+
+/// How `Admit { engine: None }` places work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HarnessDispatch {
+    /// Round-robin stripe onto engine-local queues at admission (static
+    /// placement — the mode where stealing has local backlog to move).
+    Striped,
+    /// Central FIFO queue; engines pull when a lane frees (late binding).
+    Central,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum St {
+    Unloaded,
+    Fresh,
+    /// Somewhere in the engine pool (a lane, a local queue, or central).
+    Pool,
+    /// Drained by a harvest, awaiting its verdict.
+    Limbo,
+    Ready,
+    Consumed,
+}
+
+struct HEngine {
+    lanes: usize,
+    running: Vec<u64>,
+    queue: VecDeque<u64>,
+}
+
+/// One recorded migration: (from, to, rid, progress tokens carried).
+pub type StealEvent = (usize, usize, u64, usize);
+
+pub struct TokenBackend {
+    lens: Vec<usize>,
+    progress: Vec<usize>,
+    state: Vec<St>,
+    engines: Vec<HEngine>,
+    central: VecDeque<u64>,
+    dispatch: HarnessDispatch,
+    kv_budget: usize,
+    rr: usize,
+    next_load: usize,
+    ready_order: Vec<u64>,
+    pub updates: usize,
+    pub harvests: usize,
+    /// Trainer-consumed rids, in consumption order.
+    pub consumed: Vec<u64>,
+    pub clipped: Vec<u64>,
+    pub dropped: Vec<u64>,
+    pub steal_log: Vec<StealEvent>,
+    pub migrated_tokens: u64,
+}
+
+impl TokenBackend {
+    pub fn new(lens: &[usize], engines: usize, lanes_each: usize,
+               dispatch: HarnessDispatch, kv_budget: usize) -> Self {
+        assert!(engines >= 1 && lanes_each >= 1);
+        assert!(lens.iter().all(|&l| l >= 1), "every request needs >= 1 token");
+        let n = lens.len();
+        TokenBackend {
+            lens: lens.to_vec(),
+            progress: vec![0; n],
+            state: vec![St::Unloaded; n],
+            engines: (0..engines)
+                .map(|_| HEngine { lanes: lanes_each, running: Vec::new(), queue: VecDeque::new() })
+                .collect(),
+            central: VecDeque::new(),
+            dispatch,
+            kv_budget,
+            rr: 0,
+            next_load: 0,
+            ready_order: Vec::new(),
+            updates: 0,
+            harvests: 0,
+            consumed: Vec::new(),
+            clipped: Vec::new(),
+            dropped: Vec::new(),
+            steal_log: Vec::new(),
+            migrated_tokens: 0,
+        }
+    }
+
+    fn reserve(&self, rid: u64) -> usize {
+        HARNESS_PROMPT + self.lens[rid as usize]
+    }
+
+    fn kv_used(&self, engine: usize) -> usize {
+        self.engines[engine]
+            .running
+            .iter()
+            .map(|&rid| self.reserve(rid))
+            .sum()
+    }
+
+    fn count(&self, s: St) -> usize {
+        self.state.iter().filter(|&&x| x == s).count()
+    }
+
+    /// Admit queued work into engine `i`'s free lanes: local queue first,
+    /// then (central mode) the shared queue, both behind the KV gate with
+    /// the empty-engine escape.
+    fn fill(&mut self, i: usize) {
+        let mut used = self.kv_used(i);
+        loop {
+            if self.engines[i].running.len() >= self.engines[i].lanes {
+                break;
+            }
+            let local = self.engines[i].queue.front().copied();
+            let rid = match local {
+                Some(r) => r,
+                None => {
+                    if self.dispatch != HarnessDispatch::Central {
+                        break;
+                    }
+                    match self.central.front().copied() {
+                        Some(r) => r,
+                        None => break,
+                    }
+                }
+            };
+            let res = self.reserve(rid);
+            if used > 0 && used.saturating_add(res) > self.kv_budget {
+                break;
+            }
+            if local.is_some() {
+                self.engines[i].queue.pop_front();
+            } else {
+                self.central.pop_front();
+            }
+            used += res;
+            self.engines[i].running.push(rid);
+        }
+    }
+
+    /// The harness's own conservation + KV contract, asserted after every
+    /// backend call.
+    pub fn check_invariants(&self) {
+        for rid in 0..self.lens.len() {
+            let occurrences = self
+                .engines
+                .iter()
+                .map(|e| {
+                    e.running.iter().filter(|&&r| r == rid as u64).count()
+                        + e.queue.iter().filter(|&&r| r == rid as u64).count()
+                })
+                .sum::<usize>()
+                + self.central.iter().filter(|&&r| r == rid as u64).count();
+            let expected = usize::from(self.state[rid] == St::Pool);
+            assert_eq!(
+                occurrences, expected,
+                "rid {rid} in state {:?} appears {occurrences}x in pool containers",
+                self.state[rid]
+            );
+            let in_ready = self.ready_order.iter().filter(|&&r| r == rid as u64).count();
+            assert_eq!(in_ready, usize::from(self.state[rid] == St::Ready),
+                       "rid {rid} ready-list mismatch");
+            assert!(self.progress[rid] <= self.lens[rid],
+                    "rid {rid} progress {} past len {}", self.progress[rid], self.lens[rid]);
+            let terminal = self.consumed.iter().filter(|&&r| r == rid as u64).count()
+                + self.dropped.iter().filter(|&&r| r == rid as u64).count();
+            assert_eq!(terminal, usize::from(self.state[rid] == St::Consumed),
+                       "rid {rid} consumed/dropped {terminal}x in state {:?}",
+                       self.state[rid]);
+        }
+        for (i, e) in self.engines.iter().enumerate() {
+            let used = self.kv_used(i);
+            // the empty-engine escape admits one oversized request alone;
+            // beyond that the budget is a hard ceiling
+            assert!(used <= self.kv_budget || e.running.len() == 1,
+                    "engine {i} kv {used} over budget {} with {} lanes",
+                    used, e.running.len());
+            assert!(e.running.len() <= e.lanes, "engine {i} over lanes");
+        }
+    }
+}
+
+impl ScheduleBackend for TokenBackend {
+    fn view(&self) -> SchedView {
+        SchedView {
+            running: self.engines.iter().map(|e| e.running.len()).sum(),
+            queued: self.central.len()
+                + self.engines.iter().map(|e| e.queue.len()).sum::<usize>(),
+            ready: self.count(St::Ready),
+            fresh: self.count(St::Fresh),
+            unconsumed: self
+                .state
+                .iter()
+                .filter(|s| !matches!(s, St::Unloaded | St::Consumed))
+                .count(),
+            lanes: self.engines.iter().map(|e| e.lanes).sum(),
+            updates: self.updates,
+        }
+    }
+
+    fn schedulable(&self) -> Vec<u64> {
+        (0..self.lens.len())
+            .filter(|&i| self.state[i] == St::Fresh)
+            .map(|i| i as u64)
+            .collect()
+    }
+
+    fn ready_rids(&self) -> Vec<u64> {
+        self.ready_order.clone()
+    }
+
+    fn ready_len(&self, rid: u64) -> usize {
+        self.progress[rid as usize]
+    }
+
+    fn engine_loads(&self) -> Vec<EngineLoad> {
+        (0..self.engines.len())
+            .map(|i| EngineLoad {
+                queued: self.engines[i].queue.len(),
+                active: self.engines[i].running.len(),
+                lanes: self.engines[i].lanes,
+                kv_used: self.kv_used(i),
+                kv_budget: self.kv_budget,
+            })
+            .collect()
+    }
+
+    fn engine_lanes(&self, engine: usize) -> Vec<LaneView> {
+        match self.engines.get(engine) {
+            Some(e) => e
+                .running
+                .iter()
+                .enumerate()
+                .map(|(lane, &rid)| LaneView {
+                    lane,
+                    progress: self.progress[rid as usize],
+                    reserve: self.reserve(rid),
+                })
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
+        let mut count = 0;
+        while count < prompts && self.next_load < self.lens.len() {
+            self.state[self.next_load] = St::Fresh;
+            self.next_load += 1;
+            count += 1;
+        }
+        self.check_invariants();
+        Ok(count)
+    }
+
+    fn admit(&mut self, rids: &[u64], engine: Option<usize>) -> Result<()> {
+        for &rid in rids {
+            assert_eq!(self.state[rid as usize], St::Fresh, "admit non-fresh {rid}");
+            self.state[rid as usize] = St::Pool;
+            match engine {
+                Some(i) => self.engines[i].queue.push_back(rid),
+                None => match self.dispatch {
+                    HarnessDispatch::Striped => {
+                        let i = self.rr % self.engines.len();
+                        self.rr += 1;
+                        self.engines[i].queue.push_back(rid);
+                    }
+                    HarnessDispatch::Central => self.central.push_back(rid),
+                },
+            }
+        }
+        self.check_invariants();
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<usize> {
+        for i in 0..self.engines.len() {
+            self.fill(i);
+        }
+        let mut finished = 0;
+        for i in 0..self.engines.len() {
+            let running = std::mem::take(&mut self.engines[i].running);
+            let mut still = Vec::with_capacity(running.len());
+            for rid in running {
+                let r = rid as usize;
+                self.progress[r] += 1;
+                if self.progress[r] >= self.lens[r] {
+                    self.state[r] = St::Ready;
+                    self.ready_order.push(rid);
+                    finished += 1;
+                } else {
+                    still.push(rid);
+                }
+            }
+            self.engines[i].running = still;
+        }
+        self.check_invariants();
+        Ok(finished)
+    }
+
+    fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
+        self.harvests += 1;
+        // (rid, progress, was_queued)
+        let mut drained: Vec<(u64, usize, bool)> = Vec::new();
+        for e in self.engines.iter_mut() {
+            drained.extend(e.running.drain(..).map(|rid| (rid, 0, false)));
+            drained.extend(e.queue.drain(..).map(|rid| (rid, 0, true)));
+        }
+        drained.extend(self.central.drain(..).map(|rid| (rid, 0, true)));
+        for d in drained.iter_mut() {
+            d.1 = self.progress[d.0 as usize];
+            self.state[d.0 as usize] = St::Limbo;
+        }
+        drained.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let items = drained
+            .into_iter()
+            .map(|(rid, progress, was_queued)| HarvestItem {
+                rid,
+                progress,
+                // mirror the live/sim contract: a queued entry carrying
+                // preempted progress is a partial, not untouched work
+                queued: was_queued && progress == 0,
+            })
+            .collect();
+        self.check_invariants();
+        Ok(items)
+    }
+
+    fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()> {
+        let r = item.rid as usize;
+        assert_eq!(self.state[r], St::Limbo, "resolve outside a harvest");
+        match action {
+            HarvestAction::Clip => {
+                self.state[r] = St::Ready;
+                self.ready_order.push(item.rid);
+                self.clipped.push(item.rid);
+            }
+            HarvestAction::Restart => {
+                self.progress[r] = 0;
+                self.state[r] = St::Fresh;
+            }
+            HarvestAction::Resume | HarvestAction::Requeue => {
+                self.state[r] = St::Fresh; // progress preserved
+            }
+            HarvestAction::Drop => {
+                self.state[r] = St::Consumed;
+                self.dropped.push(item.rid);
+            }
+        }
+        self.check_invariants();
+        Ok(())
+    }
+
+    fn preempt(&mut self, engine: usize, lane: usize) -> Result<()> {
+        if let Some(e) = self.engines.get_mut(engine) {
+            if lane < e.running.len() {
+                let rid = e.running.remove(lane);
+                match self.dispatch {
+                    HarnessDispatch::Striped => self.engines[engine].queue.push_back(rid),
+                    HarnessDispatch::Central => self.central.push_back(rid),
+                }
+            }
+        }
+        self.check_invariants();
+        Ok(())
+    }
+
+    fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Result<bool> {
+        let n = self.engines.len();
+        if from >= n || to >= n || from == to {
+            return Ok(false);
+        }
+        let moved = match lane {
+            None => match self.engines[from].queue.pop_back() {
+                Some(rid) => {
+                    // queued work holds no KV; refuse only the impossible
+                    if self.reserve(rid) > self.kv_budget {
+                        self.engines[from].queue.push_back(rid);
+                        None
+                    } else {
+                        Some(rid)
+                    }
+                }
+                None => None,
+            },
+            Some(l) => {
+                if l < self.engines[from].running.len() {
+                    let rid = self.engines[from].running[l];
+                    let headroom = self.kv_budget.saturating_sub(self.kv_used(to));
+                    if self.reserve(rid) > headroom {
+                        None
+                    } else {
+                        self.engines[from].running.remove(l);
+                        Some(rid)
+                    }
+                } else {
+                    None
+                }
+            }
+        };
+        let ok = match moved {
+            Some(rid) => {
+                self.engines[to].queue.push_back(rid);
+                let progress = self.progress[rid as usize];
+                self.steal_log.push((from, to, rid, progress));
+                self.migrated_tokens += progress as u64;
+                true
+            }
+            None => false,
+        };
+        self.check_invariants();
+        Ok(ok)
+    }
+
+    fn train(&mut self, rids: &[u64]) -> Result<()> {
+        for &rid in rids {
+            assert_eq!(self.state[rid as usize], St::Ready, "train non-ready {rid}");
+            self.state[rid as usize] = St::Consumed;
+            self.ready_order.retain(|&r| r != rid);
+            self.consumed.push(rid);
+        }
+        self.updates += 1;
+        self.check_invariants();
+        Ok(())
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.check_invariants();
+        Ok(())
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next_load >= self.lens.len() && self.state.iter().all(|&s| s == St::Consumed)
+    }
+}

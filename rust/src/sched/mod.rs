@@ -23,13 +23,15 @@
 //! live controller backend or the simulator backend, so every scheduler
 //! (including the async-update one) is written exactly once.
 
+pub mod harness;
 pub mod policy;
 pub mod pool;
 pub mod predictor;
 
 pub use policy::{
-    drive, make_policy, Decision, Event, HarvestAction, HarvestItem, PolicyParams,
-    SchedView, SchedulePolicy, ScheduleBackend, ASYNC_SYNC_EVERY,
+    drive, make_policy, make_policy_opts, Decision, EngineLoad, Event, HarvestAction,
+    HarvestItem, LaneView, PolicyParams, SchedView, SchedulePolicy, ScheduleBackend,
+    StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
 };
 pub use pool::{resume_request, DispatchPolicy, EnginePool, PoolConfig};
 pub use predictor::{

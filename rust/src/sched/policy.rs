@@ -77,6 +77,37 @@ pub struct PolicyParams {
     pub update_batch: usize,
 }
 
+/// Per-engine load snapshot — the pool-load view a work-stealing policy
+/// reads.  `queued` counts the engine's LOCAL queue only (central-queue
+/// work is not yet bound to an engine); `kv_used`/`kv_budget` are the KV
+/// memory model in reservation tokens (a lane reserves prompt + generation
+/// cap at admission; `usize::MAX` budget = accounting off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineLoad {
+    /// Requests waiting in this engine's local queue.
+    pub queued: usize,
+    /// Lanes actively decoding.
+    pub active: usize,
+    /// Total decode lanes.
+    pub lanes: usize,
+    /// KV reservation tokens held by active lanes.
+    pub kv_used: usize,
+    /// KV reservation budget (admission is rejected above this).
+    pub kv_budget: usize,
+}
+
+/// One active lane of one engine, as shown to a stealing policy when it
+/// picks a migration victim.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneView {
+    pub lane: usize,
+    /// Response tokens so far (resumed + emitted).
+    pub progress: usize,
+    /// KV reservation the lane holds (prompt + generation cap) — what a
+    /// steal must fit into the destination's budget.
+    pub reserve: usize,
+}
+
 /// One terminated in-flight (or queued) request at a harvest, as shown to
 /// the policy.  Items arrive highest-progress-first.
 #[derive(Debug, Clone, Copy)]
@@ -104,7 +135,7 @@ pub enum HarvestAction {
 }
 
 /// Typed events the driver feeds back to the policy.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum Event {
     /// A refill completed; `count` buffer entries were created (0 = the
     /// prompt source is exhausted).
@@ -115,6 +146,12 @@ pub enum Event {
     Harvested { count: usize },
     /// A trainer update completed.
     UpdateDone,
+    /// Per-engine load snapshot, emitted after every executed `Step` (the
+    /// pool-load view event work stealing triggers on).
+    PoolLoad { loads: Vec<EngineLoad> },
+    /// A `Steal` decision executed; `moved` is false when the backend
+    /// refused it (no such work, or destination KV budget).
+    Stole { from: usize, to: usize, moved: bool },
 }
 
 /// Typed decisions the policy emits.
@@ -123,7 +160,9 @@ pub enum Decision {
     /// Load `prompts` more prompts into the buffer.
     Refill { prompts: usize },
     /// Dispatch these schedulable entries into the engine pool.
-    Admit { rids: Vec<u64> },
+    /// `engine: Some(i)` pins them to engine i's local queue (targeted
+    /// admission); `None` follows the backend's dispatch policy.
+    Admit { rids: Vec<u64>, engine: Option<usize> },
     /// One generation tick (admit free lanes + one decode chunk).
     Step,
     /// Terminate everything in flight; the driver then asks
@@ -131,6 +170,12 @@ pub enum Decision {
     Harvest,
     /// Preempt one running lane back to the pool queue, progress kept.
     Preempt { engine: usize, lane: usize },
+    /// Migrate work from engine `from` to engine `to`: `lane: Some(l)`
+    /// preempts running lane `l` and re-admits it on `to` (progress kept —
+    /// Preempt + targeted Admit in one transactional step); `lane: None`
+    /// moves the newest entry of `from`'s local queue.  The backend
+    /// refuses moves past the destination's KV budget.
+    Steal { from: usize, to: usize, lane: Option<usize> },
     /// Train one update on these ready trajectories, in this order.
     Update { rids: Vec<u64> },
     /// Group end: drop consumed entries, re-align engine clocks.
@@ -165,12 +210,32 @@ pub trait ScheduleBackend {
     fn ready_rids(&self) -> Vec<u64>;
     /// Harvested response length of a Ready entry (post-hoc sort key).
     fn ready_len(&self, rid: u64) -> usize;
+    /// Per-engine load snapshot (the pool-load view).  The default models
+    /// the backend as one engine with KV accounting off — correct for
+    /// single-engine backends, which a stealing policy then leaves alone.
+    fn engine_loads(&self) -> Vec<EngineLoad> {
+        let v = self.view();
+        vec![EngineLoad {
+            queued: v.queued,
+            active: v.running,
+            lanes: v.lanes,
+            kv_used: 0,
+            kv_budget: usize::MAX,
+        }]
+    }
+    /// Active lanes of one engine (steal-victim selection).  Backends
+    /// without lane introspection return nothing, which disables lane
+    /// steals (queue steals may still work).
+    fn engine_lanes(&self, _engine: usize) -> Vec<LaneView> {
+        Vec::new()
+    }
 
     // ---- actuation ----
     /// Load up to `prompts` prompts; returns buffer entries created.
     fn load_prompts(&mut self, prompts: usize) -> Result<usize>;
-    /// Move these entries into the engine pool's admission queue.
-    fn admit(&mut self, rids: &[u64]) -> Result<()>;
+    /// Move these entries into the engine pool's admission queue
+    /// (`engine: Some(i)` = engine i's local queue).
+    fn admit(&mut self, rids: &[u64], engine: Option<usize>) -> Result<()>;
     /// One tick: admit queued work into free lanes + one decode chunk;
     /// finished rollouts are recorded Ready.  Returns requests finished.
     fn step(&mut self) -> Result<usize>;
@@ -181,6 +246,12 @@ pub trait ScheduleBackend {
     fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()>;
     /// Preempt one running lane back to the pool queue, progress kept.
     fn preempt(&mut self, engine: usize, lane: usize) -> Result<()>;
+    /// Execute one migration (see [`Decision::Steal`]).  Returns true if
+    /// work actually moved.  The default refuses every steal — correct for
+    /// backends without targeted admission.
+    fn steal(&mut self, _from: usize, _to: usize, _lane: Option<usize>) -> Result<bool> {
+        Ok(false)
+    }
     /// Train one update on these Ready entries, in order.
     fn train(&mut self, rids: &[u64]) -> Result<()>;
     /// Group barrier: drop consumed entries, align engine clocks.
@@ -227,10 +298,10 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
                 }
                 policy.observe(&Event::PromptsLoaded { count });
             }
-            Decision::Admit { rids } => {
+            Decision::Admit { rids, engine } => {
                 fruitless += 1;
                 if !rids.is_empty() {
-                    backend.admit(&rids)?;
+                    backend.admit(&rids, engine)?;
                 }
             }
             Decision::Step => {
@@ -246,6 +317,7 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
                     idle_steps = 0;
                 }
                 policy.observe(&Event::Tick { finished });
+                policy.observe(&Event::PoolLoad { loads: backend.engine_loads() });
             }
             Decision::Harvest => {
                 fruitless += 1;
@@ -259,6 +331,14 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
             Decision::Preempt { engine, lane } => {
                 fruitless += 1;
                 backend.preempt(engine, lane)?;
+            }
+            Decision::Steal { from, to, lane } => {
+                // a steal never decodes or trains by itself, so it counts
+                // as fruitless — a steal-ponging policy trips the livelock
+                // guard instead of spinning forever
+                fruitless += 1;
+                let moved = backend.steal(from, to, lane)?;
+                policy.observe(&Event::Stole { from, to, moved });
             }
             Decision::Update { rids } => {
                 if rids.is_empty() {
@@ -291,9 +371,140 @@ pub fn make_policy(kind: SchedulerKind, p: PolicyParams) -> Box<dyn SchedulePoli
     }
 }
 
+/// Build the policy for a scheduler kind, optionally composed with the
+/// [`WorkStealing`] wrapper (the `--steal` flag / `LoopConfig::steal`).
+pub fn make_policy_opts(kind: SchedulerKind, p: PolicyParams,
+                        steal: bool) -> Box<dyn SchedulePolicy> {
+    let inner = make_policy(kind, p);
+    if steal {
+        Box::new(WorkStealing::wrap(inner, StealConfig::default()))
+    } else {
+        inner
+    }
+}
+
 /// AsyncUpdate's bounded-staleness window: a full re-sync harvest (partial
 /// scavenge of every in-flight lane) after this many overlapped updates.
 pub const ASYNC_SYNC_EVERY: usize = 4;
+
+// ==========================================================================
+// WorkStealing — cross-engine migration wrapper (composes with any policy)
+// ==========================================================================
+
+/// Knobs for the [`WorkStealing`] wrapper.
+#[derive(Debug, Clone, Copy)]
+pub struct StealConfig {
+    /// Queue-steal trigger: a peer's local queue must be at least this
+    /// deep while the destination has an empty queue and a free lane.
+    pub queue_depth: usize,
+    /// Lane-steal trigger: the victim must run at least this many more
+    /// lanes than the destination (2+ prevents single-lane ping-pong).
+    pub lane_gap: usize,
+}
+
+impl Default for StealConfig {
+    fn default() -> Self {
+        StealConfig { queue_depth: 1, lane_gap: 2 }
+    }
+}
+
+/// Wrapper policy adding Seer-style cross-engine work stealing to ANY
+/// [`SchedulePolicy`]: when an engine idles (free lane, empty local queue,
+/// nothing central to pull) while a peer still has local backlog or a
+/// clear active-lane surplus, it emits one [`Decision::Steal`] per
+/// generation tick.  Victim lanes are chosen lowest-progress-first (the
+/// cheapest migration — least re-prefill) and never past the destination's
+/// KV budget; all other decisions pass straight through to the inner
+/// policy, so stealing composes with every `SchedulerKind`.
+pub struct WorkStealing {
+    inner: Box<dyn SchedulePolicy>,
+    cfg: StealConfig,
+    /// One steal attempt per tick: re-armed by `Event::Tick`, disarmed
+    /// when a steal is emitted (bounds steal chatter between decodes).
+    armed: bool,
+    steals: u64,
+}
+
+impl WorkStealing {
+    pub fn wrap(inner: Box<dyn SchedulePolicy>, cfg: StealConfig) -> Self {
+        WorkStealing { inner, cfg, armed: true, steals: 0 }
+    }
+
+    /// Successful migrations so far.
+    pub fn steals(&self) -> u64 {
+        self.steals
+    }
+
+    fn plan(&self, b: &dyn ScheduleBackend) -> Option<Decision> {
+        let loads = b.engine_loads();
+        if loads.len() < 2 {
+            return None;
+        }
+        // central-queue work is still late-binding: any engine can pull
+        // it, so an idle engine is not starved and stealing would only
+        // fight the dispatch policy
+        let local: usize = loads.iter().map(|l| l.queued).sum();
+        if b.view().queued > local {
+            return None;
+        }
+        // destination: the idlest engine — a free lane and nothing queued
+        let to = (0..loads.len())
+            .filter(|&i| loads[i].queued == 0 && loads[i].active < loads[i].lanes)
+            .max_by_key(|&i| (loads[i].lanes - loads[i].active, std::cmp::Reverse(i)))?;
+        // 1) queue steal: deepest local backlog elsewhere
+        if let Some(from) = (0..loads.len())
+            .filter(|&i| i != to && loads[i].queued >= self.cfg.queue_depth)
+            .max_by_key(|&i| (loads[i].queued, std::cmp::Reverse(i)))
+        {
+            return Some(Decision::Steal { from, to, lane: None });
+        }
+        // 2) lane steal: the most-loaded peer's cheapest lane that fits
+        // the destination's KV headroom
+        let from = (0..loads.len())
+            .filter(|&i| i != to && loads[i].active >= loads[to].active + self.cfg.lane_gap)
+            .max_by_key(|&i| (loads[i].active, std::cmp::Reverse(i)))?;
+        let headroom = loads[to].kv_budget.saturating_sub(loads[to].kv_used);
+        let lane = b
+            .engine_lanes(from)
+            .into_iter()
+            .filter(|l| l.reserve <= headroom)
+            .min_by_key(|l| (l.progress, l.lane))?;
+        Some(Decision::Steal { from, to, lane: Some(lane.lane) })
+    }
+}
+
+impl SchedulePolicy for WorkStealing {
+    fn name(&self) -> &'static str {
+        "work-stealing"
+    }
+
+    fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
+        if self.armed {
+            if let Some(d) = self.plan(b) {
+                self.armed = false;
+                return d;
+            }
+        }
+        self.inner.decide(b)
+    }
+
+    fn classify(&mut self, item: &HarvestItem, view: &SchedView) -> HarvestAction {
+        self.inner.classify(item, view)
+    }
+
+    fn observe(&mut self, ev: &Event) {
+        match ev {
+            Event::Tick { .. } => self.armed = true,
+            Event::Stole { moved, .. } => {
+                if *moved {
+                    self.steals += 1;
+                }
+            }
+            _ => {}
+        }
+        self.inner.observe(ev);
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
@@ -381,7 +592,7 @@ impl SchedulePolicy for GroupPolicy {
                     if rids.is_empty() {
                         continue;
                     }
-                    return Decision::Admit { rids };
+                    return Decision::Admit { rids, engine: None };
                 }
                 Phase::Generate => {
                     if v.ready >= self.threshold && !self.final_wave {
@@ -523,7 +734,7 @@ impl SchedulePolicy for BaselinePolicy {
                     if rids.is_empty() {
                         continue;
                     }
-                    return Decision::Admit { rids };
+                    return Decision::Admit { rids, engine: None };
                 }
                 Phase::Generate => {
                     if v.running == 0 && v.queued == 0 {
@@ -625,7 +836,7 @@ impl SchedulePolicy for NoGroupedPolicy {
                     if rids.is_empty() {
                         continue;
                     }
-                    return Decision::Admit { rids };
+                    return Decision::Admit { rids, engine: None };
                 }
                 Phase::Generate => {
                     if v.ready >= self.p.update_batch {
@@ -754,7 +965,7 @@ impl SchedulePolicy for AsyncUpdatePolicy {
                     if rids.is_empty() {
                         continue;
                     }
-                    return Decision::Admit { rids };
+                    return Decision::Admit { rids, engine: None };
                 }
                 Phase::Generate => {
                     if v.ready >= self.quota {
@@ -932,7 +1143,7 @@ mod tests {
             Ok(count)
         }
 
-        fn admit(&mut self, rids: &[u64]) -> Result<()> {
+        fn admit(&mut self, rids: &[u64], _engine: Option<usize>) -> Result<()> {
             for &rid in rids {
                 assert_eq!(self.state[rid as usize], 1, "admit non-fresh {rid}");
                 self.state[rid as usize] = 2;

@@ -22,8 +22,9 @@
 //! stripes — the FCFS baseline the benches compare against).
 
 use crate::metrics::PredictorScore;
-use crate::rollout::{Engine, EngineConfig, Request, Rollout};
+use crate::rollout::{kv_reservation, Engine, EngineConfig, Request, Rollout};
 use crate::runtime::{ParamState, Runtime};
+use crate::sched::policy::EngineLoad;
 use crate::sched::predictor::{make_predictor, sjf_priority, LengthPredictor, PredictorKind};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
@@ -125,6 +126,7 @@ pub struct EnginePool<'rt> {
     rr_cursor: usize,
     steps: usize,
     preempted: u64,
+    stolen: u64,
 }
 
 impl<'rt> EnginePool<'rt> {
@@ -147,6 +149,7 @@ impl<'rt> EnginePool<'rt> {
             rr_cursor: 0,
             steps: 0,
             preempted: 0,
+            stolen: 0,
         }
     }
 
@@ -204,6 +207,25 @@ impl<'rt> EnginePool<'rt> {
         self.preempted
     }
 
+    /// Cross-engine migrations executed so far (see [`Self::steal_to`]).
+    pub fn stolen(&self) -> u64 {
+        self.stolen
+    }
+
+    /// Per-engine load snapshot (the policy layer's pool-load view).
+    pub fn engine_loads(&self) -> Vec<EngineLoad> {
+        self.engines
+            .iter()
+            .map(|e| EngineLoad {
+                queued: e.queued(),
+                active: e.running(),
+                lanes: e.lane_count(),
+                kv_used: e.kv_used(),
+                kv_budget: e.kv_budget(),
+            })
+            .collect()
+    }
+
     /// Output tokens generated so far, summed over engines — cheap, so
     /// per-update telemetry can read it mid-run (the occupancy/bubble
     /// aggregation via [`Self::occupancy`] still happens once at run end).
@@ -259,6 +281,16 @@ impl<'rt> EnginePool<'rt> {
     pub fn submit(&mut self, reqs: impl IntoIterator<Item = Request>) {
         self.queue.extend(reqs);
         self.queue_dirty = true;
+    }
+
+    /// Targeted admission: hand requests straight to engine `i`'s local
+    /// queue, bypassing the dispatch policy (the policy-API
+    /// `Admit { engine: Some(i) }` decision).
+    pub fn submit_to(&mut self, engine: usize, reqs: impl IntoIterator<Item = Request>) {
+        assert!(engine < self.engines.len(), "submit_to engine out of range");
+        for req in reqs {
+            self.hand_to_engine(engine, req);
+        }
     }
 
     /// SJF priority of a request (see [`sjf_priority`] for the policy —
@@ -463,6 +495,69 @@ impl<'rt> EnginePool<'rt> {
                 true
             }
             None => false,
+        }
+    }
+
+    /// Migrate work from engine `from` to engine `to` (the policy-API
+    /// `Steal` decision): `lane: Some(l)` preempts running lane `l` and
+    /// re-admits the partial on `to` (progress + log-probs kept, exactly
+    /// the APRIL preempt machinery plus a targeted hand-off); `lane: None`
+    /// moves the newest entry of `from`'s local queue.  Refused (returns
+    /// false) when the migrated reservation cannot fit `to`'s KV budget.
+    pub fn steal_to(&mut self, from: usize, to: usize, lane: Option<usize>,
+                    version: u64) -> bool {
+        let n = self.engines.len();
+        if from >= n || to >= n || from == to {
+            return false;
+        }
+        match lane {
+            None => {
+                let Some(req) = self.engines[from].steal_queued() else {
+                    return false;
+                };
+                // queued work holds no KV yet; only a reservation that can
+                // NEVER fit the destination is a hard refusal
+                if kv_reservation(&req) > self.engines[to].kv_budget() {
+                    self.engines[from].submit([req]); // back where it was
+                    return false;
+                }
+                self.stolen += 1;
+                // dispatched_pred stays keyed by rid: the prediction that
+                // drove the original placement still scores this request
+                self.engines[to].submit([req]);
+                true
+            }
+            Some(l) => {
+                // pre-check the destination's CURRENT headroom: a lane
+                // steal only pays off if the victim can re-admit promptly
+                let reserve = self.engines[from]
+                    .lane_progress()
+                    .iter()
+                    .find(|p| p.lane == l)
+                    .map(|p| p.reserve);
+                let Some(reserve) = reserve else { return false };
+                let headroom = self.engines[to]
+                    .kv_budget()
+                    .saturating_sub(self.engines[to].kv_used());
+                if reserve > headroom {
+                    return false;
+                }
+                match self.engines[from].preempt_lane(l, version) {
+                    Some(r) => {
+                        self.predictor.observe_progress(
+                            r.request.prompt_id,
+                            r.request.prompt.len(),
+                            r.response.len(),
+                        );
+                        self.stolen += 1;
+                        self.dispatched_pred.remove(&r.request.rid);
+                        let req = resume_request(&r);
+                        self.hand_to_engine(to, req);
+                        true
+                    }
+                    None => false,
+                }
+            }
         }
     }
 

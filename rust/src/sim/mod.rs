@@ -17,8 +17,9 @@
 use crate::coordinator::buffer::Mode;
 use crate::metrics::{PredictorScore, Timeline};
 use crate::sched::policy::{
-    drive, AsyncUpdatePolicy, BaselinePolicy, GroupPolicy, HarvestAction, HarvestItem,
-    PolicyParams, SchedView, ScheduleBackend, SchedulePolicy, ASYNC_SYNC_EVERY,
+    drive, AsyncUpdatePolicy, BaselinePolicy, EngineLoad, GroupPolicy, HarvestAction,
+    HarvestItem, LaneView, PolicyParams, SchedView, ScheduleBackend, SchedulePolicy,
+    StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
 };
 use crate::sched::{make_predictor, sjf_priority, DispatchPolicy, LengthPredictor, PredictorKind};
 use crate::util::rng::Pcg64;
@@ -138,6 +139,13 @@ pub struct SimReport {
     pub predictor_mae: f64,
     /// Length-predictor Kendall tau (pool runs; 0 otherwise).
     pub predictor_tau: f64,
+    /// Cross-engine migrations executed (work stealing; 0 when disabled).
+    pub steals: u64,
+    /// Partial-progress tokens carried across engines by steals.
+    pub migrated_tokens: u64,
+    /// Per-engine idle fraction over the rollout span — the load-imbalance
+    /// breakdown stealing is meant to flatten (1.0 = engine never ran).
+    pub engine_idle: Vec<f64>,
 }
 
 struct Running {
@@ -145,10 +153,21 @@ struct Running {
     generated: usize,
 }
 
+/// KV reservation of one simulated request: prompt plus its full output
+/// (sim requests decode exactly `output_len` tokens, so the output doubles
+/// as the generation cap a real engine would reserve).  Reserving the cap
+/// at admission makes "budget never exceeded" a hard invariant — decode
+/// cannot outgrow what admission accounted for.
+fn sim_reserve(req: &SimRequest) -> usize {
+    req.prompt_len + req.output_len
+}
+
 /// Simulated engine with queue capacity `q`.
 struct SimEngine {
     q: usize,
     cost: CostModel,
+    /// KV budget in reservation tokens (`usize::MAX` = accounting off).
+    kv_budget: usize,
     clock: f64,
     running: Vec<Running>,
     queue: VecDeque<(SimRequest, usize)>, // (request, progress)
@@ -157,10 +176,11 @@ struct SimEngine {
 }
 
 impl SimEngine {
-    fn new(q: usize, cost: CostModel) -> Self {
+    fn new(q: usize, cost: CostModel, kv_budget: usize) -> Self {
         SimEngine {
             q,
             cost,
+            kv_budget,
             clock: 0.0,
             running: Vec::new(),
             queue: VecDeque::new(),
@@ -173,9 +193,22 @@ impl SimEngine {
         self.timeline.set_running(self.clock, self.running.len());
     }
 
+    fn kv_used(&self) -> usize {
+        self.running.iter().map(|r| sim_reserve(&r.req)).sum()
+    }
+
     fn admit(&mut self) {
+        let mut used = self.kv_used();
         while self.running.len() < self.q {
-            let Some((req, progress)) = self.queue.pop_front() else { break };
+            let Some(&(req, _)) = self.queue.front() else { break };
+            // KV admission gate: an otherwise-empty engine always admits
+            // its head request (progress guarantee — a single oversized
+            // reservation must not deadlock the queue)
+            if used > 0 && used.saturating_add(sim_reserve(&req)) > self.kv_budget {
+                break;
+            }
+            let (req, progress) = self.queue.pop_front().unwrap();
+            used += sim_reserve(&req);
             // prefill cost: prompt + any preserved progress
             self.clock += (req.prompt_len + progress) as f64 * self.cost.t_prefill_token;
             self.running.push(Running { req, generated: progress });
@@ -261,13 +294,21 @@ struct SimPool {
 }
 
 impl SimPool {
-    fn new(n: usize, q_each: usize, cost: CostModel, policy: DispatchPolicy) -> Self {
+    fn new(n: usize, q_each: usize, cost: CostModel, policy: DispatchPolicy,
+           kv_budget: usize) -> Self {
         SimPool {
-            engines: (0..n).map(|_| SimEngine::new(q_each, cost)).collect(),
+            engines: (0..n).map(|_| SimEngine::new(q_each, cost, kv_budget)).collect(),
             central: VecDeque::new(),
             policy,
             rr: 0,
         }
+    }
+
+    /// Targeted admission: push work straight onto engine `i`'s local
+    /// queue, bypassing the dispatch policy (`Admit { engine: Some(i) }`).
+    fn stage_to(&mut self, i: usize, work: Vec<(SimRequest, usize)>) {
+        assert!(i < self.engines.len(), "stage_to engine out of range");
+        self.engines[i].queue.extend(work);
     }
 
     /// Stage a wave of (request, progress) work per the dispatch policy.
@@ -360,6 +401,51 @@ impl SimPool {
                 self.central.push_back(w);
             }
         }
+    }
+
+    /// Migrate work from engine `from` to engine `to`; returns the
+    /// migrated progress tokens, or None when nothing moved (no such
+    /// work, or the destination's KV budget refused it).  Clock rule: a
+    /// partial's tokens were produced under `from`'s clock, so the thief's
+    /// clock is bumped to at least `from`'s before it may resume them —
+    /// migration cannot replay work in the destination's past.  Fresh
+    /// queued work (progress 0) carries no such constraint, exactly like
+    /// a central-queue pull.
+    fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Option<usize> {
+        let n = self.engines.len();
+        if from >= n || to >= n || from == to {
+            return None;
+        }
+        let (work, progressed) = match lane {
+            None => {
+                let w = self.engines[from].queue.pop_back()?;
+                if sim_reserve(&w.0) > self.engines[to].kv_budget {
+                    self.engines[from].queue.push_back(w);
+                    return None;
+                }
+                let progressed = w.1 > 0;
+                (w, progressed)
+            }
+            Some(l) => {
+                let reserve = self.engines[from]
+                    .running
+                    .get(l)
+                    .map(|r| sim_reserve(&r.req))?;
+                let headroom = self.engines[to]
+                    .kv_budget
+                    .saturating_sub(self.engines[to].kv_used());
+                if reserve > headroom {
+                    return None;
+                }
+                (self.engines[from].preempt_lane(l)?, true)
+            }
+        };
+        if progressed && self.engines[to].clock < self.engines[from].clock {
+            self.engines[to].clock = self.engines[from].clock;
+        }
+        let progress = work.1;
+        self.engines[to].queue.push_back(work);
+        Some(progress)
     }
 
     /// Terminate everything pool-wide -> (request, progress, queued).
@@ -463,7 +549,7 @@ pub fn pool_makespan(workload: &[SimRequest], engines: usize, q_total: usize,
             pred.observe(r.id as u64, r.prompt_len, noisy as usize);
         }
     }
-    let mut pool = SimPool::new(engines, q_total / engines, cost, dispatch);
+    let mut pool = SimPool::new(engines, q_total / engines, cost, dispatch, usize::MAX);
     pool.stage(workload.iter().map(|r| (*r, 0usize)).collect(), pred.as_ref());
     while pool.tick().is_some() {}
     pool.clock()
@@ -521,6 +607,8 @@ struct SimBackend {
     clipped: usize,
     dropped: usize,
     wasted: u64,
+    steals: u64,
+    migrated_tokens: u64,
     infer_time: f64,
     update_time: f64,
     /// Async mode: updates overlap decoding instead of serializing.
@@ -532,9 +620,9 @@ struct SimBackend {
 impl SimBackend {
     fn new(workload: &[SimRequest], engines: usize, q_each: usize, cost: CostModel,
            dispatch: DispatchPolicy, predictor: PredictorKind,
-           overlap_updates: bool) -> Self {
+           overlap_updates: bool, kv_budget: usize) -> Self {
         SimBackend {
-            pool: SimPool::new(engines, q_each, cost, dispatch),
+            pool: SimPool::new(engines, q_each, cost, dispatch, kv_budget),
             cost,
             pred: make_sim_predictor(predictor, workload),
             score: PredictorScore::default(),
@@ -553,6 +641,8 @@ impl SimBackend {
             clipped: 0,
             dropped: 0,
             wasted: 0,
+            steals: 0,
+            migrated_tokens: 0,
             infer_time: 0.0,
             update_time: 0.0,
             overlap_updates,
@@ -564,6 +654,20 @@ impl SimBackend {
         let rollout_time = self.pool.clock();
         let timeline = merge_timelines(&self.pool.engines);
         let bubble = timeline.bubble_ratio(self.q_cap, rollout_time);
+        // per-engine idle fraction against the POOL end time: an engine
+        // that never ran is 100% idle capacity, not a non-event
+        let engine_idle: Vec<f64> = self
+            .pool
+            .engines
+            .iter()
+            .map(|e| {
+                if e.timeline.events().is_empty() {
+                    1.0
+                } else {
+                    e.timeline.bubble_ratio(e.q, rollout_time)
+                }
+            })
+            .collect();
         // useful = tokens of trajectories actually harvested (clipping
         // shortens; restarts and drops waste)
         let useful = self.pool.tokens_out().saturating_sub(self.wasted);
@@ -591,6 +695,9 @@ impl SimBackend {
             engines: self.pool.engines.len(),
             predictor_mae: self.score.mae(),
             predictor_tau: self.score.kendall_tau(),
+            steals: self.steals,
+            migrated_tokens: self.migrated_tokens,
+            engine_idle,
         }
     }
 }
@@ -650,7 +757,7 @@ impl ScheduleBackend for SimBackend {
         Ok(count)
     }
 
-    fn admit(&mut self, rids: &[u64]) -> Result<()> {
+    fn admit(&mut self, rids: &[u64], engine: Option<usize>) -> Result<()> {
         let mut work = Vec::with_capacity(rids.len());
         for rid in rids {
             let e = self.entries.get_mut(rid).expect("admit unknown sim rid");
@@ -661,8 +768,54 @@ impl ScheduleBackend for SimBackend {
             self.staged_pred.insert(e.req.id, predicted);
             work.push((e.req, e.progress));
         }
-        self.pool.stage(work, self.pred.as_ref());
+        match engine {
+            Some(i) => self.pool.stage_to(i, work),
+            None => self.pool.stage(work, self.pred.as_ref()),
+        }
         Ok(())
+    }
+
+    fn engine_loads(&self) -> Vec<EngineLoad> {
+        self.pool
+            .engines
+            .iter()
+            .map(|e| EngineLoad {
+                queued: e.queue.len(),
+                active: e.running.len(),
+                lanes: e.q,
+                kv_used: e.kv_used(),
+                kv_budget: e.kv_budget,
+            })
+            .collect()
+    }
+
+    fn engine_lanes(&self, engine: usize) -> Vec<LaneView> {
+        self.pool
+            .engines
+            .get(engine)
+            .map(|e| {
+                e.running
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| LaneView {
+                        lane: i,
+                        progress: r.generated,
+                        reserve: sim_reserve(&r.req),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Result<bool> {
+        match self.pool.steal(from, to, lane) {
+            Some(progress) => {
+                self.steals += 1;
+                self.migrated_tokens += progress as u64;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
     }
 
     fn step(&mut self) -> Result<usize> {
@@ -803,17 +956,65 @@ impl ScheduleBackend for SimBackend {
 pub fn simulate_pool(mode: SimMode, workload: &[SimRequest], engines: usize,
                      q_total: usize, update_batch: usize, cost: CostModel,
                      dispatch: DispatchPolicy, predictor: PredictorKind) -> SimReport {
-    assert!(engines >= 1 && q_total >= engines, "q_total must cover engines");
-    assert!(update_batch >= 1, "update_batch must be >= 1");
-    let q_each = q_total / engines;
-    let q_cap = q_each * engines;
+    simulate_pool_opts(mode, workload, PoolSimOpts {
+        engines,
+        q_total,
+        update_batch,
+        cost,
+        dispatch,
+        predictor,
+        ..PoolSimOpts::default()
+    })
+}
+
+/// Pool-simulation knobs beyond mode/workload.  The positional
+/// [`simulate_pool`] covers the pre-stealing surface; construct this with
+/// `..PoolSimOpts::default()` for the extended knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolSimOpts {
+    pub engines: usize,
+    /// Total lanes across engines (rounded down to a multiple of engines).
+    pub q_total: usize,
+    pub update_batch: usize,
+    pub cost: CostModel,
+    pub dispatch: DispatchPolicy,
+    pub predictor: PredictorKind,
+    /// Wrap the mode's policy in the [`WorkStealing`] composer.
+    pub steal: bool,
+    /// Per-engine KV budget in reservation tokens (prompt + output per
+    /// admitted lane); `usize::MAX` disables the memory model.
+    pub kv_budget: usize,
+}
+
+impl Default for PoolSimOpts {
+    fn default() -> Self {
+        PoolSimOpts {
+            engines: 1,
+            q_total: 128,
+            update_batch: 128,
+            cost: CostModel::default(),
+            dispatch: DispatchPolicy::ShortestPredictedFirst,
+            predictor: PredictorKind::History,
+            steal: false,
+            kv_budget: usize::MAX,
+        }
+    }
+}
+
+/// [`simulate_pool`] with the full option set (work stealing, KV budget).
+pub fn simulate_pool_opts(mode: SimMode, workload: &[SimRequest],
+                          o: PoolSimOpts) -> SimReport {
+    assert!(o.engines >= 1 && o.q_total >= o.engines, "q_total must cover engines");
+    assert!(o.update_batch >= 1, "update_batch must be >= 1");
+    let q_each = o.q_total / o.engines;
+    let q_cap = q_each * o.engines;
     let params = PolicyParams {
         refill_prompts: match mode {
             SimMode::Baseline => q_cap,
             _ => workload.len().max(1),
         },
         entries_per_prompt: 1,
-        update_batch,
+        update_batch: o.update_batch,
     };
     let mut policy: Box<dyn SchedulePolicy> = match mode {
         SimMode::Baseline => Box::new(BaselinePolicy::new(params, false)),
@@ -821,9 +1022,12 @@ pub fn simulate_pool(mode: SimMode, workload: &[SimRequest], engines: usize,
         SimMode::SortedPartial => Box::new(GroupPolicy::new(params, Mode::Partial)),
         SimMode::Async => Box::new(AsyncUpdatePolicy::new(params, ASYNC_SYNC_EVERY)),
     };
+    if o.steal {
+        policy = Box::new(WorkStealing::wrap(policy, StealConfig::default()));
+    }
     let mut backend =
-        SimBackend::new(workload, engines, q_each, cost, dispatch, predictor,
-                        mode == SimMode::Async);
+        SimBackend::new(workload, o.engines, q_each, o.cost, o.dispatch, o.predictor,
+                        mode == SimMode::Async, o.kv_budget);
     drive(policy.as_mut(), &mut backend)
         .expect("sim backend is infallible; a driver error means a policy livelock");
     backend.into_report(mode)
