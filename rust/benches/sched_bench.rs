@@ -7,7 +7,10 @@ mod bench_util;
 
 use bench_util::{bench, report_rate};
 use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
-use sortedrl::sim::{longtail_workload, pool_makespan, simulate_pool, CostModel, SimMode};
+use sortedrl::sim::{
+    longtail_workload, pool_makespan, simulate_pool, simulate_pool_opts, CostModel,
+    PoolSimOpts, SimMode,
+};
 
 fn main() {
     println!("== sched benches: engine-pool dispatch on longtail_workload(512, 8192) ==\n");
@@ -62,6 +65,29 @@ fn main() {
     println!("  update    {:6.1}s overlapped; overhang {:.1}s\n",
              asy.update_time,
              (asy.total_time - asy.infer_time - asy.rollout_time).max(0.0));
+
+    // ---- work stealing vs baseline makespan (skewed length distribution) ----
+    let steal_opts = PoolSimOpts {
+        engines: 4,
+        q_total: 128,
+        update_batch: 128,
+        cost,
+        dispatch: DispatchPolicy::RoundRobin,
+        predictor: PredictorKind::History,
+        steal: false,
+        ..PoolSimOpts::default()
+    };
+    let no_steal = simulate_pool_opts(SimMode::Baseline, &w, steal_opts);
+    let stealing = simulate_pool_opts(SimMode::Baseline, &w,
+                                      PoolSimOpts { steal: true, ..steal_opts });
+    println!("work stealing vs none (baseline waves, 4x32, round-robin striping):");
+    println!("  makespan  {:6.1}s  vs  {:6.1}s  ({:+.1}% with stealing)",
+             stealing.rollout_time, no_steal.rollout_time,
+             100.0 * (stealing.rollout_time / no_steal.rollout_time - 1.0));
+    println!("  bubble    {:6.2}%  vs  {:6.2}%",
+             stealing.bubble_ratio * 100.0, no_steal.bubble_ratio * 100.0);
+    println!("  {} steals, {} partial tokens migrated\n",
+             stealing.steals, stealing.migrated_tokens);
 
     // ---- host-time benches ----
     bench("pool_makespan 4x32 sjf/oracle (host)", 2.0, || {

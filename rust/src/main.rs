@@ -16,7 +16,9 @@ use sortedrl::exp::{self, ExpContext, Scale};
 use sortedrl::rl::advantage::AdvantageKind;
 use sortedrl::runtime::Runtime;
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
-use sortedrl::sim::{longtail_workload, simulate, simulate_pool, CostModel, SimMode};
+use sortedrl::sim::{
+    longtail_workload, simulate, simulate_pool_opts, CostModel, PoolSimOpts, SimMode,
+};
 use sortedrl::tasks::logic::LogicTask;
 use sortedrl::tasks::math::MathTask;
 use sortedrl::tasks::Task;
@@ -86,22 +88,30 @@ USAGE:
                  [--group-size n] [--samples-per-prompt G] [--update-batch U]
                  [--lr F] [--max-new N] [--seed N] [--scale ci|small|paper]
                  [--engines N] [--predictor oracle|history|bucket]
-                 [--dispatch rr|least-loaded|sjf]
+                 [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
                  [--artifacts DIR] [--tag TAG] [--no-warm-start]
   sortedrl exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6a|fig6b|fig9a|fig9b|tab1|
                 pool|all-sim|all> [--scale ci|small|paper] [--out DIR] [--seed N]
   sortedrl sim [--n 512] [--cap 8192] [--queue 128] [--update-batch 128]
                [--engines N] [--predictor oracle|history|bucket]
-               [--dispatch rr|least-loaded|sjf]
+               [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
   sortedrl info [--artifacts DIR] [--tag TAG]
 
 Pool defaults (train & sim): --engines 1, --predictor history,
---dispatch least-loaded.
+--dispatch least-loaded.  --steal lets idle engines pull queued work or
+whole lanes from loaded peers; --kv-budget TOK caps each engine's KV
+reservations (prompt + generation cap per admitted lane; 0 = unlimited).
 ";
 
 fn parse_predictor(args: &Args) -> Result<PredictorKind> {
     PredictorKind::parse(args.get("predictor").unwrap_or("history"))
         .context("--predictor oracle|history|bucket")
+}
+
+/// `--kv-budget 0` (or absent) = unlimited.
+fn parse_kv_budget(args: &Args) -> Result<usize> {
+    let v = args.get_usize("kv-budget", 0)?;
+    Ok(if v == 0 { usize::MAX } else { v })
 }
 
 fn parse_dispatch(args: &Args) -> Result<DispatchPolicy> {
@@ -183,12 +193,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         },
         predictor: parse_predictor(args)?,
         dispatch: parse_dispatch(args)?,
+        steal: args.get("steal").is_some(),
+        kv_budget: parse_kv_budget(args)?,
     };
     let ds = Dataset::generate(task.as_ref(), ts.per_difficulty, 0.1, seed + 1);
     eprintln!("dataset: {} train / {} eval; scheduler: {}",
               ds.train.len(), ds.eval.len(), scheduler.name());
-    eprintln!("pool: {} engine(s), predictor {}, dispatch {}",
-              cfg.num_engines, cfg.predictor.name(), cfg.dispatch.name());
+    eprintln!("pool: {} engine(s), predictor {}, dispatch {}, steal {}, kv budget {}",
+              cfg.num_engines, cfg.predictor.name(), cfg.dispatch.name(),
+              cfg.steal,
+              if cfg.kv_budget == usize::MAX { "unlimited".to_string() }
+              else { cfg.kv_budget.to_string() });
 
     let mut state = rt.init(seed as i32)?;
     if args.get("no-warm-start").is_none() {
@@ -312,6 +327,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     let predictor = parse_predictor(args)?;
     let dispatch = parse_dispatch(args)?;
+    let steal = args.get("steal").is_some();
+    let kv_budget = parse_kv_budget(args)?;
     let w = longtail_workload(n, cap, seed);
     println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}\n");
     for (mode, label) in [(SimMode::Baseline, "baseline"),
@@ -325,20 +342,31 @@ fn cmd_sim(args: &Args) -> Result<()> {
                  r.total_time, r.wasted_tokens, r.clipped);
     }
     if engines > 1 {
-        println!("\npool: {engines} engines x {} lanes, predictor {}, dispatch {} \
-                  (1-engine vs {engines}-engine, same total capacity)",
+        println!("\npool: {engines} engines x {} lanes, predictor {}, dispatch {}, \
+                  steal {steal} (1-engine vs {engines}-engine, same total capacity)",
                  q / engines, predictor.name(), dispatch.name());
+        let opts = PoolSimOpts {
+            engines,
+            q_total: q,
+            update_batch: u,
+            dispatch,
+            predictor,
+            steal,
+            kv_budget,
+            ..PoolSimOpts::default()
+        };
         let mut telemetry = (0.0, 0.0);
+        let mut stolen = (0u64, 0u64);
         for (mode, label) in [(SimMode::Baseline, "baseline"),
                               (SimMode::SortedOnPolicy, "on-policy"),
                               (SimMode::SortedPartial, "partial"),
                               (SimMode::Async, "async")] {
-            let one = simulate_pool(mode, &w, 1, q, u, CostModel::default(),
-                                    dispatch, predictor);
-            let many = simulate_pool(mode, &w, engines, q, u, CostModel::default(),
-                                     dispatch, predictor);
+            let one = simulate_pool_opts(mode, &w,
+                                         PoolSimOpts { engines: 1, ..opts });
+            let many = simulate_pool_opts(mode, &w, opts);
             if mode == SimMode::SortedPartial {
                 telemetry = (many.predictor_mae, many.predictor_tau);
+                stolen = (many.steals, many.migrated_tokens);
             }
             println!("{label:>10}: bubble {:5.2}% -> {:5.2}%   tok/s {:7.0} -> {:7.0}   \
                       rollout {:6.1}s -> {:6.1}s",
@@ -349,6 +377,11 @@ fn cmd_sim(args: &Args) -> Result<()> {
         println!("predictor {} (partial, {engines} engines): MAE {:.1} tokens, \
                   Kendall tau {:.3}",
                  predictor.name(), telemetry.0, telemetry.1);
+        if steal {
+            println!("work stealing (partial, {engines} engines): {} steals, \
+                      {} partial tokens migrated",
+                     stolen.0, stolen.1);
+        }
     } else {
         println!("\n(pass --engines N to compare 1-engine vs N-engine pools)");
     }

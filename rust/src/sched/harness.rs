@@ -65,6 +65,9 @@ pub struct TokenBackend {
     rr: usize,
     next_load: usize,
     ready_order: Vec<u64>,
+    /// Generation ticks executed (one token per running lane per tick) —
+    /// the harness's makespan, what stealing is supposed to shrink.
+    pub ticks: u64,
     pub updates: usize,
     pub harvests: usize,
     /// Trainer-consumed rids, in consumption order.
@@ -94,6 +97,7 @@ impl TokenBackend {
             rr: 0,
             next_load: 0,
             ready_order: Vec::new(),
+            ticks: 0,
             updates: 0,
             harvests: 0,
             consumed: Vec::new(),
@@ -192,7 +196,7 @@ impl TokenBackend {
             // beyond that the budget is a hard ceiling
             assert!(used <= self.kv_budget || e.running.len() == 1,
                     "engine {i} kv {used} over budget {} with {} lanes",
-                    used, e.running.len());
+                    self.kv_budget, e.running.len());
             assert!(e.running.len() <= e.lanes, "engine {i} over lanes");
         }
     }
@@ -291,6 +295,7 @@ impl ScheduleBackend for TokenBackend {
     }
 
     fn step(&mut self) -> Result<usize> {
+        self.ticks += 1;
         for i in 0..self.engines.len() {
             self.fill(i);
         }

@@ -1,0 +1,129 @@
+//! Randomized policy-driver fuzz harness.
+//!
+//! Seeded-RNG event sequences — random workload lengths, engine counts,
+//! lane counts, KV budgets, dispatch modes, steal on/off — driven through
+//! EVERY `SchedulerKind` on both backends:
+//!
+//!   * [`TokenBackend`] (deterministic multi-engine harness) checks its
+//!     invariants after every single transition: conservation (no request
+//!     lost or duplicated, across any number of cross-engine steals), the
+//!     KV budget ceiling, progress bounds.  A completed `drive` call IS
+//!     the proof; the assertions below add the terminal contract.
+//!   * The simulator backend (`simulate_pool_opts`) re-checks request and
+//!     token conservation from the report side.
+//!
+//! Termination is part of the property: `drive` has livelock tripwires
+//! (decision budget, idle-step and fruitless-decision caps), so a policy
+//! that stops making progress fails the test instead of hanging it.
+//!
+//! The `#[ignore]`d sweep is the same property at ~10x the iteration
+//! count for the nightly `cargo test --release -- --ignored` job.
+
+use sortedrl::coordinator::SchedulerKind;
+use sortedrl::sched::harness::{HarnessDispatch, TokenBackend, HARNESS_PROMPT};
+use sortedrl::sched::policy::{drive, make_policy_opts, PolicyParams, ScheduleBackend};
+use sortedrl::sim::{longtail_workload, simulate_pool_opts, PoolSimOpts, SimMode};
+use sortedrl::util::proptest::{property, Gen};
+
+const MAX_LEN: usize = 24;
+
+fn fuzz_token_backend_once(g: &mut Gen) {
+    let n = g.usize_in(3..24);
+    let lens: Vec<usize> = (0..n).map(|_| g.usize_in(1..MAX_LEN + 1)).collect();
+    let engines = g.usize_in(1..5);
+    let lanes = g.usize_in(1..4);
+    let dispatch = if g.bool() { HarnessDispatch::Striped } else { HarnessDispatch::Central };
+    // budgets always cover the largest single reservation, so the
+    // empty-engine escape never has to overrun and the KV ceiling checked
+    // inside the harness stays strict
+    let max_reserve = HARNESS_PROMPT + MAX_LEN;
+    let kv_budget = if g.bool() {
+        usize::MAX
+    } else {
+        g.usize_in(max_reserve..4 * max_reserve)
+    };
+    let steal = g.bool();
+    let kind = *g.pick(&SchedulerKind::ALL);
+    let params = PolicyParams {
+        refill_prompts: g.usize_in(1..n + 1),
+        entries_per_prompt: 1,
+        update_batch: g.usize_in(1..9),
+    };
+    let ctx = format!(
+        "n={n} engines={engines} lanes={lanes} {dispatch:?} kv={kv_budget} \
+         steal={steal} kind={kind:?} refill={} batch={}",
+        params.refill_prompts, params.update_batch
+    );
+    let mut policy = make_policy_opts(kind, params, steal);
+    let mut b = TokenBackend::new(&lens, engines, lanes, dispatch, kv_budget);
+    // per-transition invariants assert inside the backend; an Err here is
+    // a driver livelock bail — also a failure
+    drive(policy.as_mut(), &mut b).unwrap_or_else(|e| panic!("{ctx}: {e:#}"));
+    // terminal contract: nothing left in flight, every request trained or
+    // deliberately dropped exactly once
+    let v = b.view();
+    assert_eq!(v.running, 0, "{ctx}: requests left running");
+    assert_eq!(v.queued, 0, "{ctx}: requests left queued");
+    assert_eq!(b.consumed.len() + b.dropped.len(), n, "{ctx}: request lost");
+    if !steal {
+        assert!(b.steal_log.is_empty(), "{ctx}: stole without the wrapper");
+    }
+}
+
+fn fuzz_sim_backend_once(g: &mut Gen) {
+    let n = g.usize_in(16..80);
+    let cap = g.usize_in(64..1024);
+    let engines = g.usize_in(1..5);
+    let q_total = engines * g.usize_in(2..9);
+    let mode = *g.pick(&[SimMode::Baseline, SimMode::SortedOnPolicy,
+                         SimMode::SortedPartial, SimMode::Async]);
+    let opts = PoolSimOpts {
+        engines,
+        q_total,
+        update_batch: g.usize_in(4..33),
+        dispatch: *g.pick(&sortedrl::sched::DispatchPolicy::ALL),
+        predictor: *g.pick(&sortedrl::sched::PredictorKind::ALL),
+        steal: g.bool(),
+        // covers the largest possible reservation (prompt < 256 + cap)
+        kv_budget: if g.bool() { usize::MAX } else { (cap + 256) * g.usize_in(1..4) },
+        ..PoolSimOpts::default()
+    };
+    let w = longtail_workload(n, cap, g.usize_in(0..1_000_000) as u64);
+    let r = simulate_pool_opts(mode, &w, opts);
+    let ctx = format!("{mode:?} {opts:?}");
+    assert_eq!(r.timeline.finished() as usize + r.clipped + r.dropped, n,
+               "request conservation violated: {ctx}");
+    assert_eq!(r.useful_tokens + r.wasted_tokens, r.timeline.tokens_out(),
+               "token conservation violated: {ctx}");
+    assert!((0.0..=1.0).contains(&r.bubble_ratio), "{ctx}");
+    assert!(r.rollout_time.is_finite() && r.rollout_time > 0.0, "{ctx}");
+    assert_eq!(r.engine_idle.len(), engines, "{ctx}");
+    if !opts.steal {
+        assert_eq!(r.steals, 0, "{ctx}");
+    }
+    if mode == SimMode::SortedPartial {
+        assert_eq!(r.wasted_tokens, 0, "partial discards nothing: {ctx}");
+    }
+}
+
+/// The CI-tier fuzz pass: 200 seeded iterations on the token backend plus
+/// 60 on the simulator backend (fixed seeds — `util::proptest` derives
+/// them from the property name, so failures replay exactly).
+#[test]
+fn policy_fuzz_token_backend() {
+    property("policy fuzz (token backend)", 200, fuzz_token_backend_once);
+}
+
+#[test]
+fn policy_fuzz_sim_backend() {
+    property("policy fuzz (sim backend)", 60, fuzz_sim_backend_once);
+}
+
+/// Nightly-tier long sweep: same properties, ~10x the iterations.
+/// Run with `cargo test --release -- --ignored`.
+#[test]
+#[ignore = "long randomized sweep; nightly job runs it with --ignored"]
+fn policy_fuzz_long_sweep() {
+    property("policy fuzz long (token backend)", 2000, fuzz_token_backend_once);
+    property("policy fuzz long (sim backend)", 500, fuzz_sim_backend_once);
+}

@@ -18,12 +18,16 @@
 use anyhow::Result;
 use sortedrl::coordinator::{Lifecycle, Mode, RolloutBuffer, SchedulerKind};
 use sortedrl::rollout::{Request, Rollout};
+use sortedrl::sched::harness::{HarnessDispatch, TokenBackend};
 use sortedrl::sched::policy::{
-    drive, make_policy, HarvestAction, HarvestItem, PolicyParams, SchedView,
-    ScheduleBackend,
+    drive, make_policy, make_policy_opts, HarvestAction, HarvestItem, PolicyParams,
+    SchedView, ScheduleBackend,
 };
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
-use sortedrl::sim::{longtail_workload, simulate, simulate_pool, CostModel, SimMode};
+use sortedrl::sim::{
+    longtail_workload, simulate, simulate_pool, simulate_pool_opts, CostModel,
+    PoolSimOpts, SimMode,
+};
 use std::collections::{BTreeMap, VecDeque};
 
 fn assemble(req: &Request, toks: &[i32], lps: &[f32], complete: bool, at: f64) -> Rollout {
@@ -133,7 +137,7 @@ impl ScheduleBackend for BufferBackend {
         Ok(count)
     }
 
-    fn admit(&mut self, rids: &[u64]) -> Result<()> {
+    fn admit(&mut self, rids: &[u64], _engine: Option<usize>) -> Result<()> {
         for req in self.buffer.dispatch(rids) {
             self.queue.push_back(req.rid);
             self.inflight
@@ -359,6 +363,86 @@ fn max_updates_truncates_mid_group() {
 }
 
 // --------------------------------------------------------------------------
+// work-stealing goldens (deterministic TokenBackend)
+// --------------------------------------------------------------------------
+
+/// On a single engine the WorkStealing wrapper must be inert: every kind
+/// reproduces its unwrapped golden sequence exactly.
+#[test]
+fn steal_wrapper_is_inert_on_single_engine() {
+    for kind in SchedulerKind::ALL {
+        let base = run_kind(kind);
+        let params = PolicyParams {
+            refill_prompts: LENS.len(),
+            entries_per_prompt: 1,
+            update_batch: 2,
+        };
+        let mut policy = make_policy_opts(kind, params, true);
+        let mut b = BufferBackend::new(&LENS, 2, 100);
+        drive(policy.as_mut(), &mut b).unwrap();
+        assert_eq!(b.consumed_order, base.consumed_order, "{kind:?}");
+        assert_eq!(b.updates, base.updates, "{kind:?}");
+        assert_eq!(b.harvest_calls, base.harvest_calls, "{kind:?}");
+    }
+}
+
+/// Hand-derived queue-steal scenario: 2 engines x 1 lane, static striping,
+/// lens [1,9,1,9] (e0 gets the two short ones, e1 the two cap-length).
+/// After tick 2 engine 0 has drained; the wrapper steals e1's queued rid 3
+/// (still at progress 0) so both long requests decode in parallel: the run
+/// takes 11 ticks instead of the 18 the same policy needs without stealing.
+#[test]
+fn golden_steal_queue_migration_pinned() {
+    let params = PolicyParams { refill_prompts: 4, entries_per_prompt: 1, update_batch: 2 };
+    let run = |steal: bool| {
+        let mut policy = make_policy_opts(SchedulerKind::Baseline, params, steal);
+        let mut b =
+            TokenBackend::new(&[1, 9, 1, 9], 2, 1, HarnessDispatch::Striped, usize::MAX);
+        drive(policy.as_mut(), &mut b).unwrap();
+        b
+    };
+    let stealing = run(true);
+    assert_eq!(stealing.updates, 2);
+    assert_eq!(stealing.consumed, vec![0, 2, 1, 3]);
+    assert_eq!(stealing.steal_log, vec![(1, 0, 3, 0)]);
+    assert_eq!(stealing.migrated_tokens, 0, "rid 3 had not started yet");
+    assert_eq!(stealing.ticks, 11);
+    assert_eq!(stealing.harvests, 0, "baseline never harvests");
+    let flat = run(false);
+    assert_eq!(flat.consumed, vec![0, 2, 1, 3], "same data, different clock");
+    assert!(flat.steal_log.is_empty());
+    assert_eq!(flat.ticks, 18);
+}
+
+/// Every wrapped kind pins identical consumed-rid AND steal-event
+/// sequences across runs on the deterministic backend (no hidden
+/// nondeterminism in the stealing path), and conserves the workload —
+/// every request ends trained or deliberately dropped, never lost to a
+/// migration.
+#[test]
+fn stealing_goldens_deterministic_across_runs() {
+    let run = |kind: SchedulerKind| {
+        let params =
+            PolicyParams { refill_prompts: 8, entries_per_prompt: 1, update_batch: 2 };
+        let mut policy = make_policy_opts(kind, params, true);
+        let mut b = TokenBackend::new(&[2, 4, 6, 3, 9, 1, 5, 7], 2, 2,
+                                      HarnessDispatch::Striped, usize::MAX);
+        drive(policy.as_mut(), &mut b).unwrap();
+        b
+    };
+    for kind in SchedulerKind::ALL {
+        let a = run(kind);
+        let b = run(kind);
+        assert_eq!(a.consumed, b.consumed, "{kind:?}");
+        assert_eq!(a.steal_log, b.steal_log, "{kind:?}");
+        assert_eq!(a.updates, b.updates, "{kind:?}");
+        assert_eq!(a.ticks, b.ticks, "{kind:?}");
+        assert_eq!(a.consumed.len() + a.dropped.len(), 8,
+                   "{kind:?} lost a request across steals");
+    }
+}
+
+// --------------------------------------------------------------------------
 // simulator-side golden checks
 // --------------------------------------------------------------------------
 
@@ -384,6 +468,36 @@ fn sim_reports_deterministic_across_runs() {
         assert_eq!(a.dropped, b.dropped, "{mode:?}");
         assert!((a.rollout_time - b.rollout_time).abs() < 1e-9, "{mode:?}");
         assert!((a.total_time - b.total_time).abs() < 1e-9, "{mode:?}");
+    }
+}
+
+/// With stealing enabled, `simulate_pool` stays bit-deterministic across
+/// runs — steal counts, migrated tokens, and the full report agree.
+#[test]
+fn sim_stealing_deterministic_across_runs() {
+    let w = longtail_workload(160, 2048, 9);
+    let opts = PoolSimOpts {
+        engines: 4,
+        q_total: 32,
+        update_batch: 24,
+        dispatch: DispatchPolicy::RoundRobin,
+        predictor: PredictorKind::History,
+        steal: true,
+        ..PoolSimOpts::default()
+    };
+    for mode in SIM_MODES {
+        let a = simulate_pool_opts(mode, &w, opts);
+        let b = simulate_pool_opts(mode, &w, opts);
+        assert_eq!(a.steals, b.steals, "{mode:?}");
+        assert_eq!(a.migrated_tokens, b.migrated_tokens, "{mode:?}");
+        assert_eq!(a.useful_tokens, b.useful_tokens, "{mode:?}");
+        assert_eq!(a.wasted_tokens, b.wasted_tokens, "{mode:?}");
+        assert_eq!(a.clipped, b.clipped, "{mode:?}");
+        assert_eq!(a.dropped, b.dropped, "{mode:?}");
+        assert!((a.rollout_time - b.rollout_time).abs() < 1e-9, "{mode:?}");
+        // stealing must not break request conservation
+        assert_eq!(a.timeline.finished() as usize + a.clipped + a.dropped, 160,
+                   "{mode:?}");
     }
 }
 

@@ -8,9 +8,12 @@
 //! preemption, requeue and drain, NO request is lost or duplicated, for
 //! every `DispatchPolicy` x `PredictorKind` x `SimMode` x engine count.
 
+use sortedrl::sched::harness::{HarnessDispatch, TokenBackend};
+use sortedrl::sched::policy::{HarvestAction, ScheduleBackend};
 use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, pool_makespan, simulate, simulate_pool, CostModel, SimMode,
+    longtail_workload, pool_makespan, simulate, simulate_pool, simulate_pool_opts,
+    CostModel, PoolSimOpts, SimMode,
 };
 use sortedrl::util::proptest::{property, Gen};
 
@@ -147,6 +150,167 @@ fn bubble_ordering_multi_le_single_le_baseline() {
     assert!(multi.bubble_ratio < base.bubble_ratio / 2.0);
     // sharding buys wall-clock: parallel weight streaming
     assert!(multi.rollout_time < single.rollout_time);
+}
+
+// --------------------------------------------------------------------------
+// per-verdict HarvestAction pins (deterministic TokenBackend)
+// --------------------------------------------------------------------------
+
+/// One engine, one lane, two requests: run rid 0 for two ticks, then
+/// harvest — rid 0 arrives as a progress-2 partial, rid 1 as untouched
+/// queued work.  Each test below applies ONE verdict and pins its exact
+/// state transition.
+fn harvested_pair() -> (TokenBackend, Vec<sortedrl::sched::policy::HarvestItem>) {
+    let mut b = TokenBackend::new(&[5, 5], 1, 1, HarnessDispatch::Central, usize::MAX);
+    b.load_prompts(2).unwrap();
+    b.admit(&[0, 1], None).unwrap();
+    b.step().unwrap();
+    b.step().unwrap();
+    let items = b.harvest_candidates().unwrap();
+    assert_eq!(items.len(), 2);
+    assert_eq!((items[0].rid, items[0].progress, items[0].queued), (0, 2, false));
+    assert_eq!((items[1].rid, items[1].progress, items[1].queued), (1, 0, true));
+    (b, items)
+}
+
+#[test]
+fn verdict_clip_truncates_and_readies() {
+    let (mut b, items) = harvested_pair();
+    b.resolve(&items[0], HarvestAction::Clip).unwrap();
+    assert_eq!(b.ready_rids(), vec![0]);
+    assert_eq!(b.ready_len(0), 2, "clip keeps the partial length");
+    assert_eq!(b.clipped, vec![0]);
+    b.resolve(&items[1], HarvestAction::Requeue).unwrap();
+    b.train(&[0]).unwrap();
+    assert_eq!(b.consumed, vec![0]);
+}
+
+#[test]
+fn verdict_restart_discards_progress() {
+    let (mut b, items) = harvested_pair();
+    b.resolve(&items[0], HarvestAction::Restart).unwrap();
+    b.resolve(&items[1], HarvestAction::Requeue).unwrap();
+    assert_eq!(b.ready_len(0), 0, "restart zeroes the partial");
+    assert_eq!(b.schedulable(), vec![0, 1], "both back in the schedulable set");
+    // rerun from scratch: rid 0 needs its full 5 ticks again
+    b.admit(&[0], None).unwrap();
+    for _ in 0..5 {
+        b.step().unwrap();
+    }
+    assert_eq!(b.ready_rids(), vec![0]);
+    assert_eq!(b.ready_len(0), 5);
+}
+
+#[test]
+fn verdict_resume_preserves_progress() {
+    let (mut b, items) = harvested_pair();
+    b.resolve(&items[0], HarvestAction::Resume).unwrap();
+    b.resolve(&items[1], HarvestAction::Requeue).unwrap();
+    assert_eq!(b.ready_len(0), 2, "resume keeps the partial tokens");
+    // only the remaining 3 tokens are decoded on re-admission
+    b.admit(&[0], None).unwrap();
+    for _ in 0..3 {
+        b.step().unwrap();
+    }
+    assert_eq!(b.ready_rids(), vec![0]);
+}
+
+#[test]
+fn verdict_requeue_leaves_untouched() {
+    let (mut b, items) = harvested_pair();
+    b.resolve(&items[0], HarvestAction::Requeue).unwrap();
+    b.resolve(&items[1], HarvestAction::Requeue).unwrap();
+    assert_eq!(b.schedulable(), vec![0, 1]);
+    assert_eq!(b.ready_len(0), 2, "requeue does not erase progress");
+    assert_eq!(b.ready_len(1), 0);
+    assert!(b.clipped.is_empty() && b.dropped.is_empty() && b.consumed.is_empty());
+}
+
+#[test]
+fn verdict_drop_consumes_untrained() {
+    let (mut b, items) = harvested_pair();
+    b.resolve(&items[0], HarvestAction::Drop).unwrap();
+    b.resolve(&items[1], HarvestAction::Drop).unwrap();
+    assert_eq!(b.dropped, vec![0, 1]);
+    assert!(b.consumed.is_empty(), "drop never reaches the trainer");
+    assert!(b.schedulable().is_empty() && b.ready_rids().is_empty());
+}
+
+/// Requeue of a STOLEN lane preserves its partial tokens: the migration
+/// carries progress to the thief, and a later harvest + Requeue hands the
+/// same partial back to the schedulable set intact.
+#[test]
+fn verdict_requeue_after_steal_preserves_partial() {
+    let mut b = TokenBackend::new(&[6, 6], 2, 1, HarnessDispatch::Striped, usize::MAX);
+    b.load_prompts(2).unwrap();
+    b.admit(&[0], Some(0)).unwrap();
+    b.admit(&[1], Some(1)).unwrap();
+    for _ in 0..3 {
+        b.step().unwrap();
+    }
+    // steal engine 0's running lane (rid 0, progress 3) onto engine 1
+    assert!(b.steal(0, 1, Some(0)).unwrap());
+    assert_eq!(b.steal_log, vec![(0, 1, 0, 3)]);
+    assert_eq!(b.migrated_tokens, 3);
+    let items = b.harvest_candidates().unwrap();
+    // rid 0 sits in engine 1's queue WITH progress: a partial, not
+    // untouched queued work
+    let it0 = items.iter().find(|i| i.rid == 0).unwrap();
+    assert_eq!((it0.progress, it0.queued), (3, false));
+    for it in &items {
+        b.resolve(it, HarvestAction::Requeue).unwrap();
+    }
+    assert_eq!(b.ready_len(0), 3, "stolen partial survives requeue");
+    assert_eq!(b.schedulable(), vec![0, 1]);
+}
+
+// --------------------------------------------------------------------------
+// work-stealing regression (the issue's acceptance criterion)
+// --------------------------------------------------------------------------
+
+/// Skewed workload, 4 engines, static round-robin striping: with stealing
+/// enabled the bubble ratio strictly improves over the identical policy
+/// without stealing, request conservation holds in both runs, and the
+/// per-engine idle breakdown shows the imbalance stealing removed.
+#[test]
+fn stealing_strictly_improves_skewed_bubble() {
+    let w = longtail_workload(256, 8192, 1);
+    let opts = PoolSimOpts {
+        engines: 4,
+        q_total: 64,
+        update_batch: 64,
+        dispatch: DispatchPolicy::RoundRobin,
+        predictor: PredictorKind::History,
+        steal: false,
+        ..PoolSimOpts::default()
+    };
+    let flat = simulate_pool_opts(SimMode::Baseline, &w, opts);
+    let stealing =
+        simulate_pool_opts(SimMode::Baseline, &w, PoolSimOpts { steal: true, ..opts });
+    assert_eq!(flat.steals, 0);
+    assert!(stealing.steals > 0, "no steals fired on a skewed workload");
+    assert!(stealing.bubble_ratio < flat.bubble_ratio,
+            "stealing bubble {} !< baseline bubble {}",
+            stealing.bubble_ratio, flat.bubble_ratio);
+    // migrating a lane never extends the critical path (the thief decodes
+    // it at least as fast as the loaded victim would have)
+    assert!(stealing.rollout_time <= flat.rollout_time * 1.0001,
+            "stealing makespan {} > no-steal {}",
+            stealing.rollout_time, flat.rollout_time);
+    for r in [&flat, &stealing] {
+        assert_eq!(r.timeline.finished() as usize + r.clipped + r.dropped, 256);
+        assert_eq!(r.engine_idle.len(), 4);
+        assert!(r.engine_idle.iter().all(|&b| (0.0..=1.0).contains(&b)));
+    }
+    // same regression under partial-mode semantics: stolen partials keep
+    // their tokens, and occupancy must not get worse
+    let part_flat = simulate_pool_opts(SimMode::SortedPartial, &w, opts);
+    let part_steal =
+        simulate_pool_opts(SimMode::SortedPartial, &w, PoolSimOpts { steal: true, ..opts });
+    assert_eq!(part_steal.wasted_tokens, 0, "partial mode discards nothing");
+    assert!(part_steal.bubble_ratio <= part_flat.bubble_ratio * 1.02,
+            "partial stealing bubble {} regressed vs {}",
+            part_steal.bubble_ratio, part_flat.bubble_ratio);
 }
 
 /// Predicted-SJF dispatch beats static round-robin on makespan for the
