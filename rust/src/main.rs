@@ -366,6 +366,10 @@ fn cmd_sim(args: &Args) -> Result<()> {
             let many = simulate_pool_opts(mode, &w, opts);
             if mode == SimMode::SortedPartial {
                 telemetry = (many.predictor_mae, many.predictor_tau);
+            }
+            // report steal stats from the unsorted baseline: sorted modes
+            // already balance the tail and steal ~never
+            if mode == SimMode::Baseline {
                 stolen = (many.steals, many.migrated_tokens);
             }
             println!("{label:>10}: bubble {:5.2}% -> {:5.2}%   tok/s {:7.0} -> {:7.0}   \
@@ -378,8 +382,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
                   Kendall tau {:.3}",
                  predictor.name(), telemetry.0, telemetry.1);
         if steal {
-            println!("work stealing (partial, {engines} engines): {} steals, \
-                      {} partial tokens migrated",
+            println!("work stealing (baseline, {engines} engines): {} steals, \
+                      {} in-flight tokens migrated",
                      stolen.0, stolen.1);
         }
     } else {

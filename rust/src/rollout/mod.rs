@@ -210,6 +210,23 @@ impl<'rt> Engine<'rt> {
         self.cfg.kv_budget
     }
 
+    /// The KV admission gate shared by `admit`, `kv_blocked`, and the
+    /// pool's `steal_to`: admitting `reserve` on top of `used` is refused
+    /// iff occupied lanes already hold KV and the sum overruns the budget
+    /// (the empty-engine escape admits any head request alone).
+    pub fn kv_gate_refuses(&self, used: usize, reserve: usize) -> bool {
+        used > 0 && used.saturating_add(reserve) > self.cfg.kv_budget
+    }
+
+    /// The KV gate currently refuses the queue head: a free lane will NOT
+    /// drain this queue until a running lane releases its reservation — a
+    /// stealing policy should treat this as saturation.
+    pub fn kv_blocked(&self) -> bool {
+        self.queue
+            .front()
+            .is_some_and(|front| self.kv_gate_refuses(self.kv_used(), kv_reservation(front)))
+    }
+
     /// Remove the newest request from the local queue (a work-stealing
     /// victim — the entry furthest from running here anyway).
     pub fn steal_queued(&mut self) -> Option<Request> {
@@ -260,9 +277,7 @@ impl<'rt> Engine<'rt> {
             // otherwise-empty engine always admits its head request so a
             // single oversized reservation cannot deadlock the queue
             let reserve = kv_reservation(front);
-            if kv_used.saturating_add(reserve) > self.cfg.kv_budget
-                && !(kv_used == 0 && newly.is_empty())
-            {
+            if self.kv_gate_refuses(kv_used, reserve) {
                 break;
             }
             kv_used += reserve;

@@ -112,6 +112,14 @@ impl TokenBackend {
         HARNESS_PROMPT + self.lens[rid as usize]
     }
 
+    /// The KV admission gate shared by `fill`, `engine_loads`, and
+    /// `steal`: admitting `reserve` on top of `used` is refused iff other
+    /// lanes already hold KV and the sum overruns the budget (the
+    /// empty-engine escape admits any head request alone).
+    fn kv_gate_refuses(&self, used: usize, reserve: usize) -> bool {
+        used > 0 && used.saturating_add(reserve) > self.kv_budget
+    }
+
     fn kv_used(&self, engine: usize) -> usize {
         self.engines[engine]
             .running
@@ -147,7 +155,7 @@ impl TokenBackend {
                 }
             };
             let res = self.reserve(rid);
-            if used > 0 && used.saturating_add(res) > self.kv_budget {
+            if self.kv_gate_refuses(used, res) {
                 break;
             }
             if local.is_some() {
@@ -213,7 +221,7 @@ impl ScheduleBackend for TokenBackend {
             unconsumed: self
                 .state
                 .iter()
-                .filter(|s| !matches!(s, St::Unloaded | St::Consumed))
+                .filter(|&&s| !matches!(s, St::Unloaded | St::Consumed))
                 .count(),
             lanes: self.engines.iter().map(|e| e.lanes).sum(),
             updates: self.updates,
@@ -237,12 +245,21 @@ impl ScheduleBackend for TokenBackend {
 
     fn engine_loads(&self) -> Vec<EngineLoad> {
         (0..self.engines.len())
-            .map(|i| EngineLoad {
-                queued: self.engines[i].queue.len(),
-                active: self.engines[i].running.len(),
-                lanes: self.engines[i].lanes,
-                kv_used: self.kv_used(i),
-                kv_budget: self.kv_budget,
+            .map(|i| {
+                let used = self.kv_used(i);
+                let blocked = self
+                    .engines[i]
+                    .queue
+                    .front()
+                    .is_some_and(|&rid| self.kv_gate_refuses(used, self.reserve(rid)));
+                EngineLoad {
+                    queued: self.engines[i].queue.len(),
+                    active: self.engines[i].running.len(),
+                    lanes: self.engines[i].lanes,
+                    kv_used: used,
+                    kv_budget: self.kv_budget,
+                    kv_blocked: blocked,
+                }
             })
             .collect()
     }
@@ -374,13 +391,11 @@ impl ScheduleBackend for TokenBackend {
     }
 
     fn preempt(&mut self, engine: usize, lane: usize) -> Result<()> {
-        if let Some(e) = self.engines.get_mut(engine) {
-            if lane < e.running.len() {
-                let rid = e.running.remove(lane);
-                match self.dispatch {
-                    HarnessDispatch::Striped => self.engines[engine].queue.push_back(rid),
-                    HarnessDispatch::Central => self.central.push_back(rid),
-                }
+        if engine < self.engines.len() && lane < self.engines[engine].running.len() {
+            let rid = self.engines[engine].running.remove(lane);
+            match self.dispatch {
+                HarnessDispatch::Striped => self.engines[engine].queue.push_back(rid),
+                HarnessDispatch::Central => self.central.push_back(rid),
             }
         }
         self.check_invariants();
@@ -395,8 +410,14 @@ impl ScheduleBackend for TokenBackend {
         let moved = match lane {
             None => match self.engines[from].queue.pop_back() {
                 Some(rid) => {
-                    // queued work holds no KV; refuse only the impossible
-                    if self.reserve(rid) > self.kv_budget {
+                    // refuse what the destination can never hold AND what
+                    // its current headroom cannot admit — landing a fat
+                    // request on a KV-loaded engine would just mark IT
+                    // blocked and ping-pong the request straight back
+                    let res = self.reserve(rid);
+                    if res > self.kv_budget
+                        || self.kv_gate_refuses(self.kv_used(to), res)
+                    {
                         self.engines[from].queue.push_back(rid);
                         None
                     } else {

@@ -94,6 +94,10 @@ pub struct EngineLoad {
     pub kv_used: usize,
     /// KV reservation budget (admission is rejected above this).
     pub kv_budget: usize,
+    /// The KV gate currently refuses this engine's queue head: a free
+    /// lane does NOT imply the local queue drains on its own, so a
+    /// stealing policy must treat the engine as saturated.
+    pub kv_blocked: bool,
 }
 
 /// One active lane of one engine, as shown to a stealing policy when it
@@ -221,6 +225,7 @@ pub trait ScheduleBackend {
             lanes: v.lanes,
             kv_used: 0,
             kv_budget: usize::MAX,
+            kv_blocked: false,
         }]
     }
     /// Active lanes of one engine (steal-victim selection).  Backends
@@ -394,11 +399,13 @@ pub const ASYNC_SYNC_EVERY: usize = 4;
 /// Knobs for the [`WorkStealing`] wrapper.
 #[derive(Debug, Clone, Copy)]
 pub struct StealConfig {
-    /// Queue-steal trigger: a peer's local queue must be at least this
+    /// Queue-steal trigger: a saturated peer's (all lanes busy, or KV
+    /// budget refusing its queue head) local queue must be at least this
     /// deep while the destination has an empty queue and a free lane.
     pub queue_depth: usize,
-    /// Lane-steal trigger: the victim must run at least this many more
-    /// lanes than the destination (2+ prevents single-lane ping-pong).
+    /// Lane-steal trigger: the victim must run at least this many lanes
+    /// while the destination is FULLY idle (2+ prevents single-lane
+    /// ping-pong).
     pub lane_gap: usize,
 }
 
@@ -410,12 +417,16 @@ impl Default for StealConfig {
 
 /// Wrapper policy adding Seer-style cross-engine work stealing to ANY
 /// [`SchedulePolicy`]: when an engine idles (free lane, empty local queue,
-/// nothing central to pull) while a peer still has local backlog or a
-/// clear active-lane surplus, it emits one [`Decision::Steal`] per
-/// generation tick.  Victim lanes are chosen lowest-progress-first (the
-/// cheapest migration — least re-prefill) and never past the destination's
-/// KV budget; all other decisions pass straight through to the inner
-/// policy, so stealing composes with every `SchedulerKind`.
+/// nothing central to pull) while a SATURATED peer (all lanes busy, or
+/// KV-blocked) still has local backlog, its queued work migrates; a
+/// running lane migrates only to a FULLY idle engine.  (Both victim/destination conditions are strict on
+/// purpose: an engine with a free lane admits its own queue next tick, so
+/// looser triggers just ping-pong work and pay re-prefill for nothing.)
+/// At most one [`Decision::Steal`] fires per generation tick.  Victim
+/// lanes are chosen lowest-progress-first (the cheapest migration — least
+/// re-prefill) and never past the destination's KV budget; all other
+/// decisions pass straight through to the inner policy, so stealing
+/// composes with every `SchedulerKind`.
 pub struct WorkStealing {
     inner: Box<dyn SchedulePolicy>,
     cfg: StealConfig,
@@ -447,21 +458,35 @@ impl WorkStealing {
         if b.view().queued > local {
             return None;
         }
-        // destination: the idlest engine — a free lane and nothing queued
-        let to = (0..loads.len())
+        // 1) queue steal: the destination has a free lane and nothing
+        // queued; the victim is the deepest backlog that cannot drain on
+        // its own — lane-saturated, or KV-blocked (free lanes its budget
+        // refuses to fill).  An engine that WILL admit its own queue next
+        // tick is not a victim: stealing from it only ping-pongs the
+        // request back
+        if let Some(to) = (0..loads.len())
             .filter(|&i| loads[i].queued == 0 && loads[i].active < loads[i].lanes)
-            .max_by_key(|&i| (loads[i].lanes - loads[i].active, std::cmp::Reverse(i)))?;
-        // 1) queue steal: deepest local backlog elsewhere
-        if let Some(from) = (0..loads.len())
-            .filter(|&i| i != to && loads[i].queued >= self.cfg.queue_depth)
-            .max_by_key(|&i| (loads[i].queued, std::cmp::Reverse(i)))
+            .max_by_key(|&i| (loads[i].lanes - loads[i].active, std::cmp::Reverse(i)))
         {
-            return Some(Decision::Steal { from, to, lane: None });
+            if let Some(from) = (0..loads.len())
+                .filter(|&i| {
+                    i != to
+                        && loads[i].queued >= self.cfg.queue_depth
+                        && (loads[i].active >= loads[i].lanes || loads[i].kv_blocked)
+                })
+                .max_by_key(|&i| (loads[i].queued, std::cmp::Reverse(i)))
+            {
+                return Some(Decision::Steal { from, to, lane: None });
+            }
         }
-        // 2) lane steal: the most-loaded peer's cheapest lane that fits
-        // the destination's KV headroom
+        // 2) lane steal: only a FULLY idle engine (no running lanes, no
+        // queue) may pull a running lane — migration pays re-prefill, so
+        // it is reserved for the motivating long-tail straggler case.
+        // Pick the most-loaded peer's cheapest lane that fits the
+        // destination's KV headroom.
+        let to = (0..loads.len()).find(|&i| loads[i].queued == 0 && loads[i].active == 0)?;
         let from = (0..loads.len())
-            .filter(|&i| i != to && loads[i].active >= loads[to].active + self.cfg.lane_gap)
+            .filter(|&i| i != to && loads[i].active >= self.cfg.lane_gap)
             .max_by_key(|&i| (loads[i].active, std::cmp::Reverse(i)))?;
         let headroom = loads[to].kv_budget.saturating_sub(loads[to].kv_used);
         let lane = b

@@ -222,6 +222,7 @@ impl<'rt> EnginePool<'rt> {
                 lanes: e.lane_count(),
                 kv_used: e.kv_used(),
                 kv_budget: e.kv_budget(),
+                kv_blocked: e.kv_blocked(),
             })
             .collect()
     }
@@ -515,9 +516,14 @@ impl<'rt> EnginePool<'rt> {
                 let Some(req) = self.engines[from].steal_queued() else {
                     return false;
                 };
-                // queued work holds no KV yet; only a reservation that can
-                // NEVER fit the destination is a hard refusal
-                if kv_reservation(&req) > self.engines[to].kv_budget() {
+                // queued work holds no KV yet, but refuse both what the
+                // destination can never hold and what its current
+                // headroom cannot admit — landing a fat request on a
+                // KV-loaded engine would just mark IT blocked and
+                // ping-pong the request straight back
+                let res = kv_reservation(&req);
+                let dst = &self.engines[to];
+                if res > dst.kv_budget() || dst.kv_gate_refuses(dst.kv_used(), res) {
                     self.engines[from].submit([req]); // back where it was
                     return false;
                 }

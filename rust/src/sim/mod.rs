@@ -197,6 +197,14 @@ impl SimEngine {
         self.running.iter().map(|r| sim_reserve(&r.req)).sum()
     }
 
+    /// The KV admission gate shared by `admit`, `engine_loads`, and the
+    /// pool's `steal`: admitting `reserve` on top of `used` is refused
+    /// iff running lanes already hold KV and the sum overruns the budget
+    /// (the empty-engine escape admits any head request alone).
+    fn kv_gate_refuses(&self, used: usize, reserve: usize) -> bool {
+        used > 0 && used.saturating_add(reserve) > self.kv_budget
+    }
+
     fn admit(&mut self) {
         let mut used = self.kv_used();
         while self.running.len() < self.q {
@@ -204,7 +212,7 @@ impl SimEngine {
             // KV admission gate: an otherwise-empty engine always admits
             // its head request (progress guarantee — a single oversized
             // reservation must not deadlock the queue)
-            if used > 0 && used.saturating_add(sim_reserve(&req)) > self.kv_budget {
+            if self.kv_gate_refuses(used, sim_reserve(&req)) {
                 break;
             }
             let (req, progress) = self.queue.pop_front().unwrap();
@@ -419,7 +427,11 @@ impl SimPool {
         let (work, progressed) = match lane {
             None => {
                 let w = self.engines[from].queue.pop_back()?;
-                if sim_reserve(&w.0) > self.engines[to].kv_budget {
+                // refuse what the destination can never hold AND what its
+                // current headroom cannot admit (see the harness twin)
+                let res = sim_reserve(&w.0);
+                let dst = &self.engines[to];
+                if res > dst.kv_budget || dst.kv_gate_refuses(dst.kv_used(), res) {
                     self.engines[from].queue.push_back(w);
                     return None;
                 }
@@ -779,12 +791,20 @@ impl ScheduleBackend for SimBackend {
         self.pool
             .engines
             .iter()
-            .map(|e| EngineLoad {
-                queued: e.queue.len(),
-                active: e.running.len(),
-                lanes: e.q,
-                kv_used: e.kv_used(),
-                kv_budget: e.kv_budget,
+            .map(|e| {
+                let used = e.kv_used();
+                let blocked = e
+                    .queue
+                    .front()
+                    .is_some_and(|(req, _)| e.kv_gate_refuses(used, sim_reserve(req)));
+                EngineLoad {
+                    queued: e.queue.len(),
+                    active: e.running.len(),
+                    lanes: e.q,
+                    kv_used: used,
+                    kv_budget: e.kv_budget,
+                    kv_blocked: blocked,
+                }
             })
             .collect()
     }

@@ -414,6 +414,34 @@ fn golden_steal_queue_migration_pinned() {
     assert_eq!(flat.ticks, 18);
 }
 
+/// A KV-choked engine is a legitimate queue-steal victim even with a free
+/// lane: 2 engines x 2 lanes, budget 14 (reserves 13/5/9), static
+/// striping.  Engine 0 runs rid 0 (reserve 13) with rid 2 stuck behind
+/// the KV gate despite the free lane; engine 1 drains rid 1 after one
+/// tick and sits idle.  `EngineLoad::kv_blocked` marks e0 saturated, so
+/// the wrapper migrates rid 2 to e1 and the run takes 9 ticks instead of
+/// the 14 needed when rid 2 must wait for rid 0's reservation.
+#[test]
+fn golden_steal_rescues_kv_blocked_queue() {
+    let params = PolicyParams { refill_prompts: 3, entries_per_prompt: 1, update_batch: 3 };
+    let run = |steal: bool| {
+        let mut policy = make_policy_opts(SchedulerKind::Baseline, params, steal);
+        let mut b = TokenBackend::new(&[9, 1, 5], 2, 2, HarnessDispatch::Striped, 14);
+        drive(policy.as_mut(), &mut b).unwrap();
+        b
+    };
+    let stealing = run(true);
+    assert_eq!(stealing.steal_log, vec![(0, 1, 2, 0)]);
+    assert_eq!(stealing.consumed, vec![1, 2, 0]);
+    assert_eq!(stealing.migrated_tokens, 0, "rid 2 was still queued");
+    assert_eq!(stealing.updates, 1);
+    assert_eq!(stealing.ticks, 9);
+    let flat = run(false);
+    assert!(flat.steal_log.is_empty());
+    assert_eq!(flat.consumed, vec![1, 0, 2], "rid 2 serialized behind rid 0's KV");
+    assert_eq!(flat.ticks, 14);
+}
+
 /// Every wrapped kind pins identical consumed-rid AND steal-event
 /// sequences across runs on the deterministic backend (no hidden
 /// nondeterminism in the stealing path), and conserves the workload —
