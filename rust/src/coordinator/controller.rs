@@ -24,10 +24,11 @@ use crate::coordinator::trainer::{Trainer, UpdateLog};
 use crate::data::{DataLoader, Dataset};
 use crate::metrics::{bubble_fraction, PhaseClock};
 use crate::rl::advantage::AdvantageKind;
+use crate::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE};
 use crate::rollout::{EngineConfig, Rollout};
 use crate::runtime::{ParamState, Runtime};
 use crate::sched::policy::{
-    drive, make_policy_opts, EngineLoad, HarvestAction, HarvestItem, LaneView,
+    drive, make_policy_full, EngineLoad, HarvestAction, HarvestItem, LaneView,
     PolicyParams, SchedView, ScheduleBackend,
 };
 use crate::sched::{DispatchPolicy, EnginePool, PoolConfig, PredictorKind};
@@ -124,9 +125,14 @@ pub struct LoopConfig {
     /// `WorkStealing` policy composer (idle engines pull local backlog or
     /// whole lanes from loaded peers, KV budget permitting).
     pub steal: bool,
-    /// Per-engine KV budget in reservation tokens (prompt + generation
-    /// cap per admitted lane); `usize::MAX` disables the memory model.
+    /// Per-engine KV budget in tokens; `usize::MAX` disables the model.
+    /// Reserve mode charges prompt + generation cap per admitted lane;
+    /// paged mode charges the actual context in `kv_page` pages.
     pub kv_budget: usize,
+    /// Reserve-the-cap vs paged KV accounting (`--kv-mode`).
+    pub kv_mode: KvMode,
+    /// Page granularity for paged accounting in tokens (`--kv-page`).
+    pub kv_page: usize,
 }
 
 impl Default for LoopConfig {
@@ -151,6 +157,8 @@ impl Default for LoopConfig {
             dispatch: DispatchPolicy::LeastLoaded,
             steal: false,
             kv_budget: usize::MAX,
+            kv_mode: KvMode::Reserve,
+            kv_page: DEFAULT_KV_PAGE,
         }
     }
 }
@@ -228,7 +236,11 @@ impl<'rt> Controller<'rt> {
             temperature: self.cfg.temperature,
             greedy,
             seed: self.cfg.seed,
-            kv_budget: self.cfg.kv_budget,
+            kv: KvConfig {
+                mode: self.cfg.kv_mode,
+                budget: self.cfg.kv_budget,
+                page: self.cfg.kv_page,
+            },
         }
     }
 
@@ -280,13 +292,15 @@ impl<'rt> Controller<'rt> {
         if self.cfg.verbose && pool.score.count() > 0 {
             eprintln!(
                 "[pool] predictor {}: {} scored, MAE {:.1} tok, tau {:.3}; \
-                 {} preempted, {} stolen",
+                 {} preempted, {} stolen, {} throttled, {} kv-shed",
                 self.cfg.predictor.name(),
                 pool.score.count(),
                 pool.score.mae(),
                 pool.score.kendall_tau(),
                 pool.preempted(),
-                pool.stolen()
+                pool.stolen(),
+                pool.throttled(),
+                pool.kv_sheds()
             );
         }
     }
@@ -357,7 +371,8 @@ impl<'rt> Controller<'rt> {
             entries_per_prompt: self.cfg.samples_per_prompt.max(1),
             update_batch: self.cfg.update_batch.max(1),
         };
-        let mut policy = make_policy_opts(self.cfg.scheduler, params, self.cfg.steal);
+        let mut policy = make_policy_full(self.cfg.scheduler, params, self.cfg.steal,
+                                          self.cfg.kv_mode == KvMode::Paged);
         let preempt = self.cfg.scheduler.resumes_partials();
         let pool = self.make_pool(false, preempt);
         let trainer = Trainer::new(self.rt, self.cfg.adv, self.cfg.lr);
@@ -493,6 +508,10 @@ impl ScheduleBackend for LiveBackend<'_, '_> {
 
     fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Result<bool> {
         Ok(self.pool.steal_to(from, to, lane, self.state.version))
+    }
+
+    fn throttle(&mut self, engine: usize) -> Result<bool> {
+        Ok(self.pool.throttle(engine, self.state.version))
     }
 
     fn step(&mut self) -> Result<usize> {

@@ -1,0 +1,240 @@
+//! Paged KV accounting — the memory model shared by the live engine, the
+//! discrete-event simulator, and the deterministic test harness.
+//!
+//! The PR-3 reservation model charged every admitted lane its worst case
+//! (`prompt + generation cap`) up front, which makes "budget never
+//! exceeded" trivially hard — but it is exactly the over-conservative
+//! admission RollPacker identifies as a utilization killer: most responses
+//! finish far below the cap, so engines report "full" while the bulk of
+//! their budget is unused.  Paged mode instead charges each lane its
+//! *actual* context (prompt + tokens generated so far), rounded up to a
+//! configurable page size — the vLLM-style block granularity — so usage
+//! grows as lanes decode and is released the moment a lane leaves
+//! (harvest, clip, preempt, steal, finish).
+//!
+//! Admission in paged mode is gated on a *predictor-informed estimate* of
+//! the lane's final context (predicted total length, clamped to
+//! `[progress + 1, cap]`, falling back to the cap when no token-count
+//! prediction exists).  Because an estimate can undershoot, paged mode can
+//! over-commit; the matching backpressure is:
+//!
+//!   * a **forced shed** inside each engine's decode step — if actual
+//!     usage crosses the budget, the smallest-context lane is evicted back
+//!     to the queue (progress kept, resume pays one re-prefill) until the
+//!     budget holds again (or one lane remains, mirroring the
+//!     empty-engine admission escape), keeping "actual usage never exceeds
+//!     the budget" a hard invariant even under over-commit;
+//!   * a **`KvPressure` signal** in `EngineLoad` plus the
+//!     `Decision::Throttle` path (`sched::policy::KvGovernor`) that sheds
+//!     proactively at the policy level before the forced path triggers;
+//!   * **budget-aware dispatch** — the pool routes new work around
+//!     KV-tight engines instead of queueing it behind a gate that will
+//!     refuse it (`EnginePool::dispatch`, `SimPool::refill`), and the
+//!     `WorkStealing` wrapper prefers KV-rich thieves.
+//!
+//! Reserve mode remains available (`--kv-mode reserve`) and is the
+//! default, so every pre-paging decision golden stays byte-identical.
+
+/// Default page size in tokens (`--kv-page`).
+pub const DEFAULT_KV_PAGE: usize = 64;
+
+/// Parse-time ceiling on `--kv-page`: a page larger than this exceeds any
+/// plausible context and indicates a mistyped flag, not a configuration.
+pub const MAX_KV_PAGE: usize = 1 << 20;
+
+/// How admitted lanes are charged against the KV budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvMode {
+    /// Charge `prompt + generation cap` at admission (worst case — the
+    /// PR-3 model).  Cannot over-commit; wastes headroom on short
+    /// responses.
+    Reserve,
+    /// Charge `prompt + tokens generated so far`, rounded up to the page
+    /// size; admit on a predicted-length estimate.  Can over-commit;
+    /// backpressure (shed/throttle/routing) keeps the budget hard.
+    Paged,
+}
+
+impl KvMode {
+    pub const ALL: [KvMode; 2] = [KvMode::Reserve, KvMode::Paged];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "reserve" | "reserved" => Self::Reserve,
+            "paged" | "page" => Self::Paged,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Reserve => "reserve",
+            Self::Paged => "paged",
+        }
+    }
+}
+
+/// The per-engine KV memory model: mode + budget + page granularity.
+/// `budget == usize::MAX` disables accounting entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    pub mode: KvMode,
+    /// Budget in tokens of KV capacity per engine.
+    pub budget: usize,
+    /// Allocation granularity in tokens (paged mode only).
+    pub page: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig { mode: KvMode::Reserve, budget: usize::MAX, page: DEFAULT_KV_PAGE }
+    }
+}
+
+impl KvConfig {
+    pub fn unlimited(&self) -> bool {
+        self.budget == usize::MAX
+    }
+
+    /// Round a context length up to whole pages.
+    pub fn page_ceil(&self, tokens: usize) -> usize {
+        let page = self.page.max(1);
+        tokens.div_ceil(page).saturating_mul(page)
+    }
+
+    /// What an occupied lane charges against the budget right now.
+    /// `held` is the response context the cache actually holds (resumed +
+    /// emitted tokens); `cap` is the lane's total generation cap.
+    pub fn lane_charge(&self, prompt: usize, held: usize, cap: usize) -> usize {
+        match self.mode {
+            KvMode::Reserve => prompt + cap,
+            KvMode::Paged => self.page_ceil(prompt + held),
+        }
+    }
+
+    /// What the admission gate charges a *candidate* request: the
+    /// worst case in reserve mode; in paged mode a predictor-informed
+    /// estimate of the final context — predicted total response length
+    /// clamped to `[progress + 1, cap]`, falling back to the cap when no
+    /// token-count prediction is available (rank-only predictors emit
+    /// bucket indices, which must never be mixed with token quantities).
+    pub fn admit_estimate(&self, prompt: usize, progress: usize, cap: usize,
+                          predicted: Option<usize>) -> usize {
+        match self.mode {
+            KvMode::Reserve => prompt + cap,
+            KvMode::Paged => {
+                let floor = progress.saturating_add(1).min(cap.max(1));
+                let total = predicted.unwrap_or(cap).clamp(floor, cap.max(1));
+                self.page_ceil(prompt + total)
+            }
+        }
+    }
+
+    /// The admission gate shared by every backend: admitting `estimate`
+    /// on top of `used` is refused iff occupied lanes already hold KV and
+    /// the sum overruns the budget (the empty-engine escape admits any
+    /// head request alone, so one oversized context cannot deadlock).
+    pub fn gate_refuses(&self, used: usize, estimate: usize) -> bool {
+        used > 0 && used.saturating_add(estimate) > self.budget
+    }
+
+    /// Budget headroom for dispatch/steal routing.  Unlimited budgets
+    /// report `usize::MAX` — NOT `MAX - used` — so engines without
+    /// accounting compare equal and routing stays byte-identical to the
+    /// pre-paging behavior.
+    pub fn headroom(&self, used: usize) -> usize {
+        if self.unlimited() {
+            usize::MAX
+        } else {
+            self.budget.saturating_sub(used)
+        }
+    }
+
+    /// Projected-overflow signal: in paged mode, every active lane can
+    /// cross a page boundary within the next decode chunk, so usage may
+    /// grow by one page per lane — `KvPressure` fires when that projection
+    /// overruns the budget.  Reserve mode cannot over-commit and never
+    /// signals pressure.
+    pub fn pressure(&self, used: usize, active: usize) -> bool {
+        self.mode == KvMode::Paged
+            && !self.unlimited()
+            && active > 0
+            && used.saturating_add(active.saturating_mul(self.page.max(1))) > self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paged(budget: usize, page: usize) -> KvConfig {
+        KvConfig { mode: KvMode::Paged, budget, page }
+    }
+
+    #[test]
+    fn page_ceil_rounds_up_to_whole_pages() {
+        let k = paged(1000, 16);
+        assert_eq!(k.page_ceil(0), 0);
+        assert_eq!(k.page_ceil(1), 16);
+        assert_eq!(k.page_ceil(16), 16);
+        assert_eq!(k.page_ceil(17), 32);
+    }
+
+    #[test]
+    fn reserve_charges_worst_case_paged_charges_context() {
+        let r = KvConfig { mode: KvMode::Reserve, budget: 1000, page: 16 };
+        assert_eq!(r.lane_charge(64, 3, 512), 64 + 512);
+        let p = paged(1000, 16);
+        // 64 + 3 = 67 -> 5 pages of 16
+        assert_eq!(p.lane_charge(64, 3, 512), 80);
+    }
+
+    #[test]
+    fn admit_estimate_uses_prediction_clamped_to_cap_and_progress() {
+        let p = paged(10_000, 1);
+        // prediction drives the estimate
+        assert_eq!(p.admit_estimate(64, 0, 512, Some(100)), 164);
+        // no prediction: fall back to the cap (reserve-equivalent)
+        assert_eq!(p.admit_estimate(64, 0, 512, None), 64 + 512);
+        // prediction below observed progress is floored at progress + 1
+        assert_eq!(p.admit_estimate(64, 200, 512, Some(100)), 64 + 201);
+        // prediction above the cap is clamped to it
+        assert_eq!(p.admit_estimate(64, 0, 512, Some(9_999)), 64 + 512);
+    }
+
+    #[test]
+    fn gate_always_admits_into_an_empty_engine() {
+        let p = paged(100, 1);
+        assert!(!p.gate_refuses(0, 5_000), "empty-engine escape");
+        assert!(p.gate_refuses(1, 5_000));
+        assert!(!p.gate_refuses(50, 50));
+        assert!(p.gate_refuses(50, 51));
+    }
+
+    #[test]
+    fn headroom_is_max_when_unlimited() {
+        let p = paged(usize::MAX, 16);
+        assert_eq!(p.headroom(12_345), usize::MAX);
+        let q = paged(100, 16);
+        assert_eq!(q.headroom(40), 60);
+        assert_eq!(q.headroom(200), 0);
+    }
+
+    #[test]
+    fn pressure_projects_one_page_per_active_lane() {
+        let p = paged(100, 10);
+        assert!(!p.pressure(60, 3), "60 + 30 = 90 <= 100");
+        assert!(p.pressure(75, 3), "75 + 30 > 100");
+        assert!(!p.pressure(0, 0), "idle engine has no pressure");
+        let r = KvConfig { mode: KvMode::Reserve, budget: 100, page: 10 };
+        assert!(!r.pressure(99, 8), "reserve mode cannot over-commit");
+    }
+
+    #[test]
+    fn mode_parse_name_round_trip() {
+        for m in KvMode::ALL {
+            assert_eq!(KvMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(KvMode::parse("nope"), None);
+    }
+}

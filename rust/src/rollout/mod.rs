@@ -11,11 +11,14 @@
 //! scheduling order.  This is what lets the Fig.5 harness pin generation
 //! lengths across scheduling strategies like the paper does.
 
+pub mod kv;
+
 use crate::metrics::Timeline;
 use crate::runtime::{ParamState, Runtime};
 use crate::tokenizer::{EOS, PAD};
 use crate::util::rng::Pcg64;
 use anyhow::Result;
+use kv::KvConfig;
 use std::collections::VecDeque;
 
 /// A rollout request: a prompt plus (for partial-mode resumes) the tokens
@@ -34,6 +37,11 @@ pub struct Request {
     pub resumes: u32,
     /// Per-request cap on generated tokens (keeps prompt+response <= T).
     pub max_new: usize,
+    /// Predicted TOTAL response length, stamped by the pool's
+    /// `LengthPredictor` at dispatch (None = unknown, or the predictor is
+    /// rank-only).  Paged KV admission estimates from it, falling back to
+    /// `max_new`.
+    pub predicted_len: Option<usize>,
 }
 
 impl Request {
@@ -49,6 +57,7 @@ impl Request {
             born_version: None,
             resumes: 0,
             max_new,
+            predicted_len: None,
         }
     }
 
@@ -95,11 +104,10 @@ impl Rollout {
     }
 }
 
-/// KV reservation one admitted request holds: prompt plus its full
-/// generation cap, i.e. the largest context the lane's cache can grow to.
-/// Reserving the cap up front (rather than tracking the growing context)
-/// is what makes "budget never exceeded" a hard invariant: decode can
-/// never outgrow what admission already accounted for.
+/// Worst-case KV reservation of a request: prompt plus its full generation
+/// cap, i.e. the largest context the lane's cache can grow to.  This is
+/// the reserve-mode lane charge; paged mode tracks the growing context
+/// instead (see [`kv::KvConfig`]).
 pub fn kv_reservation(req: &Request) -> usize {
     req.prompt.len() + req.max_new
 }
@@ -115,7 +123,9 @@ pub struct LaneProgress {
     pub rid: u64,
     pub prompt_id: u64,
     pub prompt_len: usize,
-    /// KV reservation the lane holds (see [`kv_reservation`]).
+    /// KV this lane would need to be admitted elsewhere (the steal-fit
+    /// check): the full reservation in reserve mode, the paged admission
+    /// estimate otherwise.
     pub reserve: usize,
 }
 
@@ -136,16 +146,17 @@ pub struct EngineConfig {
     /// Greedy decoding (eval): ignore temperature, take argmax.
     pub greedy: bool,
     pub seed: u64,
-    /// KV memory budget in reservation tokens ([`kv_reservation`] per
-    /// admitted lane).  Admission stops once the budget is reached, except
-    /// that an otherwise-empty engine always admits one request (progress
-    /// guarantee).  `usize::MAX` disables the model.
-    pub kv_budget: usize,
+    /// KV memory model: reserve-the-cap or paged accounting, budget in
+    /// tokens, page granularity.  Admission stops once the budget is
+    /// reached, except that an otherwise-empty engine always admits one
+    /// request (progress guarantee).  `budget == usize::MAX` disables the
+    /// model.
+    pub kv: KvConfig,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { temperature: 1.0, greedy: false, seed: 0, kv_budget: usize::MAX }
+        Self { temperature: 1.0, greedy: false, seed: 0, kv: KvConfig::default() }
     }
 }
 
@@ -160,6 +171,9 @@ pub struct Engine<'rt> {
     clock: f64,
     pub timeline: Timeline,
     kv: Option<xla::Literal>,
+    /// Lanes force-evicted by the paged-KV backpressure path (progress
+    /// kept, requeued locally).
+    sheds: u64,
 }
 
 impl<'rt> Engine<'rt> {
@@ -174,6 +188,7 @@ impl<'rt> Engine<'rt> {
             clock: 0.0,
             timeline: Timeline::new(),
             kv: None,
+            sheds: 0,
         }
     }
 
@@ -196,35 +211,89 @@ impl<'rt> Engine<'rt> {
         self.running() + self.queued()
     }
 
-    /// KV reservation tokens held by occupied lanes (queued requests hold
-    /// no KV until admitted).
+    /// KV tokens actually charged by occupied lanes (queued requests hold
+    /// no KV until admitted): worst-case reservations in reserve mode, the
+    /// paged context held so far otherwise.
     pub fn kv_used(&self) -> usize {
         self.lanes
             .iter()
             .filter_map(|l| l.as_ref())
-            .map(|l| kv_reservation(&l.request))
+            .map(|l| self.lane_charge(l))
             .sum()
     }
 
+    fn lane_charge(&self, l: &Lane) -> usize {
+        self.cfg.kv.lane_charge(
+            l.request.prompt.len(),
+            l.request.resumed.len() + l.emitted.len(),
+            l.request.max_new,
+        )
+    }
+
+    /// What the admission gate charges `req` as a candidate: the full
+    /// reservation in reserve mode, the predictor-informed paged estimate
+    /// otherwise (see [`KvConfig::admit_estimate`]).
+    pub fn request_estimate(&self, req: &Request) -> usize {
+        self.cfg.kv.admit_estimate(
+            req.prompt.len(),
+            req.resumed.len(),
+            req.max_new,
+            req.predicted_len,
+        )
+    }
+
     pub fn kv_budget(&self) -> usize {
-        self.cfg.kv_budget
+        self.cfg.kv.budget
+    }
+
+    pub fn kv_config(&self) -> KvConfig {
+        self.cfg.kv
+    }
+
+    /// Budget headroom over actual lane charges (`usize::MAX` when
+    /// accounting is off — see [`KvConfig::headroom`]).
+    pub fn kv_headroom(&self) -> usize {
+        self.cfg.kv.headroom(self.kv_used())
+    }
+
+    /// Actual charges plus the admission estimates of everything already
+    /// placed in the local queue — what budget-aware dispatch must assume
+    /// this engine is committed to before routing more work here.
+    pub fn kv_committed(&self) -> usize {
+        self.kv_used()
+            + self
+                .queue
+                .iter()
+                .map(|q| self.request_estimate(q))
+                .sum::<usize>()
+    }
+
+    /// Paged over-commit warning: projected usage (one more page per
+    /// active lane) would overrun the budget (see [`KvConfig::pressure`]).
+    pub fn kv_pressure(&self) -> bool {
+        self.cfg.kv.pressure(self.kv_used(), self.running())
+    }
+
+    /// Lanes force-evicted by paged backpressure so far.
+    pub fn kv_sheds(&self) -> u64 {
+        self.sheds
     }
 
     /// The KV admission gate shared by `admit`, `kv_blocked`, and the
-    /// pool's `steal_to`: admitting `reserve` on top of `used` is refused
+    /// pool's `steal_to`: admitting `estimate` on top of `used` is refused
     /// iff occupied lanes already hold KV and the sum overruns the budget
     /// (the empty-engine escape admits any head request alone).
-    pub fn kv_gate_refuses(&self, used: usize, reserve: usize) -> bool {
-        used > 0 && used.saturating_add(reserve) > self.cfg.kv_budget
+    pub fn kv_gate_refuses(&self, used: usize, estimate: usize) -> bool {
+        self.cfg.kv.gate_refuses(used, estimate)
     }
 
     /// The KV gate currently refuses the queue head: a free lane will NOT
-    /// drain this queue until a running lane releases its reservation — a
+    /// drain this queue until a running lane releases its charge — a
     /// stealing policy should treat this as saturation.
     pub fn kv_blocked(&self) -> bool {
         self.queue
             .front()
-            .is_some_and(|front| self.kv_gate_refuses(self.kv_used(), kv_reservation(front)))
+            .is_some_and(|front| self.kv_gate_refuses(self.kv_used(), self.request_estimate(front)))
     }
 
     /// Remove the newest request from the local queue (a work-stealing
@@ -275,12 +344,15 @@ impl<'rt> Engine<'rt> {
             let Some(front) = self.queue.front() else { break };
             // KV admission gate: stop once the budget is reached, but an
             // otherwise-empty engine always admits its head request so a
-            // single oversized reservation cannot deadlock the queue
-            let reserve = kv_reservation(front);
-            if self.kv_gate_refuses(kv_used, reserve) {
+            // single oversized context cannot deadlock the queue.  Within
+            // this pass the gate accumulates admission ESTIMATES (paged
+            // mode would otherwise co-admit a whole queue of tiny
+            // prompt-only charges that all grow toward the cap at once).
+            let estimate = self.request_estimate(front);
+            if self.kv_gate_refuses(kv_used, estimate) {
                 break;
             }
-            kv_used += reserve;
+            kv_used += estimate;
             let req = self.queue.pop_front().unwrap();
             let ctx_len = req.context_len().min(sh.prefill_seq);
             for i in 0..ctx_len {
@@ -427,8 +499,43 @@ impl<'rt> Engine<'rt> {
             let mut lane = self.lanes[i].take().unwrap();
             self.finish_lane_inner(&mut lane, state.version, true);
         }
+        self.shed_over_budget();
         self.record_occupancy();
         Ok(tokens_out)
+    }
+
+    /// Paged-mode forced backpressure: if actual usage outgrew the budget
+    /// (admission estimates undershot), evict the smallest-context lane
+    /// back to the local queue — progress and log-probs kept, resume pays
+    /// one re-prefill — until the budget holds again or one lane remains
+    /// (the running twin of the empty-engine admission escape).  This is
+    /// what keeps "usage never exceeds the budget" a hard invariant even
+    /// though paged admission may over-commit; the policy-level
+    /// `Decision::Throttle` path sheds proactively so this rarely fires.
+    fn shed_over_budget(&mut self) {
+        if self.cfg.kv.mode != kv::KvMode::Paged || self.cfg.kv.unlimited() {
+            return;
+        }
+        while self.running() > 1 && self.kv_used() > self.cfg.kv.budget {
+            let victim = self
+                .lanes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, slot)| slot.as_ref().map(|l| (self.lane_charge(l), i)))
+                .min()
+                .map(|(_, i)| i);
+            let Some(i) = victim else { break };
+            let l = self.lanes[i].take().unwrap();
+            let mut req = l.request;
+            req.resumed.extend(&l.emitted);
+            req.resumed_logp.extend(&l.logps);
+            req.resumes += 1;
+            // the back of the queue: fresh short work admits first, and the
+            // evicted partial becomes the preferred steal victim
+            // (`steal_queued` pops the back) for a KV-rich peer
+            self.queue.push_back(req);
+            self.sheds += 1;
+        }
     }
 
     /// Terminate every in-flight request (queue included), returning partial
@@ -458,14 +565,22 @@ impl<'rt> Engine<'rt> {
             .iter()
             .enumerate()
             .filter_map(|(i, slot)| {
-                slot.as_ref().filter(|l| l.active).map(|l| LaneProgress {
-                    lane: i,
-                    emitted: l.emitted.len(),
-                    total: l.request.resumed.len() + l.emitted.len(),
-                    rid: l.request.rid,
-                    prompt_id: l.request.prompt_id,
-                    prompt_len: l.request.prompt.len(),
-                    reserve: kv_reservation(&l.request),
+                slot.as_ref().filter(|l| l.active).map(|l| {
+                    let total = l.request.resumed.len() + l.emitted.len();
+                    LaneProgress {
+                        lane: i,
+                        emitted: l.emitted.len(),
+                        total,
+                        rid: l.request.rid,
+                        prompt_id: l.request.prompt_id,
+                        prompt_len: l.request.prompt.len(),
+                        reserve: self.cfg.kv.admit_estimate(
+                            l.request.prompt.len(),
+                            total,
+                            l.request.max_new,
+                            l.request.predicted_len,
+                        ),
+                    }
                 })
             })
             .collect()

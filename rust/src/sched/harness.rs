@@ -4,21 +4,25 @@
 //! (`tests/policy_fuzz.rs`), the stealing goldens (`tests/policy_golden.rs`)
 //! and the per-verdict pins (`tests/sched_props.rs`) all drive: N engines
 //! of fixed lanes, one token per lane per tick, FIFO admission, the same
-//! KV reservation model as the live engine and the simulator (a lane
-//! reserves prompt + generation cap; admission stops at the budget; an
-//! otherwise-empty engine always admits one request), plus full support
-//! for targeted admission and cross-engine stealing.
+//! KV model as the live engine and the simulator (reserve-the-cap or
+//! paged accounting per [`KvConfig`]; admission stops at the budget; an
+//! otherwise-empty engine always admits one request; paged over-commit is
+//! shed back under the budget inside the step), plus full support for
+//! targeted admission, cross-engine stealing, and `Throttle` sheds.
 //!
 //! Unlike the mock in `policy.rs`'s unit tests it checks its own
 //! invariants after EVERY backend call — conservation (each request lives
-//! in exactly one place, across any number of steals), KV budget, progress
-//! bounds — so a driver run that completes is itself the proof.
+//! in exactly one place, across any number of steals), the KV budget
+//! ceiling, a double-entry page ledger (every charge released exactly
+//! once), progress bounds — so a driver run that completes is itself the
+//! proof.
 
+use crate::rollout::kv::{KvConfig, KvMode};
 use crate::sched::policy::{
     EngineLoad, HarvestAction, HarvestItem, LaneView, SchedView, ScheduleBackend,
 };
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Fixed modeled prompt length (KV reservation = this + the response cap).
 pub const HARNESS_PROMPT: usize = 4;
@@ -61,7 +65,14 @@ pub struct TokenBackend {
     engines: Vec<HEngine>,
     central: VecDeque<u64>,
     dispatch: HarnessDispatch,
-    kv_budget: usize,
+    kv: KvConfig,
+    /// Double-entry page ledger: rid -> (engine, charge) for every lane
+    /// currently holding KV.  Every mutation of a `running` vector must
+    /// mirror into this map; `check_invariants` proves the mirrored
+    /// charges equal the derived usage and that every charge is released
+    /// exactly once (an insert asserts absence, a release asserts
+    /// presence).
+    charged: BTreeMap<u64, (usize, usize)>,
     rr: usize,
     next_load: usize,
     ready_order: Vec<u64>,
@@ -70,6 +81,13 @@ pub struct TokenBackend {
     pub ticks: u64,
     pub updates: usize,
     pub harvests: usize,
+    /// Highest concurrent running-lane count ever observed (post-fill) —
+    /// the admitted-lane headline paged KV accounting is meant to raise.
+    pub peak_running: usize,
+    /// Lanes force-evicted by the paged in-step backpressure path.
+    pub kv_sheds: u64,
+    /// Lanes shed by executed `Decision::Throttle`s.
+    pub throttled: u64,
     /// Trainer-consumed rids, in consumption order.
     pub consumed: Vec<u64>,
     pub clipped: Vec<u64>,
@@ -79,10 +97,23 @@ pub struct TokenBackend {
 }
 
 impl TokenBackend {
+    /// Reserve-mode constructor (the pre-paging surface — every PR-3
+    /// golden and fuzz call site builds through here unchanged).
     pub fn new(lens: &[usize], engines: usize, lanes_each: usize,
                dispatch: HarnessDispatch, kv_budget: usize) -> Self {
+        Self::new_kv(lens, engines, lanes_each, dispatch, KvConfig {
+            mode: KvMode::Reserve,
+            budget: kv_budget,
+            ..KvConfig::default()
+        })
+    }
+
+    /// Full constructor with an explicit KV model (mode + budget + page).
+    pub fn new_kv(lens: &[usize], engines: usize, lanes_each: usize,
+                  dispatch: HarnessDispatch, kv: KvConfig) -> Self {
         assert!(engines >= 1 && lanes_each >= 1);
         assert!(lens.iter().all(|&l| l >= 1), "every request needs >= 1 token");
+        assert!(kv.page >= 1, "kv page must be >= 1");
         let n = lens.len();
         TokenBackend {
             lens: lens.to_vec(),
@@ -93,13 +124,17 @@ impl TokenBackend {
                 .collect(),
             central: VecDeque::new(),
             dispatch,
-            kv_budget,
+            kv,
+            charged: BTreeMap::new(),
             rr: 0,
             next_load: 0,
             ready_order: Vec::new(),
             ticks: 0,
             updates: 0,
             harvests: 0,
+            peak_running: 0,
+            kv_sheds: 0,
+            throttled: 0,
             consumed: Vec::new(),
             clipped: Vec::new(),
             dropped: Vec::new(),
@@ -108,24 +143,44 @@ impl TokenBackend {
         }
     }
 
-    fn reserve(&self, rid: u64) -> usize {
-        HARNESS_PROMPT + self.lens[rid as usize]
+    /// What a lane holding `rid` charges right now (worst case in reserve
+    /// mode, paged actual context otherwise).
+    fn charge(&self, rid: u64) -> usize {
+        let r = rid as usize;
+        self.kv.lane_charge(HARNESS_PROMPT, self.progress[r], self.lens[r])
     }
 
-    /// The KV admission gate shared by `fill`, `engine_loads`, and
-    /// `steal`: admitting `reserve` on top of `used` is refused iff other
-    /// lanes already hold KV and the sum overruns the budget (the
-    /// empty-engine escape admits any head request alone).
-    fn kv_gate_refuses(&self, used: usize, reserve: usize) -> bool {
-        used > 0 && used.saturating_add(reserve) > self.kv_budget
+    /// What the admission gate charges `rid` as a candidate.  The harness
+    /// has no predictor, so the paged estimate falls back to the true
+    /// length (== the cap — the harness twin of an exact oracle).
+    fn estimate(&self, rid: u64) -> usize {
+        let r = rid as usize;
+        self.kv.admit_estimate(HARNESS_PROMPT, self.progress[r], self.lens[r], None)
+    }
+
+    fn kv_gate_refuses(&self, used: usize, estimate: usize) -> bool {
+        self.kv.gate_refuses(used, estimate)
     }
 
     fn kv_used(&self, engine: usize) -> usize {
         self.engines[engine]
             .running
             .iter()
-            .map(|&rid| self.reserve(rid))
+            .map(|&rid| self.charge(rid))
             .sum()
+    }
+
+    /// Ledger: a lane starts holding KV (asserts it held none).
+    fn charge_lane(&mut self, engine: usize, rid: u64) {
+        let charge = self.charge(rid);
+        let prev = self.charged.insert(rid, (engine, charge));
+        assert!(prev.is_none(), "rid {rid} charged twice: {prev:?}");
+    }
+
+    /// Ledger: a lane releases its KV (asserts it held some).
+    fn release_lane(&mut self, rid: u64) {
+        let prev = self.charged.remove(&rid);
+        assert!(prev.is_some(), "rid {rid} released KV it never charged");
     }
 
     fn count(&self, s: St) -> usize {
@@ -134,7 +189,10 @@ impl TokenBackend {
 
     /// Admit queued work into engine `i`'s free lanes: local queue first,
     /// then (central mode) the shared queue, both behind the KV gate with
-    /// the empty-engine escape.
+    /// the empty-engine escape.  The gate accumulates admission ESTIMATES
+    /// within the pass (actual charges may be much smaller in paged mode,
+    /// and co-admitting on them would over-commit a whole queue at once);
+    /// the ledger charges the actual per-mode lane charge.
     fn fill(&mut self, i: usize) {
         let mut used = self.kv_used(i);
         loop {
@@ -154,8 +212,8 @@ impl TokenBackend {
                     }
                 }
             };
-            let res = self.reserve(rid);
-            if self.kv_gate_refuses(used, res) {
+            let est = self.estimate(rid);
+            if self.kv_gate_refuses(used, est) {
                 break;
             }
             if local.is_some() {
@@ -163,8 +221,9 @@ impl TokenBackend {
             } else {
                 self.central.pop_front();
             }
-            used += res;
+            used += est;
             self.engines[i].running.push(rid);
+            self.charge_lane(i, rid);
         }
     }
 
@@ -201,12 +260,26 @@ impl TokenBackend {
         for (i, e) in self.engines.iter().enumerate() {
             let used = self.kv_used(i);
             // the empty-engine escape admits one oversized request alone;
-            // beyond that the budget is a hard ceiling
-            assert!(used <= self.kv_budget || e.running.len() == 1,
+            // beyond that the budget is a hard ceiling — in BOTH modes:
+            // paged over-commit must have been shed back under the budget
+            // before any transition completes
+            assert!(used <= self.kv.budget || e.running.len() == 1,
                     "engine {i} kv {used} over budget {} with {} lanes",
-                    self.kv_budget, e.running.len());
+                    self.kv.budget, e.running.len());
             assert!(e.running.len() <= e.lanes, "engine {i} over lanes");
+            // double-entry ledger: the mirrored charges of this engine's
+            // lanes must equal the derived usage, rid by rid
+            for &rid in &e.running {
+                let entry = self.charged.get(&rid);
+                assert_eq!(entry, Some(&(i, self.charge(rid))),
+                           "rid {rid} ledger mismatch on engine {i}: {entry:?}");
+            }
         }
+        // ...and nothing outside a lane may hold a charge (release-exactly-
+        // once: queued, harvested, consumed work holds no KV)
+        let lanes_total: usize = self.engines.iter().map(|e| e.running.len()).sum();
+        assert_eq!(self.charged.len(), lanes_total,
+                   "{} charges for {lanes_total} running lanes", self.charged.len());
     }
 }
 
@@ -251,14 +324,15 @@ impl ScheduleBackend for TokenBackend {
                     .engines[i]
                     .queue
                     .front()
-                    .is_some_and(|&rid| self.kv_gate_refuses(used, self.reserve(rid)));
+                    .is_some_and(|&rid| self.kv_gate_refuses(used, self.estimate(rid)));
                 EngineLoad {
                     queued: self.engines[i].queue.len(),
                     active: self.engines[i].running.len(),
                     lanes: self.engines[i].lanes,
                     kv_used: used,
-                    kv_budget: self.kv_budget,
+                    kv_budget: self.kv.budget,
                     kv_blocked: blocked,
+                    kv_pressure: self.kv.pressure(used, self.engines[i].running.len()),
                 }
             })
             .collect()
@@ -273,7 +347,7 @@ impl ScheduleBackend for TokenBackend {
                 .map(|(lane, &rid)| LaneView {
                     lane,
                     progress: self.progress[rid as usize],
-                    reserve: self.reserve(rid),
+                    reserve: self.estimate(rid),
                 })
                 .collect(),
             None => Vec::new(),
@@ -316,6 +390,8 @@ impl ScheduleBackend for TokenBackend {
         for i in 0..self.engines.len() {
             self.fill(i);
         }
+        let admitted: usize = self.engines.iter().map(|e| e.running.len()).sum();
+        self.peak_running = self.peak_running.max(admitted);
         let mut finished = 0;
         for i in 0..self.engines.len() {
             let running = std::mem::take(&mut self.engines[i].running);
@@ -327,14 +403,48 @@ impl ScheduleBackend for TokenBackend {
                     self.state[r] = St::Ready;
                     self.ready_order.push(rid);
                     finished += 1;
+                    let prev = self.charged.remove(&rid);
+                    assert!(prev.is_some(), "finished rid {rid} held no charge");
                 } else {
+                    // paged charges grow with the context: refresh the
+                    // ledger to the post-token charge
+                    let charge = self.kv.lane_charge(HARNESS_PROMPT, self.progress[r],
+                                                     self.lens[r]);
+                    let prev = self.charged.insert(rid, (i, charge));
+                    assert!(prev.is_some(), "running rid {rid} held no charge");
                     still.push(rid);
                 }
             }
             self.engines[i].running = still;
+            self.shed_over_budget(i);
         }
         self.check_invariants();
         Ok(finished)
+    }
+
+    /// The harness twin of the live engine's forced paged backpressure:
+    /// evict smallest-context lanes back to the queue (progress kept)
+    /// until the budget holds or one lane remains.
+    fn shed_over_budget(&mut self, i: usize) {
+        if self.kv.mode != KvMode::Paged || self.kv.budget == usize::MAX {
+            return;
+        }
+        while self.engines[i].running.len() > 1 && self.kv_used(i) > self.kv.budget {
+            let pos = self.engines[i]
+                .running
+                .iter()
+                .enumerate()
+                .min_by_key(|(pos, &rid)| (self.charge(rid), *pos))
+                .map(|(pos, _)| pos)
+                .expect("running checked non-empty");
+            let rid = self.engines[i].running.remove(pos);
+            self.release_lane(rid);
+            match self.dispatch {
+                HarnessDispatch::Striped => self.engines[i].queue.push_back(rid),
+                HarnessDispatch::Central => self.central.push_back(rid),
+            }
+            self.kv_sheds += 1;
+        }
     }
 
     fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
@@ -344,6 +454,12 @@ impl ScheduleBackend for TokenBackend {
         for e in self.engines.iter_mut() {
             drained.extend(e.running.drain(..).map(|rid| (rid, 0, false)));
             drained.extend(e.queue.drain(..).map(|rid| (rid, 0, true)));
+        }
+        // every terminated lane releases its charge (exactly once)
+        for &(rid, _, was_queued) in &drained {
+            if !was_queued {
+                self.release_lane(rid);
+            }
         }
         drained.extend(self.central.drain(..).map(|rid| (rid, 0, true)));
         for d in drained.iter_mut() {
@@ -393,6 +509,7 @@ impl ScheduleBackend for TokenBackend {
     fn preempt(&mut self, engine: usize, lane: usize) -> Result<()> {
         if engine < self.engines.len() && lane < self.engines[engine].running.len() {
             let rid = self.engines[engine].running.remove(lane);
+            self.release_lane(rid);
             match self.dispatch {
                 HarnessDispatch::Striped => self.engines[engine].queue.push_back(rid),
                 HarnessDispatch::Central => self.central.push_back(rid),
@@ -400,6 +517,30 @@ impl ScheduleBackend for TokenBackend {
         }
         self.check_invariants();
         Ok(())
+    }
+
+    fn throttle(&mut self, engine: usize) -> Result<bool> {
+        if engine >= self.engines.len() || self.engines[engine].running.len() < 2 {
+            return Ok(false);
+        }
+        // shed the smallest-context lane, progress kept — the same victim
+        // rule as the forced in-step path, routed like a preemption
+        let pos = self.engines[engine]
+            .running
+            .iter()
+            .enumerate()
+            .min_by_key(|(pos, &rid)| (self.progress[rid as usize], *pos))
+            .map(|(pos, _)| pos)
+            .expect("running checked >= 2");
+        let rid = self.engines[engine].running.remove(pos);
+        self.release_lane(rid);
+        match self.dispatch {
+            HarnessDispatch::Striped => self.engines[engine].queue.push_back(rid),
+            HarnessDispatch::Central => self.central.push_back(rid),
+        }
+        self.throttled += 1;
+        self.check_invariants();
+        Ok(true)
     }
 
     fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Result<bool> {
@@ -414,9 +555,9 @@ impl ScheduleBackend for TokenBackend {
                     // its current headroom cannot admit — landing a fat
                     // request on a KV-loaded engine would just mark IT
                     // blocked and ping-pong the request straight back
-                    let res = self.reserve(rid);
-                    if res > self.kv_budget
-                        || self.kv_gate_refuses(self.kv_used(to), res)
+                    let est = self.estimate(rid);
+                    if est > self.kv.budget
+                        || self.kv_gate_refuses(self.kv_used(to), est)
                     {
                         self.engines[from].queue.push_back(rid);
                         None
@@ -429,11 +570,12 @@ impl ScheduleBackend for TokenBackend {
             Some(l) => {
                 if l < self.engines[from].running.len() {
                     let rid = self.engines[from].running[l];
-                    let headroom = self.kv_budget.saturating_sub(self.kv_used(to));
-                    if self.reserve(rid) > headroom {
+                    let headroom = self.kv.headroom(self.kv_used(to));
+                    if self.estimate(rid) > headroom {
                         None
                     } else {
                         self.engines[from].running.remove(l);
+                        self.release_lane(rid);
                         Some(rid)
                     }
                 } else {

@@ -29,9 +29,9 @@ pub mod pool;
 pub mod predictor;
 
 pub use policy::{
-    drive, make_policy, make_policy_opts, Decision, EngineLoad, Event, HarvestAction,
-    HarvestItem, LaneView, PolicyParams, SchedView, SchedulePolicy, ScheduleBackend,
-    StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
+    drive, make_policy, make_policy_full, make_policy_opts, Decision, EngineLoad, Event,
+    HarvestAction, HarvestItem, KvGovernor, LaneView, PolicyParams, SchedView,
+    SchedulePolicy, ScheduleBackend, StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
 };
 pub use pool::{resume_request, DispatchPolicy, EnginePool, PoolConfig};
 pub use predictor::{

@@ -98,6 +98,26 @@ pub struct EngineLoad {
     /// lane does NOT imply the local queue drains on its own, so a
     /// stealing policy must treat the engine as saturated.
     pub kv_blocked: bool,
+    /// Paged-KV over-commit warning: projected usage (one more page per
+    /// active lane) would overrun the budget.  The [`KvGovernor`] wrapper
+    /// reacts with `Decision::Throttle` before the engine's forced
+    /// eviction path has to fire.  Always false in reserve mode, which
+    /// cannot over-commit.
+    pub kv_pressure: bool,
+}
+
+impl EngineLoad {
+    /// KV headroom for routing decisions.  Unlimited budgets report
+    /// `usize::MAX` — not `MAX - used` — so engines without accounting
+    /// compare equal and KV-oblivious runs keep their exact pre-paging
+    /// decision sequences.
+    pub fn headroom(&self) -> usize {
+        if self.kv_budget == usize::MAX {
+            usize::MAX
+        } else {
+            self.kv_budget.saturating_sub(self.kv_used)
+        }
+    }
 }
 
 /// One active lane of one engine, as shown to a stealing policy when it
@@ -156,6 +176,10 @@ pub enum Event {
     /// A `Steal` decision executed; `moved` is false when the backend
     /// refused it (no such work, or destination KV budget).
     Stole { from: usize, to: usize, moved: bool },
+    /// A `Throttle` decision executed; `shed` is false when the backend
+    /// refused it (engine gone, or only one lane running — the progress
+    /// guarantee keeps the last lane decoding).
+    Throttled { engine: usize, shed: bool },
 }
 
 /// Typed decisions the policy emits.
@@ -180,6 +204,12 @@ pub enum Decision {
     /// moves the newest entry of `from`'s local queue.  The backend
     /// refuses moves past the destination's KV budget.
     Steal { from: usize, to: usize, lane: Option<usize> },
+    /// Paged-KV backpressure: shed one lane of engine `engine` back to the
+    /// queue (progress kept, backend picks the smallest-context victim) so
+    /// projected usage drops below the budget — the deferral path that
+    /// keeps over-committed admission from reaching the engines' forced
+    /// in-step eviction.
+    Throttle { engine: usize },
     /// Train one update on these ready trajectories, in this order.
     Update { rids: Vec<u64> },
     /// Group end: drop consumed entries, re-align engine clocks.
@@ -226,6 +256,7 @@ pub trait ScheduleBackend {
             kv_used: 0,
             kv_budget: usize::MAX,
             kv_blocked: false,
+            kv_pressure: false,
         }]
     }
     /// Active lanes of one engine (steal-victim selection).  Backends
@@ -255,6 +286,13 @@ pub trait ScheduleBackend {
     /// work actually moved.  The default refuses every steal — correct for
     /// backends without targeted admission.
     fn steal(&mut self, _from: usize, _to: usize, _lane: Option<usize>) -> Result<bool> {
+        Ok(false)
+    }
+    /// Execute one `Throttle` (shed the smallest-context lane of `engine`
+    /// back to the queue, progress kept).  Returns true if a lane was
+    /// actually shed.  The default refuses — correct for backends without
+    /// paged KV accounting, where pressure never arises.
+    fn throttle(&mut self, _engine: usize) -> Result<bool> {
         Ok(false)
     }
     /// Train one update on these Ready entries, in order.
@@ -345,6 +383,13 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
                 let moved = backend.steal(from, to, lane)?;
                 policy.observe(&Event::Stole { from, to, moved });
             }
+            Decision::Throttle { engine } => {
+                // same reasoning as Steal: shedding never decodes or
+                // trains, so a throttle-spinning policy trips the guard
+                fruitless += 1;
+                let shed = backend.throttle(engine)?;
+                policy.observe(&Event::Throttled { engine, shed });
+            }
             Decision::Update { rids } => {
                 if rids.is_empty() {
                     fruitless += 1;
@@ -380,12 +425,24 @@ pub fn make_policy(kind: SchedulerKind, p: PolicyParams) -> Box<dyn SchedulePoli
 /// [`WorkStealing`] wrapper (the `--steal` flag / `LoopConfig::steal`).
 pub fn make_policy_opts(kind: SchedulerKind, p: PolicyParams,
                         steal: bool) -> Box<dyn SchedulePolicy> {
-    let inner = make_policy(kind, p);
-    if steal {
-        Box::new(WorkStealing::wrap(inner, StealConfig::default()))
-    } else {
-        inner
+    make_policy_full(kind, p, steal, false)
+}
+
+/// Full composition: scheduler kind, optionally wrapped by the
+/// [`KvGovernor`] (paged-KV backpressure — `--kv-mode paged`) and then by
+/// [`WorkStealing`] (`--steal`).  The governor sits inside the stealing
+/// wrapper so a steal that relieves a pressured engine is preferred over
+/// shedding its lane.
+pub fn make_policy_full(kind: SchedulerKind, p: PolicyParams, steal: bool,
+                        throttle: bool) -> Box<dyn SchedulePolicy> {
+    let mut policy = make_policy(kind, p);
+    if throttle {
+        policy = Box::new(KvGovernor::wrap(policy));
     }
+    if steal {
+        policy = Box::new(WorkStealing::wrap(policy, StealConfig::default()));
+    }
+    policy
 }
 
 /// AsyncUpdate's bounded-staleness window: a full re-sync harvest (partial
@@ -463,10 +520,14 @@ impl WorkStealing {
         // its own — lane-saturated, or KV-blocked (free lanes its budget
         // refuses to fill).  An engine that WILL admit its own queue next
         // tick is not a victim: stealing from it only ping-pongs the
-        // request back
+        // request back.  Among equally free destinations, prefer the
+        // KV-richest thief (headroom ties at usize::MAX when accounting
+        // is off, so KV-oblivious runs keep their exact selections).
         if let Some(to) = (0..loads.len())
             .filter(|&i| loads[i].queued == 0 && loads[i].active < loads[i].lanes)
-            .max_by_key(|&i| (loads[i].lanes - loads[i].active, std::cmp::Reverse(i)))
+            .max_by_key(|&i| {
+                (loads[i].lanes - loads[i].active, loads[i].headroom(), std::cmp::Reverse(i))
+            })
         {
             if let Some(from) = (0..loads.len())
                 .filter(|&i| {
@@ -482,13 +543,17 @@ impl WorkStealing {
         // 2) lane steal: only a FULLY idle engine (no running lanes, no
         // queue) may pull a running lane — migration pays re-prefill, so
         // it is reserved for the motivating long-tail straggler case.
-        // Pick the most-loaded peer's cheapest lane that fits the
-        // destination's KV headroom.
-        let to = (0..loads.len()).find(|&i| loads[i].queued == 0 && loads[i].active == 0)?;
+        // Among idle engines prefer the KV-richest (equal headroom — the
+        // unlimited-budget case — degrades to lowest index, the pre-paging
+        // selection); then pick the most-loaded peer's cheapest lane that
+        // fits that destination's headroom.
+        let to = (0..loads.len())
+            .filter(|&i| loads[i].queued == 0 && loads[i].active == 0)
+            .max_by_key(|&i| (loads[i].headroom(), std::cmp::Reverse(i)))?;
         let from = (0..loads.len())
             .filter(|&i| i != to && loads[i].active >= self.cfg.lane_gap)
             .max_by_key(|&i| (loads[i].active, std::cmp::Reverse(i)))?;
-        let headroom = loads[to].kv_budget.saturating_sub(loads[to].kv_used);
+        let headroom = loads[to].headroom();
         let lane = b
             .engine_lanes(from)
             .into_iter()
@@ -523,6 +588,94 @@ impl SchedulePolicy for WorkStealing {
             Event::Stole { moved, .. } => {
                 if *moved {
                     self.steals += 1;
+                }
+            }
+            _ => {}
+        }
+        self.inner.observe(ev);
+    }
+}
+
+// ==========================================================================
+// KvGovernor — paged-KV backpressure wrapper (composes with any policy)
+// ==========================================================================
+
+/// Wrapper policy that watches the `PoolLoad` snapshots for `KvPressure`
+/// (a paged engine whose projected usage would overrun its budget) and
+/// emits [`Decision::Throttle`] for the most-pressured engine: the backend
+/// sheds the smallest-context lane back to the queue, progress kept, so
+/// the budget holds *before* the engine's forced in-step eviction has to
+/// fire — and the shed work re-enters dispatch, where budget-aware routing
+/// can place it on a KV-richer engine instead.
+///
+/// Like [`WorkStealing`], at most one throttle fires per generation tick
+/// (re-armed by `Event::Tick`), engines running a single lane are never
+/// throttled (the progress guarantee), and every other decision passes
+/// straight through — in reserve mode pressure never arises, so the
+/// wrapper is inert and decision sequences stay byte-identical.
+pub struct KvGovernor {
+    inner: Box<dyn SchedulePolicy>,
+    /// Engines pressured in the latest `PoolLoad` snapshot.
+    pressured: Vec<usize>,
+    armed: bool,
+    throttles: u64,
+}
+
+impl KvGovernor {
+    pub fn wrap(inner: Box<dyn SchedulePolicy>) -> Self {
+        KvGovernor { inner, pressured: Vec::new(), armed: true, throttles: 0 }
+    }
+
+    /// Successful sheds so far.
+    pub fn throttles(&self) -> u64 {
+        self.throttles
+    }
+}
+
+impl SchedulePolicy for KvGovernor {
+    fn name(&self) -> &'static str {
+        "kv-governor"
+    }
+
+    fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
+        if self.armed && !self.pressured.is_empty() {
+            let loads = b.engine_loads();
+            // re-validate against live state: the snapshot may predate a
+            // harvest or steal that already relieved the pressure
+            if let Some(engine) = self
+                .pressured
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    loads.get(i).is_some_and(|l| l.kv_pressure && l.active >= 2)
+                })
+                .max_by_key(|&i| (loads[i].kv_used, std::cmp::Reverse(i)))
+            {
+                self.armed = false;
+                return Decision::Throttle { engine };
+            }
+        }
+        self.inner.decide(b)
+    }
+
+    fn classify(&mut self, item: &HarvestItem, view: &SchedView) -> HarvestAction {
+        self.inner.classify(item, view)
+    }
+
+    fn observe(&mut self, ev: &Event) {
+        match ev {
+            Event::Tick { .. } => self.armed = true,
+            Event::PoolLoad { loads } => {
+                self.pressured = loads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.kv_pressure)
+                    .map(|(i, _)| i)
+                    .collect();
+            }
+            Event::Throttled { shed, .. } => {
+                if *shed {
+                    self.throttles += 1;
                 }
             }
             _ => {}

@@ -22,7 +22,7 @@
 //! stripes — the FCFS baseline the benches compare against).
 
 use crate::metrics::PredictorScore;
-use crate::rollout::{kv_reservation, Engine, EngineConfig, Request, Rollout};
+use crate::rollout::{Engine, EngineConfig, Request, Rollout};
 use crate::runtime::{ParamState, Runtime};
 use crate::sched::policy::EngineLoad;
 use crate::sched::predictor::{make_predictor, sjf_priority, LengthPredictor, PredictorKind};
@@ -127,6 +127,7 @@ pub struct EnginePool<'rt> {
     steps: usize,
     preempted: u64,
     stolen: u64,
+    throttled: u64,
 }
 
 impl<'rt> EnginePool<'rt> {
@@ -150,6 +151,7 @@ impl<'rt> EnginePool<'rt> {
             steps: 0,
             preempted: 0,
             stolen: 0,
+            throttled: 0,
         }
     }
 
@@ -212,6 +214,43 @@ impl<'rt> EnginePool<'rt> {
         self.stolen
     }
 
+    /// Lanes shed by `Decision::Throttle` so far (see [`Self::throttle`]).
+    pub fn throttled(&self) -> u64 {
+        self.throttled
+    }
+
+    /// Forced paged-KV evictions inside engine decode steps, summed.
+    pub fn kv_sheds(&self) -> u64 {
+        self.engines.iter().map(|e| e.kv_sheds()).sum()
+    }
+
+    /// Execute a `Decision::Throttle`: shed engine `engine`'s
+    /// smallest-context lane back into the pool queue (progress kept) so
+    /// projected paged-KV usage drops below the budget before the forced
+    /// in-step eviction path has to fire.  Refuses (returns false) when
+    /// the engine runs fewer than two lanes — the last lane is the
+    /// progress guarantee and must keep decoding.
+    pub fn throttle(&mut self, engine: usize, version: u64) -> bool {
+        if engine >= self.engines.len() || self.engines[engine].running() < 2 {
+            return false;
+        }
+        let victim = self.engines[engine]
+            .lane_progress()
+            .into_iter()
+            .min_by_key(|p| (p.total, p.lane))
+            .map(|p| p.lane);
+        match victim {
+            Some(lane) => {
+                let ok = self.preempt(engine, lane, version);
+                if ok {
+                    self.throttled += 1;
+                }
+                ok
+            }
+            None => false,
+        }
+    }
+
     /// Per-engine load snapshot (the policy layer's pool-load view).
     pub fn engine_loads(&self) -> Vec<EngineLoad> {
         self.engines
@@ -223,6 +262,7 @@ impl<'rt> EnginePool<'rt> {
                 kv_used: e.kv_used(),
                 kv_budget: e.kv_budget(),
                 kv_blocked: e.kv_blocked(),
+                kv_pressure: e.kv_pressure(),
             })
             .collect()
     }
@@ -310,11 +350,43 @@ impl<'rt> EnginePool<'rt> {
         e.lane_count().saturating_sub(e.running() + e.queued())
     }
 
+    /// Admission estimate of a still-central request (the engines share
+    /// one `KvConfig`): what budget-aware dispatch assumes the request
+    /// will cost wherever it lands.
+    fn dispatch_estimate(&self, req: &Request) -> usize {
+        let kv = self.engines[0].kv_config();
+        let predicted = if self.predictor.is_rank_only() {
+            None
+        } else {
+            let p = self.predictor.predict(req.prompt_id, req.prompt.len());
+            p.is_finite().then(|| p.max(1.0) as usize)
+        };
+        kv.admit_estimate(req.prompt.len(), req.resumed.len(), req.max_new, predicted)
+    }
+
+    /// Budget-aware placement check: routing `est` onto engine `i` is
+    /// refused when the engine's committed KV (actual lane charges plus
+    /// queued admission estimates) cannot absorb it — the same gate shape
+    /// admission uses, so dispatch stops queueing work behind a gate that
+    /// will refuse it.  A fully empty engine always fits (escape).
+    fn engine_fits(&self, i: usize, est: usize) -> bool {
+        let e = &self.engines[i];
+        !e.kv_config().gate_refuses(e.kv_committed(), est)
+    }
+
     /// Hand one request to engine `i`, capturing the prediction that drove
-    /// the decision (scored against the true length on completion).
-    fn hand_to_engine(&mut self, i: usize, req: Request) {
+    /// the decision (scored against the true length on completion) and
+    /// stamping it onto the request so the engine's paged-KV admission
+    /// gate can estimate from it (rank-only predictors emit bucket
+    /// indices, never token counts, so they stamp nothing).
+    fn hand_to_engine(&mut self, i: usize, mut req: Request) {
         let predicted = self.predictor.predict(req.prompt_id, req.prompt.len());
         self.dispatched_pred.insert(req.rid, predicted);
+        req.predicted_len = if self.predictor.is_rank_only() || !predicted.is_finite() {
+            None
+        } else {
+            Some(predicted.max(1.0) as usize)
+        };
         self.engines[i].submit([req]);
     }
 
@@ -340,15 +412,18 @@ impl<'rt> EnginePool<'rt> {
             }
             DispatchPolicy::LeastLoaded => {
                 // late-binding: hand out only what can run now, one request
-                // at a time to the emptiest engine
+                // at a time to the emptiest engine whose KV headroom can
+                // actually absorb it (route around KV-tight engines)
                 loop {
+                    let Some(req) = self.queue.front() else { break };
+                    let est = self.dispatch_estimate(req);
                     let Some(i) = (0..self.engines.len())
-                        .filter(|&i| self.engine_free(i) > 0)
+                        .filter(|&i| self.engine_free(i) > 0 && self.engine_fits(i, est))
                         .min_by_key(|&i| self.engines[i].in_flight())
                     else {
                         break;
                     };
-                    let Some(req) = self.queue.pop_front() else { break };
+                    let req = self.queue.pop_front().unwrap();
                     self.hand_to_engine(i, req);
                 }
             }
@@ -374,8 +449,20 @@ impl<'rt> EnginePool<'rt> {
                 order.sort_by_key(|&i| self.engines[i].in_flight());
                 for i in order {
                     let free = self.engine_free(i);
+                    // budget-aware packing: stop filling this engine once
+                    // the next request's estimate no longer fits what the
+                    // engine is already committed to (same gate shape as
+                    // admission, empty-engine escape included)
+                    let kv = self.engines[i].kv_config();
+                    let mut committed = self.engines[i].kv_committed();
                     for _ in 0..free {
-                        let Some(req) = self.queue.pop_front() else { break };
+                        let Some(req) = self.queue.front() else { break };
+                        let est = self.dispatch_estimate(req);
+                        if kv.gate_refuses(committed, est) {
+                            break;
+                        }
+                        committed = committed.saturating_add(est);
+                        let req = self.queue.pop_front().unwrap();
                         self.hand_to_engine(i, req);
                     }
                 }
@@ -521,8 +608,8 @@ impl<'rt> EnginePool<'rt> {
                 // headroom cannot admit — landing a fat request on a
                 // KV-loaded engine would just mark IT blocked and
                 // ping-pong the request straight back
-                let res = kv_reservation(&req);
                 let dst = &self.engines[to];
+                let res = dst.request_estimate(&req);
                 if res > dst.kv_budget() || dst.kv_gate_refuses(dst.kv_used(), res) {
                     self.engines[from].submit([req]); // back where it was
                     return false;
@@ -542,10 +629,7 @@ impl<'rt> EnginePool<'rt> {
                     .find(|p| p.lane == l)
                     .map(|p| p.reserve);
                 let Some(reserve) = reserve else { return false };
-                let headroom = self.engines[to]
-                    .kv_budget()
-                    .saturating_sub(self.engines[to].kv_used());
-                if reserve > headroom {
+                if reserve > self.engines[to].kv_headroom() {
                     return false;
                 }
                 match self.engines[from].preempt_lane(l, version) {
