@@ -14,6 +14,7 @@ use sortedrl::coordinator::{Controller, LoopConfig, SchedulerKind};
 use sortedrl::data::Dataset;
 use sortedrl::exp::{self, ExpContext, Scale};
 use sortedrl::rl::advantage::AdvantageKind;
+use sortedrl::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE, MAX_KV_PAGE};
 use sortedrl::runtime::Runtime;
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
 use sortedrl::sim::{
@@ -89,18 +90,23 @@ USAGE:
                  [--lr F] [--max-new N] [--seed N] [--scale ci|small|paper]
                  [--engines N] [--predictor oracle|history|bucket]
                  [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
+                 [--kv-mode reserve|paged] [--kv-page TOK]
                  [--artifacts DIR] [--tag TAG] [--no-warm-start]
   sortedrl exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6a|fig6b|fig9a|fig9b|tab1|
                 pool|all-sim|all> [--scale ci|small|paper] [--out DIR] [--seed N]
   sortedrl sim [--n 512] [--cap 8192] [--queue 128] [--update-batch 128]
                [--engines N] [--predictor oracle|history|bucket]
                [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
+               [--kv-mode reserve|paged] [--kv-page TOK]
   sortedrl info [--artifacts DIR] [--tag TAG]
 
 Pool defaults (train & sim): --engines 1, --predictor history,
 --dispatch least-loaded.  --steal lets idle engines pull queued work or
-whole lanes from loaded peers; --kv-budget TOK caps each engine's KV
-reservations (prompt + generation cap per admitted lane; 0 = unlimited).
+whole lanes from loaded peers.  --kv-budget TOK caps each engine's KV
+usage (0 = unlimited); --kv-mode reserve charges prompt + generation cap
+per admitted lane, --kv-mode paged charges only the context actually
+generated, in --kv-page token pages, admitting on predicted lengths with
+shed/throttle backpressure when estimates undershoot.
 ";
 
 fn parse_predictor(args: &Args) -> Result<PredictorKind> {
@@ -108,10 +114,30 @@ fn parse_predictor(args: &Args) -> Result<PredictorKind> {
         .context("--predictor oracle|history|bucket")
 }
 
-/// `--kv-budget 0` (or absent) = unlimited.
-fn parse_kv_budget(args: &Args) -> Result<usize> {
+/// Parse and validate the KV flag triple (`--kv-mode`, `--kv-budget`,
+/// `--kv-page`).  `--kv-budget 0` (or absent) = unlimited.  Nonsense
+/// combinations are rejected here with an actionable one-liner instead of
+/// starving every engine at runtime (the empty-engine escape would avoid
+/// a literal deadlock, but one-lane-at-a-time is never what was meant).
+fn parse_kv(args: &Args) -> Result<KvConfig> {
+    let mode = KvMode::parse(args.get("kv-mode").unwrap_or("reserve"))
+        .context("--kv-mode reserve|paged")?;
+    let page = args.get_usize("kv-page", DEFAULT_KV_PAGE)?;
+    if page == 0 {
+        bail!("--kv-page must be >= 1 token (default {DEFAULT_KV_PAGE}); \
+               0 pages cannot hold any context");
+    }
+    if page > MAX_KV_PAGE {
+        bail!("--kv-page {page} exceeds {MAX_KV_PAGE}; a page is a KV block \
+               in tokens, not a budget — did you mean --kv-budget {page}?");
+    }
     let v = args.get_usize("kv-budget", 0)?;
-    Ok(if v == 0 { usize::MAX } else { v })
+    let budget = if v == 0 { usize::MAX } else { v };
+    if budget != usize::MAX && budget <= page {
+        bail!("--kv-budget {budget} cannot hold one prompt plus one \
+               --kv-page {page} page; raise the budget or pass 0 for unlimited");
+    }
+    Ok(KvConfig { mode, budget, page })
 }
 
 fn parse_dispatch(args: &Args) -> Result<DispatchPolicy> {
@@ -169,6 +195,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let scheduler = SchedulerKind::parse(args.get("scheduler").unwrap_or("on-policy"))
         .with_context(|| format!("--scheduler {}", SchedulerKind::valid_names()))?;
     let seed = args.get_u64("seed", 0)?;
+    let kv = parse_kv(args)?;
     let cfg = LoopConfig {
         scheduler,
         rollout_prompts: args.get_usize("rollout-prompts", ts.rollout_prompts)?,
@@ -194,16 +221,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         predictor: parse_predictor(args)?,
         dispatch: parse_dispatch(args)?,
         steal: args.get("steal").is_some(),
-        kv_budget: parse_kv_budget(args)?,
+        kv_budget: kv.budget,
+        kv_mode: kv.mode,
+        kv_page: kv.page,
     };
     let ds = Dataset::generate(task.as_ref(), ts.per_difficulty, 0.1, seed + 1);
     eprintln!("dataset: {} train / {} eval; scheduler: {}",
               ds.train.len(), ds.eval.len(), scheduler.name());
-    eprintln!("pool: {} engine(s), predictor {}, dispatch {}, steal {}, kv budget {}",
+    eprintln!("pool: {} engine(s), predictor {}, dispatch {}, steal {}, \
+               kv {} budget {} page {}",
               cfg.num_engines, cfg.predictor.name(), cfg.dispatch.name(),
-              cfg.steal,
+              cfg.steal, cfg.kv_mode.name(),
               if cfg.kv_budget == usize::MAX { "unlimited".to_string() }
-              else { cfg.kv_budget.to_string() });
+              else { cfg.kv_budget.to_string() },
+              cfg.kv_page);
 
     let mut state = rt.init(seed as i32)?;
     if args.get("no-warm-start").is_none() {
@@ -328,7 +359,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let predictor = parse_predictor(args)?;
     let dispatch = parse_dispatch(args)?;
     let steal = args.get("steal").is_some();
-    let kv_budget = parse_kv_budget(args)?;
+    let kv = parse_kv(args)?;
     let w = longtail_workload(n, cap, seed);
     println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}\n");
     for (mode, label) in [(SimMode::Baseline, "baseline"),
@@ -352,11 +383,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
             dispatch,
             predictor,
             steal,
-            kv_budget,
+            kv_budget: kv.budget,
+            kv_mode: kv.mode,
+            kv_page: kv.page,
             ..PoolSimOpts::default()
         };
         let mut telemetry = (0.0, 0.0);
         let mut stolen = (0u64, 0u64);
+        let mut kv_stats = (0usize, 0u64, 0u64);
         for (mode, label) in [(SimMode::Baseline, "baseline"),
                               (SimMode::SortedOnPolicy, "on-policy"),
                               (SimMode::SortedPartial, "partial"),
@@ -366,6 +400,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             let many = simulate_pool_opts(mode, &w, opts);
             if mode == SimMode::SortedPartial {
                 telemetry = (many.predictor_mae, many.predictor_tau);
+                kv_stats = (many.peak_lanes, many.kv_sheds, many.throttles);
             }
             // report steal stats from the unsorted baseline: sorted modes
             // already balance the tail and steal ~never
@@ -385,6 +420,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
             println!("work stealing (baseline, {engines} engines): {} steals, \
                       {} in-flight tokens migrated",
                      stolen.0, stolen.1);
+        }
+        if kv.budget != usize::MAX {
+            println!("kv {} (partial, {engines} engines, budget {} page {}): \
+                      peak lanes {}, {} forced sheds, {} throttles",
+                     kv.mode.name(), kv.budget, kv.page,
+                     kv_stats.0, kv_stats.1, kv_stats.2);
         }
     } else {
         println!("\n(pass --engines N to compare 1-engine vs N-engine pools)");

@@ -434,7 +434,7 @@ impl ScheduleBackend for TokenBackend {
                 .running
                 .iter()
                 .enumerate()
-                .min_by_key(|(pos, &rid)| (self.charge(rid), *pos))
+                .min_by_key(|&(pos, &rid)| (self.charge(rid), pos))
                 .map(|(pos, _)| pos)
                 .expect("running checked non-empty");
             let rid = self.engines[i].running.remove(pos);
@@ -529,7 +529,7 @@ impl ScheduleBackend for TokenBackend {
             .running
             .iter()
             .enumerate()
-            .min_by_key(|(pos, &rid)| (self.progress[rid as usize], *pos))
+            .min_by_key(|&(pos, &rid)| (self.progress[rid as usize], pos))
             .map(|(pos, _)| pos)
             .expect("running checked >= 2");
         let rid = self.engines[engine].running.remove(pos);

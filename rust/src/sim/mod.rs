@@ -16,10 +16,11 @@
 
 use crate::coordinator::buffer::Mode;
 use crate::metrics::{PredictorScore, Timeline};
+use crate::rollout::kv::{KvConfig, KvMode};
 use crate::sched::policy::{
     drive, AsyncUpdatePolicy, BaselinePolicy, EngineLoad, GroupPolicy, HarvestAction,
-    HarvestItem, LaneView, PolicyParams, SchedView, ScheduleBackend, SchedulePolicy,
-    StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
+    HarvestItem, KvGovernor, LaneView, PolicyParams, SchedView, ScheduleBackend,
+    SchedulePolicy, StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
 };
 use crate::sched::{make_predictor, sjf_priority, DispatchPolicy, LengthPredictor, PredictorKind};
 use crate::util::rng::Pcg64;
@@ -146,80 +147,135 @@ pub struct SimReport {
     /// Per-engine idle fraction over the rollout span — the load-imbalance
     /// breakdown stealing is meant to flatten (1.0 = engine never ran).
     pub engine_idle: Vec<f64>,
+    /// Highest concurrent running-lane count across the pool — the
+    /// admitted-lane headline paged KV accounting is meant to raise at a
+    /// fixed budget.
+    pub peak_lanes: usize,
+    /// Lanes force-evicted by the paged in-step backpressure path.
+    pub kv_sheds: u64,
+    /// Lanes shed by executed `Decision::Throttle`s (the KvGovernor).
+    pub throttles: u64,
+    /// Pool-wide KV usage over time, (engine seconds, tokens charged),
+    /// downsampled — the utilization curve `pool_kv.json` plots.  Empty
+    /// when KV accounting is off.
+    pub kv_trace: Vec<(f64, usize)>,
 }
 
 struct Running {
     req: SimRequest,
     generated: usize,
+    /// Predicted total length stamped at stage time (None = rank-only
+    /// predictor) — what the paged admission estimate consumed, kept so
+    /// an evicted lane re-admits under the same estimate.
+    predicted: Option<usize>,
 }
 
-/// KV reservation of one simulated request: prompt plus its full output
-/// (sim requests decode exactly `output_len` tokens, so the output doubles
-/// as the generation cap a real engine would reserve).  Reserving the cap
-/// at admission makes "budget never exceeded" a hard invariant — decode
-/// cannot outgrow what admission accounted for.
-fn sim_reserve(req: &SimRequest) -> usize {
-    req.prompt_len + req.output_len
+/// One unit of stageable work: a request plus preserved progress and the
+/// stamped length prediction driving paged-KV admission estimates.
+#[derive(Debug, Clone, Copy)]
+struct SimWork {
+    req: SimRequest,
+    progress: usize,
+    predicted: Option<usize>,
+}
+
+/// Stamp a prediction onto staged work (None for rank-only predictors —
+/// bucket indices are not token counts and must not feed KV estimates).
+fn stamp(pred: &dyn LengthPredictor, req: SimRequest, progress: usize) -> SimWork {
+    let predicted = if pred.is_rank_only() {
+        None
+    } else {
+        let p = pred.predict(req.id as u64, req.prompt_len);
+        p.is_finite().then(|| p.max(1.0) as usize)
+    };
+    SimWork { req, progress, predicted }
 }
 
 /// Simulated engine with queue capacity `q`.
 struct SimEngine {
     q: usize,
     cost: CostModel,
-    /// KV budget in reservation tokens (`usize::MAX` = accounting off).
-    kv_budget: usize,
+    /// KV memory model (mode + budget + page; `budget == usize::MAX` =
+    /// accounting off).
+    kv: KvConfig,
     clock: f64,
     running: Vec<Running>,
-    queue: VecDeque<(SimRequest, usize)>, // (request, progress)
+    queue: VecDeque<SimWork>,
     timeline: Timeline,
     tokens_out: u64,
+    /// Forced paged evictions (actual usage outgrew the budget mid-step).
+    sheds: u64,
+    /// (clock, kv_used) samples — recorded only when accounting is on.
+    kv_trace: Vec<(f64, usize)>,
 }
 
 impl SimEngine {
-    fn new(q: usize, cost: CostModel, kv_budget: usize) -> Self {
+    fn new(q: usize, cost: CostModel, kv: KvConfig) -> Self {
         SimEngine {
             q,
             cost,
-            kv_budget,
+            kv,
             clock: 0.0,
             running: Vec::new(),
             queue: VecDeque::new(),
             timeline: Timeline::new(),
             tokens_out: 0,
+            sheds: 0,
+            kv_trace: Vec::new(),
         }
     }
 
     fn record(&mut self) {
         self.timeline.set_running(self.clock, self.running.len());
+        if !self.kv.unlimited() {
+            let used = self.kv_used();
+            self.kv_trace.push((self.clock, used));
+        }
+    }
+
+    /// What a running lane charges right now (worst case in reserve mode,
+    /// the paged actual context otherwise).
+    fn lane_charge(&self, r: &Running) -> usize {
+        self.kv.lane_charge(r.req.prompt_len, r.generated, r.req.output_len)
+    }
+
+    /// What the admission gate charges a queued candidate.
+    fn work_estimate(&self, w: &SimWork) -> usize {
+        self.kv
+            .admit_estimate(w.req.prompt_len, w.progress, w.req.output_len, w.predicted)
     }
 
     fn kv_used(&self) -> usize {
-        self.running.iter().map(|r| sim_reserve(&r.req)).sum()
+        self.running.iter().map(|r| self.lane_charge(r)).sum()
     }
 
     /// The KV admission gate shared by `admit`, `engine_loads`, and the
-    /// pool's `steal`: admitting `reserve` on top of `used` is refused
+    /// pool's `steal`: admitting `estimate` on top of `used` is refused
     /// iff running lanes already hold KV and the sum overruns the budget
     /// (the empty-engine escape admits any head request alone).
-    fn kv_gate_refuses(&self, used: usize, reserve: usize) -> bool {
-        used > 0 && used.saturating_add(reserve) > self.kv_budget
+    fn kv_gate_refuses(&self, used: usize, estimate: usize) -> bool {
+        self.kv.gate_refuses(used, estimate)
     }
 
     fn admit(&mut self) {
         let mut used = self.kv_used();
         while self.running.len() < self.q {
-            let Some(&(req, _)) = self.queue.front() else { break };
+            let Some(front) = self.queue.front() else { break };
             // KV admission gate: an otherwise-empty engine always admits
             // its head request (progress guarantee — a single oversized
-            // reservation must not deadlock the queue)
-            if self.kv_gate_refuses(used, sim_reserve(&req)) {
+            // context must not deadlock the queue).  The gate accumulates
+            // admission ESTIMATES within the pass; paged lanes charge
+            // their much smaller actual context once admitted.
+            let est = self.work_estimate(front);
+            if self.kv_gate_refuses(used, est) {
                 break;
             }
-            let (req, progress) = self.queue.pop_front().unwrap();
-            used += sim_reserve(&req);
+            let w = self.queue.pop_front().unwrap();
+            used += est;
             // prefill cost: prompt + any preserved progress
-            self.clock += (req.prompt_len + progress) as f64 * self.cost.t_prefill_token;
-            self.running.push(Running { req, generated: progress });
+            self.clock += (w.req.prompt_len + w.progress) as f64 * self.cost.t_prefill_token;
+            self.running
+                .push(Running { req: w.req, generated: w.progress, predicted: w.predicted });
         }
         self.record();
     }
@@ -245,19 +301,48 @@ impl SimEngine {
         if !finished.is_empty() {
             self.timeline.add_finished(finished.len() as u64);
         }
+        self.shed_over_budget();
         self.record();
         finished
     }
 
+    /// Forced paged backpressure: if actual usage outgrew the budget
+    /// (admission estimates undershot), evict the smallest-context lane
+    /// back to the local queue — progress kept, resume pays a re-prefill —
+    /// until the budget holds or one lane remains (the running twin of the
+    /// empty-engine admission escape).  The back of the queue makes the
+    /// evicted partial the preferred steal victim for a KV-rich peer.
+    fn shed_over_budget(&mut self) {
+        if self.kv.mode != KvMode::Paged || self.kv.unlimited() {
+            return;
+        }
+        while self.running.len() > 1 && self.kv_used() > self.kv.budget {
+            let lane = self
+                .running
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, r)| (self.lane_charge(r), i))
+                .map(|(i, _)| i)
+                .expect("running checked non-empty");
+            let r = self.running.remove(lane);
+            self.queue.push_back(SimWork {
+                req: r.req,
+                progress: r.generated,
+                predicted: r.predicted,
+            });
+            self.sheds += 1;
+        }
+    }
+
     /// Preempt ONE running lane back to the queue, KEEPING progress
     /// (resume costs only a re-prefill over prompt + prefix).
-    fn preempt_lane(&mut self, lane: usize) -> Option<(SimRequest, usize)> {
+    fn preempt_lane(&mut self, lane: usize) -> Option<SimWork> {
         if lane >= self.running.len() {
             return None;
         }
         let r = self.running.remove(lane);
         self.record();
-        Some((r.req, r.generated))
+        Some(SimWork { req: r.req, progress: r.generated, predicted: r.predicted })
     }
 
     /// Terminate everything in flight; returns (request, progress, queued)
@@ -269,7 +354,7 @@ impl SimEngine {
             .drain(..)
             .map(|r| (r.req, r.generated, false))
             .collect();
-        out.extend(self.queue.drain(..).map(|(req, p)| (req, p, true)));
+        out.extend(self.queue.drain(..).map(|w| (w.req, w.progress, true)));
         self.record();
         out
     }
@@ -296,16 +381,16 @@ pub fn simulate(mode: SimMode, workload: &[SimRequest], q: usize,
 /// decode iteration of each other (parallel devices).
 struct SimPool {
     engines: Vec<SimEngine>,
-    central: VecDeque<(SimRequest, usize)>,
+    central: VecDeque<SimWork>,
     policy: DispatchPolicy,
     rr: usize,
 }
 
 impl SimPool {
     fn new(n: usize, q_each: usize, cost: CostModel, policy: DispatchPolicy,
-           kv_budget: usize) -> Self {
+           kv: KvConfig) -> Self {
         SimPool {
-            engines: (0..n).map(|_| SimEngine::new(q_each, cost, kv_budget)).collect(),
+            engines: (0..n).map(|_| SimEngine::new(q_each, cost, kv)).collect(),
             central: VecDeque::new(),
             policy,
             rr: 0,
@@ -314,17 +399,17 @@ impl SimPool {
 
     /// Targeted admission: push work straight onto engine `i`'s local
     /// queue, bypassing the dispatch policy (`Admit { engine: Some(i) }`).
-    fn stage_to(&mut self, i: usize, work: Vec<(SimRequest, usize)>) {
+    fn stage_to(&mut self, i: usize, work: Vec<SimWork>) {
         assert!(i < self.engines.len(), "stage_to engine out of range");
         self.engines[i].queue.extend(work);
     }
 
-    /// Stage a wave of (request, progress) work per the dispatch policy.
-    /// Round-robin statically stripes (the FCFS baseline); least-loaded
-    /// keeps a FIFO central queue that engines pull from as lanes free;
-    /// SJF keeps the central queue sorted by predicted remaining length so
-    /// each engine pulls a contiguous, similar-length run.
-    fn stage(&mut self, work: Vec<(SimRequest, usize)>, pred: &dyn LengthPredictor) {
+    /// Stage a wave of work per the dispatch policy.  Round-robin
+    /// statically stripes (the FCFS baseline); least-loaded keeps a FIFO
+    /// central queue that engines pull from as lanes free; SJF keeps the
+    /// central queue sorted by predicted remaining length so each engine
+    /// pulls a contiguous, similar-length run.
+    fn stage(&mut self, work: Vec<SimWork>, pred: &dyn LengthPredictor) {
         match self.policy {
             DispatchPolicy::RoundRobin => {
                 for w in work {
@@ -337,29 +422,51 @@ impl SimPool {
             DispatchPolicy::ShortestPredictedFirst => {
                 // sjf_priority is THE policy shared with the real
                 // EnginePool; keys computed once, not in the comparator
-                let mut keyed: Vec<(f64, (SimRequest, usize))> = work
+                let mut keyed: Vec<(f64, SimWork)> = work
                     .into_iter()
-                    .map(|w| (sjf_priority(pred, w.0.id as u64, w.0.prompt_len, w.1), w))
+                    .map(|w| {
+                        (sjf_priority(pred, w.req.id as u64, w.req.prompt_len, w.progress), w)
+                    })
                     .collect();
                 keyed.sort_by(|a, b| {
-                    a.0.partial_cmp(&b.0).unwrap().then((a.1).0.id.cmp(&(b.1).0.id))
+                    a.0.partial_cmp(&b.0).unwrap().then(a.1.req.id.cmp(&b.1.req.id))
                 });
                 self.central.extend(keyed.into_iter().map(|(_, w)| w));
             }
         }
     }
 
-    /// Pull central-queue work into engine `i`'s free lanes (late binding).
+    /// Pull central-queue work into engine `i`'s free lanes (late
+    /// binding), KV-budget-aware: stop once the head's admission estimate
+    /// no longer fits what the engine is already committed to (actual
+    /// lane charges plus queued estimates) — route around KV-tight
+    /// engines instead of queueing work behind a gate that will refuse
+    /// it.  A fully empty engine always pulls (the dispatch twin of the
+    /// empty-engine admission escape); unlimited budgets never refuse, so
+    /// KV-oblivious runs pull exactly as before.
     fn refill(&mut self, i: usize) {
         if self.policy == DispatchPolicy::RoundRobin {
             return;
         }
+        let kv = self.engines[i].kv;
+        let mut committed = self.engines[i].kv_used()
+            + self.engines[i]
+                .queue
+                .iter()
+                .map(|w| self.engines[i].work_estimate(w))
+                .sum::<usize>();
         loop {
             let e = &self.engines[i];
             if e.running.len() + e.queue.len() >= e.q {
                 break;
             }
-            let Some(w) = self.central.pop_front() else { break };
+            let Some(front) = self.central.front() else { break };
+            let est = e.work_estimate(front);
+            if kv.gate_refuses(committed, est) {
+                break;
+            }
+            committed = committed.saturating_add(est);
+            let w = self.central.pop_front().unwrap();
             self.engines[i].queue.push_back(w);
         }
     }
@@ -429,24 +536,27 @@ impl SimPool {
                 let w = self.engines[from].queue.pop_back()?;
                 // refuse what the destination can never hold AND what its
                 // current headroom cannot admit (see the harness twin)
-                let res = sim_reserve(&w.0);
                 let dst = &self.engines[to];
-                if res > dst.kv_budget || dst.kv_gate_refuses(dst.kv_used(), res) {
+                let est = dst.work_estimate(&w);
+                if est > dst.kv.budget || dst.kv_gate_refuses(dst.kv_used(), est) {
                     self.engines[from].queue.push_back(w);
                     return None;
                 }
-                let progressed = w.1 > 0;
+                let progressed = w.progress > 0;
                 (w, progressed)
             }
             Some(l) => {
-                let reserve = self.engines[from]
-                    .running
-                    .get(l)
-                    .map(|r| sim_reserve(&r.req))?;
-                let headroom = self.engines[to]
-                    .kv_budget
-                    .saturating_sub(self.engines[to].kv_used());
-                if reserve > headroom {
+                let reserve = {
+                    let victim = self.engines[from].running.get(l)?;
+                    self.engines[to].kv.admit_estimate(
+                        victim.req.prompt_len,
+                        victim.generated,
+                        victim.req.output_len,
+                        victim.predicted,
+                    )
+                };
+                let dst = &self.engines[to];
+                if reserve > dst.kv.headroom(dst.kv_used()) {
                     return None;
                 }
                 (self.engines[from].preempt_lane(l)?, true)
@@ -455,7 +565,7 @@ impl SimPool {
         if progressed && self.engines[to].clock < self.engines[from].clock {
             self.engines[to].clock = self.engines[from].clock;
         }
-        let progress = work.1;
+        let progress = work.progress;
         self.engines[to].queue.push_back(work);
         Some(progress)
     }
@@ -561,8 +671,11 @@ pub fn pool_makespan(workload: &[SimRequest], engines: usize, q_total: usize,
             pred.observe(r.id as u64, r.prompt_len, noisy as usize);
         }
     }
-    let mut pool = SimPool::new(engines, q_total / engines, cost, dispatch, usize::MAX);
-    pool.stage(workload.iter().map(|r| (*r, 0usize)).collect(), pred.as_ref());
+    let mut pool = SimPool::new(engines, q_total / engines, cost, dispatch,
+                                KvConfig::default());
+    let work: Vec<SimWork> =
+        workload.iter().map(|r| stamp(pred.as_ref(), *r, 0)).collect();
+    pool.stage(work, pred.as_ref());
     while pool.tick().is_some() {}
     pool.clock()
 }
@@ -623,6 +736,8 @@ struct SimBackend {
     migrated_tokens: u64,
     infer_time: f64,
     update_time: f64,
+    /// Lanes shed by executed `Decision::Throttle`s.
+    throttles: u64,
     /// Async mode: updates overlap decoding instead of serializing.
     overlap_updates: bool,
     /// Engine-clock time at which the (async) trainer frees up.
@@ -632,9 +747,9 @@ struct SimBackend {
 impl SimBackend {
     fn new(workload: &[SimRequest], engines: usize, q_each: usize, cost: CostModel,
            dispatch: DispatchPolicy, predictor: PredictorKind,
-           overlap_updates: bool, kv_budget: usize) -> Self {
+           overlap_updates: bool, kv: KvConfig) -> Self {
         SimBackend {
-            pool: SimPool::new(engines, q_each, cost, dispatch, kv_budget),
+            pool: SimPool::new(engines, q_each, cost, dispatch, kv),
             cost,
             pred: make_sim_predictor(predictor, workload),
             score: PredictorScore::default(),
@@ -657,6 +772,7 @@ impl SimBackend {
             migrated_tokens: 0,
             infer_time: 0.0,
             update_time: 0.0,
+            throttles: 0,
             overlap_updates,
             update_free_at: 0.0,
         }
@@ -666,6 +782,10 @@ impl SimBackend {
         let rollout_time = self.pool.clock();
         let timeline = merge_timelines(&self.pool.engines);
         let bubble = timeline.bubble_ratio(self.q_cap, rollout_time);
+        // the admitted-lane headline: max concurrent running lanes across
+        // the pool over the whole run (from the merged occupancy events)
+        let peak_lanes = timeline.events().iter().map(|&(_, r)| r).max().unwrap_or(0);
+        let kv_trace = merge_kv_traces(&self.pool.engines);
         // per-engine idle fraction against the POOL end time: an engine
         // that never ran is 100% idle capacity, not a non-event
         let engine_idle: Vec<f64> = self
@@ -710,8 +830,38 @@ impl SimBackend {
             steals: self.steals,
             migrated_tokens: self.migrated_tokens,
             engine_idle,
+            peak_lanes,
+            kv_sheds: self.pool.engines.iter().map(|e| e.sheds).sum(),
+            throttles: self.throttles,
+            kv_trace,
         }
     }
+}
+
+/// Merge per-engine (clock, kv_used) samples into one pool-wide usage
+/// curve (running totals over merged event order), downsampled to at most
+/// 256 points so `pool_kv.json` stays small at paper scale.
+fn merge_kv_traces(engines: &[SimEngine]) -> Vec<(f64, usize)> {
+    let mut events: Vec<(f64, usize, usize)> = Vec::new();
+    for (idx, e) in engines.iter().enumerate() {
+        for &(t, used) in &e.kv_trace {
+            events.push((t, idx, used));
+        }
+    }
+    if events.is_empty() {
+        return Vec::new();
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut cur = vec![0usize; engines.len()];
+    let mut total = 0usize;
+    let mut merged = Vec::with_capacity(events.len());
+    for (t, idx, used) in events {
+        total = total + used - cur[idx];
+        cur[idx] = used;
+        merged.push((t, total));
+    }
+    let stride = merged.len().div_ceil(256).max(1);
+    merged.into_iter().step_by(stride).collect()
 }
 
 impl ScheduleBackend for SimBackend {
@@ -778,7 +928,15 @@ impl ScheduleBackend for SimBackend {
             self.fresh_count -= 1;
             let predicted = self.pred.predict(e.req.id as u64, e.req.prompt_len);
             self.staged_pred.insert(e.req.id, predicted);
-            work.push((e.req, e.progress));
+            work.push(SimWork {
+                req: e.req,
+                progress: e.progress,
+                predicted: if self.pred.is_rank_only() || !predicted.is_finite() {
+                    None
+                } else {
+                    Some(predicted.max(1.0) as usize)
+                },
+            });
         }
         match engine {
             Some(i) => self.pool.stage_to(i, work),
@@ -796,14 +954,15 @@ impl ScheduleBackend for SimBackend {
                 let blocked = e
                     .queue
                     .front()
-                    .is_some_and(|(req, _)| e.kv_gate_refuses(used, sim_reserve(req)));
+                    .is_some_and(|w| e.kv_gate_refuses(used, e.work_estimate(w)));
                 EngineLoad {
                     queued: e.queue.len(),
                     active: e.running.len(),
                     lanes: e.q,
                     kv_used: used,
-                    kv_budget: e.kv_budget,
+                    kv_budget: e.kv.budget,
                     kv_blocked: blocked,
+                    kv_pressure: e.kv.pressure(used, e.running.len()),
                 }
             })
             .collect()
@@ -820,11 +979,35 @@ impl ScheduleBackend for SimBackend {
                     .map(|(i, r)| LaneView {
                         lane: i,
                         progress: r.generated,
-                        reserve: sim_reserve(&r.req),
+                        reserve: e.kv.admit_estimate(
+                            r.req.prompt_len,
+                            r.generated,
+                            r.req.output_len,
+                            r.predicted,
+                        ),
                     })
                     .collect()
             })
             .unwrap_or_default()
+    }
+
+    fn throttle(&mut self, engine: usize) -> Result<bool> {
+        let Some(e) = self.pool.engines.get(engine) else { return Ok(false) };
+        if e.running.len() < 2 {
+            return Ok(false);
+        }
+        // shed the smallest-context lane, progress kept, routed like a
+        // preemption so budget-aware dispatch can re-place it
+        let lane = e
+            .running
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, r)| (e.lane_charge(r), i))
+            .map(|(i, _)| i)
+            .expect("running checked >= 2");
+        self.pool.preempt(engine, lane);
+        self.throttles += 1;
+        Ok(true)
     }
 
     fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Result<bool> {
@@ -1001,13 +1184,18 @@ pub struct PoolSimOpts {
     pub predictor: PredictorKind,
     /// Wrap the mode's policy in the [`WorkStealing`] composer.
     pub steal: bool,
-    /// Per-engine KV budget in reservation tokens (prompt + output per
-    /// admitted lane); `usize::MAX` disables the memory model.
+    /// Per-engine KV budget in tokens; `usize::MAX` disables the model.
     pub kv_budget: usize,
+    /// Reserve-the-cap (default) vs paged KV accounting.  Paged runs are
+    /// additionally wrapped in the [`KvGovernor`] throttle composer.
+    pub kv_mode: KvMode,
+    /// Page granularity for paged accounting, in tokens.
+    pub kv_page: usize,
 }
 
 impl Default for PoolSimOpts {
     fn default() -> Self {
+        let kv = KvConfig::default();
         PoolSimOpts {
             engines: 1,
             q_total: 128,
@@ -1016,7 +1204,9 @@ impl Default for PoolSimOpts {
             dispatch: DispatchPolicy::ShortestPredictedFirst,
             predictor: PredictorKind::History,
             steal: false,
-            kv_budget: usize::MAX,
+            kv_budget: kv.budget,
+            kv_mode: kv.mode,
+            kv_page: kv.page,
         }
     }
 }
@@ -1042,12 +1232,17 @@ pub fn simulate_pool_opts(mode: SimMode, workload: &[SimRequest],
         SimMode::SortedPartial => Box::new(GroupPolicy::new(params, Mode::Partial)),
         SimMode::Async => Box::new(AsyncUpdatePolicy::new(params, ASYNC_SYNC_EVERY)),
     };
+    // same composition order as make_policy_full: governor inside stealing
+    if o.kv_mode == KvMode::Paged {
+        policy = Box::new(KvGovernor::wrap(policy));
+    }
     if o.steal {
         policy = Box::new(WorkStealing::wrap(policy, StealConfig::default()));
     }
+    let kv = KvConfig { mode: o.kv_mode, budget: o.kv_budget, page: o.kv_page.max(1) };
     let mut backend =
         SimBackend::new(workload, o.engines, q_each, o.cost, o.dispatch, o.predictor,
-                        mode == SimMode::Async, o.kv_budget);
+                        mode == SimMode::Async, kv);
     drive(policy.as_mut(), &mut backend)
         .expect("sim backend is infallible; a driver error means a policy livelock");
     backend.into_report(mode)
