@@ -6,6 +6,7 @@
 mod bench_util;
 
 use bench_util::{bench, report_rate};
+use sortedrl::rollout::kv::KvMode;
 use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
 use sortedrl::sim::{
     longtail_workload, pool_makespan, simulate_pool, simulate_pool_opts, CostModel,
@@ -88,6 +89,36 @@ fn main() {
              stealing.bubble_ratio * 100.0, no_steal.bubble_ratio * 100.0);
     println!("  {} steals, {} partial tokens migrated\n",
              stealing.steals, stealing.migrated_tokens);
+
+    // ---- paged vs reserved KV accounting at a fixed budget ----
+    // 40k tokens/engine: reserve-the-cap admission (~8.4k per worst-case
+    // lane) caps each engine at ~4 of its 32 lanes; paged accounting
+    // charges actual context (median ~1k) and packs many more
+    let kv_opts = PoolSimOpts {
+        engines: 4,
+        q_total: 128,
+        update_batch: 128,
+        cost,
+        dispatch: DispatchPolicy::ShortestPredictedFirst,
+        predictor: PredictorKind::History,
+        kv_budget: 40_000,
+        kv_page: 256,
+        ..PoolSimOpts::default()
+    };
+    let reserved = simulate_pool_opts(SimMode::SortedPartial, &w,
+                                      PoolSimOpts { kv_mode: KvMode::Reserve, ..kv_opts });
+    let paged = simulate_pool_opts(SimMode::SortedPartial, &w,
+                                   PoolSimOpts { kv_mode: KvMode::Paged, ..kv_opts });
+    println!("paged vs reserved KV (sorted-partial, 4x32, 40k budget, 256-page):");
+    println!("  concurrent lanes  {:4} vs {:4}  (peak; paged must admit more)",
+             paged.peak_lanes, reserved.peak_lanes);
+    println!("  bubble            {:6.2}%  vs  {:6.2}%", paged.bubble_ratio * 100.0,
+             reserved.bubble_ratio * 100.0);
+    println!("  rollout           {:6.1}s  vs  {:6.1}s  ({:+.1}% with paging)",
+             paged.rollout_time, reserved.rollout_time,
+             100.0 * (paged.rollout_time / reserved.rollout_time - 1.0));
+    println!("  backpressure      {} forced sheds, {} throttles\n",
+             paged.kv_sheds, paged.throttles);
 
     // ---- host-time benches ----
     bench("pool_makespan 4x32 sjf/oracle (host)", 2.0, || {

@@ -137,6 +137,8 @@ impl RolloutBuffer {
                     born_version: e.born_version,
                     resumes: e.resumes,
                     max_new: e.max_new,
+                    // stamped by the pool at dispatch (predictor-owned)
+                    predicted_len: None,
                 }
             })
             .collect()
@@ -312,6 +314,7 @@ mod tests {
                 born_version: Some(3),
                 resumes: 0,
                 max_new: 64,
+                predicted_len: None,
             },
             response: toks,
             logp: vec![-0.5; n],

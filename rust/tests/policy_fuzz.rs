@@ -20,8 +20,9 @@
 //! count for the nightly `cargo test --release -- --ignored` job.
 
 use sortedrl::coordinator::SchedulerKind;
+use sortedrl::rollout::kv::{KvConfig, KvMode};
 use sortedrl::sched::harness::{HarnessDispatch, TokenBackend, HARNESS_PROMPT};
-use sortedrl::sched::policy::{drive, make_policy_opts, PolicyParams, ScheduleBackend};
+use sortedrl::sched::policy::{drive, make_policy_full, PolicyParams, ScheduleBackend};
 use sortedrl::sim::{longtail_workload, simulate_pool_opts, PoolSimOpts, SimMode};
 use sortedrl::util::proptest::{property, Gen};
 
@@ -33,15 +34,21 @@ fn fuzz_token_backend_once(g: &mut Gen) {
     let engines = g.usize_in(1..5);
     let lanes = g.usize_in(1..4);
     let dispatch = if g.bool() { HarnessDispatch::Striped } else { HarnessDispatch::Central };
-    // budgets always cover the largest single reservation, so the
-    // empty-engine escape never has to overrun and the KV ceiling checked
-    // inside the harness stays strict
-    let max_reserve = HARNESS_PROMPT + MAX_LEN;
+    // reserve or paged accounting, with page granularity fuzzed too —
+    // paged runs exercise estimate admission, in-step sheds, and the
+    // KvGovernor throttle path
+    let kv_mode = if g.bool() { KvMode::Reserve } else { KvMode::Paged };
+    let kv_page = g.usize_in(1..9);
+    // budgets always cover the largest single admission estimate (page
+    // rounding included), so the empty-engine escape never has to overrun
+    // and the KV ceiling checked inside the harness stays strict
+    let max_reserve = (HARNESS_PROMPT + MAX_LEN).div_ceil(kv_page) * kv_page;
     let kv_budget = if g.bool() {
         usize::MAX
     } else {
         g.usize_in(max_reserve..4 * max_reserve)
     };
+    let kv = KvConfig { mode: kv_mode, budget: kv_budget, page: kv_page };
     let steal = g.bool();
     let kind = *g.pick(&SchedulerKind::ALL);
     let params = PolicyParams {
@@ -50,12 +57,12 @@ fn fuzz_token_backend_once(g: &mut Gen) {
         update_batch: g.usize_in(1..9),
     };
     let ctx = format!(
-        "n={n} engines={engines} lanes={lanes} {dispatch:?} kv={kv_budget} \
+        "n={n} engines={engines} lanes={lanes} {dispatch:?} kv={kv:?} \
          steal={steal} kind={kind:?} refill={} batch={}",
         params.refill_prompts, params.update_batch
     );
-    let mut policy = make_policy_opts(kind, params, steal);
-    let mut b = TokenBackend::new(&lens, engines, lanes, dispatch, kv_budget);
+    let mut policy = make_policy_full(kind, params, steal, kv_mode == KvMode::Paged);
+    let mut b = TokenBackend::new_kv(&lens, engines, lanes, dispatch, kv);
     // per-transition invariants assert inside the backend; an Err here is
     // a driver livelock bail — also a failure
     drive(policy.as_mut(), &mut b).unwrap_or_else(|e| panic!("{ctx}: {e:#}"));
@@ -84,8 +91,11 @@ fn fuzz_sim_backend_once(g: &mut Gen) {
         dispatch: *g.pick(&sortedrl::sched::DispatchPolicy::ALL),
         predictor: *g.pick(&sortedrl::sched::PredictorKind::ALL),
         steal: g.bool(),
-        // covers the largest possible reservation (prompt < 256 + cap)
-        kv_budget: if g.bool() { usize::MAX } else { (cap + 256) * g.usize_in(1..4) },
+        // covers the largest possible reservation (prompt < 256 + cap,
+        // plus one page of rounding slack in paged mode)
+        kv_budget: if g.bool() { usize::MAX } else { (cap + 512) * g.usize_in(1..4) },
+        kv_mode: if g.bool() { KvMode::Reserve } else { KvMode::Paged },
+        kv_page: g.usize_in(1..257),
         ..PoolSimOpts::default()
     };
     let w = longtail_workload(n, cap, g.usize_in(0..1_000_000) as u64);

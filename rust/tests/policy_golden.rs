@@ -17,11 +17,12 @@
 
 use anyhow::Result;
 use sortedrl::coordinator::{Lifecycle, Mode, RolloutBuffer, SchedulerKind};
+use sortedrl::rollout::kv::{KvConfig, KvMode};
 use sortedrl::rollout::{Request, Rollout};
 use sortedrl::sched::harness::{HarnessDispatch, TokenBackend};
 use sortedrl::sched::policy::{
-    drive, make_policy, make_policy_opts, HarvestAction, HarvestItem, PolicyParams,
-    SchedView, ScheduleBackend,
+    drive, make_policy, make_policy_full, make_policy_opts, HarvestAction, HarvestItem,
+    PolicyParams, SchedView, ScheduleBackend,
 };
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
 use sortedrl::sim::{
@@ -467,6 +468,78 @@ fn stealing_goldens_deterministic_across_runs() {
         assert_eq!(a.ticks, b.ticks, "{kind:?}");
         assert_eq!(a.consumed.len() + a.dropped.len(), 8,
                    "{kind:?} lost a request across steals");
+    }
+}
+
+// --------------------------------------------------------------------------
+// paged-KV goldens (deterministic TokenBackend)
+// --------------------------------------------------------------------------
+
+/// Hand-derived paged-vs-reserved golden on the skewed 4-engine workload:
+/// 4 engines x 2 lanes, static striping, lens [9,9,9,9,2,2,2,2] (each
+/// engine gets one long + one short request), budget 14, page 1.
+///
+/// Reserve mode charges the long request 4+9=13 up front, so the short
+/// one (4+2=6) waits behind the KV gate until tick 9 — 4 concurrent
+/// lanes, 11 ticks.  Paged mode charges the long lane only its actual
+/// context (5 tokens after tick 1), so the short request co-runs from
+/// tick 2 — 8 concurrent lanes, 9 ticks, and the shorts finish (and
+/// train) first.  No backpressure fires: actual usage peaks at 12 of 14.
+#[test]
+fn golden_paged_admits_strictly_more_lanes_on_skewed_pool() {
+    let params = PolicyParams { refill_prompts: 8, entries_per_prompt: 1, update_batch: 8 };
+    let lens = [9, 9, 9, 9, 2, 2, 2, 2];
+    let run = |mode: KvMode| {
+        let kv = KvConfig { mode, budget: 14, page: 1 };
+        // production paged composition (governor on); inert in reserve
+        let mut policy =
+            make_policy_full(SchedulerKind::Baseline, params, false, mode == KvMode::Paged);
+        let mut b = TokenBackend::new_kv(&lens, 4, 2, HarnessDispatch::Striped, kv);
+        drive(policy.as_mut(), &mut b).unwrap();
+        b
+    };
+    let paged = run(KvMode::Paged);
+    assert_eq!(paged.peak_running, 8, "paged co-runs long+short on every engine");
+    assert_eq!(paged.ticks, 9);
+    assert_eq!(paged.consumed, vec![4, 5, 6, 7, 0, 1, 2, 3], "shorts finish first");
+    assert_eq!(paged.updates, 1);
+    assert_eq!(paged.kv_sheds, 0, "exact estimates never over-commit here");
+    assert_eq!(paged.throttled, 0);
+    let reserved = run(KvMode::Reserve);
+    assert_eq!(reserved.peak_running, 4, "cap reservations serialize the shorts");
+    assert_eq!(reserved.ticks, 11);
+    assert_eq!(reserved.consumed, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    assert_eq!(reserved.updates, 1);
+    assert_eq!(reserved.kv_sheds, 0);
+    assert!(paged.peak_running > reserved.peak_running);
+    assert!(paged.ticks < reserved.ticks);
+}
+
+/// Paged runs are deterministic across repetitions, exactly like the
+/// stealing goldens: same consumed order, tick count, shed/throttle
+/// counts — no hidden nondeterminism in the backpressure paths.
+#[test]
+fn paged_goldens_deterministic_across_runs() {
+    let run = |kind: SchedulerKind| {
+        let params =
+            PolicyParams { refill_prompts: 8, entries_per_prompt: 1, update_batch: 2 };
+        let kv = KvConfig { mode: KvMode::Paged, budget: 20, page: 2 };
+        let mut policy = make_policy_full(kind, params, true, true);
+        let mut b = TokenBackend::new_kv(&[2, 4, 6, 3, 9, 1, 5, 7], 2, 2,
+                                         HarnessDispatch::Striped, kv);
+        drive(policy.as_mut(), &mut b).unwrap();
+        b
+    };
+    for kind in SchedulerKind::ALL {
+        let a = run(kind);
+        let b = run(kind);
+        assert_eq!(a.consumed, b.consumed, "{kind:?}");
+        assert_eq!(a.ticks, b.ticks, "{kind:?}");
+        assert_eq!(a.steal_log, b.steal_log, "{kind:?}");
+        assert_eq!(a.kv_sheds, b.kv_sheds, "{kind:?}");
+        assert_eq!(a.throttled, b.throttled, "{kind:?}");
+        assert_eq!(a.consumed.len() + a.dropped.len(), 8,
+                   "{kind:?} lost a request under paged backpressure");
     }
 }
 
