@@ -133,9 +133,13 @@ fn parse_kv(args: &Args) -> Result<KvConfig> {
     }
     let v = args.get_usize("kv-budget", 0)?;
     let budget = if v == 0 { usize::MAX } else { v };
-    if budget != usize::MAX && budget <= page {
+    // reserve mode never consults the page size, so only paged budgets
+    // are checked against it (a reserve budget of any size stays valid —
+    // its worst case is caught by the engines' empty-engine escape)
+    if mode == KvMode::Paged && budget != usize::MAX && budget < page {
         bail!("--kv-budget {budget} cannot hold one prompt plus one \
-               --kv-page {page} page; raise the budget or pass 0 for unlimited");
+               --kv-page {page} page; raise the budget, lower --kv-page, \
+               or pass 0 for unlimited");
     }
     Ok(KvConfig { mode, budget, page })
 }

@@ -42,6 +42,16 @@ pub const DEFAULT_KV_PAGE: usize = 64;
 /// plausible context and indicates a mistyped flag, not a configuration.
 pub const MAX_KV_PAGE: usize = 1 << 20;
 
+/// Convert a raw predictor output into the token-count stamp paged-KV
+/// admission estimates consume: `None` for rank-only predictors (bucket
+/// indices are not token counts) or non-finite outputs, otherwise at
+/// least one token.  THE single definition — the live pool and the
+/// simulator both stamp through here so their KV estimates cannot
+/// silently diverge.
+pub fn stamp_prediction(rank_only: bool, predicted: f64) -> Option<usize> {
+    (!rank_only && predicted.is_finite()).then(|| predicted.max(1.0) as usize)
+}
+
 /// How admitted lanes are charged against the KV budget.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvMode {

@@ -183,6 +183,31 @@ impl TokenBackend {
         assert!(prev.is_some(), "rid {rid} released KV it never charged");
     }
 
+    /// The harness twin of the live engine's forced paged backpressure:
+    /// evict smallest-context lanes back to the queue (progress kept)
+    /// until the budget holds or one lane remains.
+    fn shed_over_budget(&mut self, i: usize) {
+        if self.kv.mode != KvMode::Paged || self.kv.budget == usize::MAX {
+            return;
+        }
+        while self.engines[i].running.len() > 1 && self.kv_used(i) > self.kv.budget {
+            let pos = self.engines[i]
+                .running
+                .iter()
+                .enumerate()
+                .min_by_key(|&(pos, &rid)| (self.charge(rid), pos))
+                .map(|(pos, _)| pos)
+                .expect("running checked non-empty");
+            let rid = self.engines[i].running.remove(pos);
+            self.release_lane(rid);
+            match self.dispatch {
+                HarnessDispatch::Striped => self.engines[i].queue.push_back(rid),
+                HarnessDispatch::Central => self.central.push_back(rid),
+            }
+            self.kv_sheds += 1;
+        }
+    }
+
     fn count(&self, s: St) -> usize {
         self.state.iter().filter(|&&x| x == s).count()
     }
@@ -420,31 +445,6 @@ impl ScheduleBackend for TokenBackend {
         }
         self.check_invariants();
         Ok(finished)
-    }
-
-    /// The harness twin of the live engine's forced paged backpressure:
-    /// evict smallest-context lanes back to the queue (progress kept)
-    /// until the budget holds or one lane remains.
-    fn shed_over_budget(&mut self, i: usize) {
-        if self.kv.mode != KvMode::Paged || self.kv.budget == usize::MAX {
-            return;
-        }
-        while self.engines[i].running.len() > 1 && self.kv_used(i) > self.kv.budget {
-            let pos = self.engines[i]
-                .running
-                .iter()
-                .enumerate()
-                .min_by_key(|&(pos, &rid)| (self.charge(rid), pos))
-                .map(|(pos, _)| pos)
-                .expect("running checked non-empty");
-            let rid = self.engines[i].running.remove(pos);
-            self.release_lane(rid);
-            match self.dispatch {
-                HarnessDispatch::Striped => self.engines[i].queue.push_back(rid),
-                HarnessDispatch::Central => self.central.push_back(rid),
-            }
-            self.kv_sheds += 1;
-        }
     }
 
     fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {

@@ -350,44 +350,44 @@ impl<'rt> EnginePool<'rt> {
         e.lane_count().saturating_sub(e.running() + e.queued())
     }
 
-    /// Admission estimate of a still-central request (the engines share
-    /// one `KvConfig`): what budget-aware dispatch assumes the request
-    /// will cost wherever it lands.
-    fn dispatch_estimate(&self, req: &Request) -> usize {
-        let kv = self.engines[0].kv_config();
-        let predicted = if self.predictor.is_rank_only() {
-            None
-        } else {
-            let p = self.predictor.predict(req.prompt_id, req.prompt.len());
-            p.is_finite().then(|| p.max(1.0) as usize)
-        };
-        kv.admit_estimate(req.prompt.len(), req.resumed.len(), req.max_new, predicted)
+    /// One predictor lookup, shaped for both consumers: the raw
+    /// prediction (scored against the true length on completion) and the
+    /// token-count stamp paged-KV estimates consume (see
+    /// [`crate::rollout::kv::stamp_prediction`] — the one rule shared
+    /// with the simulator).
+    fn predict_pair(&self, prompt_id: u64, prompt_len: usize) -> (f64, Option<usize>) {
+        let p = self.predictor.predict(prompt_id, prompt_len);
+        (p, crate::rollout::kv::stamp_prediction(self.predictor.is_rank_only(), p))
     }
 
-    /// Budget-aware placement check: routing `est` onto engine `i` is
-    /// refused when the engine's committed KV (actual lane charges plus
-    /// queued admission estimates) cannot absorb it — the same gate shape
-    /// admission uses, so dispatch stops queueing work behind a gate that
-    /// will refuse it.  A fully empty engine always fits (escape).
-    fn engine_fits(&self, i: usize, est: usize) -> bool {
-        let e = &self.engines[i];
-        !e.kv_config().gate_refuses(e.kv_committed(), est)
+    /// Admission estimate of a still-central request given its stamp (the
+    /// engines share one `KvConfig`): what budget-aware dispatch assumes
+    /// the request will cost wherever it lands.
+    fn admit_estimate_of(&self, req: &Request, stamp: Option<usize>) -> usize {
+        self.engines[0].kv_config().admit_estimate(
+            req.prompt.len(),
+            req.resumed.len(),
+            req.max_new,
+            stamp,
+        )
+    }
+
+    /// Hand one request to engine `i` with its precomputed prediction
+    /// pair — the dispatch loops already looked it up for the KV gate, so
+    /// the hand-off must not pay a second predictor probe.
+    fn hand_to_engine_with(&mut self, i: usize, mut req: Request,
+                           (predicted, stamp): (f64, Option<usize>)) {
+        self.dispatched_pred.insert(req.rid, predicted);
+        req.predicted_len = stamp;
+        self.engines[i].submit([req]);
     }
 
     /// Hand one request to engine `i`, capturing the prediction that drove
-    /// the decision (scored against the true length on completion) and
-    /// stamping it onto the request so the engine's paged-KV admission
-    /// gate can estimate from it (rank-only predictors emit bucket
-    /// indices, never token counts, so they stamp nothing).
-    fn hand_to_engine(&mut self, i: usize, mut req: Request) {
-        let predicted = self.predictor.predict(req.prompt_id, req.prompt.len());
-        self.dispatched_pred.insert(req.rid, predicted);
-        req.predicted_len = if self.predictor.is_rank_only() || !predicted.is_finite() {
-            None
-        } else {
-            Some(predicted.max(1.0) as usize)
-        };
-        self.engines[i].submit([req]);
+    /// the decision and stamping it onto the request so the engine's
+    /// paged-KV admission gate can estimate from it.
+    fn hand_to_engine(&mut self, i: usize, req: Request) {
+        let pair = self.predict_pair(req.prompt_id, req.prompt.len());
+        self.hand_to_engine_with(i, req, pair);
     }
 
     /// Move central-queue requests onto engines per the dispatch policy.
@@ -413,18 +413,28 @@ impl<'rt> EnginePool<'rt> {
             DispatchPolicy::LeastLoaded => {
                 // late-binding: hand out only what can run now, one request
                 // at a time to the emptiest engine whose KV headroom can
-                // actually absorb it (route around KV-tight engines)
+                // actually absorb it (route around KV-tight engines).  The
+                // per-engine committed KV is hoisted once and maintained
+                // incrementally — recomputing it per request would scan
+                // every lane and queued estimate on the live hot path.
+                let kv = self.engines[0].kv_config();
+                let mut committed: Vec<usize> =
+                    self.engines.iter().map(|e| e.kv_committed()).collect();
                 loop {
                     let Some(req) = self.queue.front() else { break };
-                    let est = self.dispatch_estimate(req);
+                    let pair = self.predict_pair(req.prompt_id, req.prompt.len());
+                    let est = self.admit_estimate_of(req, pair.1);
                     let Some(i) = (0..self.engines.len())
-                        .filter(|&i| self.engine_free(i) > 0 && self.engine_fits(i, est))
+                        .filter(|&i| {
+                            self.engine_free(i) > 0 && !kv.gate_refuses(committed[i], est)
+                        })
                         .min_by_key(|&i| self.engines[i].in_flight())
                     else {
                         break;
                     };
+                    committed[i] = committed[i].saturating_add(est);
                     let req = self.queue.pop_front().unwrap();
-                    self.hand_to_engine(i, req);
+                    self.hand_to_engine_with(i, req, pair);
                 }
             }
             DispatchPolicy::ShortestPredictedFirst => {
@@ -457,13 +467,14 @@ impl<'rt> EnginePool<'rt> {
                     let mut committed = self.engines[i].kv_committed();
                     for _ in 0..free {
                         let Some(req) = self.queue.front() else { break };
-                        let est = self.dispatch_estimate(req);
+                        let pair = self.predict_pair(req.prompt_id, req.prompt.len());
+                        let est = self.admit_estimate_of(req, pair.1);
                         if kv.gate_refuses(committed, est) {
                             break;
                         }
                         committed = committed.saturating_add(est);
                         let req = self.queue.pop_front().unwrap();
-                        self.hand_to_engine(i, req);
+                        self.hand_to_engine_with(i, req, pair);
                     }
                 }
             }

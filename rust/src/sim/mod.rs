@@ -179,16 +179,16 @@ struct SimWork {
     predicted: Option<usize>,
 }
 
-/// Stamp a prediction onto staged work (None for rank-only predictors —
-/// bucket indices are not token counts and must not feed KV estimates).
-fn stamp(pred: &dyn LengthPredictor, req: SimRequest, progress: usize) -> SimWork {
-    let predicted = if pred.is_rank_only() {
-        None
-    } else {
-        let p = pred.predict(req.id as u64, req.prompt_len);
-        p.is_finite().then(|| p.max(1.0) as usize)
-    };
-    SimWork { req, progress, predicted }
+/// Stamp a raw prediction onto staged work via the shared
+/// [`crate::rollout::kv::stamp_prediction`] rule (None for rank-only
+/// predictors — bucket indices are not token counts and must not feed KV
+/// estimates).
+fn stamp_work(rank_only: bool, predicted: f64, req: SimRequest, progress: usize) -> SimWork {
+    SimWork {
+        req,
+        progress,
+        predicted: crate::rollout::kv::stamp_prediction(rank_only, predicted),
+    }
 }
 
 /// Simulated engine with queue capacity `q`.
@@ -673,8 +673,13 @@ pub fn pool_makespan(workload: &[SimRequest], engines: usize, q_total: usize,
     }
     let mut pool = SimPool::new(engines, q_total / engines, cost, dispatch,
                                 KvConfig::default());
-    let work: Vec<SimWork> =
-        workload.iter().map(|r| stamp(pred.as_ref(), *r, 0)).collect();
+    let work: Vec<SimWork> = workload
+        .iter()
+        .map(|r| {
+            let p = pred.predict(r.id as u64, r.prompt_len);
+            stamp_work(pred.is_rank_only(), p, *r, 0)
+        })
+        .collect();
     pool.stage(work, pred.as_ref());
     while pool.tick().is_some() {}
     pool.clock()
@@ -928,15 +933,7 @@ impl ScheduleBackend for SimBackend {
             self.fresh_count -= 1;
             let predicted = self.pred.predict(e.req.id as u64, e.req.prompt_len);
             self.staged_pred.insert(e.req.id, predicted);
-            work.push(SimWork {
-                req: e.req,
-                progress: e.progress,
-                predicted: if self.pred.is_rank_only() || !predicted.is_finite() {
-                    None
-                } else {
-                    Some(predicted.max(1.0) as usize)
-                },
-            });
+            work.push(stamp_work(self.pred.is_rank_only(), predicted, e.req, e.progress));
         }
         match engine {
             Some(i) => self.pool.stage_to(i, work),
