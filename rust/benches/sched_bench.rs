@@ -9,9 +9,10 @@ use bench_util::{bench, report_rate};
 use sortedrl::rollout::kv::KvMode;
 use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, pool_makespan, simulate_pool, simulate_pool_opts, CostModel,
-    PoolSimOpts, SimMode,
+    longtail_workload, pool_makespan, simulate_pool, simulate_pool_opts,
+    simulate_pool_traced, CostModel, PoolSimOpts, SimMode,
 };
+use sortedrl::trace::Tracer;
 
 fn main() {
     println!("== sched benches: engine-pool dispatch on longtail_workload(512, 8192) ==\n");
@@ -39,17 +40,27 @@ fn main() {
     println!("  predicted-SJF (history) beats round-robin by {:.1}% on makespan\n",
              100.0 * (rr / sjf_h - 1.0));
 
-    // ---- 1-vs-4 engine bubble under the partial scheduler ----
-    let one = simulate_pool(SimMode::SortedPartial, &w, 1, 128, 128, cost,
-                            DispatchPolicy::ShortestPredictedFirst,
-                            PredictorKind::Oracle);
-    let four = simulate_pool(SimMode::SortedPartial, &w, 4, 128, 128, cost,
-                             DispatchPolicy::ShortestPredictedFirst,
-                             PredictorKind::Oracle);
+    // ---- 1-vs-4 engine bubble + latency tail under the partial scheduler ----
+    let slo_opts = PoolSimOpts {
+        q_total: 128,
+        update_batch: 128,
+        cost,
+        dispatch: DispatchPolicy::ShortestPredictedFirst,
+        predictor: PredictorKind::Oracle,
+        slo: Some(25.0),
+        ..PoolSimOpts::default()
+    };
+    let one = simulate_pool_opts(SimMode::SortedPartial, &w,
+                                 PoolSimOpts { engines: 1, ..slo_opts });
+    let four = simulate_pool_opts(SimMode::SortedPartial, &w,
+                                  PoolSimOpts { engines: 4, ..slo_opts });
     println!("sorted-partial bubble: 1 engine {:.2}% | 4 engines {:.2}%;  \
-              rollout {:.1}s -> {:.1}s\n",
+              rollout {:.1}s -> {:.1}s",
              one.bubble_ratio * 100.0, four.bubble_ratio * 100.0,
              one.rollout_time, four.rollout_time);
+    println!("  e2e p99 {:.1}s -> {:.1}s; goodput@25s {:.3} -> {:.3}\n",
+             one.slo.e2e_p99, four.slo.e2e_p99,
+             one.slo.goodput, four.slo.goodput);
 
     // ---- async updates vs the sync baseline (the policy-API payoff) ----
     let base = simulate_pool(SimMode::Baseline, &w, 4, 128, 128, cost,
@@ -136,6 +147,31 @@ fn main() {
             SimMode::Baseline, &w, 8, 128, 128, cost,
             DispatchPolicy::RoundRobin, PredictorKind::Bucket));
     });
+
+    // tracer overhead guard: the disabled tracer rides the same drive loop
+    // as every golden/fuzz run, so its cost must stay in the noise; the
+    // enabled run (spans + chrome events) shows the price of observability
+    let trace_opts = PoolSimOpts {
+        engines: 4,
+        q_total: 128,
+        update_batch: 128,
+        cost,
+        dispatch: DispatchPolicy::ShortestPredictedFirst,
+        predictor: PredictorKind::History,
+        ..PoolSimOpts::default()
+    };
+    let off = bench("simulate_pool partial 4x32 tracer OFF (host)", 2.0, || {
+        let mut t = Tracer::disabled();
+        std::hint::black_box(simulate_pool_traced(
+            SimMode::SortedPartial, &w, trace_opts, &mut t));
+    });
+    let on = bench("simulate_pool partial 4x32 tracer ON (spans+chrome)", 2.0, || {
+        let mut t = Tracer::new(Some(25.0), true);
+        std::hint::black_box(simulate_pool_traced(
+            SimMode::SortedPartial, &w, trace_opts, &mut t));
+    });
+    println!("  tracer overhead: {:+.1}% per run when fully enabled",
+             100.0 * (on.per_iter_secs / off.per_iter_secs - 1.0));
 
     // predictor hot path: predict+observe churn
     for kind in PredictorKind::ALL {

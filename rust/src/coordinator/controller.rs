@@ -28,13 +28,15 @@ use crate::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE};
 use crate::rollout::{EngineConfig, Rollout};
 use crate::runtime::{ParamState, Runtime};
 use crate::sched::policy::{
-    drive, make_policy_full, EngineLoad, HarvestAction, HarvestItem, LaneView,
+    drive_traced, make_policy_full, EngineLoad, HarvestAction, HarvestItem, LaneView,
     PolicyParams, SchedView, ScheduleBackend,
 };
 use crate::sched::{DispatchPolicy, EnginePool, PoolConfig, PredictorKind};
 use crate::tasks::{Reward, Task};
+use crate::trace::{SloSummary, Tracer};
 use anyhow::Result;
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerKind {
@@ -133,6 +135,11 @@ pub struct LoopConfig {
     pub kv_mode: KvMode,
     /// Page granularity for paged accounting in tokens (`--kv-page`).
     pub kv_page: usize,
+    /// Write a Chrome-trace-event JSON (Perfetto-loadable) of the run here.
+    pub trace_out: Option<PathBuf>,
+    /// End-to-end latency SLO in *milliseconds* (host wall clock); enables
+    /// per-request span recording and the goodput column in `RunResult::slo`.
+    pub slo_ms: Option<f64>,
 }
 
 impl Default for LoopConfig {
@@ -159,6 +166,8 @@ impl Default for LoopConfig {
             kv_budget: usize::MAX,
             kv_mode: KvMode::Reserve,
             kv_page: DEFAULT_KV_PAGE,
+            trace_out: None,
+            slo_ms: None,
         }
     }
 }
@@ -192,6 +201,9 @@ pub struct RunResult {
     pub total_rollout_tokens: u64,
     /// Trajectories discarded without training (no-grouped ablation).
     pub discarded: u64,
+    /// TTFT/TPOT/e2e quantiles + goodput, present iff tracing was enabled
+    /// (`LoopConfig::trace_out` or `LoopConfig::slo_ms`).
+    pub slo: Option<SloSummary>,
 }
 
 pub struct Controller<'rt> {
@@ -377,6 +389,14 @@ impl<'rt> Controller<'rt> {
         let pool = self.make_pool(false, preempt);
         let trainer = Trainer::new(self.rt, self.cfg.adv, self.cfg.lr);
         let max_updates = self.cfg.max_updates;
+        let trace_out = self.cfg.trace_out.clone();
+        let slo_secs = self.cfg.slo_ms.map(|ms| ms / 1000.0);
+        let verbose = self.cfg.verbose;
+        let mut tracer = if trace_out.is_some() || slo_secs.is_some() {
+            Tracer::new(slo_secs, trace_out.is_some())
+        } else {
+            Tracer::disabled()
+        };
         let mut backend = LiveBackend {
             ctl: self,
             state,
@@ -386,8 +406,27 @@ impl<'rt> Controller<'rt> {
             stash: BTreeMap::new(),
             max_updates,
         };
-        drive(policy.as_mut(), &mut backend)?;
+        drive_traced(policy.as_mut(), &mut backend, &mut tracer)?;
         let LiveBackend { pool, rows, .. } = backend;
+
+        let slo = if tracer.enabled() {
+            let summary = tracer.slo_summary();
+            if verbose {
+                eprintln!(
+                    "slo: ttft p50 {:.3}s p99 {:.3}s | tpot p50 {:.4}s | e2e p99 {:.3}s | goodput {:.3}",
+                    summary.ttft_p50, summary.ttft_p99, summary.tpot_p50,
+                    summary.e2e_p99, summary.goodput
+                );
+            }
+            if let Some(path) = &trace_out {
+                tracer.write_chrome(path)?;
+                eprintln!("wrote {} trace events to {}", tracer.chrome_events(),
+                          path.display());
+            }
+            Some(summary)
+        } else {
+            None
+        };
 
         self.absorb_engine_occupancy(&pool);
         let phase_clock = PhaseClock {
@@ -403,6 +442,7 @@ impl<'rt> Controller<'rt> {
             bubble_ratio: self.bubble_ratio(),
             total_rollout_tokens: self.rollout_tokens,
             discarded: self.discarded,
+            slo,
         })
     }
 
@@ -502,6 +542,17 @@ impl ScheduleBackend for LiveBackend<'_, '_> {
                 .into_iter()
                 .map(|p| LaneView { lane: p.lane, progress: p.total, reserve: p.reserve })
                 .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    fn trace_clock(&self) -> f64 {
+        self.pool.host_secs()
+    }
+
+    fn lane_rids(&self, engine: usize) -> Vec<(usize, u64)> {
+        match self.pool.engines().get(engine) {
+            Some(e) => e.lane_progress().into_iter().map(|p| (p.lane, p.rid)).collect(),
             None => Vec::new(),
         }
     }

@@ -14,6 +14,7 @@ pub mod rl;
 pub mod rollout;
 pub mod sched;
 pub mod sim;
+pub mod trace;
 pub mod runtime;
 pub mod tasks;
 pub mod tokenizer;

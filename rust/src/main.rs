@@ -18,7 +18,8 @@ use sortedrl::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE, MAX_KV_PAGE};
 use sortedrl::runtime::Runtime;
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, simulate, simulate_pool_opts, CostModel, PoolSimOpts, SimMode,
+    longtail_workload, simulate, simulate_pool_opts, simulate_pool_traced, CostModel,
+    PoolSimOpts, SimMode,
 };
 use sortedrl::tasks::logic::LogicTask;
 use sortedrl::tasks::math::MathTask;
@@ -78,6 +79,25 @@ impl Args {
             Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
         }
     }
+
+    fn get_opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).with_context(|| format!("--{key} {v}")),
+        }
+    }
+}
+
+/// Parse the shared tracing flag pair: `--trace-out FILE` and `--slo MS`.
+fn parse_tracing(args: &Args) -> Result<(Option<PathBuf>, Option<f64>)> {
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let slo_ms = args.get_opt_f64("slo")?;
+    if let Some(ms) = slo_ms {
+        if !ms.is_finite() || ms <= 0.0 {
+            bail!("--slo {ms} must be a positive latency in milliseconds");
+        }
+    }
+    Ok((trace_out, slo_ms))
 }
 
 const USAGE: &str = "\
@@ -91,6 +111,7 @@ USAGE:
                  [--engines N] [--predictor oracle|history|bucket]
                  [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
                  [--kv-mode reserve|paged] [--kv-page TOK]
+                 [--trace-out FILE] [--slo MS]
                  [--artifacts DIR] [--tag TAG] [--no-warm-start]
   sortedrl exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6a|fig6b|fig9a|fig9b|tab1|
                 pool|all-sim|all> [--scale ci|small|paper] [--out DIR] [--seed N]
@@ -98,6 +119,7 @@ USAGE:
                [--engines N] [--predictor oracle|history|bucket]
                [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
                [--kv-mode reserve|paged] [--kv-page TOK]
+               [--trace-out FILE] [--slo MS]
   sortedrl info [--artifacts DIR] [--tag TAG]
 
 Pool defaults (train & sim): --engines 1, --predictor history,
@@ -107,6 +129,12 @@ usage (0 = unlimited); --kv-mode reserve charges prompt + generation cap
 per admitted lane, --kv-mode paged charges only the context actually
 generated, in --kv-page token pages, admitting on predicted lengths with
 shed/throttle backpressure when estimates undershoot.
+
+Tracing (train & sim): --trace-out FILE writes a Chrome-trace-event JSON
+of the run (open at https://ui.perfetto.dev); --slo MS records per-request
+spans and reports TTFT/TPOT/e2e p50/p99 plus goodput against an
+end-to-end latency SLO in milliseconds.  Either flag enables recording;
+without both, tracing code is compiled in but never touched.
 ";
 
 fn parse_predictor(args: &Args) -> Result<PredictorKind> {
@@ -200,6 +228,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .with_context(|| format!("--scheduler {}", SchedulerKind::valid_names()))?;
     let seed = args.get_u64("seed", 0)?;
     let kv = parse_kv(args)?;
+    let (trace_out, slo_ms) = parse_tracing(args)?;
     let cfg = LoopConfig {
         scheduler,
         rollout_prompts: args.get_usize("rollout-prompts", ts.rollout_prompts)?,
@@ -228,6 +257,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         kv_budget: kv.budget,
         kv_mode: kv.mode,
         kv_page: kv.page,
+        trace_out,
+        slo_ms,
     };
     let ds = Dataset::generate(task.as_ref(), ts.per_difficulty, 0.1, seed + 1);
     eprintln!("dataset: {} train / {} eval; scheduler: {}",
@@ -255,6 +286,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("rollout tokens: {}; rollout secs {:.1}; update secs {:.1}",
              result.total_rollout_tokens, result.phase_clock.rollout,
              result.phase_clock.update);
+    if let Some(slo) = &result.slo {
+        println!("slo: ttft p50 {:.3}s p99 {:.3}s | tpot p50 {:.4}s p99 {:.4}s | \
+                  e2e p50 {:.3}s p99 {:.3}s | goodput {:.3}",
+                 slo.ttft_p50, slo.ttft_p99, slo.tpot_p50, slo.tpot_p99,
+                 slo.e2e_p50, slo.e2e_p99, slo.goodput);
+    }
     Ok(())
 }
 
@@ -433,6 +470,50 @@ fn cmd_sim(args: &Args) -> Result<()> {
         }
     } else {
         println!("\n(pass --engines N to compare 1-engine vs N-engine pools)");
+    }
+    let (trace_out, slo_ms) = parse_tracing(args)?;
+    if trace_out.is_some() || slo_ms.is_some() {
+        // trace the partial-rollout scheduler (the paper's headline mode)
+        // through the same pool the comparison above ran
+        let opts = PoolSimOpts {
+            engines,
+            q_total: q,
+            update_batch: u,
+            dispatch,
+            predictor,
+            steal,
+            kv_budget: kv.budget,
+            kv_mode: kv.mode,
+            kv_page: kv.page,
+            ..PoolSimOpts::default()
+        };
+        let slo_secs = slo_ms.map(|ms| ms / 1000.0);
+        let mut tracer = sortedrl::trace::Tracer::new(slo_secs, trace_out.is_some());
+        let r = simulate_pool_traced(SimMode::SortedPartial, &w, opts, &mut tracer);
+        let s = &r.slo;
+        println!("\nslo (partial, {engines} engine(s){}):",
+                 match slo_ms {
+                     Some(ms) => format!(", target {ms:.0} ms"),
+                     None => String::new(),
+                 });
+        println!("  requests: {} enqueued, {} completed, {} clipped, {} dropped",
+                 s.enqueued, s.completed, s.clipped, s.dropped);
+        println!("  ttft  p50 {:8.3}s  p90 {:8.3}s  p99 {:8.3}s",
+                 s.ttft_p50, s.ttft_p90, s.ttft_p99);
+        println!("  tpot  p50 {:8.4}s  p90 {:8.4}s  p99 {:8.4}s",
+                 s.tpot_p50, s.tpot_p90, s.tpot_p99);
+        println!("  e2e   p50 {:8.3}s  p99 {:8.3}s   queue-wait p99 {:.3}s",
+                 s.e2e_p50, s.e2e_p99, s.queue_p99);
+        if slo_ms.is_some() {
+            println!("  goodput {:.3} ({} of {} within SLO)",
+                     s.goodput,
+                     (s.goodput * s.enqueued as f64).round() as u64, s.enqueued);
+        }
+        if let Some(path) = &trace_out {
+            tracer.write_chrome(path)?;
+            println!("  wrote {} trace events to {} (open at https://ui.perfetto.dev)",
+                     tracer.chrome_events(), path.display());
+        }
     }
     Ok(())
 }

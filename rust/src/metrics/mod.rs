@@ -98,13 +98,10 @@ impl Timeline {
         &self.events
     }
 
-    /// Serialize as CSV ("t,running") for plotting.
+    /// Serialize as CSV ("t,running") for plotting — the shared
+    /// [`crate::trace::series`] export path.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("t,running\n");
-        for (t, r) in &self.events {
-            s.push_str(&format!("{t},{r}\n"));
-        }
-        s
+        crate::trace::series::to_csv("t,running", &self.events)
     }
 }
 
@@ -122,6 +119,10 @@ pub struct PredictorScore {
     cursor: usize,
     n: u64,
     abs_err: f64,
+    /// Memoized [`Self::kendall_tau`] — the tau scan is O(window²), and
+    /// telemetry polls it per tick; `push` invalidates.  `Cell` because
+    /// every caller holds `&self` through the backend.
+    tau_cache: std::cell::Cell<Option<f64>>,
 }
 
 impl Default for PredictorScore {
@@ -133,7 +134,14 @@ impl Default for PredictorScore {
 impl PredictorScore {
     pub fn new(cap: usize) -> Self {
         assert!(cap >= 2);
-        PredictorScore { window: Vec::new(), cap, cursor: 0, n: 0, abs_err: 0.0 }
+        PredictorScore {
+            window: Vec::new(),
+            cap,
+            cursor: 0,
+            n: 0,
+            abs_err: 0.0,
+            tau_cache: std::cell::Cell::new(None),
+        }
     }
 
     /// Record one (prediction, ground truth) pair. Call with the prediction
@@ -141,6 +149,7 @@ impl PredictorScore {
     pub fn push(&mut self, predicted: f64, actual: f64) {
         self.n += 1;
         self.abs_err += (predicted - actual).abs();
+        self.tau_cache.set(None);
         if self.window.len() < self.cap {
             self.window.push((predicted, actual));
         } else {
@@ -164,7 +173,17 @@ impl PredictorScore {
 
     /// Kendall tau-a over the window: (concordant - discordant) / all pairs.
     /// 1.0 = perfect ranking, 0.0 = uninformative, -1.0 = anti-ranking.
+    /// Memoized between pushes (the scan is O(window²)).
     pub fn kendall_tau(&self) -> f64 {
+        if let Some(tau) = self.tau_cache.get() {
+            return tau;
+        }
+        let tau = self.kendall_tau_uncached();
+        self.tau_cache.set(Some(tau));
+        tau
+    }
+
+    fn kendall_tau_uncached(&self) -> f64 {
         let w = &self.window;
         if w.len() < 2 {
             return 0.0;
@@ -322,6 +341,22 @@ mod tests {
             s.push(p, a);
         }
         assert!((s.kendall_tau() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_tau_cache_invalidated_on_push() {
+        let mut s = PredictorScore::new(8);
+        s.push(1.0, 1.0);
+        s.push(2.0, 2.0);
+        let first = s.kendall_tau();
+        assert!((first - 1.0).abs() < 1e-12);
+        // repeated polls hit the memo and agree with a fresh scan
+        assert_eq!(s.kendall_tau(), s.kendall_tau_uncached());
+        // a discordant push must invalidate, not replay the memo
+        s.push(3.0, 0.0);
+        let after = s.kendall_tau();
+        assert!(after < first);
+        assert_eq!(after, s.kendall_tau_uncached());
     }
 
     #[test]

@@ -379,6 +379,17 @@ impl ScheduleBackend for TokenBackend {
         }
     }
 
+    fn trace_clock(&self) -> f64 {
+        self.ticks as f64
+    }
+
+    fn lane_rids(&self, engine: usize) -> Vec<(usize, u64)> {
+        match self.engines.get(engine) {
+            Some(e) => e.running.iter().copied().enumerate().collect(),
+            None => Vec::new(),
+        }
+    }
+
     fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
         let mut count = 0;
         while count < prompts && self.next_load < self.lens.len() {

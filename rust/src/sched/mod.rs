@@ -29,7 +29,7 @@ pub mod pool;
 pub mod predictor;
 
 pub use policy::{
-    drive, make_policy, make_policy_full, make_policy_opts, Decision, EngineLoad, Event,
+    drive, drive_traced, make_policy, make_policy_full, make_policy_opts, Decision, EngineLoad, Event,
     HarvestAction, HarvestItem, KvGovernor, LaneView, PolicyParams, SchedView,
     SchedulePolicy, ScheduleBackend, StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
 };

@@ -41,6 +41,7 @@
 
 use crate::coordinator::buffer::Mode;
 use crate::coordinator::controller::SchedulerKind;
+use crate::trace::Tracer;
 use anyhow::Result;
 
 /// Backend-agnostic snapshot of scheduler-relevant state.  Counts are in
@@ -218,6 +219,24 @@ pub enum Decision {
     Done,
 }
 
+impl Decision {
+    /// Stable tally key for telemetry (`TelemetryHub::decisions`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Decision::Refill { .. } => "refill",
+            Decision::Admit { .. } => "admit",
+            Decision::Step => "step",
+            Decision::Harvest => "harvest",
+            Decision::Preempt { .. } => "preempt",
+            Decision::Steal { .. } => "steal",
+            Decision::Throttle { .. } => "throttle",
+            Decision::Update { .. } => "update",
+            Decision::Barrier => "barrier",
+            Decision::Done => "done",
+        }
+    }
+}
+
 /// A scheduling policy: pure decision logic, no engine or buffer access.
 pub trait SchedulePolicy {
     fn name(&self) -> &'static str;
@@ -263,6 +282,22 @@ pub trait ScheduleBackend {
     /// without lane introspection return nothing, which disables lane
     /// steals (queue steals may still work).
     fn engine_lanes(&self, _engine: usize) -> Vec<LaneView> {
+        Vec::new()
+    }
+    /// The backend's own clock for trace timestamps, always at the POOL
+    /// level (max over engines) so one run shares one monotone axis.
+    /// Units are the backend's own (simulated seconds, host seconds,
+    /// harness ticks).  The NaN default tells the tracer to fall back to
+    /// counting executed `Step`s.
+    fn trace_clock(&self) -> f64 {
+        f64::NAN
+    }
+    /// `(lane, rid)` occupancy of one engine — the identity the tracer
+    /// needs for first-token stamps and victim attribution, which
+    /// [`ScheduleBackend::engine_lanes`] deliberately omits.  Backends
+    /// without lane introspection return nothing; the tracer then falls
+    /// back to stamping first tokens at finish time.
+    fn lane_rids(&self, _engine: usize) -> Vec<(usize, u64)> {
         Vec::new()
     }
 
@@ -317,11 +352,28 @@ const MAX_FRUITLESS: usize = 10_000;
 
 /// THE driver: executes one policy against one backend until the backend is
 /// exhausted or the policy says [`Decision::Done`].  Live training runs and
-/// simulator reports both come out of this loop.
+/// simulator reports both come out of this loop.  Tracing-free entry point:
+/// runs [`drive_traced`] with the no-op sink, whose taps return before
+/// touching anything — decision sequences are byte-identical either way
+/// (pinned by the policy goldens).
 pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend) -> Result<()> {
+    drive_traced(policy, backend, &mut Tracer::disabled())
+}
+
+/// [`drive`] with a [`Tracer`] riding along.  This loop is the ONE tap
+/// point for all per-request lifecycle telemetry: every backend records
+/// through the same calls, so live runs, simulations and harness fuzzes
+/// produce identically-shaped traces.  Taps only read the backend's
+/// introspection surface and never influence a decision.
+pub fn drive_traced(
+    policy: &mut dyn SchedulePolicy,
+    backend: &mut dyn ScheduleBackend,
+    tracer: &mut Tracer,
+) -> Result<()> {
     let mut decisions: u64 = 0;
     let mut idle_steps: usize = 0;
     let mut fruitless: usize = 0;
+    tracer.begin(policy.name(), backend);
     while !backend.exhausted() {
         decisions += 1;
         if decisions > MAX_DECISIONS {
@@ -331,25 +383,31 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
             anyhow::bail!("drive: {fruitless} consecutive decisions without \
                            decoding, training, or loading (policy livelock)");
         }
-        match policy.decide(backend) {
+        let decision = policy.decide(backend);
+        tracer.decision(&decision);
+        match decision {
             Decision::Refill { prompts } => {
+                tracer.pre_refill(backend);
                 let count = backend.load_prompts(prompts)?;
                 if count > 0 {
                     fruitless = 0;
                 } else {
                     fruitless += 1;
                 }
+                tracer.post_refill(backend, count);
                 policy.observe(&Event::PromptsLoaded { count });
             }
             Decision::Admit { rids, engine } => {
                 fruitless += 1;
                 if !rids.is_empty() {
                     backend.admit(&rids, engine)?;
+                    tracer.admitted(backend, &rids);
                 }
             }
             Decision::Step => {
                 fruitless = 0;
                 let before = backend.view();
+                tracer.pre_step(backend);
                 let finished = backend.step()?;
                 if finished == 0 && before.running == 0 && before.queued == 0 {
                     idle_steps += 1;
@@ -359,20 +417,29 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
                 } else {
                     idle_steps = 0;
                 }
+                // one snapshot serves the tracer and the PoolLoad event
+                // (engine_loads is read-only, and the Tick observation
+                // cannot change backend state in between)
+                let loads = backend.engine_loads();
+                tracer.post_step(backend, &loads);
                 policy.observe(&Event::Tick { finished });
-                policy.observe(&Event::PoolLoad { loads: backend.engine_loads() });
+                policy.observe(&Event::PoolLoad { loads });
             }
             Decision::Harvest => {
                 fruitless += 1;
+                tracer.pre_harvest(backend);
                 let items = backend.harvest_candidates()?;
                 for it in &items {
                     let act = policy.classify(it, &backend.view());
                     backend.resolve(it, act)?;
+                    tracer.verdict(backend, it, act);
                 }
+                tracer.post_harvest(backend);
                 policy.observe(&Event::Harvested { count: items.len() });
             }
             Decision::Preempt { engine, lane } => {
                 fruitless += 1;
+                tracer.pre_preempt(backend, engine, lane);
                 backend.preempt(engine, lane)?;
             }
             Decision::Steal { from, to, lane } => {
@@ -380,14 +447,18 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
                 // as fruitless — a steal-ponging policy trips the livelock
                 // guard instead of spinning forever
                 fruitless += 1;
+                tracer.pre_steal(backend, from, lane);
                 let moved = backend.steal(from, to, lane)?;
+                tracer.post_steal(backend, from, to, moved);
                 policy.observe(&Event::Stole { from, to, moved });
             }
             Decision::Throttle { engine } => {
                 // same reasoning as Steal: shedding never decodes or
                 // trains, so a throttle-spinning policy trips the guard
                 fruitless += 1;
+                tracer.pre_throttle(backend, engine);
                 let shed = backend.throttle(engine)?;
+                tracer.post_throttle(backend, engine, shed);
                 policy.observe(&Event::Throttled { engine, shed });
             }
             Decision::Update { rids } => {
@@ -396,12 +467,14 @@ pub fn drive(policy: &mut dyn SchedulePolicy, backend: &mut dyn ScheduleBackend)
                 } else {
                     fruitless = 0;
                     backend.train(&rids)?;
+                    tracer.updated(backend, &rids);
                     policy.observe(&Event::UpdateDone);
                 }
             }
             Decision::Barrier => {
                 fruitless += 1;
                 backend.barrier()?;
+                tracer.barrier(backend);
             }
             Decision::Done => return Ok(()),
         }

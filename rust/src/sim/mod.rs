@@ -18,11 +18,12 @@ use crate::coordinator::buffer::Mode;
 use crate::metrics::{PredictorScore, Timeline};
 use crate::rollout::kv::{KvConfig, KvMode};
 use crate::sched::policy::{
-    drive, AsyncUpdatePolicy, BaselinePolicy, EngineLoad, GroupPolicy, HarvestAction,
+    drive_traced, AsyncUpdatePolicy, BaselinePolicy, EngineLoad, GroupPolicy, HarvestAction,
     HarvestItem, KvGovernor, LaneView, PolicyParams, SchedView, ScheduleBackend,
     SchedulePolicy, StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
 };
 use crate::sched::{make_predictor, sjf_priority, DispatchPolicy, LengthPredictor, PredictorKind};
+use crate::trace::{series, SloSummary, Tracer};
 use crate::util::rng::Pcg64;
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
@@ -159,6 +160,10 @@ pub struct SimReport {
     /// downsampled — the utilization curve `pool_kv.json` plots.  Empty
     /// when KV accounting is off.
     pub kv_trace: Vec<(f64, usize)>,
+    /// Per-request latency roll-up (TTFT/TPOT/e2e quantiles, goodput).
+    /// Default-empty unless the run carried a recording [`Tracer`]
+    /// ([`simulate_pool_traced`], or `PoolSimOpts::slo`).
+    pub slo: SloSummary,
 }
 
 struct Running {
@@ -606,18 +611,9 @@ impl SimPool {
 /// the aggregate bubble.
 fn merge_timelines(engines: &[SimEngine]) -> Timeline {
     let mut merged = Timeline::new();
-    let mut events: Vec<(f64, usize, usize)> = Vec::new();
-    for (idx, e) in engines.iter().enumerate() {
-        for &(t, r) in e.timeline.events() {
-            events.push((t, idx, r));
-        }
-    }
-    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-    let mut cur = vec![0usize; engines.len()];
-    let mut total = 0usize;
-    for (t, idx, r) in events {
-        total = total + r - cur[idx];
-        cur[idx] = r;
+    let sources: Vec<&[(f64, usize)]> =
+        engines.iter().map(|e| e.timeline.events()).collect();
+    for (t, total) in series::merge_running_totals(&sources) {
         merged.set_running(t, total);
     }
     let mut tokens = 0u64;
@@ -839,6 +835,7 @@ impl SimBackend {
             kv_sheds: self.pool.engines.iter().map(|e| e.sheds).sum(),
             throttles: self.throttles,
             kv_trace,
+            slo: SloSummary::default(),
         }
     }
 }
@@ -847,26 +844,9 @@ impl SimBackend {
 /// curve (running totals over merged event order), downsampled to at most
 /// 256 points so `pool_kv.json` stays small at paper scale.
 fn merge_kv_traces(engines: &[SimEngine]) -> Vec<(f64, usize)> {
-    let mut events: Vec<(f64, usize, usize)> = Vec::new();
-    for (idx, e) in engines.iter().enumerate() {
-        for &(t, used) in &e.kv_trace {
-            events.push((t, idx, used));
-        }
-    }
-    if events.is_empty() {
-        return Vec::new();
-    }
-    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-    let mut cur = vec![0usize; engines.len()];
-    let mut total = 0usize;
-    let mut merged = Vec::with_capacity(events.len());
-    for (t, idx, used) in events {
-        total = total + used - cur[idx];
-        cur[idx] = used;
-        merged.push((t, total));
-    }
-    let stride = merged.len().div_ceil(256).max(1);
-    merged.into_iter().step_by(stride).collect()
+    let sources: Vec<&[(f64, usize)]> =
+        engines.iter().map(|e| e.kv_trace.as_slice()).collect();
+    series::downsample(&series::merge_running_totals(&sources), 256)
 }
 
 impl ScheduleBackend for SimBackend {
@@ -983,6 +963,24 @@ impl ScheduleBackend for SimBackend {
                             r.predicted,
                         ),
                     })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    fn trace_clock(&self) -> f64 {
+        self.pool.clock()
+    }
+
+    fn lane_rids(&self, engine: usize) -> Vec<(usize, u64)> {
+        self.pool
+            .engines
+            .get(engine)
+            .map(|e| {
+                e.running
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| (i, r.req.id as u64))
                     .collect()
             })
             .unwrap_or_default()
@@ -1188,6 +1186,11 @@ pub struct PoolSimOpts {
     pub kv_mode: KvMode,
     /// Page granularity for paged accounting, in tokens.
     pub kv_page: usize,
+    /// SLO deadline in simulated seconds.  `Some` turns on span recording
+    /// (no Chrome trace) and fills `SimReport::slo` including goodput
+    /// against this deadline; `None` (default) runs the zero-overhead
+    /// disabled tracer.
+    pub slo: Option<f64>,
 }
 
 impl Default for PoolSimOpts {
@@ -1204,13 +1207,27 @@ impl Default for PoolSimOpts {
             kv_budget: kv.budget,
             kv_mode: kv.mode,
             kv_page: kv.page,
+            slo: None,
         }
     }
 }
 
 /// [`simulate_pool`] with the full option set (work stealing, KV budget).
+/// With `o.slo` set, the run carries a span-recording tracer and the
+/// report's `slo` section is filled; otherwise the disabled no-op sink
+/// rides along, so fuzz suites and decision goldens pay nothing.
 pub fn simulate_pool_opts(mode: SimMode, workload: &[SimRequest],
                           o: PoolSimOpts) -> SimReport {
+    let mut tracer =
+        if o.slo.is_some() { Tracer::new(o.slo, false) } else { Tracer::disabled() };
+    simulate_pool_traced(mode, workload, o, &mut tracer)
+}
+
+/// [`simulate_pool_opts`] with an explicit [`Tracer`] riding on the driver
+/// — the entry point `sim --trace-out` uses to produce Perfetto traces and
+/// full SLO telemetry from a simulated pool.
+pub fn simulate_pool_traced(mode: SimMode, workload: &[SimRequest], o: PoolSimOpts,
+                            tracer: &mut Tracer) -> SimReport {
     assert!(o.engines >= 1 && o.q_total >= o.engines, "q_total must cover engines");
     assert!(o.update_batch >= 1, "update_batch must be >= 1");
     let q_each = o.q_total / o.engines;
@@ -1240,9 +1257,13 @@ pub fn simulate_pool_opts(mode: SimMode, workload: &[SimRequest],
     let mut backend =
         SimBackend::new(workload, o.engines, q_each, o.cost, o.dispatch, o.predictor,
                         mode == SimMode::Async, kv);
-    drive(policy.as_mut(), &mut backend)
+    drive_traced(policy.as_mut(), &mut backend, tracer)
         .expect("sim backend is infallible; a driver error means a policy livelock");
-    backend.into_report(mode)
+    let mut report = backend.into_report(mode);
+    if tracer.enabled() {
+        report.slo = tracer.slo_summary();
+    }
+    report
 }
 
 #[cfg(test)]
@@ -1478,5 +1499,115 @@ mod tests {
         // late-binding + predicted ordering rebalances the long tail that
         // static striping strands on one engine
         assert!(sjf < rr, "sjf {sjf} !< round-robin {rr}");
+    }
+
+    /// 2 engines × 2 lanes, unit iteration cost (`t_weights` 1s, all other
+    /// costs zero), lengths [3,5,3,5] round-robined: e0 runs rids {0,2}
+    /// (lanes 0/1, finish t=3), e1 runs {1,3} (lanes 0/1, finish t=5).
+    /// Every expected value below is hand-derived from the cost model:
+    /// enqueue+dispatch at t=0, first token after each engine's first
+    /// 1-second iteration (TTFT = 1), one token per second thereafter
+    /// (TPOT = 1), e2e = [3,3,5,5] so the interpolated p50 is 4 and p99
+    /// is 5, and with a 4-second SLO exactly the two short requests make
+    /// the deadline (goodput 0.5).
+    fn golden_workload_and_opts() -> (Vec<SimRequest>, PoolSimOpts) {
+        let w = vec![
+            SimRequest { id: 0, prompt_len: 8, output_len: 3 },
+            SimRequest { id: 1, prompt_len: 8, output_len: 5 },
+            SimRequest { id: 2, prompt_len: 8, output_len: 3 },
+            SimRequest { id: 3, prompt_len: 8, output_len: 5 },
+        ];
+        let cost = CostModel {
+            t_weights: 1.0,
+            t_token: 0.0,
+            t_prefill_token: 0.0,
+            t_update_token: 0.0,
+            t_infer_token: 0.0,
+        };
+        let opts = PoolSimOpts {
+            engines: 2,
+            q_total: 4,
+            update_batch: 4,
+            cost,
+            dispatch: DispatchPolicy::RoundRobin,
+            predictor: PredictorKind::Oracle,
+            slo: Some(4.0),
+            ..PoolSimOpts::default()
+        };
+        (w, opts)
+    }
+
+    #[test]
+    fn slo_golden_two_engine_hand_derived() {
+        let (w, opts) = golden_workload_and_opts();
+        let mut tracer = Tracer::new(Some(4.0), false);
+        let r = simulate_pool_traced(SimMode::Baseline, &w, opts, &mut tracer);
+        let s = &r.slo;
+        assert_eq!((s.enqueued, s.completed, s.clipped, s.dropped), (4, 4, 0, 0));
+        assert!((s.ttft_p50 - 1.0).abs() < 1e-9, "ttft_p50 {}", s.ttft_p50);
+        assert!((s.ttft_p99 - 1.0).abs() < 1e-9, "ttft_p99 {}", s.ttft_p99);
+        assert!((s.tpot_p50 - 1.0).abs() < 1e-9, "tpot_p50 {}", s.tpot_p50);
+        assert!((s.tpot_p99 - 1.0).abs() < 1e-9, "tpot_p99 {}", s.tpot_p99);
+        assert!((s.e2e_p50 - 4.0).abs() < 1e-9, "e2e_p50 {}", s.e2e_p50);
+        assert!((s.e2e_p99 - 5.0).abs() < 1e-9, "e2e_p99 {}", s.e2e_p99);
+        assert!(s.queue_p99.abs() < 1e-9, "queue_p99 {}", s.queue_p99);
+        assert!((s.goodput - 0.5).abs() < 1e-9, "goodput {}", s.goodput);
+        // spans: complete, ordered, consumed by the one update, attributed
+        // to the engine/lane the round-robin stripe put them on
+        assert_eq!(tracer.spans().len(), 4);
+        for (rid, sp) in tracer.spans() {
+            assert!(sp.is_ordered(), "rid {rid} out of order: {sp:?}");
+            assert!(sp.is_complete(), "rid {rid} incomplete: {sp:?}");
+            assert!(sp.consumed.is_some(), "rid {rid} never consumed");
+        }
+        let at = |rid: u64| {
+            let sp = &tracer.spans()[&rid];
+            (sp.engine, sp.lane, sp.finished)
+        };
+        assert_eq!(at(0), (Some(0), Some(0), Some(3.0)));
+        assert_eq!(at(2), (Some(0), Some(1), Some(3.0)));
+        assert_eq!(at(1), (Some(1), Some(0), Some(5.0)));
+        assert_eq!(at(3), (Some(1), Some(1), Some(5.0)));
+        // the PoolSimOpts::slo path computes the identical summary
+        let r2 = simulate_pool_opts(SimMode::Baseline, &w, opts);
+        assert_eq!(r2.slo.completed, 4);
+        assert!((r2.slo.goodput - 0.5).abs() < 1e-9);
+        assert!((r2.slo.e2e_p99 - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chrome_trace_schema_round_trip() {
+        use crate::util::json::Json;
+        let (w, opts) = golden_workload_and_opts();
+        let mut tracer = Tracer::new(None, true);
+        simulate_pool_traced(SimMode::Baseline, &w, opts, &mut tracer);
+        let text = tracer.chrome_json().expect("chrome tracer").to_string_pretty();
+        let back = Json::parse(&text).expect("trace must be valid JSON");
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        // every event carries the Chrome trace-event required fields, and
+        // counter-track timestamps are monotone per (pid, name)
+        let mut last_c: BTreeMap<(i64, String), f64> = BTreeMap::new();
+        for e in evs {
+            for k in ["pid", "tid", "ts", "ph"] {
+                assert!(e.get(k).is_some(), "missing {k}: {e:?}");
+            }
+            if e.get("ph").unwrap().as_str() == Some("C") {
+                let key = (
+                    e.get("pid").unwrap().as_i64().unwrap(),
+                    e.get("name").unwrap().as_str().unwrap().to_string(),
+                );
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                if let Some(prev) = last_c.insert(key.clone(), ts) {
+                    assert!(prev <= ts, "counter {key:?} went backward");
+                }
+            }
+        }
+        // required track names: engine processes, occupancy counters, and
+        // one slice per request
+        for needle in ["\"process_name\"", "\"engine 0\"", "\"engine 1\"",
+                       "\"running\"", "\"queued\"", "\"req 0\"", "\"req 3\""] {
+            assert!(text.contains(needle), "trace missing {needle}");
+        }
     }
 }

@@ -1,0 +1,234 @@
+//! Chrome trace-event JSON emission (the Perfetto-compatible subset).
+//!
+//! Layout convention for a scheduling trace:
+//!
+//! * **pid 0** is the driver/pool: refill, harvest, update, barrier
+//!   instants plus the pool-wide `queued` counter track.
+//! * **pid e+1** is engine `e`: lane slices live on `tid lane+1`
+//!   (tid 0 carries the engine's instant events — steal, shed, preempt),
+//!   and the engine owns `kv_used` / `running` counter tracks.
+//! * One `"X"` complete event per finished request: `ts` = first token,
+//!   `dur` = decode span, args carry rid/tokens/ttft/tpot/queue-wait.
+//!
+//! Counter tracks are coalesced on value change while recording and
+//! downsampled to [`MAX_COUNTER_POINTS`] at [`ChromeTrace::finish`] so a
+//! multi-million-tick run still loads in the Perfetto UI.  Every emitted
+//! event — including the `"M"` metadata records — carries pid/tid/ts/ph,
+//! which the schema round-trip test relies on.  Timestamps convert from
+//! backend clock units to microseconds (`displayTimeUnit: "ms"`).
+
+use crate::util::json::{arr, num, obj, s, Json};
+use std::collections::{BTreeMap, HashMap};
+
+use super::series;
+
+/// Per-track point cap applied at `finish()`.
+pub const MAX_COUNTER_POINTS: usize = 2048;
+
+/// One counter time series ((clock, value), coalesced on value change).
+#[derive(Debug, Clone)]
+struct CounterTrack {
+    pid: usize,
+    name: String,
+    points: Vec<(f64, f64)>,
+}
+
+/// Accumulates trace events and serializes the Chrome trace-event format.
+#[derive(Debug, Clone, Default)]
+pub struct ChromeTrace {
+    events: Vec<Json>,
+    tracks: Vec<CounterTrack>,
+    track_idx: HashMap<(usize, String), usize>,
+    processes: BTreeMap<usize, String>,
+    threads: BTreeMap<(usize, usize), String>,
+}
+
+/// Clock units -> integer microseconds (Perfetto sorts on ts; emitting
+/// whole numbers also keeps the JSON writer on the integer path).
+fn us(clock: f64) -> f64 {
+    if clock.is_finite() {
+        (clock * 1e6).round()
+    } else {
+        0.0
+    }
+}
+
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+impl ChromeTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Name a process row (idempotent; first name wins).
+    pub fn process(&mut self, pid: usize, name: &str) {
+        self.processes.entry(pid).or_insert_with(|| name.to_string());
+    }
+
+    /// Name a thread row within a process.
+    pub fn thread(&mut self, pid: usize, tid: usize, name: &str) {
+        self.threads.entry((pid, tid)).or_insert_with(|| name.to_string());
+    }
+
+    /// `"X"` complete event (a horizontal slice from `ts` for `dur`).
+    pub fn slice(
+        &mut self,
+        pid: usize,
+        tid: usize,
+        ts: f64,
+        dur: f64,
+        name: &str,
+        args: Vec<(&str, Json)>,
+    ) {
+        self.events.push(obj(vec![
+            ("name", s(name)),
+            ("ph", s("X")),
+            ("pid", num(pid as f64)),
+            ("tid", num(tid as f64)),
+            ("ts", num(us(ts))),
+            ("dur", num(us(dur).max(1.0))),
+            ("args", obj(args)),
+        ]));
+    }
+
+    /// `"i"` instant event (thread scope).
+    pub fn instant(&mut self, pid: usize, tid: usize, ts: f64, name: &str, args: Vec<(&str, Json)>) {
+        self.events.push(obj(vec![
+            ("name", s(name)),
+            ("ph", s("i")),
+            ("s", s("t")),
+            ("pid", num(pid as f64)),
+            ("tid", num(tid as f64)),
+            ("ts", num(us(ts))),
+            ("args", obj(args)),
+        ]));
+    }
+
+    /// Sample a counter track; consecutive equal values are coalesced.
+    pub fn counter(&mut self, pid: usize, name: &str, clock: f64, value: f64) {
+        let value = finite(value);
+        let key = (pid, name.to_string());
+        let idx = match self.track_idx.get(&key) {
+            Some(&i) => i,
+            None => {
+                let i = self.tracks.len();
+                self.tracks.push(CounterTrack { pid, name: key.1.clone(), points: Vec::new() });
+                self.track_idx.insert(key, i);
+                i
+            }
+        };
+        let t = &mut self.tracks[idx];
+        if t.points.last().map(|&(_, v)| v) != Some(value) {
+            t.points.push((finite(clock), value));
+        }
+    }
+
+    /// Number of events emitted so far plus counter points still buffered
+    /// (pre-downsampling; for progress messages).
+    pub fn event_count(&self) -> usize {
+        self.events.len() + self.tracks.iter().map(|t| t.points.len()).sum::<usize>()
+    }
+
+    /// Serialize: metadata first, then slices/instants, then counter
+    /// tracks (each downsampled, points in recording order so `ts` is
+    /// monotone per track).
+    pub fn finish(&self) -> Json {
+        let mut all = Vec::new();
+        for (pid, name) in &self.processes {
+            all.push(obj(vec![
+                ("name", s("process_name")),
+                ("ph", s("M")),
+                ("pid", num(*pid as f64)),
+                ("tid", num(0.0)),
+                ("ts", num(0.0)),
+                ("args", obj(vec![("name", s(name))])),
+            ]));
+        }
+        for ((pid, tid), name) in &self.threads {
+            all.push(obj(vec![
+                ("name", s("thread_name")),
+                ("ph", s("M")),
+                ("pid", num(*pid as f64)),
+                ("tid", num(*tid as f64)),
+                ("ts", num(0.0)),
+                ("args", obj(vec![("name", s(name))])),
+            ]));
+        }
+        all.extend(self.events.iter().cloned());
+        for t in &self.tracks {
+            for &(clock, v) in series::downsample(&t.points, MAX_COUNTER_POINTS).iter() {
+                all.push(obj(vec![
+                    ("name", s(&t.name)),
+                    ("ph", s("C")),
+                    ("pid", num(t.pid as f64)),
+                    ("tid", num(0.0)),
+                    ("ts", num(us(clock))),
+                    ("args", obj(vec![("value", num(v))])),
+                ]));
+            }
+        }
+        obj(vec![("traceEvents", arr(all)), ("displayTimeUnit", s("ms"))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_event_has_required_fields() {
+        let mut c = ChromeTrace::new();
+        c.process(0, "driver");
+        c.process(1, "engine 0");
+        c.thread(1, 1, "lane 0");
+        c.slice(1, 1, 1.0, 2.0, "req 0", vec![("rid", num(0.0))]);
+        c.instant(0, 0, 0.5, "refill", vec![]);
+        c.counter(1, "running", 0.0, 1.0);
+        c.counter(1, "running", 1.0, 2.0);
+        let j = c.finish();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.len() >= 7); // 3 M + X + i + 2 C
+        for e in evs {
+            for k in ["pid", "tid", "ts", "ph"] {
+                assert!(e.get(k).is_some(), "missing {k} in {e:?}");
+            }
+        }
+        assert_eq!(j.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    }
+
+    #[test]
+    fn counters_coalesce_equal_values() {
+        let mut c = ChromeTrace::new();
+        for t in 0..10 {
+            c.counter(0, "queued", t as f64, 5.0);
+        }
+        c.counter(0, "queued", 10.0, 6.0);
+        assert_eq!(c.tracks[0].points.len(), 2);
+    }
+
+    #[test]
+    fn round_trips_through_parser() {
+        let mut c = ChromeTrace::new();
+        c.process(0, "driver");
+        c.instant(0, 0, 1.25, "update", vec![("rids", num(4.0))]);
+        let text = c.finish().to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("traceEvents").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn nonfinite_inputs_never_reach_json() {
+        let mut c = ChromeTrace::new();
+        c.counter(0, "kv", f64::NAN, f64::INFINITY);
+        c.slice(0, 0, f64::NAN, f64::NAN, "x", vec![]);
+        let text = c.finish().to_string_compact();
+        assert!(Json::parse(&text).is_ok());
+        assert!(!text.contains("NaN") && !text.contains("inf"));
+    }
+}

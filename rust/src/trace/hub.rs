@@ -1,0 +1,265 @@
+//! `TelemetryHub` — the SLO aggregation side of the tracer.
+//!
+//! The hub consumes finished [`RequestSpan`]s plus driver-level events and
+//! keeps: raw latency samples (exact quantiles for reports), log-bucketed
+//! histograms (the tail view, shared `util::stats` machinery), per-engine
+//! counters with cause attribution (steals in/out, governor sheds, forced
+//! preempts, KV-pressure ticks), and per-decision tallies keyed by
+//! `Decision::label`.  Everything is in backend clock units; the CLI
+//! converts `--slo MS` before construction.
+
+use crate::util::stats::{quantile, LogHistogram};
+use std::collections::BTreeMap;
+
+use super::span::{RequestSpan, SpanOutcome};
+
+/// Per-engine intervention counters (cause attribution: a lane leaving an
+/// engine is a steal, a governor shed, or a forced preempt — never just
+/// "a preemption").
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineCounters {
+    /// Requests migrated away by executed steals.
+    pub steals_out: u64,
+    /// Requests migrated in by executed steals.
+    pub steals_in: u64,
+    /// Lanes shed by the KV governor (`Decision::Throttle`).
+    pub sheds: u64,
+    /// Lanes forced out by `Decision::Preempt`.
+    pub preempts: u64,
+    /// Post-step samples in which this engine reported `kv_pressure`.
+    pub kv_pressure_ticks: u64,
+    /// Post-step samples in which this engine reported `kv_blocked`.
+    pub kv_blocked_ticks: u64,
+}
+
+/// SLO roll-up of one traced run (all times in backend clock units —
+/// simulated seconds, live host seconds, or harness ticks).  Quantiles are
+/// exact (computed from raw samples, `util::stats::quantile`); the hub's
+/// log-histograms carry the same data for tail visualization.
+#[derive(Debug, Clone, Default)]
+pub struct SloSummary {
+    /// Spans that ever entered the buffer.
+    pub enqueued: usize,
+    /// Natural completions (full length).
+    pub completed: usize,
+    /// Harvest-clipped (trained at partial length).
+    pub clipped: usize,
+    /// Dropped without training.
+    pub dropped: usize,
+    pub ttft_p50: f64,
+    pub ttft_p90: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p90: f64,
+    pub tpot_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    pub queue_p50: f64,
+    pub queue_p99: f64,
+    pub mean_ttft: f64,
+    pub mean_tpot: f64,
+    /// The SLO threshold the goodput was judged against (clock units).
+    pub slo: Option<f64>,
+    /// Fraction of enqueued requests that produced a trained trajectory
+    /// (completed or clipped) within the SLO; with no SLO set, simply the
+    /// fraction that produced one at all.
+    pub goodput: f64,
+}
+
+/// Latency + counter aggregation for one traced run.
+#[derive(Debug, Clone)]
+pub struct TelemetryHub {
+    /// SLO threshold in backend clock units (None = no deadline).
+    pub slo: Option<f64>,
+    pub enqueued: usize,
+    pub completed: usize,
+    pub clipped: usize,
+    pub dropped: usize,
+    pub consumed: usize,
+    slo_met: usize,
+    ttft: Vec<f64>,
+    tpot: Vec<f64>,
+    e2e: Vec<f64>,
+    queue_wait: Vec<f64>,
+    /// Log-bucketed tails (20 bins/decade over 12 decades — wide enough
+    /// for tick clocks and second clocks alike).
+    pub ttft_hist: LogHistogram,
+    pub e2e_hist: LogHistogram,
+    pub engines: Vec<EngineCounters>,
+    /// Driver decisions by `Decision::label`.
+    pub decisions: BTreeMap<&'static str, u64>,
+    pub ticks: u64,
+    pub refills: u64,
+    pub prompts_loaded: u64,
+    pub harvests: u64,
+    pub updates: u64,
+    pub barriers: u64,
+    pub steals_refused: u64,
+    pub throttles_refused: u64,
+}
+
+impl TelemetryHub {
+    pub fn new(slo: Option<f64>) -> Self {
+        TelemetryHub {
+            slo,
+            enqueued: 0,
+            completed: 0,
+            clipped: 0,
+            dropped: 0,
+            consumed: 0,
+            slo_met: 0,
+            ttft: Vec::new(),
+            tpot: Vec::new(),
+            e2e: Vec::new(),
+            queue_wait: Vec::new(),
+            ttft_hist: LogHistogram::new(1e-6, 1e6, 240),
+            e2e_hist: LogHistogram::new(1e-6, 1e6, 240),
+            engines: Vec::new(),
+            decisions: BTreeMap::new(),
+            ticks: 0,
+            refills: 0,
+            prompts_loaded: 0,
+            harvests: 0,
+            updates: 0,
+            barriers: 0,
+            steals_refused: 0,
+            throttles_refused: 0,
+        }
+    }
+
+    /// Per-engine counter slot, grown on demand.
+    pub fn engine(&mut self, i: usize) -> &mut EngineCounters {
+        if i >= self.engines.len() {
+            self.engines.resize(i + 1, EngineCounters::default());
+        }
+        &mut self.engines[i]
+    }
+
+    pub fn tally(&mut self, label: &'static str) {
+        *self.decisions.entry(label).or_insert(0) += 1;
+    }
+
+    /// Fold one finished span into the latency aggregates.  Clipped spans
+    /// count (they produced a trained trajectory); drops only count in the
+    /// outcome tallies.
+    pub fn finish_span(&mut self, span: &RequestSpan) {
+        match span.outcome {
+            SpanOutcome::Completed => self.completed += 1,
+            SpanOutcome::Clipped => self.clipped += 1,
+            SpanOutcome::Dropped => {
+                self.dropped += 1;
+                return;
+            }
+            SpanOutcome::InFlight => return,
+        }
+        if let Some(t) = span.ttft() {
+            self.ttft.push(t);
+            self.ttft_hist.push(t);
+        }
+        if let Some(t) = span.tpot() {
+            self.tpot.push(t);
+        }
+        if let Some(t) = span.queue_wait() {
+            self.queue_wait.push(t);
+        }
+        if let Some(t) = span.e2e() {
+            self.e2e.push(t);
+            self.e2e_hist.push(t);
+            if self.slo.is_none_or(|s| t <= s) {
+                self.slo_met += 1;
+            }
+        }
+    }
+
+    pub fn summary(&self) -> SloSummary {
+        // exact quantiles from the raw samples; `q0` guards the NaN an
+        // empty sample set would leak into JSON artifacts
+        let q0 = |xs: &[f64], q: f64| if xs.is_empty() { 0.0 } else { quantile(xs, q) };
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        SloSummary {
+            enqueued: self.enqueued,
+            completed: self.completed,
+            clipped: self.clipped,
+            dropped: self.dropped,
+            ttft_p50: q0(&self.ttft, 0.50),
+            ttft_p90: q0(&self.ttft, 0.90),
+            ttft_p99: q0(&self.ttft, 0.99),
+            tpot_p50: q0(&self.tpot, 0.50),
+            tpot_p90: q0(&self.tpot, 0.90),
+            tpot_p99: q0(&self.tpot, 0.99),
+            e2e_p50: q0(&self.e2e, 0.50),
+            e2e_p99: q0(&self.e2e, 0.99),
+            queue_p50: q0(&self.queue_wait, 0.50),
+            queue_p99: q0(&self.queue_wait, 0.99),
+            mean_ttft: mean(&self.ttft),
+            mean_tpot: mean(&self.tpot),
+            slo: self.slo,
+            goodput: if self.enqueued == 0 {
+                0.0
+            } else {
+                self.slo_met as f64 / self.enqueued as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::span::SpanOutcome;
+
+    fn span(rid: u64, ft: f64, fin: f64, tokens: usize, outcome: SpanOutcome) -> RequestSpan {
+        let mut s = RequestSpan::new(rid, 0.0);
+        s.dispatched = Some(0.0);
+        s.first_token = Some(ft);
+        s.finished = Some(fin);
+        s.tokens = tokens;
+        s.outcome = outcome;
+        s
+    }
+
+    #[test]
+    fn summary_quantiles_and_goodput() {
+        let mut hub = TelemetryHub::new(Some(4.0));
+        hub.enqueued = 4;
+        for (rid, fin) in [(0, 3.0), (1, 5.0), (2, 3.0), (3, 5.0)] {
+            hub.finish_span(&span(rid, 1.0, fin, 3, SpanOutcome::Completed));
+        }
+        let s = hub.summary();
+        assert_eq!(s.completed, 4);
+        assert!((s.ttft_p50 - 1.0).abs() < 1e-12);
+        assert!((s.e2e_p50 - 4.0).abs() < 1e-12); // interp of [3,3,5,5]
+        assert!((s.e2e_p99 - 5.0).abs() < 1e-12);
+        assert!((s.goodput - 0.5).abs() < 1e-12); // two of four within 4.0
+    }
+
+    #[test]
+    fn drops_and_inflight_skip_latency_stats() {
+        let mut hub = TelemetryHub::new(None);
+        hub.enqueued = 2;
+        hub.finish_span(&span(0, 1.0, 2.0, 2, SpanOutcome::Dropped));
+        hub.finish_span(&RequestSpan::new(1, 0.0)); // in-flight
+        let s = hub.summary();
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.e2e_p99, 0.0); // guarded, not NaN
+        assert_eq!(s.goodput, 0.0);
+    }
+
+    #[test]
+    fn engine_counters_grow_on_demand() {
+        let mut hub = TelemetryHub::new(None);
+        hub.engine(3).sheds += 1;
+        assert_eq!(hub.engines.len(), 4);
+        assert_eq!(hub.engines[3].sheds, 1);
+        hub.tally("step");
+        hub.tally("step");
+        assert_eq!(hub.decisions["step"], 2);
+    }
+}

@@ -1,0 +1,624 @@
+//! Per-request lifecycle tracing + SLO telemetry.
+//!
+//! One [`Tracer`] rides along `sched::policy::drive_traced` — the SINGLE
+//! tap point every backend (live, sim, harness) runs through — and
+//! records three things from the same observations:
+//!
+//! 1. [`RequestSpan`]s: the lifecycle biography of every buffer entry
+//!    (enqueue, dispatch, first token, interventions, finish verdict,
+//!    trainer consumption), from which TTFT / TPOT / queue-wait / e2e
+//!    latency derive.
+//! 2. A [`TelemetryHub`]: exact p50/p90/p99 latency quantiles,
+//!    log-bucketed tail histograms, per-engine intervention counters with
+//!    cause attribution, per-decision tallies, and the SLO goodput.
+//! 3. Optionally a [`ChromeTrace`]: a Perfetto-loadable trace with
+//!    engines as processes, lanes as threads, one slice per request's
+//!    decode span, instants for steals/sheds/preempts/harvests, and
+//!    KV/occupancy counter tracks.
+//!
+//! Because the taps read only through [`ScheduleBackend`]'s shared
+//! introspection surface (`schedulable`, `ready_rids`, `engine_loads`,
+//! `lane_rids`, `trace_clock`), the three backends record identically and
+//! none of them carries tracing code of its own.  [`Tracer::disabled`] is
+//! a no-op sink: every tap returns immediately, so the plain `drive`
+//! entry point costs nothing and decision sequences are byte-identical
+//! with tracing off (pinned by the policy goldens; the disabled-vs-enabled
+//! cost gap is measured in `benches/sched_bench.rs`).
+
+pub mod chrome;
+pub mod hub;
+pub mod series;
+pub mod span;
+
+pub use chrome::ChromeTrace;
+pub use hub::{EngineCounters, SloSummary, TelemetryHub};
+pub use span::{RequestSpan, SpanMark, SpanOutcome};
+
+use crate::sched::policy::{
+    Decision, EngineLoad, HarvestAction, HarvestItem, ScheduleBackend,
+};
+use crate::util::json::{num, s, Json};
+use std::collections::{BTreeMap, HashSet};
+
+/// The driver-side recording facade (see the module docs).  All state
+/// lives here — backends only expose read-only introspection.
+pub struct Tracer {
+    enabled: bool,
+    hub: TelemetryHub,
+    chrome: Option<ChromeTrace>,
+    spans: BTreeMap<u64, RequestSpan>,
+    /// Monotone pool clock (max over everything observed so far).
+    clock: f64,
+    /// Executed `Step`s — the fallback clock for backends that do not
+    /// override `trace_clock`.
+    steps: u64,
+    /// `schedulable()` before the current `Refill` (enqueue diff).
+    snap_sched: Vec<u64>,
+    /// `ready_rids()` before the current `Step`/`Harvest` (finish diff).
+    snap_ready: Vec<u64>,
+    /// Lane victim captured before a `Preempt`/lane `Steal` executes.
+    victim: Option<u64>,
+    /// Lane rids of the throttled engine before the shed (victim diff).
+    throttle_snap: Vec<u64>,
+}
+
+impl Tracer {
+    /// The no-op sink `drive` uses: every tap returns immediately.
+    pub fn disabled() -> Self {
+        Self::build(false, None, false)
+    }
+
+    /// Recording tracer.  `slo` is the deadline in backend clock units
+    /// (None = no deadline, goodput counts every trained trajectory);
+    /// `chrome` additionally builds the Perfetto-loadable event trace.
+    pub fn new(slo: Option<f64>, chrome: bool) -> Self {
+        Self::build(true, slo, chrome)
+    }
+
+    fn build(enabled: bool, slo: Option<f64>, chrome: bool) -> Self {
+        Tracer {
+            enabled,
+            hub: TelemetryHub::new(slo),
+            chrome: if chrome { Some(ChromeTrace::new()) } else { None },
+            spans: BTreeMap::new(),
+            clock: 0.0,
+            steps: 0,
+            snap_sched: Vec::new(),
+            snap_ready: Vec::new(),
+            victim: None,
+            throttle_snap: Vec::new(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Current pool clock: the backend's own clock when it exposes one
+    /// (`trace_clock`), else the executed-step count; never goes backward.
+    fn now(&mut self, backend: &dyn ScheduleBackend) -> f64 {
+        let c = backend.trace_clock();
+        if c.is_finite() {
+            self.clock = self.clock.max(c);
+        } else {
+            self.clock = self.clock.max(self.steps as f64);
+        }
+        self.clock
+    }
+
+    fn span_mut(&mut self, rid: u64, at: f64) -> &mut RequestSpan {
+        self.spans.entry(rid).or_insert_with(|| RequestSpan::new(rid, at))
+    }
+
+    // ---- taps (one per drive_traced site) ----
+
+    /// Before the loop: name the Perfetto rows and pick up anything the
+    /// backend already considers schedulable (entries loaded before the
+    /// driver started get their enqueue stamp here).
+    pub fn begin(&mut self, policy: &str, backend: &dyn ScheduleBackend) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        let loads = backend.engine_loads();
+        if let Some(c) = self.chrome.as_mut() {
+            c.process(0, &format!("driver ({policy})"));
+            for (e, l) in loads.iter().enumerate() {
+                c.process(e + 1, &format!("engine {e}"));
+                c.thread(e + 1, 0, "events");
+                for lane in 0..l.lanes {
+                    c.thread(e + 1, lane + 1, &format!("lane {lane}"));
+                }
+            }
+        }
+        for rid in backend.schedulable() {
+            if !self.spans.contains_key(&rid) {
+                self.hub.enqueued += 1;
+                self.spans.insert(rid, RequestSpan::new(rid, at));
+            }
+        }
+    }
+
+    pub fn decision(&mut self, d: &Decision) {
+        if !self.enabled {
+            return;
+        }
+        self.hub.tally(d.label());
+    }
+
+    pub fn pre_refill(&mut self, backend: &dyn ScheduleBackend) {
+        if !self.enabled {
+            return;
+        }
+        self.snap_sched = backend.schedulable();
+    }
+
+    pub fn post_refill(&mut self, backend: &dyn ScheduleBackend, count: usize) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        self.hub.refills += 1;
+        self.hub.prompts_loaded += count as u64;
+        let prev: HashSet<u64> = self.snap_sched.iter().copied().collect();
+        for rid in backend.schedulable() {
+            if !prev.contains(&rid) && !self.spans.contains_key(&rid) {
+                self.hub.enqueued += 1;
+                self.spans.insert(rid, RequestSpan::new(rid, at));
+            }
+        }
+        if count > 0 {
+            if let Some(c) = self.chrome.as_mut() {
+                c.instant(0, 0, at, "refill", vec![("prompts", num(count as f64))]);
+            }
+        }
+    }
+
+    pub fn admitted(&mut self, backend: &dyn ScheduleBackend, rids: &[u64]) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        for &rid in rids {
+            let sp = self.span_mut(rid, at);
+            if sp.dispatched.is_none() {
+                sp.dispatched = Some(at);
+            }
+        }
+    }
+
+    pub fn pre_step(&mut self, backend: &dyn ScheduleBackend) {
+        if !self.enabled {
+            return;
+        }
+        self.snap_ready = backend.ready_rids();
+    }
+
+    /// After a `Step`: advance the clock, stamp first tokens from the
+    /// lane occupancy, close spans for newly-ready rids, sample the
+    /// counter tracks, and attribute KV pressure.
+    pub fn post_step(&mut self, backend: &dyn ScheduleBackend, loads: &[EngineLoad]) {
+        if !self.enabled {
+            return;
+        }
+        self.steps += 1;
+        let at = self.now(backend);
+        self.hub.ticks += 1;
+        for (e, l) in loads.iter().enumerate() {
+            for (lane, rid) in backend.lane_rids(e) {
+                if let Some(sp) = self.spans.get_mut(&rid) {
+                    if sp.first_token.is_none() {
+                        sp.first_token = Some(at);
+                        sp.engine = Some(e);
+                        sp.lane = Some(lane);
+                    }
+                }
+            }
+            let ec = self.hub.engine(e);
+            if l.kv_pressure {
+                ec.kv_pressure_ticks += 1;
+            }
+            if l.kv_blocked {
+                ec.kv_blocked_ticks += 1;
+            }
+            if let Some(c) = self.chrome.as_mut() {
+                c.counter(e + 1, "running", at, l.active as f64);
+                c.counter(e + 1, "queued", at, l.queued as f64);
+                if l.kv_budget != usize::MAX {
+                    c.counter(e + 1, "kv_used", at, l.kv_used as f64);
+                }
+            }
+        }
+        if let Some(c) = self.chrome.as_mut() {
+            c.counter(0, "queued", at, backend.view().queued as f64);
+        }
+        self.close_new_ready(backend, at);
+    }
+
+    /// Spans newly present in `ready_rids()` since the last snapshot
+    /// finished naturally (full length).
+    fn close_new_ready(&mut self, backend: &dyn ScheduleBackend, at: f64) {
+        let prev: HashSet<u64> = self.snap_ready.iter().copied().collect();
+        for rid in backend.ready_rids() {
+            if prev.contains(&rid) {
+                continue;
+            }
+            let done = self.spans.get(&rid).is_some_and(|sp| sp.finished.is_some());
+            if !done {
+                let tokens = backend.ready_len(rid);
+                self.finish_request(rid, at, tokens, SpanOutcome::Completed);
+            }
+        }
+        self.snap_ready = backend.ready_rids();
+    }
+
+    fn finish_request(&mut self, rid: u64, at: f64, tokens: usize, outcome: SpanOutcome) {
+        let sp = self.span_mut(rid, at);
+        if sp.finished.is_some() {
+            return;
+        }
+        // a request that finishes in the tick it was admitted never shows
+        // up in a lane scan: its whole decode span collapses to the finish
+        if sp.first_token.is_none() && !matches!(outcome, SpanOutcome::Dropped) {
+            sp.first_token = Some(at);
+        }
+        sp.finished = Some(at);
+        sp.tokens = tokens;
+        sp.outcome = outcome;
+        let sp = self.spans[&rid].clone();
+        self.hub.finish_span(&sp);
+        if let Some(c) = self.chrome.as_mut() {
+            if let (Some(ft), Some(fin)) = (sp.first_token, sp.finished) {
+                let pid = sp.engine.map(|e| e + 1).unwrap_or(0);
+                let tid = sp.lane.map(|l| l + 1).unwrap_or(0);
+                let label = match outcome {
+                    SpanOutcome::Completed => "completed",
+                    SpanOutcome::Clipped => "clipped",
+                    SpanOutcome::Dropped => "dropped",
+                    SpanOutcome::InFlight => "in_flight",
+                };
+                c.slice(
+                    pid,
+                    tid,
+                    ft,
+                    fin - ft,
+                    &format!("req {rid}"),
+                    vec![
+                        ("rid", num(rid as f64)),
+                        ("tokens", num(tokens as f64)),
+                        ("ttft", num(sp.ttft().unwrap_or(0.0))),
+                        ("tpot", num(sp.tpot().unwrap_or(0.0))),
+                        ("queue_wait", num(sp.queue_wait().unwrap_or(0.0))),
+                        ("outcome", s(label)),
+                    ],
+                );
+            }
+        }
+    }
+
+    pub fn pre_harvest(&mut self, backend: &dyn ScheduleBackend) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        self.snap_ready = backend.ready_rids();
+        self.hub.harvests += 1;
+        if let Some(c) = self.chrome.as_mut() {
+            c.instant(0, 0, at, "harvest", vec![]);
+        }
+    }
+
+    /// One classified harvest item (called after `resolve` applied it).
+    pub fn verdict(&mut self, backend: &dyn ScheduleBackend, it: &HarvestItem, act: HarvestAction) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        match act {
+            HarvestAction::Clip => {
+                self.finish_request(it.rid, at, it.progress, SpanOutcome::Clipped);
+            }
+            HarvestAction::Drop => {
+                self.finish_request(it.rid, at, it.progress, SpanOutcome::Dropped);
+            }
+            HarvestAction::Requeue => {
+                self.span_mut(it.rid, at).marks.push((at, SpanMark::Requeued));
+            }
+            HarvestAction::Restart => {
+                self.span_mut(it.rid, at).marks.push((at, SpanMark::Restarted));
+            }
+            HarvestAction::Resume => {
+                self.span_mut(it.rid, at).marks.push((at, SpanMark::Resumed));
+            }
+        }
+    }
+
+    /// After every verdict resolved: the live backend also drains natural
+    /// completions into the ready set during `harvest_candidates`, so the
+    /// finish diff runs here as well as after `Step`.
+    pub fn post_harvest(&mut self, backend: &dyn ScheduleBackend) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        self.close_new_ready(backend, at);
+    }
+
+    /// Before a `Preempt` executes: capture the victim from the lane map.
+    pub fn pre_preempt(&mut self, backend: &dyn ScheduleBackend, engine: usize, lane: usize) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        self.hub.engine(engine).preempts += 1;
+        let victim = backend
+            .lane_rids(engine)
+            .into_iter()
+            .find(|&(l, _)| l == lane)
+            .map(|(_, rid)| rid);
+        if let Some(rid) = victim {
+            self.span_mut(rid, at).marks.push((at, SpanMark::Preempted { engine }));
+            if let Some(c) = self.chrome.as_mut() {
+                c.instant(engine + 1, 0, at, "preempt", vec![("rid", num(rid as f64))]);
+            }
+        }
+    }
+
+    /// Before a `Steal` executes: lane steals name their victim up front;
+    /// queue steals are attributed by count only (queue contents are not
+    /// introspectable through the backend trait).
+    pub fn pre_steal(&mut self, backend: &dyn ScheduleBackend, from: usize, lane: Option<usize>) {
+        if !self.enabled {
+            return;
+        }
+        self.victim = lane.and_then(|l| {
+            backend
+                .lane_rids(from)
+                .into_iter()
+                .find(|&(ll, _)| ll == l)
+                .map(|(_, rid)| rid)
+        });
+    }
+
+    pub fn post_steal(&mut self, backend: &dyn ScheduleBackend, from: usize, to: usize, moved: bool) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        let victim = self.victim.take();
+        if !moved {
+            self.hub.steals_refused += 1;
+            return;
+        }
+        self.hub.engine(from).steals_out += 1;
+        self.hub.engine(to).steals_in += 1;
+        if let Some(rid) = victim {
+            self.span_mut(rid, at).marks.push((at, SpanMark::Stolen { from, to }));
+        }
+        if let Some(c) = self.chrome.as_mut() {
+            let mut args = vec![("to", num(to as f64))];
+            if let Some(rid) = victim {
+                args.push(("rid", num(rid as f64)));
+            }
+            c.instant(from + 1, 0, at, "steal", args);
+        }
+    }
+
+    /// Before a `Throttle` executes: snapshot the engine's lanes so the
+    /// shed victim falls out of the diff.
+    pub fn pre_throttle(&mut self, backend: &dyn ScheduleBackend, engine: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.throttle_snap = backend.lane_rids(engine).into_iter().map(|(_, rid)| rid).collect();
+    }
+
+    pub fn post_throttle(&mut self, backend: &dyn ScheduleBackend, engine: usize, shed: bool) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        if !shed {
+            self.hub.throttles_refused += 1;
+            self.throttle_snap.clear();
+            return;
+        }
+        self.hub.engine(engine).sheds += 1;
+        let after: HashSet<u64> =
+            backend.lane_rids(engine).into_iter().map(|(_, rid)| rid).collect();
+        let snap = std::mem::take(&mut self.throttle_snap);
+        for rid in snap {
+            if !after.contains(&rid) {
+                self.span_mut(rid, at).marks.push((at, SpanMark::Shed { engine }));
+                if let Some(c) = self.chrome.as_mut() {
+                    c.instant(engine + 1, 0, at, "shed", vec![("rid", num(rid as f64))]);
+                }
+            }
+        }
+    }
+
+    /// After a trainer update consumed these trajectories.
+    pub fn updated(&mut self, backend: &dyn ScheduleBackend, rids: &[u64]) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        self.hub.updates += 1;
+        self.hub.consumed += rids.len();
+        for &rid in rids {
+            let sp = self.span_mut(rid, at);
+            if sp.consumed.is_none() {
+                sp.consumed = Some(at);
+            }
+        }
+        if let Some(c) = self.chrome.as_mut() {
+            c.instant(0, 0, at, "update", vec![("trajectories", num(rids.len() as f64))]);
+        }
+    }
+
+    pub fn barrier(&mut self, backend: &dyn ScheduleBackend) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.now(backend);
+        self.hub.barriers += 1;
+        if let Some(c) = self.chrome.as_mut() {
+            c.instant(0, 0, at, "barrier", vec![]);
+        }
+    }
+
+    // ---- results ----
+
+    pub fn slo_summary(&self) -> SloSummary {
+        self.hub.summary()
+    }
+
+    pub fn hub(&self) -> &TelemetryHub {
+        &self.hub
+    }
+
+    pub fn spans(&self) -> &BTreeMap<u64, RequestSpan> {
+        &self.spans
+    }
+
+    /// The Chrome trace (None when constructed without one).
+    pub fn chrome_json(&self) -> Option<Json> {
+        self.chrome.as_ref().map(|c| c.finish())
+    }
+
+    /// Events + buffered counter points recorded so far.
+    pub fn chrome_events(&self) -> usize {
+        self.chrome.as_ref().map(|c| c.event_count()).unwrap_or(0)
+    }
+
+    /// Write the Chrome trace as JSON (chrome://tracing / ui.perfetto.dev).
+    pub fn write_chrome(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let j = self
+            .chrome_json()
+            .ok_or_else(|| anyhow::anyhow!("tracer was built without a chrome trace"))?;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, j.to_string_compact())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::policy::SchedView;
+    use anyhow::Result;
+
+    struct TestBackend {
+        fresh: Vec<u64>,
+        ready: Vec<u64>,
+        clock: f64,
+    }
+
+    impl ScheduleBackend for TestBackend {
+        fn view(&self) -> SchedView {
+            SchedView::default()
+        }
+        fn schedulable(&self) -> Vec<u64> {
+            self.fresh.clone()
+        }
+        fn ready_rids(&self) -> Vec<u64> {
+            self.ready.clone()
+        }
+        fn ready_len(&self, _rid: u64) -> usize {
+            3
+        }
+        fn load_prompts(&mut self, _p: usize) -> Result<usize> {
+            Ok(0)
+        }
+        fn admit(&mut self, _r: &[u64], _e: Option<usize>) -> Result<()> {
+            Ok(())
+        }
+        fn step(&mut self) -> Result<usize> {
+            Ok(0)
+        }
+        fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
+            Ok(Vec::new())
+        }
+        fn resolve(&mut self, _it: &HarvestItem, _a: HarvestAction) -> Result<()> {
+            Ok(())
+        }
+        fn preempt(&mut self, _e: usize, _l: usize) -> Result<()> {
+            Ok(())
+        }
+        fn train(&mut self, _r: &[u64]) -> Result<()> {
+            Ok(())
+        }
+        fn barrier(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn exhausted(&self) -> bool {
+            true
+        }
+        fn trace_clock(&self) -> f64 {
+            self.clock
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut b = TestBackend { fresh: vec![0, 1], ready: vec![], clock: 1.0 };
+        let mut t = Tracer::disabled();
+        t.begin("test", &b);
+        t.pre_refill(&b);
+        b.fresh.push(2);
+        t.post_refill(&b, 1);
+        t.admitted(&b, &[0]);
+        t.pre_step(&b);
+        t.post_step(&b, &b.engine_loads());
+        assert!(t.spans().is_empty());
+        assert_eq!(t.hub().enqueued, 0);
+        assert_eq!(t.hub().ticks, 0);
+        assert!(t.chrome_json().is_none());
+        assert!(!t.enabled());
+    }
+
+    #[test]
+    fn lifecycle_through_taps() {
+        let mut b = TestBackend { fresh: vec![], ready: vec![], clock: 0.0 };
+        let mut t = Tracer::new(Some(10.0), false);
+        t.begin("test", &b);
+        t.pre_refill(&b);
+        b.fresh = vec![0, 1];
+        t.post_refill(&b, 2);
+        assert_eq!(t.hub().enqueued, 2);
+        t.admitted(&b, &[0, 1]);
+        b.fresh.clear();
+        t.pre_step(&b);
+        b.clock = 2.0;
+        b.ready = vec![0];
+        t.post_step(&b, &b.engine_loads());
+        let sp = &t.spans()[&0];
+        assert_eq!(sp.finished, Some(2.0));
+        assert_eq!(sp.outcome, SpanOutcome::Completed);
+        assert_eq!(sp.tokens, 3);
+        assert!(sp.is_ordered() && sp.is_complete());
+        // rid 1 still in flight
+        assert!(!t.spans()[&1].is_complete());
+        t.updated(&b, &[0]);
+        assert_eq!(t.spans()[&0].consumed, Some(2.0));
+        let s = t.slo_summary();
+        assert_eq!(s.completed, 1);
+        assert!((s.goodput - 0.5).abs() < 1e-12); // 1 of 2 within SLO
+    }
+
+    #[test]
+    fn clock_never_goes_backward() {
+        let mut b = TestBackend { fresh: vec![], ready: vec![], clock: 5.0 };
+        let mut t = Tracer::new(None, false);
+        t.begin("test", &b);
+        b.clock = 3.0; // a skewed engine clock must not rewind the trace
+        b.fresh = vec![7];
+        t.pre_refill(&b);
+        t.post_refill(&b, 1);
+        assert_eq!(t.spans()[&7].enqueued, 5.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Shared time-series machinery: the ONE export path for every
+//! `(timestamp, value)` track the repo produces — the simulator's merged
+//! KV-usage curve, `metrics::Timeline` CSV dumps, and the Chrome-trace
+//! counter tracks all route through these helpers instead of carrying
+//! their own copies of the merge/downsample/CSV logic.
+
+/// Merge per-source `(t, running_total)` sample streams into one pool-wide
+/// curve whose value at any time is the SUM of the latest sample from each
+/// source (sources start at 0).  Events are ordered by time, ties broken
+/// by source index, exactly like the per-engine merges the simulator has
+/// always done; the output carries one point per input event (coalescing
+/// is the consumer's choice).
+pub fn merge_running_totals(sources: &[&[(f64, usize)]]) -> Vec<(f64, usize)> {
+    let mut events: Vec<(f64, usize, usize)> = Vec::new();
+    for (idx, src) in sources.iter().enumerate() {
+        for &(t, v) in src.iter() {
+            events.push((t, idx, v));
+        }
+    }
+    if events.is_empty() {
+        return Vec::new();
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut cur = vec![0usize; sources.len()];
+    let mut total = 0usize;
+    let mut merged = Vec::with_capacity(events.len());
+    for (t, idx, v) in events {
+        total = total + v - cur[idx];
+        cur[idx] = v;
+        merged.push((t, total));
+    }
+    merged
+}
+
+/// Stride-downsample `points` to at most `cap` entries (first point always
+/// kept, order preserved).  `cap == 0` means unlimited.
+pub fn downsample<T: Copy>(points: &[T], cap: usize) -> Vec<T> {
+    if cap == 0 || points.len() <= cap {
+        return points.to_vec();
+    }
+    let stride = points.len().div_ceil(cap).max(1);
+    points.iter().copied().step_by(stride).collect()
+}
+
+/// Render a `(t, value)` series as a two-column CSV under `header`
+/// (pass e.g. `"t,running"`).  Timestamps print with `f64` Display —
+/// the format `Timeline::to_csv` has always emitted.
+pub fn to_csv(header: &str, points: &[(f64, usize)]) -> String {
+    let mut out = String::from(header);
+    out.push('\n');
+    for &(t, v) in points {
+        out.push_str(&format!("{t},{v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_latest_sample_per_source() {
+        let a: &[(f64, usize)] = &[(0.0, 1), (2.0, 3)];
+        let b: &[(f64, usize)] = &[(1.0, 2), (2.0, 0)];
+        let merged = merge_running_totals(&[a, b]);
+        // t=0: a=1; t=1: a=1,b=2 -> 3; t=2: a=3 first (idx tie-break) -> 5,
+        // then b=0 -> 3
+        assert_eq!(merged, vec![(0.0, 1), (1.0, 3), (2.0, 5), (2.0, 3)]);
+    }
+
+    #[test]
+    fn merge_empty_sources() {
+        assert!(merge_running_totals(&[&[], &[]]).is_empty());
+        assert!(merge_running_totals(&[]).is_empty());
+    }
+
+    #[test]
+    fn downsample_caps_and_preserves_order() {
+        let pts: Vec<(f64, usize)> = (0..1000).map(|i| (i as f64, i)).collect();
+        let ds = downsample(&pts, 256);
+        assert!(ds.len() <= 256);
+        assert_eq!(ds[0], (0.0, 0)); // first point kept
+        assert!(ds.windows(2).all(|w| w[0].0 < w[1].0));
+        // short series pass through untouched
+        assert_eq!(downsample(&pts[..10], 256), &pts[..10]);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = to_csv("t,running", &[(0.5, 2)]);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("t,running"));
+        assert_eq!(lines.next(), Some("0.5,2"));
+    }
+}

@@ -1,0 +1,195 @@
+//! Per-request lifecycle spans.
+//!
+//! A [`RequestSpan`] is the serving-side biography of one buffer entry
+//! (one rid), stamped by the driver tap in `sched::policy::drive_traced`:
+//!
+//! | stamp         | tap point                         | meaning                              |
+//! |---------------|-----------------------------------|--------------------------------------|
+//! | `enqueued`    | after `Refill` (schedulable diff) | prompt entered the buffer            |
+//! | `dispatched`  | after `Admit` naming the rid      | scheduler handed it to the pool      |
+//! | `first_token` | after a `Step` shows it in a lane | first decode iteration completed     |
+//! | `finished`    | ready-set diff / harvest verdict  | trajectory done (complete or clipped)|
+//! | `consumed`    | after `Update` naming the rid     | trainer consumed the trajectory      |
+//!
+//! In between, [`SpanMark`]s record the scheduling interventions the
+//! request suffered (preempt, shed, steal, requeue, restart, resume), in
+//! clock order.  All timestamps are in the backend's own clock units
+//! (simulated seconds, harness ticks, or live host seconds) read through
+//! `ScheduleBackend::trace_clock`, always sampled at the POOL level (max
+//! over engines), so every track in one trace shares one monotone clock.
+
+/// Terminal state of a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Still running / queued / awaiting training when the trace ended.
+    InFlight,
+    /// Finished naturally at its full length.
+    Completed,
+    /// Harvest verdict truncated it; trained at partial length.
+    Clipped,
+    /// Harvest verdict discarded it; never trained.
+    Dropped,
+}
+
+/// A scheduling intervention recorded mid-span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanMark {
+    /// `Decision::Preempt` kicked it out of a lane (progress kept).
+    Preempted { engine: usize },
+    /// KV backpressure shed it from a lane (`Decision::Throttle`).
+    Shed { engine: usize },
+    /// A work steal migrated it between engines.
+    Stolen { from: usize, to: usize },
+    /// Harvest verdict `Requeue` — untouched, back to schedulable.
+    Requeued,
+    /// Harvest verdict `Restart` — progress discarded, rescheduled.
+    Restarted,
+    /// Harvest verdict `Resume` — progress kept, rescheduled.
+    Resumed,
+}
+
+/// Lifecycle record of one request (see the module table).
+#[derive(Debug, Clone)]
+pub struct RequestSpan {
+    pub rid: u64,
+    pub enqueued: f64,
+    pub dispatched: Option<f64>,
+    pub first_token: Option<f64>,
+    pub finished: Option<f64>,
+    pub consumed: Option<f64>,
+    /// Harvested response tokens (clips are shorter than the full length).
+    pub tokens: usize,
+    /// Engine where the request first held a lane (finish-time engine for
+    /// requests that finish in the same tick they were admitted).
+    pub engine: Option<usize>,
+    pub lane: Option<usize>,
+    pub outcome: SpanOutcome,
+    /// Interventions in clock order.
+    pub marks: Vec<(f64, SpanMark)>,
+}
+
+impl RequestSpan {
+    pub fn new(rid: u64, enqueued: f64) -> Self {
+        RequestSpan {
+            rid,
+            enqueued,
+            dispatched: None,
+            first_token: None,
+            finished: None,
+            consumed: None,
+            tokens: 0,
+            engine: None,
+            lane: None,
+            outcome: SpanOutcome::InFlight,
+            marks: Vec::new(),
+        }
+    }
+
+    /// Buffer wait before the scheduler dispatched it into the pool.
+    pub fn queue_wait(&self) -> Option<f64> {
+        self.dispatched.map(|d| d - self.enqueued)
+    }
+
+    /// Time-to-first-token: enqueue until the first decode iteration.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token.map(|t| t - self.enqueued)
+    }
+
+    /// Time-per-output-token over the decode phase (finish - first token,
+    /// normalized by the tokens after the first; 1-token responses report
+    /// the full decode span).
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token, self.finished) {
+            (Some(ft), Some(fin)) => Some((fin - ft) / self.tokens.saturating_sub(1).max(1) as f64),
+            _ => None,
+        }
+    }
+
+    /// End-to-end latency: enqueue to finish.
+    pub fn e2e(&self) -> Option<f64> {
+        self.finished.map(|f| f - self.enqueued)
+    }
+
+    /// True when every present stamp is in lifecycle order
+    /// (enqueued <= dispatched <= first_token <= finished <= consumed) and
+    /// the marks are sorted by time.
+    pub fn is_ordered(&self) -> bool {
+        let mut last = self.enqueued;
+        for stamp in [self.dispatched, self.first_token, self.finished, self.consumed]
+            .into_iter()
+            .flatten()
+        {
+            if stamp < last {
+                return false;
+            }
+            last = stamp;
+        }
+        self.marks.windows(2).all(|w| w[0].0 <= w[1].0)
+            && self.marks.iter().all(|&(t, _)| t >= self.enqueued)
+    }
+
+    /// True when the span reached a terminal verdict with every stamp the
+    /// verdict implies: finished requests (completed or clipped) carry
+    /// dispatch/first-token/finish; drops only need the finish stamp
+    /// (a request can be dropped straight out of a queue).
+    pub fn is_complete(&self) -> bool {
+        match self.outcome {
+            SpanOutcome::InFlight => false,
+            SpanOutcome::Dropped => self.finished.is_some(),
+            SpanOutcome::Completed | SpanOutcome::Clipped => {
+                self.dispatched.is_some()
+                    && self.first_token.is_some()
+                    && self.finished.is_some()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finished_span() -> RequestSpan {
+        let mut s = RequestSpan::new(7, 0.0);
+        s.dispatched = Some(0.0);
+        s.first_token = Some(1.0);
+        s.finished = Some(5.0);
+        s.tokens = 5;
+        s.outcome = SpanOutcome::Completed;
+        s
+    }
+
+    #[test]
+    fn derived_latencies() {
+        let s = finished_span();
+        assert_eq!(s.ttft(), Some(1.0));
+        assert_eq!(s.e2e(), Some(5.0));
+        assert!((s.tpot().unwrap() - 1.0).abs() < 1e-12); // (5-1)/(5-1)
+        assert_eq!(s.queue_wait(), Some(0.0));
+        assert!(s.is_ordered() && s.is_complete());
+    }
+
+    #[test]
+    fn one_token_tpot_is_full_decode_span() {
+        let mut s = finished_span();
+        s.tokens = 1;
+        assert!((s.tpot().unwrap() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disorder_detected() {
+        let mut s = finished_span();
+        s.first_token = Some(9.0); // after finish
+        assert!(!s.is_ordered());
+        let mut s = finished_span();
+        s.marks = vec![(2.0, SpanMark::Requeued), (1.0, SpanMark::Resumed)];
+        assert!(!s.is_ordered());
+    }
+
+    #[test]
+    fn inflight_is_incomplete() {
+        let s = RequestSpan::new(1, 0.0);
+        assert!(!s.is_complete());
+        assert!(s.ttft().is_none() && s.tpot().is_none());
+    }
+}

@@ -67,35 +67,57 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
-/// Fixed-width histogram over [lo, hi); values outside clamp to edge bins.
+/// Fixed-width histogram over [lo, hi) with EXPLICIT underflow/overflow
+/// bins: out-of-range values no longer distort the edge bins (the old
+/// clamp-to-edge behavior silently merged `x < lo` into bin 0 and
+/// `x >= hi` into the last bin, which misreported tails).  NaN samples are
+/// ignored.  `total()` and `cdf()` account for the out-of-range mass.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     pub lo: f64,
     pub hi: f64,
     pub counts: Vec<u64>,
+    /// Samples below `lo`.
+    pub underflow: u64,
+    /// Samples at or above `hi`.
+    pub overflow: u64,
 }
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(bins > 0 && hi > lo);
-        Self { lo, hi, counts: vec![0; bins] }
+        Self { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
     }
 
     pub fn push(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
         let bins = self.counts.len();
         let t = (x - self.lo) / (self.hi - self.lo);
-        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
-        self.counts[idx] += 1;
+        if t < 0.0 {
+            self.underflow += 1;
+            return;
+        }
+        let idx = (t * bins as f64) as usize;
+        if idx >= bins {
+            self.overflow += 1;
+        } else {
+            self.counts[idx] += 1;
+        }
     }
 
+    /// All samples, including the underflow/overflow bins.
     pub fn total(&self) -> u64 {
-        self.counts.iter().sum()
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
     }
 
     /// Fraction of samples at or below the right edge of each bin (CDF).
+    /// Underflow counts as before the first bin; overflow only reaches the
+    /// total after the last edge, so `cdf().last() < 1` iff overflow > 0.
     pub fn cdf(&self) -> Vec<f64> {
         let total = self.total().max(1) as f64;
-        let mut acc = 0u64;
+        let mut acc = self.underflow;
         self.counts
             .iter()
             .map(|c| {
@@ -105,18 +127,99 @@ impl Histogram {
             .collect()
     }
 
-    /// Render as a compact ASCII bar chart (for harness stdout).
+    /// Quantile estimate by linear interpolation within the bin holding
+    /// the target rank.  Ranks in the underflow bin resolve to `lo`, in
+    /// the overflow bin to `hi` (the histogram cannot know how far out
+    /// they sit).  NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut acc = self.underflow as f64;
+        if self.underflow > 0 && target <= acc {
+            return self.lo;
+        }
+        let width = (self.hi - self.lo) / self.counts.len() as f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = acc + c as f64;
+            if target <= next {
+                let frac = ((target - acc) / c as f64).clamp(0.0, 1.0);
+                return self.lo + width * (i as f64 + frac);
+            }
+            acc = next;
+        }
+        self.hi
+    }
+
+    /// Render as a compact ASCII bar chart (for harness stdout); nonzero
+    /// underflow/overflow get their own rows.
     pub fn ascii(&self, width: usize) -> String {
         let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
         let bins = self.counts.len();
         let mut out = String::new();
+        if self.underflow > 0 {
+            out.push_str(&format!("{:>8}{:<9} | {}\n", "< ", self.lo, self.underflow));
+        }
         for (i, &c) in self.counts.iter().enumerate() {
             let l = self.lo + (self.hi - self.lo) * i as f64 / bins as f64;
             let r = self.lo + (self.hi - self.lo) * (i + 1) as f64 / bins as f64;
             let bar = "#".repeat((c as usize * width).div_ceil(max as usize).min(width));
             out.push_str(&format!("{l:>8.0}-{r:<8.0} |{bar:<width$}| {c}\n"));
         }
+        if self.overflow > 0 {
+            out.push_str(&format!("{:>8}{:<9} | {}\n", ">= ", self.hi, self.overflow));
+        }
         out
+    }
+}
+
+/// Log-bucketed histogram for long-tailed POSITIVE samples (latencies):
+/// fixed-width bins over `log10(x)` between `lo` and `hi`, so p99 of a
+/// heavy tail lands in a bin of proportional (not absolute) width.
+/// Non-positive samples count as underflow.  Shares [`Histogram`]'s
+/// underflow/overflow and interpolation machinery.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    inner: Histogram,
+}
+
+impl LogHistogram {
+    /// `lo`/`hi` are sample-space bounds (both > 0).
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo);
+        LogHistogram { inner: Histogram::new(lo.log10(), hi.log10(), bins) }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x > 0.0 {
+            self.inner.push(x.log10());
+        } else if !x.is_nan() {
+            self.inner.underflow += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.inner.total()
+    }
+
+    /// Quantile in sample space (the inner log-space estimate mapped back).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let v = self.inner.quantile(q);
+        if v.is_nan() {
+            v
+        } else {
+            10f64.powf(v)
+        }
+    }
+
+    /// The log-space histogram (bin edges are log10 of sample values).
+    pub fn log_bins(&self) -> &Histogram {
+        &self.inner
     }
 }
 
@@ -151,11 +254,79 @@ mod tests {
             h.push(x);
         }
         assert_eq!(h.total(), 6);
-        assert_eq!(h.counts[0], 3); // 0.5, 1.5, clamped -1.0
+        assert_eq!(h.counts[0], 2); // 0.5, 1.5 — NOT the clamped -1.0
         assert_eq!(h.counts[1], 1); // 2.5
-        assert_eq!(h.counts[4], 2); // 9.5 and clamped 11.0
+        assert_eq!(h.counts[4], 1); // 9.5 — NOT the clamped 11.0
+        assert_eq!(h.underflow, 1); // -1.0
+        assert_eq!(h.overflow, 1); // 11.0
         let cdf = h.cdf();
-        assert!((cdf[4] - 1.0).abs() < 1e-12);
+        // 1 underflow + 4 in-range of 6 by the last edge; overflow never
+        // crosses an edge
+        assert!((cdf[4] - 5.0 / 6.0).abs() < 1e-12);
+        assert!((cdf[0] - 3.0 / 6.0).abs() < 1e-12); // underflow + bin 0
+    }
+
+    #[test]
+    fn histogram_quantiles_match_exact_on_uniform() {
+        // bin-center samples: within any bin the mass sits at one point,
+        // so interpolation error is bounded by the bin width
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 + 0.5).collect();
+        let mut h = Histogram::new(0.0, 100.0, 100);
+        for &x in &xs {
+            h.push(x);
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let exact = quantile(&xs, q);
+            assert!(
+                (h.quantile(q) - exact).abs() <= 1.0,
+                "q={q}: hist {} vs exact {exact}",
+                h.quantile(q)
+            );
+        }
+        assert!(h.quantile(0.5) > 0.0);
+    }
+
+    #[test]
+    fn histogram_quantile_overflow_and_underflow_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [1.0, 2.0, 3.0, 50.0, 60.0] {
+            h.push(x);
+        }
+        assert_eq!(h.overflow, 2);
+        // p99 rank lands in the overflow bin -> reported at the hi edge,
+        // not silently inside the last in-range bin
+        assert_eq!(h.quantile(0.99), 10.0);
+        assert_eq!(h.quantile(1.0), 10.0);
+        // all-underflow resolves to lo; empty is NaN
+        let mut u = Histogram::new(0.0, 1.0, 4);
+        u.push(-5.0);
+        assert_eq!(u.quantile(0.5), 0.0);
+        assert!(Histogram::new(0.0, 1.0, 4).quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn log_histogram_tracks_exact_quantiles_on_longtail() {
+        // two-decade spread; 20 bins/decade keeps relative error ~12%
+        let xs: Vec<f64> = (1..=200).map(|i| (i as f64).powf(1.5)).collect();
+        let mut h = LogHistogram::new(1e-3, 1e6, 180);
+        for &x in &xs {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 200);
+        for q in [0.5, 0.9, 0.99] {
+            let exact = quantile(&xs, q);
+            let est = h.quantile(q);
+            assert!(
+                (est / exact).ln().abs() < 0.13,
+                "q={q}: log-hist {est} vs exact {exact}"
+            );
+        }
+        // non-positive latencies are counted but never panic the log
+        let mut z = LogHistogram::new(1e-3, 1e3, 10);
+        z.push(0.0);
+        z.push(-1.0);
+        assert_eq!(z.total(), 2);
+        assert!((z.quantile(0.5) - 1e-3).abs() < 1e-9); // resolves to lo
     }
 
     #[test]

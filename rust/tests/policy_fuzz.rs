@@ -22,8 +22,9 @@
 use sortedrl::coordinator::SchedulerKind;
 use sortedrl::rollout::kv::{KvConfig, KvMode};
 use sortedrl::sched::harness::{HarnessDispatch, TokenBackend, HARNESS_PROMPT};
-use sortedrl::sched::policy::{drive, make_policy_full, PolicyParams, ScheduleBackend};
+use sortedrl::sched::policy::{drive_traced, make_policy_full, PolicyParams, ScheduleBackend};
 use sortedrl::sim::{longtail_workload, simulate_pool_opts, PoolSimOpts, SimMode};
+use sortedrl::trace::{SpanOutcome, Tracer};
 use sortedrl::util::proptest::{property, Gen};
 
 const MAX_LEN: usize = 24;
@@ -64,8 +65,11 @@ fn fuzz_token_backend_once(g: &mut Gen) {
     let mut policy = make_policy_full(kind, params, steal, kv_mode == KvMode::Paged);
     let mut b = TokenBackend::new_kv(&lens, engines, lanes, dispatch, kv);
     // per-transition invariants assert inside the backend; an Err here is
-    // a driver livelock bail — also a failure
-    drive(policy.as_mut(), &mut b).unwrap_or_else(|e| panic!("{ctx}: {e:#}"));
+    // a driver livelock bail — also a failure.  The recording tracer rides
+    // along so span completeness is fuzzed over the same schedule space.
+    let mut tracer = Tracer::new(None, false);
+    drive_traced(policy.as_mut(), &mut b, &mut tracer)
+        .unwrap_or_else(|e| panic!("{ctx}: {e:#}"));
     // terminal contract: nothing left in flight, every request trained or
     // deliberately dropped exactly once
     let v = b.view();
@@ -74,6 +78,24 @@ fn fuzz_token_backend_once(g: &mut Gen) {
     assert_eq!(b.consumed.len() + b.dropped.len(), n, "{ctx}: request lost");
     if !steal {
         assert!(b.steal_log.is_empty(), "{ctx}: stole without the wrapper");
+    }
+    // span completeness: every trained rid has a full, ordered lifecycle;
+    // every dropped rid was closed with the Dropped outcome
+    for &rid in &b.consumed {
+        let sp = tracer.spans().get(&rid)
+            .unwrap_or_else(|| panic!("{ctx}: consumed rid {rid} has no span"));
+        assert!(sp.dispatched.is_some(), "{ctx}: rid {rid} never dispatched");
+        assert!(sp.first_token.is_some(), "{ctx}: rid {rid} has no first token");
+        assert!(sp.finished.is_some(), "{ctx}: rid {rid} never finished");
+        assert!(sp.consumed.is_some(), "{ctx}: rid {rid} never consumed");
+        assert!(sp.is_ordered(), "{ctx}: rid {rid} span out of order: {sp:?}");
+        assert!(sp.is_complete(), "{ctx}: rid {rid} span incomplete: {sp:?}");
+    }
+    for &rid in &b.dropped {
+        let sp = tracer.spans().get(&rid)
+            .unwrap_or_else(|| panic!("{ctx}: dropped rid {rid} has no span"));
+        assert_eq!(sp.outcome, SpanOutcome::Dropped, "{ctx}: rid {rid} {sp:?}");
+        assert!(sp.finished.is_some(), "{ctx}: rid {rid} drop never stamped");
     }
 }
 
