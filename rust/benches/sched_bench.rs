@@ -9,12 +9,95 @@ use bench_util::{bench, report_rate};
 use sortedrl::rollout::kv::KvMode;
 use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, pool_makespan, simulate_pool, simulate_pool_opts,
-    simulate_pool_traced, CostModel, PoolSimOpts, SimMode,
+    longtail_workload, pool_makespan, scale_probe, simulate_pool, simulate_pool_opts,
+    simulate_pool_traced, CostModel, PoolSimOpts, SimCore, SimMode,
 };
 use sortedrl::trace::Tracer;
+use sortedrl::util::json::{num, obj, s, Json};
+
+/// Peak resident set (VmHWM) in kB from /proc/self/status; 0.0 when the
+/// proc filesystem is unavailable (non-Linux hosts).
+fn peak_rss_kb() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|body| {
+            body.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse::<f64>().ok())
+        })
+        .unwrap_or(0.0)
+}
+
+/// The scale headline: stage one oversubscribed wave of `requests`
+/// long-tail requests on `engines` engines, let the event core run the
+/// whole wave (cut off at `wall_ceiling_secs`), then time-box the
+/// tick-by-tick reference stepper on the same workload to measure the
+/// speedup.  Emits BENCH_sim.json for the CI perf guard.  Returns
+/// whether the event core finished every request inside the ceiling.
+fn scale_run(requests: usize, engines: usize, q_total: usize,
+             wall_ceiling_secs: f64) -> bool {
+    let cost = CostModel::default();
+    let w = longtail_workload(requests, 8192, 1);
+    println!("== scale headline: {requests} requests / {engines} engines x {} lanes ==",
+             q_total / engines);
+    let ev = scale_probe(&w, engines, q_total, cost,
+                         DispatchPolicy::ShortestPredictedFirst,
+                         PredictorKind::History, SimCore::Event,
+                         wall_ceiling_secs, 64);
+    let ev_rate = ev.completed as f64 / ev.wall_secs.max(1e-9);
+    println!("  event core:     {:>9}/{} requests in {:6.2}s host  \
+              ({:.0} req/s), makespan {:.0}s sim",
+             ev.completed, ev.requests, ev.wall_secs, ev_rate, ev.makespan);
+
+    // time-box the reference core on the same staged wave; its completion
+    // rate inside the budget is the speedup denominator (running 1M
+    // requests tick-by-tick to completion would take hours)
+    let rf = scale_probe(&w, engines, q_total, cost,
+                         DispatchPolicy::ShortestPredictedFirst,
+                         PredictorKind::History, SimCore::Reference,
+                         5.0_f64.min(wall_ceiling_secs), 64);
+    let rf_rate = rf.completed as f64 / rf.wall_secs.max(1e-9);
+    let speedup = if rf_rate > 0.0 { ev_rate / rf_rate } else { f64::INFINITY };
+    println!("  reference core: {:>9} requests in {:6.2}s host  \
+              ({:.0} req/s)  ->  {speedup:.0}x event-core speedup",
+             rf.completed, rf.wall_secs, rf_rate);
+    let rss = peak_rss_kb();
+    println!("  peak RSS (VmHWM proxy): {:.0} MiB", rss / 1024.0);
+
+    let j = obj(vec![
+        ("bench", s("sched_bench/scale")),
+        ("requests", num(ev.requests as f64)),
+        ("engines", num(ev.engines as f64)),
+        ("completed", num(ev.completed as f64)),
+        ("finished_all", Json::Bool(ev.finished_all)),
+        ("wall_secs", num(ev.wall_secs)),
+        ("requests_per_sec", num(ev_rate)),
+        ("makespan_sim_secs", num(ev.makespan)),
+        ("reference_requests_per_sec", num(rf_rate)),
+        ("speedup_vs_reference", num(if speedup.is_finite() { speedup } else { -1.0 })),
+        ("peak_rss_kb", num(rss)),
+    ]);
+    match std::fs::write("BENCH_sim.json", j.to_string_pretty()) {
+        Ok(()) => println!("  wrote BENCH_sim.json\n"),
+        Err(e) => eprintln!("  BENCH_sim.json write failed: {e}"),
+    }
+    ev.finished_all
+}
 
 fn main() {
+    // `--headline` (the CI perf guard) runs ONLY the 1M-request / 1k-engine
+    // scale probe so the wall-clock ceiling bounds a single measurement
+    if std::env::args().any(|a| a == "--headline") {
+        let ok = scale_run(1_000_000, 1_000, 32_000, 240.0);
+        if !ok {
+            eprintln!("headline FAILED: event core did not finish 1M requests \
+                       inside the wall ceiling");
+            std::process::exit(1);
+        }
+        return;
+    }
+
     println!("== sched benches: engine-pool dispatch on longtail_workload(512, 8192) ==\n");
     let w = longtail_workload(512, 8192, 1);
     let cost = CostModel::default();
@@ -187,4 +270,9 @@ fn main() {
         });
         report_rate("  predictions/sec", "ops/s", 1.0 / r.per_iter_secs);
     }
+    println!();
+
+    // reduced-scale probe so every bench run emits BENCH_sim.json; the CI
+    // perf guard runs the full 1M/1k version via `--headline`
+    scale_run(100_000, 128, 4_096, 120.0);
 }

@@ -19,7 +19,7 @@ use sortedrl::runtime::Runtime;
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
 use sortedrl::sim::{
     longtail_workload, simulate, simulate_pool_opts, simulate_pool_traced, CostModel,
-    PoolSimOpts, SimMode,
+    PoolSimOpts, SimCore, SimMode,
 };
 use sortedrl::tasks::logic::LogicTask;
 use sortedrl::tasks::math::MathTask;
@@ -119,6 +119,7 @@ USAGE:
                [--engines N] [--predictor oracle|history|bucket]
                [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
                [--kv-mode reserve|paged] [--kv-page TOK]
+               [--sim-core event|reference]
                [--trace-out FILE] [--slo MS]
   sortedrl info [--artifacts DIR] [--tag TAG]
 
@@ -129,6 +130,11 @@ usage (0 = unlimited); --kv-mode reserve charges prompt + generation cap
 per admitted lane, --kv-mode paged charges only the context actually
 generated, in --kv-page token pages, admitting on predicted lengths with
 shed/throttle backpressure when estimates undershoot.
+
+--sim-core picks the pool stepper: event (default) fuses silent decode
+spans through an event heap — same decisions, orders of magnitude fewer
+host ops; reference replays the original per-iteration stepper (the
+differential oracle).  An enabled tracer always uses reference.
 
 Tracing (train & sim): --trace-out FILE writes a Chrome-trace-event JSON
 of the run (open at https://ui.perfetto.dev); --slo MS records per-request
@@ -401,6 +407,10 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let dispatch = parse_dispatch(args)?;
     let steal = args.get("steal").is_some();
     let kv = parse_kv(args)?;
+    let core = match args.get("sim-core") {
+        Some(s) => SimCore::parse(s).context("--sim-core event|reference")?,
+        None => SimCore::default(),
+    };
     let w = longtail_workload(n, cap, seed);
     println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}\n");
     for (mode, label) in [(SimMode::Baseline, "baseline"),
@@ -427,6 +437,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             kv_budget: kv.budget,
             kv_mode: kv.mode,
             kv_page: kv.page,
+            core,
             ..PoolSimOpts::default()
         };
         let mut telemetry = (0.0, 0.0);
@@ -485,6 +496,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             kv_budget: kv.budget,
             kv_mode: kv.mode,
             kv_page: kv.page,
+            core,
             ..PoolSimOpts::default()
         };
         let slo_secs = slo_ms.map(|ms| ms / 1000.0);

@@ -5,12 +5,36 @@
 //! path regardless of backend.
 
 /// Piecewise-constant record of how many requests were actively decoding.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Timeline {
-    /// (time, running_requests_after_this_instant)
+    /// (time, running_requests_after_this_instant); every `stride`-th
+    /// change is retained (all of them at the default stride 1).
     events: Vec<(f64, usize)>,
     tokens_out: u64,
     finished: u64,
+    /// Record-time downsampling: keep every `stride`-th occupancy change.
+    /// The busy-area integral stays exact regardless.
+    stride: usize,
+    /// Occupancy changes observed (including ones striding dropped).
+    changes: u64,
+    /// Latest observed (t, running), even when striding dropped it.
+    last: Option<(f64, usize)>,
+    /// Exact ∫ running dt over [first event, `last`].
+    busy_area: f64,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Timeline {
+            events: Vec::new(),
+            tokens_out: 0,
+            finished: 0,
+            stride: 1,
+            changes: 0,
+            last: None,
+            busy_area: 0.0,
+        }
+    }
 }
 
 impl Timeline {
@@ -18,15 +42,30 @@ impl Timeline {
         Self::default()
     }
 
+    /// Keep only every `stride`-th occupancy change (memory bound for
+    /// million-request simulations).  Set before recording anything;
+    /// `bubble_ratio` stays exact (busy area integrates every change),
+    /// only the plotted `events()` curve is downsampled.
+    pub fn set_stride(&mut self, stride: usize) {
+        debug_assert!(self.events.is_empty() && self.last.is_none(),
+                      "set_stride after recording started");
+        self.stride = stride.max(1);
+    }
+
     /// Record the running-request count changing at time `t` (seconds).
     pub fn set_running(&mut self, t: f64, running: usize) {
-        if let Some(&(lt, lr)) = self.events.last() {
+        if let Some((lt, lr)) = self.last {
             debug_assert!(t >= lt, "time went backwards: {t} < {lt}");
             if lr == running {
                 return;
             }
+            self.busy_area += lr as f64 * (t - lt);
         }
-        self.events.push((t, running));
+        self.last = Some((t, running));
+        if self.changes % self.stride as u64 == 0 {
+            self.events.push((t, running));
+        }
+        self.changes += 1;
     }
 
     pub fn add_tokens(&mut self, n: u64) {
@@ -46,8 +85,10 @@ impl Timeline {
     }
 
     pub fn span(&self) -> (f64, f64) {
-        match (self.events.first(), self.events.last()) {
-            (Some(&(a, _)), Some(&(b, _))) => (a, b),
+        // `last` tracks the true final change even when striding dropped
+        // it from `events`; at stride 1 they coincide
+        match (self.events.first(), self.last) {
+            (Some(&(a, _)), Some((b, _))) => (a, b),
             _ => (0.0, 0.0),
         }
     }
@@ -65,17 +106,29 @@ impl Timeline {
         if total <= 0.0 {
             return 0.0;
         }
-        let mut idle_area = 0.0;
-        for w in self.events.windows(2) {
-            let (t0, r0) = w[0];
-            let (t1, _) = w[1];
-            idle_area += (queue_capacity.saturating_sub(r0)) as f64 * (t1 - t0);
+        if self.stride <= 1 {
+            // exact interval walk over the full event list
+            let mut idle_area = 0.0;
+            for w in self.events.windows(2) {
+                let (t0, r0) = w[0];
+                let (t1, _) = w[1];
+                idle_area += (queue_capacity.saturating_sub(r0)) as f64 * (t1 - t0);
+            }
+            let (t_last, r_last) = *self.events.last().unwrap();
+            if end > t_last {
+                idle_area += (queue_capacity.saturating_sub(r_last)) as f64 * (end - t_last);
+            }
+            return idle_area / (total * queue_capacity as f64);
         }
-        let (t_last, r_last) = *self.events.last().unwrap();
+        // strided: `events` is lossy but `busy_area` integrated every
+        // change, so idle = capacity-area minus exact busy area
+        let (t_last, r_last) = self.last.expect("events non-empty implies last");
+        let mut busy = self.busy_area;
         if end > t_last {
-            idle_area += (queue_capacity.saturating_sub(r_last)) as f64 * (end - t_last);
+            busy += r_last as f64 * (end - t_last);
         }
-        idle_area / (total * queue_capacity as f64)
+        let cap_area = total * queue_capacity as f64;
+        ((cap_area - busy) / cap_area).clamp(0.0, 1.0)
     }
 
     /// Output tokens per second over [start, end].
@@ -183,27 +236,98 @@ impl PredictorScore {
         tau
     }
 
+    /// Knight's O(n log n) tau-a: sort by (p, a), count strict inversions
+    /// of the a-sequence with a counting merge sort (= discordant pairs;
+    /// within an equal-p group a ascends, so those pairs contribute none),
+    /// then C − D = total − ties − 2D by inclusion-exclusion over tied
+    /// pairs.  The integer count equals the old O(n²) pair scan's exactly
+    /// (same classification for finite token-scale values, where the
+    /// naive product (pᵢ−pⱼ)(aᵢ−aⱼ) cannot underflow to 0), so the final
+    /// division is bit-identical to the values it replaced.
     fn kendall_tau_uncached(&self) -> f64 {
         let w = &self.window;
         if w.len() < 2 {
             return 0.0;
         }
-        let mut concordant = 0i64;
-        let mut discordant = 0i64;
-        let mut total = 0i64;
-        for i in 0..w.len() {
-            for j in i + 1..w.len() {
-                total += 1;
-                let s = (w[i].0 - w[j].0) * (w[i].1 - w[j].1);
-                if s > 0.0 {
-                    concordant += 1;
-                } else if s < 0.0 {
-                    discordant += 1;
+        let n = w.len() as i64;
+        let total = n * (n - 1) / 2;
+        let mut pairs: Vec<(f64, f64)> = w.clone();
+        pairs.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.total_cmp(&y.1)));
+        let mut ties_p = 0i64;
+        let mut ties_pa = 0i64;
+        let (mut run_p, mut run_pa) = (1i64, 1i64);
+        for pw in pairs.windows(2) {
+            if pw[0].0.total_cmp(&pw[1].0).is_eq() {
+                run_p += 1;
+                if pw[0].1.total_cmp(&pw[1].1).is_eq() {
+                    run_pa += 1;
+                } else {
+                    ties_pa += run_pa * (run_pa - 1) / 2;
+                    run_pa = 1;
                 }
+            } else {
+                ties_p += run_p * (run_p - 1) / 2;
+                run_p = 1;
+                ties_pa += run_pa * (run_pa - 1) / 2;
+                run_pa = 1;
             }
         }
-        (concordant - discordant) as f64 / total as f64
+        ties_p += run_p * (run_p - 1) / 2;
+        ties_pa += run_pa * (run_pa - 1) / 2;
+        let mut a: Vec<f64> = pairs.iter().map(|&(_, a)| a).collect();
+        let discordant = count_inversions(&mut a);
+        // `a` is now sorted: tie runs are adjacent
+        let mut ties_a = 0i64;
+        let mut run_a = 1i64;
+        for aw in a.windows(2) {
+            if aw[0].total_cmp(&aw[1]).is_eq() {
+                run_a += 1;
+            } else {
+                ties_a += run_a * (run_a - 1) / 2;
+                run_a = 1;
+            }
+        }
+        ties_a += run_a * (run_a - 1) / 2;
+        let ties = ties_p + ties_a - ties_pa;
+        (total - ties - 2 * discordant) as f64 / total as f64
     }
+}
+
+/// Count strict inversions (i < j with a[i] > a[j]) while merge-sorting
+/// `a` ascending in place.
+fn count_inversions(a: &mut [f64]) -> i64 {
+    let mut buf = a.to_vec();
+    sort_count(a, &mut buf)
+}
+
+fn sort_count(a: &mut [f64], buf: &mut [f64]) -> i64 {
+    let n = a.len();
+    if n < 2 {
+        return 0;
+    }
+    let mid = n / 2;
+    let mut inv = {
+        let (l, r) = a.split_at_mut(mid);
+        let (bl, br) = buf.split_at_mut(mid);
+        sort_count(l, bl) + sort_count(r, br)
+    };
+    buf[..n].copy_from_slice(a);
+    let (l, r) = buf[..n].split_at(mid);
+    let (mut i, mut j) = (0usize, 0usize);
+    for slot in a.iter_mut() {
+        // ties take the left element: only STRICT descents count
+        if i < l.len() && (j >= r.len() || l[i].total_cmp(&r[j]).is_le()) {
+            *slot = l[i];
+            i += 1;
+        } else {
+            if i < l.len() {
+                inv += (l.len() - i) as i64;
+            }
+            *slot = r[j];
+            j += 1;
+        }
+    }
+    inv
 }
 
 /// Paper Eq. 4 aggregate bubble: idle capacity-time over TOTAL
@@ -368,5 +492,117 @@ mod tests {
         assert_eq!(s.count(), 100);
         assert!((s.kendall_tau() - 1.0).abs() < 1e-12);
         assert!(s.mae() < 1e-12);
+    }
+
+    /// The O(n²) pair scan Knight's algorithm replaced, kept verbatim as
+    /// the pinning oracle.
+    fn naive_tau(w: &[(f64, f64)]) -> f64 {
+        if w.len() < 2 {
+            return 0.0;
+        }
+        let mut concordant = 0i64;
+        let mut discordant = 0i64;
+        let mut total = 0i64;
+        for i in 0..w.len() {
+            for j in i + 1..w.len() {
+                total += 1;
+                let s = (w[i].0 - w[j].0) * (w[i].1 - w[j].1);
+                if s > 0.0 {
+                    concordant += 1;
+                } else if s < 0.0 {
+                    discordant += 1;
+                }
+            }
+        }
+        (concordant - discordant) as f64 / total as f64
+    }
+
+    #[test]
+    fn knight_tau_matches_old_pair_scan_bitwise() {
+        // structured tie patterns: p-ties, a-ties, joint ties, constants
+        let cases: Vec<Vec<(f64, f64)>> = vec![
+            vec![(1.0, 2.0), (1.0, 3.0), (2.0, 1.0)],
+            vec![(1.0, 5.0), (2.0, 5.0), (3.0, 5.0), (4.0, 2.0)],
+            vec![(3.0, 3.0), (3.0, 3.0), (3.0, 3.0)],
+            vec![(9.0, 1.0), (8.0, 2.0), (7.0, 3.0), (7.0, 3.0), (6.0, 9.0)],
+            vec![(1.0, 1.0), (2.0, 2.0)],
+        ];
+        for (i, case) in cases.iter().enumerate() {
+            let mut s = PredictorScore::new(16);
+            for &(p, a) in case {
+                s.push(p, a);
+            }
+            assert_eq!(
+                s.kendall_tau_uncached().to_bits(),
+                naive_tau(case).to_bits(),
+                "case {i}"
+            );
+        }
+        // randomized integer-valued (token-scale) windows, heavy on ties
+        let mut rng = crate::util::rng::Pcg64::with_stream(0xC0FFEE, 7);
+        for trial in 0..60 {
+            let n = 2 + rng.below(60) as usize;
+            let mut s = PredictorScore::new(64);
+            for _ in 0..n {
+                let p = rng.below(24) as f64 * 8.0;
+                let a = rng.below(24) as f64 * 4.0;
+                s.push(p, a);
+            }
+            assert_eq!(
+                s.kendall_tau_uncached().to_bits(),
+                naive_tau(&s.window).to_bits(),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn count_inversions_counts_strictly() {
+        let mut a = vec![3.0, 1.0, 2.0, 2.0, 0.0];
+        // pairs (3,1)(3,2)(3,2)(3,0)(1,0)(2,0)(2,0) -> 7; the (2,2) tie
+        // does not count
+        assert_eq!(count_inversions(&mut a), 7);
+        assert_eq!(a, vec![0.0, 1.0, 2.0, 2.0, 3.0]);
+        let mut sorted = vec![1.0, 2.0, 3.0];
+        assert_eq!(count_inversions(&mut sorted), 0);
+        let mut rev: Vec<f64> = (0..10).rev().map(|x| x as f64).collect();
+        assert_eq!(count_inversions(&mut rev), 45);
+    }
+
+    #[test]
+    fn strided_timeline_keeps_exact_bubble_and_span() {
+        // capacity 4, one change per second: r cycles 4,3,2,1,4,3,2,1,...
+        let mut exact = Timeline::new();
+        let mut strided = Timeline::new();
+        strided.set_stride(7);
+        for i in 0..1000 {
+            let r = 4 - (i % 4);
+            exact.set_running(i as f64, r);
+            strided.set_running(i as f64, r);
+        }
+        let end = 1000.0;
+        let b_exact = exact.bubble_ratio(4, end);
+        let b_strided = strided.bubble_ratio(4, end);
+        // busy-area integration makes the strided bubble exact, not
+        // approximate, even though 6/7 of the points were dropped
+        assert!((b_exact - b_strided).abs() < 1e-12,
+                "exact {b_exact} strided {b_strided}");
+        assert!(strided.events().len() < exact.events().len() / 6);
+        assert_eq!(exact.span(), (0.0, 999.0));
+        assert_eq!(strided.span(), (0.0, 999.0));
+    }
+
+    #[test]
+    fn stride_one_is_lossless() {
+        let mut tl = Timeline::new();
+        tl.set_stride(1);
+        tl.set_running(0.0, 2);
+        tl.set_running(1.0, 2); // coalesced
+        tl.set_running(2.0, 1);
+        tl.set_running(3.0, 0);
+        assert_eq!(tl.events(), &[(0.0, 2), (2.0, 1), (3.0, 0)]);
+        assert_eq!(tl.span(), (0.0, 3.0));
+        // interval walk: idle = (4-2)*2 + (4-1)*1 + (4-0)*3 = 19 over 24
+        assert!((tl.bubble_ratio(4, 6.0) - 19.0 / 24.0).abs() < 1e-12);
     }
 }

@@ -174,6 +174,12 @@ pub struct Engine<'rt> {
     /// Lanes force-evicted by the paged-KV backpressure path (progress
     /// kept, requeued locally).
     sheds: u64,
+    /// Incremental Σ admission estimate over the local queue — the O(1)
+    /// half of [`Engine::kv_committed`], maintained at every queue
+    /// mutation and cross-checked against the O(queue) recompute in debug
+    /// builds (double-entry bookkeeping).  Sound because a queued
+    /// request's estimate inputs are immutable while it waits.
+    queue_est: usize,
 }
 
 impl<'rt> Engine<'rt> {
@@ -189,6 +195,7 @@ impl<'rt> Engine<'rt> {
             timeline: Timeline::new(),
             kv: None,
             sheds: 0,
+            queue_est: 0,
         }
     }
 
@@ -260,12 +267,12 @@ impl<'rt> Engine<'rt> {
     /// placed in the local queue — what budget-aware dispatch must assume
     /// this engine is committed to before routing more work here.
     pub fn kv_committed(&self) -> usize {
-        self.kv_used()
-            + self
-                .queue
-                .iter()
-                .map(|q| self.request_estimate(q))
-                .sum::<usize>()
+        debug_assert_eq!(
+            self.queue_est,
+            self.queue.iter().map(|q| self.request_estimate(q)).sum::<usize>(),
+            "queue estimate double-entry drift"
+        );
+        self.kv_used() + self.queue_est
     }
 
     /// Paged over-commit warning: projected usage (one more page per
@@ -299,7 +306,9 @@ impl<'rt> Engine<'rt> {
     /// Remove the newest request from the local queue (a work-stealing
     /// victim — the entry furthest from running here anyway).
     pub fn steal_queued(&mut self) -> Option<Request> {
-        self.queue.pop_back()
+        let req = self.queue.pop_back()?;
+        self.queue_est -= self.request_estimate(&req);
+        Some(req)
     }
 
     pub fn clock(&self) -> f64 {
@@ -308,7 +317,10 @@ impl<'rt> Engine<'rt> {
 
     /// Enqueue requests (oversubscription: queue may exceed lane count).
     pub fn submit(&mut self, reqs: impl IntoIterator<Item = Request>) {
-        self.queue.extend(reqs);
+        for req in reqs {
+            self.queue_est += self.request_estimate(&req);
+            self.queue.push_back(req);
+        }
     }
 
     /// Drain finished rollouts collected so far (completion order — i.e.
@@ -354,6 +366,7 @@ impl<'rt> Engine<'rt> {
             }
             kv_used += estimate;
             let req = self.queue.pop_front().unwrap();
+            self.queue_est -= estimate;
             let ctx_len = req.context_len().min(sh.prefill_seq);
             for i in 0..ctx_len {
                 let t = if i < req.prompt.len() {
@@ -533,6 +546,7 @@ impl<'rt> Engine<'rt> {
             // the back of the queue: fresh short work admits first, and the
             // evicted partial becomes the preferred steal victim
             // (`steal_queued` pops the back) for a KV-rich peer
+            self.queue_est += self.request_estimate(&req);
             self.queue.push_back(req);
             self.sheds += 1;
         }
@@ -553,6 +567,7 @@ impl<'rt> Engine<'rt> {
             }
         }
         let queued: Vec<Request> = self.queue.drain(..).collect();
+        self.queue_est = 0;
         self.kv = None;
         self.record_occupancy();
         (partials, queued)

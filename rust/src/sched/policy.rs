@@ -251,6 +251,16 @@ pub trait SchedulePolicy {
 
     /// Feedback after the driver executes a decision.
     fn observe(&mut self, _ev: &Event) {}
+
+    /// Whether this policy consumes `Event::PoolLoad` snapshots.  The
+    /// driver skips the per-step `engine_loads()` scan for policies that
+    /// return false — at pool scale that scan is O(engines) of KV math
+    /// per decode step, pure overhead for policies that never read it.
+    /// Composers that react to load (stealing, KV governing) keep the
+    /// default.
+    fn wants_loads(&self) -> bool {
+        true
+    }
 }
 
 /// A concrete engine stack the driver executes decisions against.
@@ -417,13 +427,17 @@ pub fn drive_traced(
                 } else {
                     idle_steps = 0;
                 }
-                // one snapshot serves the tracer and the PoolLoad event
-                // (engine_loads is read-only, and the Tick observation
-                // cannot change backend state in between)
-                let loads = backend.engine_loads();
-                tracer.post_step(backend, &loads);
-                policy.observe(&Event::Tick { finished });
-                policy.observe(&Event::PoolLoad { loads });
+                if tracer.enabled() || policy.wants_loads() {
+                    // one snapshot serves the tracer and the PoolLoad event
+                    // (engine_loads is read-only, and the Tick observation
+                    // cannot change backend state in between)
+                    let loads = backend.engine_loads();
+                    tracer.post_step(backend, &loads);
+                    policy.observe(&Event::Tick { finished });
+                    policy.observe(&Event::PoolLoad { loads });
+                } else {
+                    policy.observe(&Event::Tick { finished });
+                }
             }
             Decision::Harvest => {
                 fruitless += 1;
@@ -814,6 +828,10 @@ impl SchedulePolicy for GroupPolicy {
         }
     }
 
+    fn wants_loads(&self) -> bool {
+        false // threshold logic reads view() only
+    }
+
     fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
         loop {
             let v = b.view();
@@ -964,6 +982,10 @@ impl SchedulePolicy for BaselinePolicy {
         }
     }
 
+    fn wants_loads(&self) -> bool {
+        false
+    }
+
     fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
         loop {
             let v = b.view();
@@ -1059,6 +1081,10 @@ impl NoGroupedPolicy {
 impl SchedulePolicy for NoGroupedPolicy {
     fn name(&self) -> &'static str {
         "no-grouped"
+    }
+
+    fn wants_loads(&self) -> bool {
+        false
     }
 
     fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
@@ -1190,6 +1216,10 @@ impl AsyncUpdatePolicy {
 impl SchedulePolicy for AsyncUpdatePolicy {
     fn name(&self) -> &'static str {
         "async"
+    }
+
+    fn wants_loads(&self) -> bool {
+        false
     }
 
     fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {

@@ -1,0 +1,572 @@
+//! SimBackend — the simulator `ScheduleBackend`.
+//!
+//! Executes the SAME policy decision sequence the live controller
+//! executes, against [`SimPool`]'s cost model.  The live mirror is
+//! `coordinator::controller`'s `LiveBackend`.
+//!
+//! Request storage is an arena indexed by rid (sim rids are dense
+//! 0..n), so lifecycle transitions are O(1) slot writes instead of
+//! B-tree churn; ascending slot scans reproduce the old
+//! `BTreeMap`-keyed iteration order exactly.
+
+use super::engine::{stamp_work, SimEngine, SimWork};
+use super::pool::{SimCore, SimPool};
+use super::{CostModel, SimMode, SimReport, SimRequest};
+use crate::metrics::{PredictorScore, Timeline};
+use crate::rollout::kv::KvConfig;
+use crate::sched::policy::{
+    EngineLoad, HarvestAction, HarvestItem, LaneView, SchedView, ScheduleBackend,
+};
+use crate::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
+use crate::trace::{series, SloSummary};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SimLife {
+    Fresh,
+    InFlight,
+    Ready,
+    Consumed,
+}
+
+struct SimEntry {
+    req: SimRequest,
+    /// Preserved progress a resume re-prefills over.
+    progress: usize,
+    life: SimLife,
+    /// Harvested response length (output_len, or clip progress).
+    ready_len: usize,
+    complete: bool,
+    /// Completion-order stamp (what `ready_rids` sorts by).
+    seq: u64,
+}
+
+pub(super) struct SimBackend {
+    pub(super) pool: SimPool,
+    cost: CostModel,
+    pred: Box<dyn LengthPredictor>,
+    score: PredictorScore,
+    /// Prediction captured at stage time — what actually drove dispatch —
+    /// not recomputed after siblings finished.  Arena slot per rid.
+    staged_pred: Vec<Option<f64>>,
+    /// Workload not yet loaded (grouped loading pops from here).
+    backlog: VecDeque<SimRequest>,
+    /// Rid-indexed arena; `None` = never loaded or retired at a barrier.
+    entries: Vec<Option<SimEntry>>,
+    /// Rids in training-consumption order — the decision-equivalence
+    /// fingerprint the differential tests compare across cores.
+    consumed: Vec<u64>,
+    q_cap: usize,
+    total: usize,
+    done: usize,
+    // O(1) lifecycle counters (view() runs 2-3x per driver decision; an
+    // arena scan there would dominate paper-scale sim host time)
+    fresh_count: usize,
+    ready_count: usize,
+    unconsumed_count: usize,
+    seq: u64,
+    updates: usize,
+    harvests: usize,
+    clipped: usize,
+    dropped: usize,
+    wasted: u64,
+    steals: u64,
+    migrated_tokens: u64,
+    infer_time: f64,
+    update_time: f64,
+    /// Lanes shed by executed `Decision::Throttle`s.
+    throttles: u64,
+    /// Async mode: updates overlap decoding instead of serializing.
+    overlap_updates: bool,
+    /// Engine-clock time at which the (async) trainer frees up.
+    update_free_at: f64,
+}
+
+impl SimBackend {
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn new(workload: &[SimRequest], engines: usize, q_each: usize,
+                      cost: CostModel, dispatch: DispatchPolicy,
+                      predictor: PredictorKind, overlap_updates: bool,
+                      kv: KvConfig, core: SimCore, stride: usize) -> Self {
+        let arena = workload.iter().map(|r| r.id + 1).max().unwrap_or(0);
+        SimBackend {
+            pool: SimPool::new(engines, q_each, cost, dispatch, kv, core, stride),
+            cost,
+            pred: make_sim_predictor(predictor, workload),
+            score: PredictorScore::default(),
+            staged_pred: Vec::new(),
+            backlog: workload.iter().copied().collect(),
+            entries: (0..arena).map(|_| None).collect(),
+            consumed: Vec::new(),
+            q_cap: q_each * engines,
+            total: workload.len(),
+            done: 0,
+            fresh_count: 0,
+            ready_count: 0,
+            unconsumed_count: 0,
+            seq: 0,
+            updates: 0,
+            harvests: 0,
+            clipped: 0,
+            dropped: 0,
+            wasted: 0,
+            steals: 0,
+            migrated_tokens: 0,
+            infer_time: 0.0,
+            update_time: 0.0,
+            throttles: 0,
+            overlap_updates,
+            update_free_at: 0.0,
+        }
+    }
+
+    fn stash_pred(&mut self, id: usize, v: f64) {
+        if id >= self.staged_pred.len() {
+            self.staged_pred.resize(id + 1, None);
+        }
+        self.staged_pred[id] = Some(v);
+    }
+
+    fn take_pred(&mut self, id: usize) -> Option<f64> {
+        self.staged_pred.get_mut(id).and_then(|s| s.take())
+    }
+
+    pub(super) fn into_report(self, mode: SimMode) -> SimReport {
+        let rollout_time = self.pool.observed_clock();
+        let timeline = merge_timelines(&self.pool.engines);
+        let bubble = timeline.bubble_ratio(self.q_cap, rollout_time);
+        // the admitted-lane headline: max concurrent running lanes across
+        // the pool over the whole run.  The merged-event max equals the
+        // pool's incrementally tracked peak at stride 1; at coarser
+        // strides the dropped-event peak survives in `peak_lanes`.
+        let peak_lanes = timeline
+            .events()
+            .iter()
+            .map(|&(_, r)| r)
+            .max()
+            .unwrap_or(0)
+            .max(self.pool.peak_lanes);
+        let kv_trace = merge_kv_traces(&self.pool.engines);
+        // per-engine idle fraction against the POOL end time: an engine
+        // that never ran is 100% idle capacity, not a non-event
+        let engine_idle: Vec<f64> = self
+            .pool
+            .engines
+            .iter()
+            .map(|e| {
+                if e.timeline.events().is_empty() {
+                    1.0
+                } else {
+                    e.timeline.bubble_ratio(e.q, rollout_time)
+                }
+            })
+            .collect();
+        // useful = tokens of trajectories actually harvested (clipping
+        // shortens; restarts and drops waste)
+        let useful = self.pool.tokens_out().saturating_sub(self.wasted);
+        let total_time = if self.overlap_updates {
+            // async: update cost hides under decoding; only the overhang
+            // past the rollout end serializes
+            rollout_time.max(self.update_free_at) + self.infer_time
+        } else {
+            rollout_time + self.infer_time + self.update_time
+        };
+        SimReport {
+            mode,
+            total_time,
+            rollout_time,
+            update_time: self.update_time,
+            infer_time: self.infer_time,
+            useful_tokens: useful,
+            wasted_tokens: self.wasted,
+            bubble_ratio: bubble,
+            throughput: useful as f64 / rollout_time,
+            timeline,
+            harvests: self.harvests,
+            clipped: self.clipped,
+            dropped: self.dropped,
+            engines: self.pool.engines.len(),
+            predictor_mae: self.score.mae(),
+            predictor_tau: self.score.kendall_tau(),
+            steals: self.steals,
+            migrated_tokens: self.migrated_tokens,
+            engine_idle,
+            peak_lanes,
+            kv_sheds: self.pool.engines.iter().map(|e| e.sheds).sum(),
+            throttles: self.throttles,
+            kv_trace,
+            consumed_rids: self.consumed,
+            slo: SloSummary::default(),
+        }
+    }
+}
+
+/// Merge per-engine occupancy timelines into one pool timeline whose
+/// running count is the sum across engines (tokens and finish counts sum
+/// too), so [`Timeline::bubble_ratio`] with the pool's total capacity gives
+/// the aggregate bubble.
+pub(super) fn merge_timelines(engines: &[SimEngine]) -> Timeline {
+    let mut merged = Timeline::new();
+    let sources: Vec<&[(f64, usize)]> =
+        engines.iter().map(|e| e.timeline.events()).collect();
+    for (t, total) in series::merge_running_totals(&sources) {
+        merged.set_running(t, total);
+    }
+    let mut tokens = 0u64;
+    let mut finished = 0u64;
+    for e in engines {
+        // SimEngine counts tokens in its own field — its timeline is
+        // never fed add_tokens (unlike the real rollout::Engine)
+        tokens += e.tokens_out;
+        finished += e.timeline.finished();
+    }
+    merged.add_tokens(tokens);
+    merged.add_finished(finished);
+    merged
+}
+
+/// Merge per-engine (clock, kv_used) samples into one pool-wide usage
+/// curve (running totals over merged event order), downsampled to at most
+/// 256 points so `pool_kv.json` stays small at paper scale.
+pub(super) fn merge_kv_traces(engines: &[SimEngine]) -> Vec<(f64, usize)> {
+    let sources: Vec<&[(f64, usize)]> =
+        engines.iter().map(|e| e.kv_trace.as_slice()).collect();
+    series::downsample(&series::merge_running_totals(&sources), 256)
+}
+
+pub(super) fn make_sim_predictor(kind: PredictorKind,
+                                 workload: &[SimRequest]) -> Box<dyn LengthPredictor> {
+    let mut pred = make_predictor(kind);
+    if kind == PredictorKind::Oracle {
+        // the oracle reads true cost: simulator ground truth
+        for r in workload {
+            pred.observe(r.id as u64, r.prompt_len, r.output_len);
+        }
+    }
+    pred
+}
+
+impl ScheduleBackend for SimBackend {
+    fn view(&self) -> SchedView {
+        SchedView {
+            running: self.pool.total_running(),
+            queued: self.pool.queued(),
+            ready: self.ready_count,
+            fresh: self.fresh_count,
+            unconsumed: self.unconsumed_count,
+            lanes: self.q_cap,
+            updates: self.updates,
+        }
+    }
+
+    fn schedulable(&self) -> Vec<u64> {
+        // ascending rid scan == the old BTreeMap key order
+        self.entries
+            .iter()
+            .filter_map(|s| s.as_ref())
+            .filter(|e| e.life == SimLife::Fresh)
+            .map(|e| e.req.id as u64)
+            .collect()
+    }
+
+    fn ready_rids(&self) -> Vec<u64> {
+        let mut v: Vec<(u64, u64)> = self
+            .entries
+            .iter()
+            .filter_map(|s| s.as_ref())
+            .filter(|e| e.life == SimLife::Ready)
+            .map(|e| (e.seq, e.req.id as u64))
+            .collect();
+        v.sort_unstable();
+        v.into_iter().map(|(_, rid)| rid).collect()
+    }
+
+    fn ready_len(&self, rid: u64) -> usize {
+        self.entries
+            .get(rid as usize)
+            .and_then(|s| s.as_ref())
+            .map(|e| e.ready_len)
+            .unwrap_or(0)
+    }
+
+    fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
+        let mut count = 0;
+        for _ in 0..prompts {
+            let Some(req) = self.backlog.pop_front() else { break };
+            let idx = req.id;
+            if idx >= self.entries.len() {
+                self.entries.resize_with(idx + 1, || None);
+            }
+            self.entries[idx] = Some(SimEntry {
+                req,
+                progress: 0,
+                life: SimLife::Fresh,
+                ready_len: 0,
+                complete: false,
+                seq: 0,
+            });
+            self.fresh_count += 1;
+            self.unconsumed_count += 1;
+            count += 1;
+        }
+        Ok(count)
+    }
+
+    fn admit(&mut self, rids: &[u64], engine: Option<usize>) -> Result<()> {
+        let mut work = Vec::with_capacity(rids.len());
+        let rank_only = self.pred.is_rank_only();
+        for rid in rids {
+            let (req, progress) = {
+                let e = self
+                    .entries
+                    .get_mut(*rid as usize)
+                    .and_then(|s| s.as_mut())
+                    .expect("admit unknown sim rid");
+                assert_eq!(e.life, SimLife::Fresh, "admit non-fresh sim rid {rid}");
+                e.life = SimLife::InFlight;
+                (e.req, e.progress)
+            };
+            self.fresh_count -= 1;
+            let predicted = self.pred.predict(req.id as u64, req.prompt_len);
+            self.stash_pred(req.id, predicted);
+            work.push(stamp_work(rank_only, predicted, req, progress));
+        }
+        match engine {
+            Some(i) => self.pool.stage_to(i, work),
+            None => self.pool.stage(work, self.pred.as_ref()),
+        }
+        Ok(())
+    }
+
+    fn engine_loads(&self) -> Vec<EngineLoad> {
+        self.pool
+            .engines
+            .iter()
+            .map(|e| {
+                let used = e.kv_used();
+                let blocked = e
+                    .queue_front()
+                    .is_some_and(|w| e.kv_gate_refuses(used, e.work_estimate(w)));
+                EngineLoad {
+                    queued: e.queue_len(),
+                    active: e.running.len(),
+                    lanes: e.q,
+                    kv_used: used,
+                    kv_budget: e.kv.budget,
+                    kv_blocked: blocked,
+                    kv_pressure: e.kv.pressure(used, e.running.len()),
+                }
+            })
+            .collect()
+    }
+
+    fn engine_lanes(&self, engine: usize) -> Vec<LaneView> {
+        self.pool
+            .engines
+            .get(engine)
+            .map(|e| {
+                e.running
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| LaneView {
+                        lane: i,
+                        progress: r.generated,
+                        reserve: e.kv.admit_estimate(
+                            r.req.prompt_len,
+                            r.generated,
+                            r.req.output_len,
+                            r.predicted,
+                        ),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    fn trace_clock(&self) -> f64 {
+        self.pool.observed_clock()
+    }
+
+    fn lane_rids(&self, engine: usize) -> Vec<(usize, u64)> {
+        self.pool
+            .engines
+            .get(engine)
+            .map(|e| {
+                e.running
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| (i, r.req.id as u64))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    fn throttle(&mut self, engine: usize) -> Result<bool> {
+        let Some(e) = self.pool.engines.get(engine) else { return Ok(false) };
+        if e.running.len() < 2 {
+            return Ok(false);
+        }
+        // shed the smallest-context lane, progress kept, routed like a
+        // preemption so budget-aware dispatch can re-place it
+        let lane = e
+            .running
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, r)| (e.lane_charge(r), i))
+            .map(|(i, _)| i)
+            .expect("running checked >= 2");
+        self.pool.preempt(engine, lane);
+        self.throttles += 1;
+        Ok(true)
+    }
+
+    fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Result<bool> {
+        match self.pool.steal(from, to, lane) {
+            Some(progress) => {
+                self.steals += 1;
+                self.migrated_tokens += progress as u64;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    fn step(&mut self) -> Result<usize> {
+        let Some(finished) = self.pool.tick() else { return Ok(0) };
+        let n = finished.len();
+        for r in &finished {
+            let predicted = self
+                .take_pred(r.id)
+                .unwrap_or_else(|| self.pred.predict(r.id as u64, r.prompt_len));
+            self.score.push(predicted, r.output_len as f64);
+            self.pred.observe(r.id as u64, r.prompt_len, r.output_len);
+            let e = self
+                .entries
+                .get_mut(r.id)
+                .and_then(|s| s.as_mut())
+                .expect("finished unknown sim rid");
+            debug_assert_eq!(e.life, SimLife::InFlight);
+            e.life = SimLife::Ready;
+            e.ready_len = r.output_len;
+            e.complete = true;
+            e.seq = self.seq;
+            self.ready_count += 1;
+            self.seq += 1;
+        }
+        Ok(n)
+    }
+
+    fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
+        let mut terminated = self.pool.terminate_all();
+        // harvest is a sync point: engine clocks jump to the pool max
+        self.pool.align_clocks();
+        // highest progress first — clipping candidates
+        terminated.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
+        let mut items = Vec::with_capacity(terminated.len());
+        for (req, progress, was_queued) in terminated {
+            // preemption progress is a length floor the predictor can use
+            self.pred.observe_progress(req.id as u64, req.prompt_len, progress);
+            self.take_pred(req.id);
+            // mirror the live backend's item contract: resumed requests
+            // sitting in a queue still carry progress and count as partials
+            items.push(HarvestItem {
+                rid: req.id as u64,
+                progress,
+                queued: was_queued && progress == 0,
+            });
+        }
+        Ok(items)
+    }
+
+    fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()> {
+        let progress = item.progress;
+        let e = self
+            .entries
+            .get_mut(item.rid as usize)
+            .and_then(|s| s.as_mut())
+            .expect("resolve unknown sim rid");
+        debug_assert_eq!(e.life, SimLife::InFlight);
+        match action {
+            HarvestAction::Clip => {
+                e.life = SimLife::Ready;
+                e.ready_len = progress;
+                e.complete = false;
+                e.seq = self.seq;
+                self.ready_count += 1;
+                self.seq += 1;
+                self.clipped += 1;
+            }
+            HarvestAction::Restart => {
+                e.progress = 0;
+                e.life = SimLife::Fresh;
+                self.fresh_count += 1;
+                self.wasted += progress as u64;
+            }
+            HarvestAction::Resume | HarvestAction::Requeue => {
+                e.progress = progress;
+                e.life = SimLife::Fresh;
+                self.fresh_count += 1;
+            }
+            HarvestAction::Drop => {
+                e.life = SimLife::Consumed;
+                self.unconsumed_count -= 1;
+                self.wasted += progress as u64;
+                self.dropped += 1;
+                self.done += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn preempt(&mut self, engine: usize, lane: usize) -> Result<()> {
+        self.pool.preempt(engine, lane);
+        Ok(())
+    }
+
+    fn train(&mut self, rids: &[u64]) -> Result<()> {
+        let mut toks = 0.0f64;
+        for rid in rids {
+            let e = self
+                .entries
+                .get_mut(*rid as usize)
+                .and_then(|s| s.as_mut())
+                .expect("train unknown sim rid");
+            assert_eq!(e.life, SimLife::Ready, "train non-ready sim rid {rid}");
+            // natural completions train at their true length; only clips
+            // (complete == false) may be shorter
+            debug_assert!(!e.complete || e.ready_len == e.req.output_len);
+            e.life = SimLife::Consumed;
+            toks += (e.req.prompt_len + e.ready_len) as f64;
+            self.ready_count -= 1;
+            self.unconsumed_count -= 1;
+            self.done += 1;
+            self.consumed.push(*rid);
+        }
+        self.infer_time += toks * self.cost.t_infer_token;
+        let update_cost = toks * self.cost.t_update_token;
+        self.update_time += update_cost;
+        if self.overlap_updates {
+            let start = self.update_free_at.max(self.pool.observed_clock());
+            self.update_free_at = start + update_cost;
+        }
+        self.harvests += 1;
+        self.updates += 1;
+        Ok(())
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        // group-end sync barrier
+        self.pool.align_clocks();
+        for slot in self.entries.iter_mut() {
+            if slot.as_ref().is_some_and(|e| e.life == SimLife::Consumed) {
+                *slot = None;
+            }
+        }
+        Ok(())
+    }
+
+    fn exhausted(&self) -> bool {
+        self.done >= self.total
+    }
+}

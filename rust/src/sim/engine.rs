@@ -1,0 +1,364 @@
+//! The simulated serving engine: lanes, local queue, KV accounting, and
+//! the fused-span arithmetic the event core folds silent decode spans
+//! with.
+//!
+//! All KV-derived views are incremental: `kv_used` and the queued
+//! admission-estimate sum are maintained as deltas at every mutation and
+//! cross-checked against the O(lanes) recompute under `debug_assert!`
+//! (double-entry bookkeeping — release builds pay O(1), debug builds
+//! verify every read).  Queue mutations therefore go through the
+//! `enqueue_back`/`dequeue_back`/`drain_queue` methods; the raw deque is
+//! private so pool code cannot bypass the cache.
+
+use super::{CostModel, SimRequest};
+use crate::metrics::Timeline;
+use crate::rollout::kv::{KvConfig, KvMode};
+use std::collections::VecDeque;
+
+pub(crate) struct Running {
+    pub(crate) req: SimRequest,
+    pub(crate) generated: usize,
+    /// Predicted total length stamped at stage time (None = rank-only
+    /// predictor) — what the paged admission estimate consumed, kept so
+    /// an evicted lane re-admits under the same estimate.
+    pub(crate) predicted: Option<usize>,
+}
+
+/// One unit of stageable work: a request plus preserved progress and the
+/// stamped length prediction driving paged-KV admission estimates.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SimWork {
+    pub(crate) req: SimRequest,
+    pub(crate) progress: usize,
+    pub(crate) predicted: Option<usize>,
+}
+
+/// Stamp a raw prediction onto staged work via the shared
+/// [`crate::rollout::kv::stamp_prediction`] rule (None for rank-only
+/// predictors — bucket indices are not token counts and must not feed KV
+/// estimates).
+pub(crate) fn stamp_work(rank_only: bool, predicted: f64, req: SimRequest,
+                         progress: usize) -> SimWork {
+    SimWork {
+        req,
+        progress,
+        predicted: crate::rollout::kv::stamp_prediction(rank_only, predicted),
+    }
+}
+
+/// Simulated engine with queue capacity `q`.
+pub(crate) struct SimEngine {
+    pub(crate) q: usize,
+    pub(crate) cost: CostModel,
+    /// KV memory model (mode + budget + page; `budget == usize::MAX` =
+    /// accounting off).
+    pub(crate) kv: KvConfig,
+    pub(crate) clock: f64,
+    pub(crate) running: Vec<Running>,
+    queue: VecDeque<SimWork>,
+    pub(crate) timeline: Timeline,
+    pub(crate) tokens_out: u64,
+    /// Forced paged evictions (actual usage outgrew the budget mid-step).
+    pub(crate) sheds: u64,
+    /// (clock, kv_used) samples — recorded only when accounting is on,
+    /// deduplicated on change, then stride-downsampled at record time.
+    pub(crate) kv_trace: Vec<(f64, usize)>,
+    /// Incremental Σ lane_charge over running lanes (double-entry twin of
+    /// the O(lanes) recompute `kv_used` cross-checks in debug builds).
+    kv_used_cache: usize,
+    /// Incremental Σ work_estimate over the local queue.
+    queue_est_sum: usize,
+    /// Last observed kv usage + change counter for stride downsampling.
+    last_kv: Option<usize>,
+    kv_changes: usize,
+    stride: usize,
+}
+
+impl SimEngine {
+    pub(crate) fn new(q: usize, cost: CostModel, kv: KvConfig, stride: usize) -> Self {
+        let mut timeline = Timeline::new();
+        timeline.set_stride(stride);
+        SimEngine {
+            q,
+            cost,
+            kv,
+            clock: 0.0,
+            running: Vec::new(),
+            queue: VecDeque::new(),
+            timeline,
+            tokens_out: 0,
+            sheds: 0,
+            kv_trace: Vec::new(),
+            kv_used_cache: 0,
+            queue_est_sum: 0,
+            last_kv: None,
+            kv_changes: 0,
+            stride: stride.max(1),
+        }
+    }
+
+    pub(crate) fn record(&mut self) {
+        self.timeline.set_running(self.clock, self.running.len());
+        if !self.kv.unlimited() {
+            let used = self.kv_used();
+            // dedup-on-change: silent decode spans cannot move kv usage
+            // between decision points, so recording only changes keeps the
+            // trace identical across both cores AND bounded at scale
+            if self.last_kv != Some(used) {
+                self.last_kv = Some(used);
+                if self.kv_changes % self.stride == 0 {
+                    self.kv_trace.push((self.clock, used));
+                }
+                self.kv_changes += 1;
+            }
+        }
+    }
+
+    /// What a running lane charges right now (worst case in reserve mode,
+    /// the paged actual context otherwise).
+    pub(crate) fn lane_charge(&self, r: &Running) -> usize {
+        self.kv.lane_charge(r.req.prompt_len, r.generated, r.req.output_len)
+    }
+
+    /// What the admission gate charges a queued candidate.
+    pub(crate) fn work_estimate(&self, w: &SimWork) -> usize {
+        self.kv
+            .admit_estimate(w.req.prompt_len, w.progress, w.req.output_len, w.predicted)
+    }
+
+    /// Incremental Σ lane_charge, cross-checked against the O(lanes)
+    /// recompute in debug builds (the double-entry contract).
+    pub(crate) fn kv_used(&self) -> usize {
+        debug_assert_eq!(
+            self.kv_used_cache,
+            self.running.iter().map(|r| self.lane_charge(r)).sum::<usize>(),
+            "kv_used double-entry drift"
+        );
+        self.kv_used_cache
+    }
+
+    /// Incremental Σ admission estimate over the local queue (what refill
+    /// counts as already committed), same double-entry contract.
+    pub(crate) fn queue_committed(&self) -> usize {
+        debug_assert_eq!(
+            self.queue_est_sum,
+            self.queue.iter().map(|w| self.work_estimate(w)).sum::<usize>(),
+            "queue_committed double-entry drift"
+        );
+        self.queue_est_sum
+    }
+
+    // ---- queue access (mutations maintain queue_est_sum) ----
+
+    pub(crate) fn enqueue_back(&mut self, w: SimWork) {
+        self.queue_est_sum += self.work_estimate(&w);
+        self.queue.push_back(w);
+    }
+
+    pub(crate) fn dequeue_back(&mut self) -> Option<SimWork> {
+        let w = self.queue.pop_back()?;
+        self.queue_est_sum -= self.work_estimate(&w);
+        Some(w)
+    }
+
+    pub(crate) fn queue_front(&self) -> Option<&SimWork> {
+        self.queue.front()
+    }
+
+    pub(crate) fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn drain_queue(&mut self) -> Vec<SimWork> {
+        self.queue_est_sum = 0;
+        self.queue.drain(..).collect()
+    }
+
+    /// The KV admission gate shared by `admit`, `engine_loads`, and the
+    /// pool's `steal`: admitting `estimate` on top of `used` is refused
+    /// iff running lanes already hold KV and the sum overruns the budget
+    /// (the empty-engine escape admits any head request alone).
+    pub(crate) fn kv_gate_refuses(&self, used: usize, estimate: usize) -> bool {
+        self.kv.gate_refuses(used, estimate)
+    }
+
+    pub(crate) fn admit(&mut self) {
+        let mut used = self.kv_used();
+        while self.running.len() < self.q {
+            let Some(front) = self.queue.front() else { break };
+            // KV admission gate: an otherwise-empty engine always admits
+            // its head request (progress guarantee — a single oversized
+            // context must not deadlock the queue).  The gate accumulates
+            // admission ESTIMATES within the pass; paged lanes charge
+            // their much smaller actual context once admitted.
+            let est = self.work_estimate(front);
+            if self.kv_gate_refuses(used, est) {
+                break;
+            }
+            let w = self.queue.pop_front().unwrap();
+            self.queue_est_sum -= est;
+            used += est;
+            // prefill cost: prompt + any preserved progress
+            self.clock += (w.req.prompt_len + w.progress) as f64 * self.cost.t_prefill_token;
+            self.kv_used_cache +=
+                self.kv.lane_charge(w.req.prompt_len, w.progress, w.req.output_len);
+            self.running
+                .push(Running { req: w.req, generated: w.progress, predicted: w.predicted });
+        }
+        self.record();
+    }
+
+    /// Cost of one decode iteration at the CURRENT occupancy — the grid
+    /// pitch fused spans multiply against.
+    pub(crate) fn iter_cost(&self) -> f64 {
+        self.cost.t_weights + self.running.len() as f64 * self.cost.t_token
+    }
+
+    /// One decode iteration; returns finished requests.
+    pub(crate) fn step(&mut self) -> Vec<SimRequest> {
+        let r = self.running.len();
+        if r == 0 {
+            return Vec::new();
+        }
+        self.clock += self.cost.t_weights + r as f64 * self.cost.t_token;
+        self.tokens_out += r as u64;
+        let kv = self.kv;
+        let mut finished = Vec::new();
+        let mut kv_delta = 0isize;
+        self.running.retain_mut(|run| {
+            let pre = kv.lane_charge(run.req.prompt_len, run.generated, run.req.output_len);
+            run.generated += 1;
+            if run.generated >= run.req.output_len {
+                finished.push(run.req);
+                kv_delta -= pre as isize;
+                false
+            } else {
+                let post =
+                    kv.lane_charge(run.req.prompt_len, run.generated, run.req.output_len);
+                kv_delta += post as isize - pre as isize;
+                true
+            }
+        });
+        self.kv_used_cache = (self.kv_used_cache as isize + kv_delta) as usize;
+        if !finished.is_empty() {
+            self.timeline.add_finished(finished.len() as u64);
+        }
+        self.shed_over_budget();
+        self.record();
+        finished
+    }
+
+    /// Fold `k` silent decode iterations into one clock/token/KV delta.
+    /// The caller (the event core) guarantees no lane finishes, no page
+    /// boundary is crossed in limited paged mode, and no decision point
+    /// falls inside the span — so no timeline event, finish, or shed can
+    /// be skipped.
+    pub(crate) fn fold_silent(&mut self, k: u64) {
+        if k == 0 {
+            return;
+        }
+        let r = self.running.len();
+        debug_assert!(r > 0, "fold_silent on an idle engine");
+        self.clock += k as f64 * self.iter_cost();
+        self.tokens_out += k * r as u64;
+        let kv = self.kv;
+        let limited = !kv.unlimited();
+        for run in &mut self.running {
+            debug_assert!(
+                run.generated + (k as usize) < run.req.output_len,
+                "fused span swallowed a lane finish"
+            );
+            let pre = kv.lane_charge(run.req.prompt_len, run.generated, run.req.output_len);
+            run.generated += k as usize;
+            let post = kv.lane_charge(run.req.prompt_len, run.generated, run.req.output_len);
+            // limited paged mode schedules a page-crossing event instead
+            // of folding across it (the shed check must run there)
+            debug_assert!(!limited || pre == post, "fused span crossed a page boundary");
+            self.kv_used_cache = self.kv_used_cache - pre + post;
+        }
+    }
+
+    /// Iterations from the CURRENT stored state until this engine's next
+    /// intrinsic decision point: the earliest lane finish, min'd in
+    /// limited paged mode with the first page-boundary crossing of any
+    /// lane charge (where the in-step shed check can first change its
+    /// answer).  Always >= 1; the event core folds `span - 1` iterations
+    /// silently and runs the span-th as a real micro-tick.
+    pub(crate) fn silent_span(&self) -> u64 {
+        debug_assert!(!self.running.is_empty(), "span of an idle engine");
+        let mut s = self
+            .running
+            .iter()
+            .map(|r| r.req.output_len.saturating_sub(r.generated).max(1) as u64)
+            .min()
+            .expect("running checked non-empty");
+        if self.kv.mode == KvMode::Paged && !self.kv.unlimited() {
+            let page = self.kv.page.max(1);
+            for r in &self.running {
+                let held = r.req.prompt_len + r.generated;
+                let rem = held % page;
+                let jc = if rem == 0 { 1 } else { (page - rem + 1) as u64 };
+                s = s.min(jc);
+            }
+        }
+        s.max(1)
+    }
+
+    /// Forced paged backpressure: if actual usage outgrew the budget
+    /// (admission estimates undershot), evict the smallest-context lane
+    /// back to the local queue — progress kept, resume pays a re-prefill —
+    /// until the budget holds or one lane remains (the running twin of the
+    /// empty-engine admission escape).  The back of the queue makes the
+    /// evicted partial the preferred steal victim for a KV-rich peer.
+    fn shed_over_budget(&mut self) {
+        if self.kv.mode != KvMode::Paged || self.kv.unlimited() {
+            return;
+        }
+        while self.running.len() > 1 && self.kv_used() > self.kv.budget {
+            let lane = self
+                .running
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, r)| (self.lane_charge(r), i))
+                .map(|(i, _)| i)
+                .expect("running checked non-empty");
+            let r = self.running.remove(lane);
+            self.kv_used_cache -= self.kv.lane_charge(r.req.prompt_len, r.generated,
+                                                      r.req.output_len);
+            self.enqueue_back(SimWork {
+                req: r.req,
+                progress: r.generated,
+                predicted: r.predicted,
+            });
+            self.sheds += 1;
+        }
+    }
+
+    /// Preempt ONE running lane back to the queue, KEEPING progress
+    /// (resume costs only a re-prefill over prompt + prefix).
+    pub(crate) fn preempt_lane(&mut self, lane: usize) -> Option<SimWork> {
+        if lane >= self.running.len() {
+            return None;
+        }
+        let r = self.running.remove(lane);
+        self.kv_used_cache -=
+            self.kv.lane_charge(r.req.prompt_len, r.generated, r.req.output_len);
+        self.record();
+        Some(SimWork { req: r.req, progress: r.generated, predicted: r.predicted })
+    }
+
+    /// Terminate everything in flight; returns (request, progress, queued)
+    /// triples — `queued` marks requests drained from the waiting queue
+    /// rather than preempted out of a lane.
+    pub(crate) fn terminate_all(&mut self) -> Vec<(SimRequest, usize, bool)> {
+        let mut out: Vec<(SimRequest, usize, bool)> = self
+            .running
+            .drain(..)
+            .map(|r| (r.req, r.generated, false))
+            .collect();
+        self.kv_used_cache = 0;
+        out.extend(self.drain_queue().into_iter().map(|w| (w.req, w.progress, true)));
+        self.record();
+        out
+    }
+}

@@ -1,0 +1,234 @@
+//! Event-heap machinery for the discrete-event simulator core.
+//!
+//! Two small data structures, both `O(log n)` per operation:
+//!
+//! * [`EventHeap`] — a lazy-deletion binary min-heap of per-engine
+//!   decision points keyed by `(event time, engine index)`.  Each engine
+//!   owns at most one *live* entry at a time; superseded entries are not
+//!   removed eagerly but invalidated by bumping the engine's epoch
+//!   counter, and skipped when popped.  Ordering uses `f64::total_cmp`
+//!   with the engine index as tiebreaker so the pop order reproduces the
+//!   reference stepper's "first minimal engine wins" scan exactly.
+//! * [`MarkStack`] — a monotone stack over the sequence of processed
+//!   event keys supporting `suffix_max(since)`: the lexicographic
+//!   maximum `(key, engine)` among all events processed at or after a
+//!   given sequence number.  The pool uses it to materialize an engine's
+//!   silent span up to (not past) the last decision point that could
+//!   have observed it — the discrete-event analogue of "how far has the
+//!   reference stepper's scan provably advanced past this engine".
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One pending decision point: engine `engine` must run a micro-tick at
+/// absolute simulated time `key`, after silently folding `fold` decode
+/// iterations (clock / token / KV deltas with no intervening decision).
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    key: f64,
+    engine: usize,
+    epoch: u64,
+    fold: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap order; the heap stores `Reverse`-free entries but we
+        // invert here so `BinaryHeap::pop` yields the minimum
+        // `(key, engine)`.  `total_cmp` keeps the order total (the sim
+        // never produces NaN keys, but a partial compare would still be
+        // a latent panic).
+        other
+            .key
+            .total_cmp(&self.key)
+            .then_with(|| other.engine.cmp(&self.engine))
+    }
+}
+
+/// Min-heap of per-engine decision points with lazy epoch invalidation.
+#[derive(Debug, Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<Entry>,
+    /// Per-engine epoch; an entry is live iff its epoch matches.
+    epoch: Vec<u64>,
+}
+
+impl EventHeap {
+    pub fn new(engines: usize) -> Self {
+        EventHeap { heap: BinaryHeap::new(), epoch: vec![0; engines] }
+    }
+
+    /// Drop the engine's live entry (if any) without touching the heap;
+    /// the stale entry is skipped when it eventually pops.
+    pub fn invalidate(&mut self, engine: usize) {
+        self.epoch[engine] += 1;
+    }
+
+    /// Push a fresh entry for `engine`.  Any previous entry for the same
+    /// engine must have been invalidated first.
+    pub fn push(&mut self, engine: usize, key: f64, fold: u64) {
+        let epoch = self.epoch[engine];
+        self.heap.push(Entry { key, engine, epoch, fold });
+    }
+
+    /// Pop the minimum live `(key, engine, fold)`, skipping stale
+    /// entries.  Returns `None` when no live entry remains.
+    pub fn pop(&mut self) -> Option<(f64, usize, u64)> {
+        while let Some(e) = self.heap.pop() {
+            if self.epoch[e.engine] == e.epoch {
+                return Some((e.key, e.engine, e.fold));
+            }
+        }
+        None
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        for ep in &mut self.epoch {
+            *ep += 1;
+        }
+    }
+
+    #[cfg(test)]
+    fn len_raw(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Lexicographic order on `(key, engine)` event identities.
+#[inline]
+pub fn key_after(a: (f64, usize), b: (f64, usize)) -> bool {
+    match a.0.total_cmp(&b.0) {
+        Ordering::Greater => true,
+        Ordering::Equal => a.1 > b.1,
+        Ordering::Less => false,
+    }
+}
+
+/// Monotone stack answering "max processed event key since seq S".
+///
+/// Events are pushed in processing order, which is NOT monotone in
+/// `(key, engine)` — an engine idle since early in the run can fire an
+/// event below the current high-water mark once re-staged.  The stack
+/// keeps only suffix maxima: entries ascend in `seq` and strictly
+/// descend in `(key, engine)`, so the bottom entry is the overall
+/// maximum and `suffix_max(since)` is the first entry with
+/// `seq >= since` (a `partition_point` binary search).
+#[derive(Debug, Default)]
+pub struct MarkStack {
+    /// `(seq, key, engine)`, ascending in seq, strictly descending in
+    /// `(key, engine)`.
+    stack: Vec<(u64, f64, usize)>,
+}
+
+impl MarkStack {
+    pub fn new() -> Self {
+        MarkStack { stack: Vec::new() }
+    }
+
+    /// Record event `(key, engine)` processed at sequence number `seq`.
+    /// `seq` must be strictly increasing across calls.
+    pub fn push(&mut self, seq: u64, key: f64, engine: usize) {
+        debug_assert!(self.stack.last().map_or(true, |&(s, _, _)| s < seq));
+        while let Some(&(_, k, e)) = self.stack.last() {
+            if key_after((k, e), (key, engine)) {
+                break;
+            }
+            self.stack.pop();
+        }
+        self.stack.push((seq, key, engine));
+    }
+
+    /// Max `(key, engine)` over all events with sequence `>= since`, or
+    /// `None` if no such event was recorded.
+    pub fn suffix_max(&self, since: u64) -> Option<(f64, usize)> {
+        let i = self.stack.partition_point(|&(s, _, _)| s < since);
+        self.stack.get(i).map(|&(_, k, e)| (k, e))
+    }
+
+    pub fn clear(&mut self) {
+        self.stack.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_pops_in_key_then_engine_order() {
+        let mut h = EventHeap::new(4);
+        h.push(2, 5.0, 1);
+        h.push(0, 3.0, 2);
+        h.push(3, 3.0, 3);
+        h.push(1, 4.0, 4);
+        assert_eq!(h.pop(), Some((3.0, 0, 2)));
+        assert_eq!(h.pop(), Some((3.0, 3, 3)));
+        assert_eq!(h.pop(), Some((4.0, 1, 4)));
+        assert_eq!(h.pop(), Some((5.0, 2, 1)));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn heap_skips_invalidated_entries() {
+        let mut h = EventHeap::new(2);
+        h.push(0, 1.0, 0);
+        h.push(1, 2.0, 0);
+        h.invalidate(0);
+        h.push(0, 3.0, 7);
+        assert_eq!(h.pop(), Some((2.0, 1, 0)));
+        assert_eq!(h.pop(), Some((3.0, 0, 7)));
+        assert_eq!(h.pop(), None);
+        // the stale entry was physically consumed along the way
+        assert_eq!(h.len_raw(), 0);
+    }
+
+    #[test]
+    fn heap_clear_invalidates_everything() {
+        let mut h = EventHeap::new(2);
+        h.push(0, 1.0, 0);
+        h.clear();
+        h.push(1, 9.0, 0);
+        assert_eq!(h.pop(), Some((9.0, 1, 0)));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn mark_stack_suffix_max() {
+        let mut m = MarkStack::new();
+        m.push(0, 10.0, 0);
+        m.push(1, 4.0, 1); // dip below the high-water mark
+        m.push(2, 4.0, 2); // same key, higher engine: replaces seq 1
+        m.push(3, 12.0, 0); // new maximum: collapses everything
+        assert_eq!(m.suffix_max(0), Some((12.0, 0)));
+        assert_eq!(m.suffix_max(3), Some((12.0, 0)));
+        assert_eq!(m.suffix_max(4), None);
+
+        m.push(4, 6.0, 1);
+        m.push(5, 5.0, 0);
+        // suffix since 4 sees only the dip events
+        assert_eq!(m.suffix_max(4), Some((6.0, 1)));
+        assert_eq!(m.suffix_max(5), Some((5.0, 0)));
+        // suffix since 1 still dominated by the seq-3 maximum
+        assert_eq!(m.suffix_max(1), Some((12.0, 0)));
+    }
+
+    #[test]
+    fn key_after_is_lexicographic() {
+        assert!(key_after((2.0, 0), (1.0, 9)));
+        assert!(key_after((1.0, 3), (1.0, 2)));
+        assert!(!key_after((1.0, 2), (1.0, 2)));
+        assert!(!key_after((0.5, 9), (1.0, 0)));
+    }
+}

@@ -13,20 +13,38 @@
 //! termination at the batching threshold, on-policy restart vs partial
 //! resume), so the same policies can be compared at paper scale (512
 //! prompts, 8k-token caps) in milliseconds of host time.
+//!
+//! Module layout:
+//! * [`engine`](self) (`engine.rs`) — one simulated engine: lanes, local
+//!   queue, incremental KV accounting, fused silent-span arithmetic.
+//! * `pool.rs` — the engine pool and the two stepping cores
+//!   ([`SimCore::Event`] heap-ordered decisions vs [`SimCore::Reference`]
+//!   linear min-scan).
+//! * `heap.rs` — the lazy-deletion event heap and the suffix-max mark
+//!   stack behind exact span materialization.
+//! * `backend.rs` — the `ScheduleBackend` adapter driving policy
+//!   decisions against the pool.
+
+mod backend;
+mod engine;
+mod heap;
+mod pool;
+
+pub use pool::SimCore;
 
 use crate::coordinator::buffer::Mode;
-use crate::metrics::{PredictorScore, Timeline};
+use crate::metrics::Timeline;
 use crate::rollout::kv::{KvConfig, KvMode};
 use crate::sched::policy::{
-    drive_traced, AsyncUpdatePolicy, BaselinePolicy, EngineLoad, GroupPolicy, HarvestAction,
-    HarvestItem, KvGovernor, LaneView, PolicyParams, SchedView, ScheduleBackend,
+    drive_traced, AsyncUpdatePolicy, BaselinePolicy, GroupPolicy, KvGovernor, PolicyParams,
     SchedulePolicy, StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
 };
-use crate::sched::{make_predictor, sjf_priority, DispatchPolicy, LengthPredictor, PredictorKind};
-use crate::trace::{series, SloSummary, Tracer};
+use crate::sched::{DispatchPolicy, LengthPredictor, PredictorKind};
+use crate::trace::{SloSummary, Tracer};
 use crate::util::rng::Pcg64;
-use anyhow::Result;
-use std::collections::{BTreeMap, VecDeque};
+use backend::{make_sim_predictor, SimBackend};
+use engine::{stamp_work, SimWork};
+use pool::SimPool;
 
 /// Serving-engine cost model (seconds).
 #[derive(Debug, Clone, Copy)]
@@ -160,209 +178,13 @@ pub struct SimReport {
     /// downsampled — the utilization curve `pool_kv.json` plots.  Empty
     /// when KV accounting is off.
     pub kv_trace: Vec<(f64, usize)>,
+    /// Rids in training-consumption order — the full decision-equivalence
+    /// fingerprint the event-vs-reference differential tests compare.
+    pub consumed_rids: Vec<u64>,
     /// Per-request latency roll-up (TTFT/TPOT/e2e quantiles, goodput).
     /// Default-empty unless the run carried a recording [`Tracer`]
     /// ([`simulate_pool_traced`], or `PoolSimOpts::slo`).
     pub slo: SloSummary,
-}
-
-struct Running {
-    req: SimRequest,
-    generated: usize,
-    /// Predicted total length stamped at stage time (None = rank-only
-    /// predictor) — what the paged admission estimate consumed, kept so
-    /// an evicted lane re-admits under the same estimate.
-    predicted: Option<usize>,
-}
-
-/// One unit of stageable work: a request plus preserved progress and the
-/// stamped length prediction driving paged-KV admission estimates.
-#[derive(Debug, Clone, Copy)]
-struct SimWork {
-    req: SimRequest,
-    progress: usize,
-    predicted: Option<usize>,
-}
-
-/// Stamp a raw prediction onto staged work via the shared
-/// [`crate::rollout::kv::stamp_prediction`] rule (None for rank-only
-/// predictors — bucket indices are not token counts and must not feed KV
-/// estimates).
-fn stamp_work(rank_only: bool, predicted: f64, req: SimRequest, progress: usize) -> SimWork {
-    SimWork {
-        req,
-        progress,
-        predicted: crate::rollout::kv::stamp_prediction(rank_only, predicted),
-    }
-}
-
-/// Simulated engine with queue capacity `q`.
-struct SimEngine {
-    q: usize,
-    cost: CostModel,
-    /// KV memory model (mode + budget + page; `budget == usize::MAX` =
-    /// accounting off).
-    kv: KvConfig,
-    clock: f64,
-    running: Vec<Running>,
-    queue: VecDeque<SimWork>,
-    timeline: Timeline,
-    tokens_out: u64,
-    /// Forced paged evictions (actual usage outgrew the budget mid-step).
-    sheds: u64,
-    /// (clock, kv_used) samples — recorded only when accounting is on.
-    kv_trace: Vec<(f64, usize)>,
-}
-
-impl SimEngine {
-    fn new(q: usize, cost: CostModel, kv: KvConfig) -> Self {
-        SimEngine {
-            q,
-            cost,
-            kv,
-            clock: 0.0,
-            running: Vec::new(),
-            queue: VecDeque::new(),
-            timeline: Timeline::new(),
-            tokens_out: 0,
-            sheds: 0,
-            kv_trace: Vec::new(),
-        }
-    }
-
-    fn record(&mut self) {
-        self.timeline.set_running(self.clock, self.running.len());
-        if !self.kv.unlimited() {
-            let used = self.kv_used();
-            self.kv_trace.push((self.clock, used));
-        }
-    }
-
-    /// What a running lane charges right now (worst case in reserve mode,
-    /// the paged actual context otherwise).
-    fn lane_charge(&self, r: &Running) -> usize {
-        self.kv.lane_charge(r.req.prompt_len, r.generated, r.req.output_len)
-    }
-
-    /// What the admission gate charges a queued candidate.
-    fn work_estimate(&self, w: &SimWork) -> usize {
-        self.kv
-            .admit_estimate(w.req.prompt_len, w.progress, w.req.output_len, w.predicted)
-    }
-
-    fn kv_used(&self) -> usize {
-        self.running.iter().map(|r| self.lane_charge(r)).sum()
-    }
-
-    /// The KV admission gate shared by `admit`, `engine_loads`, and the
-    /// pool's `steal`: admitting `estimate` on top of `used` is refused
-    /// iff running lanes already hold KV and the sum overruns the budget
-    /// (the empty-engine escape admits any head request alone).
-    fn kv_gate_refuses(&self, used: usize, estimate: usize) -> bool {
-        self.kv.gate_refuses(used, estimate)
-    }
-
-    fn admit(&mut self) {
-        let mut used = self.kv_used();
-        while self.running.len() < self.q {
-            let Some(front) = self.queue.front() else { break };
-            // KV admission gate: an otherwise-empty engine always admits
-            // its head request (progress guarantee — a single oversized
-            // context must not deadlock the queue).  The gate accumulates
-            // admission ESTIMATES within the pass; paged lanes charge
-            // their much smaller actual context once admitted.
-            let est = self.work_estimate(front);
-            if self.kv_gate_refuses(used, est) {
-                break;
-            }
-            let w = self.queue.pop_front().unwrap();
-            used += est;
-            // prefill cost: prompt + any preserved progress
-            self.clock += (w.req.prompt_len + w.progress) as f64 * self.cost.t_prefill_token;
-            self.running
-                .push(Running { req: w.req, generated: w.progress, predicted: w.predicted });
-        }
-        self.record();
-    }
-
-    /// One decode iteration; returns finished requests.
-    fn step(&mut self) -> Vec<SimRequest> {
-        let r = self.running.len();
-        if r == 0 {
-            return Vec::new();
-        }
-        self.clock += self.cost.t_weights + r as f64 * self.cost.t_token;
-        self.tokens_out += r as u64;
-        let mut finished = Vec::new();
-        self.running.retain_mut(|run| {
-            run.generated += 1;
-            if run.generated >= run.req.output_len {
-                finished.push(run.req);
-                false
-            } else {
-                true
-            }
-        });
-        if !finished.is_empty() {
-            self.timeline.add_finished(finished.len() as u64);
-        }
-        self.shed_over_budget();
-        self.record();
-        finished
-    }
-
-    /// Forced paged backpressure: if actual usage outgrew the budget
-    /// (admission estimates undershot), evict the smallest-context lane
-    /// back to the local queue — progress kept, resume pays a re-prefill —
-    /// until the budget holds or one lane remains (the running twin of the
-    /// empty-engine admission escape).  The back of the queue makes the
-    /// evicted partial the preferred steal victim for a KV-rich peer.
-    fn shed_over_budget(&mut self) {
-        if self.kv.mode != KvMode::Paged || self.kv.unlimited() {
-            return;
-        }
-        while self.running.len() > 1 && self.kv_used() > self.kv.budget {
-            let lane = self
-                .running
-                .iter()
-                .enumerate()
-                .min_by_key(|&(i, r)| (self.lane_charge(r), i))
-                .map(|(i, _)| i)
-                .expect("running checked non-empty");
-            let r = self.running.remove(lane);
-            self.queue.push_back(SimWork {
-                req: r.req,
-                progress: r.generated,
-                predicted: r.predicted,
-            });
-            self.sheds += 1;
-        }
-    }
-
-    /// Preempt ONE running lane back to the queue, KEEPING progress
-    /// (resume costs only a re-prefill over prompt + prefix).
-    fn preempt_lane(&mut self, lane: usize) -> Option<SimWork> {
-        if lane >= self.running.len() {
-            return None;
-        }
-        let r = self.running.remove(lane);
-        self.record();
-        Some(SimWork { req: r.req, progress: r.generated, predicted: r.predicted })
-    }
-
-    /// Terminate everything in flight; returns (request, progress, queued)
-    /// triples — `queued` marks requests drained from the waiting queue
-    /// rather than preempted out of a lane.
-    fn terminate_all(&mut self) -> Vec<(SimRequest, usize, bool)> {
-        let mut out: Vec<(SimRequest, usize, bool)> = self
-            .running
-            .drain(..)
-            .map(|r| (r.req, r.generated, false))
-            .collect();
-        out.extend(self.queue.drain(..).map(|w| (w.req, w.progress, true)));
-        self.record();
-        out
-    }
 }
 
 /// Simulate one full consumption of `workload` under `mode` on a single
@@ -374,270 +196,6 @@ pub fn simulate(mode: SimMode, workload: &[SimRequest], q: usize,
                 update_batch: usize, cost: CostModel) -> SimReport {
     simulate_pool(mode, workload, 1, q, update_batch, cost,
                   DispatchPolicy::ShortestPredictedFirst, PredictorKind::History)
-}
-
-// ==========================================================================
-// Multi-engine pool simulation (the `sched` layer's simulator mirror)
-// ==========================================================================
-
-/// Engine pool over [`SimEngine`]s: a central queue (or static stripes for
-/// round-robin) plus event-driven stepping — always advance the
-/// earliest-clock engine with work, so engine clocks stay within one
-/// decode iteration of each other (parallel devices).
-struct SimPool {
-    engines: Vec<SimEngine>,
-    central: VecDeque<SimWork>,
-    policy: DispatchPolicy,
-    rr: usize,
-}
-
-impl SimPool {
-    fn new(n: usize, q_each: usize, cost: CostModel, policy: DispatchPolicy,
-           kv: KvConfig) -> Self {
-        SimPool {
-            engines: (0..n).map(|_| SimEngine::new(q_each, cost, kv)).collect(),
-            central: VecDeque::new(),
-            policy,
-            rr: 0,
-        }
-    }
-
-    /// Targeted admission: push work straight onto engine `i`'s local
-    /// queue, bypassing the dispatch policy (`Admit { engine: Some(i) }`).
-    fn stage_to(&mut self, i: usize, work: Vec<SimWork>) {
-        assert!(i < self.engines.len(), "stage_to engine out of range");
-        self.engines[i].queue.extend(work);
-    }
-
-    /// Stage a wave of work per the dispatch policy.  Round-robin
-    /// statically stripes (the FCFS baseline); least-loaded keeps a FIFO
-    /// central queue that engines pull from as lanes free; SJF keeps the
-    /// central queue sorted by predicted remaining length so each engine
-    /// pulls a contiguous, similar-length run.
-    fn stage(&mut self, work: Vec<SimWork>, pred: &dyn LengthPredictor) {
-        match self.policy {
-            DispatchPolicy::RoundRobin => {
-                for w in work {
-                    let i = self.rr % self.engines.len();
-                    self.rr += 1;
-                    self.engines[i].queue.push_back(w);
-                }
-            }
-            DispatchPolicy::LeastLoaded => self.central.extend(work),
-            DispatchPolicy::ShortestPredictedFirst => {
-                // sjf_priority is THE policy shared with the real
-                // EnginePool; keys computed once, not in the comparator
-                let mut keyed: Vec<(f64, SimWork)> = work
-                    .into_iter()
-                    .map(|w| {
-                        (sjf_priority(pred, w.req.id as u64, w.req.prompt_len, w.progress), w)
-                    })
-                    .collect();
-                keyed.sort_by(|a, b| {
-                    a.0.partial_cmp(&b.0).unwrap().then(a.1.req.id.cmp(&b.1.req.id))
-                });
-                self.central.extend(keyed.into_iter().map(|(_, w)| w));
-            }
-        }
-    }
-
-    /// Pull central-queue work into engine `i`'s free lanes (late
-    /// binding), KV-budget-aware: stop once the head's admission estimate
-    /// no longer fits what the engine is already committed to (actual
-    /// lane charges plus queued estimates) — route around KV-tight
-    /// engines instead of queueing work behind a gate that will refuse
-    /// it.  A fully empty engine always pulls (the dispatch twin of the
-    /// empty-engine admission escape); unlimited budgets never refuse, so
-    /// KV-oblivious runs pull exactly as before.
-    fn refill(&mut self, i: usize) {
-        if self.policy == DispatchPolicy::RoundRobin {
-            return;
-        }
-        let kv = self.engines[i].kv;
-        let mut committed = self.engines[i].kv_used()
-            + self.engines[i]
-                .queue
-                .iter()
-                .map(|w| self.engines[i].work_estimate(w))
-                .sum::<usize>();
-        loop {
-            let e = &self.engines[i];
-            if e.running.len() + e.queue.len() >= e.q {
-                break;
-            }
-            let Some(front) = self.central.front() else { break };
-            let est = e.work_estimate(front);
-            if kv.gate_refuses(committed, est) {
-                break;
-            }
-            committed = committed.saturating_add(est);
-            let w = self.central.pop_front().unwrap();
-            self.engines[i].queue.push_back(w);
-        }
-    }
-
-    fn has_work(&self, i: usize) -> bool {
-        let e = &self.engines[i];
-        !e.running.is_empty()
-            || !e.queue.is_empty()
-            || (self.policy != DispatchPolicy::RoundRobin && !self.central.is_empty())
-    }
-
-    fn total_running(&self) -> usize {
-        self.engines.iter().map(|e| e.running.len()).sum()
-    }
-
-    fn queued(&self) -> usize {
-        self.central.len() + self.engines.iter().map(|e| e.queue.len()).sum::<usize>()
-    }
-
-    /// Advance the earliest-clock engine with work by one admit + decode
-    /// iteration; returns its finishes, or None when the pool is drained.
-    fn tick(&mut self) -> Option<Vec<SimRequest>> {
-        let i = (0..self.engines.len())
-            .filter(|&i| self.has_work(i))
-            .min_by(|&a, &b| {
-                self.engines[a]
-                    .clock
-                    .partial_cmp(&self.engines[b].clock)
-                    .unwrap()
-            })?;
-        self.refill(i);
-        self.engines[i].admit();
-        Some(self.engines[i].step())
-    }
-
-    /// Preempt one lane of one engine, progress kept; the partial re-enters
-    /// the dispatch flow (central queue, or the same engine's local queue
-    /// under static round-robin striping).
-    fn preempt(&mut self, engine: usize, lane: usize) {
-        if engine >= self.engines.len() {
-            return;
-        }
-        if let Some(w) = self.engines[engine].preempt_lane(lane) {
-            if self.policy == DispatchPolicy::RoundRobin {
-                self.engines[engine].queue.push_back(w);
-            } else {
-                self.central.push_back(w);
-            }
-        }
-    }
-
-    /// Migrate work from engine `from` to engine `to`; returns the
-    /// migrated progress tokens, or None when nothing moved (no such
-    /// work, or the destination's KV budget refused it).  Clock rule: a
-    /// partial's tokens were produced under `from`'s clock, so the thief's
-    /// clock is bumped to at least `from`'s before it may resume them —
-    /// migration cannot replay work in the destination's past.  Fresh
-    /// queued work (progress 0) carries no such constraint, exactly like
-    /// a central-queue pull.
-    fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Option<usize> {
-        let n = self.engines.len();
-        if from >= n || to >= n || from == to {
-            return None;
-        }
-        let (work, progressed) = match lane {
-            None => {
-                let w = self.engines[from].queue.pop_back()?;
-                // refuse what the destination can never hold AND what its
-                // current headroom cannot admit (see the harness twin)
-                let dst = &self.engines[to];
-                let est = dst.work_estimate(&w);
-                if est > dst.kv.budget || dst.kv_gate_refuses(dst.kv_used(), est) {
-                    self.engines[from].queue.push_back(w);
-                    return None;
-                }
-                let progressed = w.progress > 0;
-                (w, progressed)
-            }
-            Some(l) => {
-                let reserve = {
-                    let victim = self.engines[from].running.get(l)?;
-                    self.engines[to].kv.admit_estimate(
-                        victim.req.prompt_len,
-                        victim.generated,
-                        victim.req.output_len,
-                        victim.predicted,
-                    )
-                };
-                let dst = &self.engines[to];
-                if reserve > dst.kv.headroom(dst.kv_used()) {
-                    return None;
-                }
-                (self.engines[from].preempt_lane(l)?, true)
-            }
-        };
-        if progressed && self.engines[to].clock < self.engines[from].clock {
-            self.engines[to].clock = self.engines[from].clock;
-        }
-        let progress = work.progress;
-        self.engines[to].queue.push_back(work);
-        Some(progress)
-    }
-
-    /// Terminate everything pool-wide -> (request, progress, queued).
-    fn terminate_all(&mut self) -> Vec<(SimRequest, usize, bool)> {
-        let mut out = Vec::new();
-        for e in self.engines.iter_mut() {
-            out.extend(e.terminate_all());
-        }
-        out.extend(self.central.drain(..).map(|(req, p)| (req, p, true)));
-        out
-    }
-
-    /// Sync barrier: jump every engine clock to the pool max (harvest / wave
-    /// end).  The gap between an engine's own finish time and the barrier is
-    /// genuine rollout-phase idle; the timeline's trailing interval (last
-    /// recorded running count, usually 0) accounts for it.
-    fn align_clocks(&mut self) {
-        let end = self.clock();
-        for e in self.engines.iter_mut() {
-            e.clock = end;
-        }
-    }
-
-    fn clock(&self) -> f64 {
-        self.engines.iter().map(|e| e.clock).fold(0.0, f64::max)
-    }
-
-    fn tokens_out(&self) -> u64 {
-        self.engines.iter().map(|e| e.tokens_out).sum()
-    }
-}
-
-/// Merge per-engine occupancy timelines into one pool timeline whose
-/// running count is the sum across engines (tokens and finish counts sum
-/// too), so [`Timeline::bubble_ratio`] with the pool's total capacity gives
-/// the aggregate bubble.
-fn merge_timelines(engines: &[SimEngine]) -> Timeline {
-    let mut merged = Timeline::new();
-    let sources: Vec<&[(f64, usize)]> =
-        engines.iter().map(|e| e.timeline.events()).collect();
-    for (t, total) in series::merge_running_totals(&sources) {
-        merged.set_running(t, total);
-    }
-    let mut tokens = 0u64;
-    let mut finished = 0u64;
-    for e in engines {
-        // SimEngine counts tokens in its own field — its timeline is
-        // never fed add_tokens (unlike the real rollout::Engine)
-        tokens += e.tokens_out;
-        finished += e.timeline.finished();
-    }
-    merged.add_tokens(tokens);
-    merged.add_finished(finished);
-    merged
-}
-
-fn make_sim_predictor(kind: PredictorKind, workload: &[SimRequest]) -> Box<dyn LengthPredictor> {
-    let mut pred = make_predictor(kind);
-    if kind == PredictorKind::Oracle {
-        // the oracle reads true cost: simulator ground truth
-        for r in workload {
-            pred.observe(r.id as u64, r.prompt_len, r.output_len);
-        }
-    }
-    pred
 }
 
 /// Run `workload` to completion on an engine pool — one oversubscribed
@@ -657,6 +215,36 @@ fn make_sim_predictor(kind: PredictorKind, workload: &[SimRequest]) -> Box<dyn L
 pub fn pool_makespan(workload: &[SimRequest], engines: usize, q_total: usize,
                      cost: CostModel, dispatch: DispatchPolicy,
                      predictor: PredictorKind) -> f64 {
+    scale_probe(workload, engines, q_total, cost, dispatch, predictor,
+                SimCore::Event, f64::INFINITY, 1)
+        .makespan
+}
+
+/// What [`scale_probe`] measured: one oversubscribed dispatch wave run
+/// (or cut off at the wall budget) on the chosen core.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleReport {
+    pub requests: usize,
+    pub engines: usize,
+    /// Simulated seconds reached (the makespan when `finished_all`).
+    pub makespan: f64,
+    /// Host seconds the probe took.
+    pub wall_secs: f64,
+    /// Requests that completed within the wall budget.
+    pub completed: usize,
+    pub finished_all: bool,
+}
+
+/// [`pool_makespan`] with the scale knobs exposed: stepping core, host
+/// wall-clock budget (checked every 4096 decisions; `f64::INFINITY` runs
+/// to completion), and timeline stride (record every `stride`-th
+/// occupancy change so million-request probes stay memory-bounded).
+/// This is the engine under the `sched_bench --headline` run.
+#[allow(clippy::too_many_arguments)]
+pub fn scale_probe(workload: &[SimRequest], engines: usize, q_total: usize,
+                   cost: CostModel, dispatch: DispatchPolicy,
+                   predictor: PredictorKind, core: SimCore,
+                   wall_budget_secs: f64, timeline_stride: usize) -> ScaleReport {
     assert!(engines >= 1 && q_total >= engines, "q_total must cover engines");
     let mut pred = make_sim_predictor(predictor, workload);
     if predictor != PredictorKind::Oracle {
@@ -668,7 +256,7 @@ pub fn pool_makespan(workload: &[SimRequest], engines: usize, q_total: usize,
         }
     }
     let mut pool = SimPool::new(engines, q_total / engines, cost, dispatch,
-                                KvConfig::default());
+                                KvConfig::default(), core, timeline_stride.max(1));
     let work: Vec<SimWork> = workload
         .iter()
         .map(|r| {
@@ -677,467 +265,28 @@ pub fn pool_makespan(workload: &[SimRequest], engines: usize, q_total: usize,
         })
         .collect();
     pool.stage(work, pred.as_ref());
-    while pool.tick().is_some() {}
-    pool.clock()
-}
-
-// ==========================================================================
-// SimBackend — the simulator ScheduleBackend
-// ==========================================================================
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum SimLife {
-    Fresh,
-    InFlight,
-    Ready,
-    Consumed,
-}
-
-struct SimEntry {
-    req: SimRequest,
-    /// Preserved progress a resume re-prefills over.
-    progress: usize,
-    life: SimLife,
-    /// Harvested response length (output_len, or clip progress).
-    ready_len: usize,
-    complete: bool,
-    /// Completion-order stamp (what `ready_rids` sorts by).
-    seq: u64,
-}
-
-/// The simulator `ScheduleBackend`: executes the SAME policy decision
-/// sequence the live controller executes, against [`SimPool`]'s cost model.
-/// The live mirror is `coordinator::controller`'s `LiveBackend`.
-struct SimBackend {
-    pool: SimPool,
-    cost: CostModel,
-    pred: Box<dyn LengthPredictor>,
-    score: PredictorScore,
-    /// Prediction captured at stage time — what actually drove dispatch —
-    /// not recomputed after siblings finished.
-    staged_pred: BTreeMap<usize, f64>,
-    /// Workload not yet loaded (grouped loading pops from here).
-    backlog: VecDeque<SimRequest>,
-    entries: BTreeMap<u64, SimEntry>,
-    q_cap: usize,
-    total: usize,
-    done: usize,
-    // O(1) lifecycle counters (view() runs 2-3x per driver decision; a
-    // BTreeMap scan there would dominate paper-scale sim host time)
-    fresh_count: usize,
-    ready_count: usize,
-    unconsumed_count: usize,
-    seq: u64,
-    updates: usize,
-    harvests: usize,
-    clipped: usize,
-    dropped: usize,
-    wasted: u64,
-    steals: u64,
-    migrated_tokens: u64,
-    infer_time: f64,
-    update_time: f64,
-    /// Lanes shed by executed `Decision::Throttle`s.
-    throttles: u64,
-    /// Async mode: updates overlap decoding instead of serializing.
-    overlap_updates: bool,
-    /// Engine-clock time at which the (async) trainer frees up.
-    update_free_at: f64,
-}
-
-impl SimBackend {
-    fn new(workload: &[SimRequest], engines: usize, q_each: usize, cost: CostModel,
-           dispatch: DispatchPolicy, predictor: PredictorKind,
-           overlap_updates: bool, kv: KvConfig) -> Self {
-        SimBackend {
-            pool: SimPool::new(engines, q_each, cost, dispatch, kv),
-            cost,
-            pred: make_sim_predictor(predictor, workload),
-            score: PredictorScore::default(),
-            staged_pred: BTreeMap::new(),
-            backlog: workload.iter().copied().collect(),
-            entries: BTreeMap::new(),
-            q_cap: q_each * engines,
-            total: workload.len(),
-            done: 0,
-            fresh_count: 0,
-            ready_count: 0,
-            unconsumed_count: 0,
-            seq: 0,
-            updates: 0,
-            harvests: 0,
-            clipped: 0,
-            dropped: 0,
-            wasted: 0,
-            steals: 0,
-            migrated_tokens: 0,
-            infer_time: 0.0,
-            update_time: 0.0,
-            throttles: 0,
-            overlap_updates,
-            update_free_at: 0.0,
+    let start = std::time::Instant::now();
+    let mut completed = 0usize;
+    let mut finished_all = true;
+    let mut decisions = 0u64;
+    loop {
+        match pool.tick() {
+            Some(f) => completed += f.len(),
+            None => break,
+        }
+        decisions += 1;
+        if decisions % 4096 == 0 && start.elapsed().as_secs_f64() > wall_budget_secs {
+            finished_all = false;
+            break;
         }
     }
-
-    fn into_report(self, mode: SimMode) -> SimReport {
-        let rollout_time = self.pool.clock();
-        let timeline = merge_timelines(&self.pool.engines);
-        let bubble = timeline.bubble_ratio(self.q_cap, rollout_time);
-        // the admitted-lane headline: max concurrent running lanes across
-        // the pool over the whole run (from the merged occupancy events)
-        let peak_lanes = timeline.events().iter().map(|&(_, r)| r).max().unwrap_or(0);
-        let kv_trace = merge_kv_traces(&self.pool.engines);
-        // per-engine idle fraction against the POOL end time: an engine
-        // that never ran is 100% idle capacity, not a non-event
-        let engine_idle: Vec<f64> = self
-            .pool
-            .engines
-            .iter()
-            .map(|e| {
-                if e.timeline.events().is_empty() {
-                    1.0
-                } else {
-                    e.timeline.bubble_ratio(e.q, rollout_time)
-                }
-            })
-            .collect();
-        // useful = tokens of trajectories actually harvested (clipping
-        // shortens; restarts and drops waste)
-        let useful = self.pool.tokens_out().saturating_sub(self.wasted);
-        let total_time = if self.overlap_updates {
-            // async: update cost hides under decoding; only the overhang
-            // past the rollout end serializes
-            rollout_time.max(self.update_free_at) + self.infer_time
-        } else {
-            rollout_time + self.infer_time + self.update_time
-        };
-        SimReport {
-            mode,
-            total_time,
-            rollout_time,
-            update_time: self.update_time,
-            infer_time: self.infer_time,
-            useful_tokens: useful,
-            wasted_tokens: self.wasted,
-            bubble_ratio: bubble,
-            throughput: useful as f64 / rollout_time,
-            timeline,
-            harvests: self.harvests,
-            clipped: self.clipped,
-            dropped: self.dropped,
-            engines: self.pool.engines.len(),
-            predictor_mae: self.score.mae(),
-            predictor_tau: self.score.kendall_tau(),
-            steals: self.steals,
-            migrated_tokens: self.migrated_tokens,
-            engine_idle,
-            peak_lanes,
-            kv_sheds: self.pool.engines.iter().map(|e| e.sheds).sum(),
-            throttles: self.throttles,
-            kv_trace,
-            slo: SloSummary::default(),
-        }
-    }
-}
-
-/// Merge per-engine (clock, kv_used) samples into one pool-wide usage
-/// curve (running totals over merged event order), downsampled to at most
-/// 256 points so `pool_kv.json` stays small at paper scale.
-fn merge_kv_traces(engines: &[SimEngine]) -> Vec<(f64, usize)> {
-    let sources: Vec<&[(f64, usize)]> =
-        engines.iter().map(|e| e.kv_trace.as_slice()).collect();
-    series::downsample(&series::merge_running_totals(&sources), 256)
-}
-
-impl ScheduleBackend for SimBackend {
-    fn view(&self) -> SchedView {
-        SchedView {
-            running: self.pool.total_running(),
-            queued: self.pool.queued(),
-            ready: self.ready_count,
-            fresh: self.fresh_count,
-            unconsumed: self.unconsumed_count,
-            lanes: self.q_cap,
-            updates: self.updates,
-        }
-    }
-
-    fn schedulable(&self) -> Vec<u64> {
-        self.entries
-            .values()
-            .filter(|e| e.life == SimLife::Fresh)
-            .map(|e| e.req.id as u64)
-            .collect()
-    }
-
-    fn ready_rids(&self) -> Vec<u64> {
-        let mut v: Vec<(u64, u64)> = self
-            .entries
-            .values()
-            .filter(|e| e.life == SimLife::Ready)
-            .map(|e| (e.seq, e.req.id as u64))
-            .collect();
-        v.sort_unstable();
-        v.into_iter().map(|(_, rid)| rid).collect()
-    }
-
-    fn ready_len(&self, rid: u64) -> usize {
-        self.entries.get(&rid).map(|e| e.ready_len).unwrap_or(0)
-    }
-
-    fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
-        let mut count = 0;
-        for _ in 0..prompts {
-            let Some(req) = self.backlog.pop_front() else { break };
-            self.entries.insert(req.id as u64, SimEntry {
-                req,
-                progress: 0,
-                life: SimLife::Fresh,
-                ready_len: 0,
-                complete: false,
-                seq: 0,
-            });
-            self.fresh_count += 1;
-            self.unconsumed_count += 1;
-            count += 1;
-        }
-        Ok(count)
-    }
-
-    fn admit(&mut self, rids: &[u64], engine: Option<usize>) -> Result<()> {
-        let mut work = Vec::with_capacity(rids.len());
-        for rid in rids {
-            let e = self.entries.get_mut(rid).expect("admit unknown sim rid");
-            assert_eq!(e.life, SimLife::Fresh, "admit non-fresh sim rid {rid}");
-            e.life = SimLife::InFlight;
-            self.fresh_count -= 1;
-            let predicted = self.pred.predict(e.req.id as u64, e.req.prompt_len);
-            self.staged_pred.insert(e.req.id, predicted);
-            work.push(stamp_work(self.pred.is_rank_only(), predicted, e.req, e.progress));
-        }
-        match engine {
-            Some(i) => self.pool.stage_to(i, work),
-            None => self.pool.stage(work, self.pred.as_ref()),
-        }
-        Ok(())
-    }
-
-    fn engine_loads(&self) -> Vec<EngineLoad> {
-        self.pool
-            .engines
-            .iter()
-            .map(|e| {
-                let used = e.kv_used();
-                let blocked = e
-                    .queue
-                    .front()
-                    .is_some_and(|w| e.kv_gate_refuses(used, e.work_estimate(w)));
-                EngineLoad {
-                    queued: e.queue.len(),
-                    active: e.running.len(),
-                    lanes: e.q,
-                    kv_used: used,
-                    kv_budget: e.kv.budget,
-                    kv_blocked: blocked,
-                    kv_pressure: e.kv.pressure(used, e.running.len()),
-                }
-            })
-            .collect()
-    }
-
-    fn engine_lanes(&self, engine: usize) -> Vec<LaneView> {
-        self.pool
-            .engines
-            .get(engine)
-            .map(|e| {
-                e.running
-                    .iter()
-                    .enumerate()
-                    .map(|(i, r)| LaneView {
-                        lane: i,
-                        progress: r.generated,
-                        reserve: e.kv.admit_estimate(
-                            r.req.prompt_len,
-                            r.generated,
-                            r.req.output_len,
-                            r.predicted,
-                        ),
-                    })
-                    .collect()
-            })
-            .unwrap_or_default()
-    }
-
-    fn trace_clock(&self) -> f64 {
-        self.pool.clock()
-    }
-
-    fn lane_rids(&self, engine: usize) -> Vec<(usize, u64)> {
-        self.pool
-            .engines
-            .get(engine)
-            .map(|e| {
-                e.running
-                    .iter()
-                    .enumerate()
-                    .map(|(i, r)| (i, r.req.id as u64))
-                    .collect()
-            })
-            .unwrap_or_default()
-    }
-
-    fn throttle(&mut self, engine: usize) -> Result<bool> {
-        let Some(e) = self.pool.engines.get(engine) else { return Ok(false) };
-        if e.running.len() < 2 {
-            return Ok(false);
-        }
-        // shed the smallest-context lane, progress kept, routed like a
-        // preemption so budget-aware dispatch can re-place it
-        let lane = e
-            .running
-            .iter()
-            .enumerate()
-            .min_by_key(|&(i, r)| (e.lane_charge(r), i))
-            .map(|(i, _)| i)
-            .expect("running checked >= 2");
-        self.pool.preempt(engine, lane);
-        self.throttles += 1;
-        Ok(true)
-    }
-
-    fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Result<bool> {
-        match self.pool.steal(from, to, lane) {
-            Some(progress) => {
-                self.steals += 1;
-                self.migrated_tokens += progress as u64;
-                Ok(true)
-            }
-            None => Ok(false),
-        }
-    }
-
-    fn step(&mut self) -> Result<usize> {
-        let Some(finished) = self.pool.tick() else { return Ok(0) };
-        let n = finished.len();
-        for r in &finished {
-            let predicted = self
-                .staged_pred
-                .remove(&r.id)
-                .unwrap_or_else(|| self.pred.predict(r.id as u64, r.prompt_len));
-            self.score.push(predicted, r.output_len as f64);
-            self.pred.observe(r.id as u64, r.prompt_len, r.output_len);
-            let e = self
-                .entries
-                .get_mut(&(r.id as u64))
-                .expect("finished unknown sim rid");
-            debug_assert_eq!(e.life, SimLife::InFlight);
-            e.life = SimLife::Ready;
-            self.ready_count += 1;
-            e.ready_len = r.output_len;
-            e.complete = true;
-            e.seq = self.seq;
-            self.seq += 1;
-        }
-        Ok(n)
-    }
-
-    fn harvest_candidates(&mut self) -> Result<Vec<HarvestItem>> {
-        let mut terminated = self.pool.terminate_all();
-        // harvest is a sync point: engine clocks jump to the pool max
-        self.pool.align_clocks();
-        // highest progress first — clipping candidates
-        terminated.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
-        let mut items = Vec::with_capacity(terminated.len());
-        for (req, progress, was_queued) in terminated {
-            // preemption progress is a length floor the predictor can use
-            self.pred.observe_progress(req.id as u64, req.prompt_len, progress);
-            self.staged_pred.remove(&req.id);
-            // mirror the live backend's item contract: resumed requests
-            // sitting in a queue still carry progress and count as partials
-            items.push(HarvestItem {
-                rid: req.id as u64,
-                progress,
-                queued: was_queued && progress == 0,
-            });
-        }
-        Ok(items)
-    }
-
-    fn resolve(&mut self, item: &HarvestItem, action: HarvestAction) -> Result<()> {
-        let e = self.entries.get_mut(&item.rid).expect("resolve unknown sim rid");
-        debug_assert_eq!(e.life, SimLife::InFlight);
-        match action {
-            HarvestAction::Clip => {
-                e.life = SimLife::Ready;
-                self.ready_count += 1;
-                e.ready_len = item.progress;
-                e.complete = false;
-                e.seq = self.seq;
-                self.seq += 1;
-                self.clipped += 1;
-            }
-            HarvestAction::Restart => {
-                e.progress = 0;
-                e.life = SimLife::Fresh;
-                self.fresh_count += 1;
-                self.wasted += item.progress as u64;
-            }
-            HarvestAction::Resume | HarvestAction::Requeue => {
-                e.progress = item.progress;
-                e.life = SimLife::Fresh;
-                self.fresh_count += 1;
-            }
-            HarvestAction::Drop => {
-                e.life = SimLife::Consumed;
-                self.unconsumed_count -= 1;
-                self.wasted += item.progress as u64;
-                self.dropped += 1;
-                self.done += 1;
-            }
-        }
-        Ok(())
-    }
-
-    fn preempt(&mut self, engine: usize, lane: usize) -> Result<()> {
-        self.pool.preempt(engine, lane);
-        Ok(())
-    }
-
-    fn train(&mut self, rids: &[u64]) -> Result<()> {
-        let mut toks = 0.0f64;
-        for rid in rids {
-            let e = self.entries.get_mut(rid).expect("train unknown sim rid");
-            assert_eq!(e.life, SimLife::Ready, "train non-ready sim rid {rid}");
-            // natural completions train at their true length; only clips
-            // (complete == false) may be shorter
-            debug_assert!(!e.complete || e.ready_len == e.req.output_len);
-            e.life = SimLife::Consumed;
-            self.ready_count -= 1;
-            self.unconsumed_count -= 1;
-            toks += (e.req.prompt_len + e.ready_len) as f64;
-            self.done += 1;
-        }
-        self.infer_time += toks * self.cost.t_infer_token;
-        let update_cost = toks * self.cost.t_update_token;
-        self.update_time += update_cost;
-        if self.overlap_updates {
-            let start = self.update_free_at.max(self.pool.clock());
-            self.update_free_at = start + update_cost;
-        }
-        self.harvests += 1;
-        self.updates += 1;
-        Ok(())
-    }
-
-    fn barrier(&mut self) -> Result<()> {
-        // group-end sync barrier
-        self.pool.align_clocks();
-        self.entries.retain(|_, e| e.life != SimLife::Consumed);
-        Ok(())
-    }
-
-    fn exhausted(&self) -> bool {
-        self.done >= self.total
+    ScaleReport {
+        requests: workload.len(),
+        engines,
+        makespan: pool.observed_clock(),
+        wall_secs: start.elapsed().as_secs_f64(),
+        completed,
+        finished_all,
     }
 }
 
@@ -1191,6 +340,15 @@ pub struct PoolSimOpts {
     /// against this deadline; `None` (default) runs the zero-overhead
     /// disabled tracer.
     pub slo: Option<f64>,
+    /// Stepping core.  [`SimCore::Event`] (default) fuses silent decode
+    /// spans; [`SimCore::Reference`] replays the original per-iteration
+    /// stepper.  An enabled tracer forces `Reference` — per-token TTFT /
+    /// TPOT stamps need every iteration observed.
+    pub core: SimCore,
+    /// Record every `stride`-th occupancy change per engine timeline
+    /// (and KV-trace sample).  1 (default) is lossless; bubble ratios
+    /// stay exact at any stride via busy-area integration.
+    pub timeline_stride: usize,
 }
 
 impl Default for PoolSimOpts {
@@ -1208,6 +366,8 @@ impl Default for PoolSimOpts {
             kv_mode: kv.mode,
             kv_page: kv.page,
             slo: None,
+            core: SimCore::Event,
+            timeline_stride: 1,
         }
     }
 }
@@ -1254,9 +414,12 @@ pub fn simulate_pool_traced(mode: SimMode, workload: &[SimRequest], o: PoolSimOp
         policy = Box::new(WorkStealing::wrap(policy, StealConfig::default()));
     }
     let kv = KvConfig { mode: o.kv_mode, budget: o.kv_budget, page: o.kv_page.max(1) };
+    // per-iteration latency stamps (TTFT/TPOT) need the per-iteration
+    // stepper; fused spans would collapse them onto decision points
+    let core = if tracer.enabled() { SimCore::Reference } else { o.core };
     let mut backend =
         SimBackend::new(workload, o.engines, q_each, o.cost, o.dispatch, o.predictor,
-                        mode == SimMode::Async, kv);
+                        mode == SimMode::Async, kv, core, o.timeline_stride.max(1));
     drive_traced(policy.as_mut(), &mut backend, tracer)
         .expect("sim backend is infallible; a driver error means a policy livelock");
     let mut report = backend.into_report(mode);
@@ -1578,6 +741,7 @@ mod tests {
     #[test]
     fn chrome_trace_schema_round_trip() {
         use crate::util::json::Json;
+        use std::collections::BTreeMap;
         let (w, opts) = golden_workload_and_opts();
         let mut tracer = Tracer::new(None, true);
         simulate_pool_traced(SimMode::Baseline, &w, opts, &mut tracer);
@@ -1609,5 +773,177 @@ mod tests {
                        "\"running\"", "\"queued\"", "\"req 0\"", "\"req 3\""] {
             assert!(text.contains(needle), "trace missing {needle}");
         }
+    }
+
+    // ------------------------------------------------------------------
+    // event core vs reference core differentials
+    // ------------------------------------------------------------------
+
+    /// All five cost knobs exactly representable in binary (multiples of
+    /// 2^-5): repeated adds in the reference stepper and the event core's
+    /// fused `k * iter` multiply are then both EXACT, so engine clocks —
+    /// and everything derived from them — must agree bit for bit.
+    fn dyadic_cost() -> CostModel {
+        CostModel {
+            t_weights: 0.5,
+            t_token: 0.25,
+            t_prefill_token: 0.125,
+            t_update_token: 0.0625,
+            t_infer_token: 0.03125,
+        }
+    }
+
+    fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
+        assert_eq!(a.timeline.finished(), b.timeline.finished(), "{ctx}: finished");
+        assert_eq!(a.timeline.tokens_out(), b.timeline.tokens_out(), "{ctx}: tokens");
+        assert_eq!(a.useful_tokens, b.useful_tokens, "{ctx}: useful");
+        assert_eq!(a.wasted_tokens, b.wasted_tokens, "{ctx}: wasted");
+        assert_eq!(a.clipped, b.clipped, "{ctx}: clipped");
+        assert_eq!(a.dropped, b.dropped, "{ctx}: dropped");
+        assert_eq!(a.harvests, b.harvests, "{ctx}: harvests");
+        assert_eq!(a.steals, b.steals, "{ctx}: steals");
+        assert_eq!(a.migrated_tokens, b.migrated_tokens, "{ctx}: migrated");
+        assert_eq!(a.kv_sheds, b.kv_sheds, "{ctx}: kv_sheds");
+        assert_eq!(a.throttles, b.throttles, "{ctx}: throttles");
+        assert_eq!(a.peak_lanes, b.peak_lanes, "{ctx}: peak_lanes");
+        assert_eq!(a.consumed_rids, b.consumed_rids, "{ctx}: consumed order");
+        assert_eq!(a.rollout_time.to_bits(), b.rollout_time.to_bits(),
+                   "{ctx}: rollout_time {} vs {}", a.rollout_time, b.rollout_time);
+        assert_eq!(a.total_time.to_bits(), b.total_time.to_bits(), "{ctx}: total_time");
+        assert_eq!(a.predictor_mae.to_bits(), b.predictor_mae.to_bits(), "{ctx}: mae");
+        assert_eq!(a.predictor_tau.to_bits(), b.predictor_tau.to_bits(), "{ctx}: tau");
+        assert_eq!(a.timeline.events().len(), b.timeline.events().len(),
+                   "{ctx}: timeline length");
+        for (i, (x, y)) in a.timeline.events().iter().zip(b.timeline.events()).enumerate() {
+            assert_eq!((x.0.to_bits(), x.1), (y.0.to_bits(), y.1),
+                       "{ctx}: timeline[{i}] {x:?} vs {y:?}");
+        }
+        assert_eq!(a.kv_trace.len(), b.kv_trace.len(), "{ctx}: kv_trace length");
+        for (i, (x, y)) in a.kv_trace.iter().zip(&b.kv_trace).enumerate() {
+            assert_eq!((x.0.to_bits(), x.1), (y.0.to_bits(), y.1),
+                       "{ctx}: kv_trace[{i}] {x:?} vs {y:?}");
+        }
+        assert_eq!(a.engine_idle.len(), b.engine_idle.len(), "{ctx}: idle length");
+        for (i, (x, y)) in a.engine_idle.iter().zip(&b.engine_idle).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: engine_idle[{i}] {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn event_core_matches_reference_core_exactly() {
+        let w = longtail_workload(90, 384, 42);
+        for mode in [SimMode::Baseline, SimMode::SortedOnPolicy,
+                     SimMode::SortedPartial, SimMode::Async] {
+            for dispatch in DispatchPolicy::ALL {
+                for steal in [false, true] {
+                    let run = |core| {
+                        simulate_pool_opts(mode, &w, PoolSimOpts {
+                            engines: 3,
+                            q_total: 24,
+                            update_batch: 16,
+                            cost: dyadic_cost(),
+                            dispatch,
+                            predictor: PredictorKind::Oracle,
+                            steal,
+                            core,
+                            ..PoolSimOpts::default()
+                        })
+                    };
+                    assert_reports_identical(
+                        &run(SimCore::Event),
+                        &run(SimCore::Reference),
+                        &format!("{mode:?}/{}/steal={steal}", dispatch.name()),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn event_core_matches_reference_under_kv_pressure() {
+        let w = longtail_workload(70, 256, 9);
+        for kv_mode in [KvMode::Reserve, KvMode::Paged] {
+            for (budget, page) in [(2048usize, 1usize), (1536, 64), (1100, 7)] {
+                for dispatch in DispatchPolicy::ALL {
+                    let run = |core| {
+                        simulate_pool_opts(SimMode::SortedPartial, &w, PoolSimOpts {
+                            engines: 2,
+                            q_total: 16,
+                            update_batch: 12,
+                            cost: dyadic_cost(),
+                            dispatch,
+                            predictor: PredictorKind::History,
+                            steal: true,
+                            kv_budget: budget,
+                            kv_mode,
+                            kv_page: page,
+                            core,
+                            ..PoolSimOpts::default()
+                        })
+                    };
+                    assert_reports_identical(
+                        &run(SimCore::Event),
+                        &run(SimCore::Reference),
+                        &format!("{kv_mode:?}/b{budget}/p{page}/{}", dispatch.name()),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn makespan_identical_across_cores_with_dyadic_costs() {
+        let w = longtail_workload(200, 512, 21);
+        for dispatch in DispatchPolicy::ALL {
+            let probe = |core| {
+                scale_probe(&w, 4, 32, dyadic_cost(), dispatch,
+                            PredictorKind::History, core, f64::INFINITY, 1)
+            };
+            let e = probe(SimCore::Event);
+            let r = probe(SimCore::Reference);
+            assert_eq!(e.makespan.to_bits(), r.makespan.to_bits(),
+                       "{}: {} vs {}", dispatch.name(), e.makespan, r.makespan);
+            assert_eq!(e.completed, r.completed, "{}", dispatch.name());
+            assert!(e.finished_all && r.finished_all);
+        }
+    }
+
+    /// Non-dyadic (default) costs: ULP-level clock divergence may reorder
+    /// exact ties, so cores are checked for conservation independently
+    /// rather than against each other.
+    #[test]
+    fn both_cores_conserve_with_default_costs() {
+        let w = longtail_workload(120, 2048, 17);
+        for core in [SimCore::Event, SimCore::Reference] {
+            for mode in [SimMode::Baseline, SimMode::SortedPartial, SimMode::Async] {
+                let r = simulate_pool_opts(mode, &w, PoolSimOpts {
+                    engines: 4,
+                    q_total: 64,
+                    update_batch: 32,
+                    core,
+                    ..PoolSimOpts::default()
+                });
+                assert_eq!(r.timeline.finished() as usize + r.clipped + r.dropped,
+                           120, "{core:?} {mode:?}");
+                assert_eq!(r.consumed_rids.len(), 120 - r.dropped, "{core:?} {mode:?}");
+                if mode != SimMode::SortedOnPolicy {
+                    assert_eq!(r.wasted_tokens, 0, "{core:?} {mode:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn event_core_scales_without_per_token_stepping() {
+        // 64 engines, 4k requests: completes in well under the wall budget
+        // because host work scales with decisions, not tokens
+        let w = longtail_workload(4000, 512, 3);
+        let rep = scale_probe(&w, 64, 1024, CostModel::default(),
+                              DispatchPolicy::ShortestPredictedFirst,
+                              PredictorKind::History, SimCore::Event, 60.0, 32);
+        assert!(rep.finished_all, "probe hit the wall budget");
+        assert_eq!(rep.completed, 4000);
+        assert!(rep.makespan > 0.0 && rep.makespan.is_finite());
+        assert_eq!(rep.engines, 64);
     }
 }

@@ -1,0 +1,616 @@
+//! The engine pool with two interchangeable stepping cores.
+//!
+//! * [`SimCore::Reference`] is the original tick stepper, kept verbatim as
+//!   the debug/differential oracle: linearly scan every engine for the
+//!   minimum clock, advance it one decode iteration per call.  O(engines)
+//!   per token.
+//! * [`SimCore::Event`] (the default) is the discrete-event core: a
+//!   binary heap orders per-engine decision points by `(time, engine)`,
+//!   and each pop folds the engine's whole silent decode span — `k`
+//!   iterations collapse into one clock/token/KV delta — before running
+//!   ONE reference micro-tick (refill, admit, step) at the decision
+//!   point.  O(log engines + lanes) per decision, independent of span
+//!   length.
+//!
+//! Decision-point taxonomy (what terminates a fused span):
+//!   1. earliest lane finish (frees a lane, may unblock admission);
+//!   2. admission opportunity — local queue head or central head passes
+//!      capacity + KV gate *right now* (piecewise-constant between
+//!      events, so checking at push time is sound);
+//!   3. page-boundary crossing of any lane charge in limited paged mode
+//!      (the in-step shed check can first change its answer there);
+//!   4. idle engine with staged work (refill/admit always progresses via
+//!      the empty-engine gate escape).
+//! External mutations (stage, preempt, steal, harvest, barrier) are not
+//! spanned — they materialize affected engines and reschedule.
+//!
+//! Equivalence invariant: processing events in `(key, engine)` order
+//! reproduces the reference scan's "first minimal index wins" pick order
+//! exactly, and `key = clock + fold * iter_cost` is the same float
+//! expression `fold_silent` advances the clock with, so clocks agree
+//! bit-for-bit whenever the cost model is exactly representable (the
+//! differential tests pin this with dyadic costs).
+//!
+//! Materialization: an engine's *stored* state lags the virtual time the
+//! reference core would have reached.  `mat_fold(j)` computes how many
+//! silent iterations are provably in the reference core's past: the first
+//! grid point `(clock + k*iter, j)` lexicographically after the maximum
+//! processed event key since `j`'s last state change ([`MarkStack`]
+//! suffix max over `touched[j]`).  A plain high-water mark would
+//! over-fold engines around stale-clock dips (an idle engine re-staged
+//! below the pool max); the per-engine suffix handles those exactly.
+
+use super::engine::{SimEngine, SimWork};
+use super::heap::{key_after, EventHeap, MarkStack};
+use super::{CostModel, SimRequest};
+use crate::rollout::kv::KvConfig;
+use crate::sched::{sjf_priority, DispatchPolicy, LengthPredictor};
+use std::collections::VecDeque;
+
+/// Which stepping core [`SimPool`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimCore {
+    /// Event-heap core: O(log n) scheduling ops, fused decode spans.
+    #[default]
+    Event,
+    /// The original linear-scan tick stepper — one decode iteration per
+    /// call.  Kept as the differential oracle and for per-iteration
+    /// observers (an enabled tracer forces this core).
+    Reference,
+}
+
+impl SimCore {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "event" | "heap" => Self::Event,
+            "reference" | "ref" | "tick" => Self::Reference,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Event => "event",
+            Self::Reference => "reference",
+        }
+    }
+}
+
+/// Engine pool over [`SimEngine`]s: a central queue (or static stripes for
+/// round-robin) plus event-driven stepping — always advance the
+/// earliest-clock engine with work, so engine clocks stay within one
+/// decode iteration of each other (parallel devices).
+pub(crate) struct SimPool {
+    pub(crate) engines: Vec<SimEngine>,
+    pub(crate) central: VecDeque<SimWork>,
+    pub(crate) policy: DispatchPolicy,
+    rr: usize,
+    core: SimCore,
+    // ---- event-core machinery (inert under the reference core) ----
+    heap: EventHeap,
+    marks: MarkStack,
+    /// Pool event-seq at each engine's last state change/materialization.
+    touched: Vec<u64>,
+    seq: u64,
+    // ---- incremental pool-level views (both cores) ----
+    /// Per-engine (running, queued) as of the last `sync`.
+    counts: Vec<(usize, usize)>,
+    running_total: usize,
+    queued_local: usize,
+    /// Highest concurrent running-lane total observed at any sync point
+    /// (exact even when timeline striding drops merged events).
+    pub(crate) peak_lanes: usize,
+}
+
+impl SimPool {
+    pub(crate) fn new(n: usize, q_each: usize, cost: CostModel, policy: DispatchPolicy,
+                      kv: KvConfig, core: SimCore, stride: usize) -> Self {
+        SimPool {
+            engines: (0..n).map(|_| SimEngine::new(q_each, cost, kv, stride)).collect(),
+            central: VecDeque::new(),
+            policy,
+            rr: 0,
+            core,
+            heap: EventHeap::new(n),
+            marks: MarkStack::new(),
+            touched: vec![0; n],
+            seq: 0,
+            counts: vec![(0, 0); n],
+            running_total: 0,
+            queued_local: 0,
+            peak_lanes: 0,
+        }
+    }
+
+    /// Refresh engine `i`'s cached (running, queued) contribution.  Called
+    /// after every mutation of an engine, including separately after the
+    /// refill/admit/step phases of a tick so admission-time occupancy
+    /// peaks are captured.
+    fn sync(&mut self, i: usize) {
+        let e = &self.engines[i];
+        let (r, q) = (e.running.len(), e.queue_len());
+        let (pr, pq) = self.counts[i];
+        self.running_total = self.running_total - pr + r;
+        self.queued_local = self.queued_local - pq + q;
+        self.counts[i] = (r, q);
+        if self.running_total > self.peak_lanes {
+            self.peak_lanes = self.running_total;
+        }
+    }
+
+    fn sync_all(&mut self) {
+        for i in 0..self.engines.len() {
+            self.sync(i);
+        }
+    }
+
+    /// Targeted admission: push work straight onto engine `i`'s local
+    /// queue, bypassing the dispatch policy (`Admit { engine: Some(i) }`).
+    pub(crate) fn stage_to(&mut self, i: usize, work: Vec<SimWork>) {
+        assert!(i < self.engines.len(), "stage_to engine out of range");
+        for w in work {
+            self.engines[i].enqueue_back(w);
+        }
+        self.sync(i);
+        self.reschedule(i);
+    }
+
+    /// Stage a wave of work per the dispatch policy.  Round-robin
+    /// statically stripes (the FCFS baseline); least-loaded keeps a FIFO
+    /// central queue that engines pull from as lanes free; SJF keeps the
+    /// central queue sorted by predicted remaining length so each engine
+    /// pulls a contiguous, similar-length run.
+    pub(crate) fn stage(&mut self, work: Vec<SimWork>, pred: &dyn LengthPredictor) {
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                for w in work {
+                    let i = self.rr % self.engines.len();
+                    self.rr += 1;
+                    self.engines[i].enqueue_back(w);
+                }
+            }
+            DispatchPolicy::LeastLoaded => self.central.extend(work),
+            DispatchPolicy::ShortestPredictedFirst => {
+                // sjf_priority is THE policy shared with the real
+                // EnginePool; keys computed once, not in the comparator
+                let mut keyed: Vec<(f64, SimWork)> = work
+                    .into_iter()
+                    .map(|w| {
+                        (sjf_priority(pred, w.req.id as u64, w.req.prompt_len, w.progress), w)
+                    })
+                    .collect();
+                keyed.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap().then(a.1.req.id.cmp(&b.1.req.id))
+                });
+                self.central.extend(keyed.into_iter().map(|(_, w)| w));
+            }
+        }
+        self.sync_all();
+        if self.core == SimCore::Event {
+            self.reschedule_all();
+        }
+    }
+
+    /// Pull central-queue work into engine `i`'s free lanes (late
+    /// binding), KV-budget-aware: stop once the head's admission estimate
+    /// no longer fits what the engine is already committed to (actual
+    /// lane charges plus queued estimates) — route around KV-tight
+    /// engines instead of queueing work behind a gate that will refuse
+    /// it.  A fully empty engine always pulls (the dispatch twin of the
+    /// empty-engine admission escape); unlimited budgets never refuse, so
+    /// KV-oblivious runs pull exactly as before.  Returns the pull count
+    /// so the event core knows the central head changed.
+    fn refill(&mut self, i: usize) -> usize {
+        if self.policy == DispatchPolicy::RoundRobin {
+            return 0;
+        }
+        let kv = self.engines[i].kv;
+        let mut committed = self.engines[i].kv_used() + self.engines[i].queue_committed();
+        let mut pulled = 0;
+        loop {
+            let e = &self.engines[i];
+            if e.running.len() + e.queue_len() >= e.q {
+                break;
+            }
+            let Some(front) = self.central.front() else { break };
+            let est = e.work_estimate(front);
+            if kv.gate_refuses(committed, est) {
+                break;
+            }
+            committed = committed.saturating_add(est);
+            let w = self.central.pop_front().unwrap();
+            self.engines[i].enqueue_back(w);
+            pulled += 1;
+        }
+        pulled
+    }
+
+    pub(crate) fn has_work(&self, i: usize) -> bool {
+        let e = &self.engines[i];
+        !e.running.is_empty()
+            || e.queue_len() > 0
+            || (self.policy != DispatchPolicy::RoundRobin && !self.central.is_empty())
+    }
+
+    pub(crate) fn total_running(&self) -> usize {
+        debug_assert_eq!(
+            self.running_total,
+            self.engines.iter().map(|e| e.running.len()).sum::<usize>(),
+            "running_total drift"
+        );
+        self.running_total
+    }
+
+    pub(crate) fn queued(&self) -> usize {
+        debug_assert_eq!(
+            self.queued_local,
+            self.engines.iter().map(|e| e.queue_len()).sum::<usize>(),
+            "queued_local drift"
+        );
+        self.central.len() + self.queued_local
+    }
+
+    /// Advance the pool by one decision: the earliest-clock engine with
+    /// work runs one refill + admit + decode iteration (with any silent
+    /// span folded first under the event core); returns its finishes, or
+    /// None when the pool is drained.
+    pub(crate) fn tick(&mut self) -> Option<Vec<SimRequest>> {
+        match self.core {
+            SimCore::Event => self.tick_event(),
+            SimCore::Reference => self.tick_reference(),
+        }
+    }
+
+    /// The original stepper, verbatim: linear min-clock scan, one decode
+    /// iteration per call.  First minimal index wins — the order the
+    /// event heap's `(key, engine)` tiebreak reproduces.
+    fn tick_reference(&mut self) -> Option<Vec<SimRequest>> {
+        let i = (0..self.engines.len())
+            .filter(|&i| self.has_work(i))
+            .min_by(|&a, &b| {
+                self.engines[a]
+                    .clock
+                    .partial_cmp(&self.engines[b].clock)
+                    .unwrap()
+            })?;
+        self.refill(i);
+        self.sync(i);
+        self.engines[i].admit();
+        self.sync(i);
+        let finished = self.engines[i].step();
+        self.sync(i);
+        Some(finished)
+    }
+
+    /// Event core: pop the earliest decision point, fold the engine's
+    /// silent span, then run ONE reference micro-tick at the decision.
+    fn tick_event(&mut self) -> Option<Vec<SimRequest>> {
+        loop {
+            let Some((key, i, fold)) = self.heap.pop() else {
+                // defensive resync: external mutations are supposed to
+                // keep every has_work engine scheduled; if any slipped,
+                // one O(n) rescan restores the invariant
+                if !self.reschedule_all() {
+                    return None;
+                }
+                continue;
+            };
+            if !self.has_work(i) {
+                continue;
+            }
+            debug_assert_eq!(
+                self.next_event(i).map(|(k, f)| (k.to_bits(), f)),
+                Some((key.to_bits(), fold)),
+                "popped event diverges from a fresh recompute (engine {i})"
+            );
+            self.engines[i].fold_silent(fold);
+            debug_assert_eq!(
+                self.engines[i].clock.to_bits(),
+                key.to_bits(),
+                "fused clock must land exactly on the event key"
+            );
+            self.marks.push(self.seq, key, i);
+            self.seq += 1;
+            let pulled = self.refill(i);
+            self.sync(i);
+            self.engines[i].admit();
+            self.sync(i);
+            let finished = self.engines[i].step();
+            self.sync(i);
+            self.touched[i] = self.seq;
+            self.reschedule(i);
+            // a central pop changes the head other engines gate on: with
+            // a finite budget any pop can flip a gate verdict; unlimited
+            // gates never refuse, so only the drained-to-empty transition
+            // (has_work flips) is observable
+            if pulled > 0 && (!self.engines[i].kv.unlimited() || self.central.is_empty()) {
+                self.reschedule_capacity();
+            }
+            return Some(finished);
+        }
+    }
+
+    /// Would the reference core's next pick of `i` change state beyond a
+    /// plain decode iteration?  True iff the local queue head or (non-RR)
+    /// the central head passes the capacity + KV admission gates against
+    /// the CURRENT stored state.  Both inputs are piecewise-constant over
+    /// silent spans: kv_used only moves at page-crossing/finish events,
+    /// and queue/central heads only change at events or external
+    /// mutations (which reschedule).
+    fn admission_ready(&self, i: usize) -> bool {
+        let e = &self.engines[i];
+        if e.running.len() < e.q {
+            if let Some(front) = e.queue_front() {
+                if !e.kv_gate_refuses(e.kv_used(), e.work_estimate(front)) {
+                    return true;
+                }
+            }
+        }
+        if self.policy != DispatchPolicy::RoundRobin
+            && e.running.len() + e.queue_len() < e.q
+        {
+            if let Some(front) = self.central.front() {
+                if !e.kv_gate_refuses(e.kv_used() + e.queue_committed(),
+                                      e.work_estimate(front))
+                {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Silent iterations provably in the reference core's past: the first
+    /// grid point `(clock + k*iter, j)` lexicographically after the
+    /// maximum event key processed since `j` was last touched.  0 when
+    /// idle, freshly touched, or the grid is degenerate.
+    fn mat_fold(&self, j: usize) -> u64 {
+        let e = &self.engines[j];
+        if e.running.is_empty() {
+            return 0;
+        }
+        let iter = e.iter_cost();
+        if iter <= 0.0 {
+            return 0;
+        }
+        let Some((mk, me)) = self.marks.suffix_max(self.touched[j]) else {
+            return 0;
+        };
+        let c = e.clock;
+        // float floor can land past the true first-after point; back off
+        // two grid steps and walk forward to the exact lexicographic
+        // successor
+        let mut k: u64 = if mk > c {
+            ((((mk - c) / iter).floor() as i64) - 2).max(0) as u64
+        } else {
+            0
+        };
+        while !key_after((c + k as f64 * iter, j), (mk, me)) {
+            k += 1;
+        }
+        k
+    }
+
+    /// Engine `j`'s clock as the reference core would currently store it
+    /// (stored clock plus virtually executed silent span) — pure, commits
+    /// nothing.
+    fn pending_clock(&self, j: usize) -> f64 {
+        let e = &self.engines[j];
+        if e.running.is_empty() {
+            return e.clock;
+        }
+        e.clock + self.mat_fold(j) as f64 * e.iter_cost()
+    }
+
+    /// Pool clock as an outside observer (trainer, tracer, report) sees
+    /// it.  Under the reference core this equals the stored max (no marks,
+    /// every fold is 0); under the event core it includes virtual spans.
+    pub(crate) fn observed_clock(&self) -> f64 {
+        (0..self.engines.len())
+            .map(|j| self.pending_clock(j))
+            .fold(0.0, f64::max)
+    }
+
+    /// Commit engine `j`'s virtual silent span into stored state.  Every
+    /// caller must reschedule `j` afterwards — the committed fold
+    /// invalidates any live heap entry computed from the old clock.
+    fn materialize(&mut self, j: usize) {
+        if self.core != SimCore::Event {
+            return;
+        }
+        let k = self.mat_fold(j);
+        if k > 0 {
+            self.engines[j].fold_silent(k);
+        }
+        self.touched[j] = self.seq;
+    }
+
+    fn materialize_all(&mut self) {
+        for j in 0..self.engines.len() {
+            self.materialize(j);
+        }
+    }
+
+    /// Engine `j`'s next decision point from CURRENT stored state:
+    /// `(absolute key, silent iterations to fold first)`.  None when it
+    /// has no work.
+    fn next_event(&self, i: usize) -> Option<(f64, u64)> {
+        if !self.has_work(i) {
+            return None;
+        }
+        let e = &self.engines[i];
+        if e.running.is_empty() {
+            // idle-with-work: the reference core picks it at its stored
+            // clock, and refill/admit always progresses there (the
+            // empty-engine gate escape), so the pick IS a decision point
+            return Some((e.clock, 0));
+        }
+        let iter = e.iter_cost();
+        let span_fold = e.silent_span() - 1;
+        let fold = if self.admission_ready(i) {
+            // the next unexecuted pick admits; it cannot lie past the
+            // engine's own span event (that event would have popped
+            // first — the heap-min invariant)
+            let k = self.mat_fold(i);
+            debug_assert!(k <= span_fold, "virtual progress crossed an event");
+            k.min(span_fold)
+        } else {
+            span_fold
+        };
+        Some((e.clock + fold as f64 * iter, fold))
+    }
+
+    /// Recompute and replace engine `j`'s heap entry.
+    fn reschedule(&mut self, j: usize) {
+        if self.core != SimCore::Event {
+            return;
+        }
+        self.heap.invalidate(j);
+        if let Some((key, fold)) = self.next_event(j) {
+            self.heap.push(j, key, fold);
+        }
+    }
+
+    /// Reschedule every engine that could observe the central head: those
+    /// with spare capacity (their admission/refill gates read it).
+    fn reschedule_capacity(&mut self) {
+        for j in 0..self.engines.len() {
+            let e = &self.engines[j];
+            if e.running.len() + e.queue_len() < e.q {
+                self.reschedule(j);
+            }
+        }
+    }
+
+    /// Reschedule everything; returns whether any engine has work.
+    fn reschedule_all(&mut self) -> bool {
+        let mut any = false;
+        for j in 0..self.engines.len() {
+            self.reschedule(j);
+            any |= self.has_work(j);
+        }
+        any
+    }
+
+    /// Preempt one lane of one engine, progress kept; the partial re-enters
+    /// the dispatch flow (central queue, or the same engine's local queue
+    /// under static round-robin striping).
+    pub(crate) fn preempt(&mut self, engine: usize, lane: usize) {
+        if engine >= self.engines.len() {
+            return;
+        }
+        self.materialize(engine);
+        if let Some(w) = self.engines[engine].preempt_lane(lane) {
+            if self.policy == DispatchPolicy::RoundRobin {
+                self.engines[engine].enqueue_back(w);
+            } else {
+                self.central.push_back(w);
+            }
+        }
+        self.sync(engine);
+        if self.core == SimCore::Event {
+            self.reschedule_all();
+        }
+    }
+
+    /// Migrate work from engine `from` to engine `to`; returns the
+    /// migrated progress tokens, or None when nothing moved (no such
+    /// work, or the destination's KV budget refused it).
+    pub(crate) fn steal(&mut self, from: usize, to: usize, lane: Option<usize>) -> Option<usize> {
+        let n = self.engines.len();
+        if from >= n || to >= n || from == to {
+            return None;
+        }
+        // decision-time state must include virtual spans on both sides
+        // (the thief's clock bump below reads them)
+        self.materialize(from);
+        self.materialize(to);
+        let out = self.steal_inner(from, to, lane);
+        self.sync(from);
+        self.sync(to);
+        if self.core == SimCore::Event {
+            self.reschedule_all();
+        }
+        out
+    }
+
+    /// The migration itself.  Clock rule: a partial's tokens were produced
+    /// under `from`'s clock, so the thief's clock is bumped to at least
+    /// `from`'s before it may resume them — migration cannot replay work
+    /// in the destination's past.  Fresh queued work (progress 0) carries
+    /// no such constraint, exactly like a central-queue pull.
+    fn steal_inner(&mut self, from: usize, to: usize, lane: Option<usize>) -> Option<usize> {
+        let (work, progressed) = match lane {
+            None => {
+                let w = self.engines[from].dequeue_back()?;
+                // refuse what the destination can never hold AND what its
+                // current headroom cannot admit (see the harness twin)
+                let dst = &self.engines[to];
+                let est = dst.work_estimate(&w);
+                if est > dst.kv.budget || dst.kv_gate_refuses(dst.kv_used(), est) {
+                    self.engines[from].enqueue_back(w);
+                    return None;
+                }
+                let progressed = w.progress > 0;
+                (w, progressed)
+            }
+            Some(l) => {
+                let reserve = {
+                    let victim = self.engines[from].running.get(l)?;
+                    self.engines[to].kv.admit_estimate(
+                        victim.req.prompt_len,
+                        victim.generated,
+                        victim.req.output_len,
+                        victim.predicted,
+                    )
+                };
+                let dst = &self.engines[to];
+                if reserve > dst.kv.headroom(dst.kv_used()) {
+                    return None;
+                }
+                (self.engines[from].preempt_lane(l)?, true)
+            }
+        };
+        if progressed && self.engines[to].clock < self.engines[from].clock {
+            self.engines[to].clock = self.engines[from].clock;
+        }
+        let progress = work.progress;
+        self.engines[to].enqueue_back(work);
+        Some(progress)
+    }
+
+    /// Terminate everything pool-wide -> (request, progress, queued).
+    pub(crate) fn terminate_all(&mut self) -> Vec<(SimRequest, usize, bool)> {
+        self.materialize_all();
+        let mut out = Vec::new();
+        for i in 0..self.engines.len() {
+            out.extend(self.engines[i].terminate_all());
+            self.sync(i);
+        }
+        out.extend(self.central.drain(..).map(|w| (w.req, w.progress, true)));
+        if self.core == SimCore::Event {
+            // nothing has work; fresh entries arrive with the next stage
+            self.heap.clear();
+        }
+        out
+    }
+
+    /// Sync barrier: jump every engine clock to the pool max (harvest / wave
+    /// end).  The gap between an engine's own finish time and the barrier is
+    /// genuine rollout-phase idle; the timeline's trailing interval (last
+    /// recorded running count, usually 0) accounts for it.
+    pub(crate) fn align_clocks(&mut self) {
+        self.materialize_all();
+        let end = self.engines.iter().map(|e| e.clock).fold(0.0, f64::max);
+        for e in self.engines.iter_mut() {
+            e.clock = end;
+        }
+        if self.core == SimCore::Event {
+            self.reschedule_all();
+        }
+    }
+
+    pub(crate) fn tokens_out(&self) -> u64 {
+        self.engines.iter().map(|e| e.tokens_out).sum()
+    }
+}

@@ -23,7 +23,9 @@ use sortedrl::coordinator::SchedulerKind;
 use sortedrl::rollout::kv::{KvConfig, KvMode};
 use sortedrl::sched::harness::{HarnessDispatch, TokenBackend, HARNESS_PROMPT};
 use sortedrl::sched::policy::{drive_traced, make_policy_full, PolicyParams, ScheduleBackend};
-use sortedrl::sim::{longtail_workload, simulate_pool_opts, PoolSimOpts, SimMode};
+use sortedrl::sim::{
+    longtail_workload, simulate_pool_opts, CostModel, PoolSimOpts, SimCore, SimMode, SimReport,
+};
 use sortedrl::trace::{SpanOutcome, Tracer};
 use sortedrl::util::proptest::{property, Gen};
 
@@ -138,6 +140,82 @@ fn fuzz_sim_backend_once(g: &mut Gen) {
     }
 }
 
+/// Dyadic cost model for the cross-core differential: every per-iteration
+/// cost is a power of two, so the reference core's repeated clock adds and
+/// the event core's fused `clock + k * iter` multiply are both exact —
+/// clocks compare bit-equal and decision equivalence needs no tolerance.
+fn dyadic_cost() -> CostModel {
+    CostModel {
+        t_weights: 0.5,
+        t_token: 0.25,
+        t_prefill_token: 0.125,
+        t_update_token: 0.0625,
+        t_infer_token: 0.03125,
+    }
+}
+
+/// Assert the event core and the reference stepper produced the SAME run:
+/// every conservation counter, both simulated clocks (bitwise), and the
+/// full training-consumption rid sequence — the decision-equivalence
+/// fingerprint.
+fn assert_cores_agree(ev: &SimReport, rf: &SimReport, ctx: &str) {
+    assert_eq!(ev.timeline.finished(), rf.timeline.finished(), "finished: {ctx}");
+    assert_eq!(ev.timeline.tokens_out(), rf.timeline.tokens_out(), "tokens: {ctx}");
+    assert_eq!(ev.useful_tokens, rf.useful_tokens, "useful tokens: {ctx}");
+    assert_eq!(ev.wasted_tokens, rf.wasted_tokens, "wasted tokens: {ctx}");
+    assert_eq!(ev.harvests, rf.harvests, "harvests: {ctx}");
+    assert_eq!(ev.clipped, rf.clipped, "clipped: {ctx}");
+    assert_eq!(ev.dropped, rf.dropped, "dropped: {ctx}");
+    assert_eq!(ev.steals, rf.steals, "steals: {ctx}");
+    assert_eq!(ev.migrated_tokens, rf.migrated_tokens, "migrated: {ctx}");
+    assert_eq!(ev.kv_sheds, rf.kv_sheds, "kv sheds: {ctx}");
+    assert_eq!(ev.throttles, rf.throttles, "throttles: {ctx}");
+    assert_eq!(ev.peak_lanes, rf.peak_lanes, "peak lanes: {ctx}");
+    assert_eq!(ev.consumed_rids, rf.consumed_rids, "consumed-rid sequence: {ctx}");
+    assert_eq!(ev.rollout_time.to_bits(), rf.rollout_time.to_bits(),
+               "rollout clock: {ctx}");
+    assert_eq!(ev.total_time.to_bits(), rf.total_time.to_bits(),
+               "total clock: {ctx}");
+    assert_eq!(ev.predictor_mae.to_bits(), rf.predictor_mae.to_bits(),
+               "predictor mae: {ctx}");
+    assert_eq!(ev.predictor_tau.to_bits(), rf.predictor_tau.to_bits(),
+               "predictor tau: {ctx}");
+    assert_eq!(ev.kv_trace, rf.kv_trace, "kv trace: {ctx}");
+    let ev_idle: Vec<u64> = ev.engine_idle.iter().map(|v| v.to_bits()).collect();
+    let rf_idle: Vec<u64> = rf.engine_idle.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ev_idle, rf_idle, "engine idle: {ctx}");
+}
+
+/// The cross-core differential: the SAME random workload and options run
+/// through the event-heap core and the tick-by-tick reference stepper
+/// must be indistinguishable from the report side.
+fn fuzz_cross_core_once(g: &mut Gen) {
+    let n = g.usize_in(16..80);
+    let cap = g.usize_in(64..512);
+    let engines = g.usize_in(1..5);
+    let q_total = engines * g.usize_in(2..9);
+    let mode = *g.pick(&[SimMode::Baseline, SimMode::SortedOnPolicy,
+                         SimMode::SortedPartial, SimMode::Async]);
+    let base = PoolSimOpts {
+        engines,
+        q_total,
+        update_batch: g.usize_in(4..33),
+        cost: dyadic_cost(),
+        dispatch: *g.pick(&sortedrl::sched::DispatchPolicy::ALL),
+        predictor: *g.pick(&sortedrl::sched::PredictorKind::ALL),
+        steal: g.bool(),
+        kv_budget: if g.bool() { usize::MAX } else { (cap + 512) * g.usize_in(1..4) },
+        kv_mode: if g.bool() { KvMode::Reserve } else { KvMode::Paged },
+        kv_page: g.usize_in(1..257),
+        ..PoolSimOpts::default()
+    };
+    let w = longtail_workload(n, cap, g.usize_in(0..1_000_000) as u64);
+    let ctx = format!("{mode:?} {base:?}");
+    let ev = simulate_pool_opts(mode, &w, PoolSimOpts { core: SimCore::Event, ..base });
+    let rf = simulate_pool_opts(mode, &w, PoolSimOpts { core: SimCore::Reference, ..base });
+    assert_cores_agree(&ev, &rf, &ctx);
+}
+
 /// The CI-tier fuzz pass: 200 seeded iterations on the token backend plus
 /// 60 on the simulator backend (fixed seeds — `util::proptest` derives
 /// them from the property name, so failures replay exactly).
@@ -151,6 +229,11 @@ fn policy_fuzz_sim_backend() {
     property("policy fuzz (sim backend)", 60, fuzz_sim_backend_once);
 }
 
+#[test]
+fn policy_fuzz_cross_core_differential() {
+    property("policy fuzz (event vs reference core)", 60, fuzz_cross_core_once);
+}
+
 /// Nightly-tier long sweep: same properties, ~10x the iterations.
 /// Run with `cargo test --release -- --ignored`.
 #[test]
@@ -158,4 +241,5 @@ fn policy_fuzz_sim_backend() {
 fn policy_fuzz_long_sweep() {
     property("policy fuzz long (token backend)", 2000, fuzz_token_backend_once);
     property("policy fuzz long (sim backend)", 500, fuzz_sim_backend_once);
+    property("policy fuzz long (event vs reference core)", 500, fuzz_cross_core_once);
 }
