@@ -9,11 +9,12 @@ use bench_util::{bench, report_rate};
 use sortedrl::rollout::kv::KvMode;
 use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, pool_makespan, scale_probe, simulate_pool, simulate_pool_opts,
-    simulate_pool_traced, CostModel, PoolSimOpts, SimCore, SimMode,
+    longtail_workload, pool_makespan, scale_probe, scale_probe_arrivals, simulate_pool,
+    simulate_pool_opts, simulate_pool_traced, CostModel, PoolSimOpts, SimCore, SimMode,
 };
 use sortedrl::trace::Tracer;
 use sortedrl::util::json::{num, obj, s, Json};
+use sortedrl::workload::ArrivalSpec;
 
 /// Peak resident set (VmHWM) in kB from /proc/self/status; 0.0 when the
 /// proc filesystem is unavailable (non-Linux hosts).
@@ -29,12 +30,27 @@ fn peak_rss_kb() -> f64 {
         .unwrap_or(0.0)
 }
 
+/// `--arrival SPEC` override for the open-loop leg of the scale headline
+/// (defaults to a Poisson stream slightly above the pool's sustained
+/// rate).
+fn arrival_override() -> Option<ArrivalSpec> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--arrival")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| ArrivalSpec::parse(v).expect("invalid --arrival spec"))
+}
+
 /// The scale headline: stage one oversubscribed wave of `requests`
 /// long-tail requests on `engines` engines, let the event core run the
 /// whole wave (cut off at `wall_ceiling_secs`), then time-box the
 /// tick-by-tick reference stepper on the same workload to measure the
-/// speedup.  Emits BENCH_sim.json for the CI perf guard.  Returns
-/// whether the event core finished every request inside the ceiling.
+/// speedup.  A third leg replays the same request count as an open-loop
+/// arrival stream (Poisson by default, `--arrival` to override) through
+/// the arrival key class on the same event heap — the claim under guard
+/// is that open loop costs what closed loop costs.  Emits BENCH_sim.json
+/// for the CI perf guard.  Returns whether the event core finished every
+/// request inside the ceiling, in both loop shapes.
 fn scale_run(requests: usize, engines: usize, q_total: usize,
              wall_ceiling_secs: f64) -> bool {
     let cost = CostModel::default();
@@ -62,6 +78,23 @@ fn scale_run(requests: usize, engines: usize, q_total: usize,
     println!("  reference core: {:>9} requests in {:6.2}s host  \
               ({:.0} req/s)  ->  {speedup:.0}x event-core speedup",
              rf.completed, rf.wall_secs, rf_rate);
+    // open-loop leg: the same request count as a timestamped stream.  The
+    // default rate sits ~13% above the pool's sustained throughput (~2.1
+    // req/s per engine at this cost model), so the central queue stays
+    // non-empty and delivery stays O(log engines) per arrival.
+    let default_rate = engines as f64 * 2.4;
+    let spec = arrival_override()
+        .unwrap_or(ArrivalSpec::Poisson { rate: default_rate });
+    let arrivals = spec.build(requests, 8192, 1).expect("arrival stream build");
+    let op = scale_probe_arrivals(&arrivals, engines, q_total, cost,
+                                  DispatchPolicy::LeastLoaded,
+                                  PredictorKind::History, SimCore::Event,
+                                  wall_ceiling_secs, 64);
+    let op_rate = op.completed as f64 / op.wall_secs.max(1e-9);
+    println!("  open loop:      {:>9}/{} arrivals in {:6.2}s host  \
+              ({:.0} req/s host), makespan {:.0}s sim  [{spec:?}]",
+             op.completed, op.requests, op.wall_secs, op_rate, op.makespan);
+
     let rss = peak_rss_kb();
     println!("  peak RSS (VmHWM proxy): {:.0} MiB", rss / 1024.0);
 
@@ -76,13 +109,19 @@ fn scale_run(requests: usize, engines: usize, q_total: usize,
         ("makespan_sim_secs", num(ev.makespan)),
         ("reference_requests_per_sec", num(rf_rate)),
         ("speedup_vs_reference", num(if speedup.is_finite() { speedup } else { -1.0 })),
+        ("openloop_arrival", s(&format!("{spec:?}"))),
+        ("openloop_completed", num(op.completed as f64)),
+        ("openloop_finished_all", Json::Bool(op.finished_all)),
+        ("openloop_wall_secs", num(op.wall_secs)),
+        ("openloop_requests_per_sec", num(op_rate)),
+        ("openloop_makespan_sim_secs", num(op.makespan)),
         ("peak_rss_kb", num(rss)),
     ]);
     match std::fs::write("BENCH_sim.json", j.to_string_pretty()) {
         Ok(()) => println!("  wrote BENCH_sim.json\n"),
         Err(e) => eprintln!("  BENCH_sim.json write failed: {e}"),
     }
-    ev.finished_all
+    ev.finished_all && op.finished_all
 }
 
 fn main() {
@@ -92,7 +131,7 @@ fn main() {
         let ok = scale_run(1_000_000, 1_000, 32_000, 240.0);
         if !ok {
             eprintln!("headline FAILED: event core did not finish 1M requests \
-                       inside the wall ceiling");
+                       (closed or open loop) inside the wall ceiling");
             std::process::exit(1);
         }
         return;

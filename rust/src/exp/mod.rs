@@ -25,6 +25,9 @@ pub struct ExpContext {
     /// of the paper's batch geometry; long).
     pub scale: Scale,
     pub seed: u64,
+    /// `--arrival` override for the open-loop section of `exp pool`;
+    /// `None` uses the suite's synthetic multi-tenant trace.
+    pub arrival: Option<crate::workload::ArrivalSpec>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,6 +74,7 @@ impl Default for ExpContext {
             out_dir: Path::new("results").to_path_buf(),
             scale: Scale::Small,
             seed: 0,
+            arrival: None,
         }
     }
 }

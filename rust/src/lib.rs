@@ -19,3 +19,4 @@ pub mod runtime;
 pub mod tasks;
 pub mod tokenizer;
 pub mod util;
+pub mod workload;

@@ -18,12 +18,13 @@ use sortedrl::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE, MAX_KV_PAGE};
 use sortedrl::runtime::Runtime;
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, simulate, simulate_pool_opts, simulate_pool_traced, CostModel,
-    PoolSimOpts, SimCore, SimMode,
+    longtail_workload, simulate, simulate_pool_arrivals, simulate_pool_arrivals_traced,
+    simulate_pool_opts, simulate_pool_traced, CostModel, PoolSimOpts, SimCore, SimMode,
 };
 use sortedrl::tasks::logic::LogicTask;
 use sortedrl::tasks::math::MathTask;
 use sortedrl::tasks::Task;
+use sortedrl::workload::{emit_trace, generate_trace, Arrival, ArrivalSpec};
 use std::collections::HashMap;
 use std::path::PathBuf;
 
@@ -115,12 +116,17 @@ USAGE:
                  [--artifacts DIR] [--tag TAG] [--no-warm-start]
   sortedrl exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6a|fig6b|fig9a|fig9b|tab1|
                 pool|all-sim|all> [--scale ci|small|paper] [--out DIR] [--seed N]
+                [--arrival SPEC]   (open-loop section of `exp pool`)
   sortedrl sim [--n 512] [--cap 8192] [--queue 128] [--update-batch 128]
                [--engines N] [--predictor oracle|history|bucket]
                [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
                [--kv-mode reserve|paged] [--kv-page TOK]
                [--sim-core event|reference]
-               [--trace-out FILE] [--slo MS]
+               [--arrival batch|poisson:RATE|bursty:HI,LO,FLIP|
+                          diurnal:BASE,AMP,PERIOD|trace:FILE]
+               [--trace-out FILE] [--slo MS] [--slo-out FILE]
+  sortedrl workload trace-gen [--out FILE] [--tenants 3] [--rate 8]
+               [--horizon 60] [--cap 8192] [--seed N]
   sortedrl info [--artifacts DIR] [--tag TAG]
 
 Pool defaults (train & sim): --engines 1, --predictor history,
@@ -141,6 +147,16 @@ of the run (open at https://ui.perfetto.dev); --slo MS records per-request
 spans and reports TTFT/TPOT/e2e p50/p99 plus goodput against an
 end-to-end latency SLO in milliseconds.  Either flag enables recording;
 without both, tracing code is compiled in but never touched.
+
+--arrival switches sim from the closed loop (batch: every request
+schedulable at t=0, the default — byte-identical to runs predating the
+flag) to an open-loop request stream: Poisson at RATE req/s, a
+Markov-modulated on/off burst process, a sinusoidal diurnal rate, or a
+multi-tenant JSONL trace (one {\"t\",\"tenant\",\"prompt_len\",\"cap\"}
+object per line — `workload trace-gen` emits synthetic ones).  Open-loop
+latencies are arrival-relative (queueing included); with --slo the report
+adds per-tenant rollups and a Jain fairness index, and --slo-out FILE
+dumps that summary as JSON.
 ";
 
 fn parse_predictor(args: &Args) -> Result<PredictorKind> {
@@ -197,6 +213,7 @@ fn main() {
         "train" => cmd_train(&args),
         "exp" => cmd_exp(&args),
         "sim" => cmd_sim(&args),
+        "workload" => cmd_workload(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -314,6 +331,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         scale: Scale::parse(args.get("scale").unwrap_or("small"))
             .context("--scale ci|small|paper")?,
         seed: args.get_u64("seed", 0)?,
+        arrival: args.get("arrival").map(ArrivalSpec::parse).transpose()?,
     };
     let needs_rt = !matches!(which, "fig1a" | "fig1b" | "fig5" | "pool" | "all-sim");
     let rt = if needs_rt {
@@ -383,6 +401,51 @@ fn real_rollout_lengths(ctx: &ExpContext, rt: &Runtime) -> Result<Vec<usize>> {
     Ok(rollouts.iter().map(|r| r.response.len()).collect())
 }
 
+/// `workload trace-gen`: emit a synthetic multi-tenant arrival trace as
+/// JSONL (stdout, or `--out FILE`) in the exact schema `--arrival
+/// trace:FILE` replays.
+fn cmd_workload(args: &Args) -> Result<()> {
+    let sub = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .context("workload needs a subcommand: trace-gen")?;
+    match sub {
+        "trace-gen" => {
+            let tenants = args.get_usize("tenants", 3)?;
+            if tenants == 0 {
+                bail!("--tenants must be >= 1");
+            }
+            let rate = args.get_opt_f64("rate")?.unwrap_or(8.0);
+            if !rate.is_finite() || rate <= 0.0 {
+                bail!("--rate must be a positive aggregate req/s");
+            }
+            let horizon = args.get_opt_f64("horizon")?.unwrap_or(60.0);
+            if !horizon.is_finite() || horizon <= 0.0 {
+                bail!("--horizon must be a positive duration in seconds");
+            }
+            let cap = args.get_usize("cap", 8192)?;
+            if cap == 0 {
+                bail!("--cap must be >= 1 token");
+            }
+            let seed = args.get_u64("seed", 0)?;
+            let events = generate_trace(tenants, rate, horizon, cap, seed);
+            let text = emit_trace(&events);
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)
+                        .with_context(|| format!("writing {path}"))?;
+                    eprintln!("wrote {} arrivals ({} tenants, {horizon}s horizon) to {path}",
+                              events.len(), tenants);
+                }
+                None => print!("{text}"),
+            }
+            Ok(())
+        }
+        other => bail!("unknown workload subcommand {other:?} (try trace-gen)"),
+    }
+}
+
 fn cmd_sim(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 512)?;
     let cap = args.get_usize("cap", 8192)?;
@@ -411,6 +474,29 @@ fn cmd_sim(args: &Args) -> Result<()> {
         Some(s) => SimCore::parse(s).context("--sim-core event|reference")?,
         None => SimCore::default(),
     };
+    let spec = match args.get("arrival") {
+        Some(s) => ArrivalSpec::parse(s)?,
+        None => ArrivalSpec::Batch,
+    };
+    if spec.is_open_loop() {
+        // open-loop stream: requests enter at their arrival instants —
+        // a different experiment shape, reported by its own section
+        let opts = PoolSimOpts {
+            engines,
+            q_total: q,
+            update_batch: u,
+            dispatch,
+            predictor,
+            steal,
+            kv_budget: kv.budget,
+            kv_mode: kv.mode,
+            kv_page: kv.page,
+            core,
+            ..PoolSimOpts::default()
+        };
+        let arrivals = spec.build(n, cap, seed)?;
+        return sim_open_loop(args, &arrivals, cap, q, u, opts);
+    }
     let w = longtail_workload(n, cap, seed);
     println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}\n");
     for (mode, label) in [(SimMode::Baseline, "baseline"),
@@ -483,6 +569,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
         println!("\n(pass --engines N to compare 1-engine vs N-engine pools)");
     }
     let (trace_out, slo_ms) = parse_tracing(args)?;
+    if args.get("slo-out").is_some() && slo_ms.is_none() {
+        bail!("--slo-out needs --slo MS to define the goodput target");
+    }
     if trace_out.is_some() || slo_ms.is_some() {
         // trace the partial-rollout scheduler (the paper's headline mode)
         // through the same pool the comparison above ran
@@ -520,6 +609,87 @@ fn cmd_sim(args: &Args) -> Result<()> {
             println!("  goodput {:.3} ({} of {} within SLO)",
                      s.goodput,
                      (s.goodput * s.enqueued as f64).round() as u64, s.enqueued);
+        }
+        if let Some(path) = args.get("slo-out") {
+            std::fs::write(path, s.to_json().to_string_pretty())
+                .with_context(|| format!("writing {path}"))?;
+            println!("  wrote SLO summary JSON to {path}");
+        }
+        if let Some(path) = &trace_out {
+            tracer.write_chrome(path)?;
+            println!("  wrote {} trace events to {} (open at https://ui.perfetto.dev)",
+                     tracer.chrome_events(), path.display());
+        }
+    }
+    Ok(())
+}
+
+/// The open-loop `sim` section: run every scheduler mode over the arrival
+/// stream, then (with tracing flags) a recorded partial-mode run that
+/// reports arrival-relative latencies, per-tenant rollups, and fairness.
+fn sim_open_loop(args: &Args, arrivals: &[Arrival], cap: usize, q: usize, u: usize,
+                 opts: PoolSimOpts) -> Result<()> {
+    if arrivals.is_empty() {
+        bail!("--arrival produced an empty stream");
+    }
+    let span = arrivals.last().unwrap().t - arrivals[0].t;
+    let tenants = arrivals.iter().map(|a| a.tenant).max().unwrap_or(0) + 1;
+    println!("workload: {} open-loop arrivals over {span:.1}s ({tenants} tenant(s)), \
+              cap {cap}, queue {q}, update batch {u}\n", arrivals.len());
+    for (mode, label) in [(SimMode::Baseline, "baseline"),
+                          (SimMode::SortedOnPolicy, "on-policy"),
+                          (SimMode::SortedPartial, "partial"),
+                          (SimMode::Async, "async")] {
+        let r = simulate_pool_arrivals(mode, arrivals, opts);
+        println!("{label:>10}: {:7.0} tok/s  bubble {:5.2}%  rollout {:7.1}s  \
+                  total {:7.1}s  clipped {:3}  dropped {:3}",
+                 r.throughput, r.bubble_ratio * 100.0, r.rollout_time,
+                 r.total_time, r.clipped, r.dropped);
+    }
+    let (trace_out, slo_ms) = parse_tracing(args)?;
+    if args.get("slo-out").is_some() && slo_ms.is_none() {
+        bail!("--slo-out needs --slo MS to define the goodput target");
+    }
+    if trace_out.is_some() || slo_ms.is_some() {
+        let slo_secs = slo_ms.map(|ms| ms / 1000.0);
+        let mut tracer = sortedrl::trace::Tracer::new(slo_secs, trace_out.is_some());
+        let r = simulate_pool_arrivals_traced(SimMode::SortedPartial, arrivals, opts,
+                                              &mut tracer);
+        let s = &r.slo;
+        println!("\nslo (partial, {} engine(s), arrival-relative{}):",
+                 opts.engines,
+                 match slo_ms {
+                     Some(ms) => format!(", target {ms:.0} ms"),
+                     None => String::new(),
+                 });
+        println!("  requests: {} enqueued, {} completed, {} clipped, {} dropped",
+                 s.enqueued, s.completed, s.clipped, s.dropped);
+        println!("  ttft  p50 {:8.3}s  p90 {:8.3}s  p99 {:8.3}s",
+                 s.ttft_p50, s.ttft_p90, s.ttft_p99);
+        println!("  e2e   p50 {:8.3}s  p99 {:8.3}s   queue-wait p99 {:.3}s",
+                 s.e2e_p50, s.e2e_p99, s.queue_p99);
+        if slo_ms.is_some() {
+            println!("  goodput {:.3} ({} of {} within SLO)",
+                     s.goodput,
+                     (s.goodput * s.enqueued as f64).round() as u64, s.enqueued);
+        }
+        if !s.tenants.is_empty() {
+            println!("  tenants (Jain fairness {:.3}):", s.fairness_jain);
+            for t in &s.tenants {
+                println!("    t{}: {:5} enq {:5} done  ttft p50 {:7.3}s  \
+                          e2e p50 {:7.3}s p99 {:7.3}s  goodput {:.3}",
+                         t.tenant, t.enqueued, t.completed, t.ttft_p50,
+                         t.e2e_p50, t.e2e_p99, t.goodput);
+            }
+        }
+        if let Some((t, d)) = s.queue_depth.iter().max_by_key(|(_, d)| *d) {
+            println!("  peak queue depth {d} at t={t:.1}s \
+                      ({} samples)", s.queue_depth.len());
+        }
+        if let Some(path) = args.get("slo-out") {
+            std::fs::write(path, s.to_json().to_string_pretty())
+                .with_context(|| format!("writing {path}"))?;
+            println!("  wrote per-tenant SLO summary JSON to {path}");
         }
         if let Some(path) = &trace_out {
             tracer.write_chrome(path)?;

@@ -52,6 +52,12 @@ pub(super) struct SimBackend {
     staged_pred: Vec<Option<f64>>,
     /// Workload not yet loaded (grouped loading pops from here).
     backlog: VecDeque<SimRequest>,
+    /// Open-loop arrivals not yet released into the backlog: `(t, req)`
+    /// non-decreasing in `t`.  Empty in closed-loop runs.
+    pending: VecDeque<(f64, SimRequest)>,
+    /// Rid-indexed arrival instants (stamped onto `SimWork::ready_at` at
+    /// admit time).  Empty in closed-loop runs.
+    arrival_t: Vec<f64>,
     /// Rid-indexed arena; `None` = never loaded or retired at a barrier.
     entries: Vec<Option<SimEntry>>,
     /// Rids in training-consumption order — the decision-equivalence
@@ -97,6 +103,8 @@ impl SimBackend {
             score: PredictorScore::default(),
             staged_pred: Vec::new(),
             backlog: workload.iter().copied().collect(),
+            pending: VecDeque::new(),
+            arrival_t: Vec::new(),
             entries: (0..arena).map(|_| None).collect(),
             consumed: Vec::new(),
             q_cap: q_each * engines,
@@ -118,6 +126,65 @@ impl SimBackend {
             throttles: 0,
             overlap_updates,
             update_free_at: 0.0,
+        }
+    }
+
+    /// Open-loop constructor: same machinery as `new`, but the workload
+    /// trickles in — requests sit in `pending` until the pool clock
+    /// reaches their arrival instant, and admission stamps `ready_at` so
+    /// an idle engine can never start a request before it exists.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn with_arrivals(arrivals: &[crate::workload::Arrival], engines: usize,
+                                q_each: usize, cost: CostModel, dispatch: DispatchPolicy,
+                                predictor: PredictorKind, overlap_updates: bool,
+                                kv: KvConfig, core: SimCore, stride: usize) -> Self {
+        let reqs: Vec<SimRequest> = arrivals.iter().map(|a| a.req).collect();
+        let mut b = Self::new(&reqs, engines, q_each, cost, dispatch, predictor,
+                              overlap_updates, kv, core, stride);
+        b.backlog.clear();
+        b.arrival_t = vec![0.0; b.entries.len()];
+        for a in arrivals {
+            debug_assert!(b.pending.back().map_or(true, |&(t, _)| t <= a.t),
+                          "arrivals must be sorted by time");
+            b.arrival_t[a.req.id] = a.t;
+            b.pending.push_back((a.t, a.req));
+        }
+        b
+    }
+
+    /// Release every arrival whose instant has passed into the backlog;
+    /// if the whole pool is idle with nothing releasable, jump the idle
+    /// engines to the next arrival (a genuine pool-wide idle gap) so
+    /// `load_prompts` always progresses while arrivals remain.  Policies
+    /// refill only once every loaded request is consumed — the pool is
+    /// provably idle there — so a busy pool returning 0 new prompts is
+    /// never misread as exhaustion.
+    fn release_due(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let now = self.pool.observed_clock();
+        while let Some(&(t, req)) = self.pending.front() {
+            if t > now {
+                break;
+            }
+            self.pending.pop_front();
+            self.backlog.push_back(req);
+        }
+        if self.backlog.is_empty()
+            && self.pool.total_running() == 0
+            && self.pool.queued() == 0
+        {
+            if let Some(&(t_next, _)) = self.pending.front() {
+                self.pool.advance_idle_to(t_next);
+                while let Some(&(t, req)) = self.pending.front() {
+                    if t > t_next {
+                        break;
+                    }
+                    self.pending.pop_front();
+                    self.backlog.push_back(req);
+                }
+            }
         }
     }
 
@@ -291,6 +358,7 @@ impl ScheduleBackend for SimBackend {
     }
 
     fn load_prompts(&mut self, prompts: usize) -> Result<usize> {
+        self.release_due();
         let mut count = 0;
         for _ in 0..prompts {
             let Some(req) = self.backlog.pop_front() else { break };
@@ -330,7 +398,11 @@ impl ScheduleBackend for SimBackend {
             self.fresh_count -= 1;
             let predicted = self.pred.predict(req.id as u64, req.prompt_len);
             self.stash_pred(req.id, predicted);
-            work.push(stamp_work(rank_only, predicted, req, progress));
+            let mut w = stamp_work(rank_only, predicted, req, progress);
+            if let Some(&t) = self.arrival_t.get(req.id) {
+                w.ready_at = t;
+            }
+            work.push(w);
         }
         match engine {
             Some(i) => self.pool.stage_to(i, work),

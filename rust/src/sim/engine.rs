@@ -31,6 +31,10 @@ pub(crate) struct SimWork {
     pub(crate) req: SimRequest,
     pub(crate) progress: usize,
     pub(crate) predicted: Option<usize>,
+    /// Open-loop arrival time: admission may not start before this
+    /// simulated instant (an idle engine's clock is bumped up to it).
+    /// 0.0 for closed-loop work — a bitwise no-op on every batch path.
+    pub(crate) ready_at: f64,
 }
 
 /// Stamp a raw prediction onto staged work via the shared
@@ -43,6 +47,7 @@ pub(crate) fn stamp_work(rank_only: bool, predicted: f64, req: SimRequest,
         req,
         progress,
         predicted: crate::rollout::kv::stamp_prediction(rank_only, predicted),
+        ready_at: 0.0,
     }
 }
 
@@ -198,6 +203,11 @@ impl SimEngine {
             let w = self.queue.pop_front().unwrap();
             self.queue_est_sum -= est;
             used += est;
+            // open-loop: an idle engine cannot start prefill before the
+            // request exists — wait (idle) until the arrival instant
+            if w.ready_at > self.clock {
+                self.clock = w.ready_at;
+            }
             // prefill cost: prompt + any preserved progress
             self.clock += (w.req.prompt_len + w.progress) as f64 * self.cost.t_prefill_token;
             self.kv_used_cache +=
@@ -329,6 +339,7 @@ impl SimEngine {
                 req: r.req,
                 progress: r.generated,
                 predicted: r.predicted,
+                ready_at: 0.0,
             });
             self.sheds += 1;
         }
@@ -344,7 +355,7 @@ impl SimEngine {
         self.kv_used_cache -=
             self.kv.lane_charge(r.req.prompt_len, r.generated, r.req.output_len);
         self.record();
-        Some(SimWork { req: r.req, progress: r.generated, predicted: r.predicted })
+        Some(SimWork { req: r.req, progress: r.generated, predicted: r.predicted, ready_at: 0.0 })
     }
 
     /// Terminate everything in flight; returns (request, progress, queued)

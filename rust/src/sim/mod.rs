@@ -39,12 +39,13 @@ use crate::sched::policy::{
     drive_traced, AsyncUpdatePolicy, BaselinePolicy, GroupPolicy, KvGovernor, PolicyParams,
     SchedulePolicy, StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
 };
-use crate::sched::{DispatchPolicy, LengthPredictor, PredictorKind};
+use crate::sched::{sjf_priority, DispatchPolicy, LengthPredictor, PredictorKind};
 use crate::trace::{SloSummary, Tracer};
 use crate::util::rng::Pcg64;
+use crate::workload::Arrival;
 use backend::{make_sim_predictor, SimBackend};
 use engine::{stamp_work, SimWork};
-use pool::SimPool;
+use pool::{PoolArrival, SimPool};
 
 /// Serving-engine cost model (seconds).
 #[derive(Debug, Clone, Copy)]
@@ -88,32 +89,10 @@ pub struct SimRequest {
     pub output_len: usize,
 }
 
-/// Long-tailed length workload matching Fig. 1c's shape: a lognormal body
-/// (~80% of samples within 3/8 of the cap) plus ~6% of requests truncated
-/// AT the generation cap — the paper observes "5% can extend up to the
-/// token limit", and those cap-clipped requests are what the schedulers
-/// fight over.
-pub fn longtail_workload(n: usize, cap: usize, seed: u64) -> Vec<SimRequest> {
-    let mut rng = Pcg64::with_stream(seed, 0x51);
-    (0..n)
-        .map(|id| {
-            let len = if rng.bool_with(0.08) {
-                cap // hit the generation limit
-            } else {
-                // body scaled to the cap: median ~0.11*cap (most responses
-                // finish early — Fig. 1c's "80% within 3k of 16k"), with a
-                // long right tail
-                let body = rng.lognormal(0.0, 0.85) * 0.11 * cap as f64;
-                (body as usize).clamp(16, cap)
-            };
-            SimRequest {
-                id,
-                prompt_len: 64 + rng.below(192) as usize,
-                output_len: len,
-            }
-        })
-        .collect()
-}
+// The long-tail length sampler lives in `workload` now (one construction
+// path shared with the arrival generators and trace replay); the historical
+// `sim::longtail_workload` path keeps working via this re-export.
+pub use crate::workload::longtail_workload;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimMode {
@@ -290,6 +269,70 @@ pub fn scale_probe(workload: &[SimRequest], engines: usize, q_total: usize,
     }
 }
 
+/// [`scale_probe`] over an open-loop arrival stream: the same
+/// oversubscribed dispatch wave, but each request enters the pool only at
+/// its arrival instant, delivered through the arrival key class on the
+/// event heap (pseudo-engine `engines.len()`).  Host cost stays
+/// O(decisions · log engines) — a 1M-Poisson-arrival probe is the
+/// open-loop `sched_bench --headline` variant.  Predictor warmup matches
+/// [`scale_probe`] exactly, so closed- and open-loop probes rank requests
+/// identically; SJF priorities are precomputed at push time (the
+/// predictor is frozen for the whole wave, so push-time and delivery-time
+/// keys coincide).
+#[allow(clippy::too_many_arguments)]
+pub fn scale_probe_arrivals(arrivals: &[Arrival], engines: usize, q_total: usize,
+                            cost: CostModel, dispatch: DispatchPolicy,
+                            predictor: PredictorKind, core: SimCore,
+                            wall_budget_secs: f64, timeline_stride: usize) -> ScaleReport {
+    assert!(engines >= 1 && q_total >= engines, "q_total must cover engines");
+    let workload: Vec<SimRequest> = arrivals.iter().map(|a| a.req).collect();
+    let mut pred = make_sim_predictor(predictor, &workload);
+    if predictor != PredictorKind::Oracle {
+        let mut rng = Pcg64::with_stream(0x5EED_17, 0x9E);
+        for r in &workload {
+            let noisy = (r.output_len as f64 * rng.lognormal(0.0, 0.35))
+                .clamp(1.0, 4.0 * r.output_len as f64);
+            pred.observe(r.id as u64, r.prompt_len, noisy as usize);
+        }
+    }
+    let mut pool = SimPool::new(engines, q_total / engines, cost, dispatch,
+                                KvConfig::default(), core, timeline_stride.max(1));
+    let stream: Vec<PoolArrival> = arrivals
+        .iter()
+        .map(|a| {
+            let p = pred.predict(a.req.id as u64, a.req.prompt_len);
+            let mut work = stamp_work(pred.is_rank_only(), p, a.req, 0);
+            work.ready_at = a.t;
+            let key = sjf_priority(pred.as_ref(), a.req.id as u64, a.req.prompt_len, 0);
+            PoolArrival { t: a.t, key, work }
+        })
+        .collect();
+    pool.push_arrivals(stream);
+    let start = std::time::Instant::now();
+    let mut completed = 0usize;
+    let mut finished_all = true;
+    let mut decisions = 0u64;
+    loop {
+        match pool.tick() {
+            Some(f) => completed += f.len(),
+            None => break,
+        }
+        decisions += 1;
+        if decisions % 4096 == 0 && start.elapsed().as_secs_f64() > wall_budget_secs {
+            finished_all = false;
+            break;
+        }
+    }
+    ScaleReport {
+        requests: arrivals.len(),
+        engines,
+        makespan: pool.observed_clock(),
+        wall_secs: start.elapsed().as_secs_f64(),
+        completed,
+        finished_all,
+    }
+}
+
 /// Multi-engine pool simulation, policy-driven: the SAME `SchedulePolicy`
 /// decision sequence the live controller executes, run against the cost
 /// model.  Baseline loads sync-barrier waves of `q_total` requests; the
@@ -388,14 +431,52 @@ pub fn simulate_pool_opts(mode: SimMode, workload: &[SimRequest],
 /// full SLO telemetry from a simulated pool.
 pub fn simulate_pool_traced(mode: SimMode, workload: &[SimRequest], o: PoolSimOpts,
                             tracer: &mut Tracer) -> SimReport {
+    run_pool_traced(mode, PoolInput::Closed(workload), o, tracer)
+}
+
+/// [`simulate_pool_opts`] over an open-loop arrival stream: requests
+/// become visible to the scheduler at their arrival instants instead of
+/// all at `t = 0` (see `workload::ArrivalSpec`).  A stream with every
+/// `t = 0` reproduces the corresponding closed-loop run bit for bit
+/// (tested below), which is how `--arrival batch` keeps every golden.
+pub fn simulate_pool_arrivals(mode: SimMode, arrivals: &[Arrival],
+                              o: PoolSimOpts) -> SimReport {
+    let mut tracer =
+        if o.slo.is_some() { Tracer::new(o.slo, false) } else { Tracer::disabled() };
+    simulate_pool_arrivals_traced(mode, arrivals, o, &mut tracer)
+}
+
+/// [`simulate_pool_traced`] over an open-loop arrival stream.  Arrivals
+/// must be sorted by time; when the tracer records, each is registered
+/// with its tenant and arrival instant, so SLO latencies come out
+/// arrival-relative (queueing delay included) and the summary grows
+/// per-tenant rollups plus the Jain fairness index.
+pub fn simulate_pool_arrivals_traced(mode: SimMode, arrivals: &[Arrival],
+                                     o: PoolSimOpts, tracer: &mut Tracer) -> SimReport {
+    run_pool_traced(mode, PoolInput::Open(arrivals), o, tracer)
+}
+
+/// Closed-loop (everything schedulable at t=0) vs open-loop (timestamped
+/// arrivals) input to the one policy-driven pool runner.
+enum PoolInput<'a> {
+    Closed(&'a [SimRequest]),
+    Open(&'a [Arrival]),
+}
+
+fn run_pool_traced(mode: SimMode, input: PoolInput<'_>, o: PoolSimOpts,
+                   tracer: &mut Tracer) -> SimReport {
     assert!(o.engines >= 1 && o.q_total >= o.engines, "q_total must cover engines");
     assert!(o.update_batch >= 1, "update_batch must be >= 1");
     let q_each = o.q_total / o.engines;
     let q_cap = q_each * o.engines;
+    let total = match &input {
+        PoolInput::Closed(w) => w.len(),
+        PoolInput::Open(a) => a.len(),
+    };
     let params = PolicyParams {
         refill_prompts: match mode {
             SimMode::Baseline => q_cap,
-            _ => workload.len().max(1),
+            _ => total.max(1),
         },
         entries_per_prompt: 1,
         update_batch: o.update_batch,
@@ -417,9 +498,22 @@ pub fn simulate_pool_traced(mode: SimMode, workload: &[SimRequest], o: PoolSimOp
     // per-iteration latency stamps (TTFT/TPOT) need the per-iteration
     // stepper; fused spans would collapse them onto decision points
     let core = if tracer.enabled() { SimCore::Reference } else { o.core };
-    let mut backend =
-        SimBackend::new(workload, o.engines, q_each, o.cost, o.dispatch, o.predictor,
-                        mode == SimMode::Async, kv, core, o.timeline_stride.max(1));
+    let mut backend = match input {
+        PoolInput::Closed(w) => {
+            SimBackend::new(w, o.engines, q_each, o.cost, o.dispatch, o.predictor,
+                            mode == SimMode::Async, kv, core, o.timeline_stride.max(1))
+        }
+        PoolInput::Open(a) => {
+            if tracer.enabled() {
+                for x in a {
+                    tracer.register_arrival(x.req.id as u64, x.t, x.tenant);
+                }
+            }
+            SimBackend::with_arrivals(a, o.engines, q_each, o.cost, o.dispatch,
+                                      o.predictor, mode == SimMode::Async, kv, core,
+                                      o.timeline_stride.max(1))
+        }
+    };
     drive_traced(policy.as_mut(), &mut backend, tracer)
         .expect("sim backend is infallible; a driver error means a policy livelock");
     let mut report = backend.into_report(mode);
@@ -945,5 +1039,148 @@ mod tests {
         assert_eq!(rep.completed, 4000);
         assert!(rep.makespan > 0.0 && rep.makespan.is_finite());
         assert_eq!(rep.engines, 64);
+    }
+
+    // ------------------------------------------------------------------
+    // open-loop arrivals
+    // ------------------------------------------------------------------
+
+    /// `--arrival batch` is the closed loop: an all-`t = 0` stream (the
+    /// `ArrivalSpec::Batch` output) must reproduce [`simulate_pool_opts`]
+    /// bit for bit, on both cores, for every mode and dispatch policy —
+    /// the guarantee that keeps every pre-open-loop golden byte-identical.
+    #[test]
+    fn batch_arrival_stream_reproduces_closed_loop_exactly() {
+        let w = longtail_workload(90, 384, 42);
+        let arrivals = crate::workload::ArrivalSpec::Batch
+            .build(90, 384, 42)
+            .expect("batch stream");
+        for mode in [SimMode::Baseline, SimMode::SortedPartial, SimMode::Async] {
+            for dispatch in DispatchPolicy::ALL {
+                for core in [SimCore::Event, SimCore::Reference] {
+                    let o = PoolSimOpts {
+                        engines: 3,
+                        q_total: 24,
+                        update_batch: 16,
+                        cost: dyadic_cost(),
+                        dispatch,
+                        predictor: PredictorKind::Oracle,
+                        core,
+                        ..PoolSimOpts::default()
+                    };
+                    let closed = simulate_pool_opts(mode, &w, o);
+                    let open = simulate_pool_arrivals(mode, &arrivals, o);
+                    assert_reports_identical(
+                        &closed,
+                        &open,
+                        &format!("batch {mode:?}/{}/{core:?}", dispatch.name()),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Dyadic arrival times (multiples of 1/4 s) keep open-loop clock
+    /// arithmetic exact in both cores, so the event-vs-reference
+    /// differential contract extends to timestamped arrivals.
+    #[test]
+    fn open_loop_event_core_matches_reference_core() {
+        let w = longtail_workload(80, 256, 5);
+        let mut rng = Pcg64::with_stream(99, 0x77);
+        let mut t = 0.0f64;
+        let arrivals: Vec<Arrival> = w
+            .iter()
+            .map(|&req| {
+                t += (rng.below(8) + 1) as f64 * 0.25;
+                Arrival { t, tenant: req.id % 3, req }
+            })
+            .collect();
+        for mode in [SimMode::Baseline, SimMode::SortedOnPolicy,
+                     SimMode::SortedPartial, SimMode::Async] {
+            for dispatch in DispatchPolicy::ALL {
+                let run = |core| {
+                    simulate_pool_arrivals(mode, &arrivals, PoolSimOpts {
+                        engines: 3,
+                        q_total: 24,
+                        update_batch: 16,
+                        cost: dyadic_cost(),
+                        dispatch,
+                        predictor: PredictorKind::Oracle,
+                        core,
+                        ..PoolSimOpts::default()
+                    })
+                };
+                assert_reports_identical(
+                    &run(SimCore::Event),
+                    &run(SimCore::Reference),
+                    &format!("open-loop {mode:?}/{}", dispatch.name()),
+                );
+            }
+        }
+    }
+
+    /// Pool-level open-loop probe (the `sched_bench` path): zero gaps are
+    /// allowed — simultaneous arrivals exercise the tie rule (engines win
+    /// ties against the arrival pseudo-index, matching the reference
+    /// core's strict `t < min clock` delivery gate).
+    #[test]
+    fn open_loop_probe_matches_across_cores() {
+        let w = longtail_workload(150, 384, 31);
+        let mut rng = Pcg64::with_stream(7, 0x78);
+        let mut t = 0.0f64;
+        let arrivals: Vec<Arrival> = w
+            .iter()
+            .map(|&req| {
+                t += rng.below(4) as f64 * 0.25;
+                Arrival { t, tenant: 0, req }
+            })
+            .collect();
+        for dispatch in DispatchPolicy::ALL {
+            let probe = |core| {
+                scale_probe_arrivals(&arrivals, 4, 32, dyadic_cost(), dispatch,
+                                     PredictorKind::History, core, f64::INFINITY, 1)
+            };
+            let e = probe(SimCore::Event);
+            let r = probe(SimCore::Reference);
+            assert_eq!(e.makespan.to_bits(), r.makespan.to_bits(),
+                       "{}: {} vs {}", dispatch.name(), e.makespan, r.makespan);
+            assert_eq!(e.completed, r.completed, "{}", dispatch.name());
+            assert_eq!(e.completed, 150, "{}", dispatch.name());
+            assert!(e.finished_all && r.finished_all);
+        }
+    }
+
+    /// Traced open-loop runs fill the per-tenant SLO section: counts
+    /// partition the stream, latencies are arrival-relative, and two
+    /// identical halves of the same longtail mix score near-perfect Jain
+    /// fairness.
+    #[test]
+    fn open_loop_tenant_metrics_and_fairness_fill() {
+        let w = longtail_workload(60, 256, 8);
+        let arrivals: Vec<Arrival> = w
+            .iter()
+            .enumerate()
+            .map(|(i, &req)| Arrival { t: 0.25 * i as f64, tenant: i % 2, req })
+            .collect();
+        let r = simulate_pool_arrivals(SimMode::Baseline, &arrivals, PoolSimOpts {
+            engines: 2,
+            q_total: 16,
+            update_batch: 16,
+            slo: Some(60.0),
+            ..PoolSimOpts::default()
+        });
+        let s = &r.slo;
+        assert_eq!(s.enqueued, 60);
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants.iter().map(|t| t.enqueued).sum::<usize>(), 60);
+        for ten in &s.tenants {
+            assert_eq!(ten.enqueued, 30);
+            assert!(ten.completed > 0, "tenant {} completed nothing", ten.tenant);
+            assert!(ten.e2e_p50 > 0.0);
+            assert!(ten.e2e_p99 >= ten.e2e_p50);
+        }
+        assert!(!s.queue_depth.is_empty(), "queue-depth series missing");
+        assert!(s.fairness_jain > 0.9 && s.fairness_jain <= 1.0,
+                "jain {}", s.fairness_jain);
     }
 }

@@ -76,10 +76,26 @@ impl SimCore {
     }
 }
 
+/// One pool-level open-loop arrival: work that becomes dispatchable at
+/// simulated time `t`.  `key` is the SJF dispatch priority, precomputed
+/// at push time so delivery is a pure binary insert.
+pub(crate) struct PoolArrival {
+    pub(crate) t: f64,
+    pub(crate) key: f64,
+    pub(crate) work: SimWork,
+}
+
 /// Engine pool over [`SimEngine`]s: a central queue (or static stripes for
 /// round-robin) plus event-driven stepping — always advance the
 /// earliest-clock engine with work, so engine clocks stay within one
 /// decode iteration of each other (parallel devices).
+///
+/// Open-loop arrivals (§Workload) are one extra key class on the same
+/// heap: pseudo-engine index `n = engines.len()` holds the head arrival's
+/// timestamp, so engines win ties and an arrival delivers exactly when
+/// every pending decision point lies strictly later — the event-core twin
+/// of the reference rule "deliver iff `t < min stored clock` over engines
+/// with work".
 pub(crate) struct SimPool {
     pub(crate) engines: Vec<SimEngine>,
     pub(crate) central: VecDeque<SimWork>,
@@ -100,6 +116,14 @@ pub(crate) struct SimPool {
     /// Highest concurrent running-lane total observed at any sync point
     /// (exact even when timeline striding drops merged events).
     pub(crate) peak_lanes: usize,
+    // ---- open-loop arrival machinery (inert in closed-loop runs) ----
+    /// Pending arrivals, non-decreasing in `t`; head rides the heap at
+    /// pseudo-engine index `engines.len()`.
+    arrivals: VecDeque<PoolArrival>,
+    /// SJF dispatch keys parallel to `central`, maintained only in
+    /// arrival mode (stage-time sorting has no keys to keep).
+    central_keys: VecDeque<f64>,
+    arrival_mode: bool,
 }
 
 impl SimPool {
@@ -111,7 +135,8 @@ impl SimPool {
             policy,
             rr: 0,
             core,
-            heap: EventHeap::new(n),
+            // slot n is the arrival pseudo-engine (head arrival timestamp)
+            heap: EventHeap::new(n + 1),
             marks: MarkStack::new(),
             touched: vec![0; n],
             seq: 0,
@@ -119,6 +144,9 @@ impl SimPool {
             running_total: 0,
             queued_local: 0,
             peak_lanes: 0,
+            arrivals: VecDeque::new(),
+            central_keys: VecDeque::new(),
+            arrival_mode: false,
         }
     }
 
@@ -161,6 +189,12 @@ impl SimPool {
     /// central queue sorted by predicted remaining length so each engine
     /// pulls a contiguous, similar-length run.
     pub(crate) fn stage(&mut self, work: Vec<SimWork>, pred: &dyn LengthPredictor) {
+        // pool-level arrival runs are pure dispatch waves: they never mix
+        // with stage(), which would break the sorted central_keys mirror
+        debug_assert!(
+            !self.arrival_mode || self.policy != DispatchPolicy::ShortestPredictedFirst,
+            "stage() is not supported in SJF arrival mode"
+        );
         match self.policy {
             DispatchPolicy::RoundRobin => {
                 for w in work {
@@ -219,10 +253,101 @@ impl SimPool {
             }
             committed = committed.saturating_add(est);
             let w = self.central.pop_front().unwrap();
+            if self.arrival_mode && self.policy == DispatchPolicy::ShortestPredictedFirst {
+                self.central_keys.pop_front();
+            }
             self.engines[i].enqueue_back(w);
             pulled += 1;
         }
         pulled
+    }
+
+    // ---- open-loop arrivals ----
+
+    /// Install an open-loop arrival stream (non-decreasing `t`).  The
+    /// head arrival rides the event heap at pseudo-engine index
+    /// `engines.len()`; delivery happens through `tick` in both cores.
+    pub(crate) fn push_arrivals(&mut self, arrivals: Vec<PoolArrival>) {
+        debug_assert!(
+            arrivals.windows(2).all(|w| w[0].t <= w[1].t),
+            "arrivals must be sorted by time"
+        );
+        self.arrival_mode = true;
+        self.arrivals = arrivals.into();
+        if self.core == SimCore::Event {
+            self.reschedule_arrival();
+        }
+    }
+
+    pub(crate) fn arrivals_pending(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    /// Refresh the arrival pseudo-engine's heap entry (head timestamp).
+    fn reschedule_arrival(&mut self) {
+        let n = self.engines.len();
+        self.heap.invalidate(n);
+        if let Some(a) = self.arrivals.front() {
+            self.heap.push(n, a.t, 0);
+        }
+    }
+
+    /// Dispatch one arrival per the pool policy.  RR stripes; LeastLoaded
+    /// appends to the FIFO central queue; SJF binary-inserts by the
+    /// precomputed priority key (after equal keys — earlier arrivals of
+    /// the same predicted length keep FIFO order among themselves).
+    fn deliver(&mut self, a: PoolArrival) {
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let i = self.rr % self.engines.len();
+                self.rr += 1;
+                self.engines[i].enqueue_back(a.work);
+                self.sync(i);
+                if self.core == SimCore::Event {
+                    self.reschedule(i);
+                }
+            }
+            DispatchPolicy::LeastLoaded => {
+                let was_empty = self.central.is_empty();
+                self.central.push_back(a.work);
+                // only the empty→non-empty transition can flip a spare-
+                // capacity engine's has_work/admission verdict (unlimited
+                // gates never refuse; finite budgets see a new head only
+                // if there was none)
+                if self.core == SimCore::Event && was_empty {
+                    self.reschedule_capacity();
+                }
+            }
+            DispatchPolicy::ShortestPredictedFirst => {
+                let was_empty = self.central.is_empty();
+                let pos = self.central_keys.partition_point(|&k| k <= a.key);
+                self.central_keys.insert(pos, a.key);
+                self.central.insert(pos, a.work);
+                // a new head changes what every spare-capacity engine
+                // would pull next; deeper inserts change nothing gated on
+                if self.core == SimCore::Event && (was_empty || pos == 0) {
+                    self.reschedule_capacity();
+                }
+            }
+        }
+    }
+
+    /// Jump every idle engine's clock forward to `t` (pool-wide idle gap:
+    /// the next arrival lies beyond every stored clock).  Only legal when
+    /// no engine has work.
+    pub(crate) fn advance_idle_to(&mut self, t: f64) {
+        debug_assert!(
+            (0..self.engines.len()).all(|i| !self.has_work(i)),
+            "advance_idle_to with work pending"
+        );
+        for e in self.engines.iter_mut() {
+            if e.clock < t {
+                e.clock = t;
+            }
+        }
+        if self.core == SimCore::Event {
+            self.reschedule_all();
+        }
     }
 
     pub(crate) fn has_work(&self, i: usize) -> bool {
@@ -265,6 +390,21 @@ impl SimPool {
     /// iteration per call.  First minimal index wins — the order the
     /// event heap's `(key, engine)` tiebreak reproduces.
     fn tick_reference(&mut self) -> Option<Vec<SimRequest>> {
+        // open-loop: the head arrival delivers iff it precedes every
+        // pending decision point — STRICTLY before the min stored clock
+        // over engines with work (ties go to engines, matching the event
+        // heap's `(key, engine)` order where index n loses every tie)
+        if let Some(t) = self.arrivals.front().map(|a| a.t) {
+            let min_clock = (0..self.engines.len())
+                .filter(|&i| self.has_work(i))
+                .map(|i| self.engines[i].clock)
+                .fold(f64::INFINITY, f64::min);
+            if t < min_clock {
+                let a = self.arrivals.pop_front().expect("front checked");
+                self.deliver(a);
+                return Some(Vec::new());
+            }
+        }
         let i = (0..self.engines.len())
             .filter(|&i| self.has_work(i))
             .min_by(|&a, &b| {
@@ -295,6 +435,25 @@ impl SimPool {
                 }
                 continue;
             };
+            if i == self.engines.len() {
+                // arrival pseudo-engine: every live engine entry keyed
+                // <= this arrival's time has already popped (engines win
+                // ties), so delivery happens exactly where the reference
+                // core's strict `t < min clock` rule puts it
+                let a = self
+                    .arrivals
+                    .pop_front()
+                    .expect("valid arrival entry with empty arrival queue");
+                debug_assert_eq!(a.t.to_bits(), key.to_bits(), "stale arrival key");
+                debug_assert_eq!(fold, 0, "arrival entries never fold");
+                // the mark floors every engine's next admission grid
+                // point STRICTLY after t (index n loses all key ties)
+                self.marks.push(self.seq, key, i);
+                self.seq += 1;
+                self.deliver(a);
+                self.reschedule_arrival();
+                return Some(Vec::new());
+            }
             if !self.has_work(i) {
                 continue;
             }
@@ -482,14 +641,16 @@ impl SimPool {
         }
     }
 
-    /// Reschedule everything; returns whether any engine has work.
+    /// Reschedule everything (arrival head included); returns whether any
+    /// work remains — engine work or pending arrivals.
     fn reschedule_all(&mut self) -> bool {
         let mut any = false;
         for j in 0..self.engines.len() {
             self.reschedule(j);
             any |= self.has_work(j);
         }
-        any
+        self.reschedule_arrival();
+        any || !self.arrivals.is_empty()
     }
 
     /// Preempt one lane of one engine, progress kept; the partial re-enters
@@ -504,6 +665,11 @@ impl SimPool {
             if self.policy == DispatchPolicy::RoundRobin {
                 self.engines[engine].enqueue_back(w);
             } else {
+                // arrival-mode SJF mirror: requeued partials go to the
+                // back, so their key must sort after every real priority
+                if self.arrival_mode && self.policy == DispatchPolicy::ShortestPredictedFirst {
+                    self.central_keys.push_back(f64::MAX);
+                }
                 self.central.push_back(w);
             }
         }
@@ -588,9 +754,12 @@ impl SimPool {
             self.sync(i);
         }
         out.extend(self.central.drain(..).map(|w| (w.req, w.progress, true)));
+        self.central_keys.clear();
         if self.core == SimCore::Event {
-            // nothing has work; fresh entries arrive with the next stage
+            // nothing has work; fresh entries arrive with the next stage —
+            // but clear() invalidated the arrival slot too, so re-arm it
             self.heap.clear();
+            self.reschedule_arrival();
         }
         out
     }

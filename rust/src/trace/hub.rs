@@ -8,6 +8,7 @@
 //! `Decision::label`.  Everything is in backend clock units; the CLI
 //! converts `--slo MS` before construction.
 
+use crate::util::json::{num, Json};
 use crate::util::stats::{quantile, LogHistogram};
 use std::collections::BTreeMap;
 
@@ -30,6 +31,27 @@ pub struct EngineCounters {
     pub kv_pressure_ticks: u64,
     /// Post-step samples in which this engine reported `kv_blocked`.
     pub kv_blocked_ticks: u64,
+}
+
+/// Per-tenant SLO roll-up for open-loop runs (tenants come from the
+/// arrival stream; closed-loop runs register no arrivals and report no
+/// tenants).  Latencies are ARRIVAL-relative: `first_token - arrival_t`
+/// and `finished - arrival_t`, the open-loop quantities queueing theory
+/// talks about.
+#[derive(Debug, Clone, Default)]
+pub struct TenantSlo {
+    pub tenant: usize,
+    /// Arrivals registered for this tenant.
+    pub enqueued: usize,
+    pub completed: usize,
+    pub clipped: usize,
+    pub dropped: usize,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    /// Fraction of this tenant's arrivals trained within the SLO.
+    pub goodput: f64,
 }
 
 /// SLO roll-up of one traced run (all times in backend clock units —
@@ -64,6 +86,76 @@ pub struct SloSummary {
     /// (completed or clipped) within the SLO; with no SLO set, simply the
     /// fraction that produced one at all.
     pub goodput: f64,
+    /// Per-tenant roll-ups (open-loop runs only; empty for closed loop).
+    pub tenants: Vec<TenantSlo>,
+    /// Jain fairness index over per-tenant delivered fractions:
+    /// `(Σx)² / (n·Σx²)`, 1.0 = perfectly fair, → 1/n under starvation.
+    /// 1.0 when fewer than two tenants exist (nothing to be unfair to).
+    pub fairness_jain: f64,
+    /// Pool queue depth over time: `(clock, waiting requests)` samples,
+    /// deduplicated on change and downsampled to ≤ 256 points.
+    pub queue_depth: Vec<(f64, usize)>,
+}
+
+impl SloSummary {
+    /// JSON artifact form (what `--slo-out` and `exp pool` write).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("enqueued".into(), num(self.enqueued as f64));
+        o.insert("completed".into(), num(self.completed as f64));
+        o.insert("clipped".into(), num(self.clipped as f64));
+        o.insert("dropped".into(), num(self.dropped as f64));
+        o.insert("ttft_p50".into(), num(self.ttft_p50));
+        o.insert("ttft_p90".into(), num(self.ttft_p90));
+        o.insert("ttft_p99".into(), num(self.ttft_p99));
+        o.insert("tpot_p50".into(), num(self.tpot_p50));
+        o.insert("tpot_p90".into(), num(self.tpot_p90));
+        o.insert("tpot_p99".into(), num(self.tpot_p99));
+        o.insert("e2e_p50".into(), num(self.e2e_p50));
+        o.insert("e2e_p99".into(), num(self.e2e_p99));
+        o.insert("queue_p50".into(), num(self.queue_p50));
+        o.insert("queue_p99".into(), num(self.queue_p99));
+        o.insert("mean_ttft".into(), num(self.mean_ttft));
+        o.insert("mean_tpot".into(), num(self.mean_tpot));
+        o.insert(
+            "slo".into(),
+            self.slo.map(num).unwrap_or(Json::Null),
+        );
+        o.insert("goodput".into(), num(self.goodput));
+        o.insert("fairness_jain".into(), num(self.fairness_jain));
+        o.insert(
+            "tenants".into(),
+            Json::Arr(
+                self.tenants
+                    .iter()
+                    .map(|t| {
+                        let mut m = BTreeMap::new();
+                        m.insert("tenant".into(), num(t.tenant as f64));
+                        m.insert("enqueued".into(), num(t.enqueued as f64));
+                        m.insert("completed".into(), num(t.completed as f64));
+                        m.insert("clipped".into(), num(t.clipped as f64));
+                        m.insert("dropped".into(), num(t.dropped as f64));
+                        m.insert("ttft_p50".into(), num(t.ttft_p50));
+                        m.insert("ttft_p99".into(), num(t.ttft_p99));
+                        m.insert("e2e_p50".into(), num(t.e2e_p50));
+                        m.insert("e2e_p99".into(), num(t.e2e_p99));
+                        m.insert("goodput".into(), num(t.goodput));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "queue_depth".into(),
+            Json::Arr(
+                self.queue_depth
+                    .iter()
+                    .map(|&(t, d)| Json::Arr(vec![num(t), num(d as f64)]))
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
 }
 
 /// Latency + counter aggregation for one traced run.
@@ -96,6 +188,25 @@ pub struct TelemetryHub {
     pub barriers: u64,
     pub steals_refused: u64,
     pub throttles_refused: u64,
+    /// rid → (arrival instant, tenant); registered by open-loop entry
+    /// points before driving.  Empty in closed-loop runs — which keeps
+    /// every latency definition exactly as before.
+    arrivals: BTreeMap<u64, (f64, usize)>,
+    /// Per-tenant accumulators, indexed by tenant id.
+    tenants: Vec<TenantAcc>,
+    /// Raw (clock, waiting) queue-depth samples, dedup-on-change.
+    queue_depth: Vec<(f64, usize)>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct TenantAcc {
+    enqueued: usize,
+    completed: usize,
+    clipped: usize,
+    dropped: usize,
+    slo_met: usize,
+    ttft: Vec<f64>,
+    e2e: Vec<f64>,
 }
 
 impl TelemetryHub {
@@ -124,6 +235,28 @@ impl TelemetryHub {
             barriers: 0,
             steals_refused: 0,
             throttles_refused: 0,
+            arrivals: BTreeMap::new(),
+            tenants: Vec::new(),
+            queue_depth: Vec::new(),
+        }
+    }
+
+    /// Register one open-loop arrival.  Latencies for registered rids are
+    /// measured from `t` (the arrival instant) instead of the tracer's
+    /// enqueue stamp, and aggregate into the tenant's roll-up.
+    pub fn register_arrival(&mut self, rid: u64, t: f64, tenant: usize) {
+        if tenant >= self.tenants.len() {
+            self.tenants.resize(tenant + 1, TenantAcc::default());
+        }
+        self.tenants[tenant].enqueued += 1;
+        self.arrivals.insert(rid, (t, tenant));
+    }
+
+    /// Sample the pool's waiting-request count (dedup-on-change: long
+    /// stretches at one depth cost one point).
+    pub fn sample_queue_depth(&mut self, at: f64, depth: usize) {
+        if self.queue_depth.last().map(|&(_, d)| d) != Some(depth) {
+            self.queue_depth.push((at, depth));
         }
     }
 
@@ -143,18 +276,46 @@ impl TelemetryHub {
     /// count (they produced a trained trajectory); drops only count in the
     /// outcome tallies.
     pub fn finish_span(&mut self, span: &RequestSpan) {
+        // registered open-loop rids measure from the ARRIVAL instant,
+        // not the tracer's enqueue stamp (release into the scheduler can
+        // lag the arrival when the pool is saturated)
+        let reg = self.arrivals.get(&span.rid).copied();
         match span.outcome {
-            SpanOutcome::Completed => self.completed += 1,
-            SpanOutcome::Clipped => self.clipped += 1,
+            SpanOutcome::Completed => {
+                self.completed += 1;
+                if let Some((_, tenant)) = reg {
+                    self.tenants[tenant].completed += 1;
+                }
+            }
+            SpanOutcome::Clipped => {
+                self.clipped += 1;
+                if let Some((_, tenant)) = reg {
+                    self.tenants[tenant].clipped += 1;
+                }
+            }
             SpanOutcome::Dropped => {
                 self.dropped += 1;
+                if let Some((_, tenant)) = reg {
+                    self.tenants[tenant].dropped += 1;
+                }
                 return;
             }
             SpanOutcome::InFlight => return,
         }
-        if let Some(t) = span.ttft() {
+        let ttft = match reg {
+            Some((t0, _)) => span.first_token.map(|ft| (ft - t0).max(0.0)),
+            None => span.ttft(),
+        };
+        let e2e = match reg {
+            Some((t0, _)) => span.finished.map(|f| (f - t0).max(0.0)),
+            None => span.e2e(),
+        };
+        if let Some(t) = ttft {
             self.ttft.push(t);
             self.ttft_hist.push(t);
+            if let Some((_, tenant)) = reg {
+                self.tenants[tenant].ttft.push(t);
+            }
         }
         if let Some(t) = span.tpot() {
             self.tpot.push(t);
@@ -162,11 +323,18 @@ impl TelemetryHub {
         if let Some(t) = span.queue_wait() {
             self.queue_wait.push(t);
         }
-        if let Some(t) = span.e2e() {
+        if let Some(t) = e2e {
             self.e2e.push(t);
             self.e2e_hist.push(t);
-            if self.slo.is_none_or(|s| t <= s) {
+            let met = self.slo.is_none_or(|s| t <= s);
+            if met {
                 self.slo_met += 1;
+            }
+            if let Some((_, tenant)) = reg {
+                self.tenants[tenant].e2e.push(t);
+                if met {
+                    self.tenants[tenant].slo_met += 1;
+                }
             }
         }
     }
@@ -180,6 +348,44 @@ impl TelemetryHub {
                 0.0
             } else {
                 xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        let tenants: Vec<TenantSlo> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, a)| TenantSlo {
+                tenant: i,
+                enqueued: a.enqueued,
+                completed: a.completed,
+                clipped: a.clipped,
+                dropped: a.dropped,
+                ttft_p50: q0(&a.ttft, 0.50),
+                ttft_p99: q0(&a.ttft, 0.99),
+                e2e_p50: q0(&a.e2e, 0.50),
+                e2e_p99: q0(&a.e2e, 0.99),
+                goodput: if a.enqueued == 0 {
+                    0.0
+                } else {
+                    a.slo_met as f64 / a.enqueued as f64
+                },
+            })
+            .collect();
+        // Jain over per-tenant delivered fractions (trained trajectories
+        // per arrival): 1.0 when every tenant gets the same service level
+        let fairness_jain = if tenants.len() < 2 {
+            1.0
+        } else {
+            let xs: Vec<f64> = tenants
+                .iter()
+                .map(|t| (t.completed + t.clipped) as f64 / t.enqueued.max(1) as f64)
+                .collect();
+            let sum: f64 = xs.iter().sum();
+            let sq: f64 = xs.iter().map(|x| x * x).sum();
+            if sq <= 0.0 {
+                0.0
+            } else {
+                sum * sum / (xs.len() as f64 * sq)
             }
         };
         SloSummary {
@@ -205,6 +411,9 @@ impl TelemetryHub {
             } else {
                 self.slo_met as f64 / self.enqueued as f64
             },
+            tenants,
+            fairness_jain,
+            queue_depth: super::series::downsample(&self.queue_depth, 256),
         }
     }
 }
@@ -250,6 +459,47 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.e2e_p99, 0.0); // guarded, not NaN
         assert_eq!(s.goodput, 0.0);
+    }
+
+    #[test]
+    fn tenant_rollups_fairness_and_json() {
+        let mut hub = TelemetryHub::new(Some(4.0));
+        hub.enqueued = 3;
+        hub.register_arrival(0, 1.0, 0);
+        hub.register_arrival(1, 2.0, 1);
+        hub.register_arrival(2, 3.0, 1);
+        // arrival-relative: ttft 2.0-1.0, e2e 4.0-1.0 (within SLO 4.0)
+        hub.finish_span(&span(0, 2.0, 4.0, 3, SpanOutcome::Completed));
+        // e2e 8.0-2.0 = 6.0: delivered but missed the SLO
+        hub.finish_span(&span(1, 3.0, 8.0, 3, SpanOutcome::Completed));
+        hub.finish_span(&span(2, 3.5, 9.0, 1, SpanOutcome::Dropped));
+        hub.sample_queue_depth(0.0, 0);
+        hub.sample_queue_depth(1.0, 2);
+        hub.sample_queue_depth(2.0, 2); // dedup-on-change drops this
+        let s = hub.summary();
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!((s.tenants[0].enqueued, s.tenants[0].completed), (1, 1));
+        assert_eq!((s.tenants[1].enqueued, s.tenants[1].dropped), (2, 1));
+        assert!((s.tenants[0].ttft_p50 - 1.0).abs() < 1e-12);
+        assert!((s.tenants[0].e2e_p50 - 3.0).abs() < 1e-12);
+        assert!((s.tenants[0].goodput - 1.0).abs() < 1e-12);
+        assert_eq!(s.tenants[1].goodput, 0.0);
+        // delivered fractions 1.0 and 0.5: J = 1.5^2 / (2 * 1.25) = 0.9
+        assert!((s.fairness_jain - 0.9).abs() < 1e-12);
+        assert_eq!(s.queue_depth, vec![(0.0, 0), (1.0, 2)]);
+        let j = s.to_json();
+        assert_eq!(j.get("tenants").unwrap().as_arr().unwrap().len(), 2);
+        assert!((j.get("fairness_jain").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_loop_summary_has_no_tenants() {
+        let mut hub = TelemetryHub::new(None);
+        hub.enqueued = 1;
+        hub.finish_span(&span(0, 1.0, 2.0, 2, SpanOutcome::Completed));
+        let s = hub.summary();
+        assert!(s.tenants.is_empty());
+        assert_eq!(s.fairness_jain, 1.0);
     }
 
     #[test]

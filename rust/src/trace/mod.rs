@@ -94,6 +94,16 @@ impl Tracer {
         self.enabled
     }
 
+    /// Register an open-loop arrival (rid, arrival instant, tenant) so
+    /// the hub reports arrival-relative latencies and per-tenant SLOs.
+    /// Call before driving; a no-op on the disabled tracer.
+    pub fn register_arrival(&mut self, rid: u64, t: f64, tenant: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.hub.register_arrival(rid, t, tenant);
+    }
+
     /// Current pool clock: the backend's own clock when it exposes one
     /// (`trace_clock`), else the executed-step count; never goes backward.
     fn now(&mut self, backend: &dyn ScheduleBackend) -> f64 {
@@ -229,8 +239,10 @@ impl Tracer {
                 }
             }
         }
+        let queued = backend.view().queued;
+        self.hub.sample_queue_depth(at, queued);
         if let Some(c) = self.chrome.as_mut() {
-            c.counter(0, "queued", at, backend.view().queued as f64);
+            c.counter(0, "queued", at, queued as f64);
         }
         self.close_new_ready(backend, at);
     }

@@ -1,0 +1,283 @@
+//! Synthetic arrival processes: Poisson, bursty (Markov-modulated
+//! on/off), and diurnal (sinusoidal rate via Lewis–Shedler thinning).
+//!
+//! Each generator keeps TWO independent Pcg64 streams: a *times* stream
+//! (unique per process kind) and a *lengths* stream (the shared
+//! [`LEN_STREAM`](super::LEN_STREAM) that `longtail_workload` has always
+//! used).  Splitting them means the request bodies a generator produces
+//! for `(seed, cap)` are byte-identical to the closed-loop workload —
+//! only the timestamps differ — which keeps open-loop vs closed-loop
+//! comparisons apples-to-apples and is pinned by a test.
+
+use super::{Arrival, LengthProfile, BURSTY_STREAM, DIURNAL_STREAM, LEN_STREAM, POISSON_STREAM};
+use crate::util::rng::Pcg64;
+
+/// An unbounded, deterministic open-loop request stream.  Arrival times
+/// are non-decreasing; `next_arrival` returns `None` only for finite
+/// sources (trace replay) — the synthetic generators never exhaust.
+pub trait ArrivalProcess {
+    fn name(&self) -> &'static str;
+    fn next_arrival(&mut self) -> Option<Arrival>;
+}
+
+/// Drain the first `n` arrivals of a process into a vector.
+pub fn take(p: &mut dyn ArrivalProcess, n: usize) -> Vec<Arrival> {
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        match p.next_arrival() {
+            Some(a) => out.push(a),
+            None => break,
+        }
+    }
+    out
+}
+
+/// Exponential inter-arrival gap at `rate` (inverse-CDF on one uniform).
+/// `1.0 - u` keeps the draw in (0, 1] so `ln` never sees zero.
+fn exp_gap(rate: f64, rng: &mut Pcg64) -> f64 {
+    -(1.0 - rng.uniform_f64()).ln() / rate
+}
+
+/// Homogeneous Poisson arrivals at a fixed rate (req/s).
+pub struct PoissonArrivals {
+    rate: f64,
+    cap: usize,
+    profile: LengthProfile,
+    t: f64,
+    next_id: usize,
+    times: Pcg64,
+    lengths: Pcg64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate: f64, cap: usize, profile: LengthProfile, seed: u64) -> Self {
+        assert!(rate > 0.0, "poisson rate must be > 0");
+        PoissonArrivals {
+            rate,
+            cap,
+            profile,
+            t: 0.0,
+            next_id: 0,
+            times: Pcg64::with_stream(seed, POISSON_STREAM),
+            lengths: Pcg64::with_stream(seed, LEN_STREAM),
+        }
+    }
+}
+
+impl ArrivalProcess for PoissonArrivals {
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        self.t += exp_gap(self.rate, &mut self.times);
+        let req = self.profile.sample(self.next_id, self.cap, &mut self.lengths);
+        self.next_id += 1;
+        Some(Arrival { t: self.t, tenant: 0, req })
+    }
+}
+
+/// Markov-modulated on/off arrivals: exponential gaps at `rate_hi` while
+/// "on" and `rate_lo` while "off"; after every arrival the state flips
+/// with probability `flip`.  Burst length is geometric with mean
+/// `1/flip`, and the gap CV is > 1 (over-dispersed vs Poisson) whenever
+/// the two rates differ — pinned by a test.
+pub struct BurstyArrivals {
+    rate_hi: f64,
+    rate_lo: f64,
+    flip: f64,
+    cap: usize,
+    profile: LengthProfile,
+    on: bool,
+    t: f64,
+    next_id: usize,
+    times: Pcg64,
+    lengths: Pcg64,
+}
+
+impl BurstyArrivals {
+    pub fn new(
+        rate_hi: f64,
+        rate_lo: f64,
+        flip: f64,
+        cap: usize,
+        profile: LengthProfile,
+        seed: u64,
+    ) -> Self {
+        assert!(rate_hi > 0.0 && rate_lo > 0.0, "bursty rates must be > 0");
+        assert!(flip > 0.0 && flip <= 1.0, "bursty flip must be in (0, 1]");
+        BurstyArrivals {
+            rate_hi,
+            rate_lo,
+            flip,
+            cap,
+            profile,
+            on: true,
+            t: 0.0,
+            next_id: 0,
+            times: Pcg64::with_stream(seed, BURSTY_STREAM),
+            lengths: Pcg64::with_stream(seed, LEN_STREAM),
+        }
+    }
+}
+
+impl ArrivalProcess for BurstyArrivals {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        let rate = if self.on { self.rate_hi } else { self.rate_lo };
+        self.t += exp_gap(rate, &mut self.times);
+        if self.times.bool_with(self.flip) {
+            self.on = !self.on;
+        }
+        let req = self.profile.sample(self.next_id, self.cap, &mut self.lengths);
+        self.next_id += 1;
+        Some(Arrival { t: self.t, tenant: 0, req })
+    }
+}
+
+/// Inhomogeneous Poisson with sinusoidal rate
+/// `base * (1 + amp * sin(2 pi t / period))`, realized by Lewis–Shedler
+/// thinning: candidates at the peak rate `base * (1 + amp)`, each kept
+/// with probability `rate(t) / rate_max`.  One candidate costs exactly
+/// two uniform draws (gap, accept) regardless of acceptance, so the
+/// stream stays reproducible.
+pub struct DiurnalArrivals {
+    base: f64,
+    amp: f64,
+    period: f64,
+    rate_max: f64,
+    cap: usize,
+    profile: LengthProfile,
+    t: f64,
+    next_id: usize,
+    times: Pcg64,
+    lengths: Pcg64,
+}
+
+impl DiurnalArrivals {
+    pub fn new(base: f64, amp: f64, period: f64, cap: usize, profile: LengthProfile, seed: u64) -> Self {
+        assert!(base > 0.0, "diurnal base rate must be > 0");
+        assert!((0.0..1.0).contains(&amp), "diurnal amplitude must be in [0, 1)");
+        assert!(period > 0.0, "diurnal period must be > 0");
+        DiurnalArrivals {
+            base,
+            amp,
+            period,
+            rate_max: base * (1.0 + amp),
+            cap,
+            profile,
+            t: 0.0,
+            next_id: 0,
+            times: Pcg64::with_stream(seed, DIURNAL_STREAM),
+            lengths: Pcg64::with_stream(seed, LEN_STREAM),
+        }
+    }
+
+    fn rate_at(&self, t: f64) -> f64 {
+        self.base * (1.0 + self.amp * (std::f64::consts::TAU * t / self.period).sin())
+    }
+}
+
+impl ArrivalProcess for DiurnalArrivals {
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        loop {
+            self.t += exp_gap(self.rate_max, &mut self.times);
+            let accept = self.times.uniform_f64() < self.rate_at(self.t) / self.rate_max;
+            if accept {
+                let req = self.profile.sample(self.next_id, self.cap, &mut self.lengths);
+                self.next_id += 1;
+                return Some(Arrival { t: self.t, tenant: 0, req });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaps(arrivals: &[Arrival]) -> Vec<f64> {
+        let mut prev = 0.0;
+        arrivals
+            .iter()
+            .map(|a| {
+                let g = a.t - prev;
+                prev = a.t;
+                g
+            })
+            .collect()
+    }
+
+    fn mean_cv(g: &[f64]) -> (f64, f64) {
+        let mean = g.iter().sum::<f64>() / g.len() as f64;
+        let var = g.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / g.len() as f64;
+        (mean, var.sqrt() / mean)
+    }
+
+    /// Interarrival-gap pins for seed 7, hand-derived through an
+    /// independent Pcg64 mirror.  Counts use a small tolerance band; the
+    /// nearest gap sits >= 1e-3 from the 1.0 threshold, so any libm ulp
+    /// drift cannot move the count more than that.
+    #[test]
+    fn poisson_gap_statistics_pin() {
+        let mut p = PoissonArrivals::new(1.0, 8192, LengthProfile::longtail(), 7);
+        let a = take(&mut p, 1000);
+        let g = gaps(&a);
+        let short = g.iter().filter(|&&x| x < 1.0).count();
+        assert!((616..=622).contains(&short), "gaps<1.0 = {short}, pin 619");
+        let (mean, cv) = mean_cv(&g);
+        assert!((mean - 1.0017).abs() < 0.05, "mean {mean}, pin 1.0017");
+        // exponential gaps: CV ~ 1
+        assert!((cv - 0.97).abs() < 0.15, "cv {cv}, pin 0.97");
+        assert!(g.iter().all(|&x| x > 0.0));
+    }
+
+    /// Bursty pin (hi 4.0, lo 0.5, flip 0.15, seed 7): the on/off mix is
+    /// over-dispersed — CV well above the Poisson ~1.
+    #[test]
+    fn bursty_gap_statistics_pin() {
+        let mut p = BurstyArrivals::new(4.0, 0.5, 0.15, 8192, LengthProfile::longtail(), 7);
+        let a = take(&mut p, 1000);
+        let g = gaps(&a);
+        let short = g.iter().filter(|&&x| x < 0.25).count();
+        assert!((370..=376).contains(&short), "gaps<0.25 = {short}, pin 373");
+        let (_, cv) = mean_cv(&g);
+        assert!(cv > 1.2, "bursty cv {cv} should exceed 1.2 (pin 1.55)");
+    }
+
+    /// Diurnal pin (base 2.0, amp 0.8, period 8.0, seed 7): arrivals
+    /// concentrate in the sin>0 half of each period — 766/1000 in the
+    /// mirror run vs 500 for a flat rate.
+    #[test]
+    fn diurnal_concentrates_in_peak_half() {
+        let mut p = DiurnalArrivals::new(2.0, 0.8, 8.0, 8192, LengthProfile::longtail(), 7);
+        let a = take(&mut p, 1000);
+        let peak = a.iter().filter(|x| x.t.rem_euclid(8.0) < 4.0).count();
+        assert!((761..=771).contains(&peak), "peak-half = {peak}, pin 766");
+        for w in a.windows(2) {
+            assert!(w[0].t < w[1].t);
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_bit_for_bit() {
+        let runs: Vec<Vec<Arrival>> = (0..2)
+            .map(|_| {
+                let mut p = BurstyArrivals::new(8.0, 1.0, 0.2, 4096, LengthProfile::longtail(), 42);
+                take(&mut p, 256)
+            })
+            .collect();
+        for (x, y) in runs[0].iter().zip(&runs[1]) {
+            assert_eq!(x.t.to_bits(), y.t.to_bits());
+            assert_eq!(x.req.output_len, y.req.output_len);
+            assert_eq!(x.req.prompt_len, y.req.prompt_len);
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Open-loop workload subsystem: arrival processes and trace replay.
+//!
+//! Every pre-PR-8 workload was a closed-loop batch — `n` prompts handed to
+//! the pool at `t = 0`.  This module generates and replays *open-loop*
+//! request streams instead: requests keep arriving while the scheduler is
+//! mid-flight, which is the regime where HOL blocking, predictor quality
+//! and KV backpressure actually matter (vllm-ltr's 2.8x chatbot-latency
+//! win is an open-loop number).
+//!
+//! * [`ArrivalProcess`] (`arrival.rs`) — the stream trait plus the three
+//!   synthetic generators: Poisson, bursty (Markov-modulated on/off) and
+//!   diurnal (sinusoidal rate, Lewis–Shedler thinning).
+//! * `trace.rs` — the multi-tenant JSONL trace format
+//!   (`{t, tenant, prompt_len, cap}` per line): canonical emit, parser,
+//!   synthetic trace generator, and the replay source.
+//! * [`LengthProfile`] — the parameterized length distribution every
+//!   source shares (the old hard-coded `longtail_workload` body), so
+//!   generated and replayed requests go through one `SimRequest`
+//!   construction path.
+//!
+//! Determinism: every stream derives from `(seed, stream-constant)` via
+//! [`Pcg64::with_stream`]; multi-tenant sources split one stream per
+//! tenant, so a tenant's sample sequence is independent of how the other
+//! tenants' events interleave with it.
+//!
+//! How arrivals execute: see DESIGN.md §Workload.  At the pool level an
+//! arrival is one extra key class on the event heap (pseudo-engine index
+//! `n`, so engines win ties and delivery is strictly ordered against
+//! decision points); at the backend level arrivals gate `load_prompts`
+//! and stamp `SimWork::ready_at` so an idle engine can never admit work
+//! before it exists.
+
+mod arrival;
+mod trace;
+
+pub use arrival::{
+    take, ArrivalProcess, BurstyArrivals, DiurnalArrivals, PoissonArrivals,
+};
+pub use trace::{
+    emit_trace, generate_trace, parse_trace, replay_trace, TraceEvent, TraceReplay,
+};
+
+use crate::sim::SimRequest;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Pcg64 stream constants (one per source so seeds never alias).
+pub(crate) const LEN_STREAM: u64 = 0x51; // longtail_workload's historical stream
+pub(crate) const POISSON_STREAM: u64 = 0x41;
+pub(crate) const BURSTY_STREAM: u64 = 0x42;
+pub(crate) const DIURNAL_STREAM: u64 = 0x43;
+pub(crate) const TRACE_GEN_STREAM: u64 = 0x7E00; // + tenant
+pub(crate) const TRACE_REPLAY_STREAM: u64 = 0x7E50; // + tenant
+
+/// One open-loop arrival: a request that becomes schedulable at `t`
+/// (simulated seconds), attributed to `tenant` for fairness accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    pub t: f64,
+    pub tenant: usize,
+    pub req: SimRequest,
+}
+
+/// Parameterized long-tail length distribution — the single `SimRequest`
+/// construction path shared by [`longtail_workload`], the arrival
+/// generators, and trace replay.  Defaults reproduce the historical
+/// hard-coded distribution bit-for-bit (same draw order, same arithmetic).
+#[derive(Debug, Clone, Copy)]
+pub struct LengthProfile {
+    /// Probability a request runs all the way to the generation cap.
+    pub frac_at_cap: f64,
+    /// Lognormal (mu, sigma) of the body distribution.
+    pub mu: f64,
+    pub sigma: f64,
+    /// Body median as a fraction of the cap.
+    pub scale_frac: f64,
+    /// Floor for body output lengths.
+    pub min_len: usize,
+    /// Prompt length = `prompt_base + uniform[0, prompt_spread)`.
+    pub prompt_base: usize,
+    pub prompt_spread: u64,
+}
+
+impl LengthProfile {
+    /// Fig. 1c's shape: a lognormal body (~80% of samples within 3/8 of
+    /// the cap) plus ~6% of requests truncated AT the generation cap.
+    pub fn longtail() -> Self {
+        LengthProfile {
+            frac_at_cap: 0.08,
+            mu: 0.0,
+            sigma: 0.85,
+            scale_frac: 0.11,
+            min_len: 16,
+            prompt_base: 64,
+            prompt_spread: 192,
+        }
+    }
+
+    /// Sample an output length against `cap`.  Draw order (one `bool`,
+    /// then a lognormal only on the body branch) is part of the contract:
+    /// it reproduces the historical `longtail_workload` stream exactly.
+    pub fn output_len(&self, cap: usize, rng: &mut Pcg64) -> usize {
+        if rng.bool_with(self.frac_at_cap) {
+            cap // hit the generation limit
+        } else {
+            let body = rng.lognormal(self.mu, self.sigma) * self.scale_frac * cap as f64;
+            (body as usize).clamp(self.min_len, cap)
+        }
+    }
+
+    pub fn prompt_len(&self, rng: &mut Pcg64) -> usize {
+        self.prompt_base + rng.below(self.prompt_spread) as usize
+    }
+
+    /// Sample a full request: output draws first, then the prompt draw —
+    /// the historical order.
+    pub fn sample(&self, id: usize, cap: usize, rng: &mut Pcg64) -> SimRequest {
+        let output_len = self.output_len(cap, rng);
+        SimRequest { id, prompt_len: self.prompt_len(rng), output_len }
+    }
+}
+
+/// Long-tailed length workload matching Fig. 1c's shape: a lognormal body
+/// plus ~6% of requests truncated AT the generation cap — the paper
+/// observes "5% can extend up to the token limit", and those cap-clipped
+/// requests are what the schedulers fight over.  (Moved here from
+/// `sim::longtail_workload`, which re-exports it; byte-identical output.)
+pub fn longtail_workload(n: usize, cap: usize, seed: u64) -> Vec<SimRequest> {
+    let profile = LengthProfile::longtail();
+    let mut rng = Pcg64::with_stream(seed, LEN_STREAM);
+    (0..n).map(|id| profile.sample(id, cap, &mut rng)).collect()
+}
+
+/// Parsed `--arrival` flag: which stream feeds the run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Closed loop (default): the whole workload is schedulable at t=0.
+    Batch,
+    /// Poisson arrivals at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Markov-modulated on/off: exponential gaps at `rate_hi` (on) or
+    /// `rate_lo` (off), state flipped after each arrival with prob `flip`.
+    Bursty { rate_hi: f64, rate_lo: f64, flip: f64 },
+    /// Sinusoidal rate `base * (1 + amp * sin(2 pi t / period))` via
+    /// Lewis–Shedler thinning.
+    Diurnal { base: f64, amp: f64, period: f64 },
+    /// Replay a multi-tenant JSONL trace file.
+    Trace { path: PathBuf },
+}
+
+impl ArrivalSpec {
+    /// Parse the `--arrival` flag value:
+    /// `batch | poisson:RATE | bursty:HI,LO,FLIP | diurnal:BASE,AMP,PERIOD
+    ///  | trace:FILE`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (kind, args) = match s.split_once(':') {
+            Some((k, a)) => (k, a),
+            None => (s, ""),
+        };
+        let nums = |want: usize| -> Result<Vec<f64>> {
+            let parts: Vec<f64> = args
+                .split(',')
+                .map(|p| p.trim().parse::<f64>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| anyhow::anyhow!("--arrival {kind}: bad number in {args:?}"))?;
+            if parts.len() != want {
+                bail!("--arrival {kind}: expected {want} comma-separated values, got {args:?}");
+            }
+            if parts.iter().any(|x| !x.is_finite()) {
+                bail!("--arrival {kind}: values must be finite, got {args:?}");
+            }
+            Ok(parts)
+        };
+        Ok(match kind {
+            "batch" => {
+                if !args.is_empty() {
+                    bail!("--arrival batch takes no arguments");
+                }
+                ArrivalSpec::Batch
+            }
+            "poisson" => {
+                let v = nums(1)?;
+                if v[0] <= 0.0 {
+                    bail!("--arrival poisson: rate must be > 0");
+                }
+                ArrivalSpec::Poisson { rate: v[0] }
+            }
+            "bursty" => {
+                let v = nums(3)?;
+                if v[0] <= 0.0 || v[1] <= 0.0 {
+                    bail!("--arrival bursty: both rates must be > 0");
+                }
+                if !(v[2] > 0.0 && v[2] <= 1.0) {
+                    bail!("--arrival bursty: flip must be in (0, 1]");
+                }
+                ArrivalSpec::Bursty { rate_hi: v[0], rate_lo: v[1], flip: v[2] }
+            }
+            "diurnal" => {
+                let v = nums(3)?;
+                if v[0] <= 0.0 {
+                    bail!("--arrival diurnal: base rate must be > 0");
+                }
+                if !(0.0..1.0).contains(&v[1]) {
+                    bail!("--arrival diurnal: amplitude must be in [0, 1)");
+                }
+                if v[2] <= 0.0 {
+                    bail!("--arrival diurnal: period must be > 0");
+                }
+                ArrivalSpec::Diurnal { base: v[0], amp: v[1], period: v[2] }
+            }
+            "trace" => {
+                if args.is_empty() {
+                    bail!("--arrival trace: missing file path");
+                }
+                ArrivalSpec::Trace { path: PathBuf::from(args) }
+            }
+            other => bail!(
+                "unknown --arrival {other:?} (batch|poisson:RATE|bursty:HI,LO,FLIP|\
+                 diurnal:BASE,AMP,PERIOD|trace:FILE)"
+            ),
+        })
+    }
+
+    pub fn is_open_loop(&self) -> bool {
+        *self != ArrivalSpec::Batch
+    }
+
+    /// Materialize the stream: `n` arrivals for generators (lengths drawn
+    /// from the shared longtail profile against `cap`), every event for a
+    /// trace (its own lengths/caps; `n` and `cap` ignored).  Batch yields
+    /// the closed-loop workload with every `t = 0`.
+    pub fn build(&self, n: usize, cap: usize, seed: u64) -> Result<Vec<Arrival>> {
+        let profile = LengthProfile::longtail();
+        Ok(match self {
+            ArrivalSpec::Batch => longtail_workload(n, cap, seed)
+                .into_iter()
+                .map(|req| Arrival { t: 0.0, tenant: 0, req })
+                .collect(),
+            ArrivalSpec::Poisson { rate } => {
+                take(&mut PoissonArrivals::new(*rate, cap, profile, seed), n)
+            }
+            ArrivalSpec::Bursty { rate_hi, rate_lo, flip } => take(
+                &mut BurstyArrivals::new(*rate_hi, *rate_lo, *flip, cap, profile, seed),
+                n,
+            ),
+            ArrivalSpec::Diurnal { base, amp, period } => take(
+                &mut DiurnalArrivals::new(*base, *amp, *period, cap, profile, seed),
+                n,
+            ),
+            ArrivalSpec::Trace { path } => {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    anyhow::anyhow!("--arrival trace: cannot read {}: {e}", path.display())
+                })?;
+                replay_trace(&parse_trace(&text)?, seed)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The moved `longtail_workload` still produces the historical
+    /// sequence: first six (prompt, output) pairs for seed 1 / cap 8192,
+    /// hand-derived through an independent Pcg64 mirror.
+    #[test]
+    fn longtail_pins_historical_values() {
+        let w = longtail_workload(6, 8192, 1);
+        let got: Vec<(usize, usize)> =
+            w.iter().map(|r| (r.prompt_len, r.output_len)).collect();
+        assert_eq!(
+            got,
+            vec![(88, 175), (191, 4702), (171, 859), (200, 134), (154, 2012), (249, 446)]
+        );
+        for (i, r) in w.iter().enumerate() {
+            assert_eq!(r.id, i);
+        }
+    }
+
+    #[test]
+    fn arrival_generators_share_the_longtail_length_stream() {
+        // same seed => generated request bodies are exactly the closed-loop
+        // workload; only the timestamps differ (one shared construction path)
+        let w = longtail_workload(64, 2048, 9);
+        for spec in [
+            ArrivalSpec::Poisson { rate: 3.0 },
+            ArrivalSpec::Bursty { rate_hi: 8.0, rate_lo: 1.0, flip: 0.2 },
+            ArrivalSpec::Diurnal { base: 4.0, amp: 0.5, period: 10.0 },
+        ] {
+            let a = spec.build(64, 2048, 9).unwrap();
+            assert_eq!(a.len(), 64);
+            for (x, r) in a.iter().zip(&w) {
+                assert_eq!(x.req.id, r.id);
+                assert_eq!(x.req.prompt_len, r.prompt_len);
+                assert_eq!(x.req.output_len, r.output_len);
+            }
+            // arrival times are non-decreasing and strictly positive overall
+            for pair in a.windows(2) {
+                assert!(pair[0].t <= pair[1].t);
+            }
+            assert!(a.last().unwrap().t > 0.0);
+        }
+    }
+
+    #[test]
+    fn batch_spec_is_t0_closed_loop() {
+        let a = ArrivalSpec::Batch.build(16, 1024, 3).unwrap();
+        let w = longtail_workload(16, 1024, 3);
+        assert_eq!(a.len(), 16);
+        for (x, r) in a.iter().zip(&w) {
+            assert_eq!(x.t, 0.0);
+            assert_eq!(x.tenant, 0);
+            assert_eq!(x.req.output_len, r.output_len);
+        }
+    }
+
+    #[test]
+    fn spec_parse_round_trips_and_rejects_nonsense() {
+        assert_eq!(ArrivalSpec::parse("batch").unwrap(), ArrivalSpec::Batch);
+        assert_eq!(
+            ArrivalSpec::parse("poisson:2.5").unwrap(),
+            ArrivalSpec::Poisson { rate: 2.5 }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("bursty:8,0.5,0.15").unwrap(),
+            ArrivalSpec::Bursty { rate_hi: 8.0, rate_lo: 0.5, flip: 0.15 }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("diurnal:2,0.8,8").unwrap(),
+            ArrivalSpec::Diurnal { base: 2.0, amp: 0.8, period: 8.0 }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("trace:/tmp/x.jsonl").unwrap(),
+            ArrivalSpec::Trace { path: PathBuf::from("/tmp/x.jsonl") }
+        );
+        for bad in [
+            "poisson", "poisson:0", "poisson:-1", "poisson:nope", "bursty:1,2",
+            "bursty:0,1,0.5", "bursty:1,1,0", "diurnal:1,1.5,8", "diurnal:1,0.5,0",
+            "trace:", "fancy:1", "batch:now",
+        ] {
+            assert!(ArrivalSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        assert!(!ArrivalSpec::Batch.is_open_loop());
+        assert!(ArrivalSpec::Poisson { rate: 1.0 }.is_open_loop());
+    }
+}

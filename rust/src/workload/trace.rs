@@ -1,0 +1,260 @@
+//! Multi-tenant JSONL trace format: one `{t, tenant, prompt_len, cap}`
+//! object per line, timestamps non-decreasing.
+//!
+//! The trace carries *observable* request facts only — arrival time,
+//! tenant, prompt length, generation cap.  Output lengths are NOT in the
+//! trace (a serving log doesn't know them up front either); replay draws
+//! them from the shared [`LengthProfile`] using one Pcg64 stream per
+//! tenant, so a tenant's sampled lengths depend only on `(seed, tenant,
+//! event-order-within-tenant)` — never on how other tenants interleave.
+//!
+//! `emit_trace` is canonical (fixed key order, shortest-round-trip f64
+//! formatting), so `emit(parse(emit(events)))` is byte-identical — CI
+//! pins that.
+
+use super::{
+    take, Arrival, ArrivalProcess, LengthProfile, TRACE_GEN_STREAM, TRACE_REPLAY_STREAM,
+};
+use crate::sim::SimRequest;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::fmt::Write as _;
+
+/// One trace line: a request with `prompt_len` tokens from `tenant`
+/// arriving at `t` (simulated seconds) with generation cap `cap`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub tenant: usize,
+    pub prompt_len: usize,
+    pub cap: usize,
+}
+
+/// Canonical JSONL emit.  f64 `Display` prints the shortest string that
+/// round-trips, so parse → re-emit reproduces the bytes exactly.
+pub fn emit_trace(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 48);
+    for e in events {
+        let _ = writeln!(
+            out,
+            "{{\"t\":{},\"tenant\":{},\"prompt_len\":{},\"cap\":{}}}",
+            e.t, e.tenant, e.prompt_len, e.cap
+        );
+    }
+    out
+}
+
+/// Parse a JSONL trace.  Rejects malformed lines, missing or non-integer
+/// fields, zero lengths/caps, and out-of-order timestamps.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut events = Vec::new();
+    let mut prev_t = f64::NEG_INFINITY;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let n = ln + 1;
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line {n}: {e}"))?;
+        let field = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("trace line {n}: missing number field {key:?}"))
+        };
+        let int_field = |key: &str| -> Result<usize> {
+            let v = field(key)?;
+            if v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+                bail!("trace line {n}: {key} must be a non-negative integer, got {v}");
+            }
+            Ok(v as usize)
+        };
+        let t = field("t")?;
+        if !t.is_finite() || t < 0.0 {
+            bail!("trace line {n}: t must be finite and >= 0, got {t}");
+        }
+        if t < prev_t {
+            bail!("trace line {n}: timestamps must be non-decreasing ({t} < {prev_t})");
+        }
+        prev_t = t;
+        let ev = TraceEvent {
+            t,
+            tenant: int_field("tenant")?,
+            prompt_len: int_field("prompt_len")?,
+            cap: int_field("cap")?,
+        };
+        if ev.prompt_len == 0 || ev.cap == 0 {
+            bail!("trace line {n}: prompt_len and cap must be >= 1");
+        }
+        events.push(ev);
+    }
+    Ok(events)
+}
+
+/// Generate a synthetic multi-tenant trace: `tenants` independent
+/// Poisson streams over `[0, horizon]` whose rates sum to `rate` and
+/// split ∝ `1/(i+1)` (tenant 0 heaviest), each with its own length mix —
+/// tenant `i` prompts start at `64 * (1 + i % 3)` tokens and its cap
+/// alternates between `cap` and `cap / 2`.  Per-tenant Pcg64 streams
+/// (`0x7E00 + i`) make every tenant's sub-trace independent of the
+/// tenant count.
+pub fn generate_trace(tenants: usize, rate: f64, horizon: f64, cap: usize, seed: u64) -> Vec<TraceEvent> {
+    assert!(tenants > 0, "need at least one tenant");
+    assert!(rate > 0.0 && horizon > 0.0, "rate and horizon must be > 0");
+    let weight_sum: f64 = (0..tenants).map(|i| 1.0 / (i + 1) as f64).sum();
+    let mut events: Vec<TraceEvent> = Vec::new();
+    for i in 0..tenants {
+        let tenant_rate = rate * (1.0 / (i + 1) as f64) / weight_sum;
+        let mut rng = Pcg64::with_stream(seed, TRACE_GEN_STREAM + i as u64);
+        let mut profile = LengthProfile::longtail();
+        profile.prompt_base = 64 * (1 + i % 3);
+        let tenant_cap = (cap >> (i % 2)).max(profile.min_len);
+        let mut t = 0.0;
+        loop {
+            t += -(1.0 - rng.uniform_f64()).ln() / tenant_rate;
+            if t > horizon {
+                break;
+            }
+            events.push(TraceEvent {
+                t,
+                tenant: i,
+                prompt_len: profile.prompt_len(&mut rng),
+                cap: tenant_cap,
+            });
+        }
+    }
+    events.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.tenant.cmp(&b.tenant)));
+    events
+}
+
+/// Replay source over a parsed trace: finite [`ArrivalProcess`] that
+/// draws each event's output length from the tenant's own Pcg64 stream.
+pub struct TraceReplay {
+    events: Vec<TraceEvent>,
+    idx: usize,
+    rngs: Vec<Pcg64>,
+    profile: LengthProfile,
+}
+
+impl TraceReplay {
+    pub fn new(events: &[TraceEvent], seed: u64) -> Self {
+        let tenants = events.iter().map(|e| e.tenant + 1).max().unwrap_or(0);
+        TraceReplay {
+            events: events.to_vec(),
+            idx: 0,
+            rngs: (0..tenants)
+                .map(|i| Pcg64::with_stream(seed, TRACE_REPLAY_STREAM + i as u64))
+                .collect(),
+            profile: LengthProfile::longtail(),
+        }
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.rngs.len()
+    }
+}
+
+impl ArrivalProcess for TraceReplay {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        let e = *self.events.get(self.idx)?;
+        let id = self.idx;
+        self.idx += 1;
+        let output_len = self.profile.output_len(e.cap, &mut self.rngs[e.tenant]);
+        Some(Arrival {
+            t: e.t,
+            tenant: e.tenant,
+            req: SimRequest { id, prompt_len: e.prompt_len, output_len },
+        })
+    }
+}
+
+/// Replay a whole trace into a materialized arrival vector (request ids
+/// are trace-line indices).
+pub fn replay_trace(events: &[TraceEvent], seed: u64) -> Vec<Arrival> {
+    let mut r = TraceReplay::new(events, seed);
+    take(&mut r, events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_is_byte_identical() {
+        let events = generate_trace(3, 6.0, 25.0, 2048, 11);
+        assert!(!events.is_empty());
+        let text = emit_trace(&events);
+        let parsed = parse_trace(&text).unwrap();
+        assert_eq!(parsed.len(), events.len());
+        for (a, b) in parsed.iter().zip(&events) {
+            assert_eq!(a.t.to_bits(), b.t.to_bits());
+            assert_eq!((a.tenant, a.prompt_len, a.cap), (b.tenant, b.prompt_len, b.cap));
+        }
+        assert_eq!(emit_trace(&parsed), text, "re-emit must reproduce bytes");
+    }
+
+    #[test]
+    fn generated_traces_are_sorted_weighted_and_deterministic() {
+        let a = generate_trace(3, 6.0, 40.0, 2048, 11);
+        let b = generate_trace(3, 6.0, 40.0, 2048, 11);
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+        let count = |k: usize| a.iter().filter(|e| e.tenant == k).count();
+        // rates split 1 : 1/2 : 1/3 — tenant 0 strictly heaviest over a
+        // 40 s horizon at 6 req/s (~130 events for tenant 0 alone)
+        assert!(count(0) > count(1) && count(1) > count(2), "counts {:?}", (count(0), count(1), count(2)));
+        // per-tenant length mixes: caps alternate full/half
+        assert!(a.iter().filter(|e| e.tenant == 0).all(|e| e.cap == 2048));
+        assert!(a.iter().filter(|e| e.tenant == 1).all(|e| e.cap == 1024));
+        assert!(a.iter().all(|e| e.t <= 40.0 && e.prompt_len >= 64));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        for bad in [
+            "not json",
+            "{\"t\":1,\"tenant\":0,\"prompt_len\":8}",          // missing cap
+            "{\"t\":1,\"tenant\":0,\"prompt_len\":0,\"cap\":4}", // zero prompt
+            "{\"t\":1,\"tenant\":-1,\"prompt_len\":8,\"cap\":4}", // negative tenant
+            "{\"t\":1,\"tenant\":0.5,\"prompt_len\":8,\"cap\":4}", // fractional tenant
+            "{\"t\":-1,\"tenant\":0,\"prompt_len\":8,\"cap\":4}", // negative t
+            "{\"t\":2,\"tenant\":0,\"prompt_len\":8,\"cap\":4}\n{\"t\":1,\"tenant\":0,\"prompt_len\":8,\"cap\":4}", // decreasing t
+        ] {
+            assert!(parse_trace(bad).is_err(), "accepted {bad:?}");
+        }
+        // blank lines are fine
+        let ok = "\n{\"t\":1,\"tenant\":0,\"prompt_len\":8,\"cap\":4}\n\n";
+        assert_eq!(parse_trace(ok).unwrap().len(), 1);
+    }
+
+    /// Per-tenant stream splitting: replaying only tenant 1's events
+    /// yields the same output lengths that tenant 1 got in the full
+    /// multi-tenant replay — lengths never depend on interleaving.
+    #[test]
+    fn replay_streams_are_tenant_independent() {
+        let events = generate_trace(3, 8.0, 30.0, 2048, 5);
+        let full = replay_trace(&events, 99);
+        assert_eq!(full.len(), events.len());
+        for (i, (a, e)) in full.iter().zip(&events).enumerate() {
+            assert_eq!(a.req.id, i);
+            assert_eq!(a.t.to_bits(), e.t.to_bits());
+            assert_eq!(a.req.prompt_len, e.prompt_len);
+            assert!(a.req.output_len <= e.cap);
+        }
+        let only1: Vec<TraceEvent> = events.iter().copied().filter(|e| e.tenant == 1).collect();
+        let solo = replay_trace(&only1, 99);
+        let full1: Vec<usize> = full
+            .iter()
+            .filter(|a| a.tenant == 1)
+            .map(|a| a.req.output_len)
+            .collect();
+        let solo1: Vec<usize> = solo.iter().map(|a| a.req.output_len).collect();
+        assert_eq!(full1, solo1);
+    }
+}

@@ -24,10 +24,12 @@ use sortedrl::rollout::kv::{KvConfig, KvMode};
 use sortedrl::sched::harness::{HarnessDispatch, TokenBackend, HARNESS_PROMPT};
 use sortedrl::sched::policy::{drive_traced, make_policy_full, PolicyParams, ScheduleBackend};
 use sortedrl::sim::{
-    longtail_workload, simulate_pool_opts, CostModel, PoolSimOpts, SimCore, SimMode, SimReport,
+    longtail_workload, simulate_pool_arrivals, simulate_pool_opts, CostModel, PoolSimOpts,
+    SimCore, SimMode, SimReport,
 };
 use sortedrl::trace::{SpanOutcome, Tracer};
 use sortedrl::util::proptest::{property, Gen};
+use sortedrl::workload::Arrival;
 
 const MAX_LEN: usize = 24;
 
@@ -216,6 +218,51 @@ fn fuzz_cross_core_once(g: &mut Gen) {
     assert_cores_agree(&ev, &rf, &ctx);
 }
 
+/// Open-loop cross-core differential: the same fuzzed workload wrapped in
+/// a dyadic arrival stream (gaps are multiples of 0.25, ZERO included so
+/// simultaneous arrivals exercise the heap tie rule — engines win ties
+/// against the arrival pseudo-index, matching the reference core's strict
+/// `t < min clock` delivery gate) must still be bitwise-indistinguishable
+/// between the event core and the tick stepper.
+fn fuzz_open_loop_cross_core_once(g: &mut Gen) {
+    let n = g.usize_in(16..80);
+    let cap = g.usize_in(64..512);
+    let engines = g.usize_in(1..5);
+    let q_total = engines * g.usize_in(2..9);
+    let tenants = g.usize_in(1..5);
+    let mode = *g.pick(&[SimMode::Baseline, SimMode::SortedOnPolicy,
+                         SimMode::SortedPartial, SimMode::Async]);
+    let base = PoolSimOpts {
+        engines,
+        q_total,
+        update_batch: g.usize_in(4..33),
+        cost: dyadic_cost(),
+        dispatch: *g.pick(&sortedrl::sched::DispatchPolicy::ALL),
+        predictor: *g.pick(&sortedrl::sched::PredictorKind::ALL),
+        steal: g.bool(),
+        kv_budget: if g.bool() { usize::MAX } else { (cap + 512) * g.usize_in(1..4) },
+        kv_mode: if g.bool() { KvMode::Reserve } else { KvMode::Paged },
+        kv_page: g.usize_in(1..257),
+        ..PoolSimOpts::default()
+    };
+    let w = longtail_workload(n, cap, g.usize_in(0..1_000_000) as u64);
+    let mut t = 0.0f64;
+    let arrivals: Vec<Arrival> = w
+        .iter()
+        .map(|&req| {
+            t += g.usize_in(0..8) as f64 * 0.25;
+            Arrival { t, tenant: req.id % tenants, req }
+        })
+        .collect();
+    let ctx = format!("open-loop {mode:?} tenants={tenants} {base:?}");
+    let ev = simulate_pool_arrivals(mode, &arrivals, PoolSimOpts { core: SimCore::Event, ..base });
+    let rf =
+        simulate_pool_arrivals(mode, &arrivals, PoolSimOpts { core: SimCore::Reference, ..base });
+    assert_cores_agree(&ev, &rf, &ctx);
+    assert_eq!(ev.timeline.finished() as usize + ev.clipped + ev.dropped, n,
+               "open-loop request conservation violated: {ctx}");
+}
+
 /// The CI-tier fuzz pass: 200 seeded iterations on the token backend plus
 /// 60 on the simulator backend (fixed seeds — `util::proptest` derives
 /// them from the property name, so failures replay exactly).
@@ -234,6 +281,11 @@ fn policy_fuzz_cross_core_differential() {
     property("policy fuzz (event vs reference core)", 60, fuzz_cross_core_once);
 }
 
+#[test]
+fn policy_fuzz_open_loop_cross_core() {
+    property("policy fuzz (open-loop event vs reference)", 40, fuzz_open_loop_cross_core_once);
+}
+
 /// Nightly-tier long sweep: same properties, ~10x the iterations.
 /// Run with `cargo test --release -- --ignored`.
 #[test]
@@ -242,4 +294,6 @@ fn policy_fuzz_long_sweep() {
     property("policy fuzz long (token backend)", 2000, fuzz_token_backend_once);
     property("policy fuzz long (sim backend)", 500, fuzz_sim_backend_once);
     property("policy fuzz long (event vs reference core)", 500, fuzz_cross_core_once);
+    property("policy fuzz long (open-loop event vs reference)", 300,
+             fuzz_open_loop_cross_core_once);
 }
