@@ -1,4 +1,4 @@
-//! Stateful rollout buffer (paper §3.3).
+//! Stateful rollout buffer (paper §3.3) — the staleness-aware cache.
 //!
 //! Each entry tracks one prompt's in-progress sample through its lifecycle:
 //! prompt context, current partial trajectory, the behavior-policy
@@ -6,6 +6,16 @@
 //! indicator deciding when the entry is cleared.  The controller's
 //! cache-aware loading rule ("no new prompts until all cached prompts are
 //! consumed", §3.1) is enforced here via [`RolloutBuffer::all_consumed`].
+//!
+//! The paper's cache-based off-policy-degree control lives here too: every
+//! entry carries the weights version stamped on its lane at dispatch
+//! ([`RolloutBuffer::dispatch_stamped`]) alongside the version that
+//! sampled its first token, so per-sample version deltas are exact, and
+//! [`RolloutBuffer::consume_bounded`] enforces the `--staleness` hard cap
+//! at CONSUME time — a sample older than the cap never reaches the
+//! trainer, regardless of what the phase machine decided.  First
+//! violation: the sample is re-synced (partial discarded, regenerated
+//! under current weights); second: dropped untrained.
 
 use crate::rollout::{Request, Rollout};
 use std::collections::BTreeMap;
@@ -39,6 +49,15 @@ pub struct BufferEntry {
     pub lifecycle: Lifecycle,
     pub born_version: Option<u64>,
     pub finish_version: u64,
+    /// Trainer weights version current when this entry was last dispatched
+    /// into a lane ([`RolloutBuffer::dispatch_stamped`]).  `born_version`
+    /// is only set once a token is sampled; the dispatch stamp covers the
+    /// gap so staleness accounting never has to infer.
+    pub dispatch_version: Option<u64>,
+    /// Times this entry was bounced by the consume-time staleness cap
+    /// ([`RolloutBuffer::consume_bounded`]): 0 = never, 1 = re-synced
+    /// once (a second violation drops it).
+    pub stale_resyncs: u32,
     pub resumes: u32,
     pub max_new: usize,
     /// Engine-clock time when the entry became Ready (length proxy).
@@ -54,6 +73,17 @@ pub enum Mode {
     OnPolicy,
     /// Partial: keep tokens + log-probs, resume under the new policy.
     Partial,
+}
+
+/// Result of a [`RolloutBuffer::consume_bounded`] harvest: the entries the
+/// trainer may actually see, plus the rids bounced by the staleness cap
+/// (re-synced back to schedulable, or dropped untrained on a repeat
+/// violation).  `entries` preserves the caller's rid order.
+#[derive(Debug, Default)]
+pub struct BoundedConsume {
+    pub entries: Vec<BufferEntry>,
+    pub resynced: Vec<u64>,
+    pub dropped: Vec<u64>,
 }
 
 #[derive(Debug, Default)]
@@ -99,6 +129,8 @@ impl RolloutBuffer {
             lifecycle: Lifecycle::Fresh,
             born_version: None,
             finish_version: 0,
+            dispatch_version: None,
+            stale_resyncs: 0,
             resumes: 0,
             max_new,
             finished_at: 0.0,
@@ -142,6 +174,20 @@ impl RolloutBuffer {
                 }
             })
             .collect()
+    }
+
+    /// [`RolloutBuffer::dispatch`] plus an exact version stamp: the
+    /// trainer's current weights version is recorded on every lane at
+    /// dispatch time, so an entry's off-policy delta is known even before
+    /// (or without) its first sampled token.
+    pub fn dispatch_stamped(&mut self, rids: &[u64], version: u64) -> Vec<Request> {
+        for rid in rids {
+            self.entries
+                .get_mut(rid)
+                .expect("dispatch unknown rid")
+                .dispatch_version = Some(version);
+        }
+        self.dispatch(rids)
     }
 
     /// Record a scheduler-CLIPPED rollout -> Ready (trained as-is, truncated).
@@ -245,6 +291,68 @@ impl RolloutBuffer {
                 e.clone()
             })
             .collect()
+    }
+
+    /// Exact off-policy staleness this entry would have if consumed by an
+    /// update entering at `train_version` (see [`crate::rl::staleness`]).
+    /// The birth version falls back through the dispatch stamp to the
+    /// finish version, so entries that never sampled a token still report
+    /// an exact (not inferred) delta.
+    pub fn staleness_at(&self, rid: u64, train_version: u64) -> Option<u64> {
+        self.entries.get(&rid).map(|e| {
+            let born = e.born_version.or(e.dispatch_version).unwrap_or(e.finish_version);
+            crate::rl::staleness(train_version, born)
+        })
+    }
+
+    /// [`RolloutBuffer::consume`] under the `--staleness` hard cap: entries
+    /// whose version delta against `train_version` is within `cap` are
+    /// consumed for training; over-stale entries never reach the trainer.
+    /// The first violation re-syncs the entry (partial discarded, back to
+    /// schedulable — it regenerates under the current weights); a repeat
+    /// violation drops it untrained, so a perpetually-unlucky sample
+    /// cannot livelock the group.  `cap: None` = no bound (identical to
+    /// [`RolloutBuffer::consume`]).
+    pub fn consume_bounded(&mut self, rids: &[u64], train_version: u64,
+                           cap: Option<u64>) -> BoundedConsume {
+        let Some(cap) = cap else {
+            return BoundedConsume {
+                entries: self.consume(rids),
+                resynced: Vec::new(),
+                dropped: Vec::new(),
+            };
+        };
+        let mut out = BoundedConsume {
+            entries: Vec::new(),
+            resynced: Vec::new(),
+            dropped: Vec::new(),
+        };
+        for rid in rids {
+            let e = self.entries.get_mut(rid).expect("consume unknown rid");
+            assert_eq!(e.lifecycle, Lifecycle::Ready, "consume non-ready {rid}");
+            let born = e.born_version.or(e.dispatch_version).unwrap_or(e.finish_version);
+            if crate::rl::staleness(train_version, born) <= cap {
+                e.lifecycle = Lifecycle::Consumed;
+                out.entries.push(e.clone());
+            } else if e.stale_resyncs == 0 {
+                // first violation: regenerate under the current weights
+                e.stale_resyncs = 1;
+                e.partial.clear();
+                e.partial_logp.clear();
+                e.complete = false;
+                e.clipped = false;
+                e.born_version = None;
+                e.dispatch_version = None;
+                e.finished_at = 0.0;
+                e.lifecycle = Lifecycle::Scavenged;
+                out.resynced.push(*rid);
+            } else {
+                // repeat offender: drop untrained (bounded retries)
+                e.lifecycle = Lifecycle::Consumed;
+                out.dropped.push(*rid);
+            }
+        }
+        out
     }
 
     /// The grouped-rollout barrier: true when every loaded prompt has been
@@ -398,6 +506,84 @@ mod tests {
         buf.dispatch(&[b]);
         buf.record_finished(&rollout(b, vec![2], true, 2.0));
         buf.consume(&[b]);
+        assert!(buf.all_consumed());
+    }
+
+    #[test]
+    fn dispatch_stamped_records_version() {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 7, vec![1, 2], 64);
+        assert_eq!(buf.get(rid).unwrap().dispatch_version, None);
+        buf.dispatch_stamped(&[rid], 9);
+        assert_eq!(buf.get(rid).unwrap().dispatch_version, Some(9));
+        // fall back to the stamp when no token was ever sampled: a rollout
+        // with born_version None leaves the dispatch stamp as the birth
+        let mut r = rollout(rid, vec![], false, 1.0);
+        r.request.born_version = None;
+        buf.record_terminated(&r, Mode::Partial);
+        assert_eq!(buf.staleness_at(rid, 11), Some(2));
+    }
+
+    #[test]
+    fn bounded_consume_within_cap_is_plain_consume() {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 7, vec![1, 2], 64);
+        buf.dispatch_stamped(&[rid], 3);
+        buf.record_finished(&rollout(rid, vec![5, 6], true, 1.0));
+        // born at 3, update enters at 5 -> staleness 2, cap 2: consumed
+        let out = buf.consume_bounded(&[rid], 5, Some(2));
+        assert_eq!(out.entries.len(), 1);
+        assert!(out.resynced.is_empty() && out.dropped.is_empty());
+        assert!(buf.all_consumed());
+    }
+
+    #[test]
+    fn bounded_consume_resyncs_first_violation() {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 7, vec![1, 2], 64);
+        buf.dispatch_stamped(&[rid], 3);
+        buf.record_finished(&rollout(rid, vec![5, 6], true, 1.0));
+        // born at 3, update enters at 6 -> staleness 3 > cap 2: re-sync
+        let out = buf.consume_bounded(&[rid], 6, Some(2));
+        assert!(out.entries.is_empty() && out.dropped.is_empty());
+        assert_eq!(out.resynced, vec![rid]);
+        let e = buf.get(rid).unwrap();
+        assert_eq!(e.lifecycle, Lifecycle::Scavenged);
+        assert!(e.partial.is_empty(), "re-sync discards the stale tokens");
+        assert_eq!(e.born_version, None);
+        assert_eq!(e.stale_resyncs, 1);
+        assert_eq!(buf.schedulable(), vec![rid], "re-synced entry regenerates");
+    }
+
+    #[test]
+    fn bounded_consume_drops_second_violation() {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 7, vec![1, 2], 64);
+        buf.dispatch_stamped(&[rid], 3);
+        buf.record_finished(&rollout(rid, vec![5, 6], true, 1.0));
+        buf.consume_bounded(&[rid], 6, Some(2)); // first violation: re-sync
+        buf.dispatch_stamped(&[rid], 6);
+        let mut r = rollout(rid, vec![7], true, 2.0);
+        r.request.born_version = Some(6);
+        r.finish_version = 6;
+        buf.record_finished(&r);
+        // stale again (entered at 9, born 6, cap 2): dropped untrained
+        let out = buf.consume_bounded(&[rid], 9, Some(2));
+        assert!(out.entries.is_empty() && out.resynced.is_empty());
+        assert_eq!(out.dropped, vec![rid]);
+        assert!(buf.all_consumed(), "dropped entries still clear the barrier");
+    }
+
+    #[test]
+    fn bounded_consume_no_cap_matches_consume() {
+        let mut buf = RolloutBuffer::new();
+        let rid = buf.load_prompt(0, 7, vec![1, 2], 64);
+        buf.dispatch_stamped(&[rid], 0);
+        buf.record_finished(&rollout(rid, vec![5], true, 1.0));
+        // arbitrarily stale (born 3, entered 1000) but cap None: trained
+        let out = buf.consume_bounded(&[rid], 1_000, None);
+        assert_eq!(out.entries.len(), 1);
+        assert_eq!(out.entries[0].partial, vec![5]);
         assert!(buf.all_consumed());
     }
 

@@ -19,8 +19,9 @@
 //!   * `AsyncUpdate` — trainer updates overlap continued decoding (no
 //!     harvest barrier; bounded staleness via periodic partial re-sync)
 
-use crate::coordinator::buffer::{Lifecycle, Mode, RolloutBuffer};
-use crate::coordinator::trainer::{Trainer, UpdateLog};
+use crate::coordinator::buffer::{BufferEntry, Lifecycle, Mode, RolloutBuffer};
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::trainer::{entry_staleness, Trainer, UpdateLog};
 use crate::data::{DataLoader, Dataset};
 use crate::metrics::{bubble_fraction, PhaseClock};
 use crate::rl::advantage::AdvantageKind;
@@ -28,7 +29,7 @@ use crate::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE};
 use crate::rollout::{EngineConfig, Rollout};
 use crate::runtime::{ParamState, Runtime};
 use crate::sched::policy::{
-    drive_traced, make_policy_full, EngineLoad, HarvestAction, HarvestItem, LaneView,
+    drive_traced, make_policy_staleness, EngineLoad, HarvestAction, HarvestItem, LaneView,
     PolicyParams, SchedView, ScheduleBackend,
 };
 use crate::sched::{DispatchPolicy, EnginePool, PoolConfig, PredictorKind};
@@ -140,6 +141,14 @@ pub struct LoopConfig {
     /// End-to-end latency SLO in *milliseconds* (host wall clock); enables
     /// per-request span recording and the goodput column in `RunResult::slo`.
     pub slo_ms: Option<f64>,
+    /// Off-policy-degree hard cap (`--staleness N`): no sample older than
+    /// N trainer updates is ever consumed for training — over-stale
+    /// samples are re-synced (regenerated under current weights) once and
+    /// dropped on a repeat violation.  For the async scheduler N also
+    /// becomes the periodic re-sync window (`ASYNC_SYNC_EVERY` is only
+    /// the derived default when unset).  `None` = legacy behavior: no
+    /// consume-time cap, default sync window.
+    pub staleness: Option<usize>,
 }
 
 impl Default for LoopConfig {
@@ -168,6 +177,7 @@ impl Default for LoopConfig {
             kv_page: DEFAULT_KV_PAGE,
             trace_out: None,
             slo_ms: None,
+            staleness: None,
         }
     }
 }
@@ -204,6 +214,17 @@ pub struct RunResult {
     /// TTFT/TPOT/e2e quantiles + goodput, present iff tracing was enabled
     /// (`LoopConfig::trace_out` or `LoopConfig::slo_ms`).
     pub slo: Option<SloSummary>,
+    /// Per-sample off-policy staleness of every TRAINED sample, measured
+    /// at consume time against the version entering its update
+    /// (staleness value -> count).  Exact, not inferred: versions are
+    /// stamped on lanes at dispatch and samples at harvest.
+    pub staleness_hist: BTreeMap<u64, u64>,
+    /// Max key of `staleness_hist` (0 for an empty run) — with
+    /// `--staleness N` this is provably <= N.
+    pub max_staleness: u64,
+    /// Samples bounced by the `--staleness` cap and regenerated under
+    /// fresh weights (cap-dropped samples count into `discarded`).
+    pub stale_resyncs: u64,
 }
 
 pub struct Controller<'rt> {
@@ -376,6 +397,14 @@ impl<'rt> Controller<'rt> {
     /// Run the configured scheduler through the unified policy driver.
     /// The decision sequence comes from `sched::policy`; this method only
     /// wires the live backend together and aggregates the outcome.
+    ///
+    /// The async scheduler gets a true second thread: the trainer runs on
+    /// a scoped worker connected by a bounded channel ([`Pipeline`]),
+    /// owning the MASTER weights, while this thread keeps stepping the
+    /// engine pool on a SERVING snapshot that lags by at most one update.
+    /// Every other scheduler keeps the serial generate-then-train loop
+    /// (their semantics have a harvest barrier anyway, so a second thread
+    /// would only ever idle).
     pub fn run(&mut self, state: &mut ParamState) -> Result<RunResult> {
         let train_secs_at_start = self.rt.stats_snapshot().train_secs;
         let params = PolicyParams {
@@ -383,11 +412,11 @@ impl<'rt> Controller<'rt> {
             entries_per_prompt: self.cfg.samples_per_prompt.max(1),
             update_batch: self.cfg.update_batch.max(1),
         };
-        let mut policy = make_policy_full(self.cfg.scheduler, params, self.cfg.steal,
-                                          self.cfg.kv_mode == KvMode::Paged);
+        let mut policy = make_policy_staleness(self.cfg.scheduler, params, self.cfg.steal,
+                                               self.cfg.kv_mode == KvMode::Paged,
+                                               self.cfg.staleness);
         let preempt = self.cfg.scheduler.resumes_partials();
         let pool = self.make_pool(false, preempt);
-        let trainer = Trainer::new(self.rt, self.cfg.adv, self.cfg.lr);
         let max_updates = self.cfg.max_updates;
         let trace_out = self.cfg.trace_out.clone();
         let slo_secs = self.cfg.slo_ms.map(|ms| ms / 1000.0);
@@ -397,17 +426,75 @@ impl<'rt> Controller<'rt> {
         } else {
             Tracer::disabled()
         };
-        let mut backend = LiveBackend {
-            ctl: self,
-            state,
-            pool,
-            trainer,
-            rows: Vec::new(),
-            stash: BTreeMap::new(),
-            max_updates,
+        let cap = self.cfg.staleness.map(|n| n as u64);
+        let threaded = self.cfg.scheduler == SchedulerKind::AsyncUpdate;
+        let rt = self.rt;
+        let (adv, lr) = (self.cfg.adv, self.cfg.lr);
+
+        type DriveOut<'rt> = (EnginePool<'rt>, Vec<LogRow>, BTreeMap<u64, u64>, u64);
+        // explicit reborrow: the drive borrows the serving state only for
+        // the branch below, leaving `state` free for the final eval
+        let serving = &mut *state;
+        let (pool, rows, staleness_hist, stale_resyncs) = if threaded {
+            std::thread::scope(|scope| -> Result<DriveOut<'rt>> {
+                // the worker owns the trainer + master weights; each
+                // completed update ships a serving snapshot back
+                let mut trainer = Trainer::new(rt, adv, lr);
+                let mut master = serving.clone();
+                let pipeline = Pipeline::spawn(scope, move |(entries, rewards): TrainJob| {
+                    trainer
+                        .update(&mut master, &entries, &rewards)
+                        .map(|log| (master.clone(), log))
+                });
+                let mut backend = LiveBackend {
+                    ctl: &mut *self,
+                    state: serving,
+                    pool,
+                    trainer: None,
+                    pipeline: Some(pipeline),
+                    staleness_cap: cap,
+                    issued: 0,
+                    last_staleness: BTreeMap::new(),
+                    staleness_hist: BTreeMap::new(),
+                    stale_resyncs: 0,
+                    rows: Vec::new(),
+                    stash: BTreeMap::new(),
+                    max_updates,
+                };
+                let driven = drive_traced(policy.as_mut(), &mut backend, &mut tracer);
+                // drain the worker even on a driver error — the final
+                // in-flight update must install before the scope ends
+                let flushed = backend.flush();
+                driven?;
+                flushed?;
+                let LiveBackend {
+                    pool, rows, staleness_hist, stale_resyncs, pipeline, ..
+                } = backend;
+                if let Some(p) = pipeline {
+                    p.shutdown(); // empty — flush() drained it — but joins
+                }
+                Ok((pool, rows, staleness_hist, stale_resyncs))
+            })?
+        } else {
+            let mut backend = LiveBackend {
+                ctl: &mut *self,
+                state: serving,
+                pool,
+                trainer: Some(Trainer::new(rt, adv, lr)),
+                pipeline: None,
+                staleness_cap: cap,
+                issued: 0,
+                last_staleness: BTreeMap::new(),
+                staleness_hist: BTreeMap::new(),
+                stale_resyncs: 0,
+                rows: Vec::new(),
+                stash: BTreeMap::new(),
+                max_updates,
+            };
+            drive_traced(policy.as_mut(), &mut backend, &mut tracer)?;
+            let LiveBackend { pool, rows, staleness_hist, stale_resyncs, .. } = backend;
+            (pool, rows, staleness_hist, stale_resyncs)
         };
-        drive_traced(policy.as_mut(), &mut backend, &mut tracer)?;
-        let LiveBackend { pool, rows, .. } = backend;
 
         let slo = if tracer.enabled() {
             let summary = tracer.slo_summary();
@@ -435,6 +522,7 @@ impl<'rt> Controller<'rt> {
             update: self.rt.stats_snapshot().train_secs - train_secs_at_start,
         };
         let final_eval = self.evaluate(state)?;
+        let max_staleness = staleness_hist.keys().next_back().copied().unwrap_or(0);
         Ok(RunResult {
             rows,
             final_eval,
@@ -443,6 +531,9 @@ impl<'rt> Controller<'rt> {
             total_rollout_tokens: self.rollout_tokens,
             discarded: self.discarded,
             slo,
+            staleness_hist,
+            max_staleness,
+            stale_resyncs,
         })
     }
 
@@ -477,14 +568,45 @@ impl<'rt> Controller<'rt> {
     }
 }
 
+/// A trainer-thread job: the consumed (cap-cleared) entries + their
+/// rewards, graded on the main thread so the worker only runs train_step.
+type TrainJob = (Vec<BufferEntry>, Vec<Reward>);
+/// What comes back: the post-update master weights snapshot (installed as
+/// the serving state at the next hand-off point) and the update's log row.
+type TrainOut = Result<(ParamState, UpdateLog)>;
+
 /// The live `ScheduleBackend`: `EnginePool` + `RolloutBuffer` + `Trainer`
 /// + `Runtime`, exposed to the generic policy driver.  The simulator mirror
 /// is `sim::SimBackend`; both execute the same decision vocabulary.
-struct LiveBackend<'a, 'rt> {
+///
+/// Two training modes share this backend: serial (`trainer: Some`, every
+/// `train` call blocks through train_step) and pipelined (`pipeline:
+/// Some`, `train` hands the batch to the worker thread and returns so the
+/// pool keeps decoding; the result installs at the NEXT `train` call — at
+/// most one update in flight).
+struct LiveBackend<'a, 'scope, 'rt> {
     ctl: &'a mut Controller<'rt>,
+    /// SERVING weights: what the engine pool decodes with.  In pipelined
+    /// mode this lags the worker's master copy by at most one update.
     state: &'a mut ParamState,
     pool: EnginePool<'rt>,
-    trainer: Trainer<'rt>,
+    /// Serial path only; `None` when the trainer moved into the worker.
+    trainer: Option<Trainer<'rt>>,
+    /// Pipelined path only: the bounded-channel hand-off to the worker.
+    pipeline: Option<Pipeline<'scope, TrainJob, TrainOut>>,
+    /// `--staleness` consume-time cap (None = unbounded).
+    staleness_cap: Option<u64>,
+    /// Logical updates ISSUED (== installed + in-flight).  The policy's
+    /// update budget counts issues so the final in-flight update is never
+    /// double-scheduled during drain.
+    issued: usize,
+    /// rid -> staleness of the most recent `train` call's consumed
+    /// samples (the `staleness_of` tap the tracer reads).
+    last_staleness: BTreeMap<u64, u64>,
+    /// staleness value -> trained-sample count, whole run.
+    staleness_hist: BTreeMap<u64, u64>,
+    /// Samples bounced once by the cap and regenerated.
+    stale_resyncs: u64,
     rows: Vec<LogRow>,
     /// Partial rollouts from the current harvest, keyed by rid, so
     /// `resolve` can route tokens + log-probs into the buffer.
@@ -492,7 +614,38 @@ struct LiveBackend<'a, 'rt> {
     max_updates: usize,
 }
 
-impl ScheduleBackend for LiveBackend<'_, '_> {
+impl LiveBackend<'_, '_, '_> {
+    fn record_update_log(&mut self, log: UpdateLog) -> Result<()> {
+        let secs = self.pool.host_secs();
+        // cumulative pool tokens NOW, not the end-of-run absorbed total —
+        // rows must grow monotonically for the sample-efficiency curves
+        let tokens = self.ctl.rollout_tokens + self.pool.tokens_out();
+        let mut rows = std::mem::take(&mut self.rows);
+        self.ctl.log_update(&mut rows, self.state, log, secs, tokens)?;
+        self.rows = rows;
+        Ok(())
+    }
+
+    /// Install one completed worker update: its master snapshot becomes
+    /// the serving weights, then the log row is emitted (periodic eval
+    /// runs against the freshly installed version).
+    fn install(&mut self, out: TrainOut) -> Result<()> {
+        let (new_state, log) = out?;
+        *self.state = new_state;
+        self.record_update_log(log)
+    }
+
+    /// Drain and install every in-flight update (run end / error paths).
+    fn flush(&mut self) -> Result<()> {
+        while self.pipeline.as_ref().is_some_and(|p| p.in_flight() > 0) {
+            let out = self.pipeline.as_mut().expect("checked above").wait();
+            self.install(out)?;
+        }
+        Ok(())
+    }
+}
+
+impl ScheduleBackend for LiveBackend<'_, '_, '_> {
     fn view(&self) -> SchedView {
         let buffer = &self.ctl.buffer;
         SchedView {
@@ -502,7 +655,7 @@ impl ScheduleBackend for LiveBackend<'_, '_> {
             fresh: buffer.count(Lifecycle::Fresh),
             unconsumed: buffer.len() - buffer.count(Lifecycle::Consumed),
             lanes: self.pool.lane_count(),
-            updates: self.trainer.updates(),
+            updates: self.issued,
         }
     }
 
@@ -523,7 +676,9 @@ impl ScheduleBackend for LiveBackend<'_, '_> {
     }
 
     fn admit(&mut self, rids: &[u64], engine: Option<usize>) -> Result<()> {
-        let reqs = self.ctl.buffer.dispatch(rids);
+        // stamp every lane with the serving weights version at dispatch:
+        // the version deltas behind the --staleness cap are exact
+        let reqs = self.ctl.buffer.dispatch_stamped(rids, self.state.version);
         match engine {
             Some(i) => self.pool.submit_to(i, reqs),
             None => self.pool.submit(reqs),
@@ -635,20 +790,59 @@ impl ScheduleBackend for LiveBackend<'_, '_> {
     }
 
     fn train(&mut self, rids: &[u64]) -> Result<()> {
-        let entries = self.ctl.buffer.consume(rids);
-        let rewards =
-            self.trainer
-                .grade(self.ctl.task.as_ref(), &self.ctl.dataset.train, &entries);
-        let log = self.trainer.update(self.state, &entries, &rewards)?;
-        let secs = self.pool.host_secs();
-        // cumulative pool tokens NOW, not the end-of-run absorbed total —
-        // rows must grow monotonically for the sample-efficiency curves
-        let tokens = self.ctl.rollout_tokens + self.pool.tokens_out();
-        let mut rows = std::mem::take(&mut self.rows);
-        self.ctl.log_update(&mut rows, self.state, log, secs, tokens)?;
-        self.rows = rows;
+        // pipelined mode: harvest the previous in-flight update FIRST —
+        // its result defines the version this update enters at, and the
+        // rendezvous keeps at most one update in flight
+        if self.pipeline.as_ref().is_some_and(|p| p.in_flight() > 0) {
+            let out = self.pipeline.as_mut().expect("checked above").wait();
+            self.install(out)?;
+        }
+        let v_enter = self.state.version;
+        let out = self
+            .ctl
+            .buffer
+            .consume_bounded(rids, v_enter, self.staleness_cap);
+        self.ctl.discarded += out.dropped.len() as u64;
+        self.stale_resyncs += out.resynced.len() as u64;
+        self.last_staleness.clear();
+        for e in &out.entries {
+            let st = entry_staleness(e, v_enter);
+            self.last_staleness.insert(e.rid, st);
+            *self.staleness_hist.entry(st).or_insert(0) += 1;
+        }
+        // a bounced batch still burns its slot in the update budget — the
+        // policy already observed UpdateDone, and the re-synced samples
+        // come back through a later harvest
+        self.issued += 1;
+        if out.entries.is_empty() {
+            debug_assert!(self.ctl.buffer.check_invariants().is_ok());
+            return Ok(());
+        }
+        // grading stays on this thread: the verifier reads the dataset,
+        // the worker should only ever run train_step
+        let rewards: Vec<Reward> = out
+            .entries
+            .iter()
+            .map(|e| {
+                self.ctl
+                    .task
+                    .verify(&self.ctl.dataset.train[e.problem_idx], &e.partial)
+            })
+            .collect();
+        match self.pipeline.as_mut() {
+            Some(p) => p.issue((out.entries, rewards)),
+            None => {
+                let trainer = self.trainer.as_mut().expect("serial path has a trainer");
+                let log = trainer.update(self.state, &out.entries, &rewards)?;
+                self.record_update_log(log)?;
+            }
+        }
         debug_assert!(self.ctl.buffer.check_invariants().is_ok());
         Ok(())
+    }
+
+    fn staleness_of(&self, rid: u64) -> Option<u64> {
+        self.last_staleness.get(&rid).copied()
     }
 
     fn barrier(&mut self) -> Result<()> {
@@ -657,7 +851,7 @@ impl ScheduleBackend for LiveBackend<'_, '_> {
     }
 
     fn exhausted(&self) -> bool {
-        self.trainer.updates() >= self.max_updates
+        self.issued >= self.max_updates
     }
 }
 

@@ -3,8 +3,10 @@
 
 pub mod buffer;
 pub mod controller;
+pub mod pipeline;
 pub mod trainer;
 
-pub use buffer::{BufferEntry, Lifecycle, Mode, RolloutBuffer};
+pub use buffer::{BoundedConsume, BufferEntry, Lifecycle, Mode, RolloutBuffer};
 pub use controller::{Controller, EvalResult, LogRow, LoopConfig, RunResult, SchedulerKind};
+pub use pipeline::Pipeline;
 pub use trainer::{sft_warm_start, Trainer, UpdateLog};

@@ -67,6 +67,12 @@ impl<'rt> Trainer<'rt> {
         assert_eq!(entries.len(), rewards.len());
         let sh = self.rt.manifest.shapes.clone();
         let (bt, t) = (sh.train_batch, sh.train_seq);
+        // Staleness is measured against the version ENTERING this logical
+        // update (the canonical convention — see `crate::rl::staleness`).
+        // Captured BEFORE the micro-step loop: each micro-step bumps
+        // `state.version`, so measuring afterwards inflated every sample
+        // by `micro_steps - 1`.
+        let v_enter = state.version;
 
         let reward_entries: Vec<RewardEntry> = entries
             .iter()
@@ -122,27 +128,104 @@ impl<'rt> Trainer<'rt> {
         stats_acc.grad_norm /= k;
 
         self.update_count += 1;
-        let n = entries.len() as f64;
-        let mean_staleness = entries
-            .iter()
-            .map(|e| {
-                let born = e.born_version.unwrap_or(e.finish_version);
-                (state.version.saturating_sub(1)).saturating_sub(born) as f64
-            })
-            .sum::<f64>()
-            / n;
-        Ok(UpdateLog {
-            update_idx: self.update_count,
-            policy_version: state.version,
-            n_traj: entries.len(),
-            mean_reward: rewards.iter().map(|r| r.total()).sum::<f64>() / n,
-            accuracy: rewards.iter().filter(|r| r.correct).count() as f64 / n,
-            format_rate: rewards.iter().filter(|r| r.format_ok).count() as f64 / n,
-            mean_resp_len: entries.iter().map(|e| e.partial.len() as f64).sum::<f64>() / n,
-            max_resp_len: entries.iter().map(|e| e.partial.len()).max().unwrap_or(0),
-            mean_staleness,
-            stats: stats_acc,
-        })
+        Ok(assemble_update_log(self.update_count, state.version, v_enter,
+                               entries, rewards, stats_acc))
+    }
+}
+
+/// Off-policy staleness of one buffer entry against an update entering at
+/// `v_enter`, through the canonical [`crate::rl::staleness`] helper.  The
+/// birth version falls back through the dispatch stamp
+/// ([`BufferEntry::dispatch_version`]) to the finish version, so every
+/// entry reports an exact delta.
+pub fn entry_staleness(e: &BufferEntry, v_enter: u64) -> u64 {
+    let born = e.born_version.or(e.dispatch_version).unwrap_or(e.finish_version);
+    crate::rl::staleness(v_enter, born)
+}
+
+/// Assemble the per-update telemetry row.  Pure and structurally guarded:
+/// an empty batch yields zeroed means, never NaN — `Trainer::update`
+/// rejects empty batches up front, but the JSON log emitters downstream
+/// must stay poison-free even if a future caller slips one through.
+pub fn assemble_update_log(update_idx: usize, policy_version: u64, v_enter: u64,
+                           entries: &[BufferEntry], rewards: &[Reward],
+                           stats: TrainStats) -> UpdateLog {
+    let n = entries.len() as f64;
+    let mean = |sum: f64| if entries.is_empty() { 0.0 } else { sum / n };
+    UpdateLog {
+        update_idx,
+        policy_version,
+        n_traj: entries.len(),
+        mean_reward: mean(rewards.iter().map(|r| r.total()).sum()),
+        accuracy: mean(rewards.iter().filter(|r| r.correct).count() as f64),
+        format_rate: mean(rewards.iter().filter(|r| r.format_ok).count() as f64),
+        mean_resp_len: mean(entries.iter().map(|e| e.partial.len() as f64).sum()),
+        max_resp_len: entries.iter().map(|e| e.partial.len()).max().unwrap_or(0),
+        mean_staleness: mean(entries.iter()
+            .map(|e| entry_staleness(e, v_enter) as f64)
+            .sum()),
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::buffer::Lifecycle;
+
+    fn entry(born: Option<u64>, dispatch: Option<u64>, finish: u64,
+             toks: usize) -> BufferEntry {
+        BufferEntry {
+            rid: 0,
+            problem_idx: 0,
+            prompt_id: 0,
+            prompt: vec![1, 2],
+            partial: vec![7; toks],
+            partial_logp: vec![-0.5; toks],
+            complete: true,
+            lifecycle: Lifecycle::Ready,
+            born_version: born,
+            finish_version: finish,
+            dispatch_version: dispatch,
+            stale_resyncs: 0,
+            resumes: 0,
+            max_new: 64,
+            finished_at: 1.0,
+            clipped: false,
+        }
+    }
+
+    /// The satellite-2 NaN guard: an empty batch must produce finite
+    /// (zeroed) means, not 0/0 = NaN poisoning the JSON logs.
+    #[test]
+    fn empty_batch_log_is_finite() {
+        let log = assemble_update_log(1, 5, 4, &[], &[], TrainStats::default());
+        assert_eq!(log.n_traj, 0);
+        for v in [log.mean_reward, log.accuracy, log.format_rate,
+                  log.mean_resp_len, log.mean_staleness] {
+            assert!(v.is_finite(), "empty-batch log emitted {v}");
+            assert_eq!(v, 0.0);
+        }
+        assert_eq!(log.max_resp_len, 0);
+    }
+
+    /// Staleness is measured at update ENTRY (v_enter), not after the
+    /// micro-step bumps, and falls back born -> dispatch -> finish.
+    #[test]
+    fn log_staleness_uses_entry_version_and_fallback_chain() {
+        assert_eq!(entry_staleness(&entry(Some(3), Some(4), 5, 1), 6), 3);
+        assert_eq!(entry_staleness(&entry(None, Some(4), 5, 1), 6), 2);
+        assert_eq!(entry_staleness(&entry(None, None, 5, 1), 6), 1);
+        let entries = [entry(Some(3), None, 3, 2), entry(Some(5), None, 5, 4)];
+        let rewards = [Reward::graded(true), Reward::bad_format()];
+        // v_enter 5: staleness 2 and 0 -> mean 1.0 (the old inline formula
+        // measured post-bump and was off by micro_steps - 1)
+        let log = assemble_update_log(2, 7, 5, &entries, &rewards,
+                                      TrainStats::default());
+        assert_eq!(log.mean_staleness, 1.0);
+        assert_eq!(log.accuracy, 0.5);
+        assert_eq!(log.mean_resp_len, 3.0);
+        assert_eq!(log.max_resp_len, 4);
     }
 }
 

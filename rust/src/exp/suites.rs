@@ -91,13 +91,12 @@ pub fn train_scale(scale: Scale) -> TrainScale {
 }
 
 pub fn clone_state(state: &ParamState) -> ParamState {
-    ParamState {
-        params: state.params.clone(),
-        m: state.m.clone(),
-        v: state.v.clone(),
-        step: state.step,
-        version: state.version,
-    }
+    state.clone()
+}
+
+/// Staleness histogram as a JSON object keyed by version delta.
+fn staleness_json(h: &std::collections::BTreeMap<u64, u64>) -> Json {
+    Json::Obj(h.iter().map(|(&d, &n)| (d.to_string(), num(n as f64))).collect())
 }
 
 fn loop_config(ts: &TrainScale, scheduler: SchedulerKind, seed: u64) -> LoopConfig {
@@ -187,6 +186,9 @@ pub fn run_one(rt: &Runtime, task_name: &str, ds_seed: u64, ts: &TrainScale,
         ("rollout_secs", num(result.phase_clock.rollout)),
         ("update_secs", num(result.phase_clock.update)),
         ("discarded", num(result.discarded as f64)),
+        ("stale_resyncs", num(result.stale_resyncs as f64)),
+        ("max_staleness", num(result.max_staleness as f64)),
+        ("staleness_hist", staleness_json(&result.staleness_hist)),
     ]);
     Ok((rows, summary, state, result))
 }
@@ -497,18 +499,28 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
     println!("\n-- async updates vs sync schedulers (4 engines) --\n");
     let mut rows = Vec::new();
     let mut js = Vec::new();
-    for (mode, label) in [(SimMode::Baseline, "baseline"),
-                          (SimMode::SortedPartial, "partial"),
-                          (SimMode::Async, "async")] {
-        let r = simulate_pool(mode, &w, 4, 128, 128, cost,
-                              DispatchPolicy::ShortestPredictedFirst,
-                              PredictorKind::History);
+    for (mode, label, staleness) in [(SimMode::Baseline, "baseline", None),
+                                     (SimMode::SortedPartial, "partial", None),
+                                     (SimMode::Async, "async", None),
+                                     (SimMode::Async, "async-s2", Some(2))] {
+        let r = simulate_pool_opts(mode, &w, PoolSimOpts {
+            engines: 4,
+            q_total: 128,
+            update_batch: 128,
+            cost,
+            dispatch: DispatchPolicy::ShortestPredictedFirst,
+            predictor: PredictorKind::History,
+            staleness,
+            ..PoolSimOpts::default()
+        });
         rows.push(vec![
             label.to_string(),
             format!("{:.2}%", r.bubble_ratio * 100.0),
             format!("{:.1}", r.rollout_time),
             format!("{:.1}", r.update_time),
             format!("{:.1}", r.total_time),
+            format!("{}", r.max_staleness),
+            format!("{}", r.stale_resyncs),
         ]);
         js.push(obj(vec![
             ("mode", s(label)),
@@ -516,13 +528,19 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
             ("rollout_secs", num(r.rollout_time)),
             ("update_secs", num(r.update_time)),
             ("total_secs", num(r.total_time)),
+            ("staleness", staleness.map(|n: usize| num(n as f64)).unwrap_or(Json::Null)),
+            ("max_staleness", num(r.max_staleness as f64)),
+            ("stale_resyncs", num(r.stale_resyncs as f64)),
+            ("staleness_hist", staleness_json(&r.staleness_hist)),
         ]));
     }
-    print_table(&["mode", "bubble", "rollout s", "update s", "total s"], &rows);
+    print_table(&["mode", "bubble", "rollout s", "update s", "total s",
+                  "max stale", "resyncs"], &rows);
     println!("\nexpect: async's bubble matches partial (same resume \
               semantics, lower than baseline) while its total time drops \
               by ~the update time — updates hide under decoding instead of \
-              serializing behind the harvest barrier");
+              serializing behind the harvest barrier; async-s2 additionally \
+              caps every consumed sample at 2 versions off-policy");
     ctx.write_json("pool_async", &arr(js))?;
 
     println!("\n-- work stealing vs none (4 engines, round-robin striping) --\n");

@@ -18,8 +18,8 @@ use sortedrl::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE, MAX_KV_PAGE};
 use sortedrl::runtime::Runtime;
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, simulate, simulate_pool_arrivals, simulate_pool_arrivals_traced,
-    simulate_pool_opts, simulate_pool_traced, CostModel, PoolSimOpts, SimCore, SimMode,
+    longtail_workload, simulate_pool_arrivals, simulate_pool_arrivals_traced,
+    simulate_pool_opts, simulate_pool_traced, PoolSimOpts, SimCore, SimMode,
 };
 use sortedrl::tasks::logic::LogicTask;
 use sortedrl::tasks::math::MathTask;
@@ -111,7 +111,7 @@ USAGE:
                  [--lr F] [--max-new N] [--seed N] [--scale ci|small|paper]
                  [--engines N] [--predictor oracle|history|bucket]
                  [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
-                 [--kv-mode reserve|paged] [--kv-page TOK]
+                 [--kv-mode reserve|paged] [--kv-page TOK] [--staleness N]
                  [--trace-out FILE] [--slo MS]
                  [--artifacts DIR] [--tag TAG] [--no-warm-start]
   sortedrl exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6a|fig6b|fig9a|fig9b|tab1|
@@ -120,7 +120,7 @@ USAGE:
   sortedrl sim [--n 512] [--cap 8192] [--queue 128] [--update-batch 128]
                [--engines N] [--predictor oracle|history|bucket]
                [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
-               [--kv-mode reserve|paged] [--kv-page TOK]
+               [--kv-mode reserve|paged] [--kv-page TOK] [--staleness N]
                [--sim-core event|reference]
                [--arrival batch|poisson:RATE|bursty:HI,LO,FLIP|
                           diurnal:BASE,AMP,PERIOD|trace:FILE]
@@ -136,6 +136,15 @@ usage (0 = unlimited); --kv-mode reserve charges prompt + generation cap
 per admitted lane, --kv-mode paged charges only the context actually
 generated, in --kv-page token pages, admitting on predicted lengths with
 shed/throttle backpressure when estimates undershoot.
+
+--staleness N (train & sim) hard-caps the off-policy degree of async
+training: every sample entering an update must be at most N weight
+versions older than the update consuming it, enforced at consume time
+(an over-stale sample is re-synced — regenerated under the current
+weights — once, and dropped on a repeat violation), so the reported
+max staleness is provably <= N.  N also becomes the async scheduler's
+re-sync window (the built-in constant is only the derived default).
+Omit the flag for the legacy unbounded window; 0 is rejected.
 
 --sim-core picks the pool stepper: event (default) fuses silent decode
 spans through an event heap — same decisions, orders of magnitude fewer
@@ -194,6 +203,23 @@ fn parse_kv(args: &Args) -> Result<KvConfig> {
     Ok(KvConfig { mode, budget, page })
 }
 
+/// Parse `--staleness N`, the off-policy-degree hard cap.  Absent = the
+/// legacy unbounded-window behavior (`ASYNC_SYNC_EVERY` re-sync cadence,
+/// no consume-time cap).  0 is rejected: a sample consumed in the same
+/// version it was born has staleness 0, so a 0 cap would re-sync every
+/// sample that survives a single update — an infinite regeneration loop,
+/// never what was meant.
+fn parse_staleness(args: &Args) -> Result<Option<usize>> {
+    let Some(v) = args.get("staleness") else { return Ok(None) };
+    let n: usize = v.parse().with_context(|| format!("--staleness {v}"))?;
+    if n == 0 {
+        bail!("--staleness must be >= 1 weight version (0 would bounce \
+               every sample that outlives one update; omit the flag for \
+               the unbounded legacy window)");
+    }
+    Ok(Some(n))
+}
+
 fn parse_dispatch(args: &Args) -> Result<DispatchPolicy> {
     // fallback matches LoopConfig::default() so flag-less CLI runs agree
     // with the examples, exp suites, and tests
@@ -236,6 +262,9 @@ fn load_runtime(args: &Args) -> Result<Runtime> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // flag validation precedes artifact loading so `--staleness 0` (and
+    // friends) fail on the flag, not on a missing artifacts/ directory
+    let staleness = parse_staleness(args)?;
     let rt = load_runtime(args)?;
     eprintln!("platform: {}; artifacts tag: {}", rt.platform(), rt.manifest.tag);
     let scale = Scale::parse(args.get("scale").unwrap_or("small"))
@@ -282,6 +311,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         kv_page: kv.page,
         trace_out,
         slo_ms,
+        staleness,
     };
     let ds = Dataset::generate(task.as_ref(), ts.per_difficulty, 0.1, seed + 1);
     eprintln!("dataset: {} train / {} eval; scheduler: {}",
@@ -309,6 +339,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("rollout tokens: {}; rollout secs {:.1}; update secs {:.1}",
              result.total_rollout_tokens, result.phase_clock.rollout,
              result.phase_clock.update);
+    if scheduler == SchedulerKind::AsyncUpdate {
+        println!("staleness: max {}{} | {} resyncs | hist {:?}",
+                 result.max_staleness,
+                 match staleness {
+                     Some(n) => format!(" (cap {n})"),
+                     None => String::new(),
+                 },
+                 result.stale_resyncs, result.staleness_hist);
+    }
     if let Some(slo) = &result.slo {
         println!("slo: ttft p50 {:.3}s p99 {:.3}s | tpot p50 {:.4}s p99 {:.4}s | \
                   e2e p50 {:.3}s p99 {:.3}s | goodput {:.3}",
@@ -470,6 +509,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let dispatch = parse_dispatch(args)?;
     let steal = args.get("steal").is_some();
     let kv = parse_kv(args)?;
+    let staleness = parse_staleness(args)?;
     let core = match args.get("sim-core") {
         Some(s) => SimCore::parse(s).context("--sim-core event|reference")?,
         None => SimCore::default(),
@@ -492,22 +532,34 @@ fn cmd_sim(args: &Args) -> Result<()> {
             kv_mode: kv.mode,
             kv_page: kv.page,
             core,
+            staleness,
             ..PoolSimOpts::default()
         };
         let arrivals = spec.build(n, cap, seed)?;
         return sim_open_loop(args, &arrivals, cap, q, u, opts);
     }
     let w = longtail_workload(n, cap, seed);
-    println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}\n");
+    println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}{}\n",
+             match staleness {
+                 Some(s) => format!(", staleness cap {s}"),
+                 None => String::new(),
+             });
     for (mode, label) in [(SimMode::Baseline, "baseline"),
                           (SimMode::SortedOnPolicy, "on-policy"),
                           (SimMode::SortedPartial, "partial"),
                           (SimMode::Async, "async")] {
-        let r = simulate(mode, &w, q, u, CostModel::default());
+        // identical to the historical `simulate()` shorthand when no cap
+        // is set (same dispatch/predictor defaults, 1 engine)
+        let r = simulate_pool_opts(mode, &w, PoolSimOpts {
+            q_total: q,
+            update_batch: u,
+            staleness,
+            ..PoolSimOpts::default()
+        });
         println!("{label:>10}: {:7.0} tok/s  bubble {:5.2}%  rollout {:7.1}s  \
-                  total {:7.1}s  wasted {:8}  clipped {:3}",
+                  total {:7.1}s  wasted {:8}  clipped {:3}  max-stale {:2}",
                  r.throughput, r.bubble_ratio * 100.0, r.rollout_time,
-                 r.total_time, r.wasted_tokens, r.clipped);
+                 r.total_time, r.wasted_tokens, r.clipped, r.max_staleness);
     }
     if engines > 1 {
         println!("\npool: {engines} engines x {} lanes, predictor {}, dispatch {}, \
@@ -524,11 +576,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
             kv_mode: kv.mode,
             kv_page: kv.page,
             core,
+            staleness,
             ..PoolSimOpts::default()
         };
         let mut telemetry = (0.0, 0.0);
         let mut stolen = (0u64, 0u64);
         let mut kv_stats = (0usize, 0u64, 0u64);
+        let mut stale = (0u64, 0u64);
         for (mode, label) in [(SimMode::Baseline, "baseline"),
                               (SimMode::SortedOnPolicy, "on-policy"),
                               (SimMode::SortedPartial, "partial"),
@@ -544,6 +598,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
             // already balance the tail and steal ~never
             if mode == SimMode::Baseline {
                 stolen = (many.steals, many.migrated_tokens);
+            }
+            if mode == SimMode::Async {
+                stale = (many.max_staleness, many.stale_resyncs);
             }
             println!("{label:>10}: bubble {:5.2}% -> {:5.2}%   tok/s {:7.0} -> {:7.0}   \
                       rollout {:6.1}s -> {:6.1}s",
@@ -564,6 +621,11 @@ fn cmd_sim(args: &Args) -> Result<()> {
                       peak lanes {}, {} forced sheds, {} throttles",
                      kv.mode.name(), kv.budget, kv.page,
                      kv_stats.0, kv_stats.1, kv_stats.2);
+        }
+        if let Some(n) = staleness {
+            println!("staleness cap {n} (async, {engines} engines): \
+                      max consumed {}, {} re-syncs",
+                     stale.0, stale.1);
         }
     } else {
         println!("\n(pass --engines N to compare 1-engine vs N-engine pools)");
@@ -586,6 +648,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             kv_mode: kv.mode,
             kv_page: kv.page,
             core,
+            staleness,
             ..PoolSimOpts::default()
         };
         let slo_secs = slo_ms.map(|ms| ms / 1000.0);

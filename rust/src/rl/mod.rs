@@ -7,6 +7,26 @@
 
 pub mod advantage;
 
+/// THE canonical off-policy staleness definition — every call site (the
+/// trainer's per-sample logs, the rollout cache's consume-time cap, the
+/// simulator's modeled cap, [`Trajectory::staleness`]) computes through
+/// this helper so the convention cannot fork again.
+///
+/// **Convention (pinned by `staleness_convention` below):** staleness is
+/// the number of trainer updates COMPLETED between the policy version that
+/// generated the sample's first response token (`born_version`) and the
+/// version ENTERING the logical update that consumes it (`train_version`).
+/// A sample born at version `v` and consumed by the very next update
+/// (which enters at version `v`) has staleness 0 — it is exactly
+/// on-policy.  Callers must pass the version at update ENTRY, not the
+/// post-update version: an update of `k` micro-steps bumps
+/// `ParamState::version` `k` times, and measuring after the bump would
+/// inflate every sample by `k` (the trainer's old inline formula was off
+/// by `k - 1` this way).  Saturating: a clock skew can never go negative.
+pub fn staleness(train_version: u64, born_version: u64) -> u64 {
+    train_version.saturating_sub(born_version)
+}
+
 /// A completed (or partial-mode resumed-and-completed) trajectory, ready
 /// for the trainer.  `old_logp[i]` is the *sampling-time* log-prob of
 /// `response[i]` — the exact behavior-policy value (paper §3.2).
@@ -39,8 +59,39 @@ impl Trajectory {
     }
 
     /// Off-policy distance in policy versions at the time of an update
-    /// performed by `current_version`.
+    /// entering at `current_version` (delegates to the canonical
+    /// [`staleness`] helper — see its doc for the exact convention).
     pub fn staleness(&self, current_version: u64) -> u64 {
-        current_version.saturating_sub(self.born_version)
+        staleness(current_version, self.born_version)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pins the canonical convention: born at v, consumed by the update
+    /// entering at v -> 0 (on-policy); one completed update in between ->
+    /// 1; never negative under clock skew.
+    #[test]
+    fn staleness_convention() {
+        assert_eq!(staleness(5, 5), 0);
+        assert_eq!(staleness(6, 5), 1);
+        assert_eq!(staleness(9, 5), 4);
+        assert_eq!(staleness(3, 7), 0); // saturating, not underflowing
+        let t = Trajectory {
+            problem_idx: 0,
+            prompt_id: 0,
+            prompt: vec![],
+            response: vec![],
+            old_logp: vec![],
+            reward: 0.0,
+            correct: false,
+            format_ok: false,
+            born_version: 5,
+            finish_version: 6,
+            resumes: 1,
+        };
+        assert_eq!(t.staleness(7), staleness(7, 5));
     }
 }

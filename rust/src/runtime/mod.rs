@@ -32,6 +32,9 @@ pub struct RuntimeStats {
 }
 
 /// Model parameters + Adam state, owned as host literals between steps.
+/// `Clone` is the async pipeline's weight hand-off: the trainer thread
+/// owns the master copy and ships a snapshot back per update for serving.
+#[derive(Clone)]
 pub struct ParamState {
     pub params: Vec<Literal>,
     pub m: Vec<Literal>,

@@ -310,6 +310,15 @@ pub trait ScheduleBackend {
     fn lane_rids(&self, _engine: usize) -> Vec<(usize, u64)> {
         Vec::new()
     }
+    /// Off-policy staleness (see [`crate::rl::staleness`]) of one entry the
+    /// trainer just consumed, in completed-update versions.  Backends that
+    /// stamp weight versions on their cached samples report the exact
+    /// per-sample delta here and the tracer folds it into the telemetry
+    /// hub's staleness histogram; the default (no version bookkeeping)
+    /// reports nothing and the histogram stays empty.
+    fn staleness_of(&self, _rid: u64) -> Option<u64> {
+        None
+    }
 
     // ---- actuation ----
     /// Load up to `prompts` prompts; returns buffer entries created.
@@ -522,7 +531,25 @@ pub fn make_policy_opts(kind: SchedulerKind, p: PolicyParams,
 /// shedding its lane.
 pub fn make_policy_full(kind: SchedulerKind, p: PolicyParams, steal: bool,
                         throttle: bool) -> Box<dyn SchedulePolicy> {
-    let mut policy = make_policy(kind, p);
+    make_policy_staleness(kind, p, steal, throttle, None)
+}
+
+/// [`make_policy_full`] plus the off-policy-degree knob (`--staleness N`).
+/// For [`SchedulerKind::AsyncUpdate`], `Some(n)` derives the re-sync window
+/// (`sync_every = n`, replacing the [`ASYNC_SYNC_EVERY`] default) so the
+/// phase machine re-syncs on the same bound the backends enforce at consume
+/// time; `None` keeps today's default window.  Other kinds run every sample
+/// on-policy (or resume under current weights), so the knob composes as a
+/// no-op there.
+pub fn make_policy_staleness(kind: SchedulerKind, p: PolicyParams, steal: bool,
+                             throttle: bool, staleness: Option<usize>)
+                             -> Box<dyn SchedulePolicy> {
+    let mut policy: Box<dyn SchedulePolicy> = match (kind, staleness) {
+        (SchedulerKind::AsyncUpdate, Some(n)) => {
+            Box::new(AsyncUpdatePolicy::new(p, n))
+        }
+        _ => make_policy(kind, p),
+    };
     if throttle {
         policy = Box::new(KvGovernor::wrap(policy));
     }
@@ -534,6 +561,9 @@ pub fn make_policy_full(kind: SchedulerKind, p: PolicyParams, steal: bool,
 
 /// AsyncUpdate's bounded-staleness window: a full re-sync harvest (partial
 /// scavenge of every in-flight lane) after this many overlapped updates.
+/// The `--staleness N` knob overrides it (see [`make_policy_staleness`]);
+/// the consume-time cap in the backends enforces the same `N` on every
+/// trained sample, so the phase machine and the cache can never disagree.
 pub const ASYNC_SYNC_EVERY: usize = 4;
 
 // ==========================================================================
@@ -1195,6 +1225,10 @@ pub struct AsyncUpdatePolicy {
     quota: usize,
     occ_floor: usize,
     final_wave: bool,
+    /// The next harvest is a bounded-staleness re-sync (scavenge + resume
+    /// under fresh weights), not a group-end clip: progress survives and
+    /// never-run work re-queues even when `final_wave` is set.
+    resync: bool,
     refill_empty: bool,
 }
 
@@ -1208,6 +1242,7 @@ impl AsyncUpdatePolicy {
             quota: 1,
             occ_floor: 1,
             final_wave: false,
+            resync: false,
             refill_empty: false,
         }
     }
@@ -1255,12 +1290,17 @@ impl SchedulePolicy for AsyncUpdatePolicy {
                         self.phase = Phase::Consume;
                         continue;
                     }
-                    if !self.final_wave
-                        && self.updates_since_sync >= self.sync_every
+                    if self.updates_since_sync >= self.sync_every
                         && (v.running > 0 || v.queued > 0)
                     {
-                        // bounded staleness: full re-sync harvest
+                        // bounded staleness: full re-sync harvest.  This
+                        // fires during the final wave too — the long-tail
+                        // endgame is exactly where lanes decode longest
+                        // between updates, so exempting it (as this branch
+                        // once did) let final-wave lanes lag the trainer
+                        // unboundedly.
                         self.updates_since_sync = 0;
+                        self.resync = true;
                         self.phase = Phase::HarvestNow;
                         continue;
                     }
@@ -1310,14 +1350,18 @@ impl SchedulePolicy for AsyncUpdatePolicy {
     }
 
     fn classify(&mut self, item: &HarvestItem, _view: &SchedView) -> HarvestAction {
-        // partial-mode semantics: progress always survives a harvest
+        // partial-mode semantics: progress always survives a harvest.  A
+        // re-sync harvest keeps the mid-group verdicts even in the final
+        // wave — it exists to refresh lanes onto current weights, not to
+        // end the group, so clipping runners or dropping never-run queue
+        // entries there would trade data for nothing.
         if item.progress == 0 {
-            if self.final_wave {
+            if self.final_wave && !self.resync {
                 HarvestAction::Drop
             } else {
                 HarvestAction::Requeue
             }
-        } else if self.final_wave {
+        } else if self.final_wave && !self.resync {
             HarvestAction::Clip
         } else {
             HarvestAction::Resume
@@ -1328,6 +1372,7 @@ impl SchedulePolicy for AsyncUpdatePolicy {
         match ev {
             Event::PromptsLoaded { count } => self.refill_empty = *count == 0,
             Event::UpdateDone => self.updates_since_sync += 1,
+            Event::Harvested { .. } => self.resync = false,
             _ => {}
         }
     }
@@ -1600,6 +1645,86 @@ mod tests {
         for i in 0..6 {
             assert!(b.progress[i] > 0);
         }
+    }
+
+    /// Wrapper that measures the staleness bound the async policy promises:
+    /// trainer updates completed since the last harvest (every harvest is a
+    /// weight re-sync for the surviving lanes).
+    struct SyncBoundProbe {
+        inner: AsyncUpdatePolicy,
+        since_sync: usize,
+        max_since_sync: usize,
+    }
+
+    impl SyncBoundProbe {
+        fn new(inner: AsyncUpdatePolicy) -> Self {
+            SyncBoundProbe { inner, since_sync: 0, max_since_sync: 0 }
+        }
+    }
+
+    impl SchedulePolicy for SyncBoundProbe {
+        fn name(&self) -> &'static str {
+            "sync-bound-probe"
+        }
+        fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
+            self.inner.decide(b)
+        }
+        fn classify(&mut self, item: &HarvestItem, view: &SchedView) -> HarvestAction {
+            self.inner.classify(item, view)
+        }
+        fn observe(&mut self, ev: &Event) {
+            match ev {
+                Event::UpdateDone => {
+                    self.since_sync += 1;
+                    self.max_since_sync = self.max_since_sync.max(self.since_sync);
+                }
+                Event::Harvested { .. } => self.since_sync = 0,
+                _ => {}
+            }
+            self.inner.observe(ev);
+        }
+    }
+
+    /// Regression for the final-wave staleness lapse: the bounded-staleness
+    /// re-sync must fire during the final wave too.  lens [1,1,1,1,8,60],
+    /// 2 lanes, update batch 2, sync_every 2: two quick updates land before
+    /// the final wave starts, so the wave opens with updates_since_sync ==
+    /// sync_every while rids 4/5 are still queued.  The fixed policy
+    /// re-syncs right there (one harvest; never-run work requeued, nothing
+    /// dropped) and the updates-between-syncs count never exceeds the bound.
+    #[test]
+    fn async_resyncs_during_final_wave() {
+        let mut p = SyncBoundProbe::new(AsyncUpdatePolicy::new(params(6, 2), 2));
+        let mut b = MockBackend::new(vec![1, 1, 1, 1, 8, 60], 2);
+        drive(&mut p, &mut b).unwrap();
+        assert_eq!(b.updates, 3);
+        assert_eq!(b.consumed.len(), 6);
+        assert!(b.dropped.is_empty(), "re-sync must not drop never-run work");
+        assert_eq!(b.harvests, 1, "the final-wave re-sync harvest");
+        assert!(
+            p.max_since_sync <= 2,
+            "staleness bound violated: {} updates between syncs",
+            p.max_since_sync
+        );
+    }
+
+    /// The same workload under a policy whose re-sync window never fires
+    /// reproduces the OLD buggy behavior exactly (the `!final_wave` guard
+    /// made the final wave behave as if sync_every were infinite): all
+    /// three updates run without a single re-sync, exceeding the bound of
+    /// 2 that the fixed policy holds above.
+    #[test]
+    fn final_wave_lapse_pinned_by_unbounded_window() {
+        let mut p = SyncBoundProbe::new(AsyncUpdatePolicy::new(params(6, 2), 1_000));
+        let mut b = MockBackend::new(vec![1, 1, 1, 1, 8, 60], 2);
+        drive(&mut p, &mut b).unwrap();
+        assert_eq!(b.updates, 3);
+        assert_eq!(b.harvests, 0, "no re-sync ever fires without the fix");
+        assert!(
+            p.max_since_sync > 2,
+            "the lapse scenario must exceed the sync_every=2 bound (got {})",
+            p.max_since_sync
+        );
     }
 
     /// NoGrouped abandons interrupted work: with update_batch 1 and a long

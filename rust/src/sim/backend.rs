@@ -20,7 +20,7 @@ use crate::sched::policy::{
 use crate::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
 use crate::trace::{series, SloSummary};
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum SimLife {
@@ -40,6 +40,13 @@ struct SimEntry {
     complete: bool,
     /// Completion-order stamp (what `ready_rids` sorts by).
     seq: u64,
+    /// Policy version (update count) when generation started — the sim's
+    /// `born_version`.  Resumes keep it; restarts and re-syncs restamp at
+    /// the next admit, mirroring the live buffer's born fallback.
+    born: usize,
+    /// Times this entry was bounced by the staleness cap (first violation
+    /// re-syncs, second drops — `consume_bounded`'s verdict ladder).
+    resyncs: u32,
 }
 
 pub(super) struct SimBackend {
@@ -87,6 +94,17 @@ pub(super) struct SimBackend {
     overlap_updates: bool,
     /// Engine-clock time at which the (async) trainer frees up.
     update_free_at: f64,
+    /// `--staleness` hard cap, enforced at consume time exactly like the
+    /// live `RolloutBuffer::consume_bounded`: a sample whose version delta
+    /// exceeds the cap is re-synced once, dropped on repeat.  `None`
+    /// (default) keeps every pre-cap golden byte-identical.
+    pub(super) staleness_cap: Option<u64>,
+    /// Per-sample version deltas of everything actually trained.
+    staleness_hist: BTreeMap<u64, u64>,
+    /// Deltas from the most recent `train` call, keyed by rid — what
+    /// `staleness_of` answers to the tracer.
+    last_staleness: BTreeMap<u64, u64>,
+    stale_resyncs: u64,
 }
 
 impl SimBackend {
@@ -126,6 +144,10 @@ impl SimBackend {
             throttles: 0,
             overlap_updates,
             update_free_at: 0.0,
+            staleness_cap: None,
+            staleness_hist: BTreeMap::new(),
+            last_staleness: BTreeMap::new(),
+            stale_resyncs: 0,
         }
     }
 
@@ -264,6 +286,9 @@ impl SimBackend {
             throttles: self.throttles,
             kv_trace,
             consumed_rids: self.consumed,
+            max_staleness: self.staleness_hist.keys().next_back().copied().unwrap_or(0),
+            staleness_hist: self.staleness_hist,
+            stale_resyncs: self.stale_resyncs,
             slo: SloSummary::default(),
         }
     }
@@ -373,6 +398,8 @@ impl ScheduleBackend for SimBackend {
                 ready_len: 0,
                 complete: false,
                 seq: 0,
+                born: 0,
+                resyncs: 0,
             });
             self.fresh_count += 1;
             self.unconsumed_count += 1;
@@ -393,6 +420,11 @@ impl ScheduleBackend for SimBackend {
                     .expect("admit unknown sim rid");
                 assert_eq!(e.life, SimLife::Fresh, "admit non-fresh sim rid {rid}");
                 e.life = SimLife::InFlight;
+                if e.progress == 0 {
+                    // fresh generation starts under the current weights;
+                    // resumes keep the version their first token saw
+                    e.born = self.updates;
+                }
                 (e.req, e.progress)
             };
             self.fresh_count -= 1;
@@ -597,6 +629,10 @@ impl ScheduleBackend for SimBackend {
     }
 
     fn train(&mut self, rids: &[u64]) -> Result<()> {
+        // v_enter: updates completed before this one — the same convention
+        // `crate::rl::staleness` documents for the live trainer
+        let v_enter = self.updates as u64;
+        self.last_staleness.clear();
         let mut toks = 0.0f64;
         for rid in rids {
             let e = self
@@ -608,6 +644,31 @@ impl ScheduleBackend for SimBackend {
             // natural completions train at their true length; only clips
             // (complete == false) may be shorter
             debug_assert!(!e.complete || e.ready_len == e.req.output_len);
+            let st = crate::rl::staleness(v_enter, e.born as u64);
+            if self.staleness_cap.is_some_and(|cap| st > cap) {
+                // consume-time cap, mirroring the live buffer's
+                // `consume_bounded`: first violation re-syncs (the sample
+                // regenerates under current weights), a repeat drops it
+                self.ready_count -= 1;
+                self.wasted += e.ready_len as u64;
+                if e.resyncs == 0 {
+                    e.resyncs = 1;
+                    e.progress = 0;
+                    e.ready_len = 0;
+                    e.complete = false;
+                    e.life = SimLife::Fresh;
+                    self.fresh_count += 1;
+                    self.stale_resyncs += 1;
+                } else {
+                    e.life = SimLife::Consumed;
+                    self.unconsumed_count -= 1;
+                    self.dropped += 1;
+                    self.done += 1;
+                }
+                continue;
+            }
+            *self.staleness_hist.entry(st).or_insert(0) += 1;
+            self.last_staleness.insert(*rid, st);
             e.life = SimLife::Consumed;
             toks += (e.req.prompt_len + e.ready_len) as f64;
             self.ready_count -= 1;
@@ -625,6 +686,10 @@ impl ScheduleBackend for SimBackend {
         self.harvests += 1;
         self.updates += 1;
         Ok(())
+    }
+
+    fn staleness_of(&self, rid: u64) -> Option<u64> {
+        self.last_staleness.get(&rid).copied()
     }
 
     fn barrier(&mut self) -> Result<()> {

@@ -46,6 +46,7 @@ use crate::workload::Arrival;
 use backend::{make_sim_predictor, SimBackend};
 use engine::{stamp_work, SimWork};
 use pool::{PoolArrival, SimPool};
+use std::collections::BTreeMap;
 
 /// Serving-engine cost model (seconds).
 #[derive(Debug, Clone, Copy)]
@@ -160,6 +161,14 @@ pub struct SimReport {
     /// Rids in training-consumption order — the full decision-equivalence
     /// fingerprint the event-vs-reference differential tests compare.
     pub consumed_rids: Vec<u64>,
+    /// Per-sample version deltas of everything trained on: `hist[d]` =
+    /// samples consumed exactly `d` updates after generation started.
+    pub staleness_hist: BTreeMap<u64, u64>,
+    /// Largest delta trained on; with `PoolSimOpts::staleness = Some(n)`
+    /// this is provably `<= n`.
+    pub max_staleness: u64,
+    /// Samples bounced back to regeneration by the staleness cap.
+    pub stale_resyncs: u64,
     /// Per-request latency roll-up (TTFT/TPOT/e2e quantiles, goodput).
     /// Default-empty unless the run carried a recording [`Tracer`]
     /// ([`simulate_pool_traced`], or `PoolSimOpts::slo`).
@@ -392,6 +401,13 @@ pub struct PoolSimOpts {
     /// (and KV-trace sample).  1 (default) is lossless; bubble ratios
     /// stay exact at any stride via busy-area integration.
     pub timeline_stride: usize,
+    /// `--staleness` off-policy-degree cap (async mode).  `Some(n)` sets
+    /// the async policy's re-sync window to `n` AND enforces the hard cap
+    /// at consume time (older samples re-sync once, drop on repeat) —
+    /// the same semantics the live controller applies, so cross-backend
+    /// goldens stay meaningful.  `None` (default) keeps the legacy
+    /// [`ASYNC_SYNC_EVERY`] window with no consume-time cap.
+    pub staleness: Option<usize>,
 }
 
 impl Default for PoolSimOpts {
@@ -411,6 +427,7 @@ impl Default for PoolSimOpts {
             slo: None,
             core: SimCore::Event,
             timeline_stride: 1,
+            staleness: None,
         }
     }
 }
@@ -485,7 +502,12 @@ fn run_pool_traced(mode: SimMode, input: PoolInput<'_>, o: PoolSimOpts,
         SimMode::Baseline => Box::new(BaselinePolicy::new(params, false)),
         SimMode::SortedOnPolicy => Box::new(GroupPolicy::new(params, Mode::OnPolicy)),
         SimMode::SortedPartial => Box::new(GroupPolicy::new(params, Mode::Partial)),
-        SimMode::Async => Box::new(AsyncUpdatePolicy::new(params, ASYNC_SYNC_EVERY)),
+        SimMode::Async => Box::new(AsyncUpdatePolicy::new(
+            params,
+            // --staleness N doubles as the re-sync window; the baked-in
+            // constant is only the derived default
+            o.staleness.unwrap_or(ASYNC_SYNC_EVERY),
+        )),
     };
     // same composition order as make_policy_full: governor inside stealing
     if o.kv_mode == KvMode::Paged {
@@ -514,6 +536,7 @@ fn run_pool_traced(mode: SimMode, input: PoolInput<'_>, o: PoolSimOpts,
                                       o.timeline_stride.max(1))
         }
     };
+    backend.staleness_cap = o.staleness.map(|n| n as u64);
     drive_traced(policy.as_mut(), &mut backend, tracer)
         .expect("sim backend is infallible; a driver error means a policy livelock");
     let mut report = backend.into_report(mode);
@@ -627,6 +650,43 @@ mod tests {
         // same resume semantics, but updates overlap decoding
         assert!(asy.total_time < part.total_time,
                 "async {} !< partial {}", asy.total_time, part.total_time);
+    }
+
+    /// The `--staleness` cap, modeled at consume time exactly like the
+    /// live buffer's `consume_bounded`: the capped run never trains on a
+    /// sample older than the cap, while the uncapped run on the same
+    /// workload provably goes further off-policy.  Conservation switches
+    /// to trained-or-dropped accounting because re-synced samples
+    /// legitimately regenerate (two engine completions, one trained
+    /// sample).
+    #[test]
+    fn async_staleness_cap_bounds_offpolicy_degree() {
+        let w = longtail_workload(512, 8192, 1);
+        let run = |staleness| {
+            simulate_pool_opts(SimMode::Async, &w, PoolSimOpts {
+                engines: 1,
+                q_total: 128,
+                update_batch: 128,
+                staleness,
+                ..PoolSimOpts::default()
+            })
+        };
+        let free = run(None);
+        // all 512 samples are born at v0 and consumed at most 128 per
+        // update, so at least 3 updates run and the uncapped tail trains
+        // >= 2 versions behind
+        assert!(free.max_staleness >= 2, "uncapped max {}", free.max_staleness);
+        assert_eq!(free.stale_resyncs, 0, "no cap, nothing to bounce");
+
+        let capped = run(Some(1));
+        assert!(capped.max_staleness <= 1, "cap violated: {}", capped.max_staleness);
+        // born-at-v0 samples consumed after the second update MUST have
+        // bounced: only 256 can legally train at v_enter <= 1
+        assert!(capped.stale_resyncs > 0, "cap never engaged");
+        // every request still ends exactly once: trained or dropped
+        assert_eq!(capped.consumed_rids.len() + capped.dropped, 512);
+        assert_eq!(capped.staleness_hist.values().sum::<u64>() as usize,
+                   capped.consumed_rids.len());
     }
 
     #[test]
@@ -901,6 +961,9 @@ mod tests {
         assert_eq!(a.throttles, b.throttles, "{ctx}: throttles");
         assert_eq!(a.peak_lanes, b.peak_lanes, "{ctx}: peak_lanes");
         assert_eq!(a.consumed_rids, b.consumed_rids, "{ctx}: consumed order");
+        assert_eq!(a.staleness_hist, b.staleness_hist, "{ctx}: staleness hist");
+        assert_eq!(a.max_staleness, b.max_staleness, "{ctx}: max staleness");
+        assert_eq!(a.stale_resyncs, b.stale_resyncs, "{ctx}: stale resyncs");
         assert_eq!(a.rollout_time.to_bits(), b.rollout_time.to_bits(),
                    "{ctx}: rollout_time {} vs {}", a.rollout_time, b.rollout_time);
         assert_eq!(a.total_time.to_bits(), b.total_time.to_bits(), "{ctx}: total_time");

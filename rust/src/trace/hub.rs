@@ -48,6 +48,10 @@ pub struct TenantSlo {
     pub dropped: usize,
     pub ttft_p50: f64,
     pub ttft_p99: f64,
+    /// Inter-token latency quantiles — the open-loop streaming SLO
+    /// (TTFT tells you when output starts; TPOT how fast it flows).
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
     pub e2e_p50: f64,
     pub e2e_p99: f64,
     /// Fraction of this tenant's arrivals trained within the SLO.
@@ -95,6 +99,14 @@ pub struct SloSummary {
     /// Pool queue depth over time: `(clock, waiting requests)` samples,
     /// deduplicated on change and downsampled to ≤ 256 points.
     pub queue_depth: Vec<(f64, usize)>,
+    /// Off-policy degree of everything trained on: `hist[d]` = samples
+    /// whose consuming update ran `d` weight versions after their first
+    /// response token.  Filled only by backends that report per-sample
+    /// staleness (`ScheduleBackend::staleness_of`); empty otherwise.
+    pub staleness_hist: BTreeMap<u64, u64>,
+    /// Largest per-sample version delta trained on — with `--staleness N`
+    /// this is provably `<= N`.
+    pub max_staleness: u64,
 }
 
 impl SloSummary {
@@ -137,6 +149,8 @@ impl SloSummary {
                         m.insert("dropped".into(), num(t.dropped as f64));
                         m.insert("ttft_p50".into(), num(t.ttft_p50));
                         m.insert("ttft_p99".into(), num(t.ttft_p99));
+                        m.insert("tpot_p50".into(), num(t.tpot_p50));
+                        m.insert("tpot_p99".into(), num(t.tpot_p99));
                         m.insert("e2e_p50".into(), num(t.e2e_p50));
                         m.insert("e2e_p99".into(), num(t.e2e_p99));
                         m.insert("goodput".into(), num(t.goodput));
@@ -154,6 +168,16 @@ impl SloSummary {
                     .collect(),
             ),
         );
+        o.insert(
+            "staleness_hist".into(),
+            Json::Obj(
+                self.staleness_hist
+                    .iter()
+                    .map(|(&d, &n)| (d.to_string(), num(n as f64)))
+                    .collect(),
+            ),
+        );
+        o.insert("max_staleness".into(), num(self.max_staleness as f64));
         Json::Obj(o)
     }
 }
@@ -196,6 +220,9 @@ pub struct TelemetryHub {
     tenants: Vec<TenantAcc>,
     /// Raw (clock, waiting) queue-depth samples, dedup-on-change.
     queue_depth: Vec<(f64, usize)>,
+    /// Per-sample off-policy degree of consumed trajectories (fed by
+    /// `Tracer::updated` from `ScheduleBackend::staleness_of`).
+    staleness_hist: BTreeMap<u64, u64>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -206,6 +233,7 @@ struct TenantAcc {
     dropped: usize,
     slo_met: usize,
     ttft: Vec<f64>,
+    tpot: Vec<f64>,
     e2e: Vec<f64>,
 }
 
@@ -238,7 +266,15 @@ impl TelemetryHub {
             arrivals: BTreeMap::new(),
             tenants: Vec::new(),
             queue_depth: Vec::new(),
+            staleness_hist: BTreeMap::new(),
         }
+    }
+
+    /// Fold one consumed sample's off-policy degree (weight versions
+    /// between its first response token and the update that trained on
+    /// it) into the staleness histogram.
+    pub fn record_staleness(&mut self, delta: u64) {
+        *self.staleness_hist.entry(delta).or_insert(0) += 1;
     }
 
     /// Register one open-loop arrival.  Latencies for registered rids are
@@ -319,6 +355,9 @@ impl TelemetryHub {
         }
         if let Some(t) = span.tpot() {
             self.tpot.push(t);
+            if let Some((_, tenant)) = reg {
+                self.tenants[tenant].tpot.push(t);
+            }
         }
         if let Some(t) = span.queue_wait() {
             self.queue_wait.push(t);
@@ -362,6 +401,8 @@ impl TelemetryHub {
                 dropped: a.dropped,
                 ttft_p50: q0(&a.ttft, 0.50),
                 ttft_p99: q0(&a.ttft, 0.99),
+                tpot_p50: q0(&a.tpot, 0.50),
+                tpot_p99: q0(&a.tpot, 0.99),
                 e2e_p50: q0(&a.e2e, 0.50),
                 e2e_p99: q0(&a.e2e, 0.99),
                 goodput: if a.enqueued == 0 {
@@ -414,6 +455,8 @@ impl TelemetryHub {
             tenants,
             fairness_jain,
             queue_depth: super::series::downsample(&self.queue_depth, 256),
+            max_staleness: self.staleness_hist.keys().next_back().copied().unwrap_or(0),
+            staleness_hist: self.staleness_hist.clone(),
         }
     }
 }
@@ -481,8 +524,14 @@ mod tests {
         assert_eq!((s.tenants[0].enqueued, s.tenants[0].completed), (1, 1));
         assert_eq!((s.tenants[1].enqueued, s.tenants[1].dropped), (2, 1));
         assert!((s.tenants[0].ttft_p50 - 1.0).abs() < 1e-12);
+        // tpot is inter-token (never arrival-relative): (4-2)/(3-1) = 1.0
+        assert!((s.tenants[0].tpot_p50 - 1.0).abs() < 1e-12);
         assert!((s.tenants[0].e2e_p50 - 3.0).abs() < 1e-12);
         assert!((s.tenants[0].goodput - 1.0).abs() < 1e-12);
+        // tenant 1: one completion at (8-3)/2 = 2.5; the drop contributes
+        // no latency samples
+        assert!((s.tenants[1].tpot_p50 - 2.5).abs() < 1e-12);
+        assert!((s.tenants[1].tpot_p99 - 2.5).abs() < 1e-12);
         assert_eq!(s.tenants[1].goodput, 0.0);
         // delivered fractions 1.0 and 0.5: J = 1.5^2 / (2 * 1.25) = 0.9
         assert!((s.fairness_jain - 0.9).abs() < 1e-12);
@@ -490,6 +539,30 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("tenants").unwrap().as_arr().unwrap().len(), 2);
         assert!((j.get("fairness_jain").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-12);
+        let t1 = &j.get("tenants").unwrap().as_arr().unwrap()[1];
+        assert!((t1.get("tpot_p50").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staleness_histogram_rolls_up_and_serializes() {
+        let mut hub = TelemetryHub::new(None);
+        // an untouched hub reports an empty histogram, max 0
+        assert_eq!(hub.summary().max_staleness, 0);
+        assert!(hub.summary().staleness_hist.is_empty());
+        for d in [0, 0, 1, 0, 3] {
+            hub.record_staleness(d);
+        }
+        let s = hub.summary();
+        assert_eq!(s.staleness_hist.get(&0), Some(&3));
+        assert_eq!(s.staleness_hist.get(&1), Some(&1));
+        assert_eq!(s.staleness_hist.get(&3), Some(&1));
+        assert_eq!(s.staleness_hist.len(), 3, "no empty buckets");
+        assert_eq!(s.max_staleness, 3);
+        let j = s.to_json();
+        let h = j.get("staleness_hist").unwrap();
+        assert_eq!(h.get("0").unwrap().as_f64(), Some(3.0));
+        assert_eq!(h.get("3").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("max_staleness").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -458,6 +458,12 @@ impl Tracer {
         self.hub.updates += 1;
         self.hub.consumed += rids.len();
         for &rid in rids {
+            // backends that stamp versions report how far off-policy each
+            // consumed sample was; `None` (cap-bounced or a backend
+            // without version tracking) contributes no bucket
+            if let Some(delta) = backend.staleness_of(rid) {
+                self.hub.record_staleness(delta);
+            }
             let sp = self.span_mut(rid, at);
             if sp.consumed.is_none() {
                 sp.consumed = Some(at);
