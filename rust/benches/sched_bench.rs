@@ -7,10 +7,12 @@ mod bench_util;
 
 use bench_util::{bench, report_rate};
 use sortedrl::rollout::kv::KvMode;
-use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
+use sortedrl::sched::{
+    make_predictor, DispatchPolicy, EngineSpec, LengthPredictor, PredictorKind, TailConfig,
+};
 use sortedrl::sim::{
     longtail_workload, pool_makespan, scale_probe, scale_probe_arrivals, simulate_pool,
-    simulate_pool_opts, simulate_pool_traced, CostModel, PoolSimOpts, SimCore, SimMode,
+    CostModel, PoolSimOpts, SimCore, SimMode, SimRun,
 };
 use sortedrl::trace::Tracer;
 use sortedrl::util::json::{num, obj, s, Json};
@@ -39,6 +41,34 @@ fn arrival_override() -> Option<ArrivalSpec> {
         .position(|a| a == "--arrival")
         .and_then(|i| args.get(i + 1))
         .map(|v| ArrivalSpec::parse(v).expect("invalid --arrival spec"))
+}
+
+/// `--tail-threshold TOK [--tail-engines N]` override for the headline's
+/// tail-packing leg (defaults: 2048-token threshold, 1 tail engine).
+fn tail_override() -> Option<TailConfig> {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |flag: &str| {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .map(|v| v.parse::<usize>().unwrap_or_else(|_| panic!("{flag} wants an integer")))
+    };
+    get("--tail-threshold").map(|threshold| {
+        let cfg = TailConfig { threshold, tail_engines: get("--tail-engines").unwrap_or(1) };
+        cfg.validate().expect("invalid tail config");
+        cfg
+    })
+}
+
+/// `--engine-spec SPEC` override for the tail leg's fleet shape
+/// (`[Nx]LANES:KV[:SPEED]`, comma-separated).
+fn spec_override() -> Vec<EngineSpec> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--engine-spec")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| EngineSpec::parse_fleet(v).expect("invalid --engine-spec"))
+        .unwrap_or_default()
 }
 
 /// The scale headline: stage one oversubscribed wave of `requests`
@@ -95,6 +125,46 @@ fn scale_run(requests: usize, engines: usize, q_total: usize,
               ({:.0} req/s host), makespan {:.0}s sim  [{spec:?}]",
              op.completed, op.requests, op.wall_secs, op_rate, op.makespan);
 
+    // tail-packing leg: run a bounded sub-wave to completion with and
+    // without tail rounds (the completion-driven SimRun on the full wave
+    // would dwarf the time-boxed probes above) and record the bubble drop.
+    // `--tail-threshold/--tail-engines/--engine-spec` override the shape.
+    let tail_cfg =
+        tail_override().unwrap_or(TailConfig { threshold: 2048, tail_engines: 1 });
+    let specs = spec_override();
+    let (tl_engines, tl_q) = if specs.is_empty() {
+        (8usize, 256usize)
+    } else {
+        (specs.len(), specs.iter().map(|s| s.lanes).sum())
+    };
+    let tw = longtail_workload(requests.min(20_000), 8192, 1);
+    let tl_opts = PoolSimOpts {
+        engines: tl_engines,
+        q_total: tl_q,
+        update_batch: tl_q,
+        cost,
+        dispatch: DispatchPolicy::ShortestPredictedFirst,
+        predictor: PredictorKind::Oracle,
+        core: SimCore::Event,
+        ..PoolSimOpts::default()
+    };
+    let t0 = std::time::Instant::now();
+    let tl_off = SimRun::new(SimMode::SortedPartial, tl_opts)
+        .workload(&tw)
+        .specs(&specs)
+        .run();
+    let tl_on = SimRun::new(SimMode::SortedPartial,
+                            PoolSimOpts { tail: Some(tail_cfg), ..tl_opts })
+        .workload(&tw)
+        .specs(&specs)
+        .run();
+    let tl_wall = t0.elapsed().as_secs_f64();
+    println!("  tail packing:   bubble {:5.2}% -> {:5.2}%  ({} rounds, {} requests \
+              packed, {} reparts; head/tail {:.2}%/{:.2}%) in {:.2}s host",
+             tl_off.bubble_ratio * 100.0, tl_on.bubble_ratio * 100.0,
+             tl_on.tail_rounds, tl_on.tail_admitted, tl_on.repartitions,
+             tl_on.head_bubble * 100.0, tl_on.tail_bubble * 100.0, tl_wall);
+
     let rss = peak_rss_kb();
     println!("  peak RSS (VmHWM proxy): {:.0} MiB", rss / 1024.0);
 
@@ -115,6 +185,15 @@ fn scale_run(requests: usize, engines: usize, q_total: usize,
         ("openloop_wall_secs", num(op.wall_secs)),
         ("openloop_requests_per_sec", num(op_rate)),
         ("openloop_makespan_sim_secs", num(op.makespan)),
+        ("tail_threshold", num(tail_cfg.threshold as f64)),
+        ("tail_engines", num(tail_cfg.tail_engines as f64)),
+        ("tail_bubble_off", num(tl_off.bubble_ratio)),
+        ("tail_bubble_on", num(tl_on.bubble_ratio)),
+        ("tail_rounds", num(tl_on.tail_rounds as f64)),
+        ("tail_repartitions", num(tl_on.repartitions as f64)),
+        ("tail_head_bubble", num(tl_on.head_bubble)),
+        ("tail_tail_bubble", num(tl_on.tail_bubble)),
+        ("tail_wall_secs", num(tl_wall)),
         ("peak_rss_kb", num(rss)),
     ]);
     match std::fs::write("BENCH_sim.json", j.to_string_pretty()) {
@@ -172,10 +251,12 @@ fn main() {
         slo: Some(25.0),
         ..PoolSimOpts::default()
     };
-    let one = simulate_pool_opts(SimMode::SortedPartial, &w,
-                                 PoolSimOpts { engines: 1, ..slo_opts });
-    let four = simulate_pool_opts(SimMode::SortedPartial, &w,
-                                  PoolSimOpts { engines: 4, ..slo_opts });
+    let one = SimRun::new(SimMode::SortedPartial, PoolSimOpts { engines: 1, ..slo_opts })
+        .workload(&w)
+        .run();
+    let four = SimRun::new(SimMode::SortedPartial, PoolSimOpts { engines: 4, ..slo_opts })
+        .workload(&w)
+        .run();
     println!("sorted-partial bubble: 1 engine {:.2}% | 4 engines {:.2}%;  \
               rollout {:.1}s -> {:.1}s",
              one.bubble_ratio * 100.0, four.bubble_ratio * 100.0,
@@ -211,9 +292,10 @@ fn main() {
         steal: false,
         ..PoolSimOpts::default()
     };
-    let no_steal = simulate_pool_opts(SimMode::Baseline, &w, steal_opts);
-    let stealing = simulate_pool_opts(SimMode::Baseline, &w,
-                                      PoolSimOpts { steal: true, ..steal_opts });
+    let no_steal = SimRun::new(SimMode::Baseline, steal_opts).workload(&w).run();
+    let stealing = SimRun::new(SimMode::Baseline, PoolSimOpts { steal: true, ..steal_opts })
+        .workload(&w)
+        .run();
     println!("work stealing vs none (baseline waves, 4x32, round-robin striping):");
     println!("  makespan  {:6.1}s  vs  {:6.1}s  ({:+.1}% with stealing)",
              stealing.rollout_time, no_steal.rollout_time,
@@ -238,10 +320,14 @@ fn main() {
         kv_page: 256,
         ..PoolSimOpts::default()
     };
-    let reserved = simulate_pool_opts(SimMode::SortedPartial, &w,
-                                      PoolSimOpts { kv_mode: KvMode::Reserve, ..kv_opts });
-    let paged = simulate_pool_opts(SimMode::SortedPartial, &w,
-                                   PoolSimOpts { kv_mode: KvMode::Paged, ..kv_opts });
+    let reserved =
+        SimRun::new(SimMode::SortedPartial, PoolSimOpts { kv_mode: KvMode::Reserve, ..kv_opts })
+            .workload(&w)
+            .run();
+    let paged =
+        SimRun::new(SimMode::SortedPartial, PoolSimOpts { kv_mode: KvMode::Paged, ..kv_opts })
+            .workload(&w)
+            .run();
     println!("paged vs reserved KV (sorted-partial, 4x32, 40k budget, 256-page):");
     println!("  concurrent lanes  {:4} vs {:4}  (peak; paged must admit more)",
              paged.peak_lanes, reserved.peak_lanes);
@@ -284,13 +370,15 @@ fn main() {
     };
     let off = bench("simulate_pool partial 4x32 tracer OFF (host)", 2.0, || {
         let mut t = Tracer::disabled();
-        std::hint::black_box(simulate_pool_traced(
-            SimMode::SortedPartial, &w, trace_opts, &mut t));
+        std::hint::black_box(
+            SimRun::new(SimMode::SortedPartial, trace_opts).workload(&w).tracer(&mut t).run(),
+        );
     });
     let on = bench("simulate_pool partial 4x32 tracer ON (spans+chrome)", 2.0, || {
         let mut t = Tracer::new(Some(25.0), true);
-        std::hint::black_box(simulate_pool_traced(
-            SimMode::SortedPartial, &w, trace_opts, &mut t));
+        std::hint::black_box(
+            SimRun::new(SimMode::SortedPartial, trace_opts).workload(&w).tracer(&mut t).run(),
+        );
     });
     println!("  tracer overhead: {:+.1}% per run when fully enabled",
              100.0 * (on.per_iter_secs / off.per_iter_secs - 1.0));

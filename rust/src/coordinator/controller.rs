@@ -29,10 +29,10 @@ use crate::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE};
 use crate::rollout::{EngineConfig, Rollout};
 use crate::runtime::{ParamState, Runtime};
 use crate::sched::policy::{
-    drive_traced, make_policy_staleness, EngineLoad, HarvestAction, HarvestItem, LaneView,
+    drive_traced, EngineLoad, EngineSpec, HarvestAction, HarvestItem, LaneView, PolicyBuilder,
     PolicyParams, SchedView, ScheduleBackend,
 };
-use crate::sched::{DispatchPolicy, EnginePool, PoolConfig, PredictorKind};
+use crate::sched::{DispatchPolicy, EnginePool, PoolConfig, PredictorKind, TailConfig};
 use crate::tasks::{Reward, Task};
 use crate::trace::{SloSummary, Tracer};
 use anyhow::Result;
@@ -149,6 +149,17 @@ pub struct LoopConfig {
     /// the derived default when unset).  `None` = legacy behavior: no
     /// consume-time cap, default sync window.
     pub staleness: Option<usize>,
+    /// Tail-round packing (`--tail-threshold`/`--tail-engines`): defer
+    /// requests whose predicted length exceeds the threshold into batched
+    /// tail rounds on a dedicated engine group, elastically borrowing
+    /// lanes + KV from the head group at round boundaries.  `None`
+    /// disables the wrapper entirely.
+    pub tail: Option<TailConfig>,
+    /// Heterogeneous fleet (`--engine-spec`): one spec per engine (lane
+    /// window, KV budget, routing speed).  Empty = uniform fleet.  When
+    /// non-empty its length must equal `num_engines` (the CLI derives
+    /// `num_engines` from the spec string).
+    pub engine_specs: Vec<EngineSpec>,
 }
 
 impl Default for LoopConfig {
@@ -178,6 +189,8 @@ impl Default for LoopConfig {
             trace_out: None,
             slo_ms: None,
             staleness: None,
+            tail: None,
+            engine_specs: Vec::new(),
         }
     }
 }
@@ -225,6 +238,19 @@ pub struct RunResult {
     /// Samples bounced by the `--staleness` cap and regenerated under
     /// fresh weights (cap-dropped samples count into `discarded`).
     pub stale_resyncs: u64,
+    /// Batched tail rounds opened on the tail engine group (0 without
+    /// `--tail-threshold`).
+    pub tail_rounds: u64,
+    /// Deferred-long requests admitted through tail rounds.
+    pub tail_admitted: u64,
+    /// Applied elastic lane/KV repartitions at tail-round boundaries.
+    pub repartitions: u64,
+    /// Bubble ratio of the head engine group alone (== `bubble_ratio`'s
+    /// whole-pool aggregation restricted to head engines; the whole pool
+    /// when no tail group is configured).
+    pub head_bubble: f64,
+    /// Bubble ratio of the tail engine group (0.0 when no tail group).
+    pub tail_bubble: f64,
 }
 
 pub struct Controller<'rt> {
@@ -240,6 +266,13 @@ pub struct Controller<'rt> {
     capacity_area: f64,
     rollout_tokens: u64,
     discarded: u64,
+    // tail-round bookkeeping (LiveBackend mirrors SimBackend's counting
+    // convention: a targeted admit landing on a tail-group engine opens a
+    // round; the round closes when the tail group drains idle)
+    tail_rounds: u64,
+    tail_admitted: u64,
+    tail_round_open: bool,
+    repartitions: u64,
 }
 
 impl<'rt> Controller<'rt> {
@@ -257,6 +290,10 @@ impl<'rt> Controller<'rt> {
             capacity_area: 0.0,
             rollout_tokens: 0,
             discarded: 0,
+            tail_rounds: 0,
+            tail_admitted: 0,
+            tail_round_open: false,
+            repartitions: 0,
         }
     }
 
@@ -281,13 +318,17 @@ impl<'rt> Controller<'rt> {
     /// straggler requeue (partial-resuming modes only — on-policy semantics
     /// would discard the preempted tokens anyway).
     fn make_pool(&self, greedy: bool, preempt: bool) -> EnginePool<'rt> {
-        EnginePool::new(self.rt, self.engine_cfg(greedy), PoolConfig {
+        let mut pool = EnginePool::new(self.rt, self.engine_cfg(greedy), PoolConfig {
             num_engines: self.cfg.num_engines.max(1),
             dispatch: self.cfg.dispatch,
             predictor: self.cfg.predictor,
             preempt,
             ..PoolConfig::default()
-        })
+        });
+        if !self.cfg.engine_specs.is_empty() {
+            pool.apply_specs(&self.cfg.engine_specs);
+        }
+        pool
     }
 
     fn effective_max_new(&self) -> usize {
@@ -412,9 +453,16 @@ impl<'rt> Controller<'rt> {
             entries_per_prompt: self.cfg.samples_per_prompt.max(1),
             update_batch: self.cfg.update_batch.max(1),
         };
-        let mut policy = make_policy_staleness(self.cfg.scheduler, params, self.cfg.steal,
-                                               self.cfg.kv_mode == KvMode::Paged,
-                                               self.cfg.staleness);
+        let mut policy = PolicyBuilder::new(self.cfg.scheduler, params)
+            .steal(self.cfg.steal)
+            .kv(KvConfig {
+                mode: self.cfg.kv_mode,
+                budget: self.cfg.kv_budget,
+                page: self.cfg.kv_page,
+            })
+            .staleness(self.cfg.staleness)
+            .tail(self.cfg.tail)
+            .build();
         let preempt = self.cfg.scheduler.resumes_partials();
         let pool = self.make_pool(false, preempt);
         let max_updates = self.cfg.max_updates;
@@ -515,6 +563,8 @@ impl<'rt> Controller<'rt> {
             None
         };
 
+        let tail_group = self.cfg.tail.map_or(0, |tc| tc.tail_engines);
+        let (head_bubble, tail_bubble) = pool.bubble_split(tail_group);
         self.absorb_engine_occupancy(&pool);
         let phase_clock = PhaseClock {
             rollout: pool.host_secs(),
@@ -534,6 +584,11 @@ impl<'rt> Controller<'rt> {
             staleness_hist,
             max_staleness,
             stale_resyncs,
+            tail_rounds: self.tail_rounds,
+            tail_admitted: self.tail_admitted,
+            repartitions: self.repartitions,
+            head_bubble,
+            tail_bubble,
         })
     }
 
@@ -643,6 +698,21 @@ impl LiveBackend<'_, '_, '_> {
         }
         Ok(())
     }
+
+    /// Tail engine-group size (clamped so at least one head engine
+    /// remains); 0 without `--tail-threshold`.
+    fn tail_group(&self) -> usize {
+        let n = self.pool.num_engines();
+        self.ctl
+            .cfg
+            .tail
+            .map_or(0, |tc| tc.tail_engines.min(n.saturating_sub(1)))
+    }
+
+    fn in_tail_group(&self, engine: usize) -> bool {
+        let group = self.tail_group();
+        group > 0 && engine >= self.pool.num_engines() - group
+    }
 }
 
 impl ScheduleBackend for LiveBackend<'_, '_, '_> {
@@ -679,6 +749,17 @@ impl ScheduleBackend for LiveBackend<'_, '_, '_> {
         // stamp every lane with the serving weights version at dispatch:
         // the version deltas behind the --staleness cap are exact
         let reqs = self.ctl.buffer.dispatch_stamped(rids, self.state.version);
+        // a targeted admit landing on a tail-group engine opens (or
+        // extends) a tail round — same convention as SimBackend
+        if let Some(i) = engine {
+            if self.in_tail_group(i) && !rids.is_empty() {
+                self.ctl.tail_admitted += rids.len() as u64;
+                if !self.ctl.tail_round_open {
+                    self.ctl.tail_round_open = true;
+                    self.ctl.tail_rounds += 1;
+                }
+            }
+        }
         match engine {
             Some(i) => self.pool.submit_to(i, reqs),
             None => self.pool.submit(reqs),
@@ -720,6 +801,23 @@ impl ScheduleBackend for LiveBackend<'_, '_, '_> {
         Ok(self.pool.throttle(engine, self.state.version))
     }
 
+    fn repartition(&mut self, engine: usize, lanes: usize, kv: usize) -> Result<bool> {
+        let applied = self.pool.repartition(engine, lanes, kv);
+        if applied {
+            self.ctl.repartitions += 1;
+        }
+        Ok(applied)
+    }
+
+    fn predicted_len(&self, rid: u64) -> Option<usize> {
+        // only schedulable (not-yet-dispatched) entries classify for tail
+        // deferral — in-flight and harvested work is already placed
+        let e = self.ctl.buffer.get(rid)?;
+        matches!(e.lifecycle, Lifecycle::Fresh | Lifecycle::Scavenged)
+            .then(|| self.pool.predict_stamp(e.prompt_id, e.prompt.len()))
+            .flatten()
+    }
+
     fn step(&mut self) -> Result<usize> {
         self.pool.admit(self.state)?;
         if self.pool.running() > 0 {
@@ -728,6 +826,16 @@ impl ScheduleBackend for LiveBackend<'_, '_, '_> {
         let rollouts = self.pool.drain_finished();
         for r in &rollouts {
             self.ctl.buffer.record_finished(r);
+        }
+        // the tail round ends once the tail group drains idle
+        if self.ctl.tail_round_open {
+            let split = self.pool.num_engines() - self.tail_group();
+            let idle = self.pool.engines()[split..]
+                .iter()
+                .all(|e| e.running() == 0 && e.queued() == 0);
+            if idle {
+                self.ctl.tail_round_open = false;
+            }
         }
         Ok(rollouts.len())
     }

@@ -415,10 +415,10 @@ pub fn math_suite(ctx: &ExpContext, rt: &Runtime) -> Result<()> {
 ///      makespan plus online predictor telemetry (MAE / Kendall tau).
 pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
     use crate::rollout::kv::KvMode;
-    use crate::sched::{DispatchPolicy, PredictorKind};
+    use crate::sched::{DispatchPolicy, PredictorKind, TailConfig};
     use crate::sim::{
-        longtail_workload, pool_makespan, simulate_pool, simulate_pool_opts,
-        simulate_pool_traced, CostModel, PoolSimOpts, SimMode,
+        longtail_workload, pool_makespan, simulate_pool, CostModel, PoolSimOpts, SimMode,
+        SimRun,
     };
     use crate::trace::Tracer;
 
@@ -503,7 +503,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
                                      (SimMode::SortedPartial, "partial", None),
                                      (SimMode::Async, "async", None),
                                      (SimMode::Async, "async-s2", Some(2))] {
-        let r = simulate_pool_opts(mode, &w, PoolSimOpts {
+        let r = SimRun::new(mode, PoolSimOpts {
             engines: 4,
             q_total: 128,
             update_batch: 128,
@@ -512,7 +512,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
             predictor: PredictorKind::History,
             staleness,
             ..PoolSimOpts::default()
-        });
+        }).workload(&w).run();
         rows.push(vec![
             label.to_string(),
             format!("{:.2}%", r.bubble_ratio * 100.0),
@@ -549,7 +549,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
     for (mode, label) in [(SimMode::Baseline, "baseline"),
                           (SimMode::SortedPartial, "partial")] {
         for steal in [false, true] {
-            let r = simulate_pool_opts(mode, &w, PoolSimOpts {
+            let r = SimRun::new(mode, PoolSimOpts {
                 engines: 4,
                 q_total: 128,
                 update_batch: 128,
@@ -558,7 +558,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
                 predictor: PredictorKind::History,
                 steal,
                 ..PoolSimOpts::default()
-            });
+            }).workload(&w).run();
             // the per-engine idle breakdown is the imbalance stealing fixes
             let worst = r.engine_idle.iter().cloned().fold(0.0, f64::max);
             let best = r.engine_idle.iter().cloned().fold(1.0, f64::min);
@@ -605,7 +605,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
     for (mode, label) in [(SimMode::Baseline, "baseline"),
                           (SimMode::SortedPartial, "partial")] {
         for kv_mode in KvMode::ALL {
-            let r = simulate_pool_opts(mode, &w, PoolSimOpts {
+            let r = SimRun::new(mode, PoolSimOpts {
                 engines: 4,
                 q_total: 64,
                 update_batch: 64,
@@ -616,7 +616,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
                 kv_mode,
                 kv_page,
                 ..PoolSimOpts::default()
-            });
+            }).workload(&w).run();
             rows.push(vec![
                 label.to_string(),
                 kv_mode.name().to_string(),
@@ -674,7 +674,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
                           (SimMode::SortedPartial, "partial"),
                           (SimMode::Async, "async")] {
         let mut tracer = Tracer::new(Some(slo), false);
-        let r = simulate_pool_traced(mode, &w, PoolSimOpts {
+        let r = SimRun::new(mode, PoolSimOpts {
             engines: 4,
             q_total: 128,
             update_batch: 128,
@@ -682,7 +682,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
             dispatch: DispatchPolicy::ShortestPredictedFirst,
             predictor: PredictorKind::History,
             ..PoolSimOpts::default()
-        }, &mut tracer);
+        }).workload(&w).tracer(&mut tracer).run();
         let t = &r.slo;
         rows.push(vec![
             label.to_string(),
@@ -718,8 +718,61 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
               quantiles track partial's since spans only cover rollout");
     ctx.write_json("pool_slo", &arr(js))?;
 
+    // ---------------- tail packing: rounds vs no rounds ------------------
+    println!("\n-- tail packing: batched tail rounds vs none (4 engines, oracle) --\n");
+    // oracle predictor so the threshold splits exactly on true lengths;
+    // the longtail workload's top decile is what the tail rounds absorb
+    let tail_cfg = TailConfig { threshold: 2048, tail_engines: 1 };
+    let mut rows = Vec::new();
+    let mut js = Vec::new();
+    for (mode, label) in [(SimMode::Baseline, "baseline"),
+                          (SimMode::SortedPartial, "partial")] {
+        for tail in [None, Some(tail_cfg)] {
+            let r = SimRun::new(mode, PoolSimOpts {
+                engines: 4,
+                q_total: 128,
+                update_batch: 128,
+                cost,
+                dispatch: DispatchPolicy::ShortestPredictedFirst,
+                predictor: PredictorKind::Oracle,
+                tail,
+                ..PoolSimOpts::default()
+            }).workload(&w).run();
+            rows.push(vec![
+                label.to_string(),
+                (if tail.is_some() { "on" } else { "off" }).to_string(),
+                format!("{:.2}%", r.bubble_ratio * 100.0),
+                format!("{:.1}", r.rollout_time),
+                format!("{}", r.tail_rounds),
+                format!("{}", r.tail_admitted),
+                format!("{}", r.repartitions),
+                format!("{:.2}%/{:.2}%", r.head_bubble * 100.0,
+                        r.tail_bubble * 100.0),
+            ]);
+            js.push(obj(vec![
+                ("mode", s(label)),
+                ("tail", Json::Bool(tail.is_some())),
+                ("threshold", num(tail_cfg.threshold as f64)),
+                ("tail_engines", num(tail_cfg.tail_engines as f64)),
+                ("bubble", num(r.bubble_ratio)),
+                ("rollout_secs", num(r.rollout_time)),
+                ("tail_rounds", num(r.tail_rounds as f64)),
+                ("tail_admitted", num(r.tail_admitted as f64)),
+                ("repartitions", num(r.repartitions as f64)),
+                ("head_bubble", num(r.head_bubble)),
+                ("tail_bubble", num(r.tail_bubble)),
+            ]));
+        }
+    }
+    print_table(&["mode", "tail", "bubble", "rollout s", "rounds", "packed",
+                  "reparts", "head/tail bubble"], &rows);
+    println!("\nexpect: deferring predicted-long rollouts into batched tail \
+              rounds keeps head rounds at full occupancy — the pool bubble \
+              falls and the residual idle concentrates in the (smaller) \
+              tail group; repartitions count the elastic lane/KV moves");
+    ctx.write_json("pool_tail", &arr(js))?;
+
     // ------------- open-loop arrivals: per-tenant SLO + fairness ---------
-    use crate::sim::simulate_pool_arrivals_traced;
     use crate::workload::{generate_trace, replay_trace, ArrivalSpec};
 
     println!("\n-- open-loop arrivals: per-tenant SLO + fairness (4 engines) --\n");
@@ -738,8 +791,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
         }
     };
     let mut tracer = Tracer::new(Some(slo_open), false);
-    let open = simulate_pool_arrivals_traced(SimMode::SortedPartial, &arrivals,
-                                             PoolSimOpts {
+    let open = SimRun::new(SimMode::SortedPartial, PoolSimOpts {
         engines: 4,
         q_total: 128,
         update_batch: 128,
@@ -747,7 +799,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
         dispatch: DispatchPolicy::ShortestPredictedFirst,
         predictor: PredictorKind::History,
         ..PoolSimOpts::default()
-    }, &mut tracer);
+    }).arrivals(&arrivals).tracer(&mut tracer).run();
     let t = &open.slo;
     let mut rows = Vec::new();
     for ten in &t.tenants {
@@ -767,17 +819,108 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
              t.fairness_jain,
              t.queue_depth.iter().map(|&(_, d)| d).max().unwrap_or(0));
 
+    // -------- robustness: steal / kv-preempt / tail under bursty+diurnal --
+    println!("\n-- robustness: steal / preempt / tail under bursty + diurnal --\n");
+    // non-stationary load is where the mitigations earn their keep: bursts
+    // pile the long tail onto whichever engines the burst hit, and diurnal
+    // troughs are when batched tail rounds can run without displacing the
+    // head.  Oracle predictor isolates the scheduling effect.
+    let base = PoolSimOpts {
+        engines: 4,
+        q_total: 128,
+        update_batch: 128,
+        cost,
+        dispatch: DispatchPolicy::ShortestPredictedFirst,
+        predictor: PredictorKind::Oracle,
+        ..PoolSimOpts::default()
+    };
+    let variants: [(&str, PoolSimOpts); 4] = [
+        ("plain", base),
+        // stealing rescues static striping, so pair it with round-robin
+        ("steal", PoolSimOpts {
+            steal: true,
+            dispatch: DispatchPolicy::RoundRobin,
+            ..base
+        }),
+        ("kv-preempt", PoolSimOpts {
+            kv_budget: 40_000,
+            kv_mode: KvMode::Paged,
+            kv_page: 256,
+            ..base
+        }),
+        ("tail", PoolSimOpts { tail: Some(tail_cfg), ..base }),
+    ];
+    let generators = [
+        ("bursty", ArrivalSpec::Bursty { rate_hi: 24.0, rate_lo: 2.0, flip: 0.1 }),
+        ("diurnal", ArrivalSpec::Diurnal { base: 10.0, amp: 0.8, period: 20.0 }),
+    ];
+    let mut rows = Vec::new();
+    let mut js = Vec::new();
+    for (gname, spec) in &generators {
+        let a = spec.build(384, 8192, ctx.seed + 7)?;
+        for (vname, o) in &variants {
+            let r = SimRun::new(SimMode::SortedPartial, *o).arrivals(&a).run();
+            rows.push(vec![
+                gname.to_string(),
+                vname.to_string(),
+                format!("{:.2}%", r.bubble_ratio * 100.0),
+                format!("{:.1}", r.rollout_time),
+                format!("{}", r.steals),
+                format!("{}", r.kv_sheds),
+                format!("{}", r.tail_rounds),
+            ]);
+            js.push(obj(vec![
+                ("arrival", s(gname)),
+                ("variant", s(vname)),
+                ("bubble", num(r.bubble_ratio)),
+                ("rollout_secs", num(r.rollout_time)),
+                ("throughput", num(r.throughput)),
+                ("steals", num(r.steals as f64)),
+                ("kv_sheds", num(r.kv_sheds as f64)),
+                ("throttles", num(r.throttles as f64)),
+                ("tail_rounds", num(r.tail_rounds as f64)),
+                ("tail_admitted", num(r.tail_admitted as f64)),
+                ("head_bubble", num(r.head_bubble)),
+                ("tail_bubble", num(r.tail_bubble)),
+            ]));
+        }
+    }
+    print_table(&["arrival", "variant", "bubble", "rollout s", "steals",
+                  "sheds", "tail rounds"], &rows);
+    ctx.write_json("pool_robustness", &arr(js))?;
+
     // ------------- sustained throughput at SLO (bisection) ---------------
-    println!("\n-- sustained throughput at SLO: max Poisson rate (bisection) --\n");
+    println!("\n-- sustained throughput at SLO: max arrival rate (bisection) --\n");
     // "meets the SLO" = >= 90% of arrivals finish within 30 simulated
     // seconds end to end, arrival-relative.  goodput(rate) is monotone
-    // non-increasing once queues saturate, so bisection converges.
+    // non-increasing once queues saturate, so bisection converges.  The
+    // `--arrival` family (poisson/bursty/diurnal) shapes the probe stream;
+    // its rate parameters are rescaled to the bisected aggregate rate.
     let slo_rate = 30.0;
     let target = 0.9;
+    let family = ctx.arrival.clone().unwrap_or(ArrivalSpec::Poisson { rate: 1.0 });
+    let probe_spec = |rate: f64| -> ArrivalSpec {
+        match &family {
+            ArrivalSpec::Bursty { rate_hi, rate_lo, flip } => {
+                // keep the on/off shape, steer the (approximate) midpoint
+                let k = rate / (0.5 * (rate_hi + rate_lo));
+                ArrivalSpec::Bursty {
+                    rate_hi: rate_hi * k,
+                    rate_lo: rate_lo * k,
+                    flip: *flip,
+                }
+            }
+            ArrivalSpec::Diurnal { amp, period, .. } => {
+                ArrivalSpec::Diurnal { base: rate, amp: *amp, period: *period }
+            }
+            // batch/trace have no free rate knob — probe plain Poisson
+            _ => ArrivalSpec::Poisson { rate },
+        }
+    };
     let probe = |rate: f64| -> Result<f64> {
-        let a = ArrivalSpec::Poisson { rate }.build(192, 4096, ctx.seed + 7)?;
+        let a = probe_spec(rate).build(192, 4096, ctx.seed + 7)?;
         let mut tr = Tracer::new(Some(slo_rate), false);
-        let r = simulate_pool_arrivals_traced(SimMode::SortedPartial, &a, PoolSimOpts {
+        let r = SimRun::new(SimMode::SortedPartial, PoolSimOpts {
             engines: 4,
             q_total: 128,
             update_batch: 128,
@@ -785,7 +928,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
             dispatch: DispatchPolicy::ShortestPredictedFirst,
             predictor: PredictorKind::History,
             ..PoolSimOpts::default()
-        }, &mut tr);
+        }).arrivals(&a).tracer(&mut tr).run();
         Ok(r.slo.goodput)
     };
     let (mut lo, mut hi) = (1.0f64, 64.0f64);
@@ -817,6 +960,7 @@ pub fn pool_suite(ctx: &ExpContext) -> Result<()> {
               (e2e SLO {slo_rate}s, partial mode, 4x32 lanes)");
     ctx.write_json("pool_openloop", &obj(vec![
         ("arrival", s(&arrival_desc)),
+        ("bisection_family", s(&format!("{family:?}"))),
         ("slo_secs", num(slo_open)),
         ("summary", t.to_json()),
         ("sustained_rate", num(sustained)),

@@ -16,14 +16,12 @@ use sortedrl::exp::{self, ExpContext, Scale};
 use sortedrl::rl::advantage::AdvantageKind;
 use sortedrl::rollout::kv::{KvConfig, KvMode, DEFAULT_KV_PAGE, MAX_KV_PAGE};
 use sortedrl::runtime::Runtime;
-use sortedrl::sched::{DispatchPolicy, PredictorKind};
-use sortedrl::sim::{
-    longtail_workload, simulate_pool_arrivals, simulate_pool_arrivals_traced,
-    simulate_pool_opts, simulate_pool_traced, PoolSimOpts, SimCore, SimMode,
-};
+use sortedrl::sched::{DispatchPolicy, EngineSpec, PredictorKind, TailConfig};
+use sortedrl::sim::{longtail_workload, PoolSimOpts, SimCore, SimMode, SimRun};
 use sortedrl::tasks::logic::LogicTask;
 use sortedrl::tasks::math::MathTask;
 use sortedrl::tasks::Task;
+use sortedrl::util::json::{num, obj};
 use sortedrl::workload::{emit_trace, generate_trace, Arrival, ArrivalSpec};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -112,6 +110,7 @@ USAGE:
                  [--engines N] [--predictor oracle|history|bucket]
                  [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
                  [--kv-mode reserve|paged] [--kv-page TOK] [--staleness N]
+                 [--tail-threshold TOK] [--tail-engines N] [--engine-spec SPEC]
                  [--trace-out FILE] [--slo MS]
                  [--artifacts DIR] [--tag TAG] [--no-warm-start]
   sortedrl exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6a|fig6b|fig9a|fig9b|tab1|
@@ -121,7 +120,8 @@ USAGE:
                [--engines N] [--predictor oracle|history|bucket]
                [--dispatch rr|least-loaded|sjf] [--steal] [--kv-budget TOK]
                [--kv-mode reserve|paged] [--kv-page TOK] [--staleness N]
-               [--sim-core event|reference]
+               [--tail-threshold TOK] [--tail-engines N] [--engine-spec SPEC]
+               [--sim-core event|reference] [--report-out FILE]
                [--arrival batch|poisson:RATE|bursty:HI,LO,FLIP|
                           diurnal:BASE,AMP,PERIOD|trace:FILE]
                [--trace-out FILE] [--slo MS] [--slo-out FILE]
@@ -156,6 +156,24 @@ of the run (open at https://ui.perfetto.dev); --slo MS records per-request
 spans and reports TTFT/TPOT/e2e p50/p99 plus goodput against an
 end-to-end latency SLO in milliseconds.  Either flag enables recording;
 without both, tracing code is compiled in but never touched.
+
+Tail rounds (train & sim): --tail-threshold TOK defers every request
+whose predicted response length exceeds TOK into batched tail rounds on
+the top --tail-engines engines (default 1), elastically borrowing lanes
+and KV budget from the head group at round boundaries and giving them
+back when the round drains.  Needs a token-count predictor
+(oracle|history) and at least 2 engines so one stays in the head group.
+
+--engine-spec declares a heterogeneous fleet as comma-separated
+[Nx]LANES:KV[:SPEED] atoms — e.g. '2x8:4096:2,4:65536:0.5' is two fast
+8-lane engines with 4096-token KV plus one half-speed 4-lane engine with
+a 65536-token budget ('max' = unlimited KV).  The spec replaces --queue's
+uniform split, --engines defaults to the fleet size, and SPEED weighs
+routing/stealing decisions (sim engines also decode at that relative
+speed; live engines decode at hardware speed).
+
+--report-out FILE (sim, closed loop) dumps the partial-mode pool report
+as JSON (throughput, bubble split, tail-round and repartition counters).
 
 --arrival switches sim from the closed loop (batch: every request
 schedulable at t=0, the default — byte-identical to runs predating the
@@ -227,6 +245,73 @@ fn parse_dispatch(args: &Args) -> Result<DispatchPolicy> {
         .context("--dispatch rr|least-loaded|sjf")
 }
 
+/// Parse the tail-round flag pair (`--tail-threshold`, `--tail-engines`).
+/// Rejects configurations that could only ever be inert: a rank-only
+/// predictor stamps no token counts (nothing would classify as tail), and
+/// a 1-engine fleet leaves no head group to borrow from.
+fn parse_tail(args: &Args, predictor: PredictorKind, engines: usize)
+              -> Result<Option<TailConfig>> {
+    let Some(threshold) = args.get("tail-threshold") else {
+        if args.get("tail-engines").is_some() {
+            bail!("--tail-engines needs --tail-threshold TOK to define what \
+                   counts as a tail request");
+        }
+        return Ok(None);
+    };
+    let threshold: usize = threshold
+        .parse()
+        .with_context(|| format!("--tail-threshold {threshold}"))?;
+    let tail_engines = args.get_usize("tail-engines", 1)?;
+    let tc = TailConfig { threshold, tail_engines };
+    tc.validate()?;
+    if predictor == PredictorKind::Bucket {
+        bail!("--tail-threshold needs a token-count predictor \
+               (--predictor oracle|history); bucket is rank-only, so no \
+               request would ever classify as tail");
+    }
+    if engines < 2 {
+        bail!("--tail-threshold needs --engines >= 2 (at least one engine \
+               must stay in the head group)");
+    }
+    if tail_engines >= engines {
+        bail!("--tail-engines {tail_engines} must leave a head engine \
+               (--engines {engines})");
+    }
+    Ok(Some(tc))
+}
+
+/// Parse `--engine-spec` into a heterogeneous fleet, cross-validated
+/// against the KV flags the way `--kv-budget` is: a paged per-engine
+/// budget must hold at least one `--kv-page` page.
+fn parse_specs(args: &Args, kv: &KvConfig) -> Result<Vec<EngineSpec>> {
+    let Some(s) = args.get("engine-spec") else { return Ok(Vec::new()) };
+    let fleet = EngineSpec::parse_fleet(s)?;
+    if kv.mode == KvMode::Paged {
+        for (i, sp) in fleet.iter().enumerate() {
+            if sp.kv_budget != usize::MAX && sp.kv_budget < kv.page {
+                bail!("--engine-spec engine {i}: paged kv budget {} cannot \
+                       hold one --kv-page {} page; raise the budget, lower \
+                       --kv-page, or use 'max'", sp.kv_budget, kv.page);
+            }
+        }
+    }
+    Ok(fleet)
+}
+
+/// `--engines` resolved against `--engine-spec`: the spec defines the
+/// fleet size; an explicit `--engines` must agree with it.
+fn resolve_engines(args: &Args, specs: &[EngineSpec]) -> Result<usize> {
+    let default = if specs.is_empty() { 1 } else { specs.len() };
+    let n = args.get_usize("engines", default)?;
+    if n == 0 {
+        bail!("--engines must be >= 1");
+    }
+    if !specs.is_empty() && n != specs.len() {
+        bail!("--engines {n} disagrees with --engine-spec ({} engines)", specs.len());
+    }
+    Ok(n)
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
@@ -280,6 +365,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         .with_context(|| format!("--scheduler {}", SchedulerKind::valid_names()))?;
     let seed = args.get_u64("seed", 0)?;
     let kv = parse_kv(args)?;
+    let specs = parse_specs(args, &kv)?;
+    let num_engines = resolve_engines(args, &specs)?;
+    let predictor = parse_predictor(args)?;
+    let tail = parse_tail(args, predictor, num_engines)?;
     let (trace_out, slo_ms) = parse_tracing(args)?;
     let cfg = LoopConfig {
         scheduler,
@@ -296,14 +385,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", ts.eval_every)?,
         eval_limit: args.get_usize("eval-limit", ts.eval_limit)?,
         verbose: true,
-        num_engines: {
-            let n = args.get_usize("engines", 1)?;
-            if n == 0 {
-                bail!("--engines must be >= 1");
-            }
-            n
-        },
-        predictor: parse_predictor(args)?,
+        num_engines,
+        predictor,
         dispatch: parse_dispatch(args)?,
         steal: args.get("steal").is_some(),
         kv_budget: kv.budget,
@@ -312,6 +395,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         trace_out,
         slo_ms,
         staleness,
+        tail,
+        engine_specs: specs,
     };
     let ds = Dataset::generate(task.as_ref(), ts.per_difficulty, 0.1, seed + 1);
     eprintln!("dataset: {} train / {} eval; scheduler: {}",
@@ -323,6 +408,20 @@ fn cmd_train(args: &Args) -> Result<()> {
               if cfg.kv_budget == usize::MAX { "unlimited".to_string() }
               else { cfg.kv_budget.to_string() },
               cfg.kv_page);
+    if let Some(tc) = cfg.tail {
+        eprintln!("tail rounds: threshold {} tokens, {} tail engine(s)",
+                  tc.threshold, tc.tail_engines);
+    }
+    if !cfg.engine_specs.is_empty() {
+        eprintln!("fleet: {}",
+                  cfg.engine_specs.iter()
+                      .map(|s| format!("{}:{}:{}", s.lanes,
+                           if s.kv_budget == usize::MAX { "max".to_string() }
+                           else { s.kv_budget.to_string() },
+                           s.speed))
+                      .collect::<Vec<_>>()
+                      .join(","));
+    }
 
     let mut state = rt.init(seed as i32)?;
     if args.get("no-warm-start").is_none() {
@@ -336,6 +435,12 @@ fn cmd_train(args: &Args) -> Result<()> {
              result.final_eval.score, result.final_eval.accuracy,
              result.final_eval.mean_resp_len);
     println!("rollout bubble ratio: {:.2}%", result.bubble_ratio * 100.0);
+    if tail.is_some() {
+        println!("tail rounds: {} ({} requests packed, {} repartitions); \
+                  head bubble {:.2}% tail bubble {:.2}%",
+                 result.tail_rounds, result.tail_admitted, result.repartitions,
+                 result.head_bubble * 100.0, result.tail_bubble * 100.0);
+    }
     println!("rollout tokens: {}; rollout secs {:.1}; update secs {:.1}",
              result.total_rollout_tokens, result.phase_clock.rollout,
              result.phase_clock.update);
@@ -488,55 +593,66 @@ fn cmd_workload(args: &Args) -> Result<()> {
 fn cmd_sim(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 512)?;
     let cap = args.get_usize("cap", 8192)?;
-    let q = args.get_usize("queue", 128)?;
     let u = args.get_usize("update-batch", 128)?;
     let seed = args.get_u64("seed", 0)?;
-    let engines = args.get_usize("engines", 1)?;
-    if engines == 0 {
-        bail!("--engines must be >= 1");
-    }
-    if engines > q {
-        bail!("--engines {engines} exceeds --queue {q} (each engine needs at least one lane)");
-    }
-    if q % engines != 0 {
-        bail!("--queue {q} must be divisible by --engines {engines} \
-               (otherwise the 1-vs-N comparison runs unequal capacities)");
-    }
+    let kv = parse_kv(args)?;
+    let specs = parse_specs(args, &kv)?;
+    let engines = resolve_engines(args, &specs)?;
+    let q = if specs.is_empty() {
+        let q = args.get_usize("queue", 128)?;
+        if engines > q {
+            bail!("--engines {engines} exceeds --queue {q} (each engine needs at least one lane)");
+        }
+        if q % engines != 0 {
+            bail!("--queue {q} must be divisible by --engines {engines} \
+                   (otherwise the 1-vs-N comparison runs unequal capacities)");
+        }
+        q
+    } else {
+        if args.get("queue").is_some() {
+            bail!("--queue conflicts with --engine-spec (lane counts come \
+                   from the spec)");
+        }
+        specs.iter().map(|s| s.lanes).sum()
+    };
     if u == 0 {
         bail!("--update-batch must be >= 1");
     }
     let predictor = parse_predictor(args)?;
     let dispatch = parse_dispatch(args)?;
     let steal = args.get("steal").is_some();
-    let kv = parse_kv(args)?;
     let staleness = parse_staleness(args)?;
+    let tail = parse_tail(args, predictor, engines)?;
     let core = match args.get("sim-core") {
         Some(s) => SimCore::parse(s).context("--sim-core event|reference")?,
         None => SimCore::default(),
     };
-    let spec = match args.get("arrival") {
+    // the full pool-shaped knob set; the historical single-engine legs
+    // below deliberately run `PoolSimOpts::default()`-shaped opts instead
+    let opts = PoolSimOpts {
+        engines,
+        q_total: q,
+        update_batch: u,
+        dispatch,
+        predictor,
+        steal,
+        kv_budget: kv.budget,
+        kv_mode: kv.mode,
+        kv_page: kv.page,
+        core,
+        staleness,
+        tail,
+        ..PoolSimOpts::default()
+    };
+    let arrival = match args.get("arrival") {
         Some(s) => ArrivalSpec::parse(s)?,
         None => ArrivalSpec::Batch,
     };
-    if spec.is_open_loop() {
+    if arrival.is_open_loop() {
         // open-loop stream: requests enter at their arrival instants —
         // a different experiment shape, reported by its own section
-        let opts = PoolSimOpts {
-            engines,
-            q_total: q,
-            update_batch: u,
-            dispatch,
-            predictor,
-            steal,
-            kv_budget: kv.budget,
-            kv_mode: kv.mode,
-            kv_page: kv.page,
-            core,
-            staleness,
-            ..PoolSimOpts::default()
-        };
-        let arrivals = spec.build(n, cap, seed)?;
-        return sim_open_loop(args, &arrivals, cap, q, u, opts);
+        let arrivals = arrival.build(n, cap, seed)?;
+        return sim_open_loop(args, &arrivals, cap, q, u, opts, &specs);
     }
     let w = longtail_workload(n, cap, seed);
     println!("workload: {n} requests, cap {cap}, queue {q}, update batch {u}{}\n",
@@ -550,12 +666,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
                           (SimMode::Async, "async")] {
         // identical to the historical `simulate()` shorthand when no cap
         // is set (same dispatch/predictor defaults, 1 engine)
-        let r = simulate_pool_opts(mode, &w, PoolSimOpts {
+        let r = SimRun::new(mode, PoolSimOpts {
             q_total: q,
             update_batch: u,
             staleness,
             ..PoolSimOpts::default()
-        });
+        }).workload(&w).run();
         println!("{label:>10}: {:7.0} tok/s  bubble {:5.2}%  rollout {:7.1}s  \
                   total {:7.1}s  wasted {:8}  clipped {:3}  max-stale {:2}",
                  r.throughput, r.bubble_ratio * 100.0, r.rollout_time,
@@ -565,34 +681,27 @@ fn cmd_sim(args: &Args) -> Result<()> {
         println!("\npool: {engines} engines x {} lanes, predictor {}, dispatch {}, \
                   steal {steal} (1-engine vs {engines}-engine, same total capacity)",
                  q / engines, predictor.name(), dispatch.name());
-        let opts = PoolSimOpts {
-            engines,
-            q_total: q,
-            update_batch: u,
-            dispatch,
-            predictor,
-            steal,
-            kv_budget: kv.budget,
-            kv_mode: kv.mode,
-            kv_page: kv.page,
-            core,
-            staleness,
-            ..PoolSimOpts::default()
-        };
         let mut telemetry = (0.0, 0.0);
         let mut stolen = (0u64, 0u64);
         let mut kv_stats = (0usize, 0u64, 0u64);
         let mut stale = (0u64, 0u64);
+        let mut tail_stats = (0u64, 0u64, 0u64, 0.0f64, 0.0f64);
         for (mode, label) in [(SimMode::Baseline, "baseline"),
                               (SimMode::SortedOnPolicy, "on-policy"),
                               (SimMode::SortedPartial, "partial"),
                               (SimMode::Async, "async")] {
-            let one = simulate_pool_opts(mode, &w,
-                                         PoolSimOpts { engines: 1, ..opts });
-            let many = simulate_pool_opts(mode, &w, opts);
+            // the 1-engine comparison leg keeps uniform lanes: per-engine
+            // specs only make sense for the N-engine side
+            let one = SimRun::new(mode, PoolSimOpts { engines: 1, ..opts })
+                .workload(&w)
+                .run();
+            let many = SimRun::new(mode, opts).workload(&w).specs(&specs).run();
             if mode == SimMode::SortedPartial {
                 telemetry = (many.predictor_mae, many.predictor_tau);
                 kv_stats = (many.peak_lanes, many.kv_sheds, many.throttles);
+                tail_stats = (many.tail_rounds, many.tail_admitted,
+                              many.repartitions, many.head_bubble,
+                              many.tail_bubble);
             }
             // report steal stats from the unsorted baseline: sorted modes
             // already balance the tail and steal ~never
@@ -627,6 +736,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
                       max consumed {}, {} re-syncs",
                      stale.0, stale.1);
         }
+        if let Some(tc) = tail {
+            println!("tail packing (partial, threshold {} tokens, {} tail \
+                      engine(s)): {} rounds, {} requests packed, {} \
+                      repartitions; head bubble {:.2}% tail bubble {:.2}%",
+                     tc.threshold, tc.tail_engines, tail_stats.0,
+                     tail_stats.1, tail_stats.2,
+                     tail_stats.3 * 100.0, tail_stats.4 * 100.0);
+        }
     } else {
         println!("\n(pass --engines N to compare 1-engine vs N-engine pools)");
     }
@@ -637,23 +754,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if trace_out.is_some() || slo_ms.is_some() {
         // trace the partial-rollout scheduler (the paper's headline mode)
         // through the same pool the comparison above ran
-        let opts = PoolSimOpts {
-            engines,
-            q_total: q,
-            update_batch: u,
-            dispatch,
-            predictor,
-            steal,
-            kv_budget: kv.budget,
-            kv_mode: kv.mode,
-            kv_page: kv.page,
-            core,
-            staleness,
-            ..PoolSimOpts::default()
-        };
         let slo_secs = slo_ms.map(|ms| ms / 1000.0);
         let mut tracer = sortedrl::trace::Tracer::new(slo_secs, trace_out.is_some());
-        let r = simulate_pool_traced(SimMode::SortedPartial, &w, opts, &mut tracer);
+        let r = SimRun::new(SimMode::SortedPartial, opts)
+            .workload(&w)
+            .specs(&specs)
+            .tracer(&mut tracer)
+            .run();
         let s = &r.slo;
         println!("\nslo (partial, {engines} engine(s){}):",
                  match slo_ms {
@@ -684,6 +791,33 @@ fn cmd_sim(args: &Args) -> Result<()> {
                      tracer.chrome_events(), path.display());
         }
     }
+    if let Some(path) = args.get("report-out") {
+        // one partial-mode pool run with every knob applied, dumped as a
+        // flat JSON object (CI greps the tail/bubble keys out of this file)
+        let r = SimRun::new(SimMode::SortedPartial, opts)
+            .workload(&w)
+            .specs(&specs)
+            .run();
+        let json = obj(vec![
+            ("throughput", num(r.throughput)),
+            ("bubble_ratio", num(r.bubble_ratio)),
+            ("rollout_time", num(r.rollout_time)),
+            ("total_time", num(r.total_time)),
+            ("wasted_tokens", num(r.wasted_tokens as f64)),
+            ("clipped", num(r.clipped as f64)),
+            ("steals", num(r.steals as f64)),
+            ("kv_sheds", num(r.kv_sheds as f64)),
+            ("throttles", num(r.throttles as f64)),
+            ("tail_rounds", num(r.tail_rounds as f64)),
+            ("tail_admitted", num(r.tail_admitted as f64)),
+            ("repartitions", num(r.repartitions as f64)),
+            ("head_bubble", num(r.head_bubble)),
+            ("tail_bubble", num(r.tail_bubble)),
+        ]);
+        std::fs::write(path, json.to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("\nwrote partial-mode pool report JSON to {path}");
+    }
     Ok(())
 }
 
@@ -691,7 +825,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
 /// stream, then (with tracing flags) a recorded partial-mode run that
 /// reports arrival-relative latencies, per-tenant rollups, and fairness.
 fn sim_open_loop(args: &Args, arrivals: &[Arrival], cap: usize, q: usize, u: usize,
-                 opts: PoolSimOpts) -> Result<()> {
+                 opts: PoolSimOpts, specs: &[EngineSpec]) -> Result<()> {
     if arrivals.is_empty() {
         bail!("--arrival produced an empty stream");
     }
@@ -703,7 +837,7 @@ fn sim_open_loop(args: &Args, arrivals: &[Arrival], cap: usize, q: usize, u: usi
                           (SimMode::SortedOnPolicy, "on-policy"),
                           (SimMode::SortedPartial, "partial"),
                           (SimMode::Async, "async")] {
-        let r = simulate_pool_arrivals(mode, arrivals, opts);
+        let r = SimRun::new(mode, opts).arrivals(arrivals).specs(specs).run();
         println!("{label:>10}: {:7.0} tok/s  bubble {:5.2}%  rollout {:7.1}s  \
                   total {:7.1}s  clipped {:3}  dropped {:3}",
                  r.throughput, r.bubble_ratio * 100.0, r.rollout_time,
@@ -716,8 +850,11 @@ fn sim_open_loop(args: &Args, arrivals: &[Arrival], cap: usize, q: usize, u: usi
     if trace_out.is_some() || slo_ms.is_some() {
         let slo_secs = slo_ms.map(|ms| ms / 1000.0);
         let mut tracer = sortedrl::trace::Tracer::new(slo_secs, trace_out.is_some());
-        let r = simulate_pool_arrivals_traced(SimMode::SortedPartial, arrivals, opts,
-                                              &mut tracer);
+        let r = SimRun::new(SimMode::SortedPartial, opts)
+            .arrivals(arrivals)
+            .specs(specs)
+            .tracer(&mut tracer)
+            .run();
         let s = &r.slo;
         println!("\nslo (partial, {} engine(s), arrival-relative{}):",
                  opts.engines,

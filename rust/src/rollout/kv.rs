@@ -52,6 +52,17 @@ pub fn stamp_prediction(rank_only: bool, predicted: f64) -> Option<usize> {
     (!rank_only && predicted.is_finite()).then(|| predicted.max(1.0) as usize)
 }
 
+/// Predicted response tokens a lane still has to generate: the predicted
+/// total (clamped exactly like [`KvConfig::admit_estimate`] — to
+/// `[progress + 1, cap]`, cap fallback when no token-count prediction
+/// exists) minus observed progress.  THE single remaining-work price used
+/// by shed/preempt victim selection in every backend.
+pub fn predicted_remaining(progress: usize, cap: usize, predicted: Option<usize>) -> usize {
+    let floor = progress.saturating_add(1).min(cap.max(1));
+    let total = predicted.unwrap_or(cap).clamp(floor, cap.max(1));
+    total.saturating_sub(progress)
+}
+
 /// How admitted lanes are charged against the KV budget.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvMode {
@@ -160,6 +171,34 @@ impl KvConfig {
         }
     }
 
+    /// Per-page fragmentation a lane's context currently wastes: the slack
+    /// between the page-rounded charge and the tokens actually held.
+    /// Reserve mode charges the worst case regardless of pages, so its
+    /// fragmentation is defined as zero (the victim tiebreak degrades to
+    /// index order there).
+    pub fn fragmentation(&self, prompt: usize, held: usize) -> usize {
+        match self.mode {
+            KvMode::Reserve => 0,
+            KvMode::Paged => {
+                let ctx = prompt.saturating_add(held);
+                self.page_ceil(ctx).saturating_sub(ctx)
+            }
+        }
+    }
+
+    /// Sort key for shed/preempt victim selection: `(predicted remaining
+    /// work, per-page fragmentation)`, both descending via `max_by_key`.
+    /// Evicting the lane with the most predicted work left frees its KV
+    /// for the longest stretch and defers exactly the request tail rounds
+    /// exist to absorb (RollPacker's pricing — the PR-4 "smallest context"
+    /// rule evicted whichever lane happened to be cheapest NOW, which is
+    /// maximally wrong about the future).  Fragmentation breaks ties
+    /// toward the lane wasting the most page slack.
+    pub fn victim_key(&self, prompt: usize, held: usize, cap: usize,
+                      predicted: Option<usize>) -> (usize, usize) {
+        (predicted_remaining(held, cap, predicted), self.fragmentation(prompt, held))
+    }
+
     /// Projected-overflow signal: in paged mode, every active lane can
     /// cross a page boundary within the next decode chunk, so usage may
     /// grow by one page per lane — `KvPressure` fires when that projection
@@ -238,6 +277,31 @@ mod tests {
         assert!(!p.pressure(0, 0), "idle engine has no pressure");
         let r = KvConfig { mode: KvMode::Reserve, budget: 100, page: 10 };
         assert!(!r.pressure(99, 8), "reserve mode cannot over-commit");
+    }
+
+    #[test]
+    fn predicted_remaining_clamps_like_the_admission_gate() {
+        // oracle-ish prediction: remaining = predicted - progress
+        assert_eq!(predicted_remaining(10, 512, Some(100)), 90);
+        // no prediction: assume the cap
+        assert_eq!(predicted_remaining(10, 512, None), 502);
+        // prediction already overtaken by progress: floored at one token
+        assert_eq!(predicted_remaining(200, 512, Some(100)), 1);
+        // prediction past the cap: clamped to it
+        assert_eq!(predicted_remaining(0, 512, Some(9_999)), 512);
+    }
+
+    #[test]
+    fn victim_key_prices_remaining_work_then_fragmentation() {
+        let p = paged(10_000, 16);
+        // long-predicted lane outranks a short one regardless of context
+        assert!(p.victim_key(64, 300, 512, Some(500)) > p.victim_key(64, 10, 512, Some(20)));
+        // equal remaining work: the lane wasting more page slack loses
+        // (held 16 -> ctx 80, 0 slack; held 17 -> ctx 81, 15 slack)
+        assert!(p.victim_key(64, 17, 512, Some(100)) > p.victim_key(64, 16, 512, Some(99)));
+        // reserve mode: fragmentation is defined as zero
+        let r = KvConfig { mode: KvMode::Reserve, budget: 1000, page: 16 };
+        assert_eq!(r.victim_key(64, 17, 512, Some(100)).1, 0);
     }
 
     #[test]

@@ -127,6 +127,10 @@ pub struct LaneProgress {
     /// check): the full reservation in reserve mode, the paged admission
     /// estimate otherwise.
     pub reserve: usize,
+    /// Generation cap of the lane's request (victim pricing input).
+    pub max_new: usize,
+    /// Predicted-length stamp captured at dispatch (None when rank-only).
+    pub predicted: Option<usize>,
 }
 
 struct Lane {
@@ -284,6 +288,30 @@ impl<'rt> Engine<'rt> {
     /// Lanes force-evicted by paged backpressure so far.
     pub fn kv_sheds(&self) -> u64 {
         self.sheds
+    }
+
+    /// Elastic repartition hook (`Decision::Repartition`): resize this
+    /// engine's usable lane window and KV budget transactionally.  Live
+    /// lanes are pinned to their cache rows, so the window can only
+    /// shrink to a suffix that is already free; growth is clamped to the
+    /// compiled kernel batch width (the hardware ceiling — a grant above
+    /// it still "applies" at the clamped width).  The new budget must
+    /// cover what occupied lanes already hold, except that a single
+    /// running lane keeps the progress guarantee.  Returns false — state
+    /// untouched — when either half cannot apply.
+    pub fn set_capacity(&mut self, lanes: usize, budget: usize) -> bool {
+        let width = self.rt.manifest.shapes.engine_batch;
+        let lanes = lanes.clamp(1, width);
+        let pinned = self.lanes.iter().rposition(|l| l.is_some()).map_or(0, |i| i + 1);
+        if lanes < pinned {
+            return false;
+        }
+        if budget < self.kv_used() && self.running() > 1 {
+            return false;
+        }
+        self.lanes.resize_with(lanes, || None);
+        self.cfg.kv.budget = budget;
+        true
     }
 
     /// The KV admission gate shared by `admit`, `kv_blocked`, and the
@@ -518,13 +546,15 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Paged-mode forced backpressure: if actual usage outgrew the budget
-    /// (admission estimates undershot), evict the smallest-context lane
-    /// back to the local queue — progress and log-probs kept, resume pays
-    /// one re-prefill — until the budget holds again or one lane remains
-    /// (the running twin of the empty-engine admission escape).  This is
-    /// what keeps "usage never exceeds the budget" a hard invariant even
-    /// though paged admission may over-commit; the policy-level
-    /// `Decision::Throttle` path sheds proactively so this rarely fires.
+    /// (admission estimates undershot), evict the lane with the most
+    /// predicted remaining work (per-page fragmentation breaks ties — see
+    /// [`KvConfig::victim_key`]) back to the local queue — progress and
+    /// log-probs kept, resume pays one re-prefill — until the budget holds
+    /// again or one lane remains (the running twin of the empty-engine
+    /// admission escape).  This is what keeps "usage never exceeds the
+    /// budget" a hard invariant even though paged admission may
+    /// over-commit; the policy-level `Decision::Throttle` path sheds
+    /// proactively so this rarely fires.
     fn shed_over_budget(&mut self) {
         if self.cfg.kv.mode != kv::KvMode::Paged || self.cfg.kv.unlimited() {
             return;
@@ -534,9 +564,20 @@ impl<'rt> Engine<'rt> {
                 .lanes
                 .iter()
                 .enumerate()
-                .filter_map(|(i, slot)| slot.as_ref().map(|l| (self.lane_charge(l), i)))
-                .min()
-                .map(|(_, i)| i);
+                .filter_map(|(i, slot)| {
+                    slot.as_ref().map(|l| {
+                        let held = l.request.resumed.len() + l.emitted.len();
+                        let key = self.cfg.kv.victim_key(
+                            l.request.prompt.len(),
+                            held,
+                            l.request.max_new,
+                            l.request.predicted_len,
+                        );
+                        (key, std::cmp::Reverse(i))
+                    })
+                })
+                .max()
+                .map(|(_, std::cmp::Reverse(i))| i);
             let Some(i) = victim else { break };
             let l = self.lanes[i].take().unwrap();
             let mut req = l.request;
@@ -595,6 +636,8 @@ impl<'rt> Engine<'rt> {
                             l.request.max_new,
                             l.request.predicted_len,
                         ),
+                        max_new: l.request.max_new,
+                        predicted: l.request.predicted_len,
                     }
                 })
             })

@@ -19,7 +19,8 @@
 
 use crate::rollout::kv::{KvConfig, KvMode};
 use crate::sched::policy::{
-    EngineLoad, HarvestAction, HarvestItem, LaneView, SchedView, ScheduleBackend,
+    speed_to_q8, EngineLoad, EngineSpec, HarvestAction, HarvestItem, LaneView, SchedView,
+    ScheduleBackend,
 };
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
@@ -51,6 +52,15 @@ enum St {
 
 struct HEngine {
     lanes: usize,
+    /// Per-engine KV budget.  Homogeneous constructors copy
+    /// `KvConfig::budget` here; `--engine-spec` twins and
+    /// `Decision::Repartition` reshape it per engine.
+    budget: usize,
+    /// Relative speed, reported through `EngineLoad::speed_q8` so
+    /// spec-normalized routing keys see it.  The harness still decodes
+    /// one token per lane per tick — speed shapes ROUTING, and the
+    /// invariants must hold for any routing the policy derives from it.
+    speed: f64,
     running: Vec<u64>,
     queue: VecDeque<u64>,
 }
@@ -120,7 +130,13 @@ impl TokenBackend {
             progress: vec![0; n],
             state: vec![St::Unloaded; n],
             engines: (0..engines)
-                .map(|_| HEngine { lanes: lanes_each, running: Vec::new(), queue: VecDeque::new() })
+                .map(|_| HEngine {
+                    lanes: lanes_each,
+                    budget: kv.budget,
+                    speed: 1.0,
+                    running: Vec::new(),
+                    queue: VecDeque::new(),
+                })
                 .collect(),
             central: VecDeque::new(),
             dispatch,
@@ -143,6 +159,32 @@ impl TokenBackend {
         }
     }
 
+    /// Heterogeneous-fleet constructor: one [`EngineSpec`] per engine
+    /// (lanes / KV budget / speed).  `kv.mode`/`kv.page` set the shared
+    /// accounting model; each spec's budget overrides `kv.budget` on its
+    /// engine.
+    pub fn new_specs(lens: &[usize], dispatch: HarnessDispatch, kv: KvConfig,
+                     specs: &[EngineSpec]) -> Self {
+        assert!(!specs.is_empty(), "need at least one engine spec");
+        for s in specs {
+            s.validate().expect("invalid engine spec");
+        }
+        let mut b = Self::new_kv(lens, specs.len(), 1, dispatch, kv);
+        for (e, s) in b.engines.iter_mut().zip(specs) {
+            e.lanes = s.lanes;
+            e.budget = s.kv_budget;
+            e.speed = s.speed;
+        }
+        b
+    }
+
+    /// The per-engine KV view: the shared mode/page with engine `i`'s own
+    /// budget, so every gate/headroom/pressure helper prices against the
+    /// budget that actually constrains that engine.
+    fn kv_at(&self, i: usize) -> KvConfig {
+        KvConfig { budget: self.engines[i].budget, ..self.kv }
+    }
+
     /// What a lane holding `rid` charges right now (worst case in reserve
     /// mode, paged actual context otherwise).
     fn charge(&self, rid: u64) -> usize {
@@ -158,8 +200,8 @@ impl TokenBackend {
         self.kv.admit_estimate(HARNESS_PROMPT, self.progress[r], self.lens[r], None)
     }
 
-    fn kv_gate_refuses(&self, used: usize, estimate: usize) -> bool {
-        self.kv.gate_refuses(used, estimate)
+    fn kv_gate_refuses(&self, engine: usize, used: usize, estimate: usize) -> bool {
+        self.kv_at(engine).gate_refuses(used, estimate)
     }
 
     fn kv_used(&self, engine: usize) -> usize {
@@ -184,18 +226,26 @@ impl TokenBackend {
     }
 
     /// The harness twin of the live engine's forced paged backpressure:
-    /// evict smallest-context lanes back to the queue (progress kept)
-    /// until the budget holds or one lane remains.
+    /// evict the lane with the most predicted-remaining work (ties on
+    /// paged fragmentation, then lowest lane) back to the queue, progress
+    /// kept, until the budget holds or one lane remains — the same victim
+    /// pricing as `KvConfig::victim_key` everywhere else.
     fn shed_over_budget(&mut self, i: usize) {
-        if self.kv.mode != KvMode::Paged || self.kv.budget == usize::MAX {
+        if self.kv.mode != KvMode::Paged || self.engines[i].budget == usize::MAX {
             return;
         }
-        while self.engines[i].running.len() > 1 && self.kv_used(i) > self.kv.budget {
+        while self.engines[i].running.len() > 1 && self.kv_used(i) > self.engines[i].budget {
             let pos = self.engines[i]
                 .running
                 .iter()
                 .enumerate()
-                .min_by_key(|&(pos, &rid)| (self.charge(rid), pos))
+                .max_by_key(|&(pos, &rid)| {
+                    let r = rid as usize;
+                    (
+                        self.kv.victim_key(HARNESS_PROMPT, self.progress[r], self.lens[r], None),
+                        std::cmp::Reverse(pos),
+                    )
+                })
                 .map(|(pos, _)| pos)
                 .expect("running checked non-empty");
             let rid = self.engines[i].running.remove(pos);
@@ -238,7 +288,7 @@ impl TokenBackend {
                 }
             };
             let est = self.estimate(rid);
-            if self.kv_gate_refuses(used, est) {
+            if self.kv_gate_refuses(i, used, est) {
                 break;
             }
             if local.is_some() {
@@ -288,9 +338,9 @@ impl TokenBackend {
             // beyond that the budget is a hard ceiling — in BOTH modes:
             // paged over-commit must have been shed back under the budget
             // before any transition completes
-            assert!(used <= self.kv.budget || e.running.len() == 1,
+            assert!(used <= e.budget || e.running.len() == 1,
                     "engine {i} kv {used} over budget {} with {} lanes",
-                    self.kv.budget, e.running.len());
+                    e.budget, e.running.len());
             assert!(e.running.len() <= e.lanes, "engine {i} over lanes");
             // double-entry ledger: the mirrored charges of this engine's
             // lanes must equal the derived usage, rid by rid
@@ -349,15 +399,16 @@ impl ScheduleBackend for TokenBackend {
                     .engines[i]
                     .queue
                     .front()
-                    .is_some_and(|&rid| self.kv_gate_refuses(used, self.estimate(rid)));
+                    .is_some_and(|&rid| self.kv_gate_refuses(i, used, self.estimate(rid)));
                 EngineLoad {
                     queued: self.engines[i].queue.len(),
                     active: self.engines[i].running.len(),
                     lanes: self.engines[i].lanes,
                     kv_used: used,
-                    kv_budget: self.kv.budget,
+                    kv_budget: self.engines[i].budget,
                     kv_blocked: blocked,
-                    kv_pressure: self.kv.pressure(used, self.engines[i].running.len()),
+                    kv_pressure: self.kv_at(i).pressure(used, self.engines[i].running.len()),
+                    speed_q8: speed_to_q8(self.engines[i].speed),
                 }
             })
             .collect()
@@ -534,13 +585,20 @@ impl ScheduleBackend for TokenBackend {
         if engine >= self.engines.len() || self.engines[engine].running.len() < 2 {
             return Ok(false);
         }
-        // shed the smallest-context lane, progress kept — the same victim
-        // rule as the forced in-step path, routed like a preemption
+        // shed the lane with the most predicted-remaining work (ties on
+        // fragmentation) — the same victim rule as the forced in-step
+        // path, routed like a preemption
         let pos = self.engines[engine]
             .running
             .iter()
             .enumerate()
-            .min_by_key(|&(pos, &rid)| (self.progress[rid as usize], pos))
+            .max_by_key(|&(pos, &rid)| {
+                let r = rid as usize;
+                (
+                    self.kv.victim_key(HARNESS_PROMPT, self.progress[r], self.lens[r], None),
+                    std::cmp::Reverse(pos),
+                )
+            })
             .map(|(pos, _)| pos)
             .expect("running checked >= 2");
         let rid = self.engines[engine].running.remove(pos);
@@ -567,8 +625,8 @@ impl ScheduleBackend for TokenBackend {
                     // request on a KV-loaded engine would just mark IT
                     // blocked and ping-pong the request straight back
                     let est = self.estimate(rid);
-                    if est > self.kv.budget
-                        || self.kv_gate_refuses(self.kv_used(to), est)
+                    if est > self.engines[to].budget
+                        || self.kv_gate_refuses(to, self.kv_used(to), est)
                     {
                         self.engines[from].queue.push_back(rid);
                         None
@@ -581,7 +639,7 @@ impl ScheduleBackend for TokenBackend {
             Some(l) => {
                 if l < self.engines[from].running.len() {
                     let rid = self.engines[from].running[l];
-                    let headroom = self.kv.headroom(self.kv_used(to));
+                    let headroom = self.kv_at(to).headroom(self.kv_used(to));
                     if self.estimate(rid) > headroom {
                         None
                     } else {
@@ -606,6 +664,31 @@ impl ScheduleBackend for TokenBackend {
         };
         self.check_invariants();
         Ok(ok)
+    }
+
+    fn repartition(&mut self, engine: usize, lanes: usize, kv: usize) -> Result<bool> {
+        if engine >= self.engines.len() {
+            return Ok(false);
+        }
+        // transactional: refuse any reshape that would strand running
+        // lanes or committed KV (the single-lane escape mirrors the
+        // admission gate), so the invariants hold unconditionally after
+        let running = self.engines[engine].running.len();
+        let used = self.kv_used(engine);
+        let applied = lanes >= running && (kv >= used || running <= 1);
+        if applied {
+            self.engines[engine].lanes = lanes;
+            self.engines[engine].budget = kv;
+        }
+        self.check_invariants();
+        Ok(applied)
+    }
+
+    fn predicted_len(&self, rid: u64) -> Option<usize> {
+        // the harness has no predictor; the stamped prediction is the
+        // true length — the oracle twin `estimate` already prices with
+        let r = rid as usize;
+        (self.state.get(r) == Some(&St::Fresh)).then(|| self.lens[r])
     }
 
     fn train(&mut self, rids: &[u64]) -> Result<()> {

@@ -27,14 +27,16 @@ pub mod harness;
 pub mod policy;
 pub mod pool;
 pub mod predictor;
+pub mod tail;
 
 pub use policy::{
-    drive, drive_traced, make_policy, make_policy_full, make_policy_opts, Decision, EngineLoad, Event,
-    HarvestAction, HarvestItem, KvGovernor, LaneView, PolicyParams, SchedView,
-    SchedulePolicy, ScheduleBackend, StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
+    drive, drive_traced, speed_to_q8, Decision, EngineLoad, EngineSpec, Event, HarvestAction,
+    HarvestItem, KvGovernor, LaneView, PolicyBuilder, PolicyParams, SchedView, SchedulePolicy,
+    ScheduleBackend, StealConfig, WorkStealing, ASYNC_SYNC_EVERY, SPEED_Q8_UNIT,
 };
 pub use pool::{resume_request, DispatchPolicy, EnginePool, PoolConfig};
 pub use predictor::{
     make_predictor, sjf_priority, BucketPredictor, HistoryPredictor, LengthPredictor,
     OraclePredictor, PredictorKind,
 };
+pub use tail::{TailConfig, TailPacking};

@@ -41,6 +41,8 @@
 
 use crate::coordinator::buffer::Mode;
 use crate::coordinator::controller::SchedulerKind;
+use crate::rollout::kv::{KvConfig, KvMode};
+use crate::sched::tail::{TailConfig, TailPacking};
 use crate::trace::Tracer;
 use anyhow::Result;
 
@@ -91,6 +93,10 @@ pub struct EngineLoad {
     pub active: usize,
     /// Total decode lanes.
     pub lanes: usize,
+    /// Relative decode speed in Q8.8 fixed point ([`SPEED_Q8_UNIT`] =
+    /// 1.0× — the homogeneous default).  Fixed point keeps `EngineLoad`
+    /// `Eq` and the spec-normalized routing keys pure integer math.
+    pub speed_q8: u32,
     /// KV reservation tokens held by active lanes.
     pub kv_used: usize,
     /// KV reservation budget (admission is rejected above this).
@@ -107,6 +113,17 @@ pub struct EngineLoad {
     pub kv_pressure: bool,
 }
 
+/// Q8.8 fixed-point unit for [`EngineLoad::speed_q8`] / [`EngineSpec`]:
+/// 256 = 1.0× relative decode speed.
+pub const SPEED_Q8_UNIT: u32 = 256;
+
+/// Convert a relative decode speed into the Q8.8 fixed point
+/// [`EngineLoad::speed_q8`] carries (rounded; exact for powers of two,
+/// floored at 1 so normalization never divides by zero).
+pub fn speed_to_q8(speed: f64) -> u32 {
+    ((speed * SPEED_Q8_UNIT as f64).round() as u32).max(1)
+}
+
 impl EngineLoad {
     /// KV headroom for routing decisions.  Unlimited budgets report
     /// `usize::MAX` — not `MAX - used` — so engines without accounting
@@ -118,6 +135,134 @@ impl EngineLoad {
         } else {
             self.kv_budget.saturating_sub(self.kv_used)
         }
+    }
+
+    /// Spec-normalized idle decode capacity: free lanes weighted by the
+    /// engine's relative speed.  On a homogeneous fleet every engine
+    /// scales by the same constant, so orderings (and the pinned steal
+    /// goldens) are exactly the pre-spec ones.
+    pub fn norm_free(&self) -> u64 {
+        (self.lanes.saturating_sub(self.active)) as u64 * self.speed_q8 as u64
+    }
+
+    /// Spec-normalized backlog: queued work divided by relative speed (a
+    /// slow engine's backlog costs proportionally more wall time).  Pure
+    /// integer math; order-preserving on homogeneous fleets.
+    pub fn norm_backlog(&self) -> u64 {
+        self.norm_cost(self.queued)
+    }
+
+    /// Spec-normalized cost of `n` work items on this engine (divide by
+    /// relative speed, Q8.8 scaled to stay integral).
+    pub fn norm_cost(&self, n: usize) -> u64 {
+        n as u64 * (SPEED_Q8_UNIT as u64 * SPEED_Q8_UNIT as u64)
+            / self.speed_q8.max(1) as u64
+    }
+}
+
+/// Static per-engine shape for heterogeneous fleets (`--engine-spec`):
+/// lane count, KV budget and relative decode speed.  Parsed from
+/// `LANES:KV[:SPEED]` atoms (`KV` may be `max`/`unlimited` = accounting
+/// off; an optional `N x` prefix repeats an atom, e.g.
+/// `2x8:4096:2,2x4:65536:0.5`).  Speeds are validated positive and
+/// finite; powers of two keep the sim's clock arithmetic exact so the
+/// Event≡Reference differential tests stay bitwise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineSpec {
+    /// Decode lanes.
+    pub lanes: usize,
+    /// KV budget in tokens (`usize::MAX` = accounting off).
+    pub kv_budget: usize,
+    /// Relative decode speed (1.0 = baseline).
+    pub speed: f64,
+}
+
+impl EngineSpec {
+    /// The homogeneous default shape: `lanes`/`kv_budget` as given,
+    /// speed 1.0.
+    pub fn uniform(lanes: usize, kv_budget: usize) -> Self {
+        EngineSpec { lanes, kv_budget, speed: 1.0 }
+    }
+
+    /// Speed in the Q8.8 fixed point [`EngineLoad::speed_q8`] carries
+    /// (rounded; exact for power-of-two speeds).
+    pub fn speed_q8(&self) -> u32 {
+        speed_to_q8(self.speed)
+    }
+
+    /// Validate one spec the way the CLI validates `--queue`/`--kv-*`:
+    /// at least one lane, a non-zero budget, and a positive finite speed.
+    /// (`paged` budgets must additionally cover one prompt + one page —
+    /// checked where the KV config is known, mirroring `--kv-page`.)
+    pub fn validate(&self) -> Result<()> {
+        if self.lanes == 0 {
+            anyhow::bail!("engine spec: lanes must be >= 1");
+        }
+        if self.kv_budget == 0 {
+            anyhow::bail!("engine spec: kv budget must be >= 1 (use 'max' for unlimited)");
+        }
+        if !(self.speed.is_finite() && self.speed > 0.0) {
+            anyhow::bail!("engine spec: speed must be positive and finite");
+        }
+        Ok(())
+    }
+
+    /// Parse a comma-separated fleet spec (see type docs for the
+    /// grammar).  Every atom is validated; the result is never empty.
+    pub fn parse_fleet(s: &str) -> Result<Vec<EngineSpec>> {
+        let mut fleet = Vec::new();
+        for atom in s.split(',') {
+            let atom = atom.trim();
+            if atom.is_empty() {
+                anyhow::bail!("engine spec: empty atom in '{s}'");
+            }
+            let (reps, body) = match atom.split_once(['x', 'X']) {
+                Some((n, rest)) if n.trim().chars().all(|c| c.is_ascii_digit())
+                    && !n.trim().is_empty() =>
+                {
+                    let reps: usize = n.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("engine spec: bad repeat count in '{atom}'")
+                    })?;
+                    if reps == 0 {
+                        anyhow::bail!("engine spec: repeat count must be >= 1 in '{atom}'");
+                    }
+                    (reps, rest)
+                }
+                _ => (1, atom),
+            };
+            let mut parts = body.split(':');
+            let lanes: usize = parts
+                .next()
+                .unwrap_or("")
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("engine spec: bad lane count in '{atom}'"))?;
+            let kv_raw = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("engine spec: missing kv budget in '{atom}' \
+                                                (want LANES:KV[:SPEED])"))?
+                .trim();
+            let kv_budget = match kv_raw {
+                "max" | "unlimited" => usize::MAX,
+                n => n.parse().map_err(|_| {
+                    anyhow::anyhow!("engine spec: bad kv budget in '{atom}'")
+                })?,
+            };
+            let speed: f64 = match parts.next() {
+                Some(sp) => sp.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("engine spec: bad speed in '{atom}'")
+                })?,
+                None => 1.0,
+            };
+            if parts.next().is_some() {
+                anyhow::bail!("engine spec: too many fields in '{atom}' \
+                               (want LANES:KV[:SPEED])");
+            }
+            let spec = EngineSpec { lanes, kv_budget, speed };
+            spec.validate()?;
+            fleet.extend(std::iter::repeat(spec).take(reps));
+        }
+        Ok(fleet)
     }
 }
 
@@ -181,6 +326,11 @@ pub enum Event {
     /// refused it (engine gone, or only one lane running — the progress
     /// guarantee keeps the last lane decoding).
     Throttled { engine: usize, shed: bool },
+    /// A `Repartition` decision executed; `applied` is false when the
+    /// backend refused it (engine gone, or the new shape would strand
+    /// running lanes / violate the KV ceiling — repartitions are
+    /// transactional: applied whole or not at all).
+    Repartitioned { engine: usize, applied: bool },
 }
 
 /// Typed decisions the policy emits.
@@ -206,11 +356,18 @@ pub enum Decision {
     /// refuses moves past the destination's KV budget.
     Steal { from: usize, to: usize, lane: Option<usize> },
     /// Paged-KV backpressure: shed one lane of engine `engine` back to the
-    /// queue (progress kept, backend picks the smallest-context victim) so
-    /// projected usage drops below the budget — the deferral path that
-    /// keeps over-committed admission from reaching the engines' forced
-    /// in-step eviction.
+    /// queue (progress kept; the backend evicts the lane with the most
+    /// predicted REMAINING work, fragmentation as tiebreak — see
+    /// `rollout::kv::victim_key`) so projected usage drops below the
+    /// budget — the deferral path that keeps over-committed admission
+    /// from reaching the engines' forced in-step eviction.
     Throttle { engine: usize },
+    /// Elastically resize engine `engine` to `lanes` decode lanes and a
+    /// `kv` token budget (tail-round boundaries donate head capacity to
+    /// the tail group and restore it after).  Transactional: the backend
+    /// applies the whole new shape or refuses (never strands running
+    /// lanes, never drops below committed KV).
+    Repartition { engine: usize, lanes: usize, kv: usize },
     /// Train one update on these ready trajectories, in this order.
     Update { rids: Vec<u64> },
     /// Group end: drop consumed entries, re-align engine clocks.
@@ -230,6 +387,7 @@ impl Decision {
             Decision::Preempt { .. } => "preempt",
             Decision::Steal { .. } => "steal",
             Decision::Throttle { .. } => "throttle",
+            Decision::Repartition { .. } => "repartition",
             Decision::Update { .. } => "update",
             Decision::Barrier => "barrier",
             Decision::Done => "done",
@@ -286,6 +444,7 @@ pub trait ScheduleBackend {
             kv_budget: usize::MAX,
             kv_blocked: false,
             kv_pressure: false,
+            speed_q8: SPEED_Q8_UNIT,
         }]
     }
     /// Active lanes of one engine (steal-victim selection).  Backends
@@ -319,6 +478,16 @@ pub trait ScheduleBackend {
     fn staleness_of(&self, _rid: u64) -> Option<u64> {
         None
     }
+    /// Stamped length prediction for a schedulable entry, in response
+    /// tokens — what [`crate::sched::tail::TailPacking`] compares against
+    /// its threshold.  `None` means no token-denominated estimate exists
+    /// (no predictor, or a rank-only one — see
+    /// `rollout::kv::stamp_prediction`); tail packing then leaves the
+    /// entry in the head rounds, so the wrapper is inert by construction
+    /// exactly when estimates are meaningless.
+    fn predicted_len(&self, _rid: u64) -> Option<usize> {
+        None
+    }
 
     // ---- actuation ----
     /// Load up to `prompts` prompts; returns buffer entries created.
@@ -342,11 +511,22 @@ pub trait ScheduleBackend {
     fn steal(&mut self, _from: usize, _to: usize, _lane: Option<usize>) -> Result<bool> {
         Ok(false)
     }
-    /// Execute one `Throttle` (shed the smallest-context lane of `engine`
-    /// back to the queue, progress kept).  Returns true if a lane was
+    /// Execute one `Throttle` (shed the lane of `engine` with the most
+    /// predicted remaining work — see `rollout::kv::victim_key` — back to
+    /// the queue, progress kept).  Returns true if a lane was
     /// actually shed.  The default refuses — correct for backends without
     /// paged KV accounting, where pressure never arises.
     fn throttle(&mut self, _engine: usize) -> Result<bool> {
+        Ok(false)
+    }
+    /// Execute one `Repartition` (see [`Decision::Repartition`]): resize
+    /// one engine to a new lane count and KV budget, transactionally —
+    /// the backend refuses (returns `Ok(false)`) any shape that would
+    /// strand running lanes (`lanes < active`) or drop the budget below
+    /// committed usage while more than one lane runs.  The default
+    /// refuses every repartition — correct for backends without
+    /// resizable engines.
+    fn repartition(&mut self, _engine: usize, _lanes: usize, _kv: usize) -> Result<bool> {
         Ok(false)
     }
     /// Train one update on these Ready entries, in order.
@@ -484,6 +664,14 @@ pub fn drive_traced(
                 tracer.post_throttle(backend, engine, shed);
                 policy.observe(&Event::Throttled { engine, shed });
             }
+            Decision::Repartition { engine, lanes, kv } => {
+                // resizing never decodes or trains either: a policy that
+                // repartitions in a loop trips the livelock guard
+                fruitless += 1;
+                let applied = backend.repartition(engine, lanes, kv)?;
+                tracer.post_repartition(backend, engine, lanes, applied);
+                policy.observe(&Event::Repartitioned { engine, applied });
+            }
             Decision::Update { rids } => {
                 if rids.is_empty() {
                     fruitless += 1;
@@ -505,63 +693,114 @@ pub fn drive_traced(
     Ok(())
 }
 
-/// Build the policy for a scheduler kind.
-pub fn make_policy(kind: SchedulerKind, p: PolicyParams) -> Box<dyn SchedulePolicy> {
-    match kind {
-        SchedulerKind::SortedOnPolicy => Box::new(GroupPolicy::new(p, Mode::OnPolicy)),
-        SchedulerKind::SortedPartial => Box::new(GroupPolicy::new(p, Mode::Partial)),
-        SchedulerKind::Baseline => Box::new(BaselinePolicy::new(p, false)),
-        SchedulerKind::PostHocSort => Box::new(BaselinePolicy::new(p, true)),
-        SchedulerKind::NoGroupedRollout => Box::new(NoGroupedPolicy::new(p)),
-        SchedulerKind::AsyncUpdate => Box::new(AsyncUpdatePolicy::new(p, ASYNC_SYNC_EVERY)),
-    }
+/// THE one way to build a composed scheduling policy (replaces the old
+/// `make_policy`/`make_policy_opts`/`make_policy_full`/
+/// `make_policy_staleness` ladder, whose positional bools read as
+/// `(kind, p, true, false, None)` at call sites).  Wrapping order is
+/// fixed, innermost first:
+///
+///   base kind → [`KvGovernor`] (`.kv` paged) → [`WorkStealing`]
+///   (`.steal`) → [`TailPacking`] (`.tail`)
+///
+/// The governor sits inside the stealing wrapper so a steal that
+/// relieves a pressured engine is preferred over shedding its lane; tail
+/// packing sits outermost so its deferrals filter every admission,
+/// including ones the inner wrappers pass through.  The pinned policy
+/// goldens run through this builder — its decision sequences are
+/// byte-identical to the deleted ladder's.
+pub struct PolicyBuilder {
+    kind: SchedulerKind,
+    params: PolicyParams,
+    steal: bool,
+    kv: KvConfig,
+    staleness: Option<usize>,
+    tail: Option<TailConfig>,
 }
 
-/// Build the policy for a scheduler kind, optionally composed with the
-/// [`WorkStealing`] wrapper (the `--steal` flag / `LoopConfig::steal`).
-pub fn make_policy_opts(kind: SchedulerKind, p: PolicyParams,
-                        steal: bool) -> Box<dyn SchedulePolicy> {
-    make_policy_full(kind, p, steal, false)
-}
-
-/// Full composition: scheduler kind, optionally wrapped by the
-/// [`KvGovernor`] (paged-KV backpressure — `--kv-mode paged`) and then by
-/// [`WorkStealing`] (`--steal`).  The governor sits inside the stealing
-/// wrapper so a steal that relieves a pressured engine is preferred over
-/// shedding its lane.
-pub fn make_policy_full(kind: SchedulerKind, p: PolicyParams, steal: bool,
-                        throttle: bool) -> Box<dyn SchedulePolicy> {
-    make_policy_staleness(kind, p, steal, throttle, None)
-}
-
-/// [`make_policy_full`] plus the off-policy-degree knob (`--staleness N`).
-/// For [`SchedulerKind::AsyncUpdate`], `Some(n)` derives the re-sync window
-/// (`sync_every = n`, replacing the [`ASYNC_SYNC_EVERY`] default) so the
-/// phase machine re-syncs on the same bound the backends enforce at consume
-/// time; `None` keeps today's default window.  Other kinds run every sample
-/// on-policy (or resume under current weights), so the knob composes as a
-/// no-op there.
-pub fn make_policy_staleness(kind: SchedulerKind, p: PolicyParams, steal: bool,
-                             throttle: bool, staleness: Option<usize>)
-                             -> Box<dyn SchedulePolicy> {
-    let mut policy: Box<dyn SchedulePolicy> = match (kind, staleness) {
-        (SchedulerKind::AsyncUpdate, Some(n)) => {
-            Box::new(AsyncUpdatePolicy::new(p, n))
+impl PolicyBuilder {
+    /// Start from a scheduler kind and the shared knobs; all composition
+    /// layers default off (reserve KV, no stealing, default async
+    /// re-sync window, no tail packing).
+    pub fn new(kind: SchedulerKind, params: PolicyParams) -> Self {
+        PolicyBuilder {
+            kind,
+            params,
+            steal: false,
+            kv: KvConfig::default(),
+            staleness: None,
+            tail: None,
         }
-        _ => make_policy(kind, p),
-    };
-    if throttle {
-        policy = Box::new(KvGovernor::wrap(policy));
     }
-    if steal {
-        policy = Box::new(WorkStealing::wrap(policy, StealConfig::default()));
+
+    /// Compose the [`WorkStealing`] wrapper (the `--steal` flag /
+    /// `LoopConfig::steal`).
+    pub fn steal(mut self, steal: bool) -> Self {
+        self.steal = steal;
+        self
     }
-    policy
+
+    /// KV accounting the run executes under.  Paged mode composes the
+    /// [`KvGovernor`] backpressure wrapper; reserve mode cannot
+    /// over-commit, so no governor is mounted and decision sequences
+    /// stay byte-identical to the KV-oblivious ones.
+    pub fn kv(mut self, kv: KvConfig) -> Self {
+        self.kv = kv;
+        self
+    }
+
+    /// The off-policy-degree knob (`--staleness N`).  For
+    /// [`SchedulerKind::AsyncUpdate`], `Some(n)` derives the re-sync
+    /// window (`sync_every = n`, replacing the [`ASYNC_SYNC_EVERY`]
+    /// default) so the phase machine re-syncs on the same bound the
+    /// backends enforce at consume time.  Other kinds run every sample
+    /// on-policy (or resume under current weights), so the knob composes
+    /// as a no-op there.
+    pub fn staleness(mut self, staleness: Option<usize>) -> Self {
+        self.staleness = staleness;
+        self
+    }
+
+    /// Compose the [`TailPacking`] wrapper (`--tail-threshold` /
+    /// `--tail-engines`): defer predicted-long requests out of head
+    /// rounds into batched tail rounds with elastic lane/KV
+    /// repartitioning.  Requires a predictor that stamps
+    /// token-denominated estimates to have any effect (see
+    /// [`ScheduleBackend::predicted_len`]).
+    pub fn tail(mut self, tail: Option<TailConfig>) -> Self {
+        self.tail = tail;
+        self
+    }
+
+    /// Build the composed policy.
+    pub fn build(self) -> Box<dyn SchedulePolicy> {
+        let p = self.params;
+        let mut policy: Box<dyn SchedulePolicy> = match (self.kind, self.staleness) {
+            (SchedulerKind::AsyncUpdate, Some(n)) => Box::new(AsyncUpdatePolicy::new(p, n)),
+            (SchedulerKind::AsyncUpdate, None) => {
+                Box::new(AsyncUpdatePolicy::new(p, ASYNC_SYNC_EVERY))
+            }
+            (SchedulerKind::SortedOnPolicy, _) => Box::new(GroupPolicy::new(p, Mode::OnPolicy)),
+            (SchedulerKind::SortedPartial, _) => Box::new(GroupPolicy::new(p, Mode::Partial)),
+            (SchedulerKind::Baseline, _) => Box::new(BaselinePolicy::new(p, false)),
+            (SchedulerKind::PostHocSort, _) => Box::new(BaselinePolicy::new(p, true)),
+            (SchedulerKind::NoGroupedRollout, _) => Box::new(NoGroupedPolicy::new(p)),
+        };
+        if self.kv.mode == KvMode::Paged {
+            policy = Box::new(KvGovernor::wrap(policy));
+        }
+        if self.steal {
+            policy = Box::new(WorkStealing::wrap(policy, StealConfig::default()));
+        }
+        if let Some(tail) = self.tail {
+            policy = Box::new(TailPacking::wrap(policy, tail));
+        }
+        policy
+    }
 }
 
 /// AsyncUpdate's bounded-staleness window: a full re-sync harvest (partial
 /// scavenge of every in-flight lane) after this many overlapped updates.
-/// The `--staleness N` knob overrides it (see [`make_policy_staleness`]);
+/// The `--staleness N` knob overrides it (see [`PolicyBuilder::staleness`]);
 /// the consume-time cap in the backends enforces the same `N` on every
 /// trained sample, so the phase machine and the cache can never disagree.
 pub const ASYNC_SYNC_EVERY: usize = 4;
@@ -637,13 +876,18 @@ impl WorkStealing {
         // its own — lane-saturated, or KV-blocked (free lanes its budget
         // refuses to fill).  An engine that WILL admit its own queue next
         // tick is not a victim: stealing from it only ping-pongs the
-        // request back.  Among equally free destinations, prefer the
-        // KV-richest thief (headroom ties at usize::MAX when accounting
-        // is off, so KV-oblivious runs keep their exact selections).
+        // request back.  Destinations rank by spec-normalized free decode
+        // capacity (free lanes × speed — a fast engine's idle lane is
+        // worth more), then KV headroom (ties at usize::MAX when
+        // accounting is off); victims by spec-normalized backlog (queued ÷
+        // speed — a slow engine's backlog hurts more).  On homogeneous
+        // fleets both keys scale every engine by the same constant, so
+        // the pre-spec selections (and the pinned steal goldens) are
+        // reproduced exactly.
         if let Some(to) = (0..loads.len())
             .filter(|&i| loads[i].queued == 0 && loads[i].active < loads[i].lanes)
             .max_by_key(|&i| {
-                (loads[i].lanes - loads[i].active, loads[i].headroom(), std::cmp::Reverse(i))
+                (loads[i].norm_free(), loads[i].headroom(), std::cmp::Reverse(i))
             })
         {
             if let Some(from) = (0..loads.len())
@@ -652,7 +896,7 @@ impl WorkStealing {
                         && loads[i].queued >= self.cfg.queue_depth
                         && (loads[i].active >= loads[i].lanes || loads[i].kv_blocked)
                 })
-                .max_by_key(|&i| (loads[i].queued, std::cmp::Reverse(i)))
+                .max_by_key(|&i| (loads[i].norm_backlog(), std::cmp::Reverse(i)))
             {
                 return Some(Decision::Steal { from, to, lane: None });
             }
@@ -660,16 +904,17 @@ impl WorkStealing {
         // 2) lane steal: only a FULLY idle engine (no running lanes, no
         // queue) may pull a running lane — migration pays re-prefill, so
         // it is reserved for the motivating long-tail straggler case.
-        // Among idle engines prefer the KV-richest (equal headroom — the
-        // unlimited-budget case — degrades to lowest index, the pre-paging
-        // selection); then pick the most-loaded peer's cheapest lane that
-        // fits that destination's headroom.
+        // Among idle engines prefer the KV-richest, then the fastest
+        // (equal headroom and speed — the homogeneous unlimited-budget
+        // case — degrades to lowest index, the pre-paging selection);
+        // then pick the peer with the most spec-normalized lane work and
+        // its cheapest lane that fits that destination's headroom.
         let to = (0..loads.len())
             .filter(|&i| loads[i].queued == 0 && loads[i].active == 0)
-            .max_by_key(|&i| (loads[i].headroom(), std::cmp::Reverse(i)))?;
+            .max_by_key(|&i| (loads[i].headroom(), loads[i].speed_q8, std::cmp::Reverse(i)))?;
         let from = (0..loads.len())
             .filter(|&i| i != to && loads[i].active >= self.cfg.lane_gap)
-            .max_by_key(|&i| (loads[i].active, std::cmp::Reverse(i)))?;
+            .max_by_key(|&i| (loads[i].norm_cost(loads[i].active), std::cmp::Reverse(i)))?;
         let headroom = loads[to].headroom();
         let lane = b
             .engine_lanes(from)
@@ -720,7 +965,8 @@ impl SchedulePolicy for WorkStealing {
 /// Wrapper policy that watches the `PoolLoad` snapshots for `KvPressure`
 /// (a paged engine whose projected usage would overrun its budget) and
 /// emits [`Decision::Throttle`] for the most-pressured engine: the backend
-/// sheds the smallest-context lane back to the queue, progress kept, so
+/// sheds the lane with the most predicted remaining work (fragmentation
+/// as tiebreak) back to the queue, progress kept, so
 /// the budget holds *before* the engine's forced in-step eviction has to
 /// fire — and the shed work re-enters dispatch, where budget-aware routing
 /// can place it on a KV-richer engine instead.
@@ -1759,5 +2005,103 @@ mod tests {
         // nothing loaded -> the backend is idle forever
         let err = drive(&mut p, &mut b).unwrap_err();
         assert!(format!("{err:#}").contains("idle"));
+    }
+
+    /// `--engine-spec` grammar round trip: atoms, repeat prefixes, `max`
+    /// budgets and default speeds parse to the exact fleet shapes.
+    #[test]
+    fn engine_spec_fleet_grammar() {
+        let fleet = EngineSpec::parse_fleet("2x8:4096:2, 4:65536:0.5 ,1:max").unwrap();
+        assert_eq!(fleet, vec![
+            EngineSpec { lanes: 8, kv_budget: 4096, speed: 2.0 },
+            EngineSpec { lanes: 8, kv_budget: 4096, speed: 2.0 },
+            EngineSpec { lanes: 4, kv_budget: 65536, speed: 0.5 },
+            EngineSpec { lanes: 1, kv_budget: usize::MAX, speed: 1.0 },
+        ]);
+        // omitted speed defaults to the homogeneous 1.0
+        assert_eq!(EngineSpec::parse_fleet("16:8192").unwrap(),
+                   vec![EngineSpec::uniform(16, 8192)]);
+    }
+
+    /// Malformed fleet specs are rejected at parse time with pointed
+    /// messages — zero lanes, zero/non-finite speeds, zero budgets, bad
+    /// repeat counts, missing or surplus fields.
+    #[test]
+    fn engine_spec_fleet_rejections() {
+        for (bad, needle) in [
+            ("0:4096", "lanes must be >= 1"),
+            ("8:0", "kv budget must be >= 1"),
+            ("8:4096:0", "speed must be positive"),
+            ("8:4096:-1", "speed must be positive"),
+            ("8:4096:inf", "speed must be positive"),
+            ("0x8:4096", "repeat count must be >= 1"),
+            ("8", "missing kv budget"),
+            ("8:4096:1:9", "too many fields"),
+            ("8:4096,,4:max", "empty atom"),
+            ("eight:4096", "bad lane count"),
+        ] {
+            let err = EngineSpec::parse_fleet(bad).unwrap_err();
+            assert!(format!("{err:#}").contains(needle),
+                    "'{bad}' produced the wrong error: {err:#}");
+        }
+    }
+
+    /// `EngineSpec::validate` enforces the same floor directly (the path
+    /// hand-built specs take through `SimRun::specs`).
+    #[test]
+    fn engine_spec_validate_rejections() {
+        assert!(EngineSpec { lanes: 0, kv_budget: 1, speed: 1.0 }.validate().is_err());
+        assert!(EngineSpec { lanes: 1, kv_budget: 0, speed: 1.0 }.validate().is_err());
+        assert!(EngineSpec { lanes: 1, kv_budget: 1, speed: 0.0 }.validate().is_err());
+        assert!(EngineSpec { lanes: 1, kv_budget: 1, speed: f64::NAN }.validate().is_err());
+        assert!(EngineSpec::uniform(1, usize::MAX).validate().is_ok());
+    }
+
+    /// Dyadic speeds map exactly into Q8.8 (what keeps the cross-core
+    /// differential bitwise on heterogeneous fleets); pathological speeds
+    /// floor at 1 instead of dividing by zero.
+    #[test]
+    fn speed_q8_dyadic_exact() {
+        assert_eq!(speed_to_q8(0.5), SPEED_Q8_UNIT / 2);
+        assert_eq!(speed_to_q8(1.0), SPEED_Q8_UNIT);
+        assert_eq!(speed_to_q8(2.0), 2 * SPEED_Q8_UNIT);
+        assert_eq!(speed_to_q8(1e-9), 1);
+    }
+
+    /// `TailConfig::validate` rejects the two degenerate shapes the CLI
+    /// must refuse.
+    #[test]
+    fn tail_config_validate_rejections() {
+        assert!(TailConfig { threshold: 0, tail_engines: 1 }.validate().is_err());
+        assert!(TailConfig { threshold: 1, tail_engines: 0 }.validate().is_err());
+        assert!(TailConfig { threshold: 2048, tail_engines: 1 }.validate().is_ok());
+    }
+
+    /// The builder mounts wrappers in the fixed order (governor inside
+    /// stealing inside tail), observable from the outermost `name()`:
+    /// reserve KV never mounts a governor, paged KV does, stealing wraps
+    /// it, and tail packing is always outermost.
+    #[test]
+    fn policy_builder_composition_order() {
+        let p = params(4, 2);
+        let paged = KvConfig { mode: KvMode::Paged, budget: 1024, page: 16 };
+        let tail = TailConfig { threshold: 64, tail_engines: 1 };
+        let name = |b: Box<dyn SchedulePolicy>| b.name();
+        assert_eq!(name(PolicyBuilder::new(SchedulerKind::Baseline, p).build()),
+                   "baseline");
+        assert_eq!(name(PolicyBuilder::new(SchedulerKind::Baseline, p)
+                        .kv(KvConfig::default()).build()),
+                   "baseline", "reserve KV must not mount a governor");
+        assert_eq!(name(PolicyBuilder::new(SchedulerKind::Baseline, p).kv(paged).build()),
+                   "kv-governor");
+        assert_eq!(name(PolicyBuilder::new(SchedulerKind::Baseline, p)
+                        .kv(paged).steal(true).build()),
+                   "work-stealing", "stealing wraps the governor");
+        assert_eq!(name(PolicyBuilder::new(SchedulerKind::Baseline, p)
+                        .kv(paged).steal(true).tail(Some(tail)).build()),
+                   "tail-packing", "tail packing is outermost");
+        assert_eq!(name(PolicyBuilder::new(SchedulerKind::SortedPartial, p)
+                        .tail(Some(tail)).build()),
+                   "tail-packing");
     }
 }

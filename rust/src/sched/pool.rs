@@ -24,7 +24,7 @@
 use crate::metrics::PredictorScore;
 use crate::rollout::{Engine, EngineConfig, Request, Rollout};
 use crate::runtime::{ParamState, Runtime};
-use crate::sched::policy::EngineLoad;
+use crate::sched::policy::{speed_to_q8, EngineLoad, EngineSpec};
 use crate::sched::predictor::{make_predictor, sjf_priority, LengthPredictor, PredictorKind};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
@@ -128,6 +128,11 @@ pub struct EnginePool<'rt> {
     preempted: u64,
     stolen: u64,
     throttled: u64,
+    /// Spec-declared relative speeds (`--engine-spec`), exposed through
+    /// `engine_loads` so spec-normalized routing weighs backlog against
+    /// declared throughput.  Real engines decode at hardware speed — this
+    /// shapes ROUTING only.  All 1.0 for a uniform fleet.
+    speeds: Vec<f64>,
 }
 
 impl<'rt> EnginePool<'rt> {
@@ -135,9 +140,8 @@ impl<'rt> EnginePool<'rt> {
         assert!(cfg.num_engines >= 1, "pool needs at least one engine");
         assert!(cfg.preempt_every >= 1, "preempt_every must be >= 1");
         assert!(cfg.straggler_factor > 1.0, "straggler_factor must exceed 1.0");
-        let engines = (0..cfg.num_engines)
-            .map(|_| Engine::new(rt, ecfg.clone()))
-            .collect();
+        let n = cfg.num_engines;
+        let engines = (0..n).map(|_| Engine::new(rt, ecfg.clone())).collect();
         let predictor = make_predictor(cfg.predictor);
         EnginePool {
             engines,
@@ -152,6 +156,22 @@ impl<'rt> EnginePool<'rt> {
             preempted: 0,
             stolen: 0,
             throttled: 0,
+            speeds: vec![1.0; n],
+        }
+    }
+
+    /// Apply heterogeneous per-engine specs (`--engine-spec`): lane
+    /// window, KV budget, and routing speed per engine.  Lane counts are
+    /// clamped to the compiled kernel batch width by
+    /// [`Engine::set_capacity`]; call before submitting work (every lane
+    /// is free then, so nothing can refuse).
+    pub fn apply_specs(&mut self, specs: &[EngineSpec]) {
+        assert_eq!(specs.len(), self.engines.len(), "one spec per engine");
+        for (i, s) in specs.iter().enumerate() {
+            s.validate().expect("specs are validated at parse time");
+            let ok = self.engines[i].set_capacity(s.lanes, s.kv_budget);
+            debug_assert!(ok, "pre-submission set_capacity cannot refuse");
+            self.speeds[i] = s.speed;
         }
     }
 
@@ -224,20 +244,26 @@ impl<'rt> EnginePool<'rt> {
         self.engines.iter().map(|e| e.kv_sheds()).sum()
     }
 
-    /// Execute a `Decision::Throttle`: shed engine `engine`'s
-    /// smallest-context lane back into the pool queue (progress kept) so
-    /// projected paged-KV usage drops below the budget before the forced
-    /// in-step eviction path has to fire.  Refuses (returns false) when
-    /// the engine runs fewer than two lanes — the last lane is the
-    /// progress guarantee and must keep decoding.
+    /// Execute a `Decision::Throttle`: shed engine `engine`'s lane with
+    /// the most predicted remaining work (per-page fragmentation breaks
+    /// ties — see [`KvConfig::victim_key`](crate::rollout::kv::KvConfig))
+    /// back into the pool queue (progress kept) so projected paged-KV
+    /// usage drops below the budget before the forced in-step eviction
+    /// path has to fire.  Refuses (returns false) when the engine runs
+    /// fewer than two lanes — the last lane is the progress guarantee and
+    /// must keep decoding.
     pub fn throttle(&mut self, engine: usize, version: u64) -> bool {
         if engine >= self.engines.len() || self.engines[engine].running() < 2 {
             return false;
         }
+        let kv = self.engines[engine].kv_config();
         let victim = self.engines[engine]
             .lane_progress()
             .into_iter()
-            .min_by_key(|p| (p.total, p.lane))
+            .max_by_key(|p| {
+                (kv.victim_key(p.prompt_len, p.total, p.max_new, p.predicted),
+                 std::cmp::Reverse(p.lane))
+            })
             .map(|p| p.lane);
         match victim {
             Some(lane) => {
@@ -255,7 +281,8 @@ impl<'rt> EnginePool<'rt> {
     pub fn engine_loads(&self) -> Vec<EngineLoad> {
         self.engines
             .iter()
-            .map(|e| EngineLoad {
+            .zip(&self.speeds)
+            .map(|(e, &speed)| EngineLoad {
                 queued: e.queued(),
                 active: e.running(),
                 lanes: e.lane_count(),
@@ -263,8 +290,28 @@ impl<'rt> EnginePool<'rt> {
                 kv_budget: e.kv_budget(),
                 kv_blocked: e.kv_blocked(),
                 kv_pressure: e.kv_pressure(),
+                speed_q8: speed_to_q8(speed),
             })
             .collect()
+    }
+
+    /// Execute a `Decision::Repartition` against engine `engine`
+    /// transactionally (see [`Engine::set_capacity`] for the live refusal
+    /// rules — lane pinning and the kernel-width clamp are live-only).
+    /// Returns whether it applied.
+    pub fn repartition(&mut self, engine: usize, lanes: usize, kv: usize) -> bool {
+        match self.engines.get_mut(engine) {
+            Some(e) => e.set_capacity(lanes, kv),
+            None => false,
+        }
+    }
+
+    /// Predicted-length stamp for a not-yet-dispatched prompt — what
+    /// `ScheduleBackend::predicted_len` feeds the tail-packing
+    /// classifier.  `None` under rank-only predictors, which keeps tail
+    /// packing inert by construction (bucket indices are not tokens).
+    pub fn predict_stamp(&self, prompt_id: u64, prompt_len: usize) -> Option<usize> {
+        self.predict_pair(prompt_id, prompt_len).1
     }
 
     /// Output tokens generated so far, summed over engines — cheap, so
@@ -314,6 +361,62 @@ impl<'rt> EnginePool<'rt> {
         (idle, busy, tokens)
     }
 
+    /// (head, tail) bubble ratios for the engine-group split tail rounds
+    /// use: the same idle-capacity accounting as [`Self::occupancy`],
+    /// restricted per group, both measured against the pool-wide span.
+    /// `(whole-pool bubble, 0.0)` when `tail_group == 0`; a group that
+    /// never admitted anything reads 1.0 (all-bubble, like an idle
+    /// engine).  `(0.0, 0.0)` when the pool never ran.
+    pub fn bubble_split(&self, tail_group: usize) -> (f64, f64) {
+        let n = self.engines.len();
+        let group = tail_group.min(n.saturating_sub(1));
+        let split = n - group;
+        let end = self.clock();
+        let start = self
+            .engines
+            .iter()
+            .filter(|e| !e.timeline.events().is_empty())
+            .map(|e| e.timeline.span().0)
+            .fold(f64::INFINITY, f64::min);
+        if !start.is_finite() {
+            return (0.0, 0.0);
+        }
+        let head = Self::group_bubble(&self.engines[..split], start, end);
+        let tail = if group == 0 {
+            0.0
+        } else {
+            Self::group_bubble(&self.engines[split..], start, end)
+        };
+        (head, tail)
+    }
+
+    fn group_bubble(engines: &[Engine<'_>], start: f64, end: f64) -> f64 {
+        if engines.iter().all(|e| e.timeline.events().is_empty()) {
+            return 1.0;
+        }
+        let span = (end - start).max(0.0);
+        let mut idle = 0.0;
+        let mut busy = 0.0;
+        for e in engines {
+            let cap = e.lane_count();
+            busy += span * cap as f64;
+            if e.timeline.events().is_empty() {
+                idle += span * cap as f64;
+                continue;
+            }
+            let (e_start, _) = e.timeline.span();
+            let bubble = e.timeline.bubble_ratio(cap, end);
+            let measured = (end - e_start).max(0.0);
+            idle += bubble * measured * cap as f64
+                + (e_start - start).max(0.0) * cap as f64;
+        }
+        if busy <= 0.0 {
+            1.0
+        } else {
+            (idle / busy).clamp(0.0, 1.0)
+        }
+    }
+
     // ------------------------------------------------------------------
     // scheduling
     // ------------------------------------------------------------------
@@ -361,8 +464,10 @@ impl<'rt> EnginePool<'rt> {
     }
 
     /// Admission estimate of a still-central request given its stamp (the
-    /// engines share one `KvConfig`): what budget-aware dispatch assumes
-    /// the request will cost wherever it lands.
+    /// engines share one KV mode + page size; budgets may differ under
+    /// `--engine-spec` but estimates are budget-independent): what
+    /// budget-aware dispatch assumes the request will cost wherever it
+    /// lands.
     fn admit_estimate_of(&self, req: &Request, stamp: Option<usize>) -> usize {
         self.engines[0].kv_config().admit_estimate(
             req.prompt.len(),
@@ -417,7 +522,8 @@ impl<'rt> EnginePool<'rt> {
                 // per-engine committed KV is hoisted once and maintained
                 // incrementally — recomputing it per request would scan
                 // every lane and queued estimate on the live hot path.
-                let kv = self.engines[0].kv_config();
+                // The gate is per-engine: budgets differ under
+                // heterogeneous `--engine-spec` fleets.
                 let mut committed: Vec<usize> =
                     self.engines.iter().map(|e| e.kv_committed()).collect();
                 loop {
@@ -426,7 +532,8 @@ impl<'rt> EnginePool<'rt> {
                     let est = self.admit_estimate_of(req, pair.1);
                     let Some(i) = (0..self.engines.len())
                         .filter(|&i| {
-                            self.engine_free(i) > 0 && !kv.gate_refuses(committed[i], est)
+                            self.engine_free(i) > 0
+                                && !self.engines[i].kv_config().gate_refuses(committed[i], est)
                         })
                         .min_by_key(|&i| self.engines[i].in_flight())
                     else {

@@ -1,0 +1,318 @@
+//! `TailPacking` — RollPacker-style tail rounds as a wrapper policy.
+//!
+//! The bubble ratio of every head-round schedule is dominated by
+//! long-tail rollouts: a predicted-long request admitted into a head
+//! round pins a lane (and its KV) through every harvest/update boundary
+//! while its short cohort drains, so the pool grinds at low occupancy for
+//! exactly the span the paper's Fig. 4 calls the bubble.  RollPacker
+//! (PAPERS.md) defers those stragglers into dedicated **tail rounds**:
+//! head rounds run the predicted-short bulk at full occupancy, and the
+//! deferred tail is batched together onto a carved-out engine group whose
+//! lanes/KV are **elastically repartitioned** from the head group for the
+//! duration of the round.
+//!
+//! [`TailPacking`] implements that as a third composable wrapper, sitting
+//! outermost above [`KvGovernor`](crate::sched::policy::KvGovernor) and
+//! [`WorkStealing`](crate::sched::policy::WorkStealing) (see
+//! `PolicyBuilder`):
+//!
+//!   * Every untargeted `Admit` from the inner policy is filtered:
+//!     requests whose stamped prediction
+//!     ([`ScheduleBackend::predicted_len`]) exceeds
+//!     [`TailConfig::threshold`] are deferred; the rest pass through.
+//!     Rank-only or absent predictors stamp nothing, so the wrapper is
+//!     **inert by construction** exactly when estimates are meaningless —
+//!     decision sequences stay byte-identical to the unwrapped policy.
+//!   * A tail round opens when the deferred set can fill the tail group's
+//!     lanes, or immediately when the head rounds starve (an all-deferred
+//!     admission with nothing running or queued — the liveness guarantee:
+//!     deferred work can never be stranded).
+//!   * At the round boundary each head engine donates half its lanes
+//!     (never below what it is running) and half its finite KV budget
+//!     (never below what it has committed) to the tail group via
+//!     [`Decision::Repartition`]; the deferred rids are admitted in
+//!     ascending order as contiguous chunks targeted at the tail engines.
+//!     Donations are conserving — total lanes/KV across the fleet are
+//!     unchanged — and both sides' configured shapes are restored by
+//!     mirror repartitions when the tail group drains.
+//!
+//! The tail group is the TOP of the engine index range (`tail_engines`
+//! engines), so on heterogeneous fleets (`--engine-spec`) the
+//! slow-big-KV engines naturally take the tail role when listed last.
+
+use std::collections::{BTreeSet, VecDeque};
+
+use crate::sched::policy::{
+    Decision, Event, HarvestAction, HarvestItem, SchedView, SchedulePolicy, ScheduleBackend,
+};
+
+/// Knobs for the [`TailPacking`] wrapper (`--tail-threshold` /
+/// `--tail-engines`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TailConfig {
+    /// Predictions STRICTLY above this many response tokens are deferred
+    /// into tail rounds.
+    pub threshold: usize,
+    /// Engines (top of the index range) forming the tail group.  Clamped
+    /// to `engines - 1` at runtime so at least one head engine remains;
+    /// on a single-engine fleet a tail round degrades to one batched
+    /// admission of the deferred set (no repartition possible).
+    pub tail_engines: usize,
+}
+
+impl TailConfig {
+    /// CLI-style validation, mirroring the `--kv-page`/`--staleness`
+    /// checks: a zero threshold would defer everything a predictor
+    /// stamps, and a zero-sized tail group cannot host a round.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.threshold == 0 {
+            anyhow::bail!("--tail-threshold must be >= 1 (every stamped request would defer)");
+        }
+        if self.tail_engines == 0 {
+            anyhow::bail!("--tail-engines must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Wrapper policy packing predicted-long requests into batched tail
+/// rounds with elastic lane/KV repartitioning (see module docs).
+/// Composes with every `SchedulerKind`.
+pub struct TailPacking {
+    inner: Box<dyn SchedulePolicy>,
+    cfg: TailConfig,
+    /// Deferred rids, ascending — tail admissions are deterministic.
+    deferred: BTreeSet<u64>,
+    /// Round-boundary decisions queued for the driver (repartitions,
+    /// targeted admissions, restores), drained one per `decide`.
+    pending: VecDeque<Decision>,
+    /// Configured `(engine, lanes, kv_budget)` shapes to restore when the
+    /// current round closes.
+    saved: Vec<(usize, usize, usize)>,
+    in_tail_round: bool,
+    /// Round-close check runs at most once per tick (re-armed by
+    /// `Event::Tick`), like the stealing/governor wrappers.
+    armed: bool,
+    tail_rounds: u64,
+    repartitions: u64,
+    tail_admitted: u64,
+}
+
+impl TailPacking {
+    pub fn wrap(inner: Box<dyn SchedulePolicy>, cfg: TailConfig) -> Self {
+        TailPacking {
+            inner,
+            cfg,
+            deferred: BTreeSet::new(),
+            pending: VecDeque::new(),
+            saved: Vec::new(),
+            in_tail_round: false,
+            armed: true,
+            tail_rounds: 0,
+            repartitions: 0,
+            tail_admitted: 0,
+        }
+    }
+
+    /// Tail rounds opened so far.
+    pub fn tail_rounds(&self) -> u64 {
+        self.tail_rounds
+    }
+
+    /// Applied repartitions so far (donations + restores).
+    pub fn repartitions(&self) -> u64 {
+        self.repartitions
+    }
+
+    /// Requests admitted through tail rounds so far.
+    pub fn tail_admitted(&self) -> u64 {
+        self.tail_admitted
+    }
+
+    /// Size of the tail group on an `n`-engine fleet: at least one head
+    /// engine always remains; 0 means "no group" (single engine).
+    fn group(&self, n: usize) -> usize {
+        self.cfg.tail_engines.min(n.saturating_sub(1))
+    }
+
+    fn should_open(&self, b: &dyn ScheduleBackend, head_empty: bool) -> bool {
+        if self.deferred.is_empty() {
+            return false;
+        }
+        let v = b.view();
+        // starvation: the head rounds have nothing left to run, so the
+        // deferred set is the only remaining work — open immediately
+        // (this is the liveness guarantee; without it an all-deferred
+        // admission loop would trip the driver's fruitless guard)
+        if head_empty && v.running == 0 && v.queued == 0 {
+            return true;
+        }
+        // capacity: enough deferred work to fill the tail group's lanes
+        let loads = b.engine_loads();
+        let t = self.group(loads.len());
+        let cap: usize = if t == 0 {
+            v.lanes
+        } else {
+            loads[loads.len() - t..].iter().map(|l| l.lanes).sum()
+        };
+        self.deferred.len() >= cap.max(1)
+    }
+
+    fn open_round(&mut self, b: &dyn ScheduleBackend) {
+        let rids: Vec<u64> = std::mem::take(&mut self.deferred).into_iter().collect();
+        self.tail_admitted += rids.len() as u64;
+        self.in_tail_round = true;
+        self.tail_rounds += 1;
+        let loads = b.engine_loads();
+        let n = loads.len();
+        let t = self.group(n);
+        if t == 0 {
+            // single-engine fleet: a tail round is just the batched
+            // admission of the deferred set
+            self.pending.push_back(Decision::Admit { rids, engine: None });
+            return;
+        }
+        let tail_start = n - t;
+        // conserving donation: half of each head engine's lanes (never
+        // below what it is running) and half its finite KV budget (never
+        // below its committed usage)
+        let mut lane_pool = 0usize;
+        let mut kv_pool = 0usize;
+        let mut donors: Vec<(usize, usize, usize)> = Vec::new();
+        for (i, l) in loads.iter().enumerate().take(tail_start) {
+            let give_l = (l.lanes / 2).min(l.lanes.saturating_sub(l.active));
+            let give_k = if l.kv_budget == usize::MAX {
+                0
+            } else {
+                (l.kv_budget / 2).min(l.kv_budget.saturating_sub(l.kv_used))
+            };
+            if give_l == 0 && give_k == 0 {
+                continue;
+            }
+            lane_pool += give_l;
+            kv_pool += give_k;
+            donors.push((i, l.lanes - give_l, l.kv_budget - give_k));
+        }
+        // grow the tail group first (its admissions follow immediately;
+        // growth can never violate a backend occupancy invariant), then
+        // shrink the donors
+        for (j, i) in (tail_start..n).enumerate() {
+            let l = &loads[i];
+            let extra_l = lane_pool / t + usize::from(j < lane_pool % t);
+            let extra_k = kv_pool / t + usize::from(j < kv_pool % t);
+            let new_kv = if l.kv_budget == usize::MAX {
+                usize::MAX
+            } else {
+                l.kv_budget.saturating_add(extra_k)
+            };
+            if extra_l == 0 && new_kv == l.kv_budget {
+                continue;
+            }
+            self.saved.push((i, l.lanes, l.kv_budget));
+            self.pending.push_back(Decision::Repartition {
+                engine: i,
+                lanes: l.lanes + extra_l,
+                kv: new_kv,
+            });
+        }
+        for &(i, lanes, kv) in &donors {
+            self.saved.push((i, loads[i].lanes, loads[i].kv_budget));
+            self.pending.push_back(Decision::Repartition { engine: i, lanes, kv });
+        }
+        // targeted admissions: ascending rids in contiguous chunks across
+        // the tail group
+        let chunk = rids.len().div_ceil(t).max(1);
+        for (k, c) in rids.chunks(chunk).enumerate() {
+            self.pending.push_back(Decision::Admit {
+                rids: c.to_vec(),
+                engine: Some(tail_start + k.min(t - 1)),
+            });
+        }
+    }
+
+    fn round_over(&self, b: &dyn ScheduleBackend) -> bool {
+        let loads = b.engine_loads();
+        let t = self.group(loads.len());
+        if t == 0 {
+            let v = b.view();
+            return v.running == 0 && v.queued == 0;
+        }
+        loads[loads.len() - t..]
+            .iter()
+            .all(|l| l.active == 0 && l.queued == 0)
+    }
+
+    fn close_round(&mut self) {
+        // the saved list holds tail-group shapes first, donors second, so
+        // draining it in order shrinks the tail group back BEFORE the
+        // donors re-grow — total capacity never exceeds the configured
+        // fleet at any intermediate decision
+        for (engine, lanes, kv) in self.saved.drain(..) {
+            self.pending.push_back(Decision::Repartition { engine, lanes, kv });
+        }
+        self.in_tail_round = false;
+    }
+}
+
+impl SchedulePolicy for TailPacking {
+    fn name(&self) -> &'static str {
+        "tail-packing"
+    }
+
+    fn decide(&mut self, b: &dyn ScheduleBackend) -> Decision {
+        if let Some(d) = self.pending.pop_front() {
+            return d;
+        }
+        if self.in_tail_round && self.armed {
+            self.armed = false;
+            if self.round_over(b) {
+                self.close_round();
+                if let Some(d) = self.pending.pop_front() {
+                    return d;
+                }
+            }
+        }
+        match self.inner.decide(b) {
+            Decision::Admit { rids, engine: None } => {
+                let mut head = Vec::with_capacity(rids.len());
+                for rid in rids {
+                    match b.predicted_len(rid) {
+                        Some(p) if p > self.cfg.threshold => {
+                            self.deferred.insert(rid);
+                        }
+                        _ => head.push(rid),
+                    }
+                }
+                if !self.in_tail_round && self.should_open(b, head.is_empty()) {
+                    self.open_round(b);
+                }
+                if head.is_empty() {
+                    if let Some(d) = self.pending.pop_front() {
+                        return d;
+                    }
+                }
+                // an all-deferred admission with no round to open returns
+                // the empty Admit, which the driver treats as a no-op
+                Decision::Admit { rids: head, engine: None }
+            }
+            other => other,
+        }
+    }
+
+    fn classify(&mut self, item: &HarvestItem, view: &SchedView) -> HarvestAction {
+        self.inner.classify(item, view)
+    }
+
+    fn observe(&mut self, ev: &Event) {
+        match ev {
+            Event::Tick { .. } => self.armed = true,
+            Event::Repartitioned { applied, .. } => {
+                if *applied {
+                    self.repartitions += 1;
+                }
+            }
+            _ => {}
+        }
+        self.inner.observe(ev);
+    }
+}

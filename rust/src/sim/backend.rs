@@ -99,6 +99,18 @@ pub(super) struct SimBackend {
     /// exceeds the cap is re-synced once, dropped on repeat.  `None`
     /// (default) keeps every pre-cap golden byte-identical.
     pub(super) staleness_cap: Option<u64>,
+    /// Size of the tail engine group (top of the index range) when a
+    /// `TailPacking` wrapper is active; 0 = no tail rounds.  Only used
+    /// for accounting (round counters + head/tail bubble split) — the
+    /// policy wrapper owns the actual deferral decisions.
+    pub(super) tail_engines: usize,
+    /// A tail round is open: a targeted admission landed on the tail
+    /// group and the group has not drained back to idle yet.
+    tail_round_open: bool,
+    tail_rounds: u64,
+    tail_admitted: u64,
+    /// Applied (not refused) `Decision::Repartition`s.
+    repartitions: u64,
     /// Per-sample version deltas of everything actually trained.
     staleness_hist: BTreeMap<u64, u64>,
     /// Deltas from the most recent `train` call, keyed by rid — what
@@ -145,6 +157,11 @@ impl SimBackend {
             overlap_updates,
             update_free_at: 0.0,
             staleness_cap: None,
+            tail_engines: 0,
+            tail_round_open: false,
+            tail_rounds: 0,
+            tail_admitted: 0,
+            repartitions: 0,
             staleness_hist: BTreeMap::new(),
             last_staleness: BTreeMap::new(),
             stale_resyncs: 0,
@@ -210,6 +227,26 @@ impl SimBackend {
         }
     }
 
+    /// Reshape the fleet to heterogeneous per-engine specs
+    /// (`--engine-spec`): lanes/KV/speed per engine, and the pool lane
+    /// cap becomes the spec sum instead of `q_each * engines`.
+    pub(super) fn apply_specs(&mut self, specs: &[crate::sched::EngineSpec]) {
+        self.pool.apply_specs(specs);
+        self.q_cap = specs.iter().map(|s| s.lanes).sum();
+    }
+
+    /// Engines in the tail group, clamped like `TailPacking::group` so at
+    /// least one head engine remains.
+    fn tail_group(&self) -> usize {
+        self.tail_engines
+            .min(self.pool.engines.len().saturating_sub(1))
+    }
+
+    fn in_tail_group(&self, engine: usize) -> bool {
+        let t = self.tail_group();
+        t > 0 && engine >= self.pool.engines.len() - t
+    }
+
     fn stash_pred(&mut self, id: usize, v: f64) {
         if id >= self.staged_pred.len() {
             self.staged_pred.resize(id + 1, None);
@@ -251,6 +288,29 @@ impl SimBackend {
                 }
             })
             .collect();
+        // head/tail bubble split: with a tail group configured, report
+        // each engine group's bubble against its own configured capacity
+        // (both over the pool end time) so tail-round packing shows up as
+        // a head-side occupancy gain rather than vanishing into the
+        // pool-wide average.  A group that never ran is 100% idle.
+        let t = self.tail_group();
+        let (head_bubble, tail_bubble) = if t == 0 {
+            (bubble, 0.0)
+        } else {
+            let split = self.pool.engines.len() - t;
+            let group_bubble = |engines: &[SimEngine]| {
+                let tl = merge_timelines(engines);
+                if tl.events().is_empty() {
+                    1.0
+                } else {
+                    tl.bubble_ratio(engines.iter().map(|e| e.q).sum(), rollout_time)
+                }
+            };
+            (
+                group_bubble(&self.pool.engines[..split]),
+                group_bubble(&self.pool.engines[split..]),
+            )
+        };
         // useful = tokens of trajectories actually harvested (clipping
         // shortens; restarts and drops waste)
         let useful = self.pool.tokens_out().saturating_sub(self.wasted);
@@ -284,6 +344,11 @@ impl SimBackend {
             peak_lanes,
             kv_sheds: self.pool.engines.iter().map(|e| e.sheds).sum(),
             throttles: self.throttles,
+            tail_rounds: self.tail_rounds,
+            tail_admitted: self.tail_admitted,
+            repartitions: self.repartitions,
+            head_bubble,
+            tail_bubble,
             kv_trace,
             consumed_rids: self.consumed,
             max_staleness: self.staleness_hist.keys().next_back().copied().unwrap_or(0),
@@ -436,6 +501,18 @@ impl ScheduleBackend for SimBackend {
             }
             work.push(w);
         }
+        // tail-round accounting: a targeted admission onto the tail
+        // group while no round is open IS the round opening (the policy
+        // wrapper only ever targets tail engines at round boundaries)
+        if let Some(i) = engine {
+            if self.in_tail_group(i) && !rids.is_empty() {
+                self.tail_admitted += rids.len() as u64;
+                if !self.tail_round_open {
+                    self.tail_round_open = true;
+                    self.tail_rounds += 1;
+                }
+            }
+        }
         match engine {
             Some(i) => self.pool.stage_to(i, work),
             None => self.pool.stage(work, self.pred.as_ref()),
@@ -460,6 +537,7 @@ impl ScheduleBackend for SimBackend {
                     kv_budget: e.kv.budget,
                     kv_blocked: blocked,
                     kv_pressure: e.kv.pressure(used, e.running.len()),
+                    speed_q8: crate::sched::speed_to_q8(e.speed),
                 }
             })
             .collect()
@@ -511,13 +589,21 @@ impl ScheduleBackend for SimBackend {
         if e.running.len() < 2 {
             return Ok(false);
         }
-        // shed the smallest-context lane, progress kept, routed like a
-        // preemption so budget-aware dispatch can re-place it
+        // shed the lane with the most predicted-remaining work (ties on
+        // paged fragmentation), progress kept, routed like a preemption
+        // so budget-aware dispatch can re-place it — evicting the
+        // longest-to-finish lane frees its reservation for the longest
+        // span per eviction
         let lane = e
             .running
             .iter()
             .enumerate()
-            .min_by_key(|&(i, r)| (e.lane_charge(r), i))
+            .max_by_key(|&(i, r)| {
+                (
+                    e.kv.victim_key(r.req.prompt_len, r.generated, r.req.output_len, r.predicted),
+                    std::cmp::Reverse(i),
+                )
+            })
             .map(|(i, _)| i)
             .expect("running checked >= 2");
         self.pool.preempt(engine, lane);
@@ -536,8 +622,37 @@ impl ScheduleBackend for SimBackend {
         }
     }
 
+    fn repartition(&mut self, engine: usize, lanes: usize, kv: usize) -> Result<bool> {
+        let applied = self.pool.repartition(engine, lanes, kv);
+        if applied {
+            self.repartitions += 1;
+        }
+        Ok(applied)
+    }
+
+    fn predicted_len(&self, rid: u64) -> Option<usize> {
+        let e = self.entries.get(rid as usize)?.as_ref()?;
+        if e.life != SimLife::Fresh {
+            return None;
+        }
+        crate::rollout::kv::stamp_prediction(
+            self.pred.is_rank_only(),
+            self.pred.predict(rid, e.req.prompt_len),
+        )
+    }
+
     fn step(&mut self) -> Result<usize> {
         let Some(finished) = self.pool.tick() else { return Ok(0) };
+        // a tail round closes when the tail group drains back to idle
+        if self.tail_round_open {
+            let split = self.pool.engines.len() - self.tail_group();
+            if self.pool.engines[split..]
+                .iter()
+                .all(|e| e.running.is_empty() && e.queue_len() == 0)
+            {
+                self.tail_round_open = false;
+            }
+        }
         let n = finished.len();
         for r in &finished {
             let predicted = self

@@ -58,6 +58,12 @@ pub(crate) struct SimEngine {
     /// KV memory model (mode + budget + page; `budget == usize::MAX` =
     /// accounting off).
     pub(crate) kv: KvConfig,
+    /// Relative decode speed (`--engine-spec`; 1.0 = the homogeneous
+    /// default).  Every time cost divides by it — division by 1.0 is
+    /// bitwise exact in IEEE, so homogeneous fleets keep their pinned
+    /// clocks, and power-of-two speeds keep the Event≡Reference
+    /// differential exact on heterogeneous ones.
+    pub(crate) speed: f64,
     pub(crate) clock: f64,
     pub(crate) running: Vec<Running>,
     queue: VecDeque<SimWork>,
@@ -87,6 +93,7 @@ impl SimEngine {
             q,
             cost,
             kv,
+            speed: 1.0,
             clock: 0.0,
             running: Vec::new(),
             queue: VecDeque::new(),
@@ -208,8 +215,10 @@ impl SimEngine {
             if w.ready_at > self.clock {
                 self.clock = w.ready_at;
             }
-            // prefill cost: prompt + any preserved progress
-            self.clock += (w.req.prompt_len + w.progress) as f64 * self.cost.t_prefill_token;
+            // prefill cost: prompt + any preserved progress, scaled by
+            // the engine's relative speed
+            self.clock +=
+                (w.req.prompt_len + w.progress) as f64 * self.cost.t_prefill_token / self.speed;
             self.kv_used_cache +=
                 self.kv.lane_charge(w.req.prompt_len, w.progress, w.req.output_len);
             self.running
@@ -219,9 +228,10 @@ impl SimEngine {
     }
 
     /// Cost of one decode iteration at the CURRENT occupancy — the grid
-    /// pitch fused spans multiply against.
+    /// pitch fused spans multiply against — scaled by the engine's
+    /// relative speed.
     pub(crate) fn iter_cost(&self) -> f64 {
-        self.cost.t_weights + self.running.len() as f64 * self.cost.t_token
+        (self.cost.t_weights + self.running.len() as f64 * self.cost.t_token) / self.speed
     }
 
     /// One decode iteration; returns finished requests.
@@ -230,7 +240,7 @@ impl SimEngine {
         if r == 0 {
             return Vec::new();
         }
-        self.clock += self.cost.t_weights + r as f64 * self.cost.t_token;
+        self.clock += self.iter_cost();
         self.tokens_out += r as u64;
         let kv = self.kv;
         let mut finished = Vec::new();
@@ -315,12 +325,16 @@ impl SimEngine {
     }
 
     /// Forced paged backpressure: if actual usage outgrew the budget
-    /// (admission estimates undershot), evict the smallest-context lane
-    /// back to the local queue — progress kept, resume pays a re-prefill —
-    /// until the budget holds or one lane remains (the running twin of the
-    /// empty-engine admission escape).  The back of the queue makes the
-    /// evicted partial the preferred steal victim for a KV-rich peer.
-    fn shed_over_budget(&mut self) {
+    /// (admission estimates undershot), evict the lane with the most
+    /// predicted REMAINING work (per-page fragmentation as tiebreak —
+    /// `rollout::kv::victim_key`) back to the local queue — progress
+    /// kept, resume pays a re-prefill — until the budget holds or one
+    /// lane remains (the running twin of the empty-engine admission
+    /// escape).  Evicting the longest-remaining lane frees its KV for the
+    /// longest stretch and hands exactly the request tail rounds absorb;
+    /// the back of the queue makes the evicted partial the preferred
+    /// steal victim for a KV-rich peer.
+    pub(crate) fn shed_over_budget(&mut self) {
         if self.kv.mode != KvMode::Paged || self.kv.unlimited() {
             return;
         }
@@ -329,7 +343,13 @@ impl SimEngine {
                 .running
                 .iter()
                 .enumerate()
-                .min_by_key(|&(i, r)| (self.lane_charge(r), i))
+                .max_by_key(|&(i, r)| {
+                    (
+                        self.kv.victim_key(r.req.prompt_len, r.generated,
+                                           r.req.output_len, r.predicted),
+                        std::cmp::Reverse(i),
+                    )
+                })
                 .map(|(i, _)| i)
                 .expect("running checked non-empty");
             let r = self.running.remove(lane);

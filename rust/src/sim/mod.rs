@@ -32,14 +32,12 @@ mod pool;
 
 pub use pool::SimCore;
 
-use crate::coordinator::buffer::Mode;
+use crate::coordinator::controller::SchedulerKind;
 use crate::metrics::Timeline;
 use crate::rollout::kv::{KvConfig, KvMode};
-use crate::sched::policy::{
-    drive_traced, AsyncUpdatePolicy, BaselinePolicy, GroupPolicy, KvGovernor, PolicyParams,
-    SchedulePolicy, StealConfig, WorkStealing, ASYNC_SYNC_EVERY,
-};
-use crate::sched::{sjf_priority, DispatchPolicy, LengthPredictor, PredictorKind};
+use crate::sched::policy::{drive_traced, PolicyBuilder, PolicyParams};
+use crate::sched::tail::TailConfig;
+use crate::sched::{sjf_priority, DispatchPolicy, EngineSpec, LengthPredictor, PredictorKind};
 use crate::trace::{SloSummary, Tracer};
 use crate::util::rng::Pcg64;
 use crate::workload::Arrival;
@@ -154,6 +152,20 @@ pub struct SimReport {
     pub kv_sheds: u64,
     /// Lanes shed by executed `Decision::Throttle`s (the KvGovernor).
     pub throttles: u64,
+    /// Tail rounds opened by the `TailPacking` wrapper (0 when off).
+    pub tail_rounds: u64,
+    /// Requests admitted through tail rounds.
+    pub tail_admitted: u64,
+    /// Applied `Decision::Repartition`s (round-boundary donations plus
+    /// their mirror restores).
+    pub repartitions: u64,
+    /// Head-group bubble over the rollout span.  Equals `bubble_ratio`
+    /// when no tail group is configured; with one, tail packing should
+    /// push this DOWN while `tail_bubble` absorbs the stragglers.
+    pub head_bubble: f64,
+    /// Tail-group bubble over the rollout span (0.0 with no tail group;
+    /// 1.0 if the group was configured but never hosted a round).
+    pub tail_bubble: f64,
     /// Pool-wide KV usage over time, (engine seconds, tokens charged),
     /// downsampled — the utilization curve `pool_kv.json` plots.  Empty
     /// when KV accounting is off.
@@ -171,7 +183,7 @@ pub struct SimReport {
     pub stale_resyncs: u64,
     /// Per-request latency roll-up (TTFT/TPOT/e2e quantiles, goodput).
     /// Default-empty unless the run carried a recording [`Tracer`]
-    /// ([`simulate_pool_traced`], or `PoolSimOpts::slo`).
+    /// ([`SimRun::tracer`], or `PoolSimOpts::slo`).
     pub slo: SloSummary,
 }
 
@@ -355,7 +367,7 @@ pub fn scale_probe_arrivals(arrivals: &[Arrival], engines: usize, q_total: usize
 pub fn simulate_pool(mode: SimMode, workload: &[SimRequest], engines: usize,
                      q_total: usize, update_batch: usize, cost: CostModel,
                      dispatch: DispatchPolicy, predictor: PredictorKind) -> SimReport {
-    simulate_pool_opts(mode, workload, PoolSimOpts {
+    SimRun::new(mode, PoolSimOpts {
         engines,
         q_total,
         update_batch,
@@ -364,6 +376,8 @@ pub fn simulate_pool(mode: SimMode, workload: &[SimRequest], engines: usize,
         predictor,
         ..PoolSimOpts::default()
     })
+    .workload(workload)
+    .run()
 }
 
 /// Pool-simulation knobs beyond mode/workload.  The positional
@@ -406,8 +420,14 @@ pub struct PoolSimOpts {
     /// at consume time (older samples re-sync once, drop on repeat) —
     /// the same semantics the live controller applies, so cross-backend
     /// goldens stay meaningful.  `None` (default) keeps the legacy
-    /// [`ASYNC_SYNC_EVERY`] window with no consume-time cap.
+    /// `ASYNC_SYNC_EVERY` window with no consume-time cap.
     pub staleness: Option<usize>,
+    /// `--tail-threshold`/`--tail-engines`: wrap the policy in the
+    /// [`crate::sched::TailPacking`] composer (outermost), deferring
+    /// predicted-long requests into batched tail rounds on the top
+    /// `tail_engines` engines with elastic lane/KV repartitioning.
+    /// `None` (default) keeps every pre-tail golden byte-identical.
+    pub tail: Option<TailConfig>,
 }
 
 impl Default for PoolSimOpts {
@@ -428,49 +448,9 @@ impl Default for PoolSimOpts {
             core: SimCore::Event,
             timeline_stride: 1,
             staleness: None,
+            tail: None,
         }
     }
-}
-
-/// [`simulate_pool`] with the full option set (work stealing, KV budget).
-/// With `o.slo` set, the run carries a span-recording tracer and the
-/// report's `slo` section is filled; otherwise the disabled no-op sink
-/// rides along, so fuzz suites and decision goldens pay nothing.
-pub fn simulate_pool_opts(mode: SimMode, workload: &[SimRequest],
-                          o: PoolSimOpts) -> SimReport {
-    let mut tracer =
-        if o.slo.is_some() { Tracer::new(o.slo, false) } else { Tracer::disabled() };
-    simulate_pool_traced(mode, workload, o, &mut tracer)
-}
-
-/// [`simulate_pool_opts`] with an explicit [`Tracer`] riding on the driver
-/// — the entry point `sim --trace-out` uses to produce Perfetto traces and
-/// full SLO telemetry from a simulated pool.
-pub fn simulate_pool_traced(mode: SimMode, workload: &[SimRequest], o: PoolSimOpts,
-                            tracer: &mut Tracer) -> SimReport {
-    run_pool_traced(mode, PoolInput::Closed(workload), o, tracer)
-}
-
-/// [`simulate_pool_opts`] over an open-loop arrival stream: requests
-/// become visible to the scheduler at their arrival instants instead of
-/// all at `t = 0` (see `workload::ArrivalSpec`).  A stream with every
-/// `t = 0` reproduces the corresponding closed-loop run bit for bit
-/// (tested below), which is how `--arrival batch` keeps every golden.
-pub fn simulate_pool_arrivals(mode: SimMode, arrivals: &[Arrival],
-                              o: PoolSimOpts) -> SimReport {
-    let mut tracer =
-        if o.slo.is_some() { Tracer::new(o.slo, false) } else { Tracer::disabled() };
-    simulate_pool_arrivals_traced(mode, arrivals, o, &mut tracer)
-}
-
-/// [`simulate_pool_traced`] over an open-loop arrival stream.  Arrivals
-/// must be sorted by time; when the tracer records, each is registered
-/// with its tenant and arrival instant, so SLO latencies come out
-/// arrival-relative (queueing delay included) and the summary grows
-/// per-tenant rollups plus the Jain fairness index.
-pub fn simulate_pool_arrivals_traced(mode: SimMode, arrivals: &[Arrival],
-                                     o: PoolSimOpts, tracer: &mut Tracer) -> SimReport {
-    run_pool_traced(mode, PoolInput::Open(arrivals), o, tracer)
 }
 
 /// Closed-loop (everything schedulable at t=0) vs open-loop (timestamped
@@ -480,70 +460,161 @@ enum PoolInput<'a> {
     Open(&'a [Arrival]),
 }
 
-fn run_pool_traced(mode: SimMode, input: PoolInput<'_>, o: PoolSimOpts,
-                   tracer: &mut Tracer) -> SimReport {
-    assert!(o.engines >= 1 && o.q_total >= o.engines, "q_total must cover engines");
-    assert!(o.update_batch >= 1, "update_batch must be >= 1");
-    let q_each = o.q_total / o.engines;
-    let q_cap = q_each * o.engines;
-    let total = match &input {
-        PoolInput::Closed(w) => w.len(),
-        PoolInput::Open(a) => a.len(),
-    };
-    let params = PolicyParams {
-        refill_prompts: match mode {
-            SimMode::Baseline => q_cap,
-            _ => total.max(1),
-        },
-        entries_per_prompt: 1,
-        update_batch: o.update_batch,
-    };
-    let mut policy: Box<dyn SchedulePolicy> = match mode {
-        SimMode::Baseline => Box::new(BaselinePolicy::new(params, false)),
-        SimMode::SortedOnPolicy => Box::new(GroupPolicy::new(params, Mode::OnPolicy)),
-        SimMode::SortedPartial => Box::new(GroupPolicy::new(params, Mode::Partial)),
-        SimMode::Async => Box::new(AsyncUpdatePolicy::new(
-            params,
-            // --staleness N doubles as the re-sync window; the baked-in
-            // constant is only the derived default
-            o.staleness.unwrap_or(ASYNC_SYNC_EVERY),
-        )),
-    };
-    // same composition order as make_policy_full: governor inside stealing
-    if o.kv_mode == KvMode::Paged {
-        policy = Box::new(KvGovernor::wrap(policy));
-    }
-    if o.steal {
-        policy = Box::new(WorkStealing::wrap(policy, StealConfig::default()));
-    }
-    let kv = KvConfig { mode: o.kv_mode, budget: o.kv_budget, page: o.kv_page.max(1) };
-    // per-iteration latency stamps (TTFT/TPOT) need the per-iteration
-    // stepper; fused spans would collapse them onto decision points
-    let core = if tracer.enabled() { SimCore::Reference } else { o.core };
-    let mut backend = match input {
-        PoolInput::Closed(w) => {
-            SimBackend::new(w, o.engines, q_each, o.cost, o.dispatch, o.predictor,
-                            mode == SimMode::Async, kv, core, o.timeline_stride.max(1))
+/// The one policy-driven pool runner, as a builder: every former
+/// `simulate_pool_*` entry point is a chain over this.
+///
+/// ```ignore
+/// let report = SimRun::new(mode, opts)
+///     .workload(&w)            // or .arrivals(&stream) for open loop
+///     .specs(&fleet)           // optional: heterogeneous --engine-spec
+///     .tracer(&mut tracer)     // optional: Perfetto spans + SLO stamps
+///     .run();
+/// ```
+///
+/// With no explicit tracer, `opts.slo = Some(deadline)` runs a
+/// span-recording tracer internally and fills `SimReport::slo`; otherwise
+/// the disabled no-op sink rides along, so fuzz suites and decision
+/// goldens pay nothing.  Open-loop arrivals must be sorted by time; when
+/// the tracer records, each is registered with its tenant and arrival
+/// instant, so SLO latencies come out arrival-relative (queueing delay
+/// included) and the summary grows per-tenant rollups plus the Jain
+/// fairness index.  An all-`t = 0` stream reproduces the corresponding
+/// closed-loop run bit for bit (tested below), which is how
+/// `--arrival batch` keeps every golden.
+pub struct SimRun<'a> {
+    mode: SimMode,
+    opts: PoolSimOpts,
+    input: PoolInput<'a>,
+    specs: &'a [EngineSpec],
+    tracer: Option<&'a mut Tracer>,
+}
+
+impl<'a> SimRun<'a> {
+    /// A run of `mode` under `opts`, closed-loop over an empty workload
+    /// until [`workload`](Self::workload) or
+    /// [`arrivals`](Self::arrivals) supplies the input.
+    pub fn new(mode: SimMode, opts: PoolSimOpts) -> Self {
+        SimRun {
+            mode,
+            opts,
+            input: PoolInput::Closed(&[]),
+            specs: &[],
+            tracer: None,
         }
-        PoolInput::Open(a) => {
-            if tracer.enabled() {
-                for x in a {
-                    tracer.register_arrival(x.req.id as u64, x.t, x.tenant);
-                }
+    }
+
+    /// Closed-loop input: the whole workload is schedulable at `t = 0`.
+    pub fn workload(mut self, workload: &'a [SimRequest]) -> Self {
+        self.input = PoolInput::Closed(workload);
+        self
+    }
+
+    /// Open-loop input: requests become visible to the scheduler at their
+    /// arrival instants (see `workload::ArrivalSpec`).  Replaces any
+    /// previously set closed-loop workload.
+    pub fn arrivals(mut self, arrivals: &'a [Arrival]) -> Self {
+        self.input = PoolInput::Open(arrivals);
+        self
+    }
+
+    /// Heterogeneous fleet shapes (`--engine-spec`): one spec per engine
+    /// (validated in [`run`](Self::run)); lanes/KV/speed override the
+    /// uniform `q_total / engines` split and the pool lane cap becomes
+    /// the spec sum.
+    pub fn specs(mut self, specs: &'a [EngineSpec]) -> Self {
+        self.specs = specs;
+        self
+    }
+
+    /// Ride an explicit [`Tracer`] on the driver — the path `sim
+    /// --trace-out` uses to produce Perfetto traces and full SLO
+    /// telemetry from a simulated pool.
+    pub fn tracer(mut self, tracer: &'a mut Tracer) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    pub fn run(self) -> SimReport {
+        let SimRun { mode, opts: o, input, specs, tracer } = self;
+        let mut local =
+            if o.slo.is_some() { Tracer::new(o.slo, false) } else { Tracer::disabled() };
+        let tracer = tracer.unwrap_or(&mut local);
+        assert!(o.engines >= 1 && o.q_total >= o.engines, "q_total must cover engines");
+        assert!(o.update_batch >= 1, "update_batch must be >= 1");
+        if !specs.is_empty() {
+            assert_eq!(specs.len(), o.engines, "need one engine spec per engine");
+            for s in specs {
+                s.validate().expect("invalid engine spec");
             }
-            SimBackend::with_arrivals(a, o.engines, q_each, o.cost, o.dispatch,
-                                      o.predictor, mode == SimMode::Async, kv, core,
-                                      o.timeline_stride.max(1))
         }
-    };
-    backend.staleness_cap = o.staleness.map(|n| n as u64);
-    drive_traced(policy.as_mut(), &mut backend, tracer)
-        .expect("sim backend is infallible; a driver error means a policy livelock");
-    let mut report = backend.into_report(mode);
-    if tracer.enabled() {
-        report.slo = tracer.slo_summary();
+        let q_each = o.q_total / o.engines;
+        let q_cap = if specs.is_empty() {
+            q_each * o.engines
+        } else {
+            specs.iter().map(|s| s.lanes).sum()
+        };
+        let total = match &input {
+            PoolInput::Closed(w) => w.len(),
+            PoolInput::Open(a) => a.len(),
+        };
+        let params = PolicyParams {
+            refill_prompts: match mode {
+                SimMode::Baseline => q_cap,
+                _ => total.max(1),
+            },
+            entries_per_prompt: 1,
+            update_batch: o.update_batch,
+        };
+        let kind = match mode {
+            SimMode::Baseline => SchedulerKind::Baseline,
+            SimMode::SortedOnPolicy => SchedulerKind::SortedOnPolicy,
+            SimMode::SortedPartial => SchedulerKind::SortedPartial,
+            SimMode::Async => SchedulerKind::AsyncUpdate,
+        };
+        let kv = KvConfig { mode: o.kv_mode, budget: o.kv_budget, page: o.kv_page.max(1) };
+        // the composition order (governor inside stealing inside tail) and
+        // the async re-sync window derivation live in PolicyBuilder — the
+        // sim builds its policy exactly like the live controller does
+        let mut policy = PolicyBuilder::new(kind, params)
+            .kv(kv)
+            .steal(o.steal)
+            .staleness(o.staleness)
+            .tail(o.tail)
+            .build();
+        // per-iteration latency stamps (TTFT/TPOT) need the per-iteration
+        // stepper; fused spans would collapse them onto decision points
+        let core = if tracer.enabled() { SimCore::Reference } else { o.core };
+        let mut backend = match input {
+            PoolInput::Closed(w) => {
+                SimBackend::new(w, o.engines, q_each, o.cost, o.dispatch, o.predictor,
+                                mode == SimMode::Async, kv, core, o.timeline_stride.max(1))
+            }
+            PoolInput::Open(a) => {
+                if tracer.enabled() {
+                    for x in a {
+                        tracer.register_arrival(x.req.id as u64, x.t, x.tenant);
+                    }
+                }
+                SimBackend::with_arrivals(a, o.engines, q_each, o.cost, o.dispatch,
+                                          o.predictor, mode == SimMode::Async, kv, core,
+                                          o.timeline_stride.max(1))
+            }
+        };
+        if !specs.is_empty() {
+            backend.apply_specs(specs);
+        }
+        if let Some(tc) = o.tail {
+            backend.tail_engines = tc.tail_engines;
+        }
+        backend.staleness_cap = o.staleness.map(|n| n as u64);
+        drive_traced(policy.as_mut(), &mut backend, tracer)
+            .expect("sim backend is infallible; a driver error means a policy livelock");
+        let mut report = backend.into_report(mode);
+        if tracer.enabled() {
+            report.slo = tracer.slo_summary();
+        }
+        report
     }
-    report
 }
 
 #[cfg(test)]
@@ -663,13 +734,15 @@ mod tests {
     fn async_staleness_cap_bounds_offpolicy_degree() {
         let w = longtail_workload(512, 8192, 1);
         let run = |staleness| {
-            simulate_pool_opts(SimMode::Async, &w, PoolSimOpts {
+            SimRun::new(SimMode::Async, PoolSimOpts {
                 engines: 1,
                 q_total: 128,
                 update_batch: 128,
                 staleness,
                 ..PoolSimOpts::default()
             })
+            .workload(&w)
+            .run()
         };
         let free = run(None);
         // all 512 samples are born at v0 and consumed at most 128 per
@@ -858,7 +931,10 @@ mod tests {
     fn slo_golden_two_engine_hand_derived() {
         let (w, opts) = golden_workload_and_opts();
         let mut tracer = Tracer::new(Some(4.0), false);
-        let r = simulate_pool_traced(SimMode::Baseline, &w, opts, &mut tracer);
+        let r = SimRun::new(SimMode::Baseline, opts)
+            .workload(&w)
+            .tracer(&mut tracer)
+            .run();
         let s = &r.slo;
         assert_eq!((s.enqueued, s.completed, s.clipped, s.dropped), (4, 4, 0, 0));
         assert!((s.ttft_p50 - 1.0).abs() < 1e-9, "ttft_p50 {}", s.ttft_p50);
@@ -886,7 +962,7 @@ mod tests {
         assert_eq!(at(1), (Some(1), Some(0), Some(5.0)));
         assert_eq!(at(3), (Some(1), Some(1), Some(5.0)));
         // the PoolSimOpts::slo path computes the identical summary
-        let r2 = simulate_pool_opts(SimMode::Baseline, &w, opts);
+        let r2 = SimRun::new(SimMode::Baseline, opts).workload(&w).run();
         assert_eq!(r2.slo.completed, 4);
         assert!((r2.slo.goodput - 0.5).abs() < 1e-9);
         assert!((r2.slo.e2e_p99 - 5.0).abs() < 1e-9);
@@ -898,7 +974,10 @@ mod tests {
         use std::collections::BTreeMap;
         let (w, opts) = golden_workload_and_opts();
         let mut tracer = Tracer::new(None, true);
-        simulate_pool_traced(SimMode::Baseline, &w, opts, &mut tracer);
+        SimRun::new(SimMode::Baseline, opts)
+            .workload(&w)
+            .tracer(&mut tracer)
+            .run();
         let text = tracer.chrome_json().expect("chrome tracer").to_string_pretty();
         let back = Json::parse(&text).expect("trace must be valid JSON");
         let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
@@ -959,6 +1038,13 @@ mod tests {
         assert_eq!(a.migrated_tokens, b.migrated_tokens, "{ctx}: migrated");
         assert_eq!(a.kv_sheds, b.kv_sheds, "{ctx}: kv_sheds");
         assert_eq!(a.throttles, b.throttles, "{ctx}: throttles");
+        assert_eq!(a.tail_rounds, b.tail_rounds, "{ctx}: tail_rounds");
+        assert_eq!(a.tail_admitted, b.tail_admitted, "{ctx}: tail_admitted");
+        assert_eq!(a.repartitions, b.repartitions, "{ctx}: repartitions");
+        assert_eq!(a.head_bubble.to_bits(), b.head_bubble.to_bits(),
+                   "{ctx}: head_bubble {} vs {}", a.head_bubble, b.head_bubble);
+        assert_eq!(a.tail_bubble.to_bits(), b.tail_bubble.to_bits(),
+                   "{ctx}: tail_bubble {} vs {}", a.tail_bubble, b.tail_bubble);
         assert_eq!(a.peak_lanes, b.peak_lanes, "{ctx}: peak_lanes");
         assert_eq!(a.consumed_rids, b.consumed_rids, "{ctx}: consumed order");
         assert_eq!(a.staleness_hist, b.staleness_hist, "{ctx}: staleness hist");
@@ -994,7 +1080,7 @@ mod tests {
             for dispatch in DispatchPolicy::ALL {
                 for steal in [false, true] {
                     let run = |core| {
-                        simulate_pool_opts(mode, &w, PoolSimOpts {
+                        SimRun::new(mode, PoolSimOpts {
                             engines: 3,
                             q_total: 24,
                             update_batch: 16,
@@ -1005,6 +1091,8 @@ mod tests {
                             core,
                             ..PoolSimOpts::default()
                         })
+                        .workload(&w)
+                        .run()
                     };
                     assert_reports_identical(
                         &run(SimCore::Event),
@@ -1023,7 +1111,7 @@ mod tests {
             for (budget, page) in [(2048usize, 1usize), (1536, 64), (1100, 7)] {
                 for dispatch in DispatchPolicy::ALL {
                     let run = |core| {
-                        simulate_pool_opts(SimMode::SortedPartial, &w, PoolSimOpts {
+                        SimRun::new(SimMode::SortedPartial, PoolSimOpts {
                             engines: 2,
                             q_total: 16,
                             update_batch: 12,
@@ -1037,6 +1125,8 @@ mod tests {
                             core,
                             ..PoolSimOpts::default()
                         })
+                        .workload(&w)
+                        .run()
                     };
                     assert_reports_identical(
                         &run(SimCore::Event),
@@ -1073,13 +1163,15 @@ mod tests {
         let w = longtail_workload(120, 2048, 17);
         for core in [SimCore::Event, SimCore::Reference] {
             for mode in [SimMode::Baseline, SimMode::SortedPartial, SimMode::Async] {
-                let r = simulate_pool_opts(mode, &w, PoolSimOpts {
+                let r = SimRun::new(mode, PoolSimOpts {
                     engines: 4,
                     q_total: 64,
                     update_batch: 32,
                     core,
                     ..PoolSimOpts::default()
-                });
+                })
+                .workload(&w)
+                .run();
                 assert_eq!(r.timeline.finished() as usize + r.clipped + r.dropped,
                            120, "{core:?} {mode:?}");
                 assert_eq!(r.consumed_rids.len(), 120 - r.dropped, "{core:?} {mode:?}");
@@ -1088,6 +1180,140 @@ mod tests {
                 }
             }
         }
+    }
+
+    // ------------------------------------------------------------------
+    // tail rounds + elastic repartition
+    // ------------------------------------------------------------------
+
+    /// The pinned tail-packing regression: a hand-built skew where two
+    /// 50-token stragglers (rids 3 and 6) land on the same engine under
+    /// round-robin striping, and the paged KV budget (page 1, budget 64)
+    /// cannot host both estimates at once (2 x (8 + 50) = 116 > 64) — so
+    /// without tail rounds they serialize on one lane while the rest of
+    /// the fleet drains 2-token shorts and goes idle.  With tail packing
+    /// the stragglers defer, the starved pool opens a tail round, the two
+    /// head engines each donate a lane and half their budget
+    /// (64 + 2 x 32 = 128 >= 116), and both stragglers decode
+    /// concurrently — the bubble must come down STRICTLY.
+    #[test]
+    fn tail_packing_strictly_cuts_longtail_bubble() {
+        let w: Vec<SimRequest> = (0..9)
+            .map(|id| SimRequest {
+                id,
+                prompt_len: 8,
+                output_len: if id % 3 == 0 && id > 0 { 50 } else { 2 },
+            })
+            .collect();
+        let opts = PoolSimOpts {
+            engines: 3,
+            q_total: 9,
+            update_batch: 9,
+            cost: dyadic_cost(),
+            dispatch: DispatchPolicy::RoundRobin,
+            predictor: PredictorKind::Oracle,
+            kv_budget: 64,
+            kv_mode: KvMode::Paged,
+            kv_page: 1,
+            ..PoolSimOpts::default()
+        };
+        let base = SimRun::new(SimMode::Baseline, opts).workload(&w).run();
+        let tail = SimRun::new(SimMode::Baseline, PoolSimOpts {
+            tail: Some(TailConfig { threshold: 25, tail_engines: 1 }),
+            ..opts
+        })
+        .workload(&w)
+        .run();
+        assert_eq!(base.tail_rounds, 0);
+        assert_eq!(base.repartitions, 0);
+        assert!(tail.tail_rounds >= 1, "no tail round opened");
+        assert_eq!(tail.tail_admitted, 2, "both stragglers must pack");
+        assert!(tail.repartitions >= 2, "donation + restore expected, got {}",
+                tail.repartitions);
+        assert!(tail.bubble_ratio < base.bubble_ratio,
+                "tail packing must strictly cut the bubble: {} !< {}",
+                tail.bubble_ratio, base.bubble_ratio);
+        // split telemetry fills and stays sane; the tail group hosted work
+        assert!(tail.tail_bubble < 1.0, "tail group never ran");
+        assert!((0.0..=1.0).contains(&tail.head_bubble), "{}", tail.head_bubble);
+        // both runs still consume every request exactly once
+        assert_eq!(base.consumed_rids.len(), 9);
+        assert_eq!(tail.consumed_rids.len(), 9);
+    }
+
+    /// Event core == reference core, bitwise, with the full new surface
+    /// on: tail rounds (elastic repartitions included) over a
+    /// heterogeneous fleet (per-engine lanes / KV budgets / dyadic
+    /// speeds), with and without stealing.
+    #[test]
+    fn tail_and_hetero_specs_match_across_cores() {
+        let w = longtail_workload(90, 384, 42);
+        let specs = [
+            EngineSpec { lanes: 12, kv_budget: 4096, speed: 2.0 },
+            EngineSpec { lanes: 8, kv_budget: 4096, speed: 1.0 },
+            EngineSpec { lanes: 4, kv_budget: 8192, speed: 0.5 },
+        ];
+        for mode in [SimMode::Baseline, SimMode::SortedPartial, SimMode::Async] {
+            for steal in [false, true] {
+                let run = |core| {
+                    SimRun::new(mode, PoolSimOpts {
+                        engines: 3,
+                        q_total: 24,
+                        update_batch: 16,
+                        cost: dyadic_cost(),
+                        dispatch: DispatchPolicy::ShortestPredictedFirst,
+                        predictor: PredictorKind::Oracle,
+                        steal,
+                        kv_mode: KvMode::Paged,
+                        kv_budget: 4096,
+                        kv_page: 16,
+                        tail: Some(TailConfig { threshold: 96, tail_engines: 1 }),
+                        core,
+                        ..PoolSimOpts::default()
+                    })
+                    .workload(&w)
+                    .specs(&specs)
+                    .run()
+                };
+                assert_reports_identical(
+                    &run(SimCore::Event),
+                    &run(SimCore::Reference),
+                    &format!("tail+specs {mode:?}/steal={steal}"),
+                );
+            }
+        }
+    }
+
+    /// Tail packing composed over a rank-only predictor is inert by
+    /// construction: nothing stamps a prediction, so nothing defers and
+    /// the decision sequence stays byte-identical to the untailed run —
+    /// the `PolicyBuilder` misuse case degrades to a no-op, not a hang.
+    #[test]
+    fn tail_is_inert_with_rank_only_predictor() {
+        let w = longtail_workload(60, 256, 3);
+        let run = |tail| {
+            SimRun::new(SimMode::SortedPartial, PoolSimOpts {
+                engines: 3,
+                q_total: 12,
+                update_batch: 12,
+                cost: dyadic_cost(),
+                predictor: PredictorKind::Bucket,
+                tail,
+                ..PoolSimOpts::default()
+            })
+            .workload(&w)
+            .run()
+        };
+        let off = run(None);
+        let on = run(Some(TailConfig { threshold: 8, tail_engines: 2 }));
+        assert_eq!(on.tail_rounds, 0, "rank-only predictions must not defer");
+        assert_eq!(on.tail_admitted, 0);
+        assert_eq!(on.repartitions, 0);
+        assert_eq!(on.consumed_rids, off.consumed_rids, "decision sequence changed");
+        assert_eq!(on.rollout_time.to_bits(), off.rollout_time.to_bits());
+        assert_eq!(on.total_time.to_bits(), off.total_time.to_bits());
+        assert_eq!(on.steals, off.steals);
+        assert_eq!(on.kv_sheds, off.kv_sheds);
     }
 
     #[test]
@@ -1109,7 +1335,7 @@ mod tests {
     // ------------------------------------------------------------------
 
     /// `--arrival batch` is the closed loop: an all-`t = 0` stream (the
-    /// `ArrivalSpec::Batch` output) must reproduce [`simulate_pool_opts`]
+    /// `ArrivalSpec::Batch` output) must reproduce the closed-loop `SimRun`
     /// bit for bit, on both cores, for every mode and dispatch policy —
     /// the guarantee that keeps every pre-open-loop golden byte-identical.
     #[test]
@@ -1131,8 +1357,8 @@ mod tests {
                         core,
                         ..PoolSimOpts::default()
                     };
-                    let closed = simulate_pool_opts(mode, &w, o);
-                    let open = simulate_pool_arrivals(mode, &arrivals, o);
+                    let closed = SimRun::new(mode, o).workload(&w).run();
+                    let open = SimRun::new(mode, o).arrivals(&arrivals).run();
                     assert_reports_identical(
                         &closed,
                         &open,
@@ -1162,7 +1388,7 @@ mod tests {
                      SimMode::SortedPartial, SimMode::Async] {
             for dispatch in DispatchPolicy::ALL {
                 let run = |core| {
-                    simulate_pool_arrivals(mode, &arrivals, PoolSimOpts {
+                    SimRun::new(mode, PoolSimOpts {
                         engines: 3,
                         q_total: 24,
                         update_batch: 16,
@@ -1172,6 +1398,8 @@ mod tests {
                         core,
                         ..PoolSimOpts::default()
                     })
+                    .arrivals(&arrivals)
+                    .run()
                 };
                 assert_reports_identical(
                     &run(SimCore::Event),
@@ -1225,13 +1453,15 @@ mod tests {
             .enumerate()
             .map(|(i, &req)| Arrival { t: 0.25 * i as f64, tenant: i % 2, req })
             .collect();
-        let r = simulate_pool_arrivals(SimMode::Baseline, &arrivals, PoolSimOpts {
+        let r = SimRun::new(SimMode::Baseline, PoolSimOpts {
             engines: 2,
             q_total: 16,
             update_batch: 16,
             slo: Some(60.0),
             ..PoolSimOpts::default()
-        });
+        })
+        .arrivals(&arrivals)
+        .run();
         let s = &r.slo;
         assert_eq!(s.enqueued, 60);
         assert_eq!(s.tenants.len(), 2);

@@ -172,6 +172,52 @@ impl SimPool {
         }
     }
 
+    /// Shape the fleet per heterogeneous engine specs (`--engine-spec`):
+    /// per-engine lanes, KV budget and relative speed.  Call before any
+    /// work is staged — shapes are construction-time here; RUNTIME
+    /// resizing goes through [`SimPool::repartition`].
+    pub(crate) fn apply_specs(&mut self, specs: &[crate::sched::EngineSpec]) {
+        assert_eq!(specs.len(), self.engines.len(), "one spec per engine");
+        for (e, s) in self.engines.iter_mut().zip(specs) {
+            e.q = s.lanes;
+            e.kv.budget = s.kv_budget;
+            e.speed = s.speed;
+        }
+    }
+
+    /// Elastically resize one engine (tail-round boundaries):
+    /// transactional — the new shape is applied whole, or refused when it
+    /// would strand running lanes (`lanes < running`) or drop the budget
+    /// below committed usage while more than one lane runs (the
+    /// single-lane escape mirrors the admission gate's).  Usage that
+    /// later outgrows a shrunken budget is handled by the engines' normal
+    /// in-step shed path.
+    pub(crate) fn repartition(&mut self, engine: usize, lanes: usize, kv: usize) -> bool {
+        if engine >= self.engines.len() || lanes == 0 {
+            return false;
+        }
+        // commit the virtual span first: the verdict must read the state
+        // the reference core would hold at this decision point
+        self.materialize(engine);
+        let running = self.engines[engine].running.len();
+        let used = self.engines[engine].kv_used();
+        let applied = lanes >= running && (kv >= used || running <= 1);
+        if applied {
+            let e = &mut self.engines[engine];
+            e.q = lanes;
+            e.kv.budget = kv;
+        }
+        self.sync(engine);
+        if self.core == SimCore::Event {
+            // lane/budget changes flip admission and refill gates
+            // pool-wide (central-head readers included), and the
+            // materialize above invalidated this engine's entry even on
+            // a refusal
+            self.reschedule_all();
+        }
+        applied
+    }
+
     /// Targeted admission: push work straight onto engine `i`'s local
     /// queue, bypassing the dispatch policy (`Admit { engine: Some(i) }`).
     pub(crate) fn stage_to(&mut self, i: usize, work: Vec<SimWork>) {

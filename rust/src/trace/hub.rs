@@ -31,6 +31,9 @@ pub struct EngineCounters {
     pub kv_pressure_ticks: u64,
     /// Post-step samples in which this engine reported `kv_blocked`.
     pub kv_blocked_ticks: u64,
+    /// Applied `Decision::Repartition`s that resized this engine (tail
+    /// rounds produce these in donate/restore pairs).
+    pub repartitions: u64,
 }
 
 /// Per-tenant SLO roll-up for open-loop runs (tenants come from the
@@ -212,6 +215,9 @@ pub struct TelemetryHub {
     pub barriers: u64,
     pub steals_refused: u64,
     pub throttles_refused: u64,
+    /// `Decision::Repartition`s the backend declined (occupancy would be
+    /// violated); applied ones sit in the per-engine counters.
+    pub repartitions_refused: u64,
     /// rid → (arrival instant, tenant); registered by open-loop entry
     /// points before driving.  Empty in closed-loop runs — which keeps
     /// every latency definition exactly as before.
@@ -263,6 +269,7 @@ impl TelemetryHub {
             barriers: 0,
             steals_refused: 0,
             throttles_refused: 0,
+            repartitions_refused: 0,
             arrivals: BTreeMap::new(),
             tenants: Vec::new(),
             queue_depth: Vec::new(),
@@ -581,6 +588,10 @@ mod tests {
         hub.engine(3).sheds += 1;
         assert_eq!(hub.engines.len(), 4);
         assert_eq!(hub.engines[3].sheds, 1);
+        hub.engine(2).repartitions += 1;
+        assert_eq!(hub.engines[2].repartitions, 1);
+        hub.repartitions_refused += 1;
+        assert_eq!(hub.repartitions_refused, 1);
         hub.tally("step");
         hub.tally("step");
         assert_eq!(hub.decisions["step"], 2);

@@ -449,6 +449,24 @@ impl Tracer {
         }
     }
 
+    /// After a `Repartition` executed: attribute applied resizes to the
+    /// engine's counters, refused ones to the run-wide refusal tally.
+    pub fn post_repartition(&mut self, backend: &dyn ScheduleBackend, engine: usize,
+                            lanes: usize, applied: bool) {
+        if !self.enabled {
+            return;
+        }
+        if !applied {
+            self.hub.repartitions_refused += 1;
+            return;
+        }
+        self.hub.engine(engine).repartitions += 1;
+        let at = self.now(backend);
+        if let Some(c) = self.chrome.as_mut() {
+            c.instant(engine + 1, 0, at, "repartition", vec![("lanes", num(lanes as f64))]);
+        }
+    }
+
     /// After a trainer update consumed these trajectories.
     pub fn updated(&mut self, backend: &dyn ScheduleBackend, rids: &[u64]) {
         if !self.enabled {

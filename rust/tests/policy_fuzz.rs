@@ -1,16 +1,17 @@
 //! Randomized policy-driver fuzz harness.
 //!
 //! Seeded-RNG event sequences — random workload lengths, engine counts,
-//! lane counts, KV budgets, dispatch modes, steal on/off — driven through
-//! EVERY `SchedulerKind` on both backends:
+//! lane counts, KV budgets, dispatch modes, steal on/off, tail-packing
+//! configs, heterogeneous fleet specs — driven through EVERY
+//! `SchedulerKind` on both backends:
 //!
 //!   * [`TokenBackend`] (deterministic multi-engine harness) checks its
 //!     invariants after every single transition: conservation (no request
 //!     lost or duplicated, across any number of cross-engine steals), the
 //!     KV budget ceiling, progress bounds.  A completed `drive` call IS
 //!     the proof; the assertions below add the terminal contract.
-//!   * The simulator backend (`simulate_pool_opts`) re-checks request and
-//!     token conservation from the report side.
+//!   * The simulator backend (driven through `SimRun`) re-checks request
+//!     and token conservation from the report side.
 //!
 //! Termination is part of the property: `drive` has livelock tripwires
 //! (decision budget, idle-step and fruitless-decision caps), so a policy
@@ -22,10 +23,10 @@
 use sortedrl::coordinator::SchedulerKind;
 use sortedrl::rollout::kv::{KvConfig, KvMode};
 use sortedrl::sched::harness::{HarnessDispatch, TokenBackend, HARNESS_PROMPT};
-use sortedrl::sched::policy::{drive_traced, make_policy_full, PolicyParams, ScheduleBackend};
+use sortedrl::sched::policy::{drive_traced, PolicyBuilder, PolicyParams, ScheduleBackend};
+use sortedrl::sched::{EngineSpec, TailConfig};
 use sortedrl::sim::{
-    longtail_workload, simulate_pool_arrivals, simulate_pool_opts, CostModel, PoolSimOpts,
-    SimCore, SimMode, SimReport,
+    longtail_workload, CostModel, PoolSimOpts, SimCore, SimMode, SimReport, SimRun,
 };
 use sortedrl::trace::{SpanOutcome, Tracer};
 use sortedrl::util::proptest::{property, Gen};
@@ -66,7 +67,7 @@ fn fuzz_token_backend_once(g: &mut Gen) {
          steal={steal} kind={kind:?} refill={} batch={}",
         params.refill_prompts, params.update_batch
     );
-    let mut policy = make_policy_full(kind, params, steal, kv_mode == KvMode::Paged);
+    let mut policy = PolicyBuilder::new(kind, params).steal(steal).kv(kv).build();
     let mut b = TokenBackend::new_kv(&lens, engines, lanes, dispatch, kv);
     // per-transition invariants assert inside the backend; an Err here is
     // a driver livelock bail — also a failure.  The recording tracer rides
@@ -125,7 +126,7 @@ fn fuzz_sim_backend_once(g: &mut Gen) {
         ..PoolSimOpts::default()
     };
     let w = longtail_workload(n, cap, g.usize_in(0..1_000_000) as u64);
-    let r = simulate_pool_opts(mode, &w, opts);
+    let r = SimRun::new(mode, opts).workload(&w).run();
     let ctx = format!("{mode:?} {opts:?}");
     assert_eq!(r.timeline.finished() as usize + r.clipped + r.dropped, n,
                "request conservation violated: {ctx}");
@@ -183,9 +184,47 @@ fn assert_cores_agree(ev: &SimReport, rf: &SimReport, ctx: &str) {
     assert_eq!(ev.predictor_tau.to_bits(), rf.predictor_tau.to_bits(),
                "predictor tau: {ctx}");
     assert_eq!(ev.kv_trace, rf.kv_trace, "kv trace: {ctx}");
+    assert_eq!(ev.tail_rounds, rf.tail_rounds, "tail rounds: {ctx}");
+    assert_eq!(ev.tail_admitted, rf.tail_admitted, "tail admitted: {ctx}");
+    assert_eq!(ev.repartitions, rf.repartitions, "repartitions: {ctx}");
+    assert_eq!(ev.head_bubble.to_bits(), rf.head_bubble.to_bits(), "head bubble: {ctx}");
+    assert_eq!(ev.tail_bubble.to_bits(), rf.tail_bubble.to_bits(), "tail bubble: {ctx}");
     let ev_idle: Vec<u64> = ev.engine_idle.iter().map(|v| v.to_bits()).collect();
     let rf_idle: Vec<u64> = rf.engine_idle.iter().map(|v| v.to_bits()).collect();
     assert_eq!(ev_idle, rf_idle, "engine idle: {ctx}");
+}
+
+/// Fuzz an optional heterogeneous fleet (empty = uniform shapes).  Speeds
+/// stay dyadic (0.5 / 1 / 2) so the spec-normalized clock arithmetic is
+/// exact and the Event vs Reference differential can demand bitwise
+/// equality; per-engine budgets mirror the pool-level rule of always
+/// covering the largest single reservation.
+fn fuzz_specs(g: &mut Gen, engines: usize, cap: usize) -> Vec<EngineSpec> {
+    if g.bool() {
+        return Vec::new();
+    }
+    (0..engines)
+        .map(|_| EngineSpec {
+            lanes: g.usize_in(1..5),
+            kv_budget: if g.bool() { usize::MAX } else { (cap + 512) * g.usize_in(1..4) },
+            speed: *g.pick(&[0.5, 1.0, 2.0]),
+        })
+        .collect()
+}
+
+/// Fuzz an optional tail-packing layer.  Thresholds span the whole
+/// plausible band (deep inside the length distribution up to the cap), so
+/// runs range from "everything defers" to "tail never opens"; engine
+/// counts above the fleet size are legal (the policy clamps the tail
+/// group to `engines - 1`).
+fn fuzz_tail(g: &mut Gen, cap: usize) -> Option<TailConfig> {
+    if g.bool() {
+        return None;
+    }
+    Some(TailConfig {
+        threshold: g.usize_in(cap / 4..cap + 1),
+        tail_engines: g.usize_in(1..4),
+    })
 }
 
 /// The cross-core differential: the SAME random workload and options run
@@ -209,12 +248,20 @@ fn fuzz_cross_core_once(g: &mut Gen) {
         kv_budget: if g.bool() { usize::MAX } else { (cap + 512) * g.usize_in(1..4) },
         kv_mode: if g.bool() { KvMode::Reserve } else { KvMode::Paged },
         kv_page: g.usize_in(1..257),
+        tail: fuzz_tail(g, cap),
         ..PoolSimOpts::default()
     };
+    let specs = fuzz_specs(g, engines, cap);
     let w = longtail_workload(n, cap, g.usize_in(0..1_000_000) as u64);
-    let ctx = format!("{mode:?} {base:?}");
-    let ev = simulate_pool_opts(mode, &w, PoolSimOpts { core: SimCore::Event, ..base });
-    let rf = simulate_pool_opts(mode, &w, PoolSimOpts { core: SimCore::Reference, ..base });
+    let ctx = format!("{mode:?} specs={specs:?} {base:?}");
+    let ev = SimRun::new(mode, PoolSimOpts { core: SimCore::Event, ..base })
+        .workload(&w)
+        .specs(&specs)
+        .run();
+    let rf = SimRun::new(mode, PoolSimOpts { core: SimCore::Reference, ..base })
+        .workload(&w)
+        .specs(&specs)
+        .run();
     assert_cores_agree(&ev, &rf, &ctx);
 }
 
@@ -243,8 +290,10 @@ fn fuzz_open_loop_cross_core_once(g: &mut Gen) {
         kv_budget: if g.bool() { usize::MAX } else { (cap + 512) * g.usize_in(1..4) },
         kv_mode: if g.bool() { KvMode::Reserve } else { KvMode::Paged },
         kv_page: g.usize_in(1..257),
+        tail: fuzz_tail(g, cap),
         ..PoolSimOpts::default()
     };
+    let specs = fuzz_specs(g, engines, cap);
     let w = longtail_workload(n, cap, g.usize_in(0..1_000_000) as u64);
     let mut t = 0.0f64;
     let arrivals: Vec<Arrival> = w
@@ -254,10 +303,15 @@ fn fuzz_open_loop_cross_core_once(g: &mut Gen) {
             Arrival { t, tenant: req.id % tenants, req }
         })
         .collect();
-    let ctx = format!("open-loop {mode:?} tenants={tenants} {base:?}");
-    let ev = simulate_pool_arrivals(mode, &arrivals, PoolSimOpts { core: SimCore::Event, ..base });
-    let rf =
-        simulate_pool_arrivals(mode, &arrivals, PoolSimOpts { core: SimCore::Reference, ..base });
+    let ctx = format!("open-loop {mode:?} tenants={tenants} specs={specs:?} {base:?}");
+    let ev = SimRun::new(mode, PoolSimOpts { core: SimCore::Event, ..base })
+        .arrivals(&arrivals)
+        .specs(&specs)
+        .run();
+    let rf = SimRun::new(mode, PoolSimOpts { core: SimCore::Reference, ..base })
+        .arrivals(&arrivals)
+        .specs(&specs)
+        .run();
     assert_cores_agree(&ev, &rf, &ctx);
     assert_eq!(ev.timeline.finished() as usize + ev.clipped + ev.dropped, n,
                "open-loop request conservation violated: {ctx}");

@@ -21,13 +21,12 @@ use sortedrl::rollout::kv::{KvConfig, KvMode};
 use sortedrl::rollout::{Request, Rollout};
 use sortedrl::sched::harness::{HarnessDispatch, TokenBackend};
 use sortedrl::sched::policy::{
-    drive, make_policy, make_policy_full, make_policy_opts, HarvestAction, HarvestItem,
-    PolicyParams, SchedView, ScheduleBackend,
+    drive, HarvestAction, HarvestItem, PolicyBuilder, PolicyParams, SchedView,
+    ScheduleBackend,
 };
 use sortedrl::sched::{DispatchPolicy, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, simulate, simulate_pool, simulate_pool_opts, CostModel,
-    PoolSimOpts, SimMode,
+    longtail_workload, simulate, simulate_pool, CostModel, PoolSimOpts, SimMode, SimRun,
 };
 use std::collections::{BTreeMap, VecDeque};
 
@@ -282,7 +281,7 @@ fn run_kind(kind: SchedulerKind) -> BufferBackend {
         entries_per_prompt: 1,
         update_batch: 2,
     };
-    let mut policy = make_policy(kind, params);
+    let mut policy = PolicyBuilder::new(kind, params).build();
     let mut b = BufferBackend::new(&LENS, 2, 100);
     drive(policy.as_mut(), &mut b).unwrap();
     b
@@ -356,7 +355,7 @@ fn golden_async_update() {
 #[test]
 fn max_updates_truncates_mid_group() {
     let params = PolicyParams { refill_prompts: 6, entries_per_prompt: 1, update_batch: 2 };
-    let mut policy = make_policy(SchedulerKind::Baseline, params);
+    let mut policy = PolicyBuilder::new(SchedulerKind::Baseline, params).build();
     let mut b = BufferBackend::new(&LENS, 2, 2);
     drive(policy.as_mut(), &mut b).unwrap();
     assert_eq!(b.updates, 2);
@@ -378,7 +377,7 @@ fn steal_wrapper_is_inert_on_single_engine() {
             entries_per_prompt: 1,
             update_batch: 2,
         };
-        let mut policy = make_policy_opts(kind, params, true);
+        let mut policy = PolicyBuilder::new(kind, params).steal(true).build();
         let mut b = BufferBackend::new(&LENS, 2, 100);
         drive(policy.as_mut(), &mut b).unwrap();
         assert_eq!(b.consumed_order, base.consumed_order, "{kind:?}");
@@ -396,7 +395,8 @@ fn steal_wrapper_is_inert_on_single_engine() {
 fn golden_steal_queue_migration_pinned() {
     let params = PolicyParams { refill_prompts: 4, entries_per_prompt: 1, update_batch: 2 };
     let run = |steal: bool| {
-        let mut policy = make_policy_opts(SchedulerKind::Baseline, params, steal);
+        let mut policy =
+            PolicyBuilder::new(SchedulerKind::Baseline, params).steal(steal).build();
         let mut b =
             TokenBackend::new(&[1, 9, 1, 9], 2, 1, HarnessDispatch::Striped, usize::MAX);
         drive(policy.as_mut(), &mut b).unwrap();
@@ -426,7 +426,8 @@ fn golden_steal_queue_migration_pinned() {
 fn golden_steal_rescues_kv_blocked_queue() {
     let params = PolicyParams { refill_prompts: 3, entries_per_prompt: 1, update_batch: 3 };
     let run = |steal: bool| {
-        let mut policy = make_policy_opts(SchedulerKind::Baseline, params, steal);
+        let mut policy =
+            PolicyBuilder::new(SchedulerKind::Baseline, params).steal(steal).build();
         let mut b = TokenBackend::new(&[9, 1, 5], 2, 2, HarnessDispatch::Striped, 14);
         drive(policy.as_mut(), &mut b).unwrap();
         b
@@ -453,7 +454,7 @@ fn stealing_goldens_deterministic_across_runs() {
     let run = |kind: SchedulerKind| {
         let params =
             PolicyParams { refill_prompts: 8, entries_per_prompt: 1, update_batch: 2 };
-        let mut policy = make_policy_opts(kind, params, true);
+        let mut policy = PolicyBuilder::new(kind, params).steal(true).build();
         let mut b = TokenBackend::new(&[2, 4, 6, 3, 9, 1, 5, 7], 2, 2,
                                       HarnessDispatch::Striped, usize::MAX);
         drive(policy.as_mut(), &mut b).unwrap();
@@ -491,9 +492,9 @@ fn golden_paged_admits_strictly_more_lanes_on_skewed_pool() {
     let lens = [9, 9, 9, 9, 2, 2, 2, 2];
     let run = |mode: KvMode| {
         let kv = KvConfig { mode, budget: 14, page: 1 };
-        // production paged composition (governor on); inert in reserve
-        let mut policy =
-            make_policy_full(SchedulerKind::Baseline, params, false, mode == KvMode::Paged);
+        // production paged composition (governor mounts iff kv is paged);
+        // inert in reserve
+        let mut policy = PolicyBuilder::new(SchedulerKind::Baseline, params).kv(kv).build();
         let mut b = TokenBackend::new_kv(&lens, 4, 2, HarnessDispatch::Striped, kv);
         drive(policy.as_mut(), &mut b).unwrap();
         b
@@ -524,7 +525,7 @@ fn paged_goldens_deterministic_across_runs() {
         let params =
             PolicyParams { refill_prompts: 8, entries_per_prompt: 1, update_batch: 2 };
         let kv = KvConfig { mode: KvMode::Paged, budget: 20, page: 2 };
-        let mut policy = make_policy_full(kind, params, true, true);
+        let mut policy = PolicyBuilder::new(kind, params).steal(true).kv(kv).build();
         let mut b = TokenBackend::new_kv(&[2, 4, 6, 3, 9, 1, 5, 7], 2, 2,
                                          HarnessDispatch::Striped, kv);
         drive(policy.as_mut(), &mut b).unwrap();
@@ -587,8 +588,8 @@ fn sim_stealing_deterministic_across_runs() {
         ..PoolSimOpts::default()
     };
     for mode in SIM_MODES {
-        let a = simulate_pool_opts(mode, &w, opts);
-        let b = simulate_pool_opts(mode, &w, opts);
+        let a = SimRun::new(mode, opts).workload(&w).run();
+        let b = SimRun::new(mode, opts).workload(&w).run();
         assert_eq!(a.steals, b.steals, "{mode:?}");
         assert_eq!(a.migrated_tokens, b.migrated_tokens, "{mode:?}");
         assert_eq!(a.useful_tokens, b.useful_tokens, "{mode:?}");

@@ -12,12 +12,12 @@ use sortedrl::coordinator::SchedulerKind;
 use sortedrl::rollout::kv::{KvConfig, KvMode};
 use sortedrl::sched::harness::{HarnessDispatch, TokenBackend};
 use sortedrl::sched::policy::{
-    drive, make_policy, make_policy_full, HarvestAction, PolicyParams, ScheduleBackend,
+    drive, HarvestAction, PolicyBuilder, PolicyParams, ScheduleBackend,
 };
 use sortedrl::sched::{make_predictor, DispatchPolicy, LengthPredictor, PredictorKind};
 use sortedrl::sim::{
-    longtail_workload, pool_makespan, simulate, simulate_pool, simulate_pool_opts,
-    CostModel, PoolSimOpts, SimMode,
+    longtail_workload, pool_makespan, simulate, simulate_pool, CostModel, PoolSimOpts,
+    SimMode, SimRun,
 };
 use sortedrl::util::proptest::{property, Gen};
 
@@ -288,9 +288,10 @@ fn stealing_strictly_improves_skewed_bubble() {
         steal: false,
         ..PoolSimOpts::default()
     };
-    let flat = simulate_pool_opts(SimMode::Baseline, &w, opts);
-    let stealing =
-        simulate_pool_opts(SimMode::Baseline, &w, PoolSimOpts { steal: true, ..opts });
+    let flat = SimRun::new(SimMode::Baseline, opts).workload(&w).run();
+    let stealing = SimRun::new(SimMode::Baseline, PoolSimOpts { steal: true, ..opts })
+        .workload(&w)
+        .run();
     assert_eq!(flat.steals, 0);
     assert!(stealing.steals > 0, "no steals fired on a skewed workload");
     assert!(stealing.bubble_ratio < flat.bubble_ratio,
@@ -308,9 +309,10 @@ fn stealing_strictly_improves_skewed_bubble() {
     }
     // same regression under partial-mode semantics: stolen partials keep
     // their tokens, and occupancy must not get worse
-    let part_flat = simulate_pool_opts(SimMode::SortedPartial, &w, opts);
-    let part_steal =
-        simulate_pool_opts(SimMode::SortedPartial, &w, PoolSimOpts { steal: true, ..opts });
+    let part_flat = SimRun::new(SimMode::SortedPartial, opts).workload(&w).run();
+    let part_steal = SimRun::new(SimMode::SortedPartial, PoolSimOpts { steal: true, ..opts })
+        .workload(&w)
+        .run();
     assert_eq!(part_steal.wasted_tokens, 0, "partial mode discards nothing");
     assert!(part_steal.bubble_ratio <= part_flat.bubble_ratio * 1.02,
             "partial stealing bubble {} regressed vs {}",
@@ -344,10 +346,14 @@ fn paged_kv_admits_more_lanes_and_cuts_bubble_at_fixed_budget() {
         kv_page: 256,
         ..PoolSimOpts::default()
     };
-    let reserved = simulate_pool_opts(SimMode::SortedPartial, &w,
-                                      PoolSimOpts { kv_mode: KvMode::Reserve, ..opts });
-    let paged = simulate_pool_opts(SimMode::SortedPartial, &w,
-                                   PoolSimOpts { kv_mode: KvMode::Paged, ..opts });
+    let reserved =
+        SimRun::new(SimMode::SortedPartial, PoolSimOpts { kv_mode: KvMode::Reserve, ..opts })
+            .workload(&w)
+            .run();
+    let paged =
+        SimRun::new(SimMode::SortedPartial, PoolSimOpts { kv_mode: KvMode::Paged, ..opts })
+            .workload(&w)
+            .run();
     for (r, tag) in [(&reserved, "reserved"), (&paged, "paged")] {
         assert_eq!(r.timeline.finished() as usize + r.clipped + r.dropped, 256,
                    "{tag}: request conservation");
@@ -381,9 +387,9 @@ fn paged_forced_shed_keeps_budget_hard() {
     let params = PolicyParams { refill_prompts: 4, entries_per_prompt: 1, update_batch: 4 };
     let run = |mode: KvMode| {
         let kv = KvConfig { mode, budget: 24, page: 1 };
-        // make_policy (no governor): the forced in-step path must hold the
-        // budget entirely on its own
-        let mut policy = make_policy(SchedulerKind::Baseline, params);
+        // bare builder (no governor): the forced in-step path must hold
+        // the budget entirely on its own
+        let mut policy = PolicyBuilder::new(SchedulerKind::Baseline, params).build();
         let mut b = TokenBackend::new_kv(&[8, 8, 8, 8], 1, 4,
                                          HarnessDispatch::Central, kv);
         drive(policy.as_mut(), &mut b).unwrap();
@@ -410,7 +416,7 @@ fn paged_forced_shed_keeps_budget_hard() {
 fn paged_governor_throttles_before_forced_shed() {
     let params = PolicyParams { refill_prompts: 4, entries_per_prompt: 1, update_batch: 4 };
     let kv = KvConfig { mode: KvMode::Paged, budget: 24, page: 1 };
-    let mut policy = make_policy_full(SchedulerKind::Baseline, params, false, true);
+    let mut policy = PolicyBuilder::new(SchedulerKind::Baseline, params).kv(kv).build();
     let mut b = TokenBackend::new_kv(&[8, 8, 8, 8], 1, 4, HarnessDispatch::Central, kv);
     drive(policy.as_mut(), &mut b).unwrap();
     assert_eq!(b.throttled, 1, "governor sheds once at the pressure point");
